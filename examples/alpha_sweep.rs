@@ -1,0 +1,34 @@
+//! Figure-8 driver: sweep CrossQuant's α from 0.05 to 1.0 and watch
+//! (a) OPT-6.7B-profile accuracy on the Lambada-like task at W8A8 and
+//! (b) LLaMA2-13B-profile Wiki2 perplexity at W4A8-g128 respond. As α → 1
+//! CrossQuant degenerates to per-token quantization and quality collapses
+//! on the OPT profile.
+//!
+//!     cargo run --release --example alpha_sweep
+//!
+//! Uses the trained artifacts if present, otherwise synthetic weights
+//! (pass CROSSQUANT_ARTIFACTS to point elsewhere).
+
+use crossquant::exp::{self, common::ExpOpts};
+use crossquant::model::weights::synthetic_weights;
+use crossquant::model::ModelConfig;
+use crossquant::runtime::ArtifactStore;
+
+fn main() -> anyhow::Result<()> {
+    let base = match ArtifactStore::discover(None).and_then(|s| s.load_weights()) {
+        Ok(w) => {
+            println!("using trained weights from artifacts/");
+            w
+        }
+        Err(e) => {
+            println!("no artifacts ({e}); falling back to synthetic weights");
+            synthetic_weights(ModelConfig::default_build(), 7)
+        }
+    };
+    let opts = ExpOpts { eval_sequences: 8, task_instances: 30, calib_sequences: 2, seed: 0xA1FA };
+    let table = exp::fig8::run(&base, &opts)?;
+    table.print();
+    println!("\n(α = 1.0 is exactly per-token quantization — the rightmost column");
+    println!(" is the baseline every other column improves on.)");
+    Ok(())
+}

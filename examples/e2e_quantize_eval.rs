@@ -1,0 +1,96 @@
+//! END-TO-END driver (EXPERIMENTS.md §E2E): proves all three layers
+//! compose on a real small workload.
+//!
+//! 1. `make artifacts` trained the tiny GPT (L2, JAX) on the synthetic
+//!    corpus and AOT-lowered the forward passes — with the Pallas
+//!    CrossQuant kernel (L1) inlined — to HLO text.
+//! 2. This binary (L3, rust) loads weights.bin, prepares three weight
+//!    variants (W16 / W8 per-channel / W4-g128), registers them with the
+//!    PJRT coordinator, and streams batched evaluation requests through
+//!    the compiled executables — Python nowhere on the path.
+//! 3. It reports the paper's headline metric: perplexity under per-token
+//!    vs CrossQuant activation quantization (and the measured
+//!    quantization-kernel fraction), plus coordinator latency metrics.
+//!
+//!     make artifacts && cargo run --release --example e2e_quantize_eval
+
+use std::time::Instant;
+
+use crossquant::activations::FamilyProfile;
+use crossquant::coordinator::scheduler::CoordinatorConfig;
+use crossquant::coordinator::{ActScheme, EvalCoordinator};
+use crossquant::corpus::{CorpusGen, CorpusKind};
+use crossquant::model::quantized::{inject_profile, quantize_weights, WeightScheme};
+use crossquant::quant::Bits;
+use crossquant::runtime::{ArtifactStore, Runtime};
+
+fn main() -> anyhow::Result<()> {
+    let store = ArtifactStore::discover(None)?;
+    store.validate()?;
+    let base = store.load_weights()?;
+    let cfg = base.config;
+    println!(
+        "loaded model: {} params, vocab {}, d_model {}, {} layers (trained ppl {:.2})",
+        base.manifest.total_params,
+        cfg.vocab,
+        cfg.d_model,
+        cfg.n_layers,
+        base.manifest.train.as_ref().map(|t| t.final_ppl).unwrap_or(f64::NAN),
+    );
+
+    // The e2e scenario of the paper: an OPT-6.7B-like model (systematic
+    // activation outliers) quantized W8A8 with per-token vs CrossQuant.
+    let profile = FamilyProfile::by_name("opt-6.7b").expect("profile");
+    let mut injected = base.clone();
+    inject_profile(&mut injected, &profile)?;
+
+    let mut w8 = injected.clone();
+    quantize_weights(&mut w8, WeightScheme::PerChannel(Bits::Int8))?;
+    let mut w4g = injected.clone();
+    quantize_weights(&mut w4g, WeightScheme::GroupWise(Bits::Int4, 128))?;
+
+    let coordinator = EvalCoordinator::start(
+        store,
+        cfg,
+        vec![
+            ("w16".into(), injected.flat.clone()),
+            ("w8".into(), w8.flat),
+            ("w4g128".into(), w4g.flat),
+        ],
+        CoordinatorConfig::default(),
+    );
+
+    // evaluation stream: 64 sequences from the Wiki2-like corpus
+    let mut gen = CorpusGen::with_kind(cfg.vocab, 0xE2E, CorpusKind::Wiki2);
+    let seqs: Vec<Vec<u32>> = (0..64).map(|_| gen.sequence(cfg.seq_len)).collect();
+    println!("\nevaluating 64 sequences × {} tokens through PJRT (profile {}):\n", cfg.seq_len, profile.name);
+
+    let cells: Vec<(&str, ActScheme, &str)> = vec![
+        ("FP16            W16A16", ActScheme::Fp, "w16"),
+        ("Per-token       W8A8  ", ActScheme::CrossQuant { alpha: 1.0, qmax: 127.0 }, "w8"),
+        ("CrossQuant      W8A8  ", ActScheme::CrossQuant { alpha: 0.15, qmax: 127.0 }, "w8"),
+        ("Per-token       W4A8  ", ActScheme::CrossQuant { alpha: 1.0, qmax: 127.0 }, "w4g128"),
+        ("CrossQuant      W4A8  ", ActScheme::CrossQuant { alpha: 0.15, qmax: 127.0 }, "w4g128"),
+        ("Remove-Kernel   W8A16*", ActScheme::RemoveKernel { theta: 0.5 / 127.0 }, "w8"),
+    ];
+
+    println!("{:26} {:>10} {:>14} {:>12}", "method", "ppl", "kernel/removed", "wall");
+    for (label, scheme, wset) in cells {
+        let t0 = Instant::now();
+        let (mean_nll, aux) = coordinator.evaluate_stream(seqs.clone(), scheme, wset)?;
+        println!(
+            "{:26} {:>10.3} {:>13.2}% {:>11.1?}",
+            label,
+            mean_nll.exp(),
+            aux * 100.0,
+            t0.elapsed()
+        );
+    }
+
+    println!("\ncoordinator metrics: {}", coordinator.metrics.summary());
+    println!("\nExpected shape (paper Fig. 1 / Tab. 2): per-token W8A8 degrades sharply on");
+    println!("the outlier profile while CrossQuant stays at the FP16 level; Remove-Kernel");
+    println!("(zeroing exactly the per-token kernel, quantizing nothing) tracks per-token —");
+    println!("the kernel IS the loss mechanism.");
+    Ok(())
+}

@@ -1,0 +1,133 @@
+"""AOT compile path: lower every L2 entry point to HLO *text* artifacts.
+
+HLO text — NOT `lowered.compiler_ir("hlo").serialize()` — is the interchange
+format: jax ≥ 0.5 emits HloModuleProto with 64-bit instruction ids which the
+xla crate's xla_extension 0.5.1 rejects (`proto.id() <= INT_MAX`); the text
+parser on the rust side reassigns ids and round-trips cleanly. See
+/opt/xla-example/gen_hlo.py.
+
+Artifacts (all consumed by rust/src/runtime/):
+  weights.bin / manifest.json   trained flat weights + layout (train.py)
+  lm_fp.hlo.txt        (tokens i32[B,S], w f32[P]) -> (nll f32[B,S-1],)
+  lm_aq.hlo.txt        (tokens, w, alpha f32[], qmax f32[]) -> (nll, kfrac)
+                       activation fake-quant via the Pallas CrossQuant kernel
+  lm_aq_jnp.hlo.txt    same signature, pure-jnp quant (XLA-fused fast path)
+  lm_rk.hlo.txt        (tokens, w, theta f32[]) -> (nll, removed_frac)
+  lm_acts.hlo.txt      (tokens, w) -> (acts f32[2L+1, B·S, D],)
+  quant_ops.hlo.txt    (x f32[QT,QI], alpha, qmax) -> (xq, kfrac, t, c)
+                       standalone Pallas CrossQuant + fused absmax
+  qmatmul.hlo.txt      (x f32[QT,QI], wm f32[QI,QO], alpha, qmax) -> (y,)
+                       standalone Pallas integer matmul
+
+`make artifacts` is incremental: the Makefile only reruns this when the
+python sources change; rerunning with an existing weights.bin reuses it
+(pass --retrain to discard).
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+from pathlib import Path
+
+import jax
+import jax.numpy as jnp
+from jax._src.lib import xla_client as xc
+
+from .common import ModelConfig
+from .kernels import absmax as absmax_kernel
+from .kernels import crossquant as cq_kernel
+from .kernels import qmatmul as qmatmul_kernel
+from .kernels import ref
+from .model import lm_acts, lm_aq, lm_fp, lm_rk
+from .train import save_weights, train
+
+# Standalone quant-op artifact shapes (fixed; rust pads/slices around them).
+QT, QI, QO = 512, 256, 128
+F32 = jnp.float32
+I32 = jnp.int32
+
+
+def to_hlo_text(lowered) -> str:
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def spec(shape, dtype):
+    return jax.ShapeDtypeStruct(shape, dtype)
+
+
+def quant_ops_fn(x, alpha, qmax):
+    t, c = absmax_kernel.row_col_abs_max(x)
+    xq = cq_kernel.crossquant_fake_quant(x, alpha, qmax)
+    kfrac = ref.kernel_fraction(x, ref.cross_scale(t, c, alpha, qmax))
+    return (xq, kfrac, t.reshape(-1), c.reshape(-1))
+
+
+def qmatmul_fn(x, w, alpha, qmax):
+    return (qmatmul_kernel.qmatmul(x, w, alpha, qmax),)
+
+
+def lower_all(cfg: ModelConfig, out_dir: Path) -> dict:
+    b, s, p = cfg.eval_batch, cfg.seq_len, None
+    from .common import param_size
+
+    p = param_size(cfg)
+    tok = spec((b, s), I32)
+    w = spec((p,), F32)
+    scalar = spec((), F32)
+
+    entries = {
+        "lm_fp": (lm_fp(cfg), [tok, w]),
+        "lm_aq": (lm_aq(cfg, use_pallas=True), [tok, w, scalar, scalar]),
+        "lm_aq_jnp": (lm_aq(cfg, use_pallas=False), [tok, w, scalar, scalar]),
+        "lm_rk": (lm_rk(cfg), [tok, w, scalar]),
+        "lm_acts": (lm_acts(cfg), [tok, w]),
+        "quant_ops": (quant_ops_fn, [spec((QT, QI), F32), scalar, scalar]),
+        "qmatmul": (qmatmul_fn, [spec((QT, QI), F32), spec((QI, QO), F32), scalar, scalar]),
+    }
+    inventory = {}
+    for name, (fn, in_specs) in entries.items():
+        lowered = jax.jit(fn).lower(*in_specs)
+        text = to_hlo_text(lowered)
+        path = out_dir / f"{name}.hlo.txt"
+        path.write_text(text)
+        inventory[name] = {
+            "file": path.name,
+            "inputs": [[list(s.shape), str(s.dtype)] for s in in_specs],
+        }
+        print(f"lowered {name:12s} -> {path.name} ({len(text)} chars)")
+    return inventory
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--out", default="../artifacts")
+    ap.add_argument("--steps", type=int, default=400)
+    ap.add_argument("--retrain", action="store_true")
+    args = ap.parse_args()
+    out_dir = Path(args.out)
+    out_dir.mkdir(parents=True, exist_ok=True)
+    cfg = ModelConfig()
+
+    if args.retrain or not (out_dir / "weights.bin").exists():
+        weights, losses = train(cfg, steps=args.steps)
+        save_weights(cfg, weights, out_dir, losses)
+    else:
+        print("weights.bin exists — reusing (pass --retrain to discard)")
+
+    inventory = lower_all(cfg, out_dir)
+
+    manifest_path = out_dir / "manifest.json"
+    manifest = json.loads(manifest_path.read_text())
+    manifest["artifacts"] = inventory
+    manifest["quant_ops_shape"] = {"t": QT, "i": QI, "o": QO}
+    manifest_path.write_text(json.dumps(manifest, indent=1))
+    print(f"updated {manifest_path}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,125 @@
+"""Shared build-time definitions: model config, parameter layout, corpus.
+
+The rust side (rust/src/model/config.rs, rust/src/corpus/) mirrors these
+definitions. The parameter layout defined by `param_specs` is the single
+source of truth for how the flat weight vector in artifacts/weights.bin is
+sliced; aot.py serializes it into artifacts/manifest.json so rust never
+hard-codes offsets.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import List, Tuple
+
+import numpy as np
+
+
+@dataclasses.dataclass(frozen=True)
+class ModelConfig:
+    """Tiny GPT configuration used for all experiments.
+
+    The paper's model-size axis (OPT-1.3B..66B, LLaMA-7B..70B) is reproduced
+    through *activation profiles* (outlier injection), not parameter count —
+    see DESIGN.md §4.
+    """
+
+    vocab: int = 512
+    d_model: int = 128
+    n_layers: int = 4
+    n_heads: int = 4
+    d_ff: int = 512
+    seq_len: int = 96
+    eval_batch: int = 8  # fixed batch of the AOT-lowered eval HLO
+
+    @property
+    def head_dim(self) -> int:
+        return self.d_model // self.n_heads
+
+
+def param_specs(cfg: ModelConfig) -> List[Tuple[str, Tuple[int, ...]]]:
+    """Ordered (name, shape) list defining the flat weight vector layout."""
+    specs: List[Tuple[str, Tuple[int, ...]]] = [
+        ("tok_emb", (cfg.vocab, cfg.d_model)),
+        ("pos_emb", (cfg.seq_len, cfg.d_model)),
+    ]
+    for l in range(cfg.n_layers):
+        p = f"layer{l}."
+        specs += [
+            (p + "ln1_g", (cfg.d_model,)),
+            (p + "ln1_b", (cfg.d_model,)),
+            (p + "wq", (cfg.d_model, cfg.d_model)),
+            (p + "wk", (cfg.d_model, cfg.d_model)),
+            (p + "wv", (cfg.d_model, cfg.d_model)),
+            (p + "wo", (cfg.d_model, cfg.d_model)),
+            (p + "ln2_g", (cfg.d_model,)),
+            (p + "ln2_b", (cfg.d_model,)),
+            (p + "w1", (cfg.d_model, cfg.d_ff)),
+            (p + "w2", (cfg.d_ff, cfg.d_model)),
+        ]
+    specs += [
+        ("lnf_g", (cfg.d_model,)),
+        ("lnf_b", (cfg.d_model,)),
+        ("w_out", (cfg.d_model, cfg.vocab)),
+    ]
+    return specs
+
+
+def param_size(cfg: ModelConfig) -> int:
+    return sum(math.prod(s) for _, s in param_specs(cfg))
+
+
+def param_offsets(cfg: ModelConfig) -> dict:
+    """name -> (offset, shape) into the flat weight vector."""
+    out = {}
+    off = 0
+    for name, shape in param_specs(cfg):
+        out[name] = (off, shape)
+        off += math.prod(shape)
+    return out
+
+
+# ---------------------------------------------------------------------------
+# Synthetic corpus: a Zipfian first-order Markov chain over token ids.
+#
+# The rust generator (rust/src/corpus/synth.rs) implements the same process
+# (same Zipf exponent, same mixing map); streams need not be bit-identical
+# across languages — only distribution-identical — because training data
+# (python) and evaluation data (rust) are different draws anyway.
+# ---------------------------------------------------------------------------
+
+ZIPF_S = 1.4
+MIX_A = 31
+MIX_B = 7
+MIX_C = 13
+
+
+def zipf_cdf(vocab: int) -> np.ndarray:
+    w = 1.0 / np.power(np.arange(1, vocab + 1, dtype=np.float64), ZIPF_S)
+    return np.cumsum(w / w.sum())
+
+
+class CorpusGen:
+    """Deterministic synthetic corpus stream."""
+
+    def __init__(self, vocab: int, seed: int = 0):
+        self.vocab = vocab
+        self.cdf = zipf_cdf(vocab)
+        self.rng = np.random.default_rng(seed)
+        self.prev = 0
+
+    def next_token(self) -> int:
+        u = self.rng.random()
+        rank = int(np.searchsorted(self.cdf, u))
+        rank = min(rank, self.vocab - 1)
+        tok = (self.prev * MIX_A + rank * MIX_B + MIX_C) % self.vocab
+        self.prev = tok
+        return tok
+
+    def batch(self, batch: int, seq: int) -> np.ndarray:
+        out = np.empty((batch, seq), dtype=np.int32)
+        for b in range(batch):
+            for s in range(seq):
+                out[b, s] = self.next_token()
+        return out

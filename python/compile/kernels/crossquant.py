@@ -1,0 +1,86 @@
+"""L1 Pallas kernel: CrossQuant fake quantization (the paper's hot spot).
+
+TPU-oriented structure (see DESIGN.md §Hardware-Adaptation):
+  * the activation is processed in (BT, BI) VMEM-resident tiles via
+    BlockSpec; extra HBM traffic beyond X itself is only the t (T,1) and
+    c (1,I) absmax vectors — O(T+I), matching the paper's storage claim;
+  * the cross scale t_i^α·c_j^(1−α) is formed in-register per tile and is
+    never materialised as a T×I matrix;
+  * α and qmax arrive as (1,1) SMEM-style operands broadcast to every tile.
+
+interpret=True everywhere: the CPU PJRT plugin cannot run Mosaic
+custom-calls, so the kernel lowers to plain HLO and runs on any backend.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from . import ref
+
+DEFAULT_BT = 128
+DEFAULT_BI = 128
+
+
+def _crossquant_tile(x_ref, t_ref, c_ref, alpha_ref, qmax_ref, o_ref):
+    """One (BT, BI) tile: o = clip(round(x / Δ̃), ±qmax) · Δ̃."""
+    x = x_ref[...]
+    alpha = alpha_ref[0, 0]
+    qmax = qmax_ref[0, 0]
+    t = jnp.maximum(t_ref[...], ref.EPS)  # (BT, 1)
+    c = jnp.maximum(c_ref[...], ref.EPS)  # (1, BI)
+    scale = (t**alpha) * (c ** (1.0 - alpha)) / qmax
+    q = jnp.clip(jnp.round(x / scale), -qmax, qmax)
+    o_ref[...] = q * scale
+
+
+@functools.partial(jax.jit, static_argnames=("bt", "bi"))
+def _crossquant_tiled(x, t, c, alpha, qmax, bt: int, bi: int):
+    tt, ii = x.shape
+    grid = (tt // bt, ii // bi)
+    return pl.pallas_call(
+        _crossquant_tile,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bt, bi), lambda i, j: (i, j)),
+            pl.BlockSpec((bt, 1), lambda i, j: (i, 0)),
+            pl.BlockSpec((1, bi), lambda i, j: (0, j)),
+            pl.BlockSpec((1, 1), lambda i, j: (0, 0)),
+            pl.BlockSpec((1, 1), lambda i, j: (0, 0)),
+        ],
+        out_specs=pl.BlockSpec((bt, bi), lambda i, j: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((tt, ii), x.dtype),
+        interpret=True,
+    )(x, t, c, alpha, qmax)
+
+
+def crossquant_fake_quant(x, alpha, qmax, bt: int = DEFAULT_BT, bi: int = DEFAULT_BI):
+    """CrossQuant fake quantization of a (T, I) activation matrix.
+
+    Handles arbitrary shapes by padding up to tile multiples (padded cells
+    are zero and are sliced away; padding cannot perturb t/c because the
+    absmax vectors are computed on the *unpadded* matrix and padded rows /
+    columns receive scale contributions only from their own t/c entries,
+    which are never read back).
+
+    alpha / qmax may be python floats or traced scalars — both lower into
+    the same HLO, so the AOT artifact exposes them as runtime inputs.
+    """
+    tt, ii = x.shape
+    bt = min(bt, max(tt, 1))
+    bi = min(bi, max(ii, 1))
+    t = ref.row_abs_max(x)
+    c = ref.col_abs_max(x)
+    pt = (-tt) % bt
+    pi = (-ii) % bi
+    xp = jnp.pad(x, ((0, pt), (0, pi)))
+    tp = jnp.pad(t, ((0, pt), (0, 0)), constant_values=1.0)
+    cp = jnp.pad(c, ((0, 0), (0, pi)), constant_values=1.0)
+    a2 = jnp.asarray(alpha, x.dtype).reshape(1, 1)
+    q2 = jnp.asarray(qmax, x.dtype).reshape(1, 1)
+    out = _crossquant_tiled(xp, tp, cp, a2, q2, bt, bi)
+    return out[:tt, :ii]

@@ -1,0 +1,61 @@
+"""L1 Pallas kernel: per-token fake quantization (baseline, eq. 1).
+
+Structurally a strict subset of the CrossQuant kernel: only the row absmax
+vector is streamed alongside the tile. Kept as its own kernel (rather than
+CrossQuant with α=1) so the baseline costs exactly what the paper's
+baseline costs — no pow() in the scale path.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from . import ref
+
+DEFAULT_BT = 128
+DEFAULT_BI = 128
+
+
+def _per_token_tile(x_ref, t_ref, qmax_ref, o_ref):
+    x = x_ref[...]
+    qmax = qmax_ref[0, 0]
+    scale = jnp.maximum(t_ref[...], ref.EPS) / qmax  # (BT, 1)
+    q = jnp.clip(jnp.round(x / scale), -qmax, qmax)
+    o_ref[...] = q * scale
+
+
+@functools.partial(jax.jit, static_argnames=("bt", "bi"))
+def _per_token_tiled(x, t, qmax, bt: int, bi: int):
+    tt, ii = x.shape
+    grid = (tt // bt, ii // bi)
+    return pl.pallas_call(
+        _per_token_tile,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bt, bi), lambda i, j: (i, j)),
+            pl.BlockSpec((bt, 1), lambda i, j: (i, 0)),
+            pl.BlockSpec((1, 1), lambda i, j: (0, 0)),
+        ],
+        out_specs=pl.BlockSpec((bt, bi), lambda i, j: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((tt, ii), x.dtype),
+        interpret=True,
+    )(x, t, qmax)
+
+
+def per_token_fake_quant(x, qmax, bt: int = DEFAULT_BT, bi: int = DEFAULT_BI):
+    """Per-token fake quantization of a (T, I) activation matrix."""
+    tt, ii = x.shape
+    bt = min(bt, max(tt, 1))
+    bi = min(bi, max(ii, 1))
+    t = ref.row_abs_max(x)
+    pt = (-tt) % bt
+    pi = (-ii) % bi
+    xp = jnp.pad(x, ((0, pt), (0, pi)))
+    tp = jnp.pad(t, ((0, pt), (0, 0)), constant_values=1.0)
+    q2 = jnp.asarray(qmax, x.dtype).reshape(1, 1)
+    out = _per_token_tiled(xp, tp, q2, bt, bi)
+    return out[:tt, :ii]

@@ -1,0 +1,143 @@
+"""Pure-jnp reference oracles for every Pallas kernel.
+
+These are the correctness ground truth: pytest asserts each Pallas kernel
+(interpret mode) against these functions across hypothesis-generated shapes,
+dtypes and alphas. They also serve as the L2 fallback implementation when a
+shape does not tile cleanly.
+
+All fake-quant functions follow the paper's formulation:
+
+  Per-token (eq. 1):  Q(X_ij) = round(X_ij / Δ_ij),  Δ_ij = t_i / qmax
+  CrossQuant (eq. 5): CQ(X_ij) = round(X_ij / Δ̃_ij), Δ̃_ij = t_i^α c_j^(1−α) / qmax
+
+with t_i = max|X_i,:|, c_j = max|X_:,j| and qmax = 2^(N−1) − 1. "Fake quant"
+means we immediately dequantize (multiply the integer grid value back by the
+scale), which is the paper's own evaluation protocol (Appendix B.1).
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+EPS = 1e-9
+
+
+def row_abs_max(x: jnp.ndarray) -> jnp.ndarray:
+    """t: per-row absolute maximum, shape (T, 1)."""
+    return jnp.max(jnp.abs(x), axis=-1, keepdims=True)
+
+
+def col_abs_max(x: jnp.ndarray) -> jnp.ndarray:
+    """c: per-column absolute maximum, shape (1, I)."""
+    return jnp.max(jnp.abs(x), axis=-2, keepdims=True)
+
+
+def cross_scale(t: jnp.ndarray, c: jnp.ndarray, alpha, qmax) -> jnp.ndarray:
+    """Δ̃_ij = t_i^α · c_j^(1−α) / qmax, broadcast to (T, I).
+
+    alpha = 1 recovers per-token quantization exactly. Zero rows/columns are
+    guarded with EPS so that an all-zero input quantizes to all-zero output
+    instead of NaN.
+    """
+    t = jnp.maximum(t, EPS)
+    c = jnp.maximum(c, EPS)
+    return (t**alpha) * (c ** (1.0 - alpha)) / qmax
+
+
+def crossquant_fake_quant(x: jnp.ndarray, alpha, qmax) -> jnp.ndarray:
+    """CrossQuant fake quantization (quantize + dequantize), eq. (5)."""
+    scale = cross_scale(row_abs_max(x), col_abs_max(x), alpha, qmax)
+    q = jnp.clip(jnp.round(x / scale), -qmax, qmax)
+    return q * scale
+
+
+def per_token_fake_quant(x: jnp.ndarray, qmax) -> jnp.ndarray:
+    """Per-token fake quantization, eq. (1)."""
+    scale = jnp.maximum(row_abs_max(x), EPS) / qmax
+    q = jnp.clip(jnp.round(x / scale), -qmax, qmax)
+    return q * scale
+
+
+def per_channel_fake_quant(w: jnp.ndarray, qmax) -> jnp.ndarray:
+    """Per-(output-)channel weight fake quantization, eq. (2).
+
+    w has shape (I, O); the quantization unit is one output channel
+    (a column of w).
+    """
+    scale = jnp.maximum(col_abs_max(w), EPS) / qmax
+    q = jnp.clip(jnp.round(w / scale), -qmax, qmax)
+    return q * scale
+
+
+def groupwise_fake_quant(w: jnp.ndarray, qmax, group: int) -> jnp.ndarray:
+    """Group-wise weight fake quantization (reshape to (I·O/g, g) first)."""
+    shape = w.shape
+    flat = w.reshape(-1, group)
+    scale = jnp.maximum(row_abs_max(flat), EPS) / qmax
+    q = jnp.clip(jnp.round(flat / scale), -qmax, qmax)
+    return (q * scale).reshape(shape)
+
+
+def crossquant_weight_fake_quant(w: jnp.ndarray, alpha_w, qmax) -> jnp.ndarray:
+    """CrossQuant applied to weights (Appendix B.1: OPT-66B W4A4 etc.)."""
+    return crossquant_fake_quant(w, alpha_w, qmax)
+
+
+def kernel_mask(x: jnp.ndarray, scale: jnp.ndarray) -> jnp.ndarray:
+    """Membership mask of the quantization kernel K(Q): |x| < 0.5·Δ (eq. 4).
+
+    Only non-zero elements count: a structural zero quantizes to zero but is
+    not information lost (the paper's Definition 1 concerns elements whose
+    value is destroyed by quantization).
+    """
+    return (jnp.abs(x) < 0.5 * scale) & (x != 0.0)
+
+
+def kernel_fraction(x: jnp.ndarray, scale: jnp.ndarray) -> jnp.ndarray:
+    """Fraction of elements of x that fall in the quantization kernel."""
+    return jnp.mean(kernel_mask(x, scale).astype(jnp.float32))
+
+
+def crossquant_kernel_fraction(x: jnp.ndarray, alpha, qmax) -> jnp.ndarray:
+    return kernel_fraction(x, cross_scale(row_abs_max(x), col_abs_max(x), alpha, qmax))
+
+
+def per_token_kernel_fraction(x: jnp.ndarray, qmax) -> jnp.ndarray:
+    return kernel_fraction(x, jnp.maximum(row_abs_max(x), EPS) / qmax)
+
+
+def remove_kernel(x: jnp.ndarray, theta) -> jnp.ndarray:
+    """The paper's "Remove Kernel" ablation: zero elements with |x| < θ·t_i
+    WITHOUT quantizing the rest (Figures 1, 6, 7, 9)."""
+    bound = theta * row_abs_max(x)
+    return jnp.where(jnp.abs(x) < bound, 0.0, x)
+
+
+def removed_fraction(x: jnp.ndarray, theta) -> jnp.ndarray:
+    bound = theta * row_abs_max(x)
+    return jnp.mean(((jnp.abs(x) < bound) & (x != 0.0)).astype(jnp.float32))
+
+
+def qmatmul(x: jnp.ndarray, w: jnp.ndarray, alpha, qmax) -> jnp.ndarray:
+    """True-integer W8A8-style matmul reference.
+
+    Activations are CrossQuant-quantized to the integer grid, weights
+    per-channel quantized, the matmul accumulates over the integer grids,
+    and the result is dequantized.
+
+    With CrossQuant the activation scale is per-element (t_i^α·c_j^(1−α)),
+    which does not factor out of the matmul as a rank-1 outer product the
+    way per-token scales do; the integer-kernel formulation therefore folds
+    the column part c_k^(1−α) into the weight rows — the TPU-friendly
+    factorization described in DESIGN.md §Hardware-Adaptation:
+
+        Y_ij = (t_i^α / qmax) · s_j · Σ_k xq_ik · [c_k^(1−α) · wq_kj]
+    """
+    t = jnp.maximum(row_abs_max(x), EPS)
+    c = jnp.maximum(col_abs_max(x), EPS)
+    act_scale = (t**alpha) * (c ** (1.0 - alpha)) / qmax
+    xq = jnp.clip(jnp.round(x / act_scale), -qmax, qmax)  # integer grid
+    w_scale = jnp.maximum(col_abs_max(w), EPS) / qmax  # (1, O)
+    wq = jnp.clip(jnp.round(w / w_scale), -qmax, qmax)
+    acc = xq @ (wq * (c.reshape(-1, 1) ** (1.0 - alpha)))
+    return acc * (t**alpha / qmax) * w_scale

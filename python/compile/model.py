@@ -1,0 +1,235 @@
+"""L2: GPT-style language model with pluggable activation fake-quantization.
+
+The forward pass consumes a single flat f32 weight vector (layout defined by
+common.param_specs) so the AOT-lowered HLO takes exactly one weight
+parameter; the rust runtime loads artifacts/weights.bin, optionally
+fake-quantizes / outlier-injects / smooths it natively, and feeds it back
+through the same HLO. One lowered module therefore serves every
+weight-precision variant (W16/W8/W4/W4-g128) — only *activation*
+quantization needs to live inside the graph, controlled by runtime scalars:
+
+  alpha  — CrossQuant exponent (alpha = 1.0 is exactly per-token, eq. 1)
+  qmax   — integer grid bound (127.0 = INT8, 7.0 = INT4)
+  theta  — remove-kernel zero bound multiplier (remove-kernel variant only)
+
+Quantization sites (the paper quantizes inputs of linear layers): the
+ln1 output feeding wq/wk/wv, the attention context feeding wo, the ln2
+output feeding w1, the GELU output feeding w2, and the lnf output feeding
+w_out. Attention-internal matmuls (QKᵀ, PV) stay FP, as in SmoothQuant-O1
+and the paper's fake-quant protocol.
+"""
+
+from __future__ import annotations
+
+import math
+from typing import Callable, Dict, List, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from .common import ModelConfig, param_offsets, param_specs
+from .kernels import crossquant as cq_kernel
+from .kernels import ref
+
+
+def unpack_params(cfg: ModelConfig, flat: jnp.ndarray) -> Dict[str, jnp.ndarray]:
+    """Slice the flat weight vector into named tensors (static offsets)."""
+    out = {}
+    for name, (off, shape) in param_offsets(cfg).items():
+        size = math.prod(shape)
+        out[name] = flat[off : off + size].reshape(shape)
+    return out
+
+
+def layer_norm(x: jnp.ndarray, g: jnp.ndarray, b: jnp.ndarray) -> jnp.ndarray:
+    mu = jnp.mean(x, axis=-1, keepdims=True)
+    var = jnp.mean(jnp.square(x - mu), axis=-1, keepdims=True)
+    return (x - mu) * jax.lax.rsqrt(var + 1e-5) * g + b
+
+
+def causal_attention(cfg: ModelConfig, q, k, v) -> jnp.ndarray:
+    b, s, d = q.shape
+    h, hd = cfg.n_heads, cfg.head_dim
+    q = q.reshape(b, s, h, hd).transpose(0, 2, 1, 3)
+    k = k.reshape(b, s, h, hd).transpose(0, 2, 1, 3)
+    v = v.reshape(b, s, h, hd).transpose(0, 2, 1, 3)
+    scores = jnp.einsum("bhqd,bhkd->bhqk", q, k) / jnp.sqrt(float(hd))
+    mask = jnp.tril(jnp.ones((s, s), dtype=bool))
+    scores = jnp.where(mask, scores, -1e9)
+    probs = jax.nn.softmax(scores, axis=-1)
+    ctx = jnp.einsum("bhqk,bhkd->bhqd", probs, v)
+    return ctx.transpose(0, 2, 1, 3).reshape(b, s, d)
+
+
+# ---------------------------------------------------------------------------
+# Quantization site plumbing
+# ---------------------------------------------------------------------------
+
+QuantFn = Callable[[jnp.ndarray], Tuple[jnp.ndarray, jnp.ndarray]]
+"""Maps a (B,S,F) activation to (possibly-quantized activation, kernel count)."""
+
+
+def identity_site(x):
+    return x, jnp.zeros((), jnp.float32)
+
+
+def make_crossquant_site(alpha, qmax, use_pallas: bool) -> QuantFn:
+    """Fake-quantize a 3D activation token-wise (rows = tokens)."""
+
+    def site(x):
+        b, s, f = x.shape
+        x2 = x.reshape(b * s, f)
+        if use_pallas:
+            out = cq_kernel.crossquant_fake_quant(x2, alpha, qmax)
+        else:
+            out = ref.crossquant_fake_quant(x2, alpha, qmax)
+        kcount = ref.kernel_fraction(
+            x2, ref.cross_scale(ref.row_abs_max(x2), ref.col_abs_max(x2), alpha, qmax)
+        ) * (b * s * f)
+        return out.reshape(b, s, f), kcount
+
+    return site
+
+
+def make_remove_kernel_site(theta) -> QuantFn:
+    """The paper's Remove-Kernel ablation: zero |x| < θ·t_i, keep the rest FP."""
+
+    def site(x):
+        b, s, f = x.shape
+        x2 = x.reshape(b * s, f)
+        out = ref.remove_kernel(x2, theta)
+        rcount = ref.removed_fraction(x2, theta) * (b * s * f)
+        return out.reshape(b, s, f), rcount
+
+    return site
+
+
+# ---------------------------------------------------------------------------
+# Forward pass
+# ---------------------------------------------------------------------------
+
+
+def forward_nll(
+    cfg: ModelConfig,
+    flat_w: jnp.ndarray,
+    tokens: jnp.ndarray,
+    site: QuantFn = identity_site,
+    collect_acts: bool = False,
+):
+    """Forward pass returning per-position NLL.
+
+    Returns (nll[B, S-1], kernel_fraction scalar, acts or None). `acts` is
+    the stack of pre-linear LN outputs [(2·L+1), B·S, D] consumed by the
+    rust analysis engine for Figure 4.
+    """
+    p = unpack_params(cfg, flat_w)
+    b, s = tokens.shape
+    x = jnp.take(p["tok_emb"], tokens, axis=0) + p["pos_emb"][None, :s, :]
+
+    total_kernel = jnp.zeros((), jnp.float32)
+    total_elems = 0.0
+    acts: List[jnp.ndarray] = []
+
+    state = {"kernel": total_kernel, "elems": total_elems}
+
+    def quant(h):
+        out, kcount = site(h)
+        state["kernel"] = state["kernel"] + kcount
+        state["elems"] += float(h.size)
+        return out
+
+    for l in range(cfg.n_layers):
+        pre = f"layer{l}."
+        h = layer_norm(x, p[pre + "ln1_g"], p[pre + "ln1_b"])
+        if collect_acts:
+            acts.append(h.reshape(b * s, cfg.d_model))
+        hq = quant(h)
+        q = hq @ p[pre + "wq"]
+        k = hq @ p[pre + "wk"]
+        v = hq @ p[pre + "wv"]
+        ctx = causal_attention(cfg, q, k, v)
+        ctx = quant(ctx)
+        x = x + ctx @ p[pre + "wo"]
+
+        h = layer_norm(x, p[pre + "ln2_g"], p[pre + "ln2_b"])
+        if collect_acts:
+            acts.append(h.reshape(b * s, cfg.d_model))
+        hq = quant(h)
+        hh = jax.nn.gelu(hq @ p[pre + "w1"])
+        hh = quant(hh)
+        x = x + hh @ p[pre + "w2"]
+
+    h = layer_norm(x, p["lnf_g"], p["lnf_b"])
+    if collect_acts:
+        acts.append(h.reshape(b * s, cfg.d_model))
+    hq = quant(h)
+    logits = hq @ p["w_out"]
+
+    logp = jax.nn.log_softmax(logits, axis=-1)
+    targets = tokens[:, 1:]
+    nll = -jnp.take_along_axis(logp[:, :-1, :], targets[..., None], axis=-1)[..., 0]
+    kfrac = jnp.asarray(
+        state["kernel"] / state["elems"] if state["elems"] > 0 else 0.0, jnp.float32
+    )
+    act_stack = jnp.stack(acts) if collect_acts else None
+    return nll, kfrac, act_stack
+
+
+# ---------------------------------------------------------------------------
+# The functions aot.py lowers (fixed signatures = HLO parameter lists)
+# ---------------------------------------------------------------------------
+
+
+def lm_fp(cfg: ModelConfig):
+    def fn(tokens, flat_w):
+        nll, _, _ = forward_nll(cfg, flat_w, tokens)
+        return (nll,)
+
+    return fn
+
+
+def lm_aq(cfg: ModelConfig, use_pallas: bool = True):
+    """Activation-quantized forward. alpha=1 → per-token; qmax selects bits."""
+
+    def fn(tokens, flat_w, alpha, qmax):
+        site = make_crossquant_site(alpha, qmax, use_pallas)
+        nll, kfrac, _ = forward_nll(cfg, flat_w, tokens, site)
+        return (nll, kfrac)
+
+    return fn
+
+
+def lm_rk(cfg: ModelConfig):
+    def fn(tokens, flat_w, theta):
+        site = make_remove_kernel_site(theta)
+        nll, rfrac, _ = forward_nll(cfg, flat_w, tokens, site)
+        return (nll, rfrac)
+
+    return fn
+
+
+def lm_acts(cfg: ModelConfig):
+    def fn(tokens, flat_w):
+        _, _, acts = forward_nll(cfg, flat_w, tokens, collect_acts=True)
+        return (acts,)
+
+    return fn
+
+
+def init_params(cfg: ModelConfig, seed: int = 0) -> jnp.ndarray:
+    """GPT-2-style init, flattened in param_specs order."""
+    key = jax.random.PRNGKey(seed)
+    chunks = []
+    for name, shape in param_specs(cfg):
+        key, sub = jax.random.split(key)
+        if name.endswith("_g"):
+            t = jnp.ones(shape, jnp.float32)
+        elif name.endswith("_b"):
+            t = jnp.zeros(shape, jnp.float32)
+        elif name.endswith("w2") or name.endswith("wo"):
+            std = 0.02 / math.sqrt(2.0 * cfg.n_layers)
+            t = jax.random.normal(sub, shape, jnp.float32) * std
+        else:
+            t = jax.random.normal(sub, shape, jnp.float32) * 0.02
+        chunks.append(t.reshape(-1))
+    return jnp.concatenate(chunks)

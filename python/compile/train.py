@@ -1,0 +1,120 @@
+"""Build-time trainer: fit the tiny GPT on the synthetic corpus.
+
+Runs once inside `make artifacts` (skipped if artifacts/weights.bin already
+exists). Pure jax Adam — a few hundred steps on CPU take a couple of
+minutes and reach well below the unigram entropy floor, which is all the
+quantization experiments need (they compare schemes on the *same* model).
+
+Python never runs at request time; the resulting weights.bin + manifest.json
+are loaded by rust/src/model/weights.rs.
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import math
+import time
+from pathlib import Path
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .common import CorpusGen, ModelConfig, param_specs
+from .model import forward_nll, init_params
+
+
+def loss_fn(cfg: ModelConfig, flat_w, tokens):
+    nll, _, _ = forward_nll(cfg, flat_w, tokens)
+    return jnp.mean(nll)
+
+
+def make_update(cfg: ModelConfig, lr: float = 1e-3, b1=0.9, b2=0.99, eps=1e-8):
+    grad_fn = jax.value_and_grad(lambda w, t: loss_fn(cfg, w, t))
+
+    @jax.jit
+    def update(w, m, v, step, tokens):
+        loss, g = grad_fn(w, tokens)
+        m = b1 * m + (1 - b1) * g
+        v = b2 * v + (1 - b2) * jnp.square(g)
+        mhat = m / (1 - b1**step)
+        vhat = v / (1 - b2**step)
+        w = w - lr * mhat / (jnp.sqrt(vhat) + eps)
+        return w, m, v, loss
+
+    return update
+
+
+def train(
+    cfg: ModelConfig,
+    steps: int = 400,
+    batch: int = 8,
+    seed: int = 0,
+    log_every: int = 50,
+) -> np.ndarray:
+    gen = CorpusGen(cfg.vocab, seed=seed)
+    w = init_params(cfg, seed=seed)
+    m = jnp.zeros_like(w)
+    v = jnp.zeros_like(w)
+    update = make_update(cfg)
+    t0 = time.time()
+    losses = []
+    for step in range(1, steps + 1):
+        tokens = jnp.asarray(gen.batch(batch, cfg.seq_len))
+        w, m, v, loss = update(w, m, v, float(step), tokens)
+        losses.append(float(loss))
+        if step % log_every == 0 or step == 1:
+            print(
+                f"step {step:4d}  loss {float(loss):.4f}  ppl {math.exp(float(loss)):.2f}"
+                f"  ({time.time() - t0:.1f}s)",
+                flush=True,
+            )
+    return np.asarray(w), losses
+
+
+def save_weights(cfg: ModelConfig, w: np.ndarray, out_dir: Path, losses) -> None:
+    out_dir.mkdir(parents=True, exist_ok=True)
+    w.astype("<f4").tofile(out_dir / "weights.bin")
+    table = []
+    off = 0
+    for name, shape in param_specs(cfg):
+        size = int(np.prod(shape))
+        table.append({"name": name, "shape": list(shape), "offset": off, "size": size})
+        off += size
+    manifest = {
+        "config": {
+            "vocab": cfg.vocab,
+            "d_model": cfg.d_model,
+            "n_layers": cfg.n_layers,
+            "n_heads": cfg.n_heads,
+            "d_ff": cfg.d_ff,
+            "seq_len": cfg.seq_len,
+            "eval_batch": cfg.eval_batch,
+        },
+        "params": table,
+        "total_params": off,
+        "train": {
+            "final_loss": losses[-1],
+            "final_ppl": math.exp(losses[-1]),
+            "steps": len(losses),
+        },
+    }
+    (out_dir / "manifest.json").write_text(json.dumps(manifest, indent=1))
+    print(f"wrote {out_dir/'weights.bin'} ({off} params) + manifest.json")
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--out", default="../artifacts")
+    ap.add_argument("--steps", type=int, default=400)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--seed", type=int, default=0)
+    args = ap.parse_args()
+    cfg = ModelConfig()
+    w, losses = train(cfg, steps=args.steps, batch=args.batch, seed=args.seed)
+    save_weights(cfg, w, Path(args.out), losses)
+
+
+if __name__ == "__main__":
+    main()

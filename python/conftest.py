@@ -1,0 +1,6 @@
+import sys
+import pathlib
+
+# Allow `pytest python/tests/` from the repo root: make `compile.*`
+# importable regardless of the working directory.
+sys.path.insert(0, str(pathlib.Path(__file__).parent.resolve()))

@@ -1,0 +1,121 @@
+"""AOT path integrity: HLO text artifacts parse, the manifest matches the
+parameter layout, and the lowered modules compute what the jitted functions
+compute (executed through jax itself — the rust side re-verifies through
+PJRT in rust/tests/pjrt_integration.rs).
+
+Uses a session-scoped throwaway artifact dir with a 1-step-trained model so
+the suite stays fast and independent of `make artifacts`.
+"""
+
+import json
+import math
+from pathlib import Path
+
+import numpy as np
+import pytest
+
+import jax
+import jax.numpy as jnp
+
+from compile.aot import lower_all, to_hlo_text
+from compile.common import CorpusGen, ModelConfig, param_size
+from compile.model import forward_nll, init_params, lm_aq, lm_fp
+from compile.train import save_weights, train
+
+
+@pytest.fixture(scope="module")
+def art_dir(tmp_path_factory):
+    out = tmp_path_factory.mktemp("artifacts")
+    cfg = ModelConfig()
+    w, losses = train(cfg, steps=2, batch=2, log_every=100)
+    save_weights(cfg, w, out, losses)
+    inventory = lower_all(cfg, out)
+    manifest = json.loads((out / "manifest.json").read_text())
+    manifest["artifacts"] = inventory
+    (out / "manifest.json").write_text(json.dumps(manifest))
+    return out
+
+
+class TestManifest:
+    def test_layout_consistency(self, art_dir):
+        manifest = json.loads((art_dir / "manifest.json").read_text())
+        cfg = ModelConfig(**manifest["config"])
+        assert manifest["total_params"] == param_size(cfg)
+        # offsets are contiguous and ordered
+        off = 0
+        for p in manifest["params"]:
+            assert p["offset"] == off
+            assert p["size"] == int(np.prod(p["shape"]))
+            off += p["size"]
+        assert off == manifest["total_params"]
+
+    def test_weights_bin_size(self, art_dir):
+        manifest = json.loads((art_dir / "manifest.json").read_text())
+        nbytes = (art_dir / "weights.bin").stat().st_size
+        assert nbytes == 4 * manifest["total_params"]
+
+    def test_all_artifacts_listed_and_present(self, art_dir):
+        manifest = json.loads((art_dir / "manifest.json").read_text())
+        names = set(manifest["artifacts"])
+        assert names == {"lm_fp", "lm_aq", "lm_aq_jnp", "lm_rk", "lm_acts", "quant_ops", "qmatmul"}
+        for entry in manifest["artifacts"].values():
+            assert (art_dir / entry["file"]).exists()
+
+
+class TestHloText:
+    def test_hlo_is_parseable_text(self, art_dir):
+        for f in art_dir.glob("*.hlo.txt"):
+            text = f.read_text()
+            assert text.startswith("HloModule"), f.name
+            assert "ENTRY" in text, f.name
+
+    def test_lowering_is_deterministic_shape(self, art_dir):
+        """Re-lowering produces an HLO with the same entry signature."""
+        cfg = ModelConfig()
+        spec_tok = jax.ShapeDtypeStruct((cfg.eval_batch, cfg.seq_len), jnp.int32)
+        spec_w = jax.ShapeDtypeStruct((param_size(cfg),), jnp.float32)
+        text = to_hlo_text(jax.jit(lm_fp(cfg)).lower(spec_tok, spec_w))
+        disk = (art_dir / "lm_fp.hlo.txt").read_text()
+        # the parameter/result shapes in the entry computation must agree
+        sig = lambda t: [l for l in t.splitlines() if "ENTRY" in l]
+        assert sig(text) == sig(disk)
+
+
+class TestLoweredSemantics:
+    """The jitted functions the HLOs were lowered from must agree with the
+    direct (unjitted) model on trained weights."""
+
+    def test_fp_nll_matches_direct(self, art_dir):
+        manifest = json.loads((art_dir / "manifest.json").read_text())
+        cfg = ModelConfig(**manifest["config"])
+        flat = np.fromfile(art_dir / "weights.bin", dtype="<f4")
+        tokens = jnp.asarray(CorpusGen(cfg.vocab, seed=5).batch(cfg.eval_batch, cfg.seq_len))
+        (nll_jit,) = jax.jit(lm_fp(cfg))(tokens, jnp.asarray(flat))
+        nll_direct, _, _ = forward_nll(cfg, jnp.asarray(flat), tokens)
+        np.testing.assert_allclose(np.asarray(nll_jit), np.asarray(nll_direct), rtol=1e-4, atol=1e-5)
+
+    def test_quantized_nll_sane(self, art_dir):
+        manifest = json.loads((art_dir / "manifest.json").read_text())
+        cfg = ModelConfig(**manifest["config"])
+        flat = jnp.asarray(np.fromfile(art_dir / "weights.bin", dtype="<f4"))
+        tokens = jnp.asarray(CorpusGen(cfg.vocab, seed=6).batch(cfg.eval_batch, cfg.seq_len))
+        nll, kfrac = jax.jit(lm_aq(cfg, use_pallas=True))(
+            tokens, flat, jnp.float32(0.15), jnp.float32(127.0)
+        )
+        ppl = math.exp(float(jnp.mean(nll)))
+        assert 1.0 < ppl < 10 * ModelConfig().vocab
+        assert 0.0 <= float(kfrac) < 1.0
+
+
+class TestTrainer:
+    def test_two_steps_reduce_loss_eventually(self):
+        cfg = ModelConfig(vocab=64, d_model=32, n_layers=1, n_heads=2, d_ff=64, seq_len=24, eval_batch=2)
+        _, losses = train(cfg, steps=25, batch=4, log_every=100)
+        assert losses[-1] < losses[0], f"{losses[0]} -> {losses[-1]}"
+
+    def test_save_weights_roundtrip(self, tmp_path):
+        cfg = ModelConfig(vocab=64, d_model=32, n_layers=1, n_heads=2, d_ff=64, seq_len=24, eval_batch=2)
+        w = np.asarray(init_params(cfg, seed=3))
+        save_weights(cfg, w, tmp_path, [1.0])
+        back = np.fromfile(tmp_path / "weights.bin", dtype="<f4")
+        np.testing.assert_array_equal(back, w.astype("<f4"))

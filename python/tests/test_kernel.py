@@ -1,0 +1,176 @@
+"""L1 correctness: every Pallas kernel vs. the pure-jnp oracle (ref.py).
+
+hypothesis sweeps shapes (including non-tile-divisible ones), alphas and
+bit-widths; assert_allclose against ref.py is the core correctness signal
+for the quantization hot path.
+"""
+
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+import jax.numpy as jnp
+
+from compile.kernels import absmax, crossquant, per_token, qmatmul, ref
+
+settings.register_profile("ci", max_examples=25, deadline=None)
+settings.load_profile("ci")
+
+
+def rand_matrix(rows, cols, seed, scale=1.0, outliers=0):
+    rng = np.random.default_rng(seed)
+    x = rng.normal(scale=scale, size=(rows, cols)).astype(np.float32)
+    if outliers:
+        cols_idx = rng.choice(cols, size=min(outliers, cols), replace=False)
+        x[:, cols_idx] *= 40.0
+    return x
+
+
+shape_st = st.tuples(st.integers(1, 300), st.integers(1, 200))
+alpha_st = st.floats(0.0, 1.0, allow_nan=False)
+qmax_st = st.sampled_from([7.0, 127.0])
+
+
+class TestCrossQuantKernel:
+    @given(shape=shape_st, alpha=alpha_st, qmax=qmax_st, seed=st.integers(0, 2**16))
+    def test_matches_ref(self, shape, alpha, qmax, seed):
+        x = jnp.asarray(rand_matrix(*shape, seed))
+        got = crossquant.crossquant_fake_quant(x, alpha, qmax)
+        want = ref.crossquant_fake_quant(x, alpha, qmax)
+        np.testing.assert_allclose(got, want, rtol=1e-6, atol=1e-7)
+
+    @given(shape=shape_st, seed=st.integers(0, 2**16))
+    def test_alpha_one_is_per_token(self, shape, seed):
+        """α=1 degenerates to per-token. pow(t, 1.0) may differ from t by
+        1 ulp, which can flip round() exactly at a .5 grid boundary, so we
+        allow a one-grid-step (Δ_i) discrepancy per element."""
+        x = jnp.asarray(rand_matrix(*shape, seed))
+        got = np.asarray(crossquant.crossquant_fake_quant(x, 1.0, 127.0))
+        want = np.asarray(ref.per_token_fake_quant(x, 127.0))
+        delta = np.maximum(np.asarray(ref.row_abs_max(x)), ref.EPS) / 127.0
+        assert np.all(np.abs(got - want) <= delta * 1.0001 + 1e-9)
+
+    def test_with_outlier_columns(self):
+        x = jnp.asarray(rand_matrix(256, 128, 7, outliers=2))
+        got = crossquant.crossquant_fake_quant(x, 0.15, 127.0)
+        want = ref.crossquant_fake_quant(x, 0.15, 127.0)
+        np.testing.assert_allclose(got, want, rtol=1e-6, atol=1e-7)
+
+    def test_zero_matrix(self):
+        x = jnp.zeros((64, 64), jnp.float32)
+        out = crossquant.crossquant_fake_quant(x, 0.15, 127.0)
+        assert not np.any(np.isnan(out))
+        np.testing.assert_array_equal(out, 0.0)
+
+    def test_non_divisible_tile_shapes(self):
+        for shape in [(1, 1), (129, 127), (5, 300), (257, 3)]:
+            x = jnp.asarray(rand_matrix(*shape, 11))
+            got = crossquant.crossquant_fake_quant(x, 0.15, 127.0)
+            want = ref.crossquant_fake_quant(x, 0.15, 127.0)
+            np.testing.assert_allclose(got, want, rtol=1e-6, atol=1e-7)
+
+    def test_values_on_integer_grid(self):
+        """Dequantized output / scale must be integers within ±qmax."""
+        x = jnp.asarray(rand_matrix(100, 90, 3))
+        qmax = 127.0
+        out = crossquant.crossquant_fake_quant(x, 0.15, qmax)
+        scale = ref.cross_scale(ref.row_abs_max(x), ref.col_abs_max(x), 0.15, qmax)
+        grid = np.asarray(out / scale)
+        np.testing.assert_allclose(grid, np.round(grid), atol=1e-3)
+        assert np.all(np.abs(grid) <= qmax + 1e-3)
+
+
+class TestPerTokenKernel:
+    @given(shape=shape_st, qmax=qmax_st, seed=st.integers(0, 2**16))
+    def test_matches_ref(self, shape, qmax, seed):
+        x = jnp.asarray(rand_matrix(*shape, seed))
+        got = per_token.per_token_fake_quant(x, qmax)
+        want = ref.per_token_fake_quant(x, qmax)
+        np.testing.assert_allclose(got, want, rtol=1e-6, atol=1e-7)
+
+    def test_row_max_preserved(self):
+        """The row absmax element quantizes to exactly ±qmax·Δ = ±t_i."""
+        x = jnp.asarray(rand_matrix(64, 64, 5))
+        out = np.asarray(per_token.per_token_fake_quant(x, 127.0))
+        t = np.max(np.abs(np.asarray(x)), axis=1)
+        t_out = np.max(np.abs(out), axis=1)
+        np.testing.assert_allclose(t_out, t, rtol=1e-6)
+
+
+class TestAbsMaxKernel:
+    @given(shape=shape_st, seed=st.integers(0, 2**16))
+    def test_matches_ref(self, shape, seed):
+        x = jnp.asarray(rand_matrix(*shape, seed))
+        t, c = absmax.row_col_abs_max(x)
+        np.testing.assert_allclose(t, ref.row_abs_max(x), rtol=0, atol=0)
+        np.testing.assert_allclose(c, ref.col_abs_max(x), rtol=0, atol=0)
+
+    def test_multi_tile_accumulation(self):
+        """Shapes spanning several grid tiles exercise the @pl.when combine."""
+        x = jnp.asarray(rand_matrix(300, 300, 9))
+        t, c = absmax.row_col_abs_max(x, bt=64, bi=64)
+        np.testing.assert_array_equal(np.asarray(t), np.asarray(ref.row_abs_max(x)))
+        np.testing.assert_array_equal(np.asarray(c), np.asarray(ref.col_abs_max(x)))
+
+    def test_negative_dominated(self):
+        x = -jnp.abs(jnp.asarray(rand_matrix(50, 70, 2)))
+        t, c = absmax.row_col_abs_max(x)
+        assert np.all(np.asarray(t) >= 0)
+        np.testing.assert_array_equal(np.asarray(t), np.asarray(ref.row_abs_max(x)))
+
+
+class TestQMatmulKernel:
+    @given(
+        t=st.integers(1, 150),
+        i=st.integers(1, 100),
+        o=st.integers(1, 120),
+        alpha=alpha_st,
+        qmax=qmax_st,
+        seed=st.integers(0, 2**16),
+    )
+    def test_matches_ref(self, t, i, o, alpha, qmax, seed):
+        x = jnp.asarray(rand_matrix(t, i, seed))
+        w = jnp.asarray(rand_matrix(i, o, seed + 1, scale=0.1))
+        got = qmatmul.qmatmul(x, w, alpha, qmax)
+        want = ref.qmatmul(x, w, alpha, qmax)
+        np.testing.assert_allclose(got, want, rtol=1e-5, atol=1e-5)
+
+    def test_close_to_fp_matmul_int8(self):
+        """INT8 quantized matmul should track the FP product closely."""
+        x = jnp.asarray(rand_matrix(128, 128, 21))
+        w = jnp.asarray(rand_matrix(128, 128, 22, scale=0.05))
+        got = np.asarray(qmatmul.qmatmul(x, w, 0.15, 127.0))
+        fp = np.asarray(x @ w)
+        rel = np.linalg.norm(got - fp) / np.linalg.norm(fp)
+        assert rel < 0.02, rel
+
+
+class TestKernelFraction:
+    """The quantization-kernel statistics that drive the paper's analysis."""
+
+    def test_crossquant_kernel_smaller_than_per_token(self):
+        """Paper §4.2: with outlier columns, K(CQ) ≪ K(Q)."""
+        x = jnp.asarray(rand_matrix(512, 256, 3, outliers=3))
+        kq = float(ref.per_token_kernel_fraction(x, 127.0))
+        kcq = float(ref.crossquant_kernel_fraction(x, 0.15, 127.0))
+        assert kcq < kq
+        assert kq > 0.1  # outliers inflate the per-token kernel
+        assert kcq < 0.05
+
+    def test_kernel_matches_actual_zeros(self):
+        """Definition 1: kernel fraction == fraction quantized to zero."""
+        x = jnp.asarray(rand_matrix(200, 100, 4, outliers=2))
+        qmax = 127.0
+        out = np.asarray(ref.crossquant_fake_quant(x, 0.15, qmax))
+        nonzero_in = np.asarray(x) != 0
+        frac_zeroed = np.mean((out == 0) & nonzero_in)
+        kfrac = float(ref.crossquant_kernel_fraction(x, 0.15, qmax))
+        np.testing.assert_allclose(frac_zeroed, kfrac, atol=1e-3)
+
+    @given(theta=st.floats(0.0, 0.5), seed=st.integers(0, 2**16))
+    def test_remove_kernel_fraction(self, theta, seed):
+        x = jnp.asarray(rand_matrix(100, 80, seed))
+        out = np.asarray(ref.remove_kernel(x, theta))
+        frac = float(ref.removed_fraction(x, theta))
+        actual = np.mean((out == 0) & (np.asarray(x) != 0))
+        np.testing.assert_allclose(actual, frac, atol=1e-3)

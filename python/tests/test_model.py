@@ -1,0 +1,187 @@
+"""L2 correctness: model shapes, quantization-site wiring, AOT entry points."""
+
+import math
+
+import numpy as np
+import pytest
+
+import jax
+import jax.numpy as jnp
+
+from compile.common import CorpusGen, ModelConfig, param_offsets, param_size
+from compile.kernels import ref
+from compile.model import (
+    forward_nll,
+    init_params,
+    layer_norm,
+    lm_aq,
+    lm_fp,
+    lm_rk,
+    make_crossquant_site,
+    make_remove_kernel_site,
+    unpack_params,
+)
+
+CFG = ModelConfig(vocab=64, d_model=32, n_layers=2, n_heads=2, d_ff=64, seq_len=24, eval_batch=2)
+
+
+@pytest.fixture(scope="module")
+def weights():
+    return init_params(CFG, seed=1)
+
+
+@pytest.fixture(scope="module")
+def tokens():
+    gen = CorpusGen(CFG.vocab, seed=3)
+    return jnp.asarray(gen.batch(CFG.eval_batch, CFG.seq_len))
+
+
+class TestParamLayout:
+    def test_total_size(self, weights):
+        assert weights.shape == (param_size(CFG),)
+
+    def test_unpack_shapes(self, weights):
+        p = unpack_params(CFG, weights)
+        assert p["tok_emb"].shape == (CFG.vocab, CFG.d_model)
+        assert p["layer0.w1"].shape == (CFG.d_model, CFG.d_ff)
+        assert p["w_out"].shape == (CFG.d_model, CFG.vocab)
+
+    def test_offsets_contiguous(self):
+        offs = param_offsets(CFG)
+        total = 0
+        for name, (off, shape) in offs.items():
+            assert off == total, name
+            total += math.prod(shape)
+        assert total == param_size(CFG)
+
+
+class TestForward:
+    def test_nll_shape_and_finite(self, weights, tokens):
+        nll, kfrac, _ = forward_nll(CFG, weights, tokens)
+        assert nll.shape == (CFG.eval_batch, CFG.seq_len - 1)
+        assert np.all(np.isfinite(np.asarray(nll)))
+        assert float(kfrac) == 0.0  # identity site
+
+    def test_random_model_ppl_near_uniform(self, weights, tokens):
+        nll, _, _ = forward_nll(CFG, weights, tokens)
+        ppl = math.exp(float(jnp.mean(nll)))
+        assert 0.5 * CFG.vocab < ppl < 2.0 * CFG.vocab
+
+    def test_acts_shape(self, weights, tokens):
+        _, _, acts = forward_nll(CFG, weights, tokens, collect_acts=True)
+        assert acts.shape == (
+            2 * CFG.n_layers + 1,
+            CFG.eval_batch * CFG.seq_len,
+            CFG.d_model,
+        )
+
+    def test_layer_norm_zero_mean_unit_var(self):
+        x = jnp.asarray(np.random.default_rng(0).normal(size=(4, 8, 32)).astype(np.float32))
+        y = layer_norm(x, jnp.ones(32), jnp.zeros(32))
+        np.testing.assert_allclose(np.mean(np.asarray(y), -1), 0.0, atol=1e-5)
+        np.testing.assert_allclose(np.var(np.asarray(y), -1), 1.0, atol=1e-2)
+
+    def test_causality(self, weights):
+        """Changing a suffix token must not affect earlier NLL positions."""
+        gen = CorpusGen(CFG.vocab, seed=5)
+        t1 = np.asarray(gen.batch(1, CFG.seq_len))
+        t2 = t1.copy()
+        t2[0, -1] = (t2[0, -1] + 7) % CFG.vocab
+        n1, _, _ = forward_nll(CFG, weights, jnp.asarray(t1))
+        n2, _, _ = forward_nll(CFG, weights, jnp.asarray(t2))
+        # all positions except the last prediction (which targets the changed
+        # token) must be identical
+        np.testing.assert_allclose(np.asarray(n1)[0, :-1], np.asarray(n2)[0, :-1], atol=1e-6)
+
+
+class TestQuantSites:
+    def test_crossquant_site_reduces_to_input_when_wide(self, weights, tokens):
+        """qmax → huge: fake quant is a near-identity, NLL ≈ FP NLL."""
+        fp, _, _ = forward_nll(CFG, weights, tokens)
+        site = make_crossquant_site(0.15, 2.0**22, use_pallas=False)
+        q, kfrac, _ = forward_nll(CFG, weights, tokens, site)
+        np.testing.assert_allclose(np.asarray(q), np.asarray(fp), atol=1e-3)
+        assert float(kfrac) < 1e-5
+
+    def test_int4_worse_than_int8(self, weights, tokens):
+        fp, _, _ = forward_nll(CFG, weights, tokens)
+        site8 = make_crossquant_site(0.15, 127.0, use_pallas=False)
+        site4 = make_crossquant_site(0.15, 7.0, use_pallas=False)
+        n8, _, _ = forward_nll(CFG, weights, tokens, site8)
+        n4, _, _ = forward_nll(CFG, weights, tokens, site4)
+        err8 = abs(float(jnp.mean(n8) - jnp.mean(fp)))
+        err4 = abs(float(jnp.mean(n4) - jnp.mean(fp)))
+        assert err4 > err8
+
+    def test_pallas_and_jnp_sites_agree(self, weights, tokens):
+        site_p = make_crossquant_site(0.15, 127.0, use_pallas=True)
+        site_j = make_crossquant_site(0.15, 127.0, use_pallas=False)
+        np_, kp, _ = forward_nll(CFG, weights, tokens, site_p)
+        nj, kj, _ = forward_nll(CFG, weights, tokens, site_j)
+        np.testing.assert_allclose(np.asarray(np_), np.asarray(nj), rtol=1e-4, atol=1e-5)
+        np.testing.assert_allclose(float(kp), float(kj), atol=1e-6)
+
+    def test_remove_kernel_theta_zero_is_identity(self, weights, tokens):
+        fp, _, _ = forward_nll(CFG, weights, tokens)
+        site = make_remove_kernel_site(0.0)
+        n, rfrac, _ = forward_nll(CFG, weights, tokens, site)
+        np.testing.assert_allclose(np.asarray(n), np.asarray(fp), atol=1e-6)
+        assert float(rfrac) == 0.0
+
+    def test_remove_kernel_fraction_monotone_in_theta(self, weights, tokens):
+        fracs = []
+        for theta in [0.0, 0.005, 0.02, 0.1]:
+            _, rfrac, _ = forward_nll(CFG, weights, tokens, make_remove_kernel_site(theta))
+            fracs.append(float(rfrac))
+        assert fracs == sorted(fracs)
+
+
+class TestAotEntryPoints:
+    def test_lm_fp_jit(self, weights, tokens):
+        (nll,) = jax.jit(lm_fp(CFG))(tokens, weights)
+        assert nll.shape == (CFG.eval_batch, CFG.seq_len - 1)
+
+    def test_lm_aq_alpha1_equals_per_token(self, weights, tokens):
+        """The AOT graph with alpha=1 must reproduce per-token quantization."""
+        fn = jax.jit(lm_aq(CFG, use_pallas=False))
+        nll_a1, _ = fn(tokens, weights, jnp.float32(1.0), jnp.float32(127.0))
+
+        def pt_site(x):
+            b, s, f = x.shape
+            x2 = x.reshape(b * s, f)
+            return ref.per_token_fake_quant(x2, 127.0).reshape(b, s, f), jnp.zeros((), jnp.float32)
+
+        nll_pt, _, _ = forward_nll(CFG, weights, tokens, pt_site)
+        np.testing.assert_allclose(np.asarray(nll_a1), np.asarray(nll_pt), rtol=1e-5, atol=1e-6)
+
+    def test_lm_rk_jit(self, weights, tokens):
+        nll, rfrac = jax.jit(lm_rk(CFG))(tokens, weights, jnp.float32(0.01))
+        assert nll.shape == (CFG.eval_batch, CFG.seq_len - 1)
+        assert 0.0 <= float(rfrac) < 1.0
+
+
+class TestCorpus:
+    def test_deterministic(self):
+        a = CorpusGen(64, seed=9).batch(2, 50)
+        b = CorpusGen(64, seed=9).batch(2, 50)
+        np.testing.assert_array_equal(a, b)
+
+    def test_token_range(self):
+        t = CorpusGen(512, seed=1).batch(4, 200)
+        assert t.min() >= 0 and t.max() < 512
+
+    def test_markov_structure_learnable(self):
+        """Conditional distribution must be peaked: given prev, the modal
+        next token should appear much more often than uniform."""
+        gen = CorpusGen(64, seed=2)
+        toks = gen.batch(1, 20000)[0]
+        from collections import Counter, defaultdict
+
+        cond = defaultdict(Counter)
+        for a, b in zip(toks[:-1], toks[1:]):
+            cond[int(a)][int(b)] += 1
+        # average modal probability over well-populated contexts
+        probs = [
+            max(c.values()) / sum(c.values()) for c in cond.values() if sum(c.values()) > 50
+        ]
+        assert np.mean(probs) > 0.25  # ≫ 1/64

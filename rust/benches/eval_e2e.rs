@@ -1,0 +1,122 @@
+//! End-to-end evaluation benchmarks: the native forward path, the PJRT
+//! artifact path (lm_fp vs lm_aq pallas vs lm_aq_jnp fused), and the
+//! coordinator's batching win — EXPERIMENTS.md §Perf L2/L3 numbers.
+//!
+//! Requires `make artifacts`; degrades gracefully (native-only) without.
+//!
+//!     cargo bench --bench eval_e2e
+
+mod support;
+
+use std::time::Duration;
+
+use crossquant::coordinator::scheduler::CoordinatorConfig;
+use crossquant::coordinator::{ActScheme, EvalCoordinator};
+use crossquant::corpus::CorpusGen;
+use crossquant::model::weights::synthetic_weights;
+use crossquant::model::{IdentitySite, ModelConfig, NativeModel, QuantPath, QuantSite, QuantizedModel};
+use crossquant::quant::{crossquant::CrossQuant, Bits};
+use crossquant::runtime::literal::{scalar_literal, tokens_literal, vec_literal};
+use crossquant::runtime::{ArtifactStore, Runtime};
+use support::{bench, header};
+
+fn main() {
+    let budget = Duration::from_millis(500);
+    header();
+
+    // ---------- native path ----------
+    let store = ArtifactStore::discover(None).ok();
+    let weights = store
+        .as_ref()
+        .and_then(|s| s.load_weights().ok())
+        .unwrap_or_else(|| synthetic_weights(ModelConfig::default_build(), 1));
+    let cfg = weights.config;
+    let model = NativeModel::new(weights.clone());
+    let mut gen = CorpusGen::new(cfg.vocab, 5);
+    let seq = gen.sequence(cfg.seq_len);
+    let tokens_per_fwd = cfg.seq_len as f64;
+
+    bench("native forward FP (1 seq)", budget, || {
+        std::hint::black_box(model.forward_nll(&seq, &mut IdentitySite).unwrap());
+    })
+    .print_throughput(tokens_per_fwd, "tok");
+
+    bench("native forward + CrossQuant sites", budget, || {
+        let mut site = QuantSite::new(CrossQuant::new(0.15, Bits::Int8));
+        std::hint::black_box(model.forward_nll(&seq, &mut site).unwrap());
+    })
+    .print_throughput(tokens_per_fwd, "tok");
+
+    // the true-integer deployment path (i8×i8→i32 GEMMs)
+    let qmodel =
+        QuantizedModel::new(&weights, Bits::Int8, Bits::Int8, QuantPath::CrossQuant { alpha: 0.15 })
+            .expect("quantized model");
+    bench("integer W8A8 forward (qlinear path)", budget, || {
+        std::hint::black_box(qmodel.forward_nll(&seq).unwrap());
+    })
+    .print_throughput(tokens_per_fwd, "tok");
+    let qpt = QuantizedModel::new(&weights, Bits::Int8, Bits::Int8, QuantPath::PerToken)
+        .expect("quantized model");
+    bench("integer W8A8 forward (per-token path)", budget, || {
+        std::hint::black_box(qpt.forward_nll(&seq).unwrap());
+    })
+    .print_throughput(tokens_per_fwd, "tok");
+
+    // ---------- PJRT path ----------
+    let Some(store) = store else {
+        println!("\n(no artifacts — run `make artifacts` for the PJRT benches)");
+        return;
+    };
+    if store.validate().is_err() {
+        println!("\n(artifacts incomplete — run `make artifacts` for the PJRT benches)");
+        return;
+    }
+
+    let mut runtime = Runtime::new(store.clone()).expect("pjrt client");
+    let mut gen = CorpusGen::new(cfg.vocab, 6);
+    let rows: Vec<Vec<u32>> = (0..cfg.eval_batch).map(|_| gen.sequence(cfg.seq_len)).collect();
+    let tokens = tokens_literal(&rows, cfg.seq_len, 0).unwrap();
+    let w = vec_literal(&weights.flat);
+    let batch_tokens = (cfg.eval_batch * cfg.seq_len) as f64;
+
+    println!();
+    for name in ["lm_fp", "lm_aq", "lm_aq_jnp", "lm_rk"] {
+        runtime.prepare(name).expect("compile");
+        let inputs: Vec<xla::Literal> = match name {
+            "lm_fp" => vec![tokens.clone(), w.clone()],
+            "lm_rk" => vec![tokens.clone(), w.clone(), scalar_literal(0.004)],
+            _ => vec![tokens.clone(), w.clone(), scalar_literal(0.15), scalar_literal(127.0)],
+        };
+        bench(&format!("pjrt execute {name} (batch {})", cfg.eval_batch), budget, || {
+            std::hint::black_box(runtime.execute(name, &inputs).unwrap());
+        })
+        .print_throughput(batch_tokens, "tok");
+    }
+
+    // ---------- coordinator batching win ----------
+    println!();
+    let mut gen = CorpusGen::new(cfg.vocab, 7);
+    let seqs: Vec<Vec<u32>> = (0..32).map(|_| gen.sequence(cfg.seq_len)).collect();
+    for (label, batch_size) in [("coordinator batch=1 (no batching)", 1), ("coordinator batch=8", 8)] {
+        let coordinator = EvalCoordinator::start(
+            store.clone(),
+            cfg,
+            vec![("w".into(), weights.flat.clone())],
+            CoordinatorConfig {
+                batch_size,
+                max_batch_delay: Duration::from_millis(2),
+                max_queue: 256,
+            },
+        );
+        let r = bench(label, Duration::from_millis(1500), || {
+            coordinator
+                .evaluate_stream(
+                    seqs.clone(),
+                    ActScheme::CrossQuant { alpha: 0.15, qmax: 127.0 },
+                    "w",
+                )
+                .unwrap();
+        });
+        r.print_throughput(32.0 * cfg.seq_len as f64, "tok");
+    }
+}

@@ -1,0 +1,97 @@
+//! Hot-path micro-benchmarks for the quantization library — the
+//! EXPERIMENTS.md §Perf L3 numbers.
+//!
+//! Paper claims under test:
+//!   * CrossQuant costs "one extra division" over per-token — same O(TI);
+//!     here: CQ fake-quant should be ≤ 2× per-token on a 2048×4096 matrix.
+//!   * CrossQuant stores only one extra length-I vector (delta_field).
+//!
+//!     cargo bench --bench quant_hot_path
+
+mod support;
+
+use std::time::Duration;
+
+use crossquant::activations::{ActivationGen, FamilyProfile};
+use crossquant::analysis::kernel_fraction;
+use crossquant::quant::{
+    clipping::ClippedPerToken, crossquant::CrossQuant, pack::PackedMatrix,
+    per_channel::GroupWise, per_token::PerToken, smoothquant::SmoothQuant, ActQuantizer, Bits,
+};
+use crossquant::tensor::{Matrix, SplitMix64};
+use support::{bench, header};
+
+fn main() {
+    let budget = Duration::from_millis(400);
+    // the paper's canonical activation shape: T×I = 2048×4096
+    let profile = FamilyProfile::by_name("opt-13b").expect("profile");
+    let x = ActivationGen::new(profile, 1).matrix(2048, 4096);
+    let elems = (x.rows * x.cols) as f64;
+
+    println!("activation 2048×4096, OPT-13B profile\n");
+    header();
+
+    let pt = PerToken::new(Bits::Int8);
+    let cq = CrossQuant::new(0.15, Bits::Int8);
+
+    let r_pt = bench("per-token fake-quant (eq.1)", budget, || {
+        std::hint::black_box(pt.fake_quant(&x));
+    });
+    r_pt.print_throughput(elems, "elem");
+    let r_cq = bench("crossquant fake-quant (eq.5, α=0.15)", budget, || {
+        std::hint::black_box(cq.fake_quant(&x));
+    });
+    r_cq.print_throughput(elems, "elem");
+    println!(
+        "  -> crossquant / per-token cost ratio: {:.2}x (paper: 'one extra division', target ≤2x)\n",
+        r_cq.mean.as_secs_f64() / r_pt.mean.as_secs_f64()
+    );
+
+    bench("delta_field per-token (row absmax)", budget, || {
+        std::hint::black_box(pt.delta_field(&x));
+    })
+    .print();
+    bench("delta_field crossquant (row+col absmax+pow)", budget, || {
+        std::hint::black_box(cq.delta_field(&x));
+    })
+    .print();
+
+    let field = cq.delta_field(&x);
+    bench("kernel_fraction (Definition 1 scan)", budget, || {
+        std::hint::black_box(kernel_fraction(&x, &field));
+    })
+    .print();
+
+    bench("clipped per-token (OmniQuant step)", budget, || {
+        std::hint::black_box(ClippedPerToken::new(Bits::Int8, 0.8).fake_quant(&x));
+    })
+    .print();
+
+    // weight-side paths on a 4096×4096 weight
+    let mut rng = SplitMix64::new(9);
+    let w = Matrix::randn(2048, 2048, 0.02, &mut rng);
+    bench("group-wise W4-g128 weight quant (2048²)", budget, || {
+        std::hint::black_box(GroupWise::w4_g128().fake_quant(&w));
+    })
+    .print();
+
+    let xc = ActivationGen::new(FamilyProfile::by_name("opt-13b").unwrap(), 3).matrix(256, 2048);
+    bench("smoothquant calibrate (256×2048 calib)", budget, || {
+        std::hint::black_box(SmoothQuant::calibrate(&xc, &w, 0.5));
+    })
+    .print();
+
+    bench("pack INT8 (codes + factored scales)", budget, || {
+        std::hint::black_box(PackedMatrix::pack(&x, &cq));
+    })
+    .print();
+
+    // native matmul (the eval substrate hot loop)
+    let a = Matrix::randn(96, 128, 1.0, &mut rng);
+    let b = Matrix::randn(128, 512, 0.05, &mut rng);
+    let flops = 2.0 * 96.0 * 128.0 * 512.0;
+    bench("native matmul 96×128×512 (fwd hot loop)", budget, || {
+        std::hint::black_box(a.matmul(&b));
+    })
+    .print_throughput(flops, "flop");
+}

@@ -1,0 +1,97 @@
+//! Hand-rolled micro-benchmark harness (the offline build has no criterion
+//! — see Cargo.toml). Warmup + N timed iterations, reporting mean / min /
+//! p50 / stddev, with optional throughput in user units.
+
+use std::time::{Duration, Instant};
+
+pub struct BenchResult {
+    pub name: String,
+    pub iters: usize,
+    pub mean: Duration,
+    pub min: Duration,
+    pub p50: Duration,
+    pub stddev: Duration,
+}
+
+impl BenchResult {
+    pub fn print(&self) {
+        println!(
+            "{:44} {:>12} {:>12} {:>12} {:>10}  ×{}",
+            self.name,
+            fmt_dur(self.mean),
+            fmt_dur(self.min),
+            fmt_dur(self.p50),
+            fmt_dur(self.stddev),
+            self.iters,
+        );
+    }
+
+    pub fn print_throughput(&self, units: f64, unit_name: &str) {
+        println!(
+            "{:44} {:>12} {:>12}  {:>14.2} {unit_name}/s  ×{}",
+            self.name,
+            fmt_dur(self.mean),
+            fmt_dur(self.min),
+            units / self.mean.as_secs_f64(),
+            self.iters,
+        );
+    }
+}
+
+pub fn fmt_dur(d: Duration) -> String {
+    let ns = d.as_nanos();
+    if ns < 1_000 {
+        format!("{ns}ns")
+    } else if ns < 1_000_000 {
+        format!("{:.2}µs", ns as f64 / 1e3)
+    } else if ns < 1_000_000_000 {
+        format!("{:.2}ms", ns as f64 / 1e6)
+    } else {
+        format!("{:.3}s", ns as f64 / 1e9)
+    }
+}
+
+pub fn header() {
+    println!(
+        "{:44} {:>12} {:>12} {:>12} {:>10}",
+        "benchmark", "mean", "min", "p50", "stddev"
+    );
+    println!("{}", "-".repeat(96));
+}
+
+/// Run `f` with warmup; the iteration count adapts so the whole
+/// measurement takes ~`budget`.
+pub fn bench(name: &str, budget: Duration, mut f: impl FnMut()) -> BenchResult {
+    // warmup + calibration
+    let t0 = Instant::now();
+    f();
+    let once = t0.elapsed().max(Duration::from_nanos(100));
+    let iters = ((budget.as_secs_f64() / once.as_secs_f64()).ceil() as usize).clamp(3, 10_000);
+
+    let mut samples = Vec::with_capacity(iters);
+    for _ in 0..iters {
+        let t = Instant::now();
+        f();
+        samples.push(t.elapsed());
+    }
+    samples.sort();
+    let total: Duration = samples.iter().sum();
+    let mean = total / iters as u32;
+    let mean_s = mean.as_secs_f64();
+    let var = samples
+        .iter()
+        .map(|d| {
+            let x = d.as_secs_f64() - mean_s;
+            x * x
+        })
+        .sum::<f64>()
+        / iters as f64;
+    BenchResult {
+        name: name.to_string(),
+        iters,
+        mean,
+        min: samples[0],
+        p50: samples[iters / 2],
+        stddev: Duration::from_secs_f64(var.sqrt()),
+    }
+}

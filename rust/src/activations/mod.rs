@@ -1,0 +1,16 @@
+//! Synthetic-activation substrate: model-family profiles + generators.
+//!
+//! The paper's model-size axis (OPT-1.3B…66B, LLaMA-7B…70B) matters to the
+//! quantization analysis only through the activation statistics each model
+//! exhibits — most importantly the emergence of systematic outlier channels
+//! in models ≥ 6.7B (Dettmers et al., 2022; paper Appendix A). We encode
+//! each family member as a [`FamilyProfile`] whose parameters are
+//! calibrated to land in the paper's reported kernel regimes, and generate
+//! activations from it (or inject it into the trained LM's LayerNorm gains
+//! — see `model::quantized`).
+
+pub mod profile;
+pub mod synth;
+
+pub use profile::{Family, FamilyProfile};
+pub use synth::ActivationGen;

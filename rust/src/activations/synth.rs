@@ -1,0 +1,115 @@
+//! Synthetic activation matrices drawn from a [`FamilyProfile`].
+//!
+//! Element distribution: with probability `small_mass` a near-zero spike
+//! N(0, small_std²), otherwise the bulk N(0, 1); then the first
+//! `outlier_channels` columns (a fixed, systematic set — outlier channels
+//! in real LLMs are stable across tokens, Kovaleva et al. 2021) are scaled
+//! by `outlier_scale`.
+
+use super::profile::FamilyProfile;
+use crate::tensor::{Matrix, SplitMix64};
+
+pub struct ActivationGen {
+    pub profile: FamilyProfile,
+    rng: SplitMix64,
+}
+
+impl ActivationGen {
+    pub fn new(profile: FamilyProfile, seed: u64) -> Self {
+        ActivationGen { profile, rng: SplitMix64::new(seed) }
+    }
+
+    /// One (tokens × channels) activation matrix.
+    pub fn matrix(&mut self, tokens: usize, channels: usize) -> Matrix {
+        let p = &self.profile;
+        let mut x = Matrix::zeros(tokens, channels);
+        for i in 0..tokens {
+            for j in 0..channels {
+                let v = if self.rng.uniform() < p.small_mass as f64 {
+                    // near-zero spike: |x| ~ U(small_lo, small_hi)
+                    let mag =
+                        p.small_lo + (p.small_hi - p.small_lo) * self.rng.uniform() as f32;
+                    if self.rng.uniform() < 0.5 {
+                        mag
+                    } else {
+                        -mag
+                    }
+                } else {
+                    // bulk: sign·(|N(0,1)| + bulk_floor)
+                    let n = self.rng.normal() as f32;
+                    n + p.bulk_floor * n.signum()
+                };
+                x.set(i, j, v);
+            }
+        }
+        // systematic outlier channels, spread across the channel range
+        for k in 0..p.outlier_channels.min(channels) {
+            let j = k * channels / p.outlier_channels.max(1);
+            for i in 0..tokens {
+                let v = x.get(i, j);
+                // keep outlier channels away from the near-zero spike so
+                // their magnitude is consistently large, as observed in
+                // real models (they are "always-on" rogue dimensions)
+                let base = if v.abs() < 0.1 { 0.5 + v } else { v };
+                x.set(i, j, base * p.outlier_scale);
+            }
+        }
+        x
+    }
+
+    /// A batch of matrices (e.g. one per layer) for averaged statistics.
+    pub fn batch(&mut self, n: usize, tokens: usize, channels: usize) -> Vec<Matrix> {
+        (0..n).map(|_| self.matrix(tokens, channels)).collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::analysis::kernel_fraction;
+    use crate::quant::{crossquant::CrossQuant, per_token::PerToken, ActQuantizer, Bits};
+
+    fn gen(name: &str) -> Matrix {
+        ActivationGen::new(FamilyProfile::by_name(name).unwrap(), 7).matrix(512, 256)
+    }
+
+    #[test]
+    fn opt_66b_reproduces_large_per_token_kernel() {
+        let x = gen("opt-66b");
+        let k = kernel_fraction(&x, &PerToken::new(Bits::Int8).delta_field(&x));
+        assert!(k > 0.35, "per-token kernel {k}");
+        let kc = kernel_fraction(&x, &CrossQuant::new(0.15, Bits::Int8).delta_field(&x));
+        assert!(kc < 0.25 && kc < k / 2.0, "crossquant kernel {kc}");
+    }
+
+    #[test]
+    fn llama_reproduces_small_kernels() {
+        let x = gen("llama2-7b");
+        let k = kernel_fraction(&x, &PerToken::new(Bits::Int8).delta_field(&x));
+        assert!(k > 0.01 && k < 0.3, "per-token kernel {k}");
+        let kc = kernel_fraction(&x, &CrossQuant::new(0.15, Bits::Int8).delta_field(&x));
+        assert!(kc < 0.01, "crossquant kernel {kc}");
+    }
+
+    #[test]
+    fn regime_ordering_across_families() {
+        // paper Figure 4: OPT(≥6.7B) per-token ≫ OPT(1.3B) ≈ LLaMA levels
+        let k = |name: &str| {
+            let x = gen(name);
+            kernel_fraction(&x, &PerToken::new(Bits::Int8).delta_field(&x))
+        };
+        let k_small_opt = k("opt-1.3b");
+        let k_big_opt = k("opt-66b");
+        let k_llama = k("llama2-13b");
+        assert!(k_big_opt > 2.0 * k_small_opt, "{k_big_opt} vs {k_small_opt}");
+        assert!(k_big_opt > 2.0 * k_llama, "{k_big_opt} vs {k_llama}");
+    }
+
+    #[test]
+    fn deterministic_given_seed() {
+        let p = FamilyProfile::by_name("opt-13b").unwrap();
+        let a = ActivationGen::new(p.clone(), 3).matrix(16, 16);
+        let b = ActivationGen::new(p, 3).matrix(16, 16);
+        assert_eq!(a, b);
+    }
+}

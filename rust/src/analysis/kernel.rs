@@ -1,0 +1,154 @@
+//! Quantization kernel K(Q) — Definition 1 of the paper.
+//!
+//! K(Q) = { X_ij | Q(X_ij) = 0 } ⇔ |X_ij| < B_ij = 0.5·Δ_ij  (eq. 4),
+//! restricted to non-zero elements (a structural zero loses nothing).
+
+use crate::quant::{ActQuantizer, DeltaField};
+use crate::tensor::Matrix;
+
+/// Boolean membership mask of the quantization kernel.
+pub fn kernel_mask(x: &Matrix, field: &DeltaField) -> Vec<bool> {
+    let mut mask = Vec::with_capacity(x.len());
+    for i in 0..x.rows {
+        for (j, &v) in x.row(i).iter().enumerate() {
+            mask.push(v != 0.0 && v.abs() < field.zero_bound(i, j));
+        }
+    }
+    mask
+}
+
+/// |K(Q)| / |X| — the paper's headline statistic (Figure 4 y-axis).
+///
+/// Specialised per scale-field variant (hoisting the per-row factor and
+/// keeping the inner loop branchless) — this scan runs over every
+/// activation of every eval batch in the analysis figures, so it is a §Perf
+/// hot path.
+pub fn kernel_fraction(x: &Matrix, field: &DeltaField) -> f32 {
+    if x.is_empty() {
+        return 0.0;
+    }
+    let mut count = 0usize;
+    match field {
+        DeltaField::PerRow(rows) => {
+            for i in 0..x.rows {
+                let bound = 0.5 * rows[i];
+                count += x
+                    .row(i)
+                    .iter()
+                    .map(|&v| (v != 0.0 && v.abs() < bound) as usize)
+                    .sum::<usize>();
+            }
+        }
+        DeltaField::PerCol(cols) => {
+            for i in 0..x.rows {
+                count += x
+                    .row(i)
+                    .iter()
+                    .zip(cols)
+                    .map(|(&v, &d)| (v != 0.0 && v.abs() < 0.5 * d) as usize)
+                    .sum::<usize>();
+            }
+        }
+        DeltaField::Cross { row_pow, col_pow } => {
+            for i in 0..x.rows {
+                let half_rp = 0.5 * row_pow[i];
+                count += x
+                    .row(i)
+                    .iter()
+                    .zip(col_pow)
+                    .map(|(&v, &cp)| (v != 0.0 && v.abs() < half_rp * cp) as usize)
+                    .sum::<usize>();
+            }
+        }
+    }
+    count as f32 / x.len() as f32
+}
+
+/// Full per-matrix kernel diagnostics for one quantization scheme.
+#[derive(Clone, Debug)]
+pub struct KernelReport {
+    pub scheme: String,
+    pub fraction: f32,
+    pub count: usize,
+    pub total: usize,
+    /// Mean |x| of kernel members (how much magnitude is being destroyed).
+    pub mean_abs_kernel: f32,
+    /// Mean |x| of survivors.
+    pub mean_abs_rest: f32,
+}
+
+impl KernelReport {
+    pub fn compute(x: &Matrix, quant: &dyn ActQuantizer) -> KernelReport {
+        let field = quant.delta_field(x);
+        let mut count = 0usize;
+        let (mut sum_k, mut sum_r) = (0.0f64, 0.0f64);
+        let mut n_r = 0usize;
+        for i in 0..x.rows {
+            for (j, &v) in x.row(i).iter().enumerate() {
+                if v != 0.0 && v.abs() < field.zero_bound(i, j) {
+                    count += 1;
+                    sum_k += v.abs() as f64;
+                } else {
+                    n_r += 1;
+                    sum_r += v.abs() as f64;
+                }
+            }
+        }
+        KernelReport {
+            scheme: quant.name(),
+            fraction: count as f32 / x.len().max(1) as f32,
+            count,
+            total: x.len(),
+            mean_abs_kernel: if count > 0 { (sum_k / count as f64) as f32 } else { 0.0 },
+            mean_abs_rest: if n_r > 0 { (sum_r / n_r as f64) as f32 } else { 0.0 },
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::quant::{crossquant::CrossQuant, per_token::PerToken, Bits};
+    use crate::tensor::{Matrix, SplitMix64};
+
+    /// Definition-1 equivalence: the mask predicted from the zero bound
+    /// must exactly match the set of elements the quantizer maps to zero.
+    #[test]
+    fn mask_equals_actual_zeros() {
+        let mut rng = SplitMix64::new(31);
+        let x = Matrix::randn(64, 48, 1.0, &mut rng);
+        for quant in [CrossQuant::new(0.15, Bits::Int8), CrossQuant::new(0.6, Bits::Int4)] {
+            let field = quant.delta_field(&x);
+            let mask = kernel_mask(&x, &field);
+            let q = quant.fake_quant(&x);
+            for (idx, &m) in mask.iter().enumerate() {
+                let zeroed = q.data[idx] == 0.0 && x.data[idx] != 0.0;
+                assert_eq!(m, zeroed, "idx {idx} x={}", x.data[idx]);
+            }
+        }
+    }
+
+    #[test]
+    fn fraction_counts_match_mask() {
+        let mut rng = SplitMix64::new(32);
+        let x = Matrix::randn(40, 40, 1.0, &mut rng);
+        let q = PerToken::new(Bits::Int8);
+        let field = q.delta_field(&x);
+        let frac = kernel_fraction(&x, &field);
+        let mask_count = kernel_mask(&x, &field).iter().filter(|&&b| b).count();
+        assert!((frac - mask_count as f32 / x.len() as f32).abs() < 1e-7);
+    }
+
+    #[test]
+    fn report_partitions_elements() {
+        let mut rng = SplitMix64::new(33);
+        let x = Matrix::randn(32, 32, 1.0, &mut rng);
+        let r = KernelReport::compute(&x, &PerToken::new(Bits::Int4));
+        assert_eq!(r.total, 1024);
+        assert!(r.fraction >= 0.0 && r.fraction <= 1.0);
+        // kernel members are by construction smaller on average
+        if r.count > 0 {
+            assert!(r.mean_abs_kernel < r.mean_abs_rest);
+        }
+    }
+}

@@ -1,0 +1,8 @@
+//! Quantization-kernel analysis engine — the paper's diagnostic lens (§4).
+
+pub mod kernel;
+pub mod stats;
+pub mod threshold;
+
+pub use kernel::{kernel_fraction, kernel_mask, KernelReport};
+pub use stats::CrossStats;

@@ -1,0 +1,138 @@
+//! Cross-scale statistics — the quantities of Table 1 and §4.2's proof.
+//!
+//! For a matrix X and exponent α, Table 1 reports:
+//!   * the fraction of (i,j) with c_j ≥ t_i          (Case II, B̃ can grow)
+//!   * the fraction of (i,j) with B̃_ij < B_ij       (Case I, kernel shrinks)
+//!   * the resulting CrossQuant kernel proportion.
+
+use crate::quant::{crossquant::CrossQuant, per_token::PerToken, ActQuantizer, Bits, EPS};
+use crate::tensor::Matrix;
+
+#[derive(Clone, Debug)]
+pub struct CrossStats {
+    pub alpha: f32,
+    /// P[c_j ≥ t_i] over all elements.
+    pub frac_col_ge_row: f32,
+    /// P[B̃_ij < B_ij] over all elements (undefined at α=1; reported as 0).
+    pub frac_bound_smaller: f32,
+    /// CrossQuant kernel proportion at this α.
+    pub kernel_fraction: f32,
+    /// Per-token kernel proportion (α-independent, for reference).
+    pub per_token_kernel_fraction: f32,
+}
+
+impl CrossStats {
+    pub fn compute(x: &Matrix, alpha: f32, bits: Bits) -> CrossStats {
+        let t = x.row_abs_max();
+        let c = x.col_abs_max();
+
+        let mut n_col_ge_row = 0usize;
+        let mut n_bound_smaller = 0usize;
+        for &ti in &t {
+            for &cj in &c {
+                if cj >= ti {
+                    n_col_ge_row += 1;
+                }
+                // B̃ < B ⇔ t^α c^(1−α) < t ⇔ c < t (for α<1)
+                let ti_e = ti.max(EPS);
+                let cj_e = cj.max(EPS);
+                if alpha < 1.0 && ti_e.powf(alpha) * cj_e.powf(1.0 - alpha) < ti_e {
+                    n_bound_smaller += 1;
+                }
+            }
+        }
+        let total = (t.len() * c.len()).max(1);
+
+        let cq = CrossQuant::new(alpha, bits);
+        let pt = PerToken::new(bits);
+        CrossStats {
+            alpha,
+            frac_col_ge_row: n_col_ge_row as f32 / total as f32,
+            frac_bound_smaller: if alpha < 1.0 {
+                n_bound_smaller as f32 / total as f32
+            } else {
+                0.0
+            },
+            kernel_fraction: super::kernel_fraction(x, &cq.delta_field(x)),
+            per_token_kernel_fraction: super::kernel_fraction(x, &pt.delta_field(x)),
+        }
+    }
+}
+
+/// Outlier statistics of an activation matrix (Appendix A's premise).
+#[derive(Clone, Debug)]
+pub struct OutlierStats {
+    /// Fraction of elements with |x| > 20 × mean|x| (Dettmers' criterion).
+    pub outlier_fraction: f32,
+    /// max|x| / median of column absmaxes — the "how rogue" ratio.
+    pub max_over_median_col: f32,
+}
+
+impl OutlierStats {
+    pub fn compute(x: &Matrix) -> OutlierStats {
+        let mean_abs =
+            (x.data.iter().map(|v| v.abs() as f64).sum::<f64>() / x.len().max(1) as f64) as f32;
+        let outliers =
+            x.data.iter().filter(|v| v.abs() > 20.0 * mean_abs).count() as f32 / x.len().max(1) as f32;
+        let mut c = x.col_abs_max();
+        c.sort_by(f32::total_cmp);
+        let med = if c.is_empty() { 0.0 } else { c[c.len() / 2] };
+        let max = c.last().copied().unwrap_or(0.0);
+        OutlierStats {
+            outlier_fraction: outliers,
+            max_over_median_col: if med > 0.0 { max / med } else { 0.0 },
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::tensor::SplitMix64;
+
+    fn outlier_matrix() -> Matrix {
+        let mut rng = SplitMix64::new(41);
+        let mut x = Matrix::randn(96, 96, 1.0, &mut rng);
+        for i in 0..x.rows {
+            let v = x.get(i, 0) * 50.0;
+            x.set(i, 0, v);
+        }
+        x
+    }
+
+    #[test]
+    fn case_two_is_rare_with_outlier_columns() {
+        // When every row contains the outlier column, t_i is large, so few
+        // columns satisfy c_j ≥ t_i — the paper's ~3% claim regime.
+        let x = outlier_matrix();
+        let s = CrossStats::compute(&x, 0.15, Bits::Int8);
+        assert!(s.frac_col_ge_row < 0.1, "{}", s.frac_col_ge_row);
+        assert!(s.frac_bound_smaller > 0.9, "{}", s.frac_bound_smaller);
+    }
+
+    #[test]
+    fn kernel_shrinks_vs_per_token() {
+        let x = outlier_matrix();
+        let s = CrossStats::compute(&x, 0.15, Bits::Int8);
+        assert!(s.kernel_fraction < s.per_token_kernel_fraction);
+    }
+
+    #[test]
+    fn alpha_one_matches_per_token_kernel() {
+        let x = outlier_matrix();
+        let s = CrossStats::compute(&x, 1.0, Bits::Int8);
+        assert!((s.kernel_fraction - s.per_token_kernel_fraction).abs() < 5e-3);
+        assert_eq!(s.frac_bound_smaller, 0.0);
+    }
+
+    #[test]
+    fn outlier_stats_detects_injection() {
+        let x = outlier_matrix();
+        let o = OutlierStats::compute(&x);
+        assert!(o.max_over_median_col > 10.0);
+        let mut rng = SplitMix64::new(5);
+        let clean = Matrix::randn(96, 96, 1.0, &mut rng);
+        let oc = OutlierStats::compute(&clean);
+        assert!(oc.max_over_median_col < 3.0);
+    }
+}

@@ -1,0 +1,90 @@
+//! Threshold machinery for §4.3 (Figures 6/7): sweep the removed-kernel
+//! fraction, record perplexity, and locate the largest kernel proportion
+//! whose degradation stays within a tolerance of the FP baseline.
+
+/// One point on a Figure-6/7 curve.
+#[derive(Clone, Copy, Debug)]
+pub struct SweepPoint {
+    pub kernel_fraction: f32,
+    pub perplexity: f64,
+}
+
+/// Result of a threshold sweep.
+#[derive(Clone, Debug)]
+pub struct ThresholdCurve {
+    pub points: Vec<SweepPoint>,
+    pub fp_perplexity: f64,
+}
+
+impl ThresholdCurve {
+    /// Run `eval(fraction) -> ppl` over a fraction grid.
+    pub fn sweep(fractions: &[f32], fp_perplexity: f64, mut eval: impl FnMut(f32) -> f64) -> Self {
+        let points = fractions
+            .iter()
+            .map(|&f| SweepPoint { kernel_fraction: f, perplexity: eval(f) })
+            .collect();
+        ThresholdCurve { points, fp_perplexity }
+    }
+
+    /// The paper's threshold: the largest kernel fraction whose perplexity
+    /// stays within `rel_tol` (e.g. 0.05 = 5 %) of the FP baseline. Returns
+    /// None if even the smallest sweep point exceeds the tolerance.
+    pub fn threshold(&self, rel_tol: f64) -> Option<f32> {
+        let limit = self.fp_perplexity * (1.0 + rel_tol);
+        let mut best: Option<f32> = None;
+        for p in &self.points {
+            if p.perplexity <= limit {
+                best = Some(best.map_or(p.kernel_fraction, |b: f32| b.max(p.kernel_fraction)));
+            }
+        }
+        best
+    }
+
+    /// Is perplexity (weakly) increasing in kernel fraction? (The paper's
+    /// "positive correlation" observation — checked with a small slack to
+    /// absorb eval noise.)
+    pub fn is_monotone(&self, slack: f64) -> bool {
+        let mut sorted = self.points.clone();
+        sorted.sort_by(|a, b| a.kernel_fraction.total_cmp(&b.kernel_fraction));
+        sorted.windows(2).all(|w| w[1].perplexity >= w[0].perplexity * (1.0 - slack))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn synthetic_curve() -> ThresholdCurve {
+        // ppl flat until 0.2, then exploding — an OPT-like knee
+        ThresholdCurve::sweep(&[0.0, 0.05, 0.1, 0.2, 0.3, 0.4], 10.0, |f| {
+            if f <= 0.2 {
+                10.0 + f as f64
+            } else {
+                10.0 + ((f as f64 - 0.2) * 100.0).exp()
+            }
+        })
+    }
+
+    #[test]
+    fn finds_knee() {
+        let c = synthetic_curve();
+        let th = c.threshold(0.05).unwrap();
+        assert!((th - 0.2).abs() < 1e-6, "{th}");
+    }
+
+    #[test]
+    fn monotone_detection() {
+        let c = synthetic_curve();
+        assert!(c.is_monotone(0.01));
+        let bad = ThresholdCurve::sweep(&[0.0, 0.1, 0.2], 10.0, |f| {
+            if f > 0.05 { 5.0 } else { 20.0 }
+        });
+        assert!(!bad.is_monotone(0.01));
+    }
+
+    #[test]
+    fn none_when_all_points_exceed() {
+        let c = ThresholdCurve::sweep(&[0.1, 0.2], 10.0, |_| 100.0);
+        assert_eq!(c.threshold(0.05), None);
+    }
+}

@@ -1,0 +1,141 @@
+//! Scheme-keyed dynamic batching.
+//!
+//! Requests targeting the same (artifact, scalars, weight-set) key are
+//! accumulated until the batch reaches the artifact's fixed batch size or a
+//! deadline elapses — the standard dynamic-batching policy of LLM serving
+//! routers, scaled to this evaluation workload. Pure logic (time injected),
+//! fully unit-testable.
+
+use std::collections::HashMap;
+use std::time::{Duration, Instant};
+
+use super::SchemeKey;
+
+/// A batched unit of work, ready for the executor.
+pub struct ReadyBatch<R> {
+    pub key: SchemeKey,
+    pub requests: Vec<R>,
+}
+
+pub struct BatchAccumulator<R> {
+    batch_size: usize,
+    max_delay: Duration,
+    pending: HashMap<SchemeKey, (Instant, Vec<R>)>,
+}
+
+impl<R> BatchAccumulator<R> {
+    pub fn new(batch_size: usize, max_delay: Duration) -> Self {
+        assert!(batch_size > 0);
+        BatchAccumulator { batch_size, max_delay, pending: HashMap::new() }
+    }
+
+    /// Add a request; returns a full batch if the key just filled up.
+    pub fn push(&mut self, key: SchemeKey, req: R, now: Instant) -> Option<ReadyBatch<R>> {
+        let entry = self.pending.entry(key.clone()).or_insert_with(|| (now, Vec::new()));
+        entry.1.push(req);
+        if entry.1.len() >= self.batch_size {
+            let (_, requests) = self.pending.remove(&key).expect("present");
+            Some(ReadyBatch { key, requests })
+        } else {
+            None
+        }
+    }
+
+    /// Flush batches whose oldest request has waited past the deadline.
+    pub fn flush_expired(&mut self, now: Instant) -> Vec<ReadyBatch<R>> {
+        let expired: Vec<SchemeKey> = self
+            .pending
+            .iter()
+            .filter(|(_, (t0, _))| now.duration_since(*t0) >= self.max_delay)
+            .map(|(k, _)| k.clone())
+            .collect();
+        expired
+            .into_iter()
+            .map(|key| {
+                let (_, requests) = self.pending.remove(&key).expect("present");
+                ReadyBatch { key, requests }
+            })
+            .collect()
+    }
+
+    /// Flush everything (shutdown path).
+    pub fn flush_all(&mut self) -> Vec<ReadyBatch<R>> {
+        self.pending
+            .drain()
+            .map(|(key, (_, requests))| ReadyBatch { key, requests })
+            .collect()
+    }
+
+    /// Earliest deadline among pending batches (for sleep scheduling).
+    pub fn next_deadline(&self) -> Option<Instant> {
+        self.pending.values().map(|(t0, _)| *t0 + self.max_delay).min()
+    }
+
+    pub fn pending_requests(&self) -> usize {
+        self.pending.values().map(|(_, v)| v.len()).sum()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::ActScheme;
+
+    fn key(alpha: f32) -> SchemeKey {
+        ActScheme::CrossQuant { alpha, qmax: 127.0 }.key("base")
+    }
+
+    #[test]
+    fn fills_at_batch_size() {
+        let mut acc = BatchAccumulator::new(3, Duration::from_millis(10));
+        let now = Instant::now();
+        assert!(acc.push(key(0.15), 1u32, now).is_none());
+        assert!(acc.push(key(0.15), 2, now).is_none());
+        let batch = acc.push(key(0.15), 3, now).expect("full");
+        assert_eq!(batch.requests, vec![1, 2, 3]);
+        assert_eq!(acc.pending_requests(), 0);
+    }
+
+    #[test]
+    fn keys_batch_independently() {
+        let mut acc = BatchAccumulator::new(2, Duration::from_millis(10));
+        let now = Instant::now();
+        acc.push(key(0.15), 1u32, now);
+        acc.push(key(0.45), 2, now);
+        assert_eq!(acc.pending_requests(), 2);
+        assert!(acc.push(key(0.15), 3, now).is_some());
+        assert_eq!(acc.pending_requests(), 1);
+    }
+
+    #[test]
+    fn expiry_flushes_partial() {
+        let mut acc = BatchAccumulator::new(10, Duration::from_millis(5));
+        let t0 = Instant::now();
+        acc.push(key(0.15), 1u32, t0);
+        assert!(acc.flush_expired(t0 + Duration::from_millis(1)).is_empty());
+        let flushed = acc.flush_expired(t0 + Duration::from_millis(6));
+        assert_eq!(flushed.len(), 1);
+        assert_eq!(flushed[0].requests, vec![1]);
+    }
+
+    #[test]
+    fn next_deadline_tracks_oldest() {
+        let mut acc = BatchAccumulator::new(10, Duration::from_millis(5));
+        let t0 = Instant::now();
+        assert!(acc.next_deadline().is_none());
+        acc.push(key(0.15), 1u32, t0);
+        acc.push(key(0.45), 2, t0 + Duration::from_millis(2));
+        assert_eq!(acc.next_deadline(), Some(t0 + Duration::from_millis(5)));
+    }
+
+    #[test]
+    fn order_preserved_within_batch() {
+        let mut acc = BatchAccumulator::new(4, Duration::from_millis(5));
+        let now = Instant::now();
+        for i in 0..3 {
+            acc.push(key(0.15), i, now);
+        }
+        let b = acc.push(key(0.15), 3u32, now).unwrap();
+        assert_eq!(b.requests, vec![0, 1, 2, 3]);
+    }
+}

@@ -1,0 +1,118 @@
+//! Coordinator metrics: lock-free counters + a fixed-bucket latency
+//! histogram, printable as a one-line summary or a detailed report.
+
+use std::sync::atomic::{AtomicU64, Ordering};
+
+/// Latency buckets in microseconds.
+const BUCKETS_US: [u64; 10] =
+    [100, 500, 1_000, 5_000, 10_000, 50_000, 100_000, 500_000, 1_000_000, 5_000_000];
+
+#[derive(Default)]
+pub struct Metrics {
+    pub submitted: AtomicU64,
+    pub completed: AtomicU64,
+    pub failed: AtomicU64,
+    pub batches: AtomicU64,
+    pub batched_requests: AtomicU64,
+    pub executions: AtomicU64,
+    pub queue_depth: AtomicU64,
+    latency_buckets: [AtomicU64; BUCKETS_US.len() + 1],
+    latency_sum_us: AtomicU64,
+}
+
+impl Metrics {
+    pub fn new() -> Metrics {
+        Metrics::default()
+    }
+
+    pub fn record_latency(&self, micros: u64) {
+        let idx = BUCKETS_US.iter().position(|&b| micros <= b).unwrap_or(BUCKETS_US.len());
+        self.latency_buckets[idx].fetch_add(1, Ordering::Relaxed);
+        self.latency_sum_us.fetch_add(micros, Ordering::Relaxed);
+    }
+
+    pub fn mean_latency_us(&self) -> f64 {
+        let n = self.completed.load(Ordering::Relaxed);
+        if n == 0 {
+            return 0.0;
+        }
+        self.latency_sum_us.load(Ordering::Relaxed) as f64 / n as f64
+    }
+
+    /// Approximate quantile from the histogram (upper bucket bound).
+    pub fn latency_quantile_us(&self, q: f64) -> u64 {
+        let total: u64 = self.latency_buckets.iter().map(|b| b.load(Ordering::Relaxed)).sum();
+        if total == 0 {
+            return 0;
+        }
+        let target = (total as f64 * q).ceil() as u64;
+        let mut acc = 0u64;
+        for (i, b) in self.latency_buckets.iter().enumerate() {
+            acc += b.load(Ordering::Relaxed);
+            if acc >= target {
+                return BUCKETS_US.get(i).copied().unwrap_or(u64::MAX);
+            }
+        }
+        u64::MAX
+    }
+
+    pub fn mean_batch_size(&self) -> f64 {
+        let b = self.batches.load(Ordering::Relaxed);
+        if b == 0 {
+            return 0.0;
+        }
+        self.batched_requests.load(Ordering::Relaxed) as f64 / b as f64
+    }
+
+    pub fn summary(&self) -> String {
+        format!(
+            "submitted={} completed={} failed={} batches={} mean_batch={:.2} mean_lat={:.1}ms p90={:.1}ms",
+            self.submitted.load(Ordering::Relaxed),
+            self.completed.load(Ordering::Relaxed),
+            self.failed.load(Ordering::Relaxed),
+            self.batches.load(Ordering::Relaxed),
+            self.mean_batch_size(),
+            self.mean_latency_us() / 1000.0,
+            match self.latency_quantile_us(0.9) {
+                u64::MAX => f64::INFINITY,
+                v => v as f64 / 1000.0,
+            },
+        )
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn latency_histogram_quantiles() {
+        let m = Metrics::new();
+        for _ in 0..90 {
+            m.record_latency(400);
+        }
+        for _ in 0..10 {
+            m.record_latency(400_000);
+        }
+        for _ in 0..100 {
+            m.completed.fetch_add(1, Ordering::Relaxed);
+        }
+        assert_eq!(m.latency_quantile_us(0.5), 500);
+        assert_eq!(m.latency_quantile_us(0.95), 500_000);
+        assert!(m.mean_latency_us() > 0.0);
+    }
+
+    #[test]
+    fn mean_batch_size() {
+        let m = Metrics::new();
+        m.batches.store(4, Ordering::Relaxed);
+        m.batched_requests.store(30, Ordering::Relaxed);
+        assert!((m.mean_batch_size() - 7.5).abs() < 1e-9);
+    }
+
+    #[test]
+    fn summary_renders() {
+        let m = Metrics::new();
+        assert!(m.summary().contains("submitted=0"));
+    }
+}

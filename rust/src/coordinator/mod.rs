@@ -1,0 +1,106 @@
+//! The L3 coordinator: an async evaluation-serving layer over the PJRT
+//! runtime — request routing, scheme-keyed dynamic batching, a dedicated
+//! executor thread owning the (non-Send) PJRT client, backpressure, and
+//! metrics. This is the paper-system's "serving" shell: quantized-LM
+//! evaluation requests go in, per-token NLLs come out, Python nowhere on
+//! the path.
+
+pub mod batcher;
+pub mod metrics;
+pub mod scheduler;
+pub mod server;
+
+pub use metrics::Metrics;
+pub use scheduler::{EvalCoordinator, EvalRequest, EvalResponse};
+pub use server::EvalServer;
+
+/// Activation-quantization scheme of a request — maps onto one AOT
+/// artifact plus its runtime scalar inputs.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub enum ActScheme {
+    /// FP forward (`lm_fp`).
+    Fp,
+    /// CrossQuant with runtime α / qmax (`lm_aq`); α = 1.0 is per-token.
+    CrossQuant { alpha: f32, qmax: f32 },
+    /// Same graph, pure-jnp (XLA-fused) quantization path (`lm_aq_jnp`).
+    CrossQuantFused { alpha: f32, qmax: f32 },
+    /// Remove-kernel ablation with zero-bound multiplier θ (`lm_rk`).
+    RemoveKernel { theta: f32 },
+}
+
+impl ActScheme {
+    pub fn artifact(&self) -> &'static str {
+        match self {
+            ActScheme::Fp => "lm_fp",
+            ActScheme::CrossQuant { .. } => "lm_aq",
+            ActScheme::CrossQuantFused { .. } => "lm_aq_jnp",
+            ActScheme::RemoveKernel { .. } => "lm_rk",
+        }
+    }
+
+    /// Extra scalar literals after (tokens, weights).
+    pub fn scalars(&self) -> Vec<f32> {
+        match *self {
+            ActScheme::Fp => vec![],
+            ActScheme::CrossQuant { alpha, qmax } | ActScheme::CrossQuantFused { alpha, qmax } => {
+                vec![alpha, qmax]
+            }
+            ActScheme::RemoveKernel { theta } => vec![theta],
+        }
+    }
+
+    /// Batching key: requests with identical keys share an execution.
+    pub fn key(&self, weight_set: &str) -> SchemeKey {
+        let quant = |f: f32| (f * 1e6).round() as i64;
+        let (a, b) = match *self {
+            ActScheme::Fp => (0, 0),
+            ActScheme::CrossQuant { alpha, qmax } | ActScheme::CrossQuantFused { alpha, qmax } => {
+                (quant(alpha), quant(qmax))
+            }
+            ActScheme::RemoveKernel { theta } => (quant(theta), 0),
+        };
+        SchemeKey {
+            artifact: self.artifact(),
+            s0: a,
+            s1: b,
+            weight_set: weight_set.to_string(),
+        }
+    }
+}
+
+/// Hashable batching key (floats quantized to micro-units).
+#[derive(Clone, Debug, PartialEq, Eq, Hash)]
+pub struct SchemeKey {
+    pub artifact: &'static str,
+    pub s0: i64,
+    pub s1: i64,
+    pub weight_set: String,
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn artifact_mapping() {
+        assert_eq!(ActScheme::Fp.artifact(), "lm_fp");
+        assert_eq!(ActScheme::CrossQuant { alpha: 0.15, qmax: 127.0 }.artifact(), "lm_aq");
+        assert_eq!(ActScheme::RemoveKernel { theta: 0.01 }.artifact(), "lm_rk");
+    }
+
+    #[test]
+    fn keys_equal_iff_same_scheme_and_weights() {
+        let a = ActScheme::CrossQuant { alpha: 0.15, qmax: 127.0 };
+        assert_eq!(a.key("w8"), a.key("w8"));
+        assert_ne!(a.key("w8"), a.key("w4"));
+        let b = ActScheme::CrossQuant { alpha: 0.45, qmax: 127.0 };
+        assert_ne!(a.key("w8"), b.key("w8"));
+    }
+
+    #[test]
+    fn scalar_lists() {
+        assert!(ActScheme::Fp.scalars().is_empty());
+        assert_eq!(ActScheme::CrossQuant { alpha: 0.15, qmax: 127.0 }.scalars(), vec![0.15, 127.0]);
+        assert_eq!(ActScheme::RemoveKernel { theta: 0.01 }.scalars(), vec![0.01]);
+    }
+}

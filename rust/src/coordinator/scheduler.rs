@@ -1,0 +1,312 @@
+//! Coordinator wiring: submit → batching thread → executor thread.
+//!
+//! The PJRT client is not Send, so a dedicated OS thread owns the
+//! [`Runtime`] and all compiled executables; callers talk to it through
+//! bounded channels. Backpressure is the bounded submit queue — when the
+//! executor falls behind, `submit` blocks on queue capacity instead of
+//! piling up unbounded work (the paper-agnostic core of any serving
+//! router). The offline build has no tokio (Cargo.toml), so the async
+//! surface is expressed with plain threads + channels; the protocol
+//! (scheme-keyed dynamic batching with a flush deadline) is identical.
+
+use std::sync::mpsc::{Receiver, RecvTimeoutError, SyncSender};
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+use anyhow::{anyhow, Result};
+
+use super::batcher::{BatchAccumulator, ReadyBatch};
+use super::metrics::Metrics;
+use super::{ActScheme, SchemeKey};
+use crate::model::config::ModelConfig;
+use crate::runtime::literal::{literal_to_scalar, literal_to_vec, tokens_literal, vec_literal};
+use crate::runtime::{ArtifactStore, Runtime};
+
+/// One evaluation request: a token sequence under a scheme + weight set.
+#[derive(Clone)]
+pub struct EvalRequest {
+    pub tokens: Vec<u32>,
+    pub scheme: ActScheme,
+    /// Which registered weight set to run against (e.g. "w16", "w8", "w4g128").
+    pub weight_set: String,
+}
+
+/// Per-request result.
+#[derive(Clone, Debug)]
+pub struct EvalResponse {
+    /// Per-position NLL for the request's (unpadded) sequence.
+    pub nll: Vec<f32>,
+    /// Scheme-reported auxiliary scalar (kernel fraction / removed
+    /// fraction), measured over the whole executed batch. 0.0 for FP.
+    pub aux: f32,
+}
+
+struct Pending {
+    req: EvalRequest,
+    resp: SyncSender<Result<EvalResponse>>,
+    submitted: Instant,
+}
+
+/// Await-able response slot for one submitted request.
+pub struct ResponseHandle {
+    rx: Receiver<Result<EvalResponse>>,
+}
+
+impl ResponseHandle {
+    /// Block until the request's batch has executed.
+    pub fn wait(self) -> Result<EvalResponse> {
+        self.rx.recv().map_err(|_| anyhow!("executor dropped request"))?
+    }
+
+    pub fn wait_timeout(self, timeout: Duration) -> Result<EvalResponse> {
+        match self.rx.recv_timeout(timeout) {
+            Ok(r) => r,
+            Err(RecvTimeoutError::Timeout) => Err(anyhow!("request timed out")),
+            Err(RecvTimeoutError::Disconnected) => Err(anyhow!("executor dropped request")),
+        }
+    }
+}
+
+#[derive(Clone)]
+pub struct EvalCoordinator {
+    tx: SyncSender<Pending>,
+    pub metrics: Arc<Metrics>,
+    config: ModelConfig,
+}
+
+pub struct CoordinatorConfig {
+    /// Max requests per executed batch (must equal the artifact batch dim).
+    pub batch_size: usize,
+    /// Flush partial batches after this delay.
+    pub max_batch_delay: Duration,
+    /// Bounded submit queue (backpressure limit).
+    pub max_queue: usize,
+}
+
+impl Default for CoordinatorConfig {
+    fn default() -> Self {
+        CoordinatorConfig {
+            batch_size: 8,
+            max_batch_delay: Duration::from_millis(5),
+            max_queue: 256,
+        }
+    }
+}
+
+impl EvalCoordinator {
+    /// Start the coordinator: spawns the batching thread and the executor
+    /// thread. The PJRT client is constructed *inside* the executor thread
+    /// (it is not Send). `weight_sets` registers every flat weight vector
+    /// requests may reference (each is uploaded as a literal once).
+    pub fn start(
+        store: ArtifactStore,
+        model_config: ModelConfig,
+        weight_sets: Vec<(String, Vec<f32>)>,
+        cfg: CoordinatorConfig,
+    ) -> EvalCoordinator {
+        let metrics = Arc::new(Metrics::new());
+        let (tx, rx) = std::sync::mpsc::sync_channel::<Pending>(cfg.max_queue);
+        let (batch_tx, batch_rx) = std::sync::mpsc::sync_channel::<ReadyBatch<Pending>>(16);
+
+        let m1 = metrics.clone();
+        let batch_size = cfg.batch_size;
+        let max_delay = cfg.max_batch_delay;
+        std::thread::Builder::new()
+            .name("cq-batcher".into())
+            .spawn(move || batch_loop(rx, batch_tx, batch_size, max_delay, m1))
+            .expect("spawn batcher");
+
+        let m2 = metrics.clone();
+        std::thread::Builder::new()
+            .name("pjrt-executor".into())
+            .spawn(move || executor_loop(store, model_config, weight_sets, batch_rx, m2))
+            .expect("spawn executor");
+
+        EvalCoordinator { tx, metrics, config: model_config }
+    }
+
+    /// Submit one request; returns a handle resolving when its batch has
+    /// executed. Blocks when the submit queue is full (backpressure).
+    pub fn submit(&self, req: EvalRequest) -> Result<ResponseHandle> {
+        anyhow::ensure!(
+            req.tokens.len() >= 2 && req.tokens.len() <= self.config.seq_len,
+            "sequence length {} out of range",
+            req.tokens.len()
+        );
+        let (resp_tx, resp_rx) = std::sync::mpsc::sync_channel(1);
+        self.metrics.submitted.fetch_add(1, std::sync::atomic::Ordering::Relaxed);
+        self.tx
+            .send(Pending { req, resp: resp_tx, submitted: Instant::now() })
+            .map_err(|_| anyhow!("coordinator shut down"))?;
+        Ok(ResponseHandle { rx: resp_rx })
+    }
+
+    /// Convenience: evaluate a set of sequences (pipelined through the
+    /// batcher) and return (mean NLL, mean aux) — the building block of the
+    /// PJRT eval path.
+    pub fn evaluate_stream(
+        &self,
+        sequences: Vec<Vec<u32>>,
+        scheme: ActScheme,
+        weight_set: &str,
+    ) -> Result<(f64, f32)> {
+        let handles: Vec<ResponseHandle> = sequences
+            .into_iter()
+            .map(|tokens| {
+                self.submit(EvalRequest { tokens, scheme, weight_set: weight_set.to_string() })
+            })
+            .collect::<Result<_>>()?;
+        let mut total = 0.0f64;
+        let mut count = 0usize;
+        let mut aux = 0.0f32;
+        let mut n_resp = 0usize;
+        for h in handles {
+            let r = h.wait()?;
+            total += r.nll.iter().map(|&v| v as f64).sum::<f64>();
+            count += r.nll.len();
+            aux += r.aux;
+            n_resp += 1;
+        }
+        Ok((total / count.max(1) as f64, aux / n_resp.max(1) as f32))
+    }
+}
+
+fn batch_loop(
+    rx: Receiver<Pending>,
+    batch_tx: SyncSender<ReadyBatch<Pending>>,
+    batch_size: usize,
+    max_delay: Duration,
+    metrics: Arc<Metrics>,
+) {
+    let mut acc: BatchAccumulator<Pending> = BatchAccumulator::new(batch_size, max_delay);
+    loop {
+        let timeout = acc
+            .next_deadline()
+            .map(|d| d.saturating_duration_since(Instant::now()))
+            .unwrap_or(Duration::from_secs(3600));
+        match rx.recv_timeout(timeout) {
+            Ok(p) => {
+                let key = p.req.scheme.key(&p.req.weight_set);
+                metrics.queue_depth.store(
+                    acc.pending_requests() as u64 + 1,
+                    std::sync::atomic::Ordering::Relaxed,
+                );
+                if let Some(batch) = acc.push(key, p, Instant::now()) {
+                    dispatch(&batch_tx, batch, &metrics);
+                }
+            }
+            Err(RecvTimeoutError::Timeout) => { /* deadline tick */ }
+            Err(RecvTimeoutError::Disconnected) => {
+                for batch in acc.flush_all() {
+                    dispatch(&batch_tx, batch, &metrics);
+                }
+                return; // all senders dropped
+            }
+        }
+        for batch in acc.flush_expired(Instant::now()) {
+            dispatch(&batch_tx, batch, &metrics);
+        }
+    }
+}
+
+fn dispatch(
+    tx: &SyncSender<ReadyBatch<Pending>>,
+    batch: ReadyBatch<Pending>,
+    metrics: &Metrics,
+) {
+    metrics.batches.fetch_add(1, std::sync::atomic::Ordering::Relaxed);
+    metrics
+        .batched_requests
+        .fetch_add(batch.requests.len() as u64, std::sync::atomic::Ordering::Relaxed);
+    // sync_channel send blocks when the executor is saturated —
+    // intended backpressure toward the batcher.
+    let _ = tx.send(batch);
+}
+
+fn executor_loop(
+    store: ArtifactStore,
+    cfg: ModelConfig,
+    weight_sets: Vec<(String, Vec<f32>)>,
+    rx: Receiver<ReadyBatch<Pending>>,
+    metrics: Arc<Metrics>,
+) {
+    let mut runtime = match Runtime::new(store) {
+        Ok(r) => r,
+        Err(e) => {
+            // fail every incoming request with the construction error
+            while let Ok(batch) = rx.recv() {
+                for p in batch.requests {
+                    metrics.failed.fetch_add(1, std::sync::atomic::Ordering::Relaxed);
+                    let _ = p.resp.send(Err(anyhow!("PJRT client unavailable: {e}")));
+                }
+            }
+            return;
+        }
+    };
+    let weights: std::collections::HashMap<String, xla::Literal> =
+        weight_sets.into_iter().map(|(k, v)| (k, vec_literal(&v))).collect();
+
+    while let Ok(batch) = rx.recv() {
+        let result = execute_batch(&mut runtime, cfg, &weights, &batch);
+        metrics.executions.fetch_add(1, std::sync::atomic::Ordering::Relaxed);
+        match result {
+            Ok(responses) => {
+                for (p, resp) in batch.requests.into_iter().zip(responses) {
+                    metrics.completed.fetch_add(1, std::sync::atomic::Ordering::Relaxed);
+                    metrics.record_latency(p.submitted.elapsed().as_micros() as u64);
+                    let _ = p.resp.send(Ok(resp));
+                }
+            }
+            Err(e) => {
+                for p in batch.requests {
+                    metrics.failed.fetch_add(1, std::sync::atomic::Ordering::Relaxed);
+                    let _ = p.resp.send(Err(anyhow!("batch execution failed: {e}")));
+                }
+            }
+        }
+    }
+}
+
+fn execute_batch(
+    runtime: &mut Runtime,
+    cfg: ModelConfig,
+    weights: &std::collections::HashMap<String, xla::Literal>,
+    batch: &ReadyBatch<Pending>,
+) -> Result<Vec<EvalResponse>> {
+    let key: &SchemeKey = &batch.key;
+    let w = weights
+        .get(&key.weight_set)
+        .ok_or_else(|| anyhow!("unknown weight set {}", key.weight_set))?;
+
+    // Assemble the fixed-size token batch; pad missing rows by repeating
+    // the last request (their outputs are discarded).
+    let mut rows: Vec<Vec<u32>> = batch.requests.iter().map(|p| p.req.tokens.clone()).collect();
+    while rows.len() < cfg.eval_batch {
+        rows.push(rows.last().expect("non-empty batch").clone());
+    }
+    anyhow::ensure!(rows.len() == cfg.eval_batch, "batch overflow: {}", rows.len());
+    let tokens = tokens_literal(&rows, cfg.seq_len, 0)?;
+
+    let scheme = batch.requests[0].req.scheme;
+    let mut inputs = vec![tokens, w.clone()];
+    for s in scheme.scalars() {
+        inputs.push(crate::runtime::literal::scalar_literal(s));
+    }
+    let outputs = runtime.execute(key.artifact, &inputs)?;
+
+    let nll_flat = literal_to_vec(&outputs[0])?;
+    let aux = if outputs.len() > 1 { literal_to_scalar(&outputs[1])? } else { 0.0 };
+    let per_row = cfg.seq_len - 1;
+    let responses = batch
+        .requests
+        .iter()
+        .enumerate()
+        .map(|(i, p)| {
+            let row = &nll_flat[i * per_row..(i + 1) * per_row];
+            // positions beyond the request's own length are padding
+            let keep = p.req.tokens.len() - 1;
+            EvalResponse { nll: row[..keep].to_vec(), aux }
+        })
+        .collect();
+    Ok(responses)
+}

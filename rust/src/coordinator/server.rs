@@ -1,0 +1,118 @@
+//! Line-protocol TCP front-end over the eval coordinator — the serving
+//! shell: external clients stream token sequences in, batched quantized
+//! evaluations come back, Python nowhere in sight.
+//!
+//! Protocol: one JSON object per line.
+//!
+//! request:  {"tokens": [1,2,3,...], "scheme": "crossquant"|"per-token"|
+//!            "fp"|"remove-kernel", "alpha": 0.15, "qmax": 127.0,
+//!            "theta": 0.004, "weight_set": "w16"}
+//!           {"cmd": "metrics"}   |   {"cmd": "ping"}
+//! response: {"ok": true, "nll": [...], "ppl": ..., "aux": ...}
+//!           {"ok": false, "error": "..."}
+
+use std::io::{BufRead, BufReader, Write};
+use std::net::{TcpListener, TcpStream};
+
+use anyhow::{anyhow, Result};
+
+use super::scheduler::{EvalCoordinator, EvalRequest};
+use super::ActScheme;
+use crate::util::Json;
+
+pub struct EvalServer {
+    pub coordinator: EvalCoordinator,
+}
+
+impl EvalServer {
+    pub fn new(coordinator: EvalCoordinator) -> EvalServer {
+        EvalServer { coordinator }
+    }
+
+    /// Serve forever on `listener`; one thread per connection (the PJRT
+    /// executor thread is the actual concurrency bottleneck, and the
+    /// batcher merges concurrent clients into shared batches — that is the
+    /// point of the coordinator).
+    pub fn serve(&self, listener: TcpListener) -> Result<()> {
+        for stream in listener.incoming() {
+            let stream = stream?;
+            let coordinator = self.coordinator.clone();
+            std::thread::spawn(move || {
+                let _ = handle_connection(coordinator, stream);
+            });
+        }
+        Ok(())
+    }
+}
+
+fn handle_connection(coordinator: EvalCoordinator, stream: TcpStream) -> Result<()> {
+    let peer = stream.peer_addr().ok();
+    let mut writer = stream.try_clone()?;
+    let reader = BufReader::new(stream);
+    for line in reader.lines() {
+        let line = line?;
+        if line.trim().is_empty() {
+            continue;
+        }
+        let response = match handle_line(&coordinator, &line) {
+            Ok(json) => json,
+            Err(e) => Json::obj(vec![
+                ("ok", Json::Bool(false)),
+                ("error", Json::str(format!("{e}"))),
+            ]),
+        };
+        writer.write_all(response.render().as_bytes())?;
+        writer.write_all(b"\n")?;
+    }
+    let _ = peer;
+    Ok(())
+}
+
+/// Parse one request line, run it, build the response (pure except for the
+/// coordinator call — unit-testable).
+pub fn handle_line(coordinator: &EvalCoordinator, line: &str) -> Result<Json> {
+    let req = Json::parse(line)?;
+
+    if let Some(cmd) = req.get("cmd").and_then(|c| c.as_str()) {
+        return match cmd {
+            "ping" => Ok(Json::obj(vec![("ok", Json::Bool(true)), ("pong", Json::Bool(true))])),
+            "metrics" => Ok(Json::obj(vec![
+                ("ok", Json::Bool(true)),
+                ("metrics", Json::str(coordinator.metrics.summary())),
+            ])),
+            other => Err(anyhow!("unknown cmd '{other}'")),
+        };
+    }
+
+    let tokens: Vec<u32> = req
+        .req("tokens")?
+        .as_arr()
+        .ok_or_else(|| anyhow!("'tokens' must be an array"))?
+        .iter()
+        .map(|t| t.as_usize().map(|v| v as u32).ok_or_else(|| anyhow!("bad token")))
+        .collect::<Result<_>>()?;
+
+    let scheme_name = req.get("scheme").and_then(|s| s.as_str()).unwrap_or("crossquant");
+    let alpha = req.get("alpha").and_then(|a| a.as_f64()).unwrap_or(0.15) as f32;
+    let qmax = req.get("qmax").and_then(|a| a.as_f64()).unwrap_or(127.0) as f32;
+    let theta = req.get("theta").and_then(|a| a.as_f64()).unwrap_or(0.5 / 127.0) as f32;
+    let scheme = match scheme_name {
+        "fp" => ActScheme::Fp,
+        "crossquant" => ActScheme::CrossQuant { alpha, qmax },
+        "crossquant-fused" => ActScheme::CrossQuantFused { alpha, qmax },
+        "per-token" => ActScheme::CrossQuant { alpha: 1.0, qmax },
+        "remove-kernel" => ActScheme::RemoveKernel { theta },
+        other => return Err(anyhow!("unknown scheme '{other}'")),
+    };
+    let weight_set =
+        req.get("weight_set").and_then(|w| w.as_str()).unwrap_or("w16").to_string();
+
+    let resp = coordinator.submit(EvalRequest { tokens, scheme, weight_set })?.wait()?;
+    let mean = resp.nll.iter().map(|&v| v as f64).sum::<f64>() / resp.nll.len().max(1) as f64;
+    Ok(Json::obj(vec![
+        ("ok", Json::Bool(true)),
+        ("nll", Json::arr(resp.nll.iter().map(|&v| Json::num(v as f64)).collect())),
+        ("ppl", Json::num(mean.exp())),
+        ("aux", Json::num(resp.aux as f64)),
+    ]))
+}

@@ -1,0 +1,14 @@
+//! Synthetic corpus substrate (WikiText2/C4 stand-ins).
+//!
+//! The paper's language-modeling evaluations compare quantization schemes
+//! on the *same* model and corpus; any stationary corpus the model was
+//! trained on exposes the deltas. We use a Zipfian first-order Markov
+//! chain over token ids — the identical process (exponent, mixing map)
+//! that python/compile/common.py used for training, so rust-side eval
+//! batches are in-distribution.
+
+pub mod synth;
+pub mod tokenizer;
+
+pub use synth::{CorpusGen, CorpusKind};
+pub use tokenizer::Tokenizer;

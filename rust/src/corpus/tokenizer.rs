@@ -1,0 +1,90 @@
+//! Deterministic word-level tokenizer over the synthetic vocabulary.
+//!
+//! Maps token ids to pronounceable synthetic words (and back), used by the
+//! examples and the CLI to render corpora and task prompts human-readably.
+//! The mapping is a bijection: encode(decode(id)) == id.
+
+/// Syllable-based id ⇄ word bijection.
+#[derive(Clone, Debug)]
+pub struct Tokenizer {
+    pub vocab: usize,
+}
+
+const ONSETS: [&str; 8] = ["b", "d", "k", "l", "m", "n", "s", "t"];
+const NUCLEI: [&str; 4] = ["a", "e", "i", "o"];
+
+impl Tokenizer {
+    pub fn new(vocab: usize) -> Self {
+        assert!(vocab <= 8 * 4 * 8 * 4, "vocab too large for two syllables");
+        Tokenizer { vocab }
+    }
+
+    /// id → word, two CV syllables: (onset·nucleus)², base-32 positional.
+    pub fn decode(&self, id: u32) -> String {
+        let id = id as usize % self.vocab;
+        let s1 = id / 32;
+        let s2 = id % 32;
+        format!(
+            "{}{}{}{}",
+            ONSETS[s1 / 4],
+            NUCLEI[s1 % 4],
+            ONSETS[s2 / 4],
+            NUCLEI[s2 % 4]
+        )
+    }
+
+    /// word → id; None if not a valid vocabulary word.
+    pub fn encode(&self, word: &str) -> Option<u32> {
+        let ch: Vec<char> = word.chars().collect();
+        if ch.len() != 4 {
+            return None;
+        }
+        let onset = |c: char| ONSETS.iter().position(|&o| o == c.to_string());
+        let nucleus = |c: char| NUCLEI.iter().position(|&n| n == c.to_string());
+        let (o1, n1, o2, n2) = (onset(ch[0])?, nucleus(ch[1])?, onset(ch[2])?, nucleus(ch[3])?);
+        let id = (o1 * 4 + n1) * 32 + o2 * 4 + n2;
+        (id < self.vocab).then_some(id as u32)
+    }
+
+    pub fn decode_seq(&self, ids: &[u32]) -> String {
+        ids.iter().map(|&i| self.decode(i)).collect::<Vec<_>>().join(" ")
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn roundtrip_whole_vocab() {
+        let tok = Tokenizer::new(512);
+        for id in 0..512u32 {
+            let w = tok.decode(id);
+            assert_eq!(tok.encode(&w), Some(id), "word {w}");
+        }
+    }
+
+    #[test]
+    fn rejects_garbage() {
+        let tok = Tokenizer::new(512);
+        assert_eq!(tok.encode("xyz"), None);
+        assert_eq!(tok.encode("qaqa"), None);
+        assert_eq!(tok.encode(""), None);
+    }
+
+    #[test]
+    fn words_distinct() {
+        let tok = Tokenizer::new(512);
+        let mut seen = std::collections::HashSet::new();
+        for id in 0..512u32 {
+            assert!(seen.insert(tok.decode(id)));
+        }
+    }
+
+    #[test]
+    fn decode_seq_joins() {
+        let tok = Tokenizer::new(512);
+        let s = tok.decode_seq(&[0, 1]);
+        assert_eq!(s.split(' ').count(), 2);
+    }
+}

@@ -1,0 +1,169 @@
+//! Table assembly + printing in the paper's row format, shared by every
+//! `exp::*` reproduction module and the CLI.
+
+/// One printed row: method label, W/A setting, then named numeric cells.
+#[derive(Clone, Debug)]
+pub struct Row {
+    pub method: String,
+    pub setting: String,
+    pub cells: Vec<f64>,
+}
+
+impl Row {
+    pub fn new(method: impl Into<String>, setting: impl Into<String>, cells: Vec<f64>) -> Row {
+        Row { method: method.into(), setting: setting.into(), cells }
+    }
+}
+
+/// A paper table/figure reproduction, ready to print or serialize.
+#[derive(Clone, Debug)]
+pub struct Table {
+    pub title: String,
+    pub columns: Vec<String>,
+    pub rows: Vec<Row>,
+    /// Formatting hint: how many decimals per cell.
+    pub decimals: usize,
+    /// Render cells as percentages.
+    pub percent: bool,
+}
+
+impl Table {
+    pub fn new(title: impl Into<String>, columns: Vec<&str>) -> Table {
+        Table {
+            title: title.into(),
+            columns: columns.into_iter().map(String::from).collect(),
+            rows: Vec::new(),
+            decimals: 2,
+            percent: false,
+        }
+    }
+
+    pub fn percent(mut self) -> Table {
+        self.percent = true;
+        self
+    }
+
+    pub fn decimals(mut self, d: usize) -> Table {
+        self.decimals = d;
+        self
+    }
+
+    pub fn push(&mut self, row: Row) {
+        assert_eq!(row.cells.len(), self.columns.len(), "row width mismatch");
+        self.rows.push(row);
+    }
+
+    pub fn render(&self) -> String {
+        let mut out = String::new();
+        out.push_str(&format!("== {} ==\n", self.title));
+        let method_w = self
+            .rows
+            .iter()
+            .map(|r| r.method.len())
+            .chain(std::iter::once("Method".len()))
+            .max()
+            .unwrap_or(8)
+            + 2;
+        let set_w = self
+            .rows
+            .iter()
+            .map(|r| r.setting.len())
+            .chain(std::iter::once("W/A".len()))
+            .max()
+            .unwrap_or(6)
+            + 2;
+        let col_ws: Vec<usize> =
+            self.columns.iter().map(|c| (c.chars().count() + 2).max(12)).collect();
+        out.push_str(&format!("{:method_w$}{:set_w$}", "Method", "W/A"));
+        for (c, w) in self.columns.iter().zip(&col_ws) {
+            out.push_str(&format!("{c:>w$}", w = *w));
+        }
+        out.push('\n');
+        out.push_str(&"-".repeat(method_w + set_w + col_ws.iter().sum::<usize>()));
+        out.push('\n');
+        for r in &self.rows {
+            out.push_str(&format!("{:method_w$}{:set_w$}", r.method, r.setting));
+            for (&v, w) in r.cells.iter().zip(&col_ws) {
+                let cell = if v.is_nan() {
+                    "-".to_string()
+                } else if self.percent {
+                    format!("{:.1$}%", v * 100.0, self.decimals)
+                } else if v >= 1e4 {
+                    format!("{:.0e}", v)
+                } else {
+                    format!("{:.1$}", v, self.decimals)
+                };
+                out.push_str(&format!("{cell:>w$}", w = *w));
+            }
+            out.push('\n');
+        }
+        out
+    }
+
+    pub fn print(&self) {
+        print!("{}", self.render());
+    }
+
+    /// Machine-readable dump (one JSON object per row) for EXPERIMENTS.md
+    /// tooling and tests.
+    pub fn to_json(&self) -> crate::util::Json {
+        use crate::util::Json;
+        Json::obj(vec![
+            ("title", Json::str(self.title.clone())),
+            ("columns", Json::arr(self.columns.iter().map(|c| Json::str(c.clone())).collect())),
+            (
+                "rows",
+                Json::arr(
+                    self.rows
+                        .iter()
+                        .map(|r| {
+                            Json::obj(vec![
+                                ("method", Json::str(r.method.clone())),
+                                ("setting", Json::str(r.setting.clone())),
+                                (
+                                    "cells",
+                                    Json::arr(r.cells.iter().map(|&v| Json::num(v)).collect()),
+                                ),
+                            ])
+                        })
+                        .collect(),
+                ),
+            ),
+        ])
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn render_contains_all_cells() {
+        let mut t = Table::new("Demo", vec!["Wiki2", "C4"]);
+        t.push(Row::new("FP16", "W16A16", vec![5.47, 7.52]));
+        t.push(Row::new("CrossQuant", "W8A8", vec![5.48, 7.53]));
+        let s = t.render();
+        assert!(s.contains("5.47") && s.contains("7.53") && s.contains("CrossQuant"));
+    }
+
+    #[test]
+    fn percent_formatting() {
+        let mut t = Table::new("Acc", vec!["Avg."]).percent().decimals(2);
+        t.push(Row::new("FP16", "W16A16", vec![0.6827]));
+        assert!(t.render().contains("68.27%"));
+    }
+
+    #[test]
+    fn huge_values_scientific() {
+        let mut t = Table::new("P", vec!["Wiki2"]);
+        t.push(Row::new("Per-token", "W4A4", vec![2e4]));
+        assert!(t.render().contains("2e4"));
+    }
+
+    #[test]
+    #[should_panic]
+    fn width_mismatch_panics() {
+        let mut t = Table::new("X", vec!["a", "b"]);
+        t.push(Row::new("m", "s", vec![1.0]));
+    }
+}

@@ -1,0 +1,9 @@
+//! Evaluation suite: perplexity over the synthetic corpora plus the
+//! synthetic zero-/few-shot tasks mirroring the paper's lm-eval setup.
+
+pub mod harness;
+pub mod perplexity;
+pub mod tasks;
+
+pub use perplexity::{perplexity_native, PerplexityResult};
+pub use tasks::{Task, TaskResult, TaskSuite};

@@ -1,0 +1,61 @@
+//! Appendix A ablation: outliers cause the kernel, the kernel causes the
+//! loss. Sweeps the injected outlier magnitude on a fixed profile and
+//! reports, per magnitude: the per-token kernel fraction, the CrossQuant
+//! kernel fraction, and both schemes' W8A8 perplexity — making the causal
+//! chain (outlier → t_i → kernel → ppl) quantitative, and showing
+//! CrossQuant breaking the chain at the kernel link.
+
+use anyhow::Result;
+
+use super::common::{prepare, run_ppl, ExpOpts, Method, Setting};
+use super::fig4::model_kernel_fractions;
+use crate::activations::{Family, FamilyProfile};
+use crate::corpus::CorpusKind;
+use crate::eval::harness::{Row, Table};
+use crate::model::weights::Weights;
+
+pub fn outlier_scales() -> Vec<f32> {
+    vec![1.0, 10.0, 25.0, 50.0, 75.0, 100.0, 127.0]
+}
+
+pub fn run(base: &Weights, opts: &ExpOpts) -> Result<Table> {
+    let scales = outlier_scales();
+    let columns: Vec<String> = scales.iter().map(|s| format!("{s}x")).collect();
+    let mut table = Table::new(
+        "Appendix A ablation — outlier magnitude → kernel → perplexity (W8A8)",
+        columns.iter().map(|s| s.as_str()).collect(),
+    )
+    .decimals(2);
+
+    let mut pt_kernel = Vec::new();
+    let mut cq_kernel = Vec::new();
+    let mut pt_ppl = Vec::new();
+    let mut cq_ppl = Vec::new();
+    for &scale in &scales {
+        let profile = FamilyProfile::new(
+            "ablate",
+            Family::Opt,
+            0.0,
+            3,
+            scale,
+            0.14,
+            0.0,
+            0.02,
+            0.0,
+        );
+        let (kp, kc) = model_kernel_fractions(base, &profile, opts)?;
+        pt_kernel.push(kp as f64 * 100.0);
+        cq_kernel.push(kc as f64 * 100.0);
+
+        let mut prep = prepare(base, &profile, Method::PerToken, Setting::w8a8(), opts)?;
+        pt_ppl.push(run_ppl(&mut prep, CorpusKind::Wiki2, opts)?.perplexity);
+        let mut prep =
+            prepare(base, &profile, Method::CrossQuant { alpha: 0.15 }, Setting::w8a8(), opts)?;
+        cq_ppl.push(run_ppl(&mut prep, CorpusKind::Wiki2, opts)?.perplexity);
+    }
+    table.push(Row::new("Per-token kernel", "%", pt_kernel));
+    table.push(Row::new("CrossQuant kernel", "%", cq_kernel));
+    table.push(Row::new("Per-token ppl", "W8A8", pt_ppl));
+    table.push(Row::new("CrossQuant ppl", "W8A8", cq_ppl));
+    Ok(table)
+}

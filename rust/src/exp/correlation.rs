@@ -1,0 +1,88 @@
+//! §4.2 observation (1): "the size of quantization kernels is positively
+//! correlated with perplexity". This module makes the claim quantitative:
+//! for every OPT profile it pools (kernel-fraction, log-perplexity) pairs
+//! from the remove-kernel sweep and reports the Pearson correlation, plus
+//! the pooled coefficient across profiles.
+
+use anyhow::Result;
+
+use super::common::ExpOpts;
+use super::fig67::{fractions, sweep_profile};
+use crate::activations::{Family, FamilyProfile};
+use crate::eval::harness::{Row, Table};
+use crate::model::weights::Weights;
+
+/// Pearson correlation of x vs y.
+pub fn pearson(x: &[f64], y: &[f64]) -> f64 {
+    assert_eq!(x.len(), y.len());
+    let n = x.len() as f64;
+    if n < 2.0 {
+        return f64::NAN;
+    }
+    let mx = x.iter().sum::<f64>() / n;
+    let my = y.iter().sum::<f64>() / n;
+    let mut sxy = 0.0;
+    let mut sxx = 0.0;
+    let mut syy = 0.0;
+    for (&a, &b) in x.iter().zip(y) {
+        sxy += (a - mx) * (b - my);
+        sxx += (a - mx) * (a - mx);
+        syy += (b - my) * (b - my);
+    }
+    sxy / (sxx.sqrt() * syy.sqrt()).max(1e-12)
+}
+
+pub fn run(base: &Weights, opts: &ExpOpts) -> Result<Table> {
+    let profiles: Vec<FamilyProfile> =
+        FamilyProfile::opt_family().into_iter().skip(2).collect();
+    let columns: Vec<&str> = profiles.iter().map(|p| p.name).collect();
+    let mut table = Table::new(
+        "§4.2 correlation — Pearson r of (kernel fraction, log ppl), remove-kernel sweep",
+        columns,
+    )
+    .decimals(3);
+
+    let fracs = fractions(Family::Opt);
+    let mut cells = Vec::new();
+    let mut pooled_x = Vec::new();
+    let mut pooled_y = Vec::new();
+    for p in &profiles {
+        let (_, ppls) = sweep_profile(base, p, &fracs, opts)?;
+        let xs: Vec<f64> = fracs.iter().map(|&f| f as f64).collect();
+        let ys: Vec<f64> = ppls.iter().map(|&p| p.ln()).collect();
+        cells.push(pearson(&xs, &ys));
+        pooled_x.extend(xs);
+        pooled_y.extend(ys);
+    }
+    table.push(Row::new("Pearson r", "W8A16*", cells));
+    println!(
+        "  pooled r over {} points: {:.3} (paper: 'positively correlated')",
+        pooled_x.len(),
+        pearson(&pooled_x, &pooled_y)
+    );
+    Ok(table)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn pearson_perfect_line() {
+        let x = [1.0, 2.0, 3.0, 4.0];
+        let y = [2.0, 4.0, 6.0, 8.0];
+        assert!((pearson(&x, &y) - 1.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn pearson_anticorrelated() {
+        let x = [1.0, 2.0, 3.0];
+        let y = [3.0, 2.0, 1.0];
+        assert!((pearson(&x, &y) + 1.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn pearson_degenerate() {
+        assert!(pearson(&[1.0], &[2.0]).is_nan());
+    }
+}

@@ -1,0 +1,98 @@
+//! Figure 1 (and its W4/W8 companion Figure 9): average zero-shot accuracy
+//! of OPT family models under FP16 / per-token A8 / "Remove Kernel" /
+//! CrossQuant, demonstrating that (a) zeroing the kernel alone reproduces
+//! A8's collapse, and (b) CrossQuant stays at FP16 level.
+
+use anyhow::Result;
+
+use super::common::{prepare, run_tasks, ExpOpts, Method, Setting};
+use crate::activations::FamilyProfile;
+use crate::eval::harness::{Row, Table};
+use crate::model::quantized::{inject_profile, quantize_weights, WeightScheme};
+use crate::model::weights::Weights;
+use crate::model::{NativeModel, RemoveKernelSite};
+use crate::quant::remove_kernel::RemoveKernel;
+use crate::quant::Bits;
+
+/// `weight_bits` selects the Figure-1 (W8) or Figure-9 (W4) companion.
+pub fn run(base: &Weights, weight_bits: Bits, opts: &ExpOpts) -> Result<Table> {
+    let profiles = FamilyProfile::opt_family();
+    let columns: Vec<&str> = profiles.iter().map(|p| p.name).collect();
+    let wlabel = match weight_bits {
+        Bits::Int8 => "W8",
+        Bits::Int4 => "W4",
+        _ => "W?",
+    };
+    let mut table = Table::new(
+        format!("Figure 1/9 — avg zero-shot accuracy, OPT family ({wlabel})"),
+        columns,
+    )
+    .percent()
+    .decimals(1);
+
+    let wscheme = WeightScheme::PerChannel(weight_bits);
+
+    // FP16 baseline
+    table.push(row_for(base, &profiles, Method::Fp16, Setting::fp(), opts, "FP16")?);
+    // weight-only (Wx + FP activations)
+    table.push(row_for(
+        base,
+        &profiles,
+        Method::PerToken,
+        Setting { weight: wscheme, act: None },
+        opts,
+        &format!("{wlabel} (act FP16)"),
+    )?);
+    // per-token A8
+    table.push(row_for(
+        base,
+        &profiles,
+        Method::PerToken,
+        Setting { weight: wscheme, act: Some(Bits::Int8) },
+        opts,
+        &format!("Per-token {wlabel}A8"),
+    )?);
+    // Remove Kernel: zero exactly the per-token INT8 kernel, nothing else
+    {
+        let mut cells = Vec::new();
+        for p in &profiles {
+            let mut w = base.clone();
+            inject_profile(&mut w, p)?;
+            quantize_weights(&mut w, wscheme)?;
+            let model = NativeModel::new(w);
+            let mut site = RemoveKernelSite::new(RemoveKernel::matching_per_token(127.0));
+            let suite = crate::eval::tasks::TaskSuite::standard(opts.task_instances, opts.seed ^ 0x7A5C);
+            let (_, avg) = suite.evaluate(&model, &mut site)?;
+            cells.push(avg);
+        }
+        table.push(Row::new(format!("{wlabel}-Remove Kernel"), format!("{wlabel}A16*"), cells));
+    }
+    // CrossQuant A8
+    table.push(row_for(
+        base,
+        &profiles,
+        Method::CrossQuant { alpha: 0.15 },
+        Setting { weight: wscheme, act: Some(Bits::Int8) },
+        opts,
+        &format!("CrossQuant {wlabel}A8"),
+    )?);
+
+    Ok(table)
+}
+
+fn row_for(
+    base: &Weights,
+    profiles: &[FamilyProfile],
+    method: Method,
+    setting: Setting,
+    opts: &ExpOpts,
+    label: &str,
+) -> Result<Row> {
+    let mut cells = Vec::new();
+    for p in profiles {
+        let mut prep = prepare(base, p, method, setting, opts)?;
+        let (_, avg) = run_tasks(&mut prep, opts)?;
+        cells.push(avg);
+    }
+    Ok(Row::new(label, setting.label(), cells))
+}

@@ -1,0 +1,69 @@
+//! Figure 4: average quantization-kernel proportion of Per-token vs
+//! CrossQuant across the OPT (left) and LLaMA (right) families, measured
+//! over the model's own activations on the Wiki2 corpus.
+
+use anyhow::Result;
+
+use crate::activations::{Family, FamilyProfile};
+use crate::analysis::kernel_fraction;
+use crate::eval::harness::{Row, Table};
+use crate::model::forward::CaptureSite;
+use crate::model::quantized::inject_profile;
+use crate::model::weights::Weights;
+use crate::model::NativeModel;
+use crate::quant::{crossquant::CrossQuant, per_token::PerToken, ActQuantizer, Bits};
+
+use super::common::ExpOpts;
+
+pub fn run(base: &Weights, family: Family, opts: &ExpOpts) -> Result<Table> {
+    let profiles: Vec<FamilyProfile> = match family {
+        Family::Opt => FamilyProfile::opt_family(),
+        Family::Llama => FamilyProfile::llama_family(),
+    };
+    let columns: Vec<&str> = profiles.iter().map(|p| p.name).collect();
+    let mut table = Table::new(
+        format!("Figure 4 — kernel proportion across the {family} family (INT8)"),
+        columns,
+    )
+    .percent()
+    .decimals(2);
+
+    let mut pt_cells = Vec::new();
+    let mut cq_cells = Vec::new();
+    for p in &profiles {
+        let (pt, cq) = model_kernel_fractions(base, p, opts)?;
+        pt_cells.push(pt as f64);
+        cq_cells.push(cq as f64);
+    }
+    table.push(Row::new("Per-token", "A8", pt_cells));
+    table.push(Row::new("CrossQuant", "A8", cq_cells));
+    Ok(table)
+}
+
+/// Average (per-token, crossquant) kernel fraction over all quantization
+/// sites of the profile-injected model on the Wiki2 corpus.
+pub fn model_kernel_fractions(
+    base: &Weights,
+    profile: &FamilyProfile,
+    opts: &ExpOpts,
+) -> Result<(f32, f32)> {
+    let mut w = base.clone();
+    inject_profile(&mut w, profile)?;
+    let cfg = w.config;
+    let model = NativeModel::new(w);
+    let mut cap = CaptureSite::all();
+    let mut gen = crate::corpus::CorpusGen::new(cfg.vocab, opts.seed ^ 0xF16_4);
+    for _ in 0..opts.calib_sequences.max(2) {
+        model.forward_nll(&gen.sequence(cfg.seq_len), &mut cap)?;
+    }
+    let pt = PerToken::new(Bits::Int8);
+    let cq = CrossQuant::new(0.15, Bits::Int8);
+    let (mut pt_sum, mut cq_sum, mut n) = (0.0f64, 0.0f64, 0.0f64);
+    for (_, x) in &cap.captured {
+        let elems = x.len() as f64;
+        pt_sum += kernel_fraction(x, &pt.delta_field(x)) as f64 * elems;
+        cq_sum += kernel_fraction(x, &cq.delta_field(x)) as f64 * elems;
+        n += elems;
+    }
+    Ok(((pt_sum / n) as f32, (cq_sum / n) as f32))
+}

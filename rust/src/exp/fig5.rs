@@ -1,0 +1,39 @@
+//! Figure 5: perplexity vs model size for Per-token vs CrossQuant (and the
+//! FP16 floor), at W8A8 (top panels) and W4A8-g128 (bottom panels), both
+//! families.
+
+use anyhow::Result;
+
+use super::common::{prepare, run_ppl, ExpOpts, Method, Setting};
+use crate::activations::{Family, FamilyProfile};
+use crate::corpus::CorpusKind;
+use crate::eval::harness::{Row, Table};
+use crate::model::weights::Weights;
+
+pub fn run(base: &Weights, family: Family, setting: Setting, opts: &ExpOpts) -> Result<Table> {
+    let profiles: Vec<FamilyProfile> = match family {
+        Family::Opt => FamilyProfile::opt_family(),
+        Family::Llama => FamilyProfile::llama_family(),
+    };
+    let columns: Vec<&str> = profiles.iter().map(|p| p.name).collect();
+    let mut table = Table::new(
+        format!("Figure 5 — WikiText2 perplexity, {family} family, {}", setting.label()),
+        columns,
+    );
+
+    for (method, label) in [
+        (Method::Fp16, "FP16"),
+        (Method::PerToken, "Per-token"),
+        (Method::CrossQuant { alpha: 0.15 }, "CrossQuant"),
+    ] {
+        let mut cells = Vec::new();
+        for p in &profiles {
+            let s = if method == Method::Fp16 { Setting::fp() } else { setting };
+            let mut prep = prepare(base, p, method, s, opts)?;
+            cells.push(run_ppl(&mut prep, CorpusKind::Wiki2, opts)?.perplexity);
+        }
+        let s = if method == Method::Fp16 { Setting::fp() } else { setting };
+        table.push(Row::new(label, s.label(), cells));
+    }
+    Ok(table)
+}

@@ -1,0 +1,100 @@
+//! Figures 6 & 7: the threshold analysis of §4.3 — quantize weights to
+//! INT8, zero increasing proportions of the activation kernel ("W8-Remove
+//! Kernel") and record perplexity. The knee of each curve is the model's
+//! kernel-tolerance threshold (≈19–25 % for OPT, ≈1–2 % for LLaMA).
+
+use anyhow::Result;
+
+use super::common::{calibrate_activations, ExpOpts};
+use crate::activations::{Family, FamilyProfile};
+use crate::analysis::threshold::ThresholdCurve;
+use crate::corpus::CorpusKind;
+use crate::eval::harness::{Row, Table};
+use crate::eval::perplexity::perplexity_native;
+use crate::model::quantized::{inject_profile, quantize_weights, WeightScheme};
+use crate::model::weights::Weights;
+use crate::model::{IdentitySite, NativeModel, RemoveKernelSite};
+use crate::quant::remove_kernel::RemoveKernel;
+use crate::quant::Bits;
+use crate::tensor::Matrix;
+
+/// Sweep fractions per family (the paper sweeps finer near each regime).
+pub fn fractions(family: Family) -> Vec<f32> {
+    match family {
+        Family::Opt => vec![0.0, 0.05, 0.10, 0.19, 0.25, 0.30, 0.40, 0.50, 0.65, 0.80],
+        Family::Llama => vec![0.0, 0.005, 0.01, 0.02, 0.05, 0.11, 0.20, 0.35, 0.50],
+    }
+}
+
+pub struct FigResult {
+    pub table: Table,
+    /// (profile name, threshold at 5 % ppl tolerance).
+    pub thresholds: Vec<(String, Option<f32>)>,
+}
+
+pub fn run(base: &Weights, family: Family, opts: &ExpOpts) -> Result<FigResult> {
+    let profiles: Vec<FamilyProfile> = match family {
+        Family::Opt => FamilyProfile::opt_family().into_iter().skip(2).collect(), // ≥6.7B, as in Fig 6
+        Family::Llama => FamilyProfile::llama_family().into_iter().take(3).collect(),
+    };
+    let fracs = fractions(family);
+    let columns: Vec<String> = fracs.iter().map(|f| format!("{:.1}%", f * 100.0)).collect();
+    let fig = if family == Family::Opt { "Figure 6" } else { "Figure 7" };
+    let mut table = Table::new(
+        format!("{fig} — W8-Remove-Kernel perplexity vs removed fraction ({family})"),
+        columns.iter().map(|s| s.as_str()).collect(),
+    );
+
+    let mut thresholds = Vec::new();
+    for p in &profiles {
+        let (curve, cells) = sweep_profile(base, p, &fracs, opts)?;
+        thresholds.push((p.name.to_string(), curve.threshold(0.05)));
+        table.push(Row::new(p.name, "W8A16*", cells));
+    }
+    Ok(FigResult { table, thresholds })
+}
+
+/// Sweep one profile; returns the curve and the raw ppl cells.
+pub fn sweep_profile(
+    base: &Weights,
+    profile: &FamilyProfile,
+    fracs: &[f32],
+    opts: &ExpOpts,
+) -> Result<(ThresholdCurve, Vec<f64>)> {
+    let mut w = base.clone();
+    inject_profile(&mut w, profile)?;
+    // calibrate θ per target fraction on the model's own activations
+    let calib = calibrate_activations(&w, opts)?;
+    let mut all = Matrix::zeros(0, calib[0].cols);
+    for m in &calib {
+        if m.cols == all.cols {
+            all.data.extend_from_slice(&m.data);
+            all.rows += m.rows;
+        }
+    }
+    quantize_weights(&mut w, WeightScheme::PerChannel(Bits::Int8))?;
+    let model = NativeModel::new(w);
+
+    let fp = perplexity_native(&model, &mut IdentitySite, CorpusKind::Wiki2, opts.eval_sequences, opts.seed ^ 0xE7A1)?;
+
+    let mut cells = Vec::new();
+    let curve = ThresholdCurve::sweep(fracs, fp.perplexity, |frac| {
+        let rk = if frac == 0.0 {
+            RemoveKernel::new(0.0)
+        } else {
+            RemoveKernel::for_target_fraction(&all, frac)
+        };
+        let mut site = RemoveKernelSite::new(rk);
+        let r = perplexity_native(
+            &model,
+            &mut site,
+            CorpusKind::Wiki2,
+            opts.eval_sequences,
+            opts.seed ^ 0xE7A1,
+        )
+        .expect("eval");
+        cells.push(r.perplexity);
+        r.perplexity
+    });
+    Ok((curve, cells))
+}

@@ -1,0 +1,58 @@
+//! Figure 8: α sweeps — (left) OPT-6.7B W8A8 accuracy on the Lambada-like
+//! task and (right) LLaMA2-13B W4A8 WikiText2 perplexity, as α runs from
+//! near-0 to 1 (α = 1 ≡ per-token).
+
+use anyhow::Result;
+
+use super::common::{prepare, run_ppl, ExpOpts, Method, Setting};
+use crate::activations::FamilyProfile;
+use crate::corpus::CorpusKind;
+use crate::eval::harness::{Row, Table};
+use crate::eval::tasks::Task;
+use crate::model::weights::Weights;
+
+pub fn alphas() -> Vec<f32> {
+    vec![0.05, 0.15, 0.25, 0.35, 0.45, 0.55, 0.65, 0.75, 0.85, 0.95, 1.0]
+}
+
+pub fn run(base: &Weights, opts: &ExpOpts) -> Result<Table> {
+    let a = alphas();
+    let columns: Vec<String> = a.iter().map(|v| format!("α={v}")).collect();
+    let mut table = Table::new(
+        "Figure 8 — α sweep: OPT-6.7B Lambada acc (W8A8) / LLaMA2-13B Wiki2 ppl (W4A8)",
+        columns.iter().map(|s| s.as_str()).collect(),
+    )
+    .decimals(3);
+
+    // left panel: OPT-6.7B accuracy on the lambada-like task, W8A8
+    let opt = FamilyProfile::by_name("opt-6.7b").expect("profile");
+    let lambada = Task::zero_shot_suite().into_iter().find(|t| t.name == "lambada").unwrap();
+    let mut acc_cells = Vec::new();
+    for &alpha in &a {
+        let mut prep = prepare(base, &opt, Method::CrossQuant { alpha }, Setting::w8a8(), opts)?;
+        let r = lambada.evaluate(&prep.model, prep.site.as_mut(), opts.task_instances, opts.seed)?;
+        acc_cells.push(r.accuracy);
+    }
+    table.push(Row::new("OPT-6.7B lambada acc", "W8A8", acc_cells));
+
+    // right panel: LLaMA2-13B Wiki2 perplexity, W4A8-g128
+    let llama = FamilyProfile::by_name("llama2-13b").expect("profile");
+    let mut ppl_cells = Vec::new();
+    for &alpha in &a {
+        let mut prep =
+            prepare(base, &llama, Method::CrossQuant { alpha }, Setting::w4a8_g128(), opts)?;
+        ppl_cells.push(run_ppl(&mut prep, CorpusKind::Wiki2, opts)?.perplexity);
+    }
+    table.push(Row::new("LLaMA2-13B Wiki2 ppl", "W4A8-g128", ppl_cells));
+
+    // companion series (not in the paper's figure, but the same sweep on an
+    // outlier-heavy profile, where the α trend is strongest)
+    let opt13 = FamilyProfile::by_name("opt-13b").expect("profile");
+    let mut opt_cells = Vec::new();
+    for &alpha in &a {
+        let mut prep = prepare(base, &opt13, Method::CrossQuant { alpha }, Setting::w8a8(), opts)?;
+        opt_cells.push(run_ppl(&mut prep, CorpusKind::Wiki2, opts)?.perplexity);
+    }
+    table.push(Row::new("OPT-13B Wiki2 ppl", "W8A8", opt_cells));
+    Ok(table)
+}

@@ -1,0 +1,18 @@
+//! Paper-artefact reproduction modules: one per table/figure (DESIGN.md §5).
+//!
+//! Every module exposes `run(opts) -> Table` printing the same rows/series
+//! the paper reports, regenerable via `repro reproduce <id>`.
+
+pub mod appendix_a;
+pub mod common;
+pub mod correlation;
+pub mod fig1;
+pub mod fig4;
+pub mod fig5;
+pub mod fig67;
+pub mod fig8;
+pub mod tab1;
+pub mod tab2;
+pub mod tab3;
+pub mod tab4;
+pub mod weight_kernel;

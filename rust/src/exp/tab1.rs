@@ -1,0 +1,60 @@
+//! Table 1: the cross-scale statistics on OPT-13B activations as α varies —
+//! %(c_j ≥ t_i), %(B̃ < B), the CrossQuant kernel proportion, and the
+//! resulting W8A8 perplexity (α = 1 is per-token, whose ppl explodes).
+
+use anyhow::Result;
+
+use super::common::{prepare, run_ppl, ExpOpts, Method, Setting};
+use crate::activations::{ActivationGen, FamilyProfile};
+use crate::analysis::CrossStats;
+use crate::corpus::CorpusKind;
+use crate::eval::harness::{Row, Table};
+use crate::model::weights::Weights;
+use crate::quant::Bits;
+
+pub const ALPHAS: [f32; 4] = [0.15, 0.45, 0.75, 1.0];
+
+pub fn run(base: &Weights, opts: &ExpOpts) -> Result<Table> {
+    let profile = FamilyProfile::by_name("opt-13b").expect("profile");
+    let columns: Vec<String> = ALPHAS.iter().map(|a| format!("α={a}")).collect();
+    let mut table = Table::new(
+        "Table 1 — cross-scale statistics, OPT-13B activations (WikiText2)",
+        columns.iter().map(|s| s.as_str()).collect(),
+    )
+    .decimals(3);
+
+    // statistics measured on profile-matched activation matrices
+    let mut gen = ActivationGen::new(profile.clone(), opts.seed);
+    let x = gen.matrix(1024, 512);
+    let stats: Vec<CrossStats> =
+        ALPHAS.iter().map(|&a| CrossStats::compute(&x, a, Bits::Int8)).collect();
+
+    table.push(Row::new(
+        "c_j ≥ t_i",
+        "%",
+        stats.iter().map(|s| s.frac_col_ge_row as f64 * 100.0).collect(),
+    ));
+    table.push(Row::new(
+        "B̃ < B",
+        "%",
+        stats
+            .iter()
+            .map(|s| if s.alpha < 1.0 { s.frac_bound_smaller as f64 * 100.0 } else { f64::NAN })
+            .collect(),
+    ));
+    table.push(Row::new(
+        "Quantization kernel",
+        "%",
+        stats.iter().map(|s| s.kernel_fraction as f64 * 100.0).collect(),
+    ));
+
+    // W8A8 perplexity on the injected model per α
+    let mut ppls = Vec::new();
+    for &alpha in &ALPHAS {
+        let mut prep =
+            prepare(base, &profile, Method::CrossQuant { alpha }, Setting::w8a8(), opts)?;
+        ppls.push(run_ppl(&mut prep, CorpusKind::Wiki2, opts)?.perplexity);
+    }
+    table.push(Row::new("W8A8 perplexity", "ppl", ppls));
+    Ok(table)
+}

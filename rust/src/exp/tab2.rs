@@ -1,0 +1,56 @@
+//! Table 2: perplexity of quantized LLaMA models (2-7B, 2-13B, 1-30B) on
+//! Wiki2 + C4, in three groups — W8A8 (vs SmoothQuant), W4A8-g128 (vs AWQ,
+//! plus the CrossQuant+AWQ composition), and W4A4 (vs OmniQuant).
+
+use anyhow::Result;
+
+use super::common::{prepare, run_ppl, ExpOpts, Method, Setting};
+use crate::activations::FamilyProfile;
+use crate::corpus::CorpusKind;
+use crate::eval::harness::{Row, Table};
+use crate::model::weights::Weights;
+
+pub const MODELS: [&str; 3] = ["llama2-7b", "llama2-13b", "llama1-30b"];
+
+pub fn run(base: &Weights, opts: &ExpOpts) -> Result<Table> {
+    let profiles: Vec<FamilyProfile> =
+        MODELS.iter().map(|n| FamilyProfile::by_name(n).expect("profile")).collect();
+    let mut columns = Vec::new();
+    for p in &profiles {
+        columns.push(format!("{} Wiki2", p.name));
+        columns.push(format!("{} C4", p.name));
+    }
+    let mut table = Table::new(
+        "Table 2 — perplexity (↓) of quantized LLaMA models",
+        columns.iter().map(|s| s.as_str()).collect(),
+    );
+
+    let groups: Vec<(Method, Setting)> = vec![
+        (Method::Fp16, Setting::fp()),
+        // --- W8A8 group ---
+        (Method::PerToken, Setting::w8a8()),
+        (Method::SmoothQuant, Setting::w8a8()),
+        (Method::CrossQuant { alpha: 0.15 }, Setting::w8a8()),
+        // --- W4A8-g128 group ---
+        (Method::PerToken, Setting::w4a8_g128()),
+        (Method::Awq, Setting::w4a8_g128()),
+        (Method::CrossQuant { alpha: 0.15 }, Setting::w4a8_g128()),
+        (Method::CrossQuantAwq { alpha: 0.15 }, Setting::w4a8_g128()),
+        // --- W4A4 group ---
+        (Method::PerToken, Setting::w4a4()),
+        (Method::OmniQuant, Setting::w4a4()),
+        (Method::CrossQuant { alpha: 0.15 }, Setting::w4a4()),
+    ];
+
+    for (method, setting) in groups {
+        let mut cells = Vec::new();
+        for p in &profiles {
+            let mut prep = prepare(base, p, method, setting, opts)?;
+            cells.push(run_ppl(&mut prep, CorpusKind::Wiki2, opts)?.perplexity);
+            let mut prep = prepare(base, p, method, setting, opts)?;
+            cells.push(run_ppl(&mut prep, CorpusKind::C4, opts)?.perplexity);
+        }
+        table.push(Row::new(method.label(), setting.label(), cells));
+    }
+    Ok(table)
+}

@@ -1,0 +1,74 @@
+//! Tables 3 & 5: zero-shot accuracy of OPT models across the quantization
+//! method × precision grid (Lambada, ARC-easy, PIQA, HellaSwag, BoolQ +
+//! average). Table 3 covers OPT-30B/66B with all baselines; Table 5 covers
+//! OPT-1.3B…13B with the Per-token / CrossQuant pair.
+
+use anyhow::Result;
+
+use super::common::{prepare, run_tasks, ExpOpts, Method, Setting};
+use crate::activations::FamilyProfile;
+use crate::eval::harness::{Row, Table};
+use crate::model::quantized::WeightScheme;
+use crate::model::weights::Weights;
+use crate::quant::Bits;
+
+pub fn method_grid_tab3() -> Vec<(Method, Setting)> {
+    vec![
+        (Method::Fp16, Setting::fp()),
+        (Method::PerToken, Setting::w8a8()),
+        (Method::SmoothQuant, Setting::w8a8()),
+        (Method::CrossQuant { alpha: 0.15 }, Setting::w8a8()),
+        (Method::PerToken, Setting::w4a8_g128()),
+        (Method::Awq, Setting::w4a8_g128()),
+        (Method::CrossQuant { alpha: 0.15 }, Setting::w4a8_g128()),
+        (Method::PerToken, Setting::w4a4()),
+        (Method::OmniQuant, Setting::w4a4()),
+        (Method::CrossQuant { alpha: 0.15 }, Setting::w4a4()),
+    ]
+}
+
+pub fn method_grid_tab5() -> Vec<(Method, Setting)> {
+    vec![
+        (Method::Fp16, Setting::fp()),
+        (Method::PerToken, Setting::w8a8()),
+        (Method::CrossQuant { alpha: 0.15 }, Setting::w8a8()),
+        (Method::PerToken, Setting::w4a8_g128()),
+        (Method::CrossQuant { alpha: 0.15 }, Setting::w4a8_g128()),
+    ]
+}
+
+pub fn run(base: &Weights, models: &[&str], tab5: bool, opts: &ExpOpts) -> Result<Vec<Table>> {
+    let grid = if tab5 { method_grid_tab5() } else { method_grid_tab3() };
+    let mut tables = Vec::new();
+    for name in models {
+        let profile = FamilyProfile::by_name(name).expect("profile");
+        let mut table = Table::new(
+            format!(
+                "Table {} — zero-shot accuracy (↑), {}",
+                if tab5 { "5" } else { "3" },
+                name
+            ),
+            vec!["Lambada", "ARC-easy", "PIQA", "HellaSwag", "BoolQ", "Avg."],
+        )
+        .percent()
+        .decimals(2);
+
+        for (method, mut setting) in grid.clone() {
+            // Appendix B.1 corner: OPT-66B W4A4 uses CrossQuant on weights
+            // too (α_W = 0.55) because per-channel weight kernels hurt.
+            if *name == "opt-66b"
+                && matches!(method, Method::CrossQuant { .. })
+                && matches!(setting.act, Some(Bits::Int4))
+            {
+                setting.weight = WeightScheme::CrossQuant(Bits::Int4, 0.55);
+            }
+            let mut prep = prepare(base, &profile, method, setting, opts)?;
+            let (per_task, avg) = run_tasks(&mut prep, opts)?;
+            let mut cells: Vec<f64> = per_task.iter().map(|(_, r)| r.accuracy).collect();
+            cells.push(avg);
+            table.push(Row::new(method.label(), setting.label(), cells));
+        }
+        tables.push(table);
+    }
+    Ok(tables)
+}

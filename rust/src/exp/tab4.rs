@@ -1,0 +1,64 @@
+//! Table 4: the α ablation on LLaMA3-8B and 3-70B — Wiki2 perplexity and
+//! 5-shot MMLU accuracy at W8A8, for CrossQuant α ∈ {0.15, 0.45, 0.75}
+//! against FP16 / Per-token / SmoothQuant.
+//!
+//! Appendix B.1 corner: for LLaMA3-70B W8A8 the paper applies CrossQuant
+//! to weights too with α_W = 0 (per-channel weight kernels hurt at 70B).
+
+use anyhow::Result;
+
+use super::common::{prepare, run_ppl, ExpOpts, Method, Setting};
+use crate::activations::FamilyProfile;
+use crate::corpus::CorpusKind;
+use crate::eval::harness::{Row, Table};
+use crate::eval::tasks::Task;
+use crate::model::quantized::WeightScheme;
+use crate::model::weights::Weights;
+use crate::quant::Bits;
+
+pub const MODELS: [&str; 2] = ["llama3-8b", "llama3-70b"];
+
+pub fn run(base: &Weights, opts: &ExpOpts) -> Result<Table> {
+    let profiles: Vec<FamilyProfile> =
+        MODELS.iter().map(|n| FamilyProfile::by_name(n).expect("profile")).collect();
+    let mut columns = Vec::new();
+    for p in &profiles {
+        columns.push(format!("{} Wiki2", p.name));
+        columns.push(format!("{} MMLU%", p.name));
+    }
+    let mut table = Table::new(
+        "Table 4 — α ablation, LLaMA3-8B / 3-70B (W8A8)",
+        columns.iter().map(|s| s.as_str()).collect(),
+    );
+
+    let rows: Vec<(Method, Setting)> = vec![
+        (Method::Fp16, Setting::fp()),
+        (Method::PerToken, Setting::w8a8()),
+        (Method::SmoothQuant, Setting::w8a8()),
+        (Method::CrossQuant { alpha: 0.15 }, Setting::w8a8()),
+        (Method::CrossQuant { alpha: 0.45 }, Setting::w8a8()),
+        (Method::CrossQuant { alpha: 0.75 }, Setting::w8a8()),
+    ];
+
+    for (method, setting) in rows {
+        let mut cells = Vec::new();
+        for p in &profiles {
+            let mut s = setting;
+            if p.name == "llama3-70b" && matches!(method, Method::CrossQuant { .. }) {
+                s.weight = WeightScheme::CrossQuant(Bits::Int8, 0.0);
+            }
+            let mut prep = prepare(base, p, method, s, opts)?;
+            cells.push(run_ppl(&mut prep, CorpusKind::Wiki2, opts)?.perplexity);
+            let mut prep = prepare(base, p, method, s, opts)?;
+            let mmlu = Task::mmlu_five_shot().evaluate(
+                &prep.model,
+                prep.site.as_mut(),
+                opts.task_instances,
+                opts.seed ^ 0x4444,
+            )?;
+            cells.push(mmlu.accuracy * 100.0);
+        }
+        table.push(Row::new(method.label(), setting.label(), cells));
+    }
+    Ok(table)
+}

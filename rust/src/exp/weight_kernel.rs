@@ -1,0 +1,77 @@
+//! Appendix B.1's weight-kernel corner: per-channel quantization of
+//! *weights* also has a quantization kernel (outliers emerge in weights of
+//! large models — Dettmers 2023, Kim 2023), which is what forced the paper
+//! to run CrossQuant on weights for OPT-66B W4A4 and LLaMA3-70B W8A8.
+//!
+//! This ablation measures, on the trained model's own weight matrices:
+//! the per-channel weight kernel at W8/W4 versus CrossQuant-on-weights
+//! across an α_W grid, plus the resulting W4A4 perplexity (activations
+//! CrossQuant-quantized at the paper's α = 0.15 throughout).
+
+use anyhow::Result;
+
+use super::common::{run_ppl, ExpOpts, PreparedEval};
+use crate::activations::FamilyProfile;
+use crate::analysis::kernel_fraction;
+use crate::corpus::CorpusKind;
+use crate::eval::harness::{Row, Table};
+use crate::model::quantized::{inject_profile, quantize_weights, WeightScheme};
+use crate::model::weights::Weights;
+use crate::model::{NativeModel, QuantSite};
+use crate::quant::{
+    crossquant::CrossQuant, per_channel::PerChannel, ActQuantizer, Bits,
+};
+
+pub const ALPHA_W: [f32; 5] = [0.0, 0.15, 0.55, 0.85, 1.0];
+
+pub fn run(base: &Weights, opts: &ExpOpts) -> Result<Table> {
+    let mut columns: Vec<String> = vec!["per-channel".into()];
+    columns.extend(ALPHA_W.iter().map(|a| format!("cq α_W={a}")));
+    let mut table = Table::new(
+        "Weight-kernel ablation (App. B.1) — OPT-66B profile, W4 weights",
+        columns.iter().map(|s| s.as_str()).collect(),
+    )
+    .decimals(2);
+
+    let profile = FamilyProfile::by_name("opt-66b").expect("profile");
+    let mut injected = base.clone();
+    inject_profile(&mut injected, &profile)?;
+
+    // --- average weight-kernel fraction across the linear weights ---
+    let mut kernel_cells = Vec::new();
+    {
+        let names = injected.linear_names();
+        let mut schemes: Vec<Box<dyn ActQuantizer>> = vec![Box::new(PerChannel::new(Bits::Int4))];
+        for &a in &ALPHA_W {
+            schemes.push(Box::new(CrossQuant::weight_mode(a, Bits::Int4)));
+        }
+        for q in &schemes {
+            let (mut kern, mut total) = (0.0f64, 0.0f64);
+            for name in &names {
+                let w = injected.get(name)?;
+                kern += kernel_fraction(&w, &q.delta_field(&w)) as f64 * w.len() as f64;
+                total += w.len() as f64;
+            }
+            kernel_cells.push(kern / total * 100.0);
+        }
+    }
+    table.push(Row::new("Weight kernel", "%", kernel_cells));
+
+    // --- end-to-end W4A4 perplexity per weight scheme ---
+    let mut ppl_cells = Vec::new();
+    let run_scheme = |scheme: WeightScheme| -> Result<f64> {
+        let mut w = injected.clone();
+        quantize_weights(&mut w, scheme)?;
+        let mut prep = PreparedEval {
+            model: NativeModel::new(w),
+            site: Box::new(QuantSite::new(CrossQuant::new(0.15, Bits::Int4))),
+        };
+        Ok(run_ppl(&mut prep, CorpusKind::Wiki2, opts)?.perplexity)
+    };
+    ppl_cells.push(run_scheme(WeightScheme::PerChannel(Bits::Int4))?);
+    for &a in &ALPHA_W {
+        ppl_cells.push(run_scheme(WeightScheme::CrossQuant(Bits::Int4, a))?);
+    }
+    table.push(Row::new("W4A4 ppl (CQ acts)", "W4A4", ppl_cells));
+    Ok(table)
+}

@@ -1,0 +1,46 @@
+//! # crossquant
+//!
+//! A production-grade reproduction of **CrossQuant** (Liu, Ma, Zhang, Wang,
+//! 2024): *A Post-Training Quantization Method with Smaller Quantization
+//! Kernel for Precise Large Language Model Compression* — built as a
+//! three-layer Rust + JAX + Pallas system.
+//!
+//! * **L1 (Pallas, build time)** — quantization hot-spot kernels,
+//!   `python/compile/kernels/`, validated against a pure-jnp oracle.
+//! * **L2 (JAX, build time)** — a GPT-style LM with in-graph activation
+//!   fake-quantization, AOT-lowered to HLO text artifacts.
+//! * **L3 (this crate, run time)** — the quantization library with every
+//!   baseline, the kernel-analysis engine, synthetic substrates, a PJRT
+//!   runtime that executes the AOT artifacts, an async eval coordinator,
+//!   and the benchmark harness regenerating every table/figure of the
+//!   paper.
+//!
+//! Quick taste (native path, no artifacts needed; `no_run` because rustdoc
+//! test binaries do not inherit the cargo rpath for libxla_extension — the
+//! same assertions run for real in rust/tests/property.rs):
+//!
+//! ```no_run
+//! use crossquant::quant::{ActQuantizer, Bits, crossquant::CrossQuant, per_token::PerToken};
+//! use crossquant::analysis::kernel_fraction;
+//! use crossquant::activations::{ActivationGen, FamilyProfile};
+//!
+//! let profile = FamilyProfile::by_name("opt-66b").unwrap();
+//! let x = ActivationGen::new(profile, 0).matrix(256, 256);
+//! let pt = PerToken::new(Bits::Int8);
+//! let cq = CrossQuant::new(0.15, Bits::Int8);
+//! let k_pt = kernel_fraction(&x, &pt.delta_field(&x));
+//! let k_cq = kernel_fraction(&x, &cq.delta_field(&x));
+//! assert!(k_cq < k_pt); // the paper's central claim
+//! ```
+
+pub mod activations;
+pub mod analysis;
+pub mod coordinator;
+pub mod corpus;
+pub mod eval;
+pub mod exp;
+pub mod model;
+pub mod quant;
+pub mod runtime;
+pub mod tensor;
+pub mod util;

@@ -1,0 +1,407 @@
+//! `repro` — the CrossQuant reproduction CLI (hand-rolled argument parsing;
+//! the offline build has no clap — see Cargo.toml).
+//!
+//! Subcommands:
+//!   info                 artifact + manifest inventory
+//!   quantize             quantize a profile's activations, report stats
+//!   analyze              kernel analysis across profiles (Figure-4 style)
+//!   eval                 ppl + zero-shot eval of one method×setting cell
+//!   serve-eval           the PJRT/coordinator path: batched eval requests
+//!   reproduce <id>       regenerate a paper table/figure (fig1 … tab5, all)
+//!
+//! Global flags: --artifacts <dir> --synthetic --eval-sequences N
+//!               --task-instances N --seed N
+
+use std::path::{Path, PathBuf};
+
+use anyhow::{anyhow, bail, Result};
+
+use crossquant::activations::{ActivationGen, Family, FamilyProfile};
+use crossquant::analysis::{kernel::KernelReport, CrossStats};
+use crossquant::coordinator::scheduler::CoordinatorConfig;
+use crossquant::coordinator::{ActScheme, EvalCoordinator};
+use crossquant::corpus::{CorpusGen, CorpusKind};
+use crossquant::eval::harness::Table;
+use crossquant::exp::{
+    self,
+    common::{prepare, run_ppl, run_tasks, ExpOpts, Method, Setting},
+};
+use crossquant::model::weights::{synthetic_weights, Weights};
+use crossquant::model::ModelConfig;
+use crossquant::quant::{crossquant::CrossQuant, per_token::PerToken, Bits};
+use crossquant::runtime::{ArtifactStore, Runtime};
+use crossquant::util::Json;
+
+const USAGE: &str = "usage: repro [GLOBAL FLAGS] <command> [ARGS]
+
+commands:
+  info                         artifact + manifest inventory
+  quantize [--profile P] [--alpha A] [--bits N]
+  analyze                      kernel proportions across all profiles
+  eval [--profile P] [--method M] [--setting S] [--alpha A] [--tasks]
+  serve-eval [--requests N] [--alpha A]
+  serve [--addr HOST:PORT]     TCP line-protocol eval server
+  reproduce <fig1|fig4|fig5|fig6|fig7|fig8|fig9|tab1|tab2|tab3|tab4|tab5|
+             appendixA|weight-kernel|correlation|all> [--json PATH]
+
+global flags:
+  --artifacts DIR    artifacts directory (default ./artifacts)
+  --synthetic        use random weights instead of trained artifacts
+  --eval-sequences N perplexity eval size (default 12)
+  --task-instances N instances per zero-shot task (default 40)
+  --seed N           base RNG seed
+";
+
+/// Tiny argv scanner: flags may appear anywhere; first bare word is the
+/// command, later bare words are positional arguments.
+struct Args {
+    flags: std::collections::HashMap<String, String>,
+    bools: std::collections::HashSet<String>,
+    positional: Vec<String>,
+}
+
+impl Args {
+    fn parse(argv: &[String], bool_flags: &[&str]) -> Result<Args> {
+        let mut flags = std::collections::HashMap::new();
+        let mut bools = std::collections::HashSet::new();
+        let mut positional = Vec::new();
+        let mut i = 0;
+        while i < argv.len() {
+            let a = &argv[i];
+            if let Some(name) = a.strip_prefix("--") {
+                if bool_flags.contains(&name) {
+                    bools.insert(name.to_string());
+                } else {
+                    i += 1;
+                    let v = argv.get(i).ok_or_else(|| anyhow!("flag --{name} needs a value"))?;
+                    flags.insert(name.to_string(), v.clone());
+                }
+            } else {
+                positional.push(a.clone());
+            }
+            i += 1;
+        }
+        Ok(Args { flags, bools, positional })
+    }
+
+    fn get(&self, name: &str) -> Option<&str> {
+        self.flags.get(name).map(String::as_str)
+    }
+
+    fn get_or(&self, name: &str, default: &str) -> String {
+        self.get(name).unwrap_or(default).to_string()
+    }
+
+    fn num<T: std::str::FromStr>(&self, name: &str, default: T) -> Result<T> {
+        match self.get(name) {
+            None => Ok(default),
+            Some(v) => v.parse().map_err(|_| anyhow!("--{name}: cannot parse '{v}'")),
+        }
+    }
+
+    fn flag(&self, name: &str) -> bool {
+        self.bools.contains(name)
+    }
+}
+
+fn main() -> Result<()> {
+    let argv: Vec<String> = std::env::args().skip(1).collect();
+    if argv.is_empty() || argv[0] == "--help" || argv[0] == "-h" {
+        print!("{USAGE}");
+        return Ok(());
+    }
+    let args = Args::parse(&argv, &["synthetic", "tasks", "help"])?;
+    if args.flag("help") {
+        print!("{USAGE}");
+        return Ok(());
+    }
+    let cmd = args.positional.first().map(String::as_str).unwrap_or("");
+    let opts = ExpOpts {
+        eval_sequences: args.num("eval-sequences", 12)?,
+        task_instances: args.num("task-instances", 40)?,
+        calib_sequences: 2,
+        seed: args.num("seed", 0xC0FFEE_u64)?,
+    };
+
+    match cmd {
+        "info" => info(&args),
+        "quantize" => quantize(
+            &args.get_or("profile", "opt-13b"),
+            args.num("alpha", 0.15f32)?,
+            args.num("bits", 8u8)?,
+        ),
+        "analyze" => analyze(&args, &opts),
+        "eval" => eval_cell(
+            &args,
+            &opts,
+            &args.get_or("profile", "llama2-7b"),
+            &args.get_or("method", "crossquant"),
+            &args.get_or("setting", "w8a8"),
+            args.num("alpha", 0.15f32)?,
+            args.flag("tasks"),
+        ),
+        "serve-eval" => serve_eval(&args, args.num("requests", 32usize)?, args.num("alpha", 0.15f32)?),
+        "serve" => serve(&args, &args.get_or("addr", "127.0.0.1:8471")),
+        "reproduce" => {
+            let id = args
+                .positional
+                .get(1)
+                .ok_or_else(|| anyhow!("reproduce needs an artefact id (fig1..tab5, all)"))?;
+            reproduce(&args, &opts, id, args.get("json").map(Path::new))
+        }
+        other => bail!("unknown command '{other}'\n{USAGE}"),
+    }
+}
+
+fn artifacts_dir(args: &Args) -> Option<PathBuf> {
+    args.get("artifacts").map(PathBuf::from)
+}
+
+fn load_weights(args: &Args, seed: u64) -> Result<Weights> {
+    if args.flag("synthetic") {
+        return Ok(synthetic_weights(ModelConfig::default_build(), seed));
+    }
+    let store = ArtifactStore::discover(artifacts_dir(args).as_deref())?;
+    store.load_weights()
+}
+
+fn info(args: &Args) -> Result<()> {
+    let store = ArtifactStore::discover(artifacts_dir(args).as_deref())?;
+    let manifest = store.manifest()?;
+    println!("artifacts dir : {}", store.dir.display());
+    println!("model config  : {:?}", manifest.config);
+    println!("total params  : {}", manifest.total_params);
+    if let Some(t) = &manifest.train {
+        println!("trained       : {} steps, final ppl {:.2}", t.steps, t.final_ppl);
+    }
+    println!("hlo artifacts : {:?}", store.available());
+    let runtime = Runtime::new(store)?;
+    println!("pjrt platform : {}", runtime.platform());
+    Ok(())
+}
+
+fn quantize(profile: &str, alpha: f32, bits: u8) -> Result<()> {
+    let p =
+        FamilyProfile::by_name(profile).ok_or_else(|| anyhow!("unknown profile {profile}"))?;
+    let bits = if bits <= 4 { Bits::Int4 } else { Bits::Int8 };
+    let x = ActivationGen::new(p.clone(), 7).matrix(1024, 512);
+    println!("profile {profile}: {} outlier channels × {}×", p.outlier_channels, p.outlier_scale);
+    for report in [
+        KernelReport::compute(&x, &PerToken::new(bits)),
+        KernelReport::compute(&x, &CrossQuant::new(alpha, bits)),
+    ] {
+        println!(
+            "  {:28} kernel {:6.2}%  ({} / {} elements, mean|x| in kernel {:.4})",
+            report.scheme,
+            report.fraction * 100.0,
+            report.count,
+            report.total,
+            report.mean_abs_kernel,
+        );
+    }
+    let stats = CrossStats::compute(&x, alpha, bits);
+    println!(
+        "  c_j≥t_i: {:.2}%   B̃<B: {:.2}%",
+        stats.frac_col_ge_row * 100.0,
+        stats.frac_bound_smaller * 100.0
+    );
+    Ok(())
+}
+
+fn analyze(args: &Args, opts: &ExpOpts) -> Result<()> {
+    let base = load_weights(args, opts.seed)?;
+    for family in [Family::Opt, Family::Llama] {
+        exp::fig4::run(&base, family, opts)?.print();
+    }
+    Ok(())
+}
+
+fn parse_method(m: &str, alpha: f32) -> Result<Method> {
+    Ok(match m {
+        "fp16" => Method::Fp16,
+        "per-token" => Method::PerToken,
+        "smoothquant" => Method::SmoothQuant,
+        "crossquant" => Method::CrossQuant { alpha },
+        "awq" => Method::Awq,
+        "cq+awq" => Method::CrossQuantAwq { alpha },
+        "omniquant" => Method::OmniQuant,
+        _ => bail!("unknown method {m}"),
+    })
+}
+
+fn parse_setting(s: &str) -> Result<Setting> {
+    Ok(match s {
+        "w8a8" => Setting::w8a8(),
+        "w4a8-g128" => Setting::w4a8_g128(),
+        "w4a4" => Setting::w4a4(),
+        "fp" => Setting::fp(),
+        _ => bail!("unknown setting {s}"),
+    })
+}
+
+#[allow(clippy::too_many_arguments)]
+fn eval_cell(
+    args: &Args,
+    opts: &ExpOpts,
+    profile: &str,
+    method: &str,
+    setting: &str,
+    alpha: f32,
+    tasks: bool,
+) -> Result<()> {
+    let base = load_weights(args, opts.seed)?;
+    let p =
+        FamilyProfile::by_name(profile).ok_or_else(|| anyhow!("unknown profile {profile}"))?;
+    let method = parse_method(method, alpha)?;
+    let setting = if method == Method::Fp16 { Setting::fp() } else { parse_setting(setting)? };
+
+    let mut prep = prepare(&base, &p, method, setting, opts)?;
+    let wiki = run_ppl(&mut prep, CorpusKind::Wiki2, opts)?;
+    let mut prep2 = prepare(&base, &p, method, setting, opts)?;
+    let c4 = run_ppl(&mut prep2, CorpusKind::C4, opts)?;
+    println!(
+        "{} {} on {profile}: Wiki2 ppl {:.3}  C4 ppl {:.3}  ({} tokens)",
+        method.label(),
+        setting.label(),
+        wiki.perplexity,
+        c4.perplexity,
+        wiki.tokens
+    );
+    if tasks {
+        let mut prep3 = prepare(&base, &p, method, setting, opts)?;
+        let (rows, avg) = run_tasks(&mut prep3, opts)?;
+        for (name, r) in rows {
+            println!("  {name:12} {:6.2}%  ({}/{})", r.accuracy * 100.0, r.correct, r.total);
+        }
+        println!("  {:12} {:6.2}%", "average", avg * 100.0);
+    }
+    Ok(())
+}
+
+fn serve_eval(args: &Args, requests: usize, alpha: f32) -> Result<()> {
+    let store = ArtifactStore::discover(artifacts_dir(args).as_deref())?;
+    store.validate()?;
+    let weights = store.load_weights()?;
+    let cfg = weights.config;
+    let coordinator = EvalCoordinator::start(
+        store,
+        cfg,
+        vec![("w16".to_string(), weights.flat.clone())],
+        CoordinatorConfig::default(),
+    );
+    let mut gen = CorpusGen::new(cfg.vocab, 0xEEE);
+    let seqs: Vec<Vec<u32>> = (0..requests).map(|_| gen.sequence(cfg.seq_len)).collect();
+
+    let t0 = std::time::Instant::now();
+    let (fp_nll, _) = coordinator.evaluate_stream(seqs.clone(), ActScheme::Fp, "w16")?;
+    let (cq_nll, kfrac) = coordinator.evaluate_stream(
+        seqs.clone(),
+        ActScheme::CrossQuant { alpha, qmax: 127.0 },
+        "w16",
+    )?;
+    let (pt_nll, pt_kfrac) = coordinator.evaluate_stream(
+        seqs,
+        ActScheme::CrossQuant { alpha: 1.0, qmax: 127.0 },
+        "w16",
+    )?;
+    let dt = t0.elapsed();
+
+    println!("PJRT coordinator eval over {requests} sequences ({dt:?}):");
+    println!("  FP          ppl {:.3}", fp_nll.exp());
+    println!("  CrossQuant  ppl {:.3}  (kernel {:.2}%)", cq_nll.exp(), kfrac * 100.0);
+    println!("  Per-token   ppl {:.3}  (kernel {:.2}%)", pt_nll.exp(), pt_kfrac * 100.0);
+    println!("  metrics: {}", coordinator.metrics.summary());
+    Ok(())
+}
+
+fn serve(args: &Args, addr: &str) -> Result<()> {
+    use crossquant::coordinator::EvalServer;
+    let store = ArtifactStore::discover(artifacts_dir(args).as_deref())?;
+    store.validate()?;
+    let weights = store.load_weights()?;
+    let cfg = weights.config;
+
+    // register the standard weight variants so clients can pick a precision
+    let mut sets = vec![("w16".to_string(), weights.flat.clone())];
+    for (name, scheme) in [
+        ("w8", crossquant::model::quantized::WeightScheme::PerChannel(Bits::Int8)),
+        ("w4g128", crossquant::model::quantized::WeightScheme::GroupWise(Bits::Int4, 128)),
+    ] {
+        let mut w = weights.clone();
+        crossquant::model::quantized::quantize_weights(&mut w, scheme)?;
+        sets.push((name.to_string(), w.flat));
+    }
+
+    let coordinator = EvalCoordinator::start(store, cfg, sets, CoordinatorConfig::default());
+    let listener = std::net::TcpListener::bind(addr)?;
+    println!("serving quantized-LM evaluation on {addr}");
+    println!("  weight sets: w16, w8, w4g128 — protocol: one JSON per line");
+    println!("  try: echo '{{\"tokens\": [1,2,3,4,5], \"scheme\": \"crossquant\", \"weight_set\": \"w8\"}}' | nc {addr}");
+    EvalServer::new(coordinator).serve(listener)
+}
+
+fn reproduce(args: &Args, opts: &ExpOpts, id: &str, json: Option<&Path>) -> Result<()> {
+    let base = load_weights(args, opts.seed)?;
+    let mut tables: Vec<Table> = Vec::new();
+    let ids: Vec<&str> = if id == "all" {
+        vec![
+            "fig1", "fig4", "fig5", "fig6", "fig7", "fig8", "fig9", "tab1", "tab2", "tab3",
+            "tab4", "tab5", "appendixA", "weight-kernel", "correlation",
+        ]
+    } else {
+        vec![id]
+    };
+    for id in ids {
+        let before = tables.len();
+        match id {
+            "fig1" => tables.push(exp::fig1::run(&base, Bits::Int8, opts)?),
+            "fig9" => tables.push(exp::fig1::run(&base, Bits::Int4, opts)?),
+            "fig4" => {
+                tables.push(exp::fig4::run(&base, Family::Opt, opts)?);
+                tables.push(exp::fig4::run(&base, Family::Llama, opts)?);
+            }
+            "fig5" => {
+                for family in [Family::Opt, Family::Llama] {
+                    tables.push(exp::fig5::run(&base, family, Setting::w8a8(), opts)?);
+                    tables.push(exp::fig5::run(&base, family, Setting::w4a8_g128(), opts)?);
+                }
+            }
+            "fig6" | "fig7" => {
+                let family = if id == "fig6" { Family::Opt } else { Family::Llama };
+                let r = exp::fig67::run(&base, family, opts)?;
+                for (name, th) in &r.thresholds {
+                    match th {
+                        Some(t) => println!("  threshold[{name}] ≈ {:.1}% (5% ppl tol)", t * 100.0),
+                        None => println!("  threshold[{name}]: none within sweep"),
+                    }
+                }
+                tables.push(r.table);
+            }
+            "fig8" => tables.push(exp::fig8::run(&base, opts)?),
+            "tab1" => tables.push(exp::tab1::run(&base, opts)?),
+            "tab2" => tables.push(exp::tab2::run(&base, opts)?),
+            "tab3" => tables.extend(exp::tab3::run(&base, &["opt-30b", "opt-66b"], false, opts)?),
+            "tab4" => tables.push(exp::tab4::run(&base, opts)?),
+            "appendixA" | "appa" => tables.push(exp::appendix_a::run(&base, opts)?),
+            "correlation" => tables.push(exp::correlation::run(&base, opts)?),
+            "weight-kernel" | "appb" => tables.push(exp::weight_kernel::run(&base, opts)?),
+            "tab5" => tables.extend(exp::tab3::run(
+                &base,
+                &["opt-1.3b", "opt-2.3b", "opt-6.7b", "opt-13b"],
+                true,
+                opts,
+            )?),
+            other => bail!("unknown artefact id {other}"),
+        }
+        for t in &tables[before..] {
+            t.print();
+            println!();
+        }
+    }
+    if let Some(path) = json {
+        let all = Json::arr(tables.iter().map(|t| t.to_json()).collect());
+        std::fs::write(path, all.render_pretty())?;
+        println!("wrote {}", path.display());
+    }
+    Ok(())
+}

@@ -1,0 +1,60 @@
+//! Model configuration — mirror of python/compile/common.py::ModelConfig.
+//!
+//! The numbers live in artifacts/manifest.json (written at train time);
+//! rust never hard-codes them, so retraining with a different size is a
+//! pure `make artifacts` change.
+
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct ModelConfig {
+    pub vocab: usize,
+    pub d_model: usize,
+    pub n_layers: usize,
+    pub n_heads: usize,
+    pub d_ff: usize,
+    pub seq_len: usize,
+    /// Fixed batch of the AOT-lowered eval HLOs.
+    pub eval_batch: usize,
+}
+
+impl ModelConfig {
+    pub fn head_dim(&self) -> usize {
+        self.d_model / self.n_heads
+    }
+
+    /// The default build-time config (kept in sync with common.py; the
+    /// manifest is authoritative at run time).
+    pub fn default_build() -> Self {
+        ModelConfig {
+            vocab: 512,
+            d_model: 128,
+            n_layers: 4,
+            n_heads: 4,
+            d_ff: 512,
+            seq_len: 96,
+            eval_batch: 8,
+        }
+    }
+
+    /// Quantization sites per forward pass (ln1, ctx, ln2, gelu per layer,
+    /// plus the final lnf site) — used to size per-site transform tables.
+    pub fn n_quant_sites(&self) -> usize {
+        4 * self.n_layers + 1
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn head_dim_divides() {
+        let c = ModelConfig::default_build();
+        assert_eq!(c.head_dim() * c.n_heads, c.d_model);
+    }
+
+    #[test]
+    fn site_count() {
+        let c = ModelConfig::default_build();
+        assert_eq!(c.n_quant_sites(), 17);
+    }
+}

@@ -1,0 +1,407 @@
+//! Native rust forward pass of the tiny GPT — the fast evaluation path for
+//! large scheme/profile sweeps (the PJRT artifact path carries the e2e
+//! examples and cross-checks this implementation to ≤1e-3 NLL; see
+//! rust/tests/pjrt_integration.rs).
+//!
+//! Math mirrors python/compile/model.py exactly: pre-LN blocks, causal
+//! softmax attention, tanh-approximated GELU (jax.nn.gelu default), LN
+//! eps 1e-5, per-position NLL against the shifted targets.
+
+use anyhow::Result;
+
+use super::weights::Weights;
+use crate::quant::{remove_kernel::RemoveKernel, ActQuantizer};
+use crate::tensor::Matrix;
+
+/// An activation-site transform (quantizer, remove-kernel, smoothing…)
+/// applied at every quantization site of the forward pass. `site` is the
+/// global site index (0..cfg.n_quant_sites()) so per-site calibrated
+/// transforms (SmoothQuant) know where they are.
+pub trait ActSite {
+    fn apply(&mut self, site: usize, x: Matrix) -> Matrix;
+}
+
+/// FP forward — no transformation.
+pub struct IdentitySite;
+
+impl ActSite for IdentitySite {
+    fn apply(&mut self, _site: usize, x: Matrix) -> Matrix {
+        x
+    }
+}
+
+/// Fake-quantize every site with one scheme; accumulates the observed
+/// quantization-kernel fraction (Figure 4's measured-on-model statistic).
+pub struct QuantSite<Q: ActQuantizer> {
+    pub quant: Q,
+    kernel_elems: f64,
+    total_elems: f64,
+}
+
+impl<Q: ActQuantizer> QuantSite<Q> {
+    pub fn new(quant: Q) -> Self {
+        QuantSite { quant, kernel_elems: 0.0, total_elems: 0.0 }
+    }
+
+    pub fn kernel_fraction(&self) -> f32 {
+        if self.total_elems == 0.0 {
+            0.0
+        } else {
+            (self.kernel_elems / self.total_elems) as f32
+        }
+    }
+}
+
+impl<Q: ActQuantizer> ActSite for QuantSite<Q> {
+    fn apply(&mut self, _site: usize, x: Matrix) -> Matrix {
+        let frac = crate::analysis::kernel_fraction(&x, &self.quant.delta_field(&x));
+        self.kernel_elems += (frac as f64) * x.len() as f64;
+        self.total_elems += x.len() as f64;
+        self.quant.fake_quant(&x)
+    }
+}
+
+/// Remove-kernel ablation site; accumulates the removed fraction.
+pub struct RemoveKernelSite {
+    pub rk: RemoveKernel,
+    removed: f64,
+    total: f64,
+}
+
+impl RemoveKernelSite {
+    pub fn new(rk: RemoveKernel) -> Self {
+        RemoveKernelSite { rk, removed: 0.0, total: 0.0 }
+    }
+
+    pub fn removed_fraction(&self) -> f32 {
+        if self.total == 0.0 { 0.0 } else { (self.removed / self.total) as f32 }
+    }
+}
+
+impl ActSite for RemoveKernelSite {
+    fn apply(&mut self, _site: usize, x: Matrix) -> Matrix {
+        self.removed += self.rk.removed_fraction(&x) as f64 * x.len() as f64;
+        self.total += x.len() as f64;
+        self.rk.apply(&x)
+    }
+}
+
+/// Per-site column smoothing followed by an inner quantizer — the
+/// SmoothQuant evaluation path (weights must already be folded via
+/// `quantized::apply_smoothquant`). Sites without scales pass through to
+/// the inner quantizer unsmoothed.
+pub struct SmoothedQuantSite<Q: ActQuantizer> {
+    pub quant: Q,
+    /// scales[site] = per-channel smoothing vector (empty = unsmoothed).
+    pub scales: Vec<Vec<f32>>,
+}
+
+impl<Q: ActQuantizer> ActSite for SmoothedQuantSite<Q> {
+    fn apply(&mut self, site: usize, x: Matrix) -> Matrix {
+        let x = if site < self.scales.len() && !self.scales[site].is_empty() {
+            let s = &self.scales[site];
+            let mut out = x;
+            for i in 0..out.rows {
+                for (v, &sj) in out.row_mut(i).iter_mut().zip(s) {
+                    *v /= sj;
+                }
+            }
+            out
+        } else {
+            x
+        };
+        self.quant.fake_quant(&x)
+    }
+}
+
+/// Capture activations at LN-fed sites (calibration / Figure-4 analysis).
+pub struct CaptureSite {
+    pub captured: Vec<(usize, Matrix)>,
+    /// Only capture these site ids (empty = all).
+    pub only: Vec<usize>,
+}
+
+impl CaptureSite {
+    pub fn all() -> Self {
+        CaptureSite { captured: Vec::new(), only: Vec::new() }
+    }
+}
+
+impl ActSite for CaptureSite {
+    fn apply(&mut self, site: usize, x: Matrix) -> Matrix {
+        if self.only.is_empty() || self.only.contains(&site) {
+            self.captured.push((site, x.clone()));
+        }
+        x
+    }
+}
+
+/// Per-layer tensors, extracted once at construction.
+struct LayerParams {
+    ln1_g: Matrix,
+    ln1_b: Matrix,
+    wq: Matrix,
+    wk: Matrix,
+    wv: Matrix,
+    wo: Matrix,
+    ln2_g: Matrix,
+    ln2_b: Matrix,
+    w1: Matrix,
+    w2: Matrix,
+}
+
+/// The native model: weight views pre-extracted for the hot loop (the
+/// flat [`Weights`] is kept for the PJRT path and config access).
+pub struct NativeModel {
+    pub weights: Weights,
+    tok_emb: Matrix,
+    pos_emb: Matrix,
+    layers: Vec<LayerParams>,
+    lnf_g: Matrix,
+    lnf_b: Matrix,
+    w_out: Matrix,
+}
+
+impl NativeModel {
+    pub fn new(weights: Weights) -> Self {
+        let get = |n: &str| weights.get(n).expect("manifest-complete weights");
+        let layers = (0..weights.config.n_layers)
+            .map(|l| {
+                let p = |n: &str| get(&format!("layer{l}.{n}"));
+                LayerParams {
+                    ln1_g: p("ln1_g"),
+                    ln1_b: p("ln1_b"),
+                    wq: p("wq"),
+                    wk: p("wk"),
+                    wv: p("wv"),
+                    wo: p("wo"),
+                    ln2_g: p("ln2_g"),
+                    ln2_b: p("ln2_b"),
+                    w1: p("w1"),
+                    w2: p("w2"),
+                }
+            })
+            .collect();
+        NativeModel {
+            tok_emb: get("tok_emb"),
+            pos_emb: get("pos_emb"),
+            layers,
+            lnf_g: get("lnf_g"),
+            lnf_b: get("lnf_b"),
+            w_out: get("w_out"),
+            weights,
+        }
+    }
+
+    /// Forward one sequence, returning the log-probability distribution at
+    /// the final position (greedy-prediction tasks).
+    pub fn forward_last_logprobs(&self, tokens: &[u32], site: &mut dyn ActSite) -> Result<Vec<f32>> {
+        let logits = self.forward_logits(tokens, site)?;
+        let last = logits.row(logits.rows - 1);
+        let max = last.iter().fold(f32::NEG_INFINITY, |m, &v| m.max(v));
+        let logsum = max + last.iter().map(|&v| (v - max).exp()).sum::<f32>().ln();
+        Ok(last.iter().map(|&v| v - logsum).collect())
+    }
+
+    /// Forward one sequence, returning per-position NLL (len = S−1).
+    /// `site` is invoked at every quantization site in forward order.
+    pub fn forward_nll(&self, tokens: &[u32], site: &mut dyn ActSite) -> Result<Vec<f32>> {
+        let logits = self.forward_logits(tokens, site)?;
+        let s = tokens.len();
+        let mut nll = Vec::with_capacity(s - 1);
+        for i in 0..s - 1 {
+            let row = logits.row(i);
+            let max = row.iter().fold(f32::NEG_INFINITY, |m, &v| m.max(v));
+            let logsum = max + row.iter().map(|&v| (v - max).exp()).sum::<f32>().ln();
+            nll.push(logsum - row[tokens[i + 1] as usize]);
+        }
+        Ok(nll)
+    }
+
+    /// Full-logits forward (S × vocab).
+    pub fn forward_logits(&self, tokens: &[u32], site: &mut dyn ActSite) -> Result<Matrix> {
+        let cfg = self.weights.config;
+        let s = tokens.len();
+        let d = cfg.d_model;
+        anyhow::ensure!(s >= 2 && s <= cfg.seq_len, "sequence length {s} out of range");
+
+        let mut x = Matrix::zeros(s, d);
+        for (i, &t) in tokens.iter().enumerate() {
+            for j in 0..d {
+                x.set(i, j, self.tok_emb.get(t as usize, j) + self.pos_emb.get(i, j));
+            }
+        }
+
+        let mut site_idx = 0usize;
+        for layer in &self.layers {
+            // --- attention block ---
+            let h = layer_norm(&x, &layer.ln1_g, &layer.ln1_b);
+            let hq = site.apply(site_idx, h);
+            site_idx += 1;
+            let q = hq.matmul(&layer.wq);
+            let k = hq.matmul(&layer.wk);
+            let v = hq.matmul(&layer.wv);
+            let ctx = causal_attention(&q, &k, &v, cfg.n_heads);
+            let ctxq = site.apply(site_idx, ctx);
+            site_idx += 1;
+            let attn_out = ctxq.matmul(&layer.wo);
+            add_inplace(&mut x, &attn_out);
+
+            // --- MLP block ---
+            let h = layer_norm(&x, &layer.ln2_g, &layer.ln2_b);
+            let hq = site.apply(site_idx, h);
+            site_idx += 1;
+            let mut hh = hq.matmul(&layer.w1);
+            gelu_inplace(&mut hh);
+            let hhq = site.apply(site_idx, hh);
+            site_idx += 1;
+            let mlp_out = hhq.matmul(&layer.w2);
+            add_inplace(&mut x, &mlp_out);
+        }
+
+        let h = layer_norm(&x, &self.lnf_g, &self.lnf_b);
+        let hq = site.apply(site_idx, h);
+        Ok(hq.matmul(&self.w_out))
+    }
+}
+
+fn layer_norm(x: &Matrix, g: &Matrix, b: &Matrix) -> Matrix {
+    let mut out = Matrix::zeros(x.rows, x.cols);
+    let n = x.cols as f32;
+    for i in 0..x.rows {
+        let row = x.row(i);
+        let mu = row.iter().sum::<f32>() / n;
+        let var = row.iter().map(|&v| (v - mu) * (v - mu)).sum::<f32>() / n;
+        let inv = 1.0 / (var + 1e-5).sqrt();
+        let dst = out.row_mut(i);
+        for (j, (&v, o)) in row.iter().zip(dst.iter_mut()).enumerate() {
+            *o = (v - mu) * inv * g.get(0, j) + b.get(0, j);
+        }
+    }
+    out
+}
+
+fn causal_attention(q: &Matrix, k: &Matrix, v: &Matrix, n_heads: usize) -> Matrix {
+    let s = q.rows;
+    let d = q.cols;
+    let hd = d / n_heads;
+    let scale = 1.0 / (hd as f32).sqrt();
+    let mut out = Matrix::zeros(s, d);
+    let mut scores = vec![0.0f32; s];
+    for h in 0..n_heads {
+        let off = h * hd;
+        for i in 0..s {
+            // scores over keys 0..=i
+            for (j, sc) in scores.iter_mut().enumerate().take(i + 1) {
+                let mut dot = 0.0f32;
+                for a in 0..hd {
+                    dot += q.get(i, off + a) * k.get(j, off + a);
+                }
+                *sc = dot * scale;
+            }
+            let max = scores[..=i].iter().fold(f32::NEG_INFINITY, |m, &v| m.max(v));
+            let mut denom = 0.0f32;
+            for sc in scores.iter_mut().take(i + 1) {
+                *sc = (*sc - max).exp();
+                denom += *sc;
+            }
+            for a in 0..hd {
+                let mut acc = 0.0f32;
+                for (j, &sc) in scores.iter().enumerate().take(i + 1) {
+                    acc += sc * v.get(j, off + a);
+                }
+                out.set(i, off + a, acc / denom);
+            }
+        }
+    }
+    out
+}
+
+/// jax.nn.gelu default (approximate=True): tanh approximation.
+fn gelu_inplace(x: &mut Matrix) {
+    const C: f32 = 0.7978845608; // sqrt(2/π)
+    for v in x.data.iter_mut() {
+        let u = *v;
+        *v = 0.5 * u * (1.0 + (C * (u + 0.044715 * u * u * u)).tanh());
+    }
+}
+
+fn add_inplace(x: &mut Matrix, y: &Matrix) {
+    for (a, b) in x.data.iter_mut().zip(&y.data) {
+        *a += b;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::config::ModelConfig;
+    use crate::model::weights::synthetic_weights as test_weights;
+    use crate::quant::{crossquant::CrossQuant, Bits};
+
+    fn tiny() -> NativeModel {
+        let cfg = ModelConfig { vocab: 32, d_model: 16, n_layers: 2, n_heads: 2, d_ff: 32, seq_len: 12, eval_batch: 2 };
+        NativeModel::new(test_weights(cfg, 11))
+    }
+
+    #[test]
+    fn nll_shape_and_range() {
+        let m = tiny();
+        let toks: Vec<u32> = (0..12).map(|i| (i * 7 % 32) as u32).collect();
+        let nll = m.forward_nll(&toks, &mut IdentitySite).unwrap();
+        assert_eq!(nll.len(), 11);
+        // random model ⇒ near-uniform ⇒ nll ≈ ln(32) ≈ 3.47
+        let mean = nll.iter().sum::<f32>() / nll.len() as f32;
+        assert!((mean - 32.0f32.ln()).abs() < 1.0, "mean {mean}");
+    }
+
+    #[test]
+    fn causality_native() {
+        let m = tiny();
+        let t1: Vec<u32> = (0..12).map(|i| (i * 5 % 32) as u32).collect();
+        let mut t2 = t1.clone();
+        t2[11] = (t2[11] + 9) % 32;
+        let n1 = m.forward_nll(&t1, &mut IdentitySite).unwrap();
+        let n2 = m.forward_nll(&t2, &mut IdentitySite).unwrap();
+        for i in 0..10 {
+            assert!((n1[i] - n2[i]).abs() < 1e-5, "pos {i}");
+        }
+        assert!((n1[10] - n2[10]).abs() > 1e-7); // last target changed
+    }
+
+    #[test]
+    fn quant_site_accumulates_kernel() {
+        let m = tiny();
+        let toks: Vec<u32> = (0..12).map(|i| (i % 32) as u32).collect();
+        let mut site = QuantSite::new(CrossQuant::new(0.15, Bits::Int4));
+        m.forward_nll(&toks, &mut site).unwrap();
+        let f = site.kernel_fraction();
+        assert!(f > 0.0 && f < 1.0, "kernel fraction {f}");
+    }
+
+    #[test]
+    fn capture_site_sees_all_sites() {
+        let m = tiny();
+        let toks: Vec<u32> = (0..12).map(|i| (i % 32) as u32).collect();
+        let mut cap = CaptureSite::all();
+        m.forward_nll(&toks, &mut cap).unwrap();
+        assert_eq!(cap.captured.len(), m.weights.config.n_quant_sites());
+    }
+
+    #[test]
+    fn quantization_increases_nll_on_average() {
+        let m = tiny();
+        let mut fp_sum = 0.0f32;
+        let mut q_sum = 0.0f32;
+        for seed in 0..8u32 {
+            let toks: Vec<u32> = (0..12).map(|i| ((i as u32 * 7 + seed * 3) % 32)).collect();
+            let fp = m.forward_nll(&toks, &mut IdentitySite).unwrap();
+            let mut site = QuantSite::new(CrossQuant::new(0.15, Bits::Int4));
+            let q = m.forward_nll(&toks, &mut site).unwrap();
+            fp_sum += fp.iter().sum::<f32>();
+            q_sum += q.iter().sum::<f32>();
+        }
+        // INT4 on a random model: outputs differ measurably
+        assert!((q_sum - fp_sum).abs() > 1e-4);
+    }
+}

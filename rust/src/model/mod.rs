@@ -1,0 +1,14 @@
+//! The tiny-GPT model substrate on the rust side: manifest/weights loading,
+//! weight-space transforms (quantization, outlier injection, smoothing),
+//! and a native forward pass cross-checked against the PJRT artifacts.
+
+pub mod config;
+pub mod forward;
+pub mod qforward;
+pub mod quantized;
+pub mod weights;
+
+pub use config::ModelConfig;
+pub use forward::{ActSite, IdentitySite, NativeModel, QuantSite, RemoveKernelSite};
+pub use qforward::{QuantPath, QuantizedModel};
+pub use weights::Weights;

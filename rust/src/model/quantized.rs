@@ -1,0 +1,243 @@
+//! Weight-space transforms applied to the loaded flat weights before they
+//! are fed to either the native forward pass or the AOT HLOs.
+//!
+//! * [`quantize_weights`] — fake-quantize every linear weight (per-channel,
+//!   group-wise, or CrossQuant-on-weights per Appendix B.1);
+//! * [`inject_profile`] — function-preserving outlier injection that makes
+//!   the tiny LM's activations exhibit a [`FamilyProfile`]'s statistics
+//!   (LayerNorm gains scaled up on the profile's outlier channels, the
+//!   consuming linear rows scaled down by the same factor);
+//! * [`apply_smoothquant`] — fold calibrated SmoothQuant scales into the
+//!   ln gains and consuming weights (the standard deployment trick: the
+//!   per-channel division of activations is absorbed by the preceding
+//!   LayerNorm's affine, so the runtime graph is unchanged).
+
+use anyhow::Result;
+
+use super::weights::Weights;
+use crate::quant::{
+    crossquant::CrossQuant, per_channel::GroupWise, per_channel::PerChannel, ActQuantizer, Bits,
+};
+use crate::activations::FamilyProfile;
+
+/// Which weight quantizer to apply to the linear weights.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub enum WeightScheme {
+    /// FP16/FP32 — leave untouched (the paper's "W16").
+    None,
+    /// Per-output-channel, eq. (2) — the paper's default for CrossQuant rows.
+    PerChannel(Bits),
+    /// Group-wise with group size g (the W4-g128 rows).
+    GroupWise(Bits, usize),
+    /// CrossQuant applied to weights with exponent α_W (Appendix B.1).
+    CrossQuant(Bits, f32),
+}
+
+impl WeightScheme {
+    pub fn label(&self) -> String {
+        match self {
+            WeightScheme::None => "W16".into(),
+            WeightScheme::PerChannel(Bits::Int8) => "W8".into(),
+            WeightScheme::PerChannel(Bits::Int4) => "W4".into(),
+            WeightScheme::PerChannel(b) => format!("W{b}"),
+            WeightScheme::GroupWise(Bits::Int4, g) => format!("W4-g{g}"),
+            WeightScheme::GroupWise(b, g) => format!("W{b}-g{g}"),
+            WeightScheme::CrossQuant(Bits::Int8, a) => format!("W8-cq(α={a})"),
+            WeightScheme::CrossQuant(Bits::Int4, a) => format!("W4-cq(α={a})"),
+            WeightScheme::CrossQuant(b, a) => format!("W{b}-cq(α={a})"),
+        }
+    }
+}
+
+/// Fake-quantize all linear weights in place.
+pub fn quantize_weights(w: &mut Weights, scheme: WeightScheme) -> Result<()> {
+    let names = w.linear_names();
+    for name in names {
+        let m = w.get(&name)?;
+        let q = match scheme {
+            WeightScheme::None => continue,
+            WeightScheme::PerChannel(bits) => PerChannel::new(bits).fake_quant(&m),
+            WeightScheme::GroupWise(bits, g) => GroupWise::new(bits, g).fake_quant(&m),
+            WeightScheme::CrossQuant(bits, alpha) => {
+                CrossQuant::weight_mode(alpha, bits).fake_quant(&m)
+            }
+        };
+        w.set(&name, &q)?;
+    }
+    Ok(())
+}
+
+/// Inject a family profile's outlier channels into the model,
+/// function-preservingly:
+///
+/// for each layer, scale `outlier_channels` entries of ln1_g/ln2_g (and the
+/// matching ln_b entries) by `outlier_scale`, and divide the corresponding
+/// *rows* of the consuming linear weights (wq/wk/wv for ln1, w1 for ln2) by
+/// the same factor. Post-LN activations then carry systematic outlier
+/// channels — exactly the OPT phenomenon — while the FP forward function is
+/// unchanged (quantizers, of course, see the difference).
+pub fn inject_profile(w: &mut Weights, profile: &FamilyProfile) -> Result<()> {
+    if profile.outlier_channels == 0 || profile.outlier_scale <= 1.0 {
+        return Ok(());
+    }
+    let cfg = w.config;
+    let d = cfg.d_model;
+    // The tiny LM spreads each site's information across far fewer channels
+    // than a 7B–70B model, so matching the paper's *measured* kernel
+    // regimes (Figure 4) requires a denser, stronger injection than the raw
+    // profile statistics — calibrated via `repro analyze` (DESIGN.md §4).
+    let n_out = (profile.outlier_channels * 3).clamp(1, d / 8);
+    let channels: Vec<usize> =
+        (0..n_out).map(|k| (k * d) / n_out.max(1) + d / (2 * n_out.max(1))).collect();
+    let s = profile.outlier_scale * 2.0;
+
+    for l in 0..cfg.n_layers {
+        // LayerNorm-fed sites: scale the LN affine, compensate consumers.
+        for (ln, consumers) in [
+            (format!("layer{l}.ln1_g"), vec![format!("layer{l}.wq"), format!("layer{l}.wk"), format!("layer{l}.wv")]),
+            (format!("layer{l}.ln2_g"), vec![format!("layer{l}.w1")]),
+        ] {
+            scale_ln_site(w, &ln, &consumers, &channels, s)?;
+        }
+        // Attention-context site: scale wv output channels (the context is
+        // linear in V), divide the matching wo rows — function-preserving,
+        // and it puts outliers into the ctx quantization site too.
+        let mut wv = w.get(&format!("layer{l}.wv"))?;
+        let mut wo = w.get(&format!("layer{l}.wo"))?;
+        for &c in &channels {
+            for r in 0..wv.rows {
+                let v = wv.get(r, c);
+                wv.set(r, c, v * s);
+            }
+            for v in wo.row_mut(c) {
+                *v /= s;
+            }
+        }
+        w.set(&format!("layer{l}.wv"), &wv)?;
+        w.set(&format!("layer{l}.wo"), &wo)?;
+    }
+    // Final LN site feeding the output head.
+    scale_ln_site(w, "lnf_g", &["w_out".to_string()], &channels, s)?;
+    Ok(())
+}
+
+fn scale_ln_site(
+    w: &mut Weights,
+    ln: &str,
+    consumers: &[String],
+    channels: &[usize],
+    s: f32,
+) -> Result<()> {
+    let mut g = w.get(ln)?;
+    let mut b = w.get(&ln.replace("_g", "_b"))?;
+    for &c in channels {
+        g.set(0, c, g.get(0, c) * s);
+        b.set(0, c, b.get(0, c) * s);
+    }
+    w.set(ln, &g)?;
+    w.set(&ln.replace("_g", "_b"), &b)?;
+    for cons in consumers {
+        let mut m = w.get(cons)?;
+        for &c in channels {
+            for v in m.row_mut(c) {
+                *v /= s;
+            }
+        }
+        w.set(cons, &m)?;
+    }
+    Ok(())
+}
+
+/// Fold SmoothQuant smoothing scales (one vector per smoothable site) into
+/// the LN affine feeding the site and the consuming weight rows. Only the
+/// LN-fed sites (ln1 → wq/wk/wv, ln2 → w1, lnf → w_out) are smoothable —
+/// matching SmoothQuant's deployment, which smooths exactly the
+/// LayerNorm-to-linear edges.
+pub fn apply_smoothquant(w: &mut Weights, site_scales: &[(String, Vec<f32>)]) -> Result<()> {
+    for (ln_name, scales) in site_scales {
+        let consumers: Vec<String> = if ln_name.contains("ln1") {
+            let l = ln_name.trim_start_matches("layer").split('.').next().unwrap();
+            vec![format!("layer{l}.wq"), format!("layer{l}.wk"), format!("layer{l}.wv")]
+        } else if ln_name.contains("ln2") {
+            let l = ln_name.trim_start_matches("layer").split('.').next().unwrap();
+            vec![format!("layer{l}.w1")]
+        } else {
+            vec!["w_out".to_string()]
+        };
+        let mut g = w.get(ln_name)?;
+        let mut b = w.get(&ln_name.replace("_g", "_b"))?;
+        for (c, &s) in scales.iter().enumerate() {
+            g.set(0, c, g.get(0, c) / s);
+            b.set(0, c, b.get(0, c) / s);
+        }
+        w.set(ln_name, &g)?;
+        w.set(&ln_name.replace("_g", "_b"), &b)?;
+        for cons in consumers {
+            let mut m = w.get(&cons)?;
+            for (c, &s) in scales.iter().enumerate() {
+                for v in m.row_mut(c) {
+                    *v *= s;
+                }
+            }
+            w.set(&cons, &m)?;
+        }
+    }
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::config::ModelConfig;
+    use crate::model::weights::synthetic_weights as test_weights;
+
+    fn cfg() -> ModelConfig {
+        ModelConfig { vocab: 32, d_model: 16, n_layers: 2, n_heads: 2, d_ff: 32, seq_len: 8, eval_batch: 2 }
+    }
+
+    #[test]
+    fn quantize_weights_changes_linears_only() {
+        let mut w = test_weights(cfg(), 3);
+        let emb_before = w.get("tok_emb").unwrap();
+        let wq_before = w.get("layer0.wq").unwrap();
+        quantize_weights(&mut w, WeightScheme::PerChannel(Bits::Int4)).unwrap();
+        assert_eq!(w.get("tok_emb").unwrap(), emb_before);
+        assert_ne!(w.get("layer0.wq").unwrap(), wq_before);
+    }
+
+    #[test]
+    fn w8_error_smaller_than_w4() {
+        let base = test_weights(cfg(), 4);
+        let err = |scheme| {
+            let mut w = base.clone();
+            quantize_weights(&mut w, scheme).unwrap();
+            base.flat
+                .iter()
+                .zip(&w.flat)
+                .map(|(a, b)| ((a - b) * (a - b)) as f64)
+                .sum::<f64>()
+                .sqrt()
+        };
+        assert!(err(WeightScheme::PerChannel(Bits::Int8)) < err(WeightScheme::PerChannel(Bits::Int4)));
+    }
+
+    #[test]
+    fn inject_profile_scales_gains() {
+        let mut w = test_weights(cfg(), 5);
+        let g_before = w.get("layer0.ln1_g").unwrap();
+        let prof = FamilyProfile::new("test", crate::activations::Family::Opt, 13.0, 2, 50.0, 0.14, 0.0, 0.02, 0.0);
+        inject_profile(&mut w, &prof).unwrap();
+        let g_after = w.get("layer0.ln1_g").unwrap();
+        let grown = (0..16).filter(|&c| g_after.get(0, c) > g_before.get(0, c) * 10.0).count();
+        assert_eq!(grown, 2);
+    }
+
+    #[test]
+    fn smoothquant_fold_shapes() {
+        let mut w = test_weights(cfg(), 6);
+        let scales = vec![(String::from("layer0.ln1_g"), vec![2.0f32; 16])];
+        apply_smoothquant(&mut w, &scales).unwrap();
+        // gains divided by 2, consuming rows multiplied by 2
+        assert!((w.get("layer0.ln1_g").unwrap().get(0, 0) - 0.5).abs() < 1e-6);
+    }
+}

@@ -1,0 +1,260 @@
+//! weights.bin + manifest.json loader.
+//!
+//! The flat little-endian f32 weight vector and its layout table are the
+//! contract between the python compile path and the rust runtime: the AOT
+//! HLOs take the flat vector as a single parameter, and every rust-side
+//! weight transform edits it in place through named 2-D views.
+
+use std::collections::HashMap;
+use std::path::Path;
+
+use anyhow::{anyhow, ensure, Context, Result};
+
+use super::config::ModelConfig;
+use crate::tensor::Matrix;
+use crate::util::Json;
+
+#[derive(Clone, Debug)]
+pub struct ParamEntry {
+    pub name: String,
+    pub shape: Vec<usize>,
+    pub offset: usize,
+    pub size: usize,
+}
+
+#[derive(Clone, Debug)]
+pub struct TrainInfo {
+    pub final_loss: f64,
+    pub final_ppl: f64,
+    pub steps: usize,
+}
+
+#[derive(Clone, Debug)]
+pub struct Manifest {
+    pub config: ModelConfig,
+    pub params: Vec<ParamEntry>,
+    pub total_params: usize,
+    pub train: Option<TrainInfo>,
+    /// Names of the AOT HLO artifacts recorded by aot.py.
+    pub artifacts: Vec<String>,
+}
+
+impl Manifest {
+    pub fn parse(text: &str) -> Result<Manifest> {
+        let v = Json::parse(text).context("parsing manifest.json")?;
+        let cfg = v.req("config")?;
+        let usize_of = |j: &Json, k: &str| -> Result<usize> {
+            j.req(k)?.as_usize().ok_or_else(|| anyhow!("'{k}' not a number"))
+        };
+        let config = ModelConfig {
+            vocab: usize_of(cfg, "vocab")?,
+            d_model: usize_of(cfg, "d_model")?,
+            n_layers: usize_of(cfg, "n_layers")?,
+            n_heads: usize_of(cfg, "n_heads")?,
+            d_ff: usize_of(cfg, "d_ff")?,
+            seq_len: usize_of(cfg, "seq_len")?,
+            eval_batch: usize_of(cfg, "eval_batch")?,
+        };
+        let params = v
+            .req("params")?
+            .as_arr()
+            .ok_or_else(|| anyhow!("'params' not an array"))?
+            .iter()
+            .map(|p| -> Result<ParamEntry> {
+                Ok(ParamEntry {
+                    name: p.req("name")?.as_str().unwrap_or_default().to_string(),
+                    shape: p
+                        .req("shape")?
+                        .as_arr()
+                        .unwrap_or(&[])
+                        .iter()
+                        .filter_map(|s| s.as_usize())
+                        .collect(),
+                    offset: usize_of(p, "offset")?,
+                    size: usize_of(p, "size")?,
+                })
+            })
+            .collect::<Result<Vec<_>>>()?;
+        let train = v.get("train").map(|t| TrainInfo {
+            final_loss: t.get("final_loss").and_then(|x| x.as_f64()).unwrap_or(f64::NAN),
+            final_ppl: t.get("final_ppl").and_then(|x| x.as_f64()).unwrap_or(f64::NAN),
+            steps: t.get("steps").and_then(|x| x.as_usize()).unwrap_or(0),
+        });
+        let artifacts = match v.get("artifacts") {
+            Some(Json::Obj(m)) => m.keys().cloned().collect(),
+            _ => Vec::new(),
+        };
+        Ok(Manifest { config, params, total_params: usize_of(&v, "total_params")?, train, artifacts })
+    }
+}
+
+/// The loaded model: flat weights + layout.
+#[derive(Clone, Debug)]
+pub struct Weights {
+    pub config: ModelConfig,
+    pub manifest: Manifest,
+    pub flat: Vec<f32>,
+    index: HashMap<String, (usize, Vec<usize>)>,
+}
+
+impl Weights {
+    pub fn load(artifacts_dir: impl AsRef<Path>) -> Result<Weights> {
+        let dir = artifacts_dir.as_ref();
+        let manifest = Manifest::parse(
+            &std::fs::read_to_string(dir.join("manifest.json"))
+                .with_context(|| format!("reading {}/manifest.json", dir.display()))?,
+        )?;
+        let bytes = std::fs::read(dir.join("weights.bin"))
+            .with_context(|| format!("reading {}/weights.bin", dir.display()))?;
+        ensure!(
+            bytes.len() == manifest.total_params * 4,
+            "weights.bin has {} bytes, manifest expects {}",
+            bytes.len(),
+            manifest.total_params * 4
+        );
+        let flat: Vec<f32> = bytes
+            .chunks_exact(4)
+            .map(|b| f32::from_le_bytes([b[0], b[1], b[2], b[3]]))
+            .collect();
+        Ok(Self::from_parts(manifest, flat))
+    }
+
+    pub fn from_parts(manifest: Manifest, flat: Vec<f32>) -> Weights {
+        let index = manifest
+            .params
+            .iter()
+            .map(|p| (p.name.clone(), (p.offset, p.shape.clone())))
+            .collect();
+        Weights { config: manifest.config, manifest, flat, index }
+    }
+
+    /// Copy a named tensor out as a Matrix (1-D tensors become 1×N).
+    pub fn get(&self, name: &str) -> Result<Matrix> {
+        let (off, shape) = self.index.get(name).ok_or_else(|| anyhow!("no param {name}"))?;
+        let (rows, cols) = match shape.len() {
+            1 => (1, shape[0]),
+            2 => (shape[0], shape[1]),
+            n => return Err(anyhow!("param {name} has rank {n}")),
+        };
+        let size = rows * cols;
+        Ok(Matrix::from_vec(rows, cols, self.flat[*off..off + size].to_vec()))
+    }
+
+    /// Write a matrix back into the flat vector.
+    pub fn set(&mut self, name: &str, m: &Matrix) -> Result<()> {
+        let (off, shape) = self.index.get(name).ok_or_else(|| anyhow!("no param {name}"))?;
+        let expected: usize = shape.iter().product();
+        ensure!(m.len() == expected, "shape mismatch writing {name}");
+        self.flat[*off..off + expected].copy_from_slice(&m.data);
+        Ok(())
+    }
+
+    /// Names of the linear-layer weight matrices (the tensors the paper
+    /// quantizes; embeddings and LayerNorm affines stay FP16/FP32).
+    pub fn linear_names(&self) -> Vec<String> {
+        self.manifest
+            .params
+            .iter()
+            .filter(|p| {
+                p.shape.len() == 2 && !p.name.contains("emb") // wq..wo, w1, w2, w_out
+            })
+            .map(|p| p.name.clone())
+            .collect()
+    }
+
+    pub fn param_names(&self) -> Vec<String> {
+        self.manifest.params.iter().map(|p| p.name.clone()).collect()
+    }
+}
+
+/// Build randomly-initialised Weights with the python parameter layout —
+/// the substrate for unit tests, property tests and `--synthetic` CLI runs
+/// that don't have trained artifacts on disk.
+pub fn synthetic_weights(cfg: ModelConfig, seed: u64) -> Weights {
+    use crate::tensor::SplitMix64;
+    let mut params = Vec::new();
+    let mut offset = 0usize;
+    let push = |name: &str, shape: Vec<usize>, params: &mut Vec<ParamEntry>, off: &mut usize| {
+        let size: usize = shape.iter().product();
+        params.push(ParamEntry { name: name.into(), shape, offset: *off, size });
+        *off += size;
+    };
+    push("tok_emb", vec![cfg.vocab, cfg.d_model], &mut params, &mut offset);
+    push("pos_emb", vec![cfg.seq_len, cfg.d_model], &mut params, &mut offset);
+    for l in 0..cfg.n_layers {
+        for (n, shape) in [
+            ("ln1_g", vec![cfg.d_model]),
+            ("ln1_b", vec![cfg.d_model]),
+            ("wq", vec![cfg.d_model, cfg.d_model]),
+            ("wk", vec![cfg.d_model, cfg.d_model]),
+            ("wv", vec![cfg.d_model, cfg.d_model]),
+            ("wo", vec![cfg.d_model, cfg.d_model]),
+            ("ln2_g", vec![cfg.d_model]),
+            ("ln2_b", vec![cfg.d_model]),
+            ("w1", vec![cfg.d_model, cfg.d_ff]),
+            ("w2", vec![cfg.d_ff, cfg.d_model]),
+        ] {
+            push(&format!("layer{l}.{n}"), shape, &mut params, &mut offset);
+        }
+    }
+    push("lnf_g", vec![cfg.d_model], &mut params, &mut offset);
+    push("lnf_b", vec![cfg.d_model], &mut params, &mut offset);
+    push("w_out", vec![cfg.d_model, cfg.vocab], &mut params, &mut offset);
+
+    let mut rng = SplitMix64::new(seed);
+    let flat: Vec<f32> = params
+        .iter()
+        .flat_map(|p| {
+            let std = if p.name.ends_with("_g") {
+                return vec![1.0f32; p.size];
+            } else if p.name.ends_with("_b") {
+                return vec![0.0f32; p.size];
+            } else {
+                0.02f32
+            };
+            (0..p.size).map(|_| rng.normal() as f32 * std).collect::<Vec<_>>()
+        })
+        .collect();
+
+    let manifest = Manifest {
+        config: cfg,
+        total_params: offset,
+        params,
+        train: None,
+        artifacts: Vec::new(),
+    };
+    Weights::from_parts(manifest, flat)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use synthetic_weights as test_weights;
+
+    #[test]
+    fn get_set_roundtrip() {
+        let cfg = ModelConfig { vocab: 32, d_model: 16, n_layers: 1, n_heads: 2, d_ff: 32, seq_len: 8, eval_batch: 2 };
+        let mut w = test_weights(cfg, 1);
+        let mut m = w.get("layer0.wq").unwrap();
+        assert_eq!((m.rows, m.cols), (16, 16));
+        m.set(0, 0, 42.0);
+        w.set("layer0.wq", &m).unwrap();
+        assert_eq!(w.get("layer0.wq").unwrap().get(0, 0), 42.0);
+    }
+
+    #[test]
+    fn linear_names_exclude_embeddings_and_norms() {
+        let cfg = ModelConfig { vocab: 32, d_model: 16, n_layers: 2, n_heads: 2, d_ff: 32, seq_len: 8, eval_batch: 2 };
+        let w = test_weights(cfg, 1);
+        let names = w.linear_names();
+        assert_eq!(names.len(), 2 * 6 + 1); // 6 linears per layer + w_out
+        assert!(!names.iter().any(|n| n.contains("emb") || n.contains("ln")));
+    }
+
+    #[test]
+    fn missing_param_is_error() {
+        let cfg = ModelConfig { vocab: 32, d_model: 16, n_layers: 1, n_heads: 2, d_ff: 32, seq_len: 8, eval_batch: 2 };
+        let w = test_weights(cfg, 1);
+        assert!(w.get("nope").is_err());
+    }
+}

@@ -1,0 +1,163 @@
+//! AWQ-style baseline (Lin et al., 2024): activation-aware weight scaling.
+//!
+//! AWQ protects salient weight channels by scaling them up before group-wise
+//! weight quantization (and scaling activations down correspondingly). The
+//! scale is s_j = mean|X_:,j|^β with β grid-searched per layer to minimise
+//! the quantized-matmul output error on a calibration batch — the same
+//! search AWQ's released code performs (`auto_scale.py`), minus kernel
+//! fusion. Used in the W4A8-g128 rows of Tables 2/3/5, where activations
+//! are quantized per-token on top (the paper's protocol for the AWQ rows).
+
+use super::{per_channel::GroupWise, Bits, EPS};
+use crate::tensor::Matrix;
+
+#[derive(Clone, Debug)]
+pub struct Awq {
+    /// Chosen saliency exponent β.
+    pub beta: f32,
+    /// Per-input-channel scales s_j = mean|X_:,j|^β (normalised).
+    pub scales: Vec<f32>,
+    pub group: usize,
+    pub bits: Bits,
+}
+
+impl Awq {
+    /// Grid-search β on a calibration batch, minimising
+    /// ‖X·W − (X/s)·GWQ(s·W)‖_F.
+    pub fn search(x_calib: &Matrix, w: &Matrix, bits: Bits, group: usize) -> Self {
+        assert_eq!(x_calib.cols, w.rows);
+        let act_mean = col_abs_mean(x_calib);
+        let y_ref = x_calib.matmul(w);
+
+        let mut best = (f32::INFINITY, 0.0f32, Vec::new());
+        for step in 0..=10 {
+            let beta = step as f32 / 10.0;
+            let scales = normalised_scales(&act_mean, beta);
+            let wq = GroupWise::new(bits, group).fake_quant(&scale_rows(w, &scales));
+            let y = scale_cols_inv(x_calib, &scales).matmul(&wq);
+            let err = y_ref.distance(&y);
+            if err < best.0 {
+                best = (err, beta, scales);
+            }
+        }
+        Awq { beta: best.1, scales: best.2, group, bits }
+    }
+
+    /// The AWQ-quantized weight: GWQ(s·W) with the scale pre-applied. The
+    /// runtime divides activations column-wise by s (see
+    /// [`Awq::smooth_activation`]) so the product is function-preserving up
+    /// to quantization error.
+    pub fn quantize_weight(&self, w: &Matrix) -> Matrix {
+        GroupWise::new(self.bits, self.group).fake_quant(&scale_rows(w, &self.scales))
+    }
+
+    pub fn smooth_activation(&self, x: &Matrix) -> Matrix {
+        scale_cols_inv(x, &self.scales)
+    }
+
+    /// Effective (dequantized, unscaled) weight for running through an
+    /// unmodified FP pipeline: diag(1/s)·GWQ(s·W).
+    pub fn effective_weight(&self, w: &Matrix) -> Matrix {
+        let q = self.quantize_weight(w);
+        scale_rows_inv(&q, &self.scales)
+    }
+}
+
+fn col_abs_mean(x: &Matrix) -> Vec<f32> {
+    let mut acc = vec![0.0f64; x.cols];
+    for i in 0..x.rows {
+        for (a, &v) in acc.iter_mut().zip(x.row(i)) {
+            *a += v.abs() as f64;
+        }
+    }
+    acc.iter().map(|&a| (a / x.rows as f64) as f32).collect()
+}
+
+fn normalised_scales(act_mean: &[f32], beta: f32) -> Vec<f32> {
+    let raw: Vec<f32> = act_mean.iter().map(|&m| m.max(EPS).powf(beta)).collect();
+    // normalise the geometric mean to 1 so the overall weight magnitude is
+    // unchanged (AWQ's trick to keep group scales in range)
+    let log_mean = raw.iter().map(|&r| r.ln() as f64).sum::<f64>() / raw.len() as f64;
+    let norm = (log_mean.exp()) as f32;
+    raw.iter().map(|&r| (r / norm).max(EPS)).collect()
+}
+
+fn scale_rows(w: &Matrix, s: &[f32]) -> Matrix {
+    let mut out = w.clone();
+    for (j, &sj) in s.iter().enumerate() {
+        for v in out.row_mut(j) {
+            *v *= sj;
+        }
+    }
+    out
+}
+
+fn scale_rows_inv(w: &Matrix, s: &[f32]) -> Matrix {
+    let mut out = w.clone();
+    for (j, &sj) in s.iter().enumerate() {
+        for v in out.row_mut(j) {
+            *v /= sj;
+        }
+    }
+    out
+}
+
+fn scale_cols_inv(x: &Matrix, s: &[f32]) -> Matrix {
+    let mut out = x.clone();
+    for i in 0..out.rows {
+        for (v, &sj) in out.row_mut(i).iter_mut().zip(s) {
+            *v /= sj;
+        }
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::tensor::SplitMix64;
+
+    fn calib_pair() -> (Matrix, Matrix) {
+        let mut rng = SplitMix64::new(33);
+        let mut x = Matrix::randn(128, 64, 1.0, &mut rng);
+        for i in 0..x.rows {
+            for j in 0..2 {
+                let v = x.get(i, j) * 25.0;
+                x.set(i, j, v);
+            }
+        }
+        let w = Matrix::randn(64, 32, 0.1, &mut rng);
+        (x, w)
+    }
+
+    #[test]
+    fn search_beats_or_matches_plain_groupwise() {
+        let (x, w) = calib_pair();
+        let y_ref = x.matmul(&w);
+        let plain = GroupWise::new(Bits::Int4, 32).fake_quant(&w);
+        let e_plain = y_ref.distance(&x.matmul(&plain));
+        let awq = Awq::search(&x, &w, Bits::Int4, 32);
+        let e_awq = y_ref.distance(&awq.smooth_activation(&x).matmul(&awq.quantize_weight(&w)));
+        assert!(e_awq <= e_plain * 1.0001, "awq={e_awq} plain={e_plain}");
+    }
+
+    #[test]
+    fn effective_weight_function_preserving_shape() {
+        let (x, w) = calib_pair();
+        let awq = Awq::search(&x, &w, Bits::Int4, 32);
+        let eff = awq.effective_weight(&w);
+        assert_eq!((eff.rows, eff.cols), (w.rows, w.cols));
+        // effective weight ≈ w up to 4-bit group quantization error
+        let rel = w.distance(&eff) / w.frobenius();
+        assert!(rel < 0.2, "rel {rel}");
+    }
+
+    #[test]
+    fn beta_zero_means_no_scaling() {
+        let act_mean = vec![1.0f32, 10.0, 100.0];
+        let s = normalised_scales(&act_mean, 0.0);
+        for v in s {
+            assert!((v - 1.0).abs() < 1e-6);
+        }
+    }
+}

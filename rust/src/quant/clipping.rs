@@ -1,0 +1,107 @@
+//! OmniQuant stand-in: learnable-equivalent clipping, searched not trained.
+//!
+//! OmniQuant (Shao et al., 2024) learns per-layer clipping thresholds for
+//! weights and activations with gradient descent. The mechanism that matters
+//! for the paper's W4A4 comparison rows is the *clipped quantization range*:
+//! instead of Δ = t_i/qmax the scale is Δ = γ·t_i/qmax with γ < 1, trading
+//! outlier clipping error against finer resolution for the bulk. We recover
+//! the same mechanism with a calibration grid search over γ (per matrix),
+//! which is the standard LAC (learned-activation-clipping) approximation —
+//! see DESIGN.md §7 for the fidelity note.
+
+use super::{fake_quant_with, ActQuantizer, Bits, DeltaField, EPS};
+use crate::tensor::Matrix;
+
+#[derive(Clone, Copy, Debug)]
+pub struct ClippedPerToken {
+    pub bits: Bits,
+    /// Clipping ratio γ ∈ (0, 1]; 1.0 is plain per-token.
+    pub gamma: f32,
+}
+
+impl ClippedPerToken {
+    pub fn new(bits: Bits, gamma: f32) -> Self {
+        assert!(gamma > 0.0 && gamma <= 1.0);
+        ClippedPerToken { bits, gamma }
+    }
+
+    /// Grid-search γ on a calibration matrix minimising ‖X − Q(X)‖_F —
+    /// the OmniQuant-equivalent calibration.
+    pub fn search(x_calib: &Matrix, bits: Bits) -> Self {
+        let mut best = (f32::INFINITY, 1.0f32);
+        for step in 1..=20 {
+            let gamma = step as f32 / 20.0;
+            let q = ClippedPerToken { bits, gamma }.fake_quant(x_calib);
+            let err = x_calib.distance(&q);
+            if err < best.0 {
+                best = (err, gamma);
+            }
+        }
+        ClippedPerToken { bits, gamma: best.1 }
+    }
+}
+
+impl ActQuantizer for ClippedPerToken {
+    fn name(&self) -> String {
+        format!("omniquant-clip[γ={:.2},{}]", self.gamma, self.bits)
+    }
+
+    fn delta_field(&self, x: &Matrix) -> DeltaField {
+        let qmax = self.bits.qmax();
+        DeltaField::PerRow(
+            x.row_abs_max()
+                .iter()
+                .map(|&t| (self.gamma * t).max(EPS) / qmax)
+                .collect(),
+        )
+    }
+
+    /// Clipped fake quant: values beyond γ·t_i saturate at the grid edge.
+    fn fake_quant(&self, x: &Matrix) -> Matrix {
+        fake_quant_with(x, &self.delta_field(x), self.qmax())
+    }
+
+    fn qmax(&self) -> f32 {
+        self.bits.qmax()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::quant::per_token::PerToken;
+    use crate::tensor::SplitMix64;
+
+    #[test]
+    fn gamma_one_equals_per_token() {
+        let mut rng = SplitMix64::new(6);
+        let x = Matrix::randn(32, 32, 1.0, &mut rng);
+        let a = ClippedPerToken::new(Bits::Int4, 1.0).fake_quant(&x);
+        let b = PerToken::new(Bits::Int4).fake_quant(&x);
+        assert_eq!(a.data, b.data);
+    }
+
+    #[test]
+    fn search_clips_under_outliers_at_int4() {
+        let mut rng = SplitMix64::new(7);
+        let mut x = Matrix::randn(64, 512, 1.0, &mut rng);
+        for i in 0..x.rows {
+            x.set(i, 0, 40.0); // heavy outlier per row
+        }
+        let clipped = ClippedPerToken::search(&x, Bits::Int4);
+        assert!(clipped.gamma < 1.0, "search should clip, got γ={}", clipped.gamma);
+        let e_clip = crate::quant::relative_error(&x, &clipped.fake_quant(&x));
+        let e_plain =
+            crate::quant::relative_error(&x, &PerToken::new(Bits::Int4).fake_quant(&x));
+        assert!(e_clip < e_plain, "clip={e_clip} plain={e_plain}");
+    }
+
+    #[test]
+    fn saturates_at_grid_edge() {
+        let x = Matrix::from_vec(1, 4, vec![10.0, 1.0, 0.5, -10.0]);
+        let q = ClippedPerToken::new(Bits::Int8, 0.1).fake_quant(&x);
+        // bound = 1.0 → outliers clamp to ±1.0
+        assert!((q.get(0, 0) - 1.0).abs() < 1e-5);
+        assert!((q.get(0, 3) + 1.0).abs() < 1e-5);
+    }
+}

@@ -1,0 +1,136 @@
+//! CrossQuant — the paper's contribution, eq. (5).
+//!
+//! CQ(X_ij) = round(X_ij / Δ̃_ij),  Δ̃_ij = t_i^α · c_j^(1−α) / qmax
+//!
+//! The scale is stored factored (row_pow[i] = t_i^α / qmax, col_pow[j] =
+//! c_j^(1−α)) so the memory overhead vs per-token is exactly one extra
+//! length-I vector — the paper's storage claim — and the per-element cost
+//! is one extra multiply (their "one extra division" claim; same O(TI)).
+//!
+//! α = 1 degenerates to per-token exactly; α = 0 to per-(column)-channel.
+//! The paper's default is α = 0.15 everywhere (Appendix B.1), with weight
+//! mode α_W grid-searched when CrossQuant is also applied to weights.
+
+use super::{ActQuantizer, Bits, DeltaField, EPS};
+use crate::tensor::Matrix;
+
+pub const DEFAULT_ALPHA: f32 = 0.15;
+
+#[derive(Clone, Copy, Debug)]
+pub struct CrossQuant {
+    pub alpha: f32,
+    pub bits: Bits,
+}
+
+impl CrossQuant {
+    pub fn new(alpha: f32, bits: Bits) -> Self {
+        assert!((0.0..=1.0).contains(&alpha), "alpha must be in [0,1]");
+        CrossQuant { alpha, bits }
+    }
+
+    pub fn default_int8() -> Self {
+        CrossQuant::new(DEFAULT_ALPHA, Bits::Int8)
+    }
+
+    /// CrossQuant applied to a *weight* matrix (Appendix B.1: used for
+    /// OPT-66B W4A4 and LLaMA3-70B W8A8 where per-channel weight kernels
+    /// hurt). Identical math; separate constructor for intent.
+    pub fn weight_mode(alpha_w: f32, bits: Bits) -> Self {
+        CrossQuant::new(alpha_w, bits)
+    }
+}
+
+impl ActQuantizer for CrossQuant {
+    fn name(&self) -> String {
+        format!("crossquant[α={},{}]", self.alpha, self.bits)
+    }
+
+    fn delta_field(&self, x: &Matrix) -> DeltaField {
+        let qmax = self.bits.qmax();
+        let a = self.alpha;
+        let row_pow: Vec<f32> =
+            x.row_abs_max().iter().map(|&t| t.max(EPS).powf(a) / qmax).collect();
+        let col_pow: Vec<f32> =
+            x.col_abs_max().iter().map(|&c| c.max(EPS).powf(1.0 - a)).collect();
+        DeltaField::Cross { row_pow, col_pow }
+    }
+
+    fn qmax(&self) -> f32 {
+        self.bits.qmax()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::quant::per_token::PerToken;
+    use crate::tensor::SplitMix64;
+
+    fn outlier_matrix(rows: usize, cols: usize, n_out: usize, scale: f32) -> Matrix {
+        let mut rng = SplitMix64::new(17);
+        let mut x = Matrix::randn(rows, cols, 1.0, &mut rng);
+        for j in 0..n_out {
+            for i in 0..rows {
+                let v = x.get(i, j) * scale;
+                x.set(i, j, v);
+            }
+        }
+        x
+    }
+
+    #[test]
+    fn alpha_one_equals_per_token() {
+        let mut rng = SplitMix64::new(5);
+        let x = Matrix::randn(40, 30, 1.0, &mut rng);
+        let cq = CrossQuant::new(1.0, Bits::Int8).fake_quant(&x);
+        let pt = PerToken::new(Bits::Int8).fake_quant(&x);
+        for (a, b) in cq.data.iter().zip(&pt.data) {
+            assert!((a - b).abs() <= 1e-6 * a.abs().max(1.0), "{a} vs {b}");
+        }
+    }
+
+    #[test]
+    fn smaller_zero_bound_when_col_max_below_row_max() {
+        // Paper §4.2 Case I: c_j < t_i ⇒ B̃_ij < B_ij.
+        let x = outlier_matrix(64, 64, 2, 50.0);
+        let cq = CrossQuant::new(0.15, Bits::Int8);
+        let pt = PerToken::new(Bits::Int8);
+        let fc = cq.delta_field(&x);
+        let fp = pt.delta_field(&x);
+        let t = x.row_abs_max();
+        let c = x.col_abs_max();
+        for i in 0..x.rows {
+            for j in 0..x.cols {
+                if c[j] < t[i] {
+                    assert!(fc.zero_bound(i, j) < fp.zero_bound(i, j));
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn reduces_kernel_on_outlier_matrix() {
+        let x = outlier_matrix(128, 128, 2, 50.0);
+        let count_zeroed = |q: &Matrix| {
+            x.data.iter().zip(&q.data).filter(|(&v, &qv)| v != 0.0 && qv == 0.0).count()
+        };
+        let k_pt = count_zeroed(&PerToken::new(Bits::Int8).fake_quant(&x));
+        let k_cq = count_zeroed(&CrossQuant::new(0.15, Bits::Int8).fake_quant(&x));
+        assert!(k_cq * 4 < k_pt, "pt={k_pt} cq={k_cq}");
+    }
+
+    #[test]
+    fn preserves_values_better_than_per_token() {
+        let x = outlier_matrix(128, 128, 2, 50.0);
+        let e_pt = crate::quant::relative_error(&x, &PerToken::new(Bits::Int8).fake_quant(&x));
+        let e_cq =
+            crate::quant::relative_error(&x, &CrossQuant::new(0.15, Bits::Int8).fake_quant(&x));
+        assert!(e_cq < e_pt, "cq={e_cq} pt={e_pt}");
+    }
+
+    #[test]
+    #[should_panic]
+    fn rejects_invalid_alpha() {
+        CrossQuant::new(1.5, Bits::Int8);
+    }
+}

@@ -1,0 +1,175 @@
+//! The quantization library: the paper's method (CrossQuant) plus every
+//! baseline it compares against, all operating on [`Matrix`] activations /
+//! weights in the paper's *fake-quant* protocol (quantize to the integer
+//! grid, immediately dequantize — Appendix B.1), which is what all of the
+//! paper's tables measure.
+//!
+//! Scheme inventory (paper §3–§4, §5.1):
+//! - [`per_token`]    — eq. (1), the activation baseline
+//! - [`per_channel`]  — eq. (2) + group-wise variant, the weight baseline
+//! - [`crossquant`]   — eq. (5), the contribution (also weight mode, App. B.1)
+//! - [`smoothquant`]  — Xiao et al. 2023 baseline (scale migration)
+//! - [`awq`]          — Lin et al. 2024 baseline (activation-aware weight scale)
+//! - [`clipping`]     — OmniQuant stand-in (grid-searched clipping)
+//! - [`remove_kernel`]— the "Remove Kernel" ablation operator (Figs. 1/6/7/9)
+//! - [`pack`]         — real INT8/INT4 bit-packing for storage accounting
+
+pub mod awq;
+pub mod clipping;
+pub mod crossquant;
+pub mod pack;
+pub mod qlinear;
+pub mod per_channel;
+pub mod per_token;
+pub mod remove_kernel;
+pub mod smoothquant;
+
+use crate::tensor::Matrix;
+
+/// Guard against all-zero rows/columns (matches python `ref.EPS`).
+pub const EPS: f32 = 1e-9;
+
+/// Integer grid width. The paper's experiments use symmetric INT8/INT4.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub enum Bits {
+    Int4,
+    Int8,
+    /// Arbitrary width (used by sweeps / property tests).
+    Other(u8),
+}
+
+impl Bits {
+    /// qmax = 2^(N−1) − 1, the paper's grid bound.
+    pub fn qmax(self) -> f32 {
+        match self {
+            Bits::Int4 => 7.0,
+            Bits::Int8 => 127.0,
+            Bits::Other(n) => ((1u32 << (n - 1)) - 1) as f32,
+        }
+    }
+}
+
+impl std::fmt::Display for Bits {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            Bits::Int4 => write!(f, "A4"),
+            Bits::Int8 => write!(f, "A8"),
+            Bits::Other(n) => write!(f, "A{n}"),
+        }
+    }
+}
+
+/// The per-element quantization step Δ_ij of a scheme on a given matrix,
+/// stored in factored form so analysis can query any element in O(1)
+/// without materialising a T×I scale matrix (the paper's storage argument:
+/// CrossQuant stores only one extra length-I vector).
+#[derive(Clone, Debug)]
+pub enum DeltaField {
+    /// Δ_ij = row[i] — per-token (and per-group after reshape).
+    PerRow(Vec<f32>),
+    /// Δ_ij = col[j] — per-channel weight quantization.
+    PerCol(Vec<f32>),
+    /// Δ_ij = row_pow[i] · col_pow[j] — CrossQuant's factored cross scale,
+    /// with row_pow = t^α/qmax-part and col_pow = c^(1−α) pre-raised.
+    Cross { row_pow: Vec<f32>, col_pow: Vec<f32> },
+}
+
+impl DeltaField {
+    #[inline]
+    pub fn delta(&self, i: usize, j: usize) -> f32 {
+        match self {
+            DeltaField::PerRow(r) => r[i],
+            DeltaField::PerCol(c) => c[j],
+            DeltaField::Cross { row_pow, col_pow } => row_pow[i] * col_pow[j],
+        }
+    }
+
+    /// Zero bound B_ij = 0.5 · Δ_ij (paper Definition 1 / eq. 4).
+    #[inline]
+    pub fn zero_bound(&self, i: usize, j: usize) -> f32 {
+        0.5 * self.delta(i, j)
+    }
+}
+
+/// An activation quantization scheme: produces the scale field for a matrix
+/// and fake-quantizes it. Object-safe so the eval harness can iterate over
+/// `Box<dyn ActQuantizer>` method lists.
+pub trait ActQuantizer: Send + Sync {
+    fn name(&self) -> String;
+
+    /// The factored per-element scale Δ for this matrix.
+    fn delta_field(&self, x: &Matrix) -> DeltaField;
+
+    /// Fake quantization: round to grid, clip, dequantize.
+    fn fake_quant(&self, x: &Matrix) -> Matrix {
+        let field = self.delta_field(x);
+        let qmax = self.qmax();
+        fake_quant_with(x, &field, qmax)
+    }
+
+    fn qmax(&self) -> f32;
+}
+
+/// Shared fake-quant loop over a factored scale field.
+pub fn fake_quant_with(x: &Matrix, field: &DeltaField, qmax: f32) -> Matrix {
+    let mut out = Matrix::zeros(x.rows, x.cols);
+    match field {
+        DeltaField::PerRow(rows) => {
+            for i in 0..x.rows {
+                let d = rows[i];
+                let src = x.row(i);
+                let dst = out.row_mut(i);
+                for (o, &v) in dst.iter_mut().zip(src) {
+                    *o = (v / d).round().clamp(-qmax, qmax) * d;
+                }
+            }
+        }
+        DeltaField::PerCol(cols) => {
+            for i in 0..x.rows {
+                let src = x.row(i);
+                let dst = out.row_mut(i);
+                for ((o, &v), &d) in dst.iter_mut().zip(src).zip(cols) {
+                    *o = (v / d).round().clamp(-qmax, qmax) * d;
+                }
+            }
+        }
+        DeltaField::Cross { row_pow, col_pow } => {
+            for i in 0..x.rows {
+                let rp = row_pow[i];
+                let src = x.row(i);
+                let dst = out.row_mut(i);
+                for ((o, &v), &cp) in dst.iter_mut().zip(src).zip(col_pow) {
+                    let d = rp * cp;
+                    *o = (v / d).round().clamp(-qmax, qmax) * d;
+                }
+            }
+        }
+    }
+    out
+}
+
+/// Quantization error ‖X − Q(X)‖_F / ‖X‖_F, the generic quality metric.
+pub fn relative_error(x: &Matrix, q: &Matrix) -> f32 {
+    let denom = x.frobenius().max(EPS);
+    x.distance(q) / denom
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn qmax_values() {
+        assert_eq!(Bits::Int8.qmax(), 127.0);
+        assert_eq!(Bits::Int4.qmax(), 7.0);
+        assert_eq!(Bits::Other(6).qmax(), 31.0);
+    }
+
+    #[test]
+    fn delta_field_factored_lookup() {
+        let f = DeltaField::Cross { row_pow: vec![2.0, 3.0], col_pow: vec![0.5, 1.0, 2.0] };
+        assert_eq!(f.delta(0, 0), 1.0);
+        assert_eq!(f.delta(1, 2), 6.0);
+        assert_eq!(f.zero_bound(1, 2), 3.0);
+    }
+}

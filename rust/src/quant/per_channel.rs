@@ -1,0 +1,133 @@
+//! Per-channel and group-wise weight quantization — eq. (2) and §3.
+//!
+//! Weights are stored (I × O) with Y = X·W; the quantization unit is one
+//! output channel (a column of W). Group-wise quantization reshapes W to
+//! (I·O/g × g) row-major and quantizes per group row — the W4-g128 setting
+//! used throughout the paper's second experiment group.
+
+use super::{ActQuantizer, Bits, DeltaField, EPS};
+use crate::tensor::Matrix;
+
+/// Per-output-channel weight quantizer.
+#[derive(Clone, Copy, Debug)]
+pub struct PerChannel {
+    pub bits: Bits,
+}
+
+impl PerChannel {
+    pub fn new(bits: Bits) -> Self {
+        PerChannel { bits }
+    }
+}
+
+impl ActQuantizer for PerChannel {
+    fn name(&self) -> String {
+        format!("per-channel[{}]", self.bits)
+    }
+
+    fn delta_field(&self, w: &Matrix) -> DeltaField {
+        let qmax = self.bits.qmax();
+        DeltaField::PerCol(w.col_abs_max().iter().map(|&c| c.max(EPS) / qmax).collect())
+    }
+
+    fn qmax(&self) -> f32 {
+        self.bits.qmax()
+    }
+}
+
+/// Group-wise weight quantizer (group size g along the flattened weight).
+#[derive(Clone, Copy, Debug)]
+pub struct GroupWise {
+    pub bits: Bits,
+    pub group: usize,
+}
+
+impl GroupWise {
+    pub fn new(bits: Bits, group: usize) -> Self {
+        assert!(group > 0);
+        GroupWise { bits, group }
+    }
+
+    /// W4-g128, the paper's group-wise setting.
+    pub fn w4_g128() -> Self {
+        GroupWise::new(Bits::Int4, 128)
+    }
+
+    /// Fake-quantize a weight matrix group-wise. Handles a trailing partial
+    /// group (when I·O is not divisible by g) as its own smaller group.
+    pub fn fake_quant(&self, w: &Matrix) -> Matrix {
+        let qmax = self.bits.qmax();
+        let mut out = w.clone();
+        for chunk in out.data.chunks_mut(self.group) {
+            let t = chunk.iter().fold(0.0f32, |m, &v| m.max(v.abs())).max(EPS);
+            let d = t / qmax;
+            for v in chunk.iter_mut() {
+                *v = (*v / d).round().clamp(-qmax, qmax) * d;
+            }
+        }
+        out
+    }
+
+    /// Per-element scale of the group containing (i, j) — used by the
+    /// weight-kernel analysis in Appendix B.1.
+    pub fn delta_at(&self, w: &Matrix, i: usize, j: usize) -> f32 {
+        let flat = i * w.cols + j;
+        let start = (flat / self.group) * self.group;
+        let end = (start + self.group).min(w.len());
+        let t = w.data[start..end].iter().fold(0.0f32, |m, &v| m.max(v.abs())).max(EPS);
+        t / self.bits.qmax()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::tensor::SplitMix64;
+
+    #[test]
+    fn per_channel_column_max_survives() {
+        let mut rng = SplitMix64::new(4);
+        let w = Matrix::randn(32, 16, 0.1, &mut rng);
+        let q = PerChannel::new(Bits::Int8).fake_quant(&w);
+        let c_in = w.col_abs_max();
+        let c_out = q.col_abs_max();
+        for (a, b) in c_in.iter().zip(&c_out) {
+            assert!((a - b).abs() < 1e-5 * a.max(1e-3));
+        }
+    }
+
+    #[test]
+    fn groupwise_smaller_groups_lower_error() {
+        let mut rng = SplitMix64::new(8);
+        // heavy-tailed weights: scatter a few large values
+        let mut w = Matrix::randn(64, 64, 0.05, &mut rng);
+        for k in 0..32 {
+            let idx = rng.below(w.len());
+            w.data[idx] = if k % 2 == 0 { 1.0 } else { -1.0 };
+        }
+        let e_g32 = crate::quant::relative_error(&w, &GroupWise::new(Bits::Int4, 32).fake_quant(&w));
+        let e_g512 =
+            crate::quant::relative_error(&w, &GroupWise::new(Bits::Int4, 512).fake_quant(&w));
+        assert!(e_g32 < e_g512, "g32={e_g32} g512={e_g512}");
+    }
+
+    #[test]
+    fn groupwise_partial_trailing_group() {
+        let mut rng = SplitMix64::new(9);
+        let w = Matrix::randn(3, 7, 1.0, &mut rng); // 21 elements, group 8 → partial
+        let q = GroupWise::new(Bits::Int8, 8).fake_quant(&w);
+        assert_eq!(q.len(), 21);
+        for (a, b) in w.data.iter().zip(&q.data) {
+            assert!((a - b).abs() <= 0.5 * 1.0 / 127.0 * 60.0); // loose sanity bound
+        }
+    }
+
+    #[test]
+    fn delta_at_matches_group_layout() {
+        let w = Matrix::from_vec(2, 4, vec![1., 2., 4., 8., 16., 32., 64., 128.]);
+        let g = GroupWise::new(Bits::Int8, 4);
+        // group 0 = [1,2,4,8] → t=8 ; group 1 = [16,32,64,128] → t=128
+        assert!((g.delta_at(&w, 0, 0) - 8.0 / 127.0).abs() < 1e-6);
+        assert!((g.delta_at(&w, 1, 3) - 128.0 / 127.0).abs() < 1e-6);
+    }
+}

@@ -1,0 +1,95 @@
+//! Per-token quantization — the paper's activation baseline, eq. (1).
+//!
+//! Δ_ij = t_i / qmax with t_i = max|X_i,:|. When a token row contains an
+//! outlier (20×+ the typical magnitude), t_i blows up and small elements of
+//! that row round to zero — the quantization-kernel failure mode the paper
+//! diagnoses (§4.1, Appendix A).
+
+use super::{ActQuantizer, Bits, DeltaField, EPS};
+use crate::tensor::Matrix;
+
+#[derive(Clone, Copy, Debug)]
+pub struct PerToken {
+    pub bits: Bits,
+}
+
+impl PerToken {
+    pub fn new(bits: Bits) -> Self {
+        PerToken { bits }
+    }
+}
+
+impl ActQuantizer for PerToken {
+    fn name(&self) -> String {
+        format!("per-token[{}]", self.bits)
+    }
+
+    fn delta_field(&self, x: &Matrix) -> DeltaField {
+        let qmax = self.bits.qmax();
+        let t = x.row_abs_max();
+        DeltaField::PerRow(t.iter().map(|&ti| ti.max(EPS) / qmax).collect())
+    }
+
+    fn qmax(&self) -> f32 {
+        self.bits.qmax()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::tensor::SplitMix64;
+
+    #[test]
+    fn zero_matrix_is_fixed_point() {
+        let x = Matrix::zeros(4, 4);
+        let q = PerToken::new(Bits::Int8).fake_quant(&x);
+        assert_eq!(q.data, vec![0.0; 16]);
+    }
+
+    #[test]
+    fn row_max_survives_exactly() {
+        let mut rng = SplitMix64::new(1);
+        let x = Matrix::randn(16, 32, 1.0, &mut rng);
+        let q = PerToken::new(Bits::Int8).fake_quant(&x);
+        for i in 0..x.rows {
+            let t_in = x.row(i).iter().fold(0.0f32, |m, &v| m.max(v.abs()));
+            let t_out = q.row(i).iter().fold(0.0f32, |m, &v| m.max(v.abs()));
+            assert!((t_in - t_out).abs() < 1e-5 * t_in.max(1.0));
+        }
+    }
+
+    #[test]
+    fn error_bounded_by_half_delta_outside_kernel() {
+        let mut rng = SplitMix64::new(2);
+        let x = Matrix::randn(32, 32, 1.0, &mut rng);
+        let quant = PerToken::new(Bits::Int8);
+        let field = quant.delta_field(&x);
+        let q = quant.fake_quant(&x);
+        for i in 0..x.rows {
+            for j in 0..x.cols {
+                let err = (x.get(i, j) - q.get(i, j)).abs();
+                assert!(err <= 0.5 * field.delta(i, j) * 1.0001);
+            }
+        }
+    }
+
+    #[test]
+    fn outlier_creates_large_kernel() {
+        // one 50× outlier per row → many small values round to zero
+        let mut rng = SplitMix64::new(3);
+        let mut x = Matrix::randn(64, 128, 1.0, &mut rng);
+        for i in 0..x.rows {
+            x.set(i, 0, 50.0);
+        }
+        let q = PerToken::new(Bits::Int8).fake_quant(&x);
+        let zeroed = x
+            .data
+            .iter()
+            .zip(&q.data)
+            .filter(|(&v, &qv)| v != 0.0 && qv == 0.0)
+            .count();
+        let frac = zeroed as f32 / x.len() as f32;
+        assert!(frac > 0.1, "kernel fraction {frac}");
+    }
+}

@@ -1,0 +1,273 @@
+//! True-integer quantized linear layers — the deployment path the paper
+//! motivates (§3: "quantizing activations … accelerates inference").
+//!
+//! Everything else in this crate follows the paper's *fake-quant*
+//! evaluation protocol; this module is the real thing: weights stored as
+//! INT8/INT4 codes, activations quantized to integer codes at run time,
+//! and the matmul accumulating in i32.
+//!
+//! Two activation schemes:
+//!
+//! * **per-token** — the classic W8A8 GEMM: the scale t_i/qmax is constant
+//!   along the contraction axis, so y_ij = (t_i/q)·s_j · Σ_k xq_ik·wq_kj
+//!   is one int8×int8→i32 GEMM plus a rank-1 dequant.
+//! * **CrossQuant** — the scale t_i^α·c_k^(1−α) varies along the
+//!   contraction axis, so it cannot be pulled out of an integer
+//!   accumulation. Deployment folds c_k^(1−α) into the weight *rows and
+//!   requantizes them to the integer grid per activation batch* (c changes
+//!   with the batch). The matmul stays int8×int8→i32; the price is a
+//!   per-batch O(I·O) weight-rescale pass — the honest engineering cost of
+//!   the method that the paper's complexity discussion (§4.2) abstracts
+//!   away, quantified in `rust/benches/quant_hot_path.rs`.
+
+use super::{Bits, EPS};
+use crate::tensor::Matrix;
+
+/// A linear layer with per-output-channel integer weights.
+#[derive(Clone, Debug)]
+pub struct QuantizedLinear {
+    pub in_dim: usize,
+    pub out_dim: usize,
+    pub bits: Bits,
+    /// Row-major (in_dim × out_dim) integer codes.
+    codes: Vec<i8>,
+    /// Per-output-channel scale: w ≈ code · w_scale[j].
+    w_scale: Vec<f32>,
+    /// FP copy of the weight for the CrossQuant requantization path.
+    w_fp: Matrix,
+}
+
+/// Integer activation codes + their factored scales.
+pub struct QuantizedActivation {
+    pub rows: usize,
+    pub cols: usize,
+    pub codes: Vec<i8>,
+    /// Per-row dequant factor (t_i/q for per-token, t_i^α/q for CrossQuant).
+    pub row_scale: Vec<f32>,
+}
+
+impl QuantizedLinear {
+    /// Quantize a weight matrix (I × O) per output channel.
+    pub fn from_weight(w: &Matrix, bits: Bits) -> QuantizedLinear {
+        let qmax = bits.qmax();
+        let w_scale: Vec<f32> = w.col_abs_max().iter().map(|&c| c.max(EPS) / qmax).collect();
+        let mut codes = Vec::with_capacity(w.len());
+        for i in 0..w.rows {
+            for (j, &v) in w.row(i).iter().enumerate() {
+                codes.push((v / w_scale[j]).round().clamp(-qmax, qmax) as i8);
+            }
+        }
+        QuantizedLinear {
+            in_dim: w.rows,
+            out_dim: w.cols,
+            bits,
+            codes,
+            w_scale,
+            w_fp: w.clone(),
+        }
+    }
+
+    /// Integer payload bytes (weights only).
+    pub fn payload_bytes(&self) -> usize {
+        match self.bits {
+            Bits::Int4 => self.codes.len().div_ceil(2),
+            _ => self.codes.len(),
+        }
+    }
+
+    /// Per-token quantize an activation to integer codes.
+    pub fn quantize_per_token(x: &Matrix, bits: Bits) -> QuantizedActivation {
+        let qmax = bits.qmax();
+        let t = x.row_abs_max();
+        let row_scale: Vec<f32> = t.iter().map(|&ti| ti.max(EPS) / qmax).collect();
+        let mut codes = Vec::with_capacity(x.len());
+        for i in 0..x.rows {
+            let inv = 1.0 / row_scale[i];
+            for &v in x.row(i) {
+                codes.push((v * inv).round().clamp(-qmax, qmax) as i8);
+            }
+        }
+        QuantizedActivation { rows: x.rows, cols: x.cols, codes, row_scale }
+    }
+
+    /// CrossQuant-quantize an activation: per-element scale
+    /// t_i^α·c_j^(1−α)/q, codes on the integer grid; returns the codes,
+    /// the per-row factor t_i^α/q, and the per-column factor c_j^(1−α)
+    /// the weight side must fold.
+    pub fn quantize_crossquant(
+        x: &Matrix,
+        alpha: f32,
+        bits: Bits,
+    ) -> (QuantizedActivation, Vec<f32>) {
+        let qmax = bits.qmax();
+        let row_scale: Vec<f32> =
+            x.row_abs_max().iter().map(|&t| t.max(EPS).powf(alpha) / qmax).collect();
+        let col_pow: Vec<f32> =
+            x.col_abs_max().iter().map(|&c| c.max(EPS).powf(1.0 - alpha)).collect();
+        let mut codes = Vec::with_capacity(x.len());
+        for i in 0..x.rows {
+            let rp = row_scale[i];
+            for (j, &v) in x.row(i).iter().enumerate() {
+                let d = rp * col_pow[j];
+                codes.push((v / d).round().clamp(-qmax, qmax) as i8);
+            }
+        }
+        (QuantizedActivation { rows: x.rows, cols: x.cols, codes, row_scale }, col_pow)
+    }
+
+    /// The W8A8 GEMM: int8×int8 → i32 accumulate, rank-1 dequant.
+    pub fn forward_per_token(&self, x: &Matrix, act_bits: Bits) -> Matrix {
+        let act = Self::quantize_per_token(x, act_bits);
+        self.gemm_i32(&act, &self.codes, &self.w_scale)
+    }
+
+    /// The CrossQuant integer path: requantize weight rows with the
+    /// activation's c^(1−α) factor folded in (per batch), then the same
+    /// int8 GEMM.
+    pub fn forward_crossquant(&self, x: &Matrix, alpha: f32, act_bits: Bits) -> Matrix {
+        let (act, col_pow) = Self::quantize_crossquant(x, alpha, act_bits);
+        let qmax = self.bits.qmax();
+        // fold c_k^(1−α) into the FP weight rows, requantize per channel
+        let mut folded_scale = vec![0.0f32; self.out_dim];
+        let mut max_per_out = vec![0.0f32; self.out_dim];
+        for k in 0..self.in_dim {
+            let cp = col_pow[k];
+            for (j, &v) in self.w_fp.row(k).iter().enumerate() {
+                let a = (v * cp).abs();
+                if a > max_per_out[j] {
+                    max_per_out[j] = a;
+                }
+            }
+        }
+        for j in 0..self.out_dim {
+            folded_scale[j] = max_per_out[j].max(EPS) / qmax;
+        }
+        let mut folded_codes = Vec::with_capacity(self.w_fp.len());
+        for k in 0..self.in_dim {
+            let cp = col_pow[k];
+            for (j, &v) in self.w_fp.row(k).iter().enumerate() {
+                folded_codes.push((v * cp / folded_scale[j]).round().clamp(-qmax, qmax) as i8);
+            }
+        }
+        self.gemm_i32(&act, &folded_codes, &folded_scale)
+    }
+
+    /// FP reference product (unquantized weight).
+    pub fn forward_fp(&self, x: &Matrix) -> Matrix {
+        x.matmul(&self.w_fp)
+    }
+
+    /// int8 × int8 → i32 GEMM with row/col dequantization.
+    fn gemm_i32(&self, act: &QuantizedActivation, w_codes: &[i8], w_scale: &[f32]) -> Matrix {
+        assert_eq!(act.cols, self.in_dim, "activation/weight shape mismatch");
+        let (m, k_dim, n) = (act.rows, self.in_dim, self.out_dim);
+        let mut out = Matrix::zeros(m, n);
+        let mut acc = vec![0i32; n];
+        for i in 0..m {
+            acc.iter_mut().for_each(|a| *a = 0);
+            let a_row = &act.codes[i * k_dim..(i + 1) * k_dim];
+            for (k, &a) in a_row.iter().enumerate() {
+                if a == 0 {
+                    continue;
+                }
+                let a = a as i32;
+                let w_row = &w_codes[k * n..(k + 1) * n];
+                for (o, &w) in acc.iter_mut().zip(w_row) {
+                    *o += a * w as i32;
+                }
+            }
+            let rs = act.row_scale[i];
+            let dst = out.row_mut(i);
+            for ((d, &a), &ws) in dst.iter_mut().zip(&acc).zip(w_scale) {
+                *d = a as f32 * rs * ws;
+            }
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::tensor::SplitMix64;
+
+    fn pair(outlier: bool) -> (Matrix, Matrix) {
+        let mut rng = SplitMix64::new(51);
+        let mut x = Matrix::randn(96, 64, 1.0, &mut rng);
+        if outlier {
+            for i in 0..x.rows {
+                let v = x.get(i, 3) * 50.0;
+                x.set(i, 3, v);
+            }
+        }
+        let w = Matrix::randn(64, 48, 0.1, &mut rng);
+        (x, w)
+    }
+
+    #[test]
+    fn per_token_int8_close_to_fp() {
+        let (x, w) = pair(false);
+        let lin = QuantizedLinear::from_weight(&w, Bits::Int8);
+        let y = lin.forward_per_token(&x, Bits::Int8);
+        let fp = lin.forward_fp(&x);
+        let rel = y.distance(&fp) / fp.frobenius();
+        assert!(rel < 0.02, "rel {rel}");
+    }
+
+    #[test]
+    fn crossquant_int8_beats_per_token_under_outliers() {
+        let (x, w) = pair(true);
+        let lin = QuantizedLinear::from_weight(&w, Bits::Int8);
+        let fp = lin.forward_fp(&x);
+        let e_pt = lin.forward_per_token(&x, Bits::Int8).distance(&fp) / fp.frobenius();
+        let e_cq = lin.forward_crossquant(&x, 0.15, Bits::Int8).distance(&fp) / fp.frobenius();
+        assert!(e_cq < e_pt, "cq {e_cq} pt {e_pt}");
+        assert!(e_cq < 0.05, "cq {e_cq}");
+    }
+
+    #[test]
+    fn alpha_one_matches_per_token_path() {
+        let (x, w) = pair(true);
+        let lin = QuantizedLinear::from_weight(&w, Bits::Int8);
+        let a = lin.forward_crossquant(&x, 1.0, Bits::Int8);
+        let b = lin.forward_per_token(&x, Bits::Int8);
+        // α=1 ⇒ col_pow = 1 ⇒ folded weight == original weight grid
+        let rel = a.distance(&b) / b.frobenius().max(1e-6);
+        assert!(rel < 1e-3, "rel {rel}");
+    }
+
+    #[test]
+    fn integer_path_matches_fake_quant_semantics() {
+        // integer GEMM with per-token codes == fake-quant(x) @ fake-quant(w)
+        let (x, w) = pair(false);
+        let lin = QuantizedLinear::from_weight(&w, Bits::Int8);
+        let y_int = lin.forward_per_token(&x, Bits::Int8);
+        use crate::quant::{per_channel::PerChannel, per_token::PerToken, ActQuantizer};
+        let y_fake = PerToken::new(Bits::Int8)
+            .fake_quant(&x)
+            .matmul(&PerChannel::new(Bits::Int8).fake_quant(&w));
+        let rel = y_int.distance(&y_fake) / y_fake.frobenius();
+        assert!(rel < 1e-4, "integer vs fake-quant rel {rel}");
+    }
+
+    #[test]
+    fn int4_payload_is_half() {
+        let (_, w) = pair(false);
+        let l8 = QuantizedLinear::from_weight(&w, Bits::Int8);
+        let l4 = QuantizedLinear::from_weight(&w, Bits::Int4);
+        assert_eq!(l8.payload_bytes(), 64 * 48);
+        assert_eq!(l4.payload_bytes(), (64 * 48usize).div_ceil(2));
+    }
+
+    #[test]
+    fn zero_activation_row_is_safe() {
+        let (mut x, w) = pair(false);
+        for v in x.row_mut(0) {
+            *v = 0.0;
+        }
+        let lin = QuantizedLinear::from_weight(&w, Bits::Int8);
+        let y = lin.forward_per_token(&x, Bits::Int8);
+        assert!(y.row(0).iter().all(|&v| v == 0.0));
+        assert!(y.data.iter().all(|v| v.is_finite()));
+    }
+}

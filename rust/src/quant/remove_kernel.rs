@@ -1,0 +1,119 @@
+//! The "Remove Kernel" ablation operator (Figures 1, 6, 7, 9).
+//!
+//! Sets elements with |X_ij| < θ·t_i to zero WITHOUT quantizing anything
+//! else. The paper uses this to show that zeroing the quantization kernel
+//! alone reproduces nearly all of A8's accuracy loss — i.e. the kernel *is*
+//! the loss mechanism. θ sweeps generate the threshold curves of §4.3.
+
+use crate::tensor::Matrix;
+
+#[derive(Clone, Copy, Debug)]
+pub struct RemoveKernel {
+    /// Zero-bound multiplier: elements with |x| < theta · t_i are dropped.
+    /// theta = 0.5/qmax reproduces exactly the per-token kernel of that
+    /// bit-width (eq. 4: B_ij = 0.5 · t_i / qmax).
+    pub theta: f32,
+}
+
+impl RemoveKernel {
+    pub fn new(theta: f32) -> Self {
+        assert!(theta >= 0.0);
+        RemoveKernel { theta }
+    }
+
+    /// θ matching the per-token kernel of a given grid bound.
+    pub fn matching_per_token(qmax: f32) -> Self {
+        RemoveKernel { theta: 0.5 / qmax }
+    }
+
+    pub fn apply(&self, x: &Matrix) -> Matrix {
+        let t = x.row_abs_max();
+        let mut out = x.clone();
+        for i in 0..out.rows {
+            let bound = self.theta * t[i];
+            for v in out.row_mut(i) {
+                if v.abs() < bound {
+                    *v = 0.0;
+                }
+            }
+        }
+        out
+    }
+
+    /// Fraction of (non-zero) elements that would be removed.
+    pub fn removed_fraction(&self, x: &Matrix) -> f32 {
+        let t = x.row_abs_max();
+        let mut removed = 0usize;
+        for i in 0..x.rows {
+            let bound = self.theta * t[i];
+            removed += x.row(i).iter().filter(|v| v.abs() < bound && **v != 0.0).count();
+        }
+        removed as f32 / x.len().max(1) as f32
+    }
+
+    /// Binary-search the θ that removes (approximately) a target fraction
+    /// of elements — the x-axis knob of Figures 6/7.
+    pub fn for_target_fraction(x: &Matrix, target: f32) -> RemoveKernel {
+        let (mut lo, mut hi) = (0.0f32, 1.0f32);
+        for _ in 0..40 {
+            let mid = 0.5 * (lo + hi);
+            if (RemoveKernel { theta: mid }).removed_fraction(x) < target {
+                lo = mid;
+            } else {
+                hi = mid;
+            }
+        }
+        RemoveKernel { theta: 0.5 * (lo + hi) }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::quant::{per_token::PerToken, ActQuantizer, Bits};
+    use crate::tensor::SplitMix64;
+
+    #[test]
+    fn theta_zero_is_identity() {
+        let mut rng = SplitMix64::new(1);
+        let x = Matrix::randn(16, 16, 1.0, &mut rng);
+        assert_eq!(RemoveKernel::new(0.0).apply(&x), x);
+    }
+
+    #[test]
+    fn matches_per_token_kernel_exactly() {
+        // Removing with θ = 0.5/qmax zeroes exactly the per-token kernel set.
+        let mut rng = SplitMix64::new(2);
+        let x = Matrix::randn(64, 64, 1.0, &mut rng);
+        let rk = RemoveKernel::matching_per_token(127.0).apply(&x);
+        let q = PerToken::new(Bits::Int8).fake_quant(&x);
+        for ((&orig, &removed), &quant) in x.data.iter().zip(&rk.data).zip(&q.data) {
+            if orig != 0.0 {
+                assert_eq!(removed == 0.0, quant == 0.0, "element {orig}");
+            }
+        }
+    }
+
+    #[test]
+    fn target_fraction_search() {
+        let mut rng = SplitMix64::new(3);
+        let x = Matrix::randn(128, 128, 1.0, &mut rng);
+        for target in [0.05f32, 0.2, 0.5] {
+            let rk = RemoveKernel::for_target_fraction(&x, target);
+            let got = rk.removed_fraction(&x);
+            assert!((got - target).abs() < 0.02, "target {target} got {got}");
+        }
+    }
+
+    #[test]
+    fn monotone_in_theta() {
+        let mut rng = SplitMix64::new(4);
+        let x = Matrix::randn(64, 64, 1.0, &mut rng);
+        let mut prev = -1.0f32;
+        for theta in [0.0, 0.001, 0.01, 0.05, 0.2] {
+            let f = RemoveKernel::new(theta).removed_fraction(&x);
+            assert!(f >= prev);
+            prev = f;
+        }
+    }
+}

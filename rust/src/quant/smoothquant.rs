@@ -1,0 +1,152 @@
+//! SmoothQuant baseline (Xiao et al., 2023) — scale migration.
+//!
+//! Offline, per linear layer: s_j = max|X_:,j|^a / max|W_j,:|^(1−a); the
+//! activation is divided column-wise by s and the compensating diag(s) is
+//! folded into the weight rows, moving quantization difficulty from
+//! activations to weights. Then standard per-token (activations) and
+//! per-channel (weights) quantization apply.
+//!
+//! Migration strength a follows the paper's Appendix B.1: 0.5 for OPT-like
+//! and 0.8 for LLaMA-like models.
+
+use super::EPS;
+use crate::tensor::Matrix;
+
+#[derive(Clone, Debug)]
+pub struct SmoothQuant {
+    /// Migration strength a ∈ [0, 1].
+    pub strength: f32,
+    /// Per-input-channel smoothing scales, computed from calibration data.
+    pub scales: Vec<f32>,
+}
+
+impl SmoothQuant {
+    /// Calibrate smoothing scales from a calibration activation batch and
+    /// the layer weight (I × O).
+    pub fn calibrate(x_calib: &Matrix, w: &Matrix, strength: f32) -> Self {
+        assert_eq!(x_calib.cols, w.rows, "activation/weight channel mismatch");
+        assert!((0.0..=1.0).contains(&strength));
+        let act_max = x_calib.col_abs_max(); // per input channel j
+        // per input channel max over the weight row j
+        let w_row_max: Vec<f32> = (0..w.rows)
+            .map(|j| w.row(j).iter().fold(0.0f32, |m, &v| m.max(v.abs())))
+            .collect();
+        let scales = act_max
+            .iter()
+            .zip(&w_row_max)
+            .map(|(&a, &wm)| {
+                let s = a.max(EPS).powf(strength) / wm.max(EPS).powf(1.0 - strength);
+                s.max(EPS)
+            })
+            .collect();
+        SmoothQuant { strength, scales }
+    }
+
+    /// X' = X · diag(1/s): divide activation columns by the smoothing scale.
+    pub fn smooth_activation(&self, x: &Matrix) -> Matrix {
+        assert_eq!(x.cols, self.scales.len());
+        let mut out = x.clone();
+        for i in 0..out.rows {
+            for (v, &s) in out.row_mut(i).iter_mut().zip(&self.scales) {
+                *v /= s;
+            }
+        }
+        out
+    }
+
+    /// W' = diag(s) · W: fold the compensation into the weight rows, so
+    /// X'·W' == X·W exactly (before quantization).
+    pub fn fold_into_weight(&self, w: &Matrix) -> Matrix {
+        assert_eq!(w.rows, self.scales.len());
+        let mut out = w.clone();
+        for (j, &s) in self.scales.iter().enumerate() {
+            for v in out.row_mut(j) {
+                *v *= s;
+            }
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::quant::{crossquant::CrossQuant, per_token::PerToken, ActQuantizer, Bits};
+    use crate::tensor::SplitMix64;
+
+    fn calib_pair(outlier_scale: f32) -> (Matrix, Matrix) {
+        let mut rng = SplitMix64::new(21);
+        let mut x = Matrix::randn(128, 64, 1.0, &mut rng);
+        for i in 0..x.rows {
+            for j in 0..3 {
+                let v = x.get(i, j) * outlier_scale;
+                x.set(i, j, v);
+            }
+        }
+        let w = Matrix::randn(64, 32, 0.1, &mut rng);
+        (x, w)
+    }
+
+    #[test]
+    fn smoothing_is_function_preserving() {
+        let (x, w) = calib_pair(30.0);
+        let sq = SmoothQuant::calibrate(&x, &w, 0.5);
+        let y = x.matmul(&w);
+        let y2 = sq.smooth_activation(&x).matmul(&sq.fold_into_weight(&w));
+        let rel = y.distance(&y2) / y.frobenius();
+        assert!(rel < 1e-5, "rel {rel}");
+    }
+
+    #[test]
+    fn reduces_activation_outlier_ratio() {
+        let (x, w) = calib_pair(30.0);
+        let sq = SmoothQuant::calibrate(&x, &w, 0.5);
+        let xs = sq.smooth_activation(&x);
+        let ratio = |m: &Matrix| {
+            let c = m.col_abs_max();
+            let max = c.iter().cloned().fold(0.0f32, f32::max);
+            let med = {
+                let mut v = c.clone();
+                v.sort_by(f32::total_cmp);
+                v[v.len() / 2]
+            };
+            max / med
+        };
+        assert!(ratio(&xs) < ratio(&x) * 0.5, "{} vs {}", ratio(&xs), ratio(&x));
+    }
+
+    #[test]
+    fn improves_per_token_matmul_error_under_outliers() {
+        let (x, w) = calib_pair(30.0);
+        let y = x.matmul(&w);
+        let quant = PerToken::new(Bits::Int8);
+
+        // naive per-token W8A8
+        let y_naive = quant.fake_quant(&x).matmul(&w);
+        // smoothquant W8A8
+        let sq = SmoothQuant::calibrate(&x, &w, 0.5);
+        let y_sq = quant
+            .fake_quant(&sq.smooth_activation(&x))
+            .matmul(&sq.fold_into_weight(&w));
+
+        let e_naive = y.distance(&y_naive) / y.frobenius();
+        let e_sq = y.distance(&y_sq) / y.frobenius();
+        assert!(e_sq < e_naive, "sq={e_sq} naive={e_naive}");
+    }
+
+    #[test]
+    fn crossquant_competitive_without_calibration() {
+        // CrossQuant needs no calibration pass yet lands in the same error
+        // regime as calibrated SmoothQuant (paper Table 2 W8A8 group).
+        let (x, w) = calib_pair(30.0);
+        let y = x.matmul(&w);
+        let sq = SmoothQuant::calibrate(&x, &w, 0.5);
+        let y_sq = PerToken::new(Bits::Int8)
+            .fake_quant(&sq.smooth_activation(&x))
+            .matmul(&sq.fold_into_weight(&w));
+        let y_cq = CrossQuant::new(0.15, Bits::Int8).fake_quant(&x).matmul(&w);
+        let e_sq = y.distance(&y_sq) / y.frobenius();
+        let e_cq = y.distance(&y_cq) / y.frobenius();
+        assert!(e_cq < e_sq * 3.0, "cq={e_cq} sq={e_sq}");
+    }
+}

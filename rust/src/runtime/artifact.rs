@@ -1,0 +1,84 @@
+//! Artifact discovery: locate the artifacts directory, validate that the
+//! HLO inventory in manifest.json matches the files on disk.
+
+use std::path::{Path, PathBuf};
+
+use anyhow::{ensure, Result};
+
+use crate::model::weights::{Manifest, Weights};
+
+/// The set of AOT artifacts this runtime understands.
+pub const KNOWN_ARTIFACTS: &[&str] =
+    &["lm_fp", "lm_aq", "lm_aq_jnp", "lm_rk", "lm_acts", "quant_ops", "qmatmul"];
+
+#[derive(Clone, Debug)]
+pub struct ArtifactStore {
+    pub dir: PathBuf,
+}
+
+impl ArtifactStore {
+    /// Locate artifacts: explicit path, `$CROSSQUANT_ARTIFACTS`, or
+    /// `./artifacts` relative to the working directory.
+    pub fn discover(explicit: Option<&Path>) -> Result<ArtifactStore> {
+        let dir = if let Some(p) = explicit {
+            p.to_path_buf()
+        } else if let Ok(env) = std::env::var("CROSSQUANT_ARTIFACTS") {
+            PathBuf::from(env)
+        } else {
+            PathBuf::from("artifacts")
+        };
+        ensure!(
+            dir.join("manifest.json").exists(),
+            "no manifest.json under {} — run `make artifacts` first",
+            dir.display()
+        );
+        Ok(ArtifactStore { dir })
+    }
+
+    pub fn hlo_path(&self, name: &str) -> PathBuf {
+        self.dir.join(format!("{name}.hlo.txt"))
+    }
+
+    pub fn load_weights(&self) -> Result<Weights> {
+        Weights::load(&self.dir)
+    }
+
+    pub fn manifest(&self) -> Result<Manifest> {
+        Manifest::parse(&std::fs::read_to_string(self.dir.join("manifest.json"))?)
+    }
+
+    /// Which known artifacts are present on disk?
+    pub fn available(&self) -> Vec<&'static str> {
+        KNOWN_ARTIFACTS.iter().copied().filter(|n| self.hlo_path(n).exists()).collect()
+    }
+
+    /// Fail unless every known artifact exists (used by the CLI preflight).
+    pub fn validate(&self) -> Result<()> {
+        for name in KNOWN_ARTIFACTS {
+            ensure!(
+                self.hlo_path(name).exists(),
+                "missing artifact {} — run `make artifacts`",
+                self.hlo_path(name).display()
+            );
+        }
+        ensure!(self.dir.join("weights.bin").exists(), "missing weights.bin");
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn discover_missing_dir_errors() {
+        let r = ArtifactStore::discover(Some(Path::new("/nonexistent/nowhere")));
+        assert!(r.is_err());
+    }
+
+    #[test]
+    fn hlo_path_shape() {
+        let s = ArtifactStore { dir: PathBuf::from("/tmp/x") };
+        assert_eq!(s.hlo_path("lm_fp"), PathBuf::from("/tmp/x/lm_fp.hlo.txt"));
+    }
+}

@@ -1,0 +1,64 @@
+//! PJRT client wrapper with a compiled-executable cache.
+//!
+//! Each HLO-text artifact is parsed (`HloModuleProto::from_text_file` —
+//! the text parser reassigns the 64-bit instruction ids jax ≥0.5 emits,
+//! which xla_extension 0.5.1 would otherwise reject) and compiled exactly
+//! once; executions reuse the cached `PjRtLoadedExecutable`.
+
+use std::collections::HashMap;
+
+use anyhow::{anyhow, Result};
+
+use super::artifact::ArtifactStore;
+
+pub struct Runtime {
+    pub store: ArtifactStore,
+    client: xla::PjRtClient,
+    cache: HashMap<String, xla::PjRtLoadedExecutable>,
+    /// Compile + execute counters (exposed through coordinator metrics).
+    pub compiles: usize,
+    pub executions: usize,
+}
+
+impl Runtime {
+    pub fn new(store: ArtifactStore) -> Result<Runtime> {
+        let client = xla::PjRtClient::cpu()?;
+        Ok(Runtime { store, client, cache: HashMap::new(), compiles: 0, executions: 0 })
+    }
+
+    pub fn platform(&self) -> String {
+        self.client.platform_name()
+    }
+
+    /// Compile (or fetch from cache) an artifact by name.
+    pub fn prepare(&mut self, name: &str) -> Result<()> {
+        if self.cache.contains_key(name) {
+            return Ok(());
+        }
+        let path = self.store.hlo_path(name);
+        let proto = xla::HloModuleProto::from_text_file(&path)
+            .map_err(|e| anyhow!("parsing {}: {e}", path.display()))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = self.client.compile(&comp)?;
+        self.cache.insert(name.to_string(), exe);
+        self.compiles += 1;
+        Ok(())
+    }
+
+    /// Execute an artifact. All our HLOs are lowered with
+    /// `return_tuple=True`, so the single output buffer is a tuple literal;
+    /// we decompose it into its elements.
+    pub fn execute(&mut self, name: &str, inputs: &[xla::Literal]) -> Result<Vec<xla::Literal>> {
+        self.prepare(name)?;
+        let exe = self.cache.get(name).expect("prepared above");
+        let result = exe.execute::<xla::Literal>(inputs)?;
+        let literal = result[0][0].to_literal_sync()?;
+        self.executions += 1;
+        Ok(literal.to_tuple()?)
+    }
+
+    /// Number of compiled executables resident.
+    pub fn cached(&self) -> usize {
+        self.cache.len()
+    }
+}

@@ -1,0 +1,76 @@
+//! Matrix / token / scalar ⇄ xla::Literal marshalling.
+
+use anyhow::{ensure, Result};
+
+use crate::tensor::Matrix;
+
+/// (B, S) token batch → i32 literal. Pads short rows with `pad` up to S.
+pub fn tokens_literal(batch: &[Vec<u32>], seq_len: usize, pad: u32) -> Result<xla::Literal> {
+    ensure!(!batch.is_empty(), "empty token batch");
+    let b = batch.len();
+    let mut flat = Vec::with_capacity(b * seq_len);
+    for row in batch {
+        ensure!(row.len() <= seq_len, "sequence longer than artifact seq_len");
+        flat.extend(row.iter().map(|&t| t as i32));
+        flat.extend(std::iter::repeat(pad as i32).take(seq_len - row.len()));
+    }
+    Ok(xla::Literal::vec1(&flat).reshape(&[b as i64, seq_len as i64])?)
+}
+
+pub fn matrix_literal(m: &Matrix) -> Result<xla::Literal> {
+    Ok(xla::Literal::vec1(&m.data).reshape(&[m.rows as i64, m.cols as i64])?)
+}
+
+pub fn vec_literal(v: &[f32]) -> xla::Literal {
+    xla::Literal::vec1(v)
+}
+
+pub fn scalar_literal(v: f32) -> xla::Literal {
+    xla::Literal::scalar(v)
+}
+
+pub fn literal_to_vec(lit: &xla::Literal) -> Result<Vec<f32>> {
+    Ok(lit.to_vec::<f32>()?)
+}
+
+pub fn literal_to_scalar(lit: &xla::Literal) -> Result<f32> {
+    Ok(lit.get_first_element::<f32>()?)
+}
+
+/// Interpret a literal of shape (rows, cols) as a Matrix.
+pub fn literal_to_matrix(lit: &xla::Literal, rows: usize, cols: usize) -> Result<Matrix> {
+    let data = lit.to_vec::<f32>()?;
+    ensure!(data.len() == rows * cols, "literal size {} != {rows}x{cols}", data.len());
+    Ok(Matrix::from_vec(rows, cols, data))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn tokens_literal_pads() {
+        let lit = tokens_literal(&[vec![1, 2, 3], vec![4]], 4, 0).unwrap();
+        let v = lit.to_vec::<i32>().unwrap();
+        assert_eq!(v, vec![1, 2, 3, 0, 4, 0, 0, 0]);
+    }
+
+    #[test]
+    fn tokens_literal_rejects_overflow() {
+        assert!(tokens_literal(&[vec![1, 2, 3]], 2, 0).is_err());
+    }
+
+    #[test]
+    fn matrix_roundtrip() {
+        let m = Matrix::from_vec(2, 3, vec![1., 2., 3., 4., 5., 6.]);
+        let lit = matrix_literal(&m).unwrap();
+        let back = literal_to_matrix(&lit, 2, 3).unwrap();
+        assert_eq!(back, m);
+    }
+
+    #[test]
+    fn scalar_roundtrip() {
+        let lit = scalar_literal(0.15);
+        assert!((literal_to_scalar(&lit).unwrap() - 0.15).abs() < 1e-7);
+    }
+}

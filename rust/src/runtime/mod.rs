@@ -1,0 +1,10 @@
+//! PJRT runtime: load the AOT HLO-text artifacts produced by
+//! `python/compile/aot.py`, compile them once on the CPU PJRT client, and
+//! execute them from the request path. Python never runs here.
+
+pub mod artifact;
+pub mod client;
+pub mod literal;
+
+pub use artifact::ArtifactStore;
+pub use client::Runtime;

@@ -1,0 +1,201 @@
+//! Minimal dense-tensor substrate: a row-major f32 matrix plus the handful
+//! of operations the quantization library and the native forward pass need.
+//!
+//! Deliberately not a general tensor library — every op here exists because
+//! a quantizer, the analysis engine, or `model::forward` uses it on a hot
+//! path, and each is written to be straightforwardly auto-vectorizable.
+
+pub mod rng;
+
+pub use rng::SplitMix64;
+
+/// Row-major 2-D f32 matrix.
+#[derive(Clone, Debug, PartialEq)]
+pub struct Matrix {
+    pub rows: usize,
+    pub cols: usize,
+    pub data: Vec<f32>,
+}
+
+impl Matrix {
+    pub fn zeros(rows: usize, cols: usize) -> Self {
+        Matrix { rows, cols, data: vec![0.0; rows * cols] }
+    }
+
+    pub fn from_vec(rows: usize, cols: usize, data: Vec<f32>) -> Self {
+        assert_eq!(data.len(), rows * cols, "shape/data mismatch");
+        Matrix { rows, cols, data }
+    }
+
+    pub fn from_fn(rows: usize, cols: usize, mut f: impl FnMut(usize, usize) -> f32) -> Self {
+        let mut data = Vec::with_capacity(rows * cols);
+        for i in 0..rows {
+            for j in 0..cols {
+                data.push(f(i, j));
+            }
+        }
+        Matrix { rows, cols, data }
+    }
+
+    #[inline]
+    pub fn get(&self, i: usize, j: usize) -> f32 {
+        self.data[i * self.cols + j]
+    }
+
+    #[inline]
+    pub fn set(&mut self, i: usize, j: usize, v: f32) {
+        self.data[i * self.cols + j] = v;
+    }
+
+    #[inline]
+    pub fn row(&self, i: usize) -> &[f32] {
+        &self.data[i * self.cols..(i + 1) * self.cols]
+    }
+
+    #[inline]
+    pub fn row_mut(&mut self, i: usize) -> &mut [f32] {
+        &mut self.data[i * self.cols..(i + 1) * self.cols]
+    }
+
+    pub fn len(&self) -> usize {
+        self.data.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.data.is_empty()
+    }
+
+    /// Per-row absolute maximum: the paper's `t` vector (len = rows).
+    pub fn row_abs_max(&self) -> Vec<f32> {
+        (0..self.rows)
+            .map(|i| self.row(i).iter().fold(0.0f32, |m, &v| m.max(v.abs())))
+            .collect()
+    }
+
+    /// Per-column absolute maximum: the paper's `c` vector (len = cols).
+    pub fn col_abs_max(&self) -> Vec<f32> {
+        let mut c = vec![0.0f32; self.cols];
+        for i in 0..self.rows {
+            let row = self.row(i);
+            for (cv, &v) in c.iter_mut().zip(row) {
+                let a = v.abs();
+                if a > *cv {
+                    *cv = a;
+                }
+            }
+        }
+        c
+    }
+
+    /// Dense matmul: self (m×k) · rhs (k×n) → (m×n).
+    ///
+    /// Simple ikj loop order with the inner loop over contiguous rows of
+    /// `rhs`, which LLVM vectorizes; good enough for the tiny-model native
+    /// path (the PJRT path carries the large shapes).
+    pub fn matmul(&self, rhs: &Matrix) -> Matrix {
+        assert_eq!(self.cols, rhs.rows, "matmul shape mismatch");
+        let (m, k, n) = (self.rows, self.cols, rhs.cols);
+        let mut out = Matrix::zeros(m, n);
+        for i in 0..m {
+            let a_row = self.row(i);
+            let o_row = out.row_mut(i);
+            for (p, &a) in a_row.iter().enumerate().take(k) {
+                if a == 0.0 {
+                    continue;
+                }
+                let b_row = &rhs.data[p * n..(p + 1) * n];
+                for (o, &b) in o_row.iter_mut().zip(b_row) {
+                    *o += a * b;
+                }
+            }
+        }
+        out
+    }
+
+    pub fn transpose(&self) -> Matrix {
+        let mut out = Matrix::zeros(self.cols, self.rows);
+        for i in 0..self.rows {
+            for j in 0..self.cols {
+                out.set(j, i, self.get(i, j));
+            }
+        }
+        out
+    }
+
+    pub fn map(&self, f: impl Fn(f32) -> f32) -> Matrix {
+        Matrix {
+            rows: self.rows,
+            cols: self.cols,
+            data: self.data.iter().map(|&v| f(v)).collect(),
+        }
+    }
+
+    /// Frobenius norm of (self − other), for error metrics.
+    pub fn distance(&self, other: &Matrix) -> f32 {
+        assert_eq!((self.rows, self.cols), (other.rows, other.cols));
+        self.data
+            .iter()
+            .zip(&other.data)
+            .map(|(a, b)| (a - b) * (a - b))
+            .sum::<f32>()
+            .sqrt()
+    }
+
+    pub fn frobenius(&self) -> f32 {
+        self.data.iter().map(|v| v * v).sum::<f32>().sqrt()
+    }
+
+    /// Gaussian-filled matrix (Box–Muller over SplitMix64) — the substrate
+    /// for synthetic activations and property tests.
+    pub fn randn(rows: usize, cols: usize, std: f32, rng: &mut SplitMix64) -> Matrix {
+        let mut data = Vec::with_capacity(rows * cols);
+        for _ in 0..rows * cols {
+            data.push(rng.normal() as f32 * std);
+        }
+        Matrix { rows, cols, data }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn matmul_identity() {
+        let a = Matrix::from_vec(2, 3, vec![1., 2., 3., 4., 5., 6.]);
+        let eye = Matrix::from_fn(3, 3, |i, j| if i == j { 1.0 } else { 0.0 });
+        assert_eq!(a.matmul(&eye), a);
+    }
+
+    #[test]
+    fn matmul_known_values() {
+        let a = Matrix::from_vec(2, 2, vec![1., 2., 3., 4.]);
+        let b = Matrix::from_vec(2, 2, vec![1., 1., 1., 1.]);
+        let c = a.matmul(&b);
+        assert_eq!(c.data, vec![3., 3., 7., 7.]);
+    }
+
+    #[test]
+    fn row_col_abs_max() {
+        let m = Matrix::from_vec(2, 3, vec![1., -5., 2., -3., 4., 0.]);
+        assert_eq!(m.row_abs_max(), vec![5., 4.]);
+        assert_eq!(m.col_abs_max(), vec![3., 5., 2.]);
+    }
+
+    #[test]
+    fn transpose_roundtrip() {
+        let mut rng = SplitMix64::new(1);
+        let m = Matrix::randn(7, 5, 1.0, &mut rng);
+        assert_eq!(m.transpose().transpose(), m);
+    }
+
+    #[test]
+    fn randn_moments() {
+        let mut rng = SplitMix64::new(42);
+        let m = Matrix::randn(200, 200, 1.0, &mut rng);
+        let mean = m.data.iter().sum::<f32>() / m.len() as f32;
+        let var = m.data.iter().map(|v| (v - mean) * (v - mean)).sum::<f32>() / m.len() as f32;
+        assert!(mean.abs() < 0.02, "mean {mean}");
+        assert!((var - 1.0).abs() < 0.05, "var {var}");
+    }
+}

@@ -1,0 +1,6 @@
+//! Small self-contained utilities (the offline build has no serde/clap —
+//! see Cargo.toml).
+
+pub mod json;
+
+pub use json::Json;

@@ -1,0 +1,212 @@
+//! Coordinator integration tests: batching behaviour, ordering,
+//! backpressure, and failure injection (broken artifacts, unknown weight
+//! sets, out-of-range requests). The failure tests run without artifacts;
+//! the happy-path tests skip when `make artifacts` hasn't run.
+
+use std::time::Duration;
+
+use crossquant::coordinator::scheduler::{CoordinatorConfig, EvalCoordinator, EvalRequest};
+use crossquant::coordinator::ActScheme;
+use crossquant::corpus::CorpusGen;
+use crossquant::model::ModelConfig;
+use crossquant::runtime::ArtifactStore;
+
+fn real_store() -> Option<(ArtifactStore, crossquant::model::weights::Weights)> {
+    let store = ArtifactStore::discover(None).ok()?;
+    store.validate().ok()?;
+    let w = store.load_weights().ok()?;
+    Some((store, w))
+}
+
+/// A store pointing at a directory with a valid manifest but missing HLO
+/// files — the executor must fail requests gracefully, not crash.
+fn broken_store() -> (ArtifactStore, tempdir::TempDir) {
+    let dir = tempdir::TempDir::new("cq-broken");
+    // minimal-but-parseable manifest
+    let manifest = r#"{
+        "config": {"vocab": 64, "d_model": 16, "n_layers": 1, "n_heads": 2,
+                   "d_ff": 32, "seq_len": 12, "eval_batch": 2},
+        "params": [], "total_params": 0
+    }"#;
+    std::fs::write(dir.path().join("manifest.json"), manifest).unwrap();
+    (ArtifactStore { dir: dir.path().to_path_buf() }, dir)
+}
+
+/// std has no tempdir; 8 lines suffice.
+mod tempdir {
+    pub struct TempDir(std::path::PathBuf);
+
+    impl TempDir {
+        pub fn new(prefix: &str) -> TempDir {
+            let p = std::env::temp_dir().join(format!(
+                "{prefix}-{}-{:?}",
+                std::process::id(),
+                std::time::SystemTime::now()
+                    .duration_since(std::time::UNIX_EPOCH)
+                    .unwrap()
+                    .as_nanos()
+            ));
+            std::fs::create_dir_all(&p).unwrap();
+            TempDir(p)
+        }
+
+        pub fn path(&self) -> &std::path::Path {
+            &self.0
+        }
+    }
+
+    impl Drop for TempDir {
+        fn drop(&mut self) {
+            let _ = std::fs::remove_dir_all(&self.0);
+        }
+    }
+}
+
+#[test]
+fn failure_injection_missing_artifact() {
+    let (store, _guard) = broken_store();
+    let cfg = ModelConfig { vocab: 64, d_model: 16, n_layers: 1, n_heads: 2, d_ff: 32, seq_len: 12, eval_batch: 2 };
+    let coordinator = EvalCoordinator::start(
+        store,
+        cfg,
+        vec![("w".into(), vec![0.0; 4])],
+        CoordinatorConfig { batch_size: 2, max_batch_delay: Duration::from_millis(2), max_queue: 8 },
+    );
+    let handle = coordinator
+        .submit(EvalRequest {
+            tokens: vec![1, 2, 3],
+            scheme: ActScheme::Fp,
+            weight_set: "w".into(),
+        })
+        .expect("submit should succeed");
+    let err = handle.wait().expect_err("execution must fail");
+    assert!(format!("{err}").contains("failed"), "unexpected error: {err}");
+    assert!(coordinator.metrics.failed.load(std::sync::atomic::Ordering::Relaxed) >= 1);
+}
+
+#[test]
+fn rejects_out_of_range_sequences() {
+    let (store, _guard) = broken_store();
+    let cfg = ModelConfig { vocab: 64, d_model: 16, n_layers: 1, n_heads: 2, d_ff: 32, seq_len: 12, eval_batch: 2 };
+    let coordinator =
+        EvalCoordinator::start(store, cfg, vec![], CoordinatorConfig::default());
+    // too short
+    assert!(coordinator
+        .submit(EvalRequest { tokens: vec![1], scheme: ActScheme::Fp, weight_set: "w".into() })
+        .is_err());
+    // too long
+    assert!(coordinator
+        .submit(EvalRequest {
+            tokens: vec![0; 13],
+            scheme: ActScheme::Fp,
+            weight_set: "w".into()
+        })
+        .is_err());
+}
+
+#[test]
+fn unknown_weight_set_fails_request_not_process() {
+    let Some((store, weights)) = real_store() else {
+        eprintln!("skipping: no artifacts");
+        return;
+    };
+    let cfg = weights.config;
+    let coordinator = EvalCoordinator::start(
+        store,
+        cfg,
+        vec![("good".into(), weights.flat.clone())],
+        CoordinatorConfig::default(),
+    );
+    let mut gen = CorpusGen::new(cfg.vocab, 1);
+    let bad = coordinator
+        .submit(EvalRequest {
+            tokens: gen.sequence(cfg.seq_len),
+            scheme: ActScheme::Fp,
+            weight_set: "nope".into(),
+        })
+        .unwrap();
+    assert!(bad.wait().is_err());
+    // the coordinator keeps serving afterwards
+    let good = coordinator
+        .submit(EvalRequest {
+            tokens: gen.sequence(cfg.seq_len),
+            scheme: ActScheme::Fp,
+            weight_set: "good".into(),
+        })
+        .unwrap();
+    let resp = good.wait().unwrap();
+    assert_eq!(resp.nll.len(), cfg.seq_len - 1);
+}
+
+#[test]
+fn batches_fill_and_results_map_back() {
+    let Some((store, weights)) = real_store() else {
+        eprintln!("skipping: no artifacts");
+        return;
+    };
+    let cfg = weights.config;
+    let coordinator = EvalCoordinator::start(
+        store,
+        cfg,
+        vec![("w".into(), weights.flat.clone())],
+        CoordinatorConfig {
+            batch_size: cfg.eval_batch,
+            max_batch_delay: Duration::from_millis(3),
+            max_queue: 64,
+        },
+    );
+    let mut gen = CorpusGen::new(cfg.vocab, 2);
+    // distinct lengths so each response is attributable to its request
+    let lens: Vec<usize> = (0..cfg.eval_batch * 2).map(|i| cfg.seq_len - (i % 4)).collect();
+    let handles: Vec<_> = lens
+        .iter()
+        .map(|&l| {
+            coordinator
+                .submit(EvalRequest {
+                    tokens: gen.sequence(l),
+                    scheme: ActScheme::CrossQuant { alpha: 0.15, qmax: 127.0 },
+                    weight_set: "w".into(),
+                })
+                .unwrap()
+        })
+        .collect();
+    for (h, &l) in handles.into_iter().zip(&lens) {
+        let r = h.wait().unwrap();
+        assert_eq!(r.nll.len(), l - 1, "length-specific response mapping");
+        assert!(r.aux > 0.0 && r.aux < 1.0);
+    }
+    let m = &coordinator.metrics;
+    use std::sync::atomic::Ordering::Relaxed;
+    assert_eq!(m.completed.load(Relaxed), (cfg.eval_batch * 2) as u64);
+    assert!(m.mean_batch_size() > 1.0, "batching should aggregate requests");
+}
+
+#[test]
+fn partial_batch_flushes_on_deadline() {
+    let Some((store, weights)) = real_store() else {
+        eprintln!("skipping: no artifacts");
+        return;
+    };
+    let cfg = weights.config;
+    let coordinator = EvalCoordinator::start(
+        store,
+        cfg,
+        vec![("w".into(), weights.flat.clone())],
+        CoordinatorConfig {
+            batch_size: cfg.eval_batch,
+            max_batch_delay: Duration::from_millis(5),
+            max_queue: 8,
+        },
+    );
+    let mut gen = CorpusGen::new(cfg.vocab, 3);
+    // a single request can never fill the batch — only the deadline flushes it
+    let h = coordinator
+        .submit(EvalRequest {
+            tokens: gen.sequence(cfg.seq_len),
+            scheme: ActScheme::Fp,
+            weight_set: "w".into(),
+        })
+        .unwrap();
+    let r = h.wait_timeout(Duration::from_secs(120)).unwrap();
+    assert_eq!(r.nll.len(), cfg.seq_len - 1);
+}

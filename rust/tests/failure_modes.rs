@@ -1,0 +1,116 @@
+//! Failure-mode tests: corrupt artifacts, malformed manifests, truncated
+//! weight files, and JSON round-trips. None of these require `make
+//! artifacts`.
+
+use std::path::PathBuf;
+
+use crossquant::eval::harness::{Row, Table};
+use crossquant::model::weights::{Manifest, Weights};
+use crossquant::runtime::ArtifactStore;
+use crossquant::util::Json;
+
+fn tmp_dir(tag: &str) -> PathBuf {
+    let p = std::env::temp_dir().join(format!(
+        "cq-fail-{tag}-{}-{}",
+        std::process::id(),
+        std::time::SystemTime::now().duration_since(std::time::UNIX_EPOCH).unwrap().as_nanos()
+    ));
+    std::fs::create_dir_all(&p).unwrap();
+    p
+}
+
+const GOOD_MANIFEST: &str = r#"{
+  "config": {"vocab": 8, "d_model": 4, "n_layers": 1, "n_heads": 2,
+             "d_ff": 8, "seq_len": 6, "eval_batch": 2},
+  "params": [{"name": "tok_emb", "shape": [8, 4], "offset": 0, "size": 32}],
+  "total_params": 32
+}"#;
+
+#[test]
+fn manifest_parses_minimal() {
+    let m = Manifest::parse(GOOD_MANIFEST).unwrap();
+    assert_eq!(m.config.vocab, 8);
+    assert_eq!(m.params.len(), 1);
+    assert!(m.train.is_none());
+}
+
+#[test]
+fn manifest_rejects_missing_config() {
+    assert!(Manifest::parse(r#"{"params": [], "total_params": 0}"#).is_err());
+}
+
+#[test]
+fn manifest_rejects_non_json() {
+    assert!(Manifest::parse("HloModule not json").is_err());
+    assert!(Manifest::parse("").is_err());
+}
+
+#[test]
+fn weights_load_rejects_truncated_bin() {
+    let dir = tmp_dir("trunc");
+    std::fs::write(dir.join("manifest.json"), GOOD_MANIFEST).unwrap();
+    std::fs::write(dir.join("weights.bin"), vec![0u8; 16]).unwrap(); // needs 128
+    let err = Weights::load(&dir).unwrap_err();
+    assert!(format!("{err}").contains("weights.bin"), "{err}");
+    std::fs::remove_dir_all(dir).ok();
+}
+
+#[test]
+fn weights_load_missing_files() {
+    let dir = tmp_dir("missing");
+    assert!(Weights::load(&dir).is_err()); // no manifest
+    std::fs::write(dir.join("manifest.json"), GOOD_MANIFEST).unwrap();
+    assert!(Weights::load(&dir).is_err()); // no weights.bin
+    std::fs::remove_dir_all(dir).ok();
+}
+
+#[test]
+fn artifact_store_validate_reports_missing_hlo() {
+    let dir = tmp_dir("nohlo");
+    std::fs::write(dir.join("manifest.json"), GOOD_MANIFEST).unwrap();
+    let store = ArtifactStore::discover(Some(&dir)).unwrap();
+    assert!(store.available().is_empty());
+    let err = store.validate().unwrap_err();
+    assert!(format!("{err}").contains("make artifacts"), "{err}");
+    std::fs::remove_dir_all(dir).ok();
+}
+
+#[test]
+fn artifact_store_discover_needs_manifest() {
+    let dir = tmp_dir("empty");
+    assert!(ArtifactStore::discover(Some(&dir)).is_err());
+    std::fs::remove_dir_all(dir).ok();
+}
+
+#[test]
+fn table_json_roundtrips_through_parser() {
+    let mut t = Table::new("Table 2 — perplexity", vec!["Wiki2", "C4"]);
+    t.push(Row::new("FP16", "W16A16", vec![5.47, 7.52]));
+    t.push(Row::new("Per-token", "W4A4", vec![2e4, f64::NAN]));
+    let json = t.to_json();
+    let re = Json::parse(&json.render_pretty());
+    // NaN is not valid JSON — the writer must have produced something the
+    // parser accepts or the render should be fixed; assert it's handled.
+    match re {
+        Ok(v) => {
+            assert_eq!(v.get("title").unwrap().as_str(), Some("Table 2 — perplexity"));
+            assert_eq!(v.get("rows").unwrap().as_arr().unwrap().len(), 2);
+        }
+        Err(e) => panic!("table JSON must be parseable: {e}"),
+    }
+}
+
+#[test]
+fn corrupt_hlo_fails_gracefully_in_runtime() {
+    let dir = tmp_dir("badhlo");
+    std::fs::write(dir.join("manifest.json"), GOOD_MANIFEST).unwrap();
+    std::fs::write(dir.join("lm_fp.hlo.txt"), "this is not hlo").unwrap();
+    let store = ArtifactStore::discover(Some(&dir)).unwrap();
+    let mut runtime = match crossquant::runtime::Runtime::new(store) {
+        Ok(r) => r,
+        Err(_) => return, // no PJRT in this environment — nothing to check
+    };
+    let err = runtime.prepare("lm_fp").unwrap_err();
+    assert!(format!("{err}").contains("lm_fp"), "{err}");
+    std::fs::remove_dir_all(dir).ok();
+}

@@ -1,0 +1,240 @@
+//! Integration tests over the PJRT runtime: the AOT artifacts must agree
+//! with the native rust implementations on identical inputs — the contract
+//! that makes the fast native sweeps trustworthy stand-ins for the
+//! three-layer path.
+//!
+//! All tests skip (pass trivially with a notice) when `make artifacts`
+//! has not been run; CI runs them after the artifact build.
+
+use crossquant::corpus::CorpusGen;
+use crossquant::model::{IdentitySite, NativeModel, QuantSite};
+use crossquant::quant::{crossquant::CrossQuant, per_token::PerToken, ActQuantizer, Bits};
+use crossquant::runtime::literal::{
+    literal_to_matrix, literal_to_scalar, literal_to_vec, matrix_literal, scalar_literal,
+    tokens_literal, vec_literal,
+};
+use crossquant::runtime::{ArtifactStore, Runtime};
+use crossquant::tensor::{Matrix, SplitMix64};
+
+fn setup() -> Option<(Runtime, crossquant::model::weights::Weights)> {
+    let store = ArtifactStore::discover(None).ok()?;
+    store.validate().ok()?;
+    let weights = store.load_weights().ok()?;
+    let runtime = Runtime::new(store).ok()?;
+    Some((runtime, weights))
+}
+
+macro_rules! require_artifacts {
+    () => {
+        match setup() {
+            Some(x) => x,
+            None => {
+                eprintln!("skipping: no artifacts (run `make artifacts`)");
+                return;
+            }
+        }
+    };
+}
+
+#[test]
+fn lm_fp_matches_native_forward() {
+    let (mut runtime, weights) = require_artifacts!();
+    let cfg = weights.config;
+    let model = NativeModel::new(weights.clone());
+
+    let mut gen = CorpusGen::new(cfg.vocab, 0xABC);
+    let rows = gen.batch(cfg.eval_batch, cfg.seq_len);
+    let tokens = tokens_literal(&rows, cfg.seq_len, 0).unwrap();
+    let w = vec_literal(&weights.flat);
+    let out = runtime.execute("lm_fp", &[tokens, w]).unwrap();
+    let nll = literal_to_vec(&out[0]).unwrap();
+
+    let per_row = cfg.seq_len - 1;
+    for (b, row_tokens) in rows.iter().enumerate() {
+        let native = model.forward_nll(row_tokens, &mut IdentitySite).unwrap();
+        for (i, &n) in native.iter().enumerate() {
+            let p = nll[b * per_row + i];
+            assert!(
+                (n - p).abs() < 2e-3 * n.abs().max(1.0),
+                "batch {b} pos {i}: native {n} pjrt {p}"
+            );
+        }
+    }
+}
+
+#[test]
+fn lm_aq_alpha_one_matches_native_per_token() {
+    let (mut runtime, weights) = require_artifacts!();
+    let cfg = weights.config;
+    let model = NativeModel::new(weights.clone());
+
+    let mut gen = CorpusGen::new(cfg.vocab, 0xDEF);
+    let rows = gen.batch(cfg.eval_batch, cfg.seq_len);
+    let tokens = tokens_literal(&rows, cfg.seq_len, 0).unwrap();
+    let w = vec_literal(&weights.flat);
+    let out = runtime
+        .execute("lm_aq", &[tokens, w, scalar_literal(1.0), scalar_literal(127.0)])
+        .unwrap();
+    let nll = literal_to_vec(&out[0]).unwrap();
+    let kfrac = literal_to_scalar(&out[1]).unwrap();
+
+    let per_row = cfg.seq_len - 1;
+    let mut site = QuantSite::new(PerToken::new(Bits::Int8));
+    let mut max_rel = 0.0f32;
+    for (b, row_tokens) in rows.iter().enumerate() {
+        let native = model.forward_nll(row_tokens, &mut site).unwrap();
+        for (i, &n) in native.iter().enumerate() {
+            let p = nll[b * per_row + i];
+            max_rel = max_rel.max((n - p).abs() / n.abs().max(1.0));
+        }
+    }
+    // quantization boundaries can flip under 1-ulp scale differences, so
+    // the tolerance is looser than the FP path but still tight in ppl terms
+    assert!(max_rel < 0.05, "max relative nll deviation {max_rel}");
+    assert!(kfrac > 0.0 && kfrac < 1.0, "kernel fraction {kfrac}");
+}
+
+#[test]
+fn lm_aq_kernel_fraction_tracks_alpha() {
+    let (mut runtime, weights) = require_artifacts!();
+    let cfg = weights.config;
+    let mut gen = CorpusGen::new(cfg.vocab, 0x123);
+    let rows = gen.batch(cfg.eval_batch, cfg.seq_len);
+    let tokens = tokens_literal(&rows, cfg.seq_len, 0).unwrap();
+    let w = vec_literal(&weights.flat);
+
+    let kfrac_at = |runtime: &mut Runtime, alpha: f32| {
+        let out = runtime
+            .execute(
+                "lm_aq",
+                &[tokens.clone(), w.clone(), scalar_literal(alpha), scalar_literal(127.0)],
+            )
+            .unwrap();
+        literal_to_scalar(&out[1]).unwrap()
+    };
+    let k15 = kfrac_at(&mut runtime, 0.15);
+    let k100 = kfrac_at(&mut runtime, 1.0);
+    assert!(k15 < k100, "crossquant kernel {k15} should undercut per-token {k100}");
+}
+
+#[test]
+fn lm_rk_reports_removed_fraction() {
+    let (mut runtime, weights) = require_artifacts!();
+    let cfg = weights.config;
+    let mut gen = CorpusGen::new(cfg.vocab, 0x55);
+    let rows = gen.batch(cfg.eval_batch, cfg.seq_len);
+    let tokens = tokens_literal(&rows, cfg.seq_len, 0).unwrap();
+    let w = vec_literal(&weights.flat);
+
+    let out = runtime.execute("lm_rk", &[tokens.clone(), w.clone(), scalar_literal(0.0)]).unwrap();
+    assert!(literal_to_scalar(&out[1]).unwrap() == 0.0);
+    let out = runtime.execute("lm_rk", &[tokens, w, scalar_literal(0.02)]).unwrap();
+    let frac = literal_to_scalar(&out[1]).unwrap();
+    assert!(frac > 0.0 && frac < 0.9, "removed fraction {frac}");
+}
+
+#[test]
+fn quant_ops_matches_rust_quantizer() {
+    let (mut runtime, _) = require_artifacts!();
+    // artifact shape is fixed at 512×256 (aot.py QT×QI)
+    let mut rng = SplitMix64::new(77);
+    let x = Matrix::randn(512, 256, 1.0, &mut rng);
+    let out = runtime
+        .execute(
+            "quant_ops",
+            &[matrix_literal(&x).unwrap(), scalar_literal(0.15), scalar_literal(127.0)],
+        )
+        .unwrap();
+    let xq = literal_to_matrix(&out[0], 512, 256).unwrap();
+    let kfrac = literal_to_scalar(&out[1]).unwrap();
+    let t = literal_to_vec(&out[2]).unwrap();
+    let c = literal_to_vec(&out[3]).unwrap();
+
+    let quant = CrossQuant::new(0.15, Bits::Int8);
+    let native = quant.fake_quant(&x);
+    let mut max_abs = 0.0f32;
+    for (a, b) in xq.data.iter().zip(&native.data) {
+        max_abs = max_abs.max((a - b).abs());
+    }
+    assert!(max_abs < 1e-4, "pallas vs rust fake-quant deviation {max_abs}");
+
+    let native_k = crossquant::analysis::kernel_fraction(&x, &quant.delta_field(&x));
+    assert!((kfrac - native_k).abs() < 5e-3, "kfrac pjrt {kfrac} rust {native_k}");
+
+    let tn = x.row_abs_max();
+    let cn = x.col_abs_max();
+    for (a, b) in t.iter().zip(&tn) {
+        assert!((a - b).abs() < 1e-6);
+    }
+    for (a, b) in c.iter().zip(&cn) {
+        assert!((a - b).abs() < 1e-6);
+    }
+}
+
+#[test]
+fn qmatmul_close_to_fp_product() {
+    let (mut runtime, _) = require_artifacts!();
+    let mut rng = SplitMix64::new(88);
+    let x = Matrix::randn(512, 256, 1.0, &mut rng);
+    let wm = Matrix::randn(256, 128, 0.05, &mut rng);
+    let out = runtime
+        .execute(
+            "qmatmul",
+            &[
+                matrix_literal(&x).unwrap(),
+                matrix_literal(&wm).unwrap(),
+                scalar_literal(0.15),
+                scalar_literal(127.0),
+            ],
+        )
+        .unwrap();
+    let y = literal_to_matrix(&out[0], 512, 128).unwrap();
+    let fp = x.matmul(&wm);
+    let rel = y.distance(&fp) / fp.frobenius();
+    assert!(rel < 0.02, "INT8 pallas matmul vs FP relative error {rel}");
+}
+
+#[test]
+fn executable_cache_compiles_once() {
+    let (mut runtime, weights) = require_artifacts!();
+    let cfg = weights.config;
+    let mut gen = CorpusGen::new(cfg.vocab, 0x9);
+    let rows = gen.batch(cfg.eval_batch, cfg.seq_len);
+    let tokens = tokens_literal(&rows, cfg.seq_len, 0).unwrap();
+    let w = vec_literal(&weights.flat);
+    for _ in 0..3 {
+        runtime.execute("lm_fp", &[tokens.clone(), w.clone()]).unwrap();
+    }
+    assert_eq!(runtime.compiles, 1);
+    assert_eq!(runtime.executions, 3);
+    assert_eq!(runtime.cached(), 1);
+}
+
+#[test]
+fn integer_path_tracks_fake_quant_on_trained_model() {
+    let (_, weights) = require_artifacts!();
+    use crossquant::model::quantized::{quantize_weights, WeightScheme};
+    use crossquant::model::{QuantPath, QuantizedModel};
+    let cfg = weights.config;
+    let mut gen = CorpusGen::new(cfg.vocab, 0x1417);
+    let seq = gen.sequence(cfg.seq_len);
+
+    // fake-quant protocol (the tables' path)
+    let mut wq = weights.clone();
+    quantize_weights(&mut wq, WeightScheme::PerChannel(Bits::Int8)).unwrap();
+    let fake = NativeModel::new(wq);
+    let mut site = QuantSite::new(CrossQuant::new(0.15, Bits::Int8));
+    let nll_fake = fake.forward_nll(&seq, &mut site).unwrap();
+
+    // integer deployment path
+    let qm = QuantizedModel::new(&weights, Bits::Int8, Bits::Int8, QuantPath::CrossQuant { alpha: 0.15 })
+        .unwrap();
+    let nll_int = qm.forward_nll(&seq).unwrap();
+
+    let mean_fake: f32 = nll_fake.iter().sum::<f32>() / nll_fake.len() as f32;
+    let mean_int: f32 = nll_int.iter().sum::<f32>() / nll_int.len() as f32;
+    assert!(
+        (mean_fake - mean_int).abs() < 0.15,
+        "fake-quant {mean_fake} vs integer {mean_int}: the tables' protocol must proxy deployment"
+    );
+}

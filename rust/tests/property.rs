@@ -1,0 +1,307 @@
+//! Property-based tests over the quantization invariants (hand-rolled
+//! randomized driver — the offline build has no proptest; see Cargo.toml).
+//! Each property runs across hundreds of random shapes / α / bit-widths
+//! and shrinks nothing but reports the failing seed, which reproduces
+//! deterministically.
+
+use crossquant::analysis::{kernel_fraction, kernel_mask};
+use crossquant::quant::{
+    crossquant::CrossQuant, pack::PackedMatrix, per_channel::GroupWise, per_token::PerToken,
+    remove_kernel::RemoveKernel, ActQuantizer, Bits,
+};
+use crossquant::tensor::{Matrix, SplitMix64};
+
+const CASES: usize = 200;
+
+/// Random matrix with occasional outlier columns and exact zeros.
+fn arb_matrix(rng: &mut SplitMix64) -> Matrix {
+    let rows = 1 + rng.below(60);
+    let cols = 1 + rng.below(60);
+    let mut x = Matrix::randn(rows, cols, 1.0, rng);
+    if rng.uniform() < 0.5 {
+        let n_out = 1 + rng.below(3.min(cols));
+        for k in 0..n_out {
+            let j = rng.below(cols);
+            let scale = 10.0 + rng.uniform() as f32 * 90.0;
+            for i in 0..rows {
+                let v = x.get(i, j) * scale;
+                x.set(i, j, v);
+            }
+            let _ = k;
+        }
+    }
+    if rng.uniform() < 0.3 {
+        // sprinkle exact zeros (kernel definition excludes them)
+        for _ in 0..rows * cols / 10 {
+            let idx = rng.below(rows * cols);
+            x.data[idx] = 0.0;
+        }
+    }
+    x
+}
+
+fn arb_alpha(rng: &mut SplitMix64) -> f32 {
+    (rng.uniform() as f32 * 100.0).round() / 100.0
+}
+
+fn arb_bits(rng: &mut SplitMix64) -> Bits {
+    match rng.below(3) {
+        0 => Bits::Int4,
+        1 => Bits::Int8,
+        _ => Bits::Other(6),
+    }
+}
+
+/// Definition 1 / eq. 4: the zero-bound mask predicts exactly which
+/// non-zero elements the quantizer maps to zero.
+#[test]
+fn prop_kernel_mask_equals_actual_zeros() {
+    let mut rng = SplitMix64::new(1);
+    for case in 0..CASES {
+        let x = arb_matrix(&mut rng);
+        let alpha = arb_alpha(&mut rng);
+        let bits = arb_bits(&mut rng);
+        let q = CrossQuant::new(alpha, bits);
+        let field = q.delta_field(&x);
+        let mask = kernel_mask(&x, &field);
+        let out = q.fake_quant(&x);
+        for idx in 0..x.len() {
+            let zeroed = out.data[idx] == 0.0 && x.data[idx] != 0.0;
+            assert_eq!(mask[idx], zeroed, "case {case} idx {idx} x={}", x.data[idx]);
+        }
+    }
+}
+
+/// Paper §4.2 Case I: wherever c_j < t_i, the CrossQuant zero bound is
+/// strictly below the per-token bound (for α < 1).
+#[test]
+fn prop_case_one_bound_shrinks() {
+    let mut rng = SplitMix64::new(2);
+    for _ in 0..CASES {
+        let x = arb_matrix(&mut rng);
+        let alpha = (arb_alpha(&mut rng)).min(0.99);
+        let cq = CrossQuant::new(alpha, Bits::Int8).delta_field(&x);
+        let pt = PerToken::new(Bits::Int8).delta_field(&x);
+        let t = x.row_abs_max();
+        let c = x.col_abs_max();
+        for i in 0..x.rows {
+            for j in 0..x.cols {
+                if c[j] < t[i] && t[i] > 1e-6 && c[j] > 1e-6 {
+                    assert!(
+                        cq.zero_bound(i, j) < pt.zero_bound(i, j) * 1.0001,
+                        "α={alpha} t={} c={}",
+                        t[i],
+                        c[j]
+                    );
+                }
+            }
+        }
+    }
+}
+
+/// Fake-quant reconstruction error is bounded by half the scale step for
+/// elements inside the clip range.
+#[test]
+fn prop_dequant_error_bounded() {
+    let mut rng = SplitMix64::new(3);
+    for _ in 0..CASES {
+        let x = arb_matrix(&mut rng);
+        let alpha = arb_alpha(&mut rng);
+        let bits = arb_bits(&mut rng);
+        let q = CrossQuant::new(alpha, bits);
+        let field = q.delta_field(&x);
+        let out = q.fake_quant(&x);
+        for i in 0..x.rows {
+            for j in 0..x.cols {
+                let d = field.delta(i, j);
+                let v = x.get(i, j);
+                if v.abs() <= q.qmax() * d {
+                    let err = (v - out.get(i, j)).abs();
+                    assert!(err <= 0.5 * d * 1.001 + 1e-9, "v={v} err={err} Δ={d}");
+                }
+            }
+        }
+    }
+}
+
+/// α = 1 CrossQuant coincides with per-token (same scale field).
+#[test]
+fn prop_alpha_one_is_per_token() {
+    let mut rng = SplitMix64::new(4);
+    for _ in 0..CASES {
+        let x = arb_matrix(&mut rng);
+        let bits = arb_bits(&mut rng);
+        let a = CrossQuant::new(1.0, bits).fake_quant(&x);
+        let b = PerToken::new(bits).fake_quant(&x);
+        for (u, v) in a.data.iter().zip(&b.data) {
+            assert!((u - v).abs() <= 1e-5 * u.abs().max(1.0), "{u} vs {v}");
+        }
+    }
+}
+
+/// Kernel fractions are monotone in bit-width: coarser grids (Int4) have
+/// at-least-as-large kernels as Int8 under the same scheme.
+#[test]
+fn prop_kernel_monotone_in_bits() {
+    let mut rng = SplitMix64::new(5);
+    for _ in 0..CASES {
+        let x = arb_matrix(&mut rng);
+        let alpha = arb_alpha(&mut rng);
+        let k8 = kernel_fraction(&x, &CrossQuant::new(alpha, Bits::Int8).delta_field(&x));
+        let k4 = kernel_fraction(&x, &CrossQuant::new(alpha, Bits::Int4).delta_field(&x));
+        assert!(k4 >= k8 - 1e-7, "k4={k4} k8={k8}");
+    }
+}
+
+/// Packing round-trips exactly to the scheme's fake-quant output.
+#[test]
+fn prop_pack_roundtrip() {
+    let mut rng = SplitMix64::new(6);
+    for _ in 0..CASES / 2 {
+        let x = arb_matrix(&mut rng);
+        let bits = if rng.uniform() < 0.5 { Bits::Int4 } else { Bits::Int8 };
+        let alpha = arb_alpha(&mut rng);
+        let q = CrossQuant::new(alpha, bits);
+        let packed = PackedMatrix::pack(&x, &q);
+        let unpacked = packed.unpack();
+        let fq = q.fake_quant(&x);
+        for (u, v) in unpacked.data.iter().zip(&fq.data) {
+            assert!((u - v).abs() <= 1e-5 * u.abs().max(1e-3), "{u} vs {v}");
+        }
+    }
+}
+
+/// Group-wise fake-quant preserves shape and never increases any group's
+/// absolute maximum.
+#[test]
+fn prop_groupwise_preserves_shape_and_max() {
+    let mut rng = SplitMix64::new(7);
+    for _ in 0..CASES {
+        let x = arb_matrix(&mut rng);
+        let group = 1 + rng.below(40);
+        let g = GroupWise::new(Bits::Int4, group);
+        let q = g.fake_quant(&x);
+        assert_eq!((q.rows, q.cols), (x.rows, x.cols));
+        let max_in = x.data.iter().fold(0.0f32, |m, v| m.max(v.abs()));
+        let max_out = q.data.iter().fold(0.0f32, |m, v| m.max(v.abs()));
+        assert!(max_out <= max_in * 1.0001);
+    }
+}
+
+/// RemoveKernel with θ = 0.5/qmax zeroes exactly the per-token kernel.
+#[test]
+fn prop_remove_kernel_matches_per_token_kernel() {
+    let mut rng = SplitMix64::new(8);
+    for _ in 0..CASES {
+        let x = arb_matrix(&mut rng);
+        let bits = arb_bits(&mut rng);
+        let qmax = bits.qmax();
+        let removed = RemoveKernel::matching_per_token(qmax).apply(&x);
+        let quantized = PerToken::new(bits).fake_quant(&x);
+        for idx in 0..x.len() {
+            if x.data[idx] != 0.0 {
+                assert_eq!(
+                    removed.data[idx] == 0.0,
+                    quantized.data[idx] == 0.0,
+                    "idx {idx} x={}",
+                    x.data[idx]
+                );
+            }
+        }
+    }
+}
+
+/// The quantization kernel shrinks (weakly) as α decreases on matrices
+/// whose column maxima sit below row maxima (the paper's argument for why
+/// smaller α helps under outliers).
+#[test]
+fn prop_kernel_weakly_monotone_in_alpha_under_outliers() {
+    let mut rng = SplitMix64::new(9);
+    for _ in 0..CASES / 2 {
+        let rows = 8 + rng.below(40);
+        let cols = 8 + rng.below(40);
+        let mut x = Matrix::randn(rows, cols, 1.0, &mut rng);
+        let j = rng.below(cols);
+        for i in 0..rows {
+            let v = x.get(i, j);
+            x.set(i, j, v * 60.0); // every row's max lives in column j
+        }
+        let k = |alpha: f32| {
+            kernel_fraction(&x, &CrossQuant::new(alpha, Bits::Int8).delta_field(&x))
+        };
+        let (k15, k55, k100) = (k(0.15), k(0.55), k(1.0));
+        assert!(k15 <= k55 + 0.02, "k15={k15} k55={k55}");
+        assert!(k55 <= k100 + 0.02, "k55={k55} k100={k100}");
+    }
+}
+
+/// SmoothQuant's migration is exactly function-preserving before
+/// quantization: (X/s)·(diag(s)W) == X·W.
+#[test]
+fn prop_smoothquant_function_preserving() {
+    use crossquant::quant::smoothquant::SmoothQuant;
+    let mut rng = SplitMix64::new(10);
+    for _ in 0..60 {
+        let rows = 4 + rng.below(40);
+        let inner = 2 + rng.below(30);
+        let cols = 2 + rng.below(30);
+        let x = arb_matrix_shaped(&mut rng, rows, inner);
+        let w = Matrix::randn(inner, cols, 0.1, &mut rng);
+        let strength = (rng.uniform() as f32).clamp(0.05, 0.95);
+        let sq = SmoothQuant::calibrate(&x, &w, strength);
+        let y = x.matmul(&w);
+        let y2 = sq.smooth_activation(&x).matmul(&sq.fold_into_weight(&w));
+        let rel = y.distance(&y2) / y.frobenius().max(1e-6);
+        assert!(rel < 1e-4, "strength {strength} rel {rel}");
+    }
+}
+
+/// AWQ's effective weight never loses to plain group-wise quantization on
+/// its own calibration data (the grid includes β = 0 ≡ plain).
+#[test]
+fn prop_awq_no_worse_than_plain_groupwise() {
+    use crossquant::quant::awq::Awq;
+    let mut rng = SplitMix64::new(11);
+    for _ in 0..30 {
+        let rows = 16 + rng.below(48);
+        let inner = 8 + rng.below(24);
+        let cols = 4 + rng.below(16);
+        let x = arb_matrix_shaped(&mut rng, rows, inner);
+        let w = Matrix::randn(inner, cols, 0.1, &mut rng);
+        let group = 8;
+        let y_ref = x.matmul(&w);
+        let plain = GroupWise::new(Bits::Int4, group).fake_quant(&w);
+        let e_plain = y_ref.distance(&x.matmul(&plain));
+        let awq = Awq::search(&x, &w, Bits::Int4, group);
+        let e_awq = y_ref.distance(&awq.smooth_activation(&x).matmul(&awq.quantize_weight(&w)));
+        assert!(e_awq <= e_plain * 1.001, "awq {e_awq} plain {e_plain}");
+    }
+}
+
+/// Quantization never increases a matrix's absolute maximum (symmetric
+/// clipping can only shrink).
+#[test]
+fn prop_quantization_never_amplifies_max() {
+    let mut rng = SplitMix64::new(12);
+    for _ in 0..CASES {
+        let x = arb_matrix(&mut rng);
+        let alpha = arb_alpha(&mut rng);
+        let bits = arb_bits(&mut rng);
+        let q = CrossQuant::new(alpha, bits).fake_quant(&x);
+        let max_in = x.data.iter().fold(0.0f32, |m, v| m.max(v.abs()));
+        let max_out = q.data.iter().fold(0.0f32, |m, v| m.max(v.abs()));
+        assert!(max_out <= max_in * 1.0001, "in {max_in} out {max_out}");
+    }
+}
+
+fn arb_matrix_shaped(rng: &mut SplitMix64, rows: usize, cols: usize) -> Matrix {
+    let mut x = Matrix::randn(rows, cols, 1.0, rng);
+    if rng.uniform() < 0.5 {
+        let j = rng.below(cols);
+        for i in 0..rows {
+            let v = x.get(i, j) * 30.0;
+            x.set(i, j, v);
+        }
+    }
+    x
+}

@@ -1,0 +1,110 @@
+//! TCP eval-server integration: spin the server on an ephemeral port, talk
+//! the line protocol from a client socket. Skips without artifacts.
+
+use std::io::{BufRead, BufReader, Write};
+use std::net::{TcpListener, TcpStream};
+use std::time::Duration;
+
+use crossquant::coordinator::scheduler::CoordinatorConfig;
+use crossquant::coordinator::{EvalCoordinator, EvalServer};
+use crossquant::corpus::CorpusGen;
+use crossquant::runtime::ArtifactStore;
+use crossquant::util::Json;
+
+fn start_server() -> Option<(std::net::SocketAddr, crossquant::model::ModelConfig)> {
+    let store = ArtifactStore::discover(None).ok()?;
+    store.validate().ok()?;
+    let weights = store.load_weights().ok()?;
+    let cfg = weights.config;
+    let coordinator = EvalCoordinator::start(
+        store,
+        cfg,
+        vec![("w16".into(), weights.flat.clone())],
+        CoordinatorConfig {
+            batch_size: cfg.eval_batch,
+            max_batch_delay: Duration::from_millis(3),
+            max_queue: 64,
+        },
+    );
+    let listener = TcpListener::bind("127.0.0.1:0").ok()?;
+    let addr = listener.local_addr().ok()?;
+    std::thread::spawn(move || {
+        let _ = EvalServer::new(coordinator).serve(listener);
+    });
+    Some((addr, cfg))
+}
+
+fn roundtrip(stream: &mut TcpStream, reader: &mut BufReader<TcpStream>, req: &str) -> Json {
+    stream.write_all(req.as_bytes()).unwrap();
+    stream.write_all(b"\n").unwrap();
+    let mut line = String::new();
+    reader.read_line(&mut line).unwrap();
+    Json::parse(&line).expect("server must emit valid JSON")
+}
+
+#[test]
+fn serves_eval_requests_over_tcp() {
+    let Some((addr, cfg)) = start_server() else {
+        eprintln!("skipping: no artifacts");
+        return;
+    };
+    let mut stream = TcpStream::connect(addr).unwrap();
+    stream.set_read_timeout(Some(Duration::from_secs(300))).unwrap();
+    let mut reader = BufReader::new(stream.try_clone().unwrap());
+
+    // ping
+    let pong = roundtrip(&mut stream, &mut reader, r#"{"cmd": "ping"}"#);
+    assert_eq!(pong.get("ok"), Some(&Json::Bool(true)));
+
+    // a crossquant eval request
+    let toks = CorpusGen::new(cfg.vocab, 3).sequence(cfg.seq_len);
+    let toks_json: Vec<String> = toks.iter().map(|t| t.to_string()).collect();
+    let req = format!(
+        r#"{{"tokens": [{}], "scheme": "crossquant", "alpha": 0.15, "weight_set": "w16"}}"#,
+        toks_json.join(", ")
+    );
+    let resp = roundtrip(&mut stream, &mut reader, &req);
+    assert_eq!(resp.get("ok"), Some(&Json::Bool(true)), "{resp:?}");
+    assert_eq!(resp.get("nll").unwrap().as_arr().unwrap().len(), cfg.seq_len - 1);
+    let ppl = resp.get("ppl").unwrap().as_f64().unwrap();
+    assert!(ppl > 1.0 && ppl < 10.0 * cfg.vocab as f64, "ppl {ppl}");
+    let aux = resp.get("aux").unwrap().as_f64().unwrap();
+    assert!(aux > 0.0 && aux < 1.0);
+
+    // bad scheme → structured error, connection stays up
+    let err = roundtrip(&mut stream, &mut reader, r#"{"tokens": [1,2,3], "scheme": "nope"}"#);
+    assert_eq!(err.get("ok"), Some(&Json::Bool(false)));
+    assert!(err.get("error").unwrap().as_str().unwrap().contains("scheme"));
+
+    // metrics still served afterwards
+    let m = roundtrip(&mut stream, &mut reader, r#"{"cmd": "metrics"}"#);
+    assert!(m.get("metrics").unwrap().as_str().unwrap().contains("completed="));
+}
+
+#[test]
+fn concurrent_clients_share_batches() {
+    let Some((addr, cfg)) = start_server() else {
+        eprintln!("skipping: no artifacts");
+        return;
+    };
+    let n_clients = cfg.eval_batch;
+    let handles: Vec<_> = (0..n_clients)
+        .map(|i| {
+            std::thread::spawn(move || {
+                let mut stream = TcpStream::connect(addr).unwrap();
+                let mut reader = BufReader::new(stream.try_clone().unwrap());
+                let toks = CorpusGen::new(cfg.vocab, 10 + i as u64).sequence(cfg.seq_len);
+                let tj: Vec<String> = toks.iter().map(|t| t.to_string()).collect();
+                let req = format!(
+                    r#"{{"tokens": [{}], "scheme": "per-token", "weight_set": "w16"}}"#,
+                    tj.join(",")
+                );
+                let resp = roundtrip(&mut stream, &mut reader, &req);
+                assert_eq!(resp.get("ok"), Some(&Json::Bool(true)));
+            })
+        })
+        .collect();
+    for h in handles {
+        h.join().unwrap();
+    }
+}
