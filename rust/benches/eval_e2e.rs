@@ -14,10 +14,13 @@ use crossquant::coordinator::scheduler::CoordinatorConfig;
 use crossquant::coordinator::{ActScheme, EvalCoordinator};
 use crossquant::corpus::CorpusGen;
 use crossquant::model::weights::synthetic_weights;
-use crossquant::model::{IdentitySite, ModelConfig, NativeModel, QuantPath, QuantSite, QuantizedModel};
+use crossquant::model::{
+    IdentitySite, ModelConfig, NativeModel, QuantPath, QuantSite, QuantizedModel,
+};
 use crossquant::quant::{crossquant::CrossQuant, Bits};
 use crossquant::runtime::literal::{scalar_literal, tokens_literal, vec_literal};
 use crossquant::runtime::{ArtifactStore, Runtime};
+use crossquant::xla;
 use support::{bench, header};
 
 fn main() {

@@ -6,6 +6,15 @@
 //!     here: CQ fake-quant should be ≤ 2× per-token on a 2048×4096 matrix.
 //!   * CrossQuant stores only one extra length-I vector (delta_field).
 //!
+//! Engine claims under test (PR 1):
+//!   * row-parallelism: fake-quant / kernel-scan / matmul vs their serial
+//!     (1-worker) references;
+//!   * fusion: `quantize_with_report` (1 field + 1 sweep) vs the seed's
+//!     3-sweep QuantSite path (field, kernel scan, field again, quant).
+//!
+//! Results are also written to `BENCH_quant_hot_path.json` at the repo
+//! root so the perf trajectory is tracked across PRs.
+//!
 //!     cargo bench --bench quant_hot_path
 
 mod support;
@@ -13,13 +22,27 @@ mod support;
 use std::time::Duration;
 
 use crossquant::activations::{ActivationGen, FamilyProfile};
-use crossquant::analysis::kernel_fraction;
-use crossquant::quant::{
-    clipping::ClippedPerToken, crossquant::CrossQuant, pack::PackedMatrix,
-    per_channel::GroupWise, per_token::PerToken, smoothquant::SmoothQuant, ActQuantizer, Bits,
+use crossquant::analysis::{
+    kernel_fraction_threads, quantize_with_report, KernelReport,
 };
-use crossquant::tensor::{Matrix, SplitMix64};
-use support::{bench, header};
+use crossquant::quant::{
+    clipping::ClippedPerToken, crossquant::CrossQuant, fake_quant_with, fake_quant_with_threads,
+    pack::PackedMatrix, per_channel::GroupWise, per_token::PerToken, smoothquant::SmoothQuant,
+    ActQuantizer, Bits,
+};
+use crossquant::tensor::{par, Matrix, SplitMix64};
+use crossquant::util::Json;
+use support::{bench, header, BenchResult};
+
+fn json_entry(r: &BenchResult) -> Json {
+    Json::obj(vec![
+        ("name", Json::str(r.name.clone())),
+        ("mean_ns", Json::num(r.mean.as_nanos() as f64)),
+        ("min_ns", Json::num(r.min.as_nanos() as f64)),
+        ("p50_ns", Json::num(r.p50.as_nanos() as f64)),
+        ("iters", Json::num(r.iters as f64)),
+    ])
+}
 
 fn main() {
     let budget = Duration::from_millis(400);
@@ -27,8 +50,13 @@ fn main() {
     let profile = FamilyProfile::by_name("opt-13b").expect("profile");
     let x = ActivationGen::new(profile, 1).matrix(2048, 4096);
     let elems = (x.rows * x.cols) as f64;
+    let mut results: Vec<BenchResult> = Vec::new();
+    let mut record = |r: BenchResult| results.push(r);
 
-    println!("activation 2048×4096, OPT-13B profile\n");
+    println!(
+        "activation 2048×4096, OPT-13B profile — {} worker threads (CROSSQUANT_THREADS to override)\n",
+        par::max_threads()
+    );
     header();
 
     let pt = PerToken::new(Bits::Int8);
@@ -47,51 +75,154 @@ fn main() {
         r_cq.mean.as_secs_f64() / r_pt.mean.as_secs_f64()
     );
 
-    bench("delta_field per-token (row absmax)", budget, || {
-        std::hint::black_box(pt.delta_field(&x));
-    })
-    .print();
-    bench("delta_field crossquant (row+col absmax+pow)", budget, || {
-        std::hint::black_box(cq.delta_field(&x));
-    })
-    .print();
-
+    // ---- serial vs parallel, on the same precomputed field ----
     let field = cq.delta_field(&x);
-    bench("kernel_fraction (Definition 1 scan)", budget, || {
-        std::hint::black_box(kernel_fraction(&x, &field));
-    })
-    .print();
+    let qmax = cq.qmax();
+    let r_fq_serial = bench("fake_quant_with serial (1 worker)", budget, || {
+        std::hint::black_box(fake_quant_with_threads(&x, &field, qmax, 1));
+    });
+    r_fq_serial.print_throughput(elems, "elem");
+    let r_fq_par = bench("fake_quant_with parallel (auto workers)", budget, || {
+        std::hint::black_box(fake_quant_with(&x, &field, qmax));
+    });
+    r_fq_par.print_throughput(elems, "elem");
+    let fq_speedup = r_fq_serial.mean.as_secs_f64() / r_fq_par.mean.as_secs_f64();
+    println!("  -> parallel fake-quant speedup: {fq_speedup:.2}x\n");
 
-    bench("clipped per-token (OmniQuant step)", budget, || {
+    let r_kf_serial = bench("kernel_fraction serial (Definition 1 scan)", budget, || {
+        std::hint::black_box(kernel_fraction_threads(&x, &field, 1));
+    });
+    r_kf_serial.print();
+    let r_kf_par = bench("kernel_fraction parallel", budget, || {
+        std::hint::black_box(kernel_fraction_threads(
+            &x,
+            &field,
+            par::workers_for(x.rows, x.len()),
+        ));
+    });
+    r_kf_par.print();
+    let kf_speedup = r_kf_serial.mean.as_secs_f64() / r_kf_par.mean.as_secs_f64();
+    println!("  -> parallel kernel-scan speedup: {kf_speedup:.2}x\n");
+
+    // ---- fused vs the seed's separate 3-sweep hot path ----
+    // seed QuantSite::apply: delta_field + kernel scan, then fake_quant
+    // (which recomputes the delta field) — all serial
+    let r_seed = bench("seed hot path: 2×field + scan + quant, serial", budget, || {
+        let f = cq.delta_field(&x);
+        std::hint::black_box(kernel_fraction_threads(&x, &f, 1));
+        let f2 = cq.delta_field(&x);
+        std::hint::black_box(fake_quant_with_threads(&x, &f2, qmax, 1));
+    });
+    r_seed.print_throughput(elems, "elem");
+    let r_fused = bench("fused quantize_with_report, parallel", budget, || {
+        std::hint::black_box(quantize_with_report(&x, &cq));
+    });
+    r_fused.print_throughput(elems, "elem");
+    let fused_speedup = r_seed.mean.as_secs_f64() / r_fused.mean.as_secs_f64();
+    println!(
+        "  -> fused+parallel vs seed serial path: {fused_speedup:.2}x (acceptance target ≥2x)\n"
+    );
+
+    record(r_pt);
+    record(r_cq);
+    record(r_fq_serial);
+    record(r_fq_par);
+    record(r_kf_serial);
+    record(r_kf_par);
+    record(r_seed);
+    record(r_fused);
+
+    let r = bench("delta_field per-token (row absmax)", budget, || {
+        std::hint::black_box(pt.delta_field(&x));
+    });
+    r.print();
+    record(r);
+    let r = bench("delta_field crossquant (row+col absmax+pow)", budget, || {
+        std::hint::black_box(cq.delta_field(&x));
+    });
+    r.print();
+    record(r);
+
+    let r = bench("KernelReport::compute (stats-only scan)", budget, || {
+        std::hint::black_box(KernelReport::compute(&x, &cq));
+    });
+    r.print();
+    record(r);
+
+    let r = bench("clipped per-token (OmniQuant step)", budget, || {
         std::hint::black_box(ClippedPerToken::new(Bits::Int8, 0.8).fake_quant(&x));
-    })
-    .print();
+    });
+    r.print();
+    record(r);
 
-    // weight-side paths on a 4096×4096 weight
+    // weight-side paths on a 2048×2048 weight
     let mut rng = SplitMix64::new(9);
     let w = Matrix::randn(2048, 2048, 0.02, &mut rng);
-    bench("group-wise W4-g128 weight quant (2048²)", budget, || {
+    let r = bench("group-wise W4-g128 weight quant (2048²)", budget, || {
         std::hint::black_box(GroupWise::w4_g128().fake_quant(&w));
-    })
-    .print();
+    });
+    r.print();
+    record(r);
 
     let xc = ActivationGen::new(FamilyProfile::by_name("opt-13b").unwrap(), 3).matrix(256, 2048);
-    bench("smoothquant calibrate (256×2048 calib)", budget, || {
+    let r = bench("smoothquant calibrate (256×2048 calib)", budget, || {
         std::hint::black_box(SmoothQuant::calibrate(&xc, &w, 0.5));
-    })
-    .print();
+    });
+    r.print();
+    record(r);
 
-    bench("pack INT8 (codes + factored scales)", budget, || {
+    let r = bench("pack INT8 (codes + factored scales)", budget, || {
         std::hint::black_box(PackedMatrix::pack(&x, &cq));
-    })
-    .print();
+    });
+    r.print();
+    record(r);
 
-    // native matmul (the eval substrate hot loop)
+    // native matmul — small forward-pass shape and a serving-sized block
+    println!();
     let a = Matrix::randn(96, 128, 1.0, &mut rng);
     let b = Matrix::randn(128, 512, 0.05, &mut rng);
     let flops = 2.0 * 96.0 * 128.0 * 512.0;
-    bench("native matmul 96×128×512 (fwd hot loop)", budget, || {
+    let r = bench("native matmul 96×128×512 (fwd hot loop)", budget, || {
         std::hint::black_box(a.matmul(&b));
-    })
-    .print_throughput(flops, "flop");
+    });
+    r.print_throughput(flops, "flop");
+    record(r);
+
+    let am = Matrix::randn(512, 512, 1.0, &mut rng);
+    let bm = Matrix::randn(512, 512, 0.05, &mut rng);
+    let flops = 2.0f64 * 512.0 * 512.0 * 512.0;
+    let r_mm_serial = bench("matmul 512³ serial (1 worker)", budget, || {
+        std::hint::black_box(am.matmul_threads(&bm, 1));
+    });
+    r_mm_serial.print_throughput(flops, "flop");
+    let r_mm_par = bench("matmul 512³ parallel (auto workers)", budget, || {
+        std::hint::black_box(am.matmul(&bm));
+    });
+    r_mm_par.print_throughput(flops, "flop");
+    let mm_speedup = r_mm_serial.mean.as_secs_f64() / r_mm_par.mean.as_secs_f64();
+    println!("  -> parallel matmul speedup: {mm_speedup:.2}x");
+    record(r_mm_serial);
+    record(r_mm_par);
+
+    // ---- machine-readable dump for the perf trajectory ----
+    let json = Json::obj(vec![
+        ("bench", Json::str("quant_hot_path")),
+        ("shape", Json::str("2048x4096")),
+        ("threads", Json::num(par::max_threads() as f64)),
+        (
+            "speedups",
+            Json::obj(vec![
+                ("fake_quant_parallel_vs_serial", Json::num(fq_speedup)),
+                ("kernel_fraction_parallel_vs_serial", Json::num(kf_speedup)),
+                ("fused_parallel_vs_seed_serial", Json::num(fused_speedup)),
+                ("matmul_parallel_vs_serial", Json::num(mm_speedup)),
+            ]),
+        ),
+        ("results", Json::arr(results.iter().map(json_entry).collect())),
+    ]);
+    let path = concat!(env!("CARGO_MANIFEST_DIR"), "/../BENCH_quant_hot_path.json");
+    match std::fs::write(path, json.render_pretty()) {
+        Ok(()) => println!("\nwrote {path}"),
+        Err(e) => eprintln!("\ncould not write {path}: {e}"),
+    }
 }

@@ -2,6 +2,9 @@
 //! — see Cargo.toml). Warmup + N timed iterations, reporting mean / min /
 //! p50 / stddev, with optional throughput in user units.
 
+// compiled once per bench target; not every target uses every helper
+#![allow(dead_code)]
+
 use std::time::{Duration, Instant};
 
 pub struct BenchResult {

@@ -2,9 +2,15 @@
 //!
 //! K(Q) = { X_ij | Q(X_ij) = 0 } ⇔ |X_ij| < B_ij = 0.5·Δ_ij  (eq. 4),
 //! restricted to non-zero elements (a structural zero loses nothing).
+//!
+//! The scans here run over every activation of every eval batch, so they
+//! are §Perf hot paths: all of them are row-parallel (see
+//! [`crate::tensor::par`]), and [`quantize_with_report`] fuses the
+//! fake-quant sweep with the kernel statistics so the eval harness pays
+//! one pass over the matrix instead of three.
 
-use crate::quant::{ActQuantizer, DeltaField};
-use crate::tensor::Matrix;
+use crate::quant::{fake_quant_row, ActQuantizer, DeltaField};
+use crate::tensor::{par, Matrix};
 
 /// Boolean membership mask of the quantization kernel.
 pub fn kernel_mask(x: &Matrix, field: &DeltaField) -> Vec<bool> {
@@ -19,49 +25,139 @@ pub fn kernel_mask(x: &Matrix, field: &DeltaField) -> Vec<bool> {
 
 /// |K(Q)| / |X| — the paper's headline statistic (Figure 4 y-axis).
 ///
-/// Specialised per scale-field variant (hoisting the per-row factor and
-/// keeping the inner loop branchless) — this scan runs over every
-/// activation of every eval batch in the analysis figures, so it is a §Perf
-/// hot path.
+/// Row-parallel; counts are integers, so any worker count produces the
+/// identical result ([`kernel_fraction_threads`]`(x, field, 1)` is the
+/// serial reference).
 pub fn kernel_fraction(x: &Matrix, field: &DeltaField) -> f32 {
+    kernel_fraction_threads(x, field, par::workers_for(x.rows, x.len()))
+}
+
+/// [`kernel_fraction`] with an explicit worker count.
+pub fn kernel_fraction_threads(x: &Matrix, field: &DeltaField, workers: usize) -> f32 {
     if x.is_empty() {
         return 0.0;
     }
+    let counts = par::par_map_rows(x.rows, workers, |range| {
+        let mut count = 0usize;
+        for i in range {
+            count += kernel_count_row(x.row(i), field, i);
+        }
+        count
+    });
+    counts.into_iter().sum::<usize>() as f32 / x.len() as f32
+}
+
+/// Per-row kernel count — the same classification expression as the
+/// fused/report paths ([`for_each_delta`] walking Δ, the eq.-4 bound
+/// 0.5·Δ), so `kernel_fraction` and `KernelReport::count` can never
+/// disagree. The delta walker is specialised per field variant, so the
+/// per-row factor still hoists and the loop stays branchless.
+#[inline]
+fn kernel_count_row(row: &[f32], field: &DeltaField, i: usize) -> usize {
     let mut count = 0usize;
+    for_each_delta(field, i, row.len(), |j, d| {
+        let v = row[j];
+        count += (v != 0.0 && v.abs() < 0.5 * d) as usize;
+    });
+    count
+}
+
+/// Running kernel statistics of one worker's row block.
+#[derive(Clone, Copy, Default)]
+struct KernelPartial {
+    count: usize,
+    n_rest: usize,
+    sum_kernel: f64,
+    sum_rest: f64,
+}
+
+impl KernelPartial {
+    /// Classify one element against its zero bound 0.5·Δ (eq. 4).
+    #[inline(always)]
+    fn add(&mut self, v: f32, d: f32) {
+        let a = v.abs();
+        if v != 0.0 && a < 0.5 * d {
+            self.count += 1;
+            self.sum_kernel += a as f64;
+        } else {
+            self.n_rest += 1;
+            self.sum_rest += a as f64;
+        }
+    }
+
+    fn merge(mut self, o: KernelPartial) -> KernelPartial {
+        self.count += o.count;
+        self.n_rest += o.n_rest;
+        self.sum_kernel += o.sum_kernel;
+        self.sum_rest += o.sum_rest;
+        self
+    }
+}
+
+/// Walk one row's per-element deltas Δ_ij, specialised per field variant.
+#[inline(always)]
+fn for_each_delta(field: &DeltaField, i: usize, cols: usize, mut f: impl FnMut(usize, f32)) {
     match field {
         DeltaField::PerRow(rows) => {
-            for i in 0..x.rows {
-                let bound = 0.5 * rows[i];
-                count += x
-                    .row(i)
-                    .iter()
-                    .map(|&v| (v != 0.0 && v.abs() < bound) as usize)
-                    .sum::<usize>();
+            let d = rows[i];
+            for j in 0..cols {
+                f(j, d);
             }
         }
-        DeltaField::PerCol(cols) => {
-            for i in 0..x.rows {
-                count += x
-                    .row(i)
-                    .iter()
-                    .zip(cols)
-                    .map(|(&v, &d)| (v != 0.0 && v.abs() < 0.5 * d) as usize)
-                    .sum::<usize>();
+        DeltaField::PerCol(col_d) => {
+            for (j, &d) in col_d.iter().enumerate().take(cols) {
+                f(j, d);
             }
         }
         DeltaField::Cross { row_pow, col_pow } => {
-            for i in 0..x.rows {
-                let half_rp = 0.5 * row_pow[i];
-                count += x
-                    .row(i)
-                    .iter()
-                    .zip(col_pow)
-                    .map(|(&v, &cp)| (v != 0.0 && v.abs() < half_rp * cp) as usize)
-                    .sum::<usize>();
+            let rp = row_pow[i];
+            for (j, &cp) in col_pow.iter().enumerate().take(cols) {
+                f(j, rp * cp);
             }
         }
     }
-    count as f32 / x.len() as f32
+}
+
+/// Fused single-pass quantize + kernel analysis: computes the delta field
+/// once, then produces the fake-quant output *and* the full
+/// [`KernelReport`] in one sweep over the matrix — where the separate
+/// path (`delta_field` + `fake_quant` + `KernelReport::compute`) walks it
+/// three times and derives the scale field twice. This is the hot call of
+/// the eval harness ([`crate::model::QuantSite`] runs it at every
+/// activation site), the experiment drivers, and the coordinator's native
+/// executor.
+///
+/// The fake-quant half routes through the same per-row kernel as
+/// [`crate::quant::fake_quant_with`], so the output matrix is bit-exact
+/// with the separate path; counts are exact integers, and the two mean
+/// statistics differ from the serial order only by f64 summation
+/// regrouping (pinned to ≤1e-6 relative in rust/tests/parallel.rs).
+pub fn quantize_with_report(x: &Matrix, quant: &dyn ActQuantizer) -> (Matrix, KernelReport) {
+    quantize_with_report_threads(x, quant, par::workers_for(x.rows, x.len()))
+}
+
+/// [`quantize_with_report`] with an explicit worker count.
+pub fn quantize_with_report_threads(
+    x: &Matrix,
+    quant: &dyn ActQuantizer,
+    workers: usize,
+) -> (Matrix, KernelReport) {
+    let field = quant.delta_field(x);
+    let qmax = quant.qmax();
+    let cols = x.cols;
+    let mut out = Matrix::zeros(x.rows, x.cols);
+    let partials = par::par_rows_map_mut(&mut out.data, cols.max(1), workers, |row0, chunk| {
+        let mut p = KernelPartial::default();
+        for (local_i, dst) in chunk.chunks_mut(cols.max(1)).enumerate() {
+            let i = row0 + local_i;
+            let src = x.row(i);
+            fake_quant_row(src, dst, &field, i, qmax);
+            for_each_delta(&field, i, cols, |j, d| p.add(src[j], d));
+        }
+        p
+    });
+    let total = partials.into_iter().fold(KernelPartial::default(), KernelPartial::merge);
+    (out, KernelReport::from_partial(quant.name(), x.len(), total))
 }
 
 /// Full per-matrix kernel diagnostics for one quantization scheme.
@@ -78,29 +174,34 @@ pub struct KernelReport {
 }
 
 impl KernelReport {
+    /// Statistics-only scan (row-parallel, no output matrix). Use
+    /// [`quantize_with_report`] when the fake-quant output is needed too.
     pub fn compute(x: &Matrix, quant: &dyn ActQuantizer) -> KernelReport {
         let field = quant.delta_field(x);
-        let mut count = 0usize;
-        let (mut sum_k, mut sum_r) = (0.0f64, 0.0f64);
-        let mut n_r = 0usize;
-        for i in 0..x.rows {
-            for (j, &v) in x.row(i).iter().enumerate() {
-                if v != 0.0 && v.abs() < field.zero_bound(i, j) {
-                    count += 1;
-                    sum_k += v.abs() as f64;
-                } else {
-                    n_r += 1;
-                    sum_r += v.abs() as f64;
-                }
+        let partials = par::par_map_rows(x.rows, par::workers_for(x.rows, x.len()), |range| {
+            let mut p = KernelPartial::default();
+            for i in range {
+                let row = x.row(i);
+                for_each_delta(&field, i, row.len(), |j, d| p.add(row[j], d));
             }
-        }
+            p
+        });
+        let total = partials.into_iter().fold(KernelPartial::default(), KernelPartial::merge);
+        KernelReport::from_partial(quant.name(), x.len(), total)
+    }
+
+    fn from_partial(scheme: String, total: usize, p: KernelPartial) -> KernelReport {
         KernelReport {
-            scheme: quant.name(),
-            fraction: count as f32 / x.len().max(1) as f32,
-            count,
-            total: x.len(),
-            mean_abs_kernel: if count > 0 { (sum_k / count as f64) as f32 } else { 0.0 },
-            mean_abs_rest: if n_r > 0 { (sum_r / n_r as f64) as f32 } else { 0.0 },
+            scheme,
+            fraction: p.count as f32 / total.max(1) as f32,
+            count: p.count,
+            total,
+            mean_abs_kernel: if p.count > 0 {
+                (p.sum_kernel / p.count as f64) as f32
+            } else {
+                0.0
+            },
+            mean_abs_rest: if p.n_rest > 0 { (p.sum_rest / p.n_rest as f64) as f32 } else { 0.0 },
         }
     }
 }
@@ -150,5 +251,29 @@ mod tests {
         if r.count > 0 {
             assert!(r.mean_abs_kernel < r.mean_abs_rest);
         }
+    }
+
+    #[test]
+    fn fused_output_matches_fake_quant_and_report() {
+        let mut rng = SplitMix64::new(34);
+        let x = Matrix::randn(57, 43, 1.0, &mut rng);
+        for quant in [CrossQuant::new(0.15, Bits::Int8), CrossQuant::new(1.0, Bits::Int4)] {
+            let (q_fused, report) = quantize_with_report(&x, &quant);
+            assert_eq!(q_fused.data, quant.fake_quant(&x).data, "fused output must be bit-exact");
+            let separate = KernelReport::compute(&x, &quant);
+            assert_eq!(report.count, separate.count);
+            assert_eq!(report.total, separate.total);
+            assert!((report.mean_abs_kernel - separate.mean_abs_kernel).abs() < 1e-6);
+            assert!((report.mean_abs_rest - separate.mean_abs_rest).abs() < 1e-6);
+        }
+    }
+
+    #[test]
+    fn fused_report_handles_empty_matrix() {
+        let x = Matrix::zeros(0, 16);
+        let (q, r) = quantize_with_report(&x, &PerToken::new(Bits::Int8));
+        assert!(q.is_empty());
+        assert_eq!((r.count, r.total), (0, 0));
+        assert_eq!(r.fraction, 0.0);
     }
 }

@@ -4,5 +4,8 @@ pub mod kernel;
 pub mod stats;
 pub mod threshold;
 
-pub use kernel::{kernel_fraction, kernel_mask, KernelReport};
+pub use kernel::{
+    kernel_fraction, kernel_fraction_threads, kernel_mask, quantize_with_report,
+    quantize_with_report_threads, KernelReport,
+};
 pub use stats::CrossStats;

@@ -72,8 +72,8 @@ impl OutlierStats {
     pub fn compute(x: &Matrix) -> OutlierStats {
         let mean_abs =
             (x.data.iter().map(|v| v.abs() as f64).sum::<f64>() / x.len().max(1) as f64) as f32;
-        let outliers =
-            x.data.iter().filter(|v| v.abs() > 20.0 * mean_abs).count() as f32 / x.len().max(1) as f32;
+        let outliers = x.data.iter().filter(|v| v.abs() > 20.0 * mean_abs).count() as f32
+            / x.len().max(1) as f32;
         let mut c = x.col_abs_max();
         c.sort_by(f32::total_cmp);
         let med = if c.is_empty() { 0.0 } else { c[c.len() / 2] };

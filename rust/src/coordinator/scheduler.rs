@@ -8,19 +8,31 @@
 //! router). The offline build has no tokio (Cargo.toml), so the async
 //! surface is expressed with plain threads + channels; the protocol
 //! (scheme-keyed dynamic batching with a flush deadline) is identical.
+//!
+//! When no PJRT runtime is linked (the offline build's `xla` stub), the
+//! executor thread falls back to a [`NativeExecutor`]: the same batching
+//! protocol served by [`NativeModel`] forwards, with the fused
+//! `analysis::quantize_with_report` path at every activation site.
 
+use std::collections::HashMap;
 use std::sync::mpsc::{Receiver, RecvTimeoutError, SyncSender};
 use std::sync::Arc;
 use std::time::{Duration, Instant};
 
-use anyhow::{anyhow, Result};
+use anyhow::{anyhow, ensure, Result};
 
 use super::batcher::{BatchAccumulator, ReadyBatch};
 use super::metrics::Metrics;
 use super::{ActScheme, SchemeKey};
 use crate::model::config::ModelConfig;
+use crate::model::{IdentitySite, NativeModel, QuantSite, RemoveKernelSite, Weights};
+use crate::quant::{
+    crossquant::cross_delta_field, remove_kernel::RemoveKernel, ActQuantizer, DeltaField,
+};
 use crate::runtime::literal::{literal_to_scalar, literal_to_vec, tokens_literal, vec_literal};
 use crate::runtime::{ArtifactStore, Runtime};
+use crate::tensor::Matrix;
+use crate::xla;
 
 /// One evaluation request: a token sequence under a scheme + weight set.
 #[derive(Clone)]
@@ -230,47 +242,165 @@ fn executor_loop(
     rx: Receiver<ReadyBatch<Pending>>,
     metrics: Arc<Metrics>,
 ) {
-    let mut runtime = match Runtime::new(store) {
-        Ok(r) => r,
-        Err(e) => {
-            // fail every incoming request with the construction error
+    match Runtime::new(store) {
+        Ok(mut runtime) => {
+            let weights: HashMap<String, xla::Literal> =
+                weight_sets.into_iter().map(|(k, v)| (k, vec_literal(&v))).collect();
             while let Ok(batch) = rx.recv() {
-                for p in batch.requests {
-                    metrics.failed.fetch_add(1, std::sync::atomic::Ordering::Relaxed);
-                    let _ = p.resp.send(Err(anyhow!("PJRT client unavailable: {e}")));
-                }
+                let result = execute_batch(&mut runtime, cfg, &weights, &batch);
+                metrics.executions.fetch_add(1, std::sync::atomic::Ordering::Relaxed);
+                respond(batch, result, &metrics);
             }
-            return;
         }
-    };
-    let weights: std::collections::HashMap<String, xla::Literal> =
-        weight_sets.into_iter().map(|(k, v)| (k, vec_literal(&v))).collect();
+        Err(e) => {
+            // No PJRT runtime linked: serve the same protocol with the
+            // native executor instead of failing every request.
+            eprintln!(
+                "coordinator: PJRT unavailable ({e}); falling back to the native executor"
+            );
+            let mut native = NativeExecutor::new(cfg, weight_sets);
+            while let Ok(batch) = rx.recv() {
+                let result = native.execute_batch(&batch);
+                metrics.executions.fetch_add(1, std::sync::atomic::Ordering::Relaxed);
+                respond(batch, result, &metrics);
+            }
+        }
+    }
+}
 
-    while let Ok(batch) = rx.recv() {
-        let result = execute_batch(&mut runtime, cfg, &weights, &batch);
-        metrics.executions.fetch_add(1, std::sync::atomic::Ordering::Relaxed);
-        match result {
-            Ok(responses) => {
-                for (p, resp) in batch.requests.into_iter().zip(responses) {
-                    metrics.completed.fetch_add(1, std::sync::atomic::Ordering::Relaxed);
-                    metrics.record_latency(p.submitted.elapsed().as_micros() as u64);
-                    let _ = p.resp.send(Ok(resp));
-                }
-            }
-            Err(e) => {
-                for p in batch.requests {
-                    metrics.failed.fetch_add(1, std::sync::atomic::Ordering::Relaxed);
-                    let _ = p.resp.send(Err(anyhow!("batch execution failed: {e}")));
-                }
+/// Fan a batch result out to its requests (success and failure paths
+/// shared by the PJRT and native executors).
+fn respond(batch: ReadyBatch<Pending>, result: Result<Vec<EvalResponse>>, metrics: &Metrics) {
+    match result {
+        Ok(responses) => {
+            for (p, resp) in batch.requests.into_iter().zip(responses) {
+                metrics.completed.fetch_add(1, std::sync::atomic::Ordering::Relaxed);
+                metrics.record_latency(p.submitted.elapsed().as_micros() as u64);
+                let _ = p.resp.send(Ok(resp));
             }
         }
+        Err(e) => {
+            let msg = format!("batch execution failed: {e}");
+            for p in batch.requests {
+                metrics.failed.fetch_add(1, std::sync::atomic::Ordering::Relaxed);
+                let _ = p.resp.send(Err(anyhow!("{msg}")));
+            }
+        }
+    }
+}
+
+/// CrossQuant with a *runtime* qmax — the AOT artifacts take (α, qmax) as
+/// scalar inputs rather than a `Bits` enum, so the native fallback
+/// mirrors that surface exactly (α = 1 is per-token, matching
+/// `ActScheme`'s contract).
+struct RuntimeCrossQuant {
+    alpha: f32,
+    qmax: f32,
+}
+
+impl ActQuantizer for RuntimeCrossQuant {
+    fn name(&self) -> String {
+        format!("crossquant[α={},qmax={}]", self.alpha, self.qmax)
+    }
+
+    fn delta_field(&self, x: &Matrix) -> DeltaField {
+        crate::quant::debug_assert_finite(x, "RuntimeCrossQuant");
+        cross_delta_field(x, self.alpha, self.qmax)
+    }
+
+    fn qmax(&self) -> f32 {
+        self.qmax
+    }
+}
+
+/// The offline executor: reconstructs each registered weight set into a
+/// [`NativeModel`] (lazily, cached per set) and runs batches through the
+/// native forward pass. Activation sites use the fused
+/// `quantize_with_report` sweep via [`QuantSite`], and `aux` is measured
+/// over the whole executed batch — the same batch-level scalar the PJRT
+/// artifacts emit.
+struct NativeExecutor {
+    cfg: ModelConfig,
+    weight_sets: HashMap<String, Vec<f32>>,
+    models: HashMap<String, NativeModel>,
+}
+
+impl NativeExecutor {
+    fn new(cfg: ModelConfig, weight_sets: Vec<(String, Vec<f32>)>) -> NativeExecutor {
+        NativeExecutor {
+            cfg,
+            weight_sets: weight_sets.into_iter().collect(),
+            models: HashMap::new(),
+        }
+    }
+
+    fn model_for(&mut self, name: &str) -> Result<&NativeModel> {
+        if !self.models.contains_key(name) {
+            let flat = self
+                .weight_sets
+                .get(name)
+                .ok_or_else(|| anyhow!("unknown weight set {name}"))?;
+            let weights = Weights::from_config_flat(self.cfg, flat.clone())?;
+            self.models.insert(name.to_string(), NativeModel::new(weights));
+        }
+        Ok(self.models.get(name).expect("inserted above"))
+    }
+
+    fn execute_batch(&mut self, batch: &ReadyBatch<Pending>) -> Result<Vec<EvalResponse>> {
+        let vocab = self.cfg.vocab;
+        for p in &batch.requests {
+            ensure!(
+                p.req.tokens.iter().all(|&t| (t as usize) < vocab),
+                "token id out of range (vocab {vocab})"
+            );
+        }
+        let model = self.model_for(&batch.key.weight_set)?;
+        let scheme = batch.requests[0].req.scheme;
+        let mut nlls = Vec::with_capacity(batch.requests.len());
+        let aux = match scheme {
+            ActScheme::Fp => {
+                for p in &batch.requests {
+                    nlls.push(model.forward_nll(&p.req.tokens, &mut IdentitySite)?);
+                }
+                0.0
+            }
+            // the native forward has no separate fused-graph variant —
+            // both artifact flavours share one implementation here
+            ActScheme::CrossQuant { alpha, qmax }
+            | ActScheme::CrossQuantFused { alpha, qmax } => {
+                // guard malformed client scalars: qmax ≤ 0 makes
+                // clamp(-qmax, qmax) panic (min > max) inside the executor
+                // thread, and a non-finite alpha yields NaN scale fields
+                ensure!(
+                    qmax.is_finite() && qmax > 0.0,
+                    "crossquant qmax must be finite and > 0, got {qmax}"
+                );
+                ensure!(alpha.is_finite(), "crossquant alpha must be finite, got {alpha}");
+                let mut site = QuantSite::new(RuntimeCrossQuant { alpha, qmax });
+                for p in &batch.requests {
+                    nlls.push(model.forward_nll(&p.req.tokens, &mut site)?);
+                }
+                site.kernel_fraction()
+            }
+            ActScheme::RemoveKernel { theta } => {
+                // guard before RemoveKernel::new: its assert would panic
+                // the executor thread on a malformed client request
+                ensure!(theta >= 0.0, "remove-kernel theta must be >= 0, got {theta}");
+                let mut site = RemoveKernelSite::new(RemoveKernel::new(theta));
+                for p in &batch.requests {
+                    nlls.push(model.forward_nll(&p.req.tokens, &mut site)?);
+                }
+                site.removed_fraction()
+            }
+        };
+        Ok(nlls.into_iter().map(|nll| EvalResponse { nll, aux }).collect())
     }
 }
 
 fn execute_batch(
     runtime: &mut Runtime,
     cfg: ModelConfig,
-    weights: &std::collections::HashMap<String, xla::Literal>,
+    weights: &HashMap<String, xla::Literal>,
     batch: &ReadyBatch<Pending>,
 ) -> Result<Vec<EvalResponse>> {
     let key: &SchemeKey = &batch.key;

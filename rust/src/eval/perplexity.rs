@@ -50,7 +50,9 @@ pub fn perplexity_native(
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::model::{config::ModelConfig, weights::synthetic_weights as test_weights, IdentitySite};
+    use crate::model::{
+        config::ModelConfig, weights::synthetic_weights as test_weights, IdentitySite,
+    };
 
     #[test]
     fn from_nlls_math() {
@@ -61,7 +63,15 @@ mod tests {
 
     #[test]
     fn random_model_near_uniform_ppl() {
-        let cfg = ModelConfig { vocab: 64, d_model: 16, n_layers: 1, n_heads: 2, d_ff: 32, seq_len: 16, eval_batch: 2 };
+        let cfg = ModelConfig {
+            vocab: 64,
+            d_model: 16,
+            n_layers: 1,
+            n_heads: 2,
+            d_ff: 32,
+            seq_len: 16,
+            eval_batch: 2,
+        };
         let m = NativeModel::new(test_weights(cfg, 2));
         let r = perplexity_native(&m, &mut IdentitySite, CorpusKind::Wiki2, 4, 99).unwrap();
         assert!(r.perplexity > 32.0 && r.perplexity < 128.0, "{}", r.perplexity);
@@ -69,7 +79,15 @@ mod tests {
 
     #[test]
     fn deterministic_across_calls() {
-        let cfg = ModelConfig { vocab: 64, d_model: 16, n_layers: 1, n_heads: 2, d_ff: 32, seq_len: 16, eval_batch: 2 };
+        let cfg = ModelConfig {
+            vocab: 64,
+            d_model: 16,
+            n_layers: 1,
+            n_heads: 2,
+            d_ff: 32,
+            seq_len: 16,
+            eval_batch: 2,
+        };
         let m = NativeModel::new(test_weights(cfg, 2));
         let a = perplexity_native(&m, &mut IdentitySite, CorpusKind::Wiki2, 3, 7).unwrap();
         let b = perplexity_native(&m, &mut IdentitySite, CorpusKind::Wiki2, 3, 7).unwrap();

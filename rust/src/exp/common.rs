@@ -316,7 +316,15 @@ mod tests {
     use crate::model::weights::synthetic_weights as test_weights;
 
     fn small_base() -> Weights {
-        let cfg = ModelConfig { vocab: 64, d_model: 16, n_layers: 2, n_heads: 2, d_ff: 32, seq_len: 24, eval_batch: 2 };
+        let cfg = ModelConfig {
+            vocab: 64,
+            d_model: 16,
+            n_layers: 2,
+            n_heads: 2,
+            d_ff: 32,
+            seq_len: 24,
+            eval_batch: 2,
+        };
         test_weights(cfg, 77)
     }
 

@@ -61,7 +61,8 @@ pub fn run(base: &Weights, weight_bits: Bits, opts: &ExpOpts) -> Result<Table> {
             quantize_weights(&mut w, wscheme)?;
             let model = NativeModel::new(w);
             let mut site = RemoveKernelSite::new(RemoveKernel::matching_per_token(127.0));
-            let suite = crate::eval::tasks::TaskSuite::standard(opts.task_instances, opts.seed ^ 0x7A5C);
+            let suite =
+                crate::eval::tasks::TaskSuite::standard(opts.task_instances, opts.seed ^ 0x7A5C);
             let (_, avg) = suite.evaluate(&model, &mut site)?;
             cells.push(avg);
         }

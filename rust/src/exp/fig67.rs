@@ -34,7 +34,8 @@ pub struct FigResult {
 
 pub fn run(base: &Weights, family: Family, opts: &ExpOpts) -> Result<FigResult> {
     let profiles: Vec<FamilyProfile> = match family {
-        Family::Opt => FamilyProfile::opt_family().into_iter().skip(2).collect(), // ≥6.7B, as in Fig 6
+        // ≥6.7B, as in Fig 6
+        Family::Opt => FamilyProfile::opt_family().into_iter().skip(2).collect(),
         Family::Llama => FamilyProfile::llama_family().into_iter().take(3).collect(),
     };
     let fracs = fractions(family);
@@ -75,7 +76,13 @@ pub fn sweep_profile(
     quantize_weights(&mut w, WeightScheme::PerChannel(Bits::Int8))?;
     let model = NativeModel::new(w);
 
-    let fp = perplexity_native(&model, &mut IdentitySite, CorpusKind::Wiki2, opts.eval_sequences, opts.seed ^ 0xE7A1)?;
+    let fp = perplexity_native(
+        &model,
+        &mut IdentitySite,
+        CorpusKind::Wiki2,
+        opts.eval_sequences,
+        opts.seed ^ 0xE7A1,
+    )?;
 
     let mut cells = Vec::new();
     let curve = ThresholdCurve::sweep(fracs, fp.perplexity, |frac| {

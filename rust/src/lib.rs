@@ -15,9 +15,9 @@
 //!   and the benchmark harness regenerating every table/figure of the
 //!   paper.
 //!
-//! Quick taste (native path, no artifacts needed; `no_run` because rustdoc
-//! test binaries do not inherit the cargo rpath for libxla_extension — the
-//! same assertions run for real in rust/tests/property.rs):
+//! Quick taste (native path, no artifacts needed; `no_run` keeps rustdoc
+//! from re-timing the sweep — the same assertions run for real in
+//! rust/tests/property.rs):
 //!
 //! ```no_run
 //! use crossquant::quant::{ActQuantizer, Bits, crossquant::CrossQuant, per_token::PerToken};
@@ -44,3 +44,4 @@ pub mod quant;
 pub mod runtime;
 pub mod tensor;
 pub mod util;
+pub mod xla;

@@ -54,10 +54,13 @@ impl<Q: ActQuantizer> QuantSite<Q> {
 
 impl<Q: ActQuantizer> ActSite for QuantSite<Q> {
     fn apply(&mut self, _site: usize, x: Matrix) -> Matrix {
-        let frac = crate::analysis::kernel_fraction(&x, &self.quant.delta_field(&x));
-        self.kernel_elems += (frac as f64) * x.len() as f64;
-        self.total_elems += x.len() as f64;
-        self.quant.fake_quant(&x)
+        // Fused single pass: fake-quant output + kernel statistics in one
+        // sweep (the seed walked the matrix three times here — delta
+        // field twice, then the kernel scan, then the quant sweep).
+        let (q, report) = crate::analysis::quantize_with_report(&x, &self.quant);
+        self.kernel_elems += report.count as f64;
+        self.total_elems += report.total as f64;
+        q
     }
 }
 
@@ -195,7 +198,11 @@ impl NativeModel {
 
     /// Forward one sequence, returning the log-probability distribution at
     /// the final position (greedy-prediction tasks).
-    pub fn forward_last_logprobs(&self, tokens: &[u32], site: &mut dyn ActSite) -> Result<Vec<f32>> {
+    pub fn forward_last_logprobs(
+        &self,
+        tokens: &[u32],
+        site: &mut dyn ActSite,
+    ) -> Result<Vec<f32>> {
         let logits = self.forward_logits(tokens, site)?;
         let last = logits.row(logits.rows - 1);
         let max = last.iter().fold(f32::NEG_INFINITY, |m, &v| m.max(v));
@@ -340,7 +347,15 @@ mod tests {
     use crate::quant::{crossquant::CrossQuant, Bits};
 
     fn tiny() -> NativeModel {
-        let cfg = ModelConfig { vocab: 32, d_model: 16, n_layers: 2, n_heads: 2, d_ff: 32, seq_len: 12, eval_batch: 2 };
+        let cfg = ModelConfig {
+            vocab: 32,
+            d_model: 16,
+            n_layers: 2,
+            n_heads: 2,
+            d_ff: 32,
+            seq_len: 12,
+            eval_batch: 2,
+        };
         NativeModel::new(test_weights(cfg, 11))
     }
 

@@ -228,7 +228,15 @@ mod tests {
     use crate::model::{IdentitySite, NativeModel};
 
     fn cfg() -> ModelConfig {
-        ModelConfig { vocab: 64, d_model: 16, n_layers: 2, n_heads: 2, d_ff: 32, seq_len: 20, eval_batch: 2 }
+        ModelConfig {
+            vocab: 64,
+            d_model: 16,
+            n_layers: 2,
+            n_heads: 2,
+            d_ff: 32,
+            seq_len: 20,
+            eval_batch: 2,
+        }
     }
 
     fn toks() -> Vec<u32> {
@@ -239,7 +247,13 @@ mod tests {
     fn integer_w8a8_close_to_fp() {
         let w = synthetic_weights(cfg(), 21);
         let fp = NativeModel::new(w.clone());
-        let qm = QuantizedModel::new(&w, Bits::Int8, Bits::Int8, QuantPath::CrossQuant { alpha: 0.15 }).unwrap();
+        let qm = QuantizedModel::new(
+            &w,
+            Bits::Int8,
+            Bits::Int8,
+            QuantPath::CrossQuant { alpha: 0.15 },
+        )
+        .unwrap();
         let nll_fp = fp.forward_nll(&toks(), &mut IdentitySite).unwrap();
         let nll_q = qm.forward_nll(&toks()).unwrap();
         let mean_fp: f32 = nll_fp.iter().sum::<f32>() / nll_fp.len() as f32;

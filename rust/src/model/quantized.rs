@@ -192,7 +192,15 @@ mod tests {
     use crate::model::weights::synthetic_weights as test_weights;
 
     fn cfg() -> ModelConfig {
-        ModelConfig { vocab: 32, d_model: 16, n_layers: 2, n_heads: 2, d_ff: 32, seq_len: 8, eval_batch: 2 }
+        ModelConfig {
+            vocab: 32,
+            d_model: 16,
+            n_layers: 2,
+            n_heads: 2,
+            d_ff: 32,
+            seq_len: 8,
+            eval_batch: 2,
+        }
     }
 
     #[test]
@@ -218,7 +226,9 @@ mod tests {
                 .sum::<f64>()
                 .sqrt()
         };
-        assert!(err(WeightScheme::PerChannel(Bits::Int8)) < err(WeightScheme::PerChannel(Bits::Int4)));
+        assert!(
+            err(WeightScheme::PerChannel(Bits::Int8)) < err(WeightScheme::PerChannel(Bits::Int4))
+        );
     }
 
     #[test]

@@ -165,22 +165,38 @@ impl Weights {
     pub fn param_names(&self) -> Vec<String> {
         self.manifest.params.iter().map(|p| p.name.clone()).collect()
     }
+
+    /// Rebuild [`Weights`] from a bare (config, flat vector) pair using
+    /// the canonical python parameter layout (the same layout
+    /// [`synthetic_weights`] emits). The coordinator's native executor
+    /// reconstructs registered weight sets this way when no PJRT runtime
+    /// is linked — the flat vector is the one contract both paths share.
+    pub fn from_config_flat(config: ModelConfig, flat: Vec<f32>) -> Result<Weights> {
+        let (params, total) = param_layout(&config);
+        ensure!(
+            flat.len() == total,
+            "weight vector holds {} f32s, config requires {total}",
+            flat.len()
+        );
+        let manifest =
+            Manifest { config, params, total_params: total, train: None, artifacts: Vec::new() };
+        Ok(Weights::from_parts(manifest, flat))
+    }
 }
 
-/// Build randomly-initialised Weights with the python parameter layout —
-/// the substrate for unit tests, property tests and `--synthetic` CLI runs
-/// that don't have trained artifacts on disk.
-pub fn synthetic_weights(cfg: ModelConfig, seed: u64) -> Weights {
-    use crate::tensor::SplitMix64;
+/// The canonical parameter layout of the python model for a config:
+/// embeddings, per-layer (LN affines + attention/MLP linears), final LN,
+/// output head — in flat-vector order.
+fn param_layout(cfg: &ModelConfig) -> (Vec<ParamEntry>, usize) {
     let mut params = Vec::new();
     let mut offset = 0usize;
-    let push = |name: &str, shape: Vec<usize>, params: &mut Vec<ParamEntry>, off: &mut usize| {
+    let mut push = |name: String, shape: Vec<usize>, params: &mut Vec<ParamEntry>| {
         let size: usize = shape.iter().product();
-        params.push(ParamEntry { name: name.into(), shape, offset: *off, size });
-        *off += size;
+        params.push(ParamEntry { name, shape, offset, size });
+        offset += size;
     };
-    push("tok_emb", vec![cfg.vocab, cfg.d_model], &mut params, &mut offset);
-    push("pos_emb", vec![cfg.seq_len, cfg.d_model], &mut params, &mut offset);
+    push("tok_emb".into(), vec![cfg.vocab, cfg.d_model], &mut params);
+    push("pos_emb".into(), vec![cfg.seq_len, cfg.d_model], &mut params);
     for l in 0..cfg.n_layers {
         for (n, shape) in [
             ("ln1_g", vec![cfg.d_model]),
@@ -194,13 +210,21 @@ pub fn synthetic_weights(cfg: ModelConfig, seed: u64) -> Weights {
             ("w1", vec![cfg.d_model, cfg.d_ff]),
             ("w2", vec![cfg.d_ff, cfg.d_model]),
         ] {
-            push(&format!("layer{l}.{n}"), shape, &mut params, &mut offset);
+            push(format!("layer{l}.{n}"), shape, &mut params);
         }
     }
-    push("lnf_g", vec![cfg.d_model], &mut params, &mut offset);
-    push("lnf_b", vec![cfg.d_model], &mut params, &mut offset);
-    push("w_out", vec![cfg.d_model, cfg.vocab], &mut params, &mut offset);
+    push("lnf_g".into(), vec![cfg.d_model], &mut params);
+    push("lnf_b".into(), vec![cfg.d_model], &mut params);
+    push("w_out".into(), vec![cfg.d_model, cfg.vocab], &mut params);
+    (params, offset)
+}
 
+/// Build randomly-initialised Weights with the python parameter layout —
+/// the substrate for unit tests, property tests and `--synthetic` CLI runs
+/// that don't have trained artifacts on disk.
+pub fn synthetic_weights(cfg: ModelConfig, seed: u64) -> Weights {
+    use crate::tensor::SplitMix64;
+    let (params, offset) = param_layout(&cfg);
     let mut rng = SplitMix64::new(seed);
     let flat: Vec<f32> = params
         .iter()
@@ -233,7 +257,15 @@ mod tests {
 
     #[test]
     fn get_set_roundtrip() {
-        let cfg = ModelConfig { vocab: 32, d_model: 16, n_layers: 1, n_heads: 2, d_ff: 32, seq_len: 8, eval_batch: 2 };
+        let cfg = ModelConfig {
+            vocab: 32,
+            d_model: 16,
+            n_layers: 1,
+            n_heads: 2,
+            d_ff: 32,
+            seq_len: 8,
+            eval_batch: 2,
+        };
         let mut w = test_weights(cfg, 1);
         let mut m = w.get("layer0.wq").unwrap();
         assert_eq!((m.rows, m.cols), (16, 16));
@@ -244,7 +276,15 @@ mod tests {
 
     #[test]
     fn linear_names_exclude_embeddings_and_norms() {
-        let cfg = ModelConfig { vocab: 32, d_model: 16, n_layers: 2, n_heads: 2, d_ff: 32, seq_len: 8, eval_batch: 2 };
+        let cfg = ModelConfig {
+            vocab: 32,
+            d_model: 16,
+            n_layers: 2,
+            n_heads: 2,
+            d_ff: 32,
+            seq_len: 8,
+            eval_batch: 2,
+        };
         let w = test_weights(cfg, 1);
         let names = w.linear_names();
         assert_eq!(names.len(), 2 * 6 + 1); // 6 linears per layer + w_out
@@ -252,8 +292,36 @@ mod tests {
     }
 
     #[test]
+    fn from_config_flat_matches_synthetic_layout() {
+        let cfg = ModelConfig {
+            vocab: 32,
+            d_model: 16,
+            n_layers: 2,
+            n_heads: 2,
+            d_ff: 32,
+            seq_len: 8,
+            eval_batch: 2,
+        };
+        let w = test_weights(cfg, 5);
+        let rebuilt = Weights::from_config_flat(cfg, w.flat.clone()).unwrap();
+        for name in w.param_names() {
+            assert_eq!(rebuilt.get(&name).unwrap(), w.get(&name).unwrap(), "{name}");
+        }
+        // wrong length must be a loud error, not a misaligned model
+        assert!(Weights::from_config_flat(cfg, vec![0.0; 4]).is_err());
+    }
+
+    #[test]
     fn missing_param_is_error() {
-        let cfg = ModelConfig { vocab: 32, d_model: 16, n_layers: 1, n_heads: 2, d_ff: 32, seq_len: 8, eval_batch: 2 };
+        let cfg = ModelConfig {
+            vocab: 32,
+            d_model: 16,
+            n_layers: 1,
+            n_heads: 2,
+            d_ff: 32,
+            seq_len: 8,
+            eval_batch: 2,
+        };
         let w = test_weights(cfg, 1);
         assert!(w.get("nope").is_err());
     }

@@ -47,6 +47,7 @@ impl ActQuantizer for ClippedPerToken {
     }
 
     fn delta_field(&self, x: &Matrix) -> DeltaField {
+        super::debug_assert_finite(x, "ClippedPerToken");
         let qmax = self.bits.qmax();
         DeltaField::PerRow(
             x.row_abs_max()

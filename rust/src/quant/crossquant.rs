@@ -40,19 +40,26 @@ impl CrossQuant {
     }
 }
 
+/// The factored CrossQuant scale field Δ̃_ij = t_i^α·c_j^(1−α)/qmax for
+/// arbitrary runtime (α, qmax) — shared by [`CrossQuant::delta_field`]
+/// and the coordinator's native executor (whose artifacts take α/qmax as
+/// runtime scalars), so eq. (5) exists in exactly one place.
+pub fn cross_delta_field(x: &Matrix, alpha: f32, qmax: f32) -> DeltaField {
+    let row_pow: Vec<f32> =
+        x.row_abs_max().iter().map(|&t| t.max(EPS).powf(alpha) / qmax).collect();
+    let col_pow: Vec<f32> =
+        x.col_abs_max().iter().map(|&c| c.max(EPS).powf(1.0 - alpha)).collect();
+    DeltaField::Cross { row_pow, col_pow }
+}
+
 impl ActQuantizer for CrossQuant {
     fn name(&self) -> String {
         format!("crossquant[α={},{}]", self.alpha, self.bits)
     }
 
     fn delta_field(&self, x: &Matrix) -> DeltaField {
-        let qmax = self.bits.qmax();
-        let a = self.alpha;
-        let row_pow: Vec<f32> =
-            x.row_abs_max().iter().map(|&t| t.max(EPS).powf(a) / qmax).collect();
-        let col_pow: Vec<f32> =
-            x.col_abs_max().iter().map(|&c| c.max(EPS).powf(1.0 - a)).collect();
-        DeltaField::Cross { row_pow, col_pow }
+        super::debug_assert_finite(x, "CrossQuant");
+        cross_delta_field(x, self.alpha, self.bits.qmax())
     }
 
     fn qmax(&self) -> f32 {

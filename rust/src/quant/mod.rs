@@ -24,7 +24,7 @@ pub mod per_token;
 pub mod remove_kernel;
 pub mod smoothquant;
 
-use crate::tensor::Matrix;
+use crate::tensor::{par, Matrix};
 
 /// Guard against all-zero rows/columns (matches python `ref.EPS`).
 pub const EPS: f32 = 1e-9;
@@ -40,11 +40,22 @@ pub enum Bits {
 
 impl Bits {
     /// qmax = 2^(N−1) − 1, the paper's grid bound.
+    ///
+    /// `Other(n)` is validated to `2 ≤ n ≤ 32`: n = 0 and n ≥ 33 overflow
+    /// the shift (a debug-build panic, garbage in release), and n = 1 has
+    /// qmax 0, which divides by zero in every delta field downstream.
     pub fn qmax(self) -> f32 {
         match self {
             Bits::Int4 => 7.0,
             Bits::Int8 => 127.0,
-            Bits::Other(n) => ((1u32 << (n - 1)) - 1) as f32,
+            Bits::Other(n) => {
+                assert!(
+                    (2..=32).contains(&n),
+                    "Bits::Other({n}): bit-width must be in 2..=32 \
+                     (1 bit has qmax 0, widths above 32 overflow the grid)"
+                );
+                ((1u64 << (n - 1)) - 1) as f32
+            }
         }
     }
 }
@@ -110,42 +121,87 @@ pub trait ActQuantizer: Send + Sync {
     fn qmax(&self) -> f32;
 }
 
-/// Shared fake-quant loop over a factored scale field.
+/// Shared fake-quant loop over a factored scale field — row-parallel (see
+/// [`crate::tensor::par`]); every row is computed by the exact same
+/// per-row kernel regardless of worker count, so
+/// [`fake_quant_with_threads`]`(x, field, qmax, 1)` is a bit-exact serial
+/// reference.
 pub fn fake_quant_with(x: &Matrix, field: &DeltaField, qmax: f32) -> Matrix {
+    fake_quant_with_threads(x, field, qmax, par::workers_for(x.rows, x.len()))
+}
+
+/// [`fake_quant_with`] with an explicit worker count.
+pub fn fake_quant_with_threads(
+    x: &Matrix,
+    field: &DeltaField,
+    qmax: f32,
+    workers: usize,
+) -> Matrix {
     let mut out = Matrix::zeros(x.rows, x.cols);
+    if out.is_empty() {
+        return out;
+    }
+    let cols = x.cols;
+    par::par_rows_mut(&mut out.data, cols, workers, |row0, chunk| {
+        for (local_i, dst) in chunk.chunks_mut(cols).enumerate() {
+            let i = row0 + local_i;
+            fake_quant_row(x.row(i), dst, field, i, qmax);
+        }
+    });
+    out
+}
+
+/// The per-row fake-quant kernel, specialised per scale-field variant so
+/// the per-row factor hoists and the inner loop stays branchless and
+/// vectorizable. Serial, parallel and fused (`analysis::
+/// quantize_with_report`) paths all route through this one function —
+/// that is what makes them bit-exact with each other.
+#[inline]
+pub(crate) fn fake_quant_row(
+    src: &[f32],
+    dst: &mut [f32],
+    field: &DeltaField,
+    i: usize,
+    qmax: f32,
+) {
     match field {
         DeltaField::PerRow(rows) => {
-            for i in 0..x.rows {
-                let d = rows[i];
-                let src = x.row(i);
-                let dst = out.row_mut(i);
-                for (o, &v) in dst.iter_mut().zip(src) {
-                    *o = (v / d).round().clamp(-qmax, qmax) * d;
-                }
+            let d = rows[i];
+            for (o, &v) in dst.iter_mut().zip(src) {
+                *o = (v / d).round().clamp(-qmax, qmax) * d;
             }
         }
         DeltaField::PerCol(cols) => {
-            for i in 0..x.rows {
-                let src = x.row(i);
-                let dst = out.row_mut(i);
-                for ((o, &v), &d) in dst.iter_mut().zip(src).zip(cols) {
-                    *o = (v / d).round().clamp(-qmax, qmax) * d;
-                }
+            for ((o, &v), &d) in dst.iter_mut().zip(src).zip(cols) {
+                *o = (v / d).round().clamp(-qmax, qmax) * d;
             }
         }
         DeltaField::Cross { row_pow, col_pow } => {
-            for i in 0..x.rows {
-                let rp = row_pow[i];
-                let src = x.row(i);
-                let dst = out.row_mut(i);
-                for ((o, &v), &cp) in dst.iter_mut().zip(src).zip(col_pow) {
-                    let d = rp * cp;
-                    *o = (v / d).round().clamp(-qmax, qmax) * d;
-                }
+            let rp = row_pow[i];
+            for ((o, &v), &cp) in dst.iter_mut().zip(src).zip(col_pow) {
+                let d = rp * cp;
+                *o = (v / d).round().clamp(-qmax, qmax) * d;
             }
         }
     }
-    out
+}
+
+/// Debug-build guard at every `delta_field` entry: a NaN/Inf activation
+/// would flow through `max(EPS)` into a plausible-looking scale field
+/// (abs-max is NaN-propagating, but `NaN.max(EPS)` discards the NaN
+/// again) and silently corrupt every downstream kernel statistic. Release
+/// builds skip the scan.
+#[inline]
+pub(crate) fn debug_assert_finite(x: &Matrix, scheme: &str) {
+    if cfg!(debug_assertions) {
+        if let Some(pos) = x.data.iter().position(|v| !v.is_finite()) {
+            panic!(
+                "{scheme}::delta_field: non-finite activation {} at flat index {pos} \
+                 of a {}x{} matrix",
+                x.data[pos], x.rows, x.cols
+            );
+        }
+    }
 }
 
 /// Quantization error ‖X − Q(X)‖_F / ‖X‖_F, the generic quality metric.
@@ -163,6 +219,32 @@ mod tests {
         assert_eq!(Bits::Int8.qmax(), 127.0);
         assert_eq!(Bits::Int4.qmax(), 7.0);
         assert_eq!(Bits::Other(6).qmax(), 31.0);
+    }
+
+    #[test]
+    fn qmax_other_full_valid_range() {
+        assert_eq!(Bits::Other(2).qmax(), 1.0);
+        assert_eq!(Bits::Other(8).qmax(), 127.0);
+        assert_eq!(Bits::Other(32).qmax(), (u32::MAX / 2) as f32);
+    }
+
+    #[test]
+    #[should_panic(expected = "bit-width must be in 2..=32")]
+    fn qmax_rejects_zero_bits() {
+        Bits::Other(0).qmax();
+    }
+
+    #[test]
+    #[should_panic(expected = "bit-width must be in 2..=32")]
+    fn qmax_rejects_one_bit() {
+        // qmax would be 0 → division by zero in every delta field
+        Bits::Other(1).qmax();
+    }
+
+    #[test]
+    #[should_panic(expected = "bit-width must be in 2..=32")]
+    fn qmax_rejects_oversized_bits() {
+        Bits::Other(33).qmax();
     }
 
     #[test]

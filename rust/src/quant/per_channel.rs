@@ -26,6 +26,7 @@ impl ActQuantizer for PerChannel {
     }
 
     fn delta_field(&self, w: &Matrix) -> DeltaField {
+        super::debug_assert_finite(w, "PerChannel");
         let qmax = self.bits.qmax();
         DeltaField::PerCol(w.col_abs_max().iter().map(|&c| c.max(EPS) / qmax).collect())
     }
@@ -105,7 +106,8 @@ mod tests {
             let idx = rng.below(w.len());
             w.data[idx] = if k % 2 == 0 { 1.0 } else { -1.0 };
         }
-        let e_g32 = crate::quant::relative_error(&w, &GroupWise::new(Bits::Int4, 32).fake_quant(&w));
+        let e_g32 =
+            crate::quant::relative_error(&w, &GroupWise::new(Bits::Int4, 32).fake_quant(&w));
         let e_g512 =
             crate::quant::relative_error(&w, &GroupWise::new(Bits::Int4, 512).fake_quant(&w));
         assert!(e_g32 < e_g512, "g32={e_g32} g512={e_g512}");

@@ -25,6 +25,7 @@ impl ActQuantizer for PerToken {
     }
 
     fn delta_field(&self, x: &Matrix) -> DeltaField {
+        super::debug_assert_finite(x, "PerToken");
         let qmax = self.bits.qmax();
         let t = x.row_abs_max();
         DeltaField::PerRow(t.iter().map(|&ti| ti.max(EPS) / qmax).collect())

@@ -21,7 +21,7 @@
 //!   away, quantified in `rust/benches/quant_hot_path.rs`.
 
 use super::{Bits, EPS};
-use crate::tensor::Matrix;
+use crate::tensor::{par, Matrix};
 
 /// A linear layer with per-output-channel integer weights.
 #[derive(Clone, Debug)]
@@ -127,28 +127,47 @@ impl QuantizedLinear {
     pub fn forward_crossquant(&self, x: &Matrix, alpha: f32, act_bits: Bits) -> Matrix {
         let (act, col_pow) = Self::quantize_crossquant(x, alpha, act_bits);
         let qmax = self.bits.qmax();
-        // fold c_k^(1−α) into the FP weight rows, requantize per channel
-        let mut folded_scale = vec![0.0f32; self.out_dim];
-        let mut max_per_out = vec![0.0f32; self.out_dim];
-        for k in 0..self.in_dim {
-            let cp = col_pow[k];
-            for (j, &v) in self.w_fp.row(k).iter().enumerate() {
-                let a = (v * cp).abs();
-                if a > max_per_out[j] {
-                    max_per_out[j] = a;
+        // Fold c_k^(1−α) into the FP weight rows and requantize per output
+        // channel — the per-batch O(I·O) rescale pass. Both halves are
+        // row-parallel over the weight (see tensor::par): workers reduce
+        // their row blocks to per-output maxima (merged below), then emit
+        // their blocks of folded integer codes.
+        let n = self.out_dim;
+        let workers = par::workers_for(self.in_dim, self.w_fp.len());
+        let partial_max = par::par_map_rows(self.in_dim, workers, |range| {
+            let mut m = vec![0.0f32; n];
+            for k in range {
+                let cp = col_pow[k];
+                for (mj, &v) in m.iter_mut().zip(self.w_fp.row(k)) {
+                    let a = (v * cp).abs();
+                    if a > *mj {
+                        *mj = a;
+                    }
+                }
+            }
+            m
+        });
+        let mut folded_scale = vec![0.0f32; n];
+        for m in &partial_max {
+            for (s, &a) in folded_scale.iter_mut().zip(m) {
+                if a > *s {
+                    *s = a;
                 }
             }
         }
-        for j in 0..self.out_dim {
-            folded_scale[j] = max_per_out[j].max(EPS) / qmax;
+        for s in folded_scale.iter_mut() {
+            *s = s.max(EPS) / qmax;
         }
-        let mut folded_codes = Vec::with_capacity(self.w_fp.len());
-        for k in 0..self.in_dim {
-            let cp = col_pow[k];
-            for (j, &v) in self.w_fp.row(k).iter().enumerate() {
-                folded_codes.push((v * cp / folded_scale[j]).round().clamp(-qmax, qmax) as i8);
+        let mut folded_codes = vec![0i8; self.w_fp.len()];
+        par::par_rows_mut(&mut folded_codes, n.max(1), workers, |k0, chunk| {
+            for (local, dst) in chunk.chunks_mut(n.max(1)).enumerate() {
+                let k = k0 + local;
+                let cp = col_pow[k];
+                for ((c, &v), &s) in dst.iter_mut().zip(self.w_fp.row(k)).zip(&folded_scale) {
+                    *c = (v * cp / s).round().clamp(-qmax, qmax) as i8;
+                }
             }
-        }
+        });
         self.gemm_i32(&act, &folded_codes, &folded_scale)
     }
 
@@ -157,31 +176,42 @@ impl QuantizedLinear {
         x.matmul(&self.w_fp)
     }
 
-    /// int8 × int8 → i32 GEMM with row/col dequantization.
+    /// int8 × int8 → i32 GEMM with row/col dequantization. Row-parallel:
+    /// each worker owns a block of output rows and its own i32
+    /// accumulator; integer sums make the result order-independent. The
+    /// `a == 0` skip is exact for integer codes (unlike the FP matmul's
+    /// removed shortcut) and pays off because quantized activations are
+    /// zero exactly on the quantization kernel.
     fn gemm_i32(&self, act: &QuantizedActivation, w_codes: &[i8], w_scale: &[f32]) -> Matrix {
         assert_eq!(act.cols, self.in_dim, "activation/weight shape mismatch");
         let (m, k_dim, n) = (act.rows, self.in_dim, self.out_dim);
         let mut out = Matrix::zeros(m, n);
-        let mut acc = vec![0i32; n];
-        for i in 0..m {
-            acc.iter_mut().for_each(|a| *a = 0);
-            let a_row = &act.codes[i * k_dim..(i + 1) * k_dim];
-            for (k, &a) in a_row.iter().enumerate() {
-                if a == 0 {
-                    continue;
-                }
-                let a = a as i32;
-                let w_row = &w_codes[k * n..(k + 1) * n];
-                for (o, &w) in acc.iter_mut().zip(w_row) {
-                    *o += a * w as i32;
-                }
-            }
-            let rs = act.row_scale[i];
-            let dst = out.row_mut(i);
-            for ((d, &a), &ws) in dst.iter_mut().zip(&acc).zip(w_scale) {
-                *d = a as f32 * rs * ws;
-            }
+        if out.is_empty() {
+            return out;
         }
+        let cost = m.saturating_mul(k_dim).saturating_mul(n);
+        par::par_rows_mut(&mut out.data, n, par::workers_for(m, cost), |row0, chunk| {
+            let mut acc = vec![0i32; n];
+            for (local_i, dst) in chunk.chunks_mut(n).enumerate() {
+                let i = row0 + local_i;
+                acc.iter_mut().for_each(|a| *a = 0);
+                let a_row = &act.codes[i * k_dim..(i + 1) * k_dim];
+                for (k, &a) in a_row.iter().enumerate() {
+                    if a == 0 {
+                        continue;
+                    }
+                    let a = a as i32;
+                    let w_row = &w_codes[k * n..(k + 1) * n];
+                    for (o, &w) in acc.iter_mut().zip(w_row) {
+                        *o += a * w as i32;
+                    }
+                }
+                let rs = act.row_scale[i];
+                for ((d, &a), &ws) in dst.iter_mut().zip(&acc).zip(w_scale) {
+                    *d = a as f32 * rs * ws;
+                }
+            }
+        });
         out
     }
 }

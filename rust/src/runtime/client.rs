@@ -10,6 +10,7 @@ use std::collections::HashMap;
 use anyhow::{anyhow, Result};
 
 use super::artifact::ArtifactStore;
+use crate::xla;
 
 pub struct Runtime {
     pub store: ArtifactStore,

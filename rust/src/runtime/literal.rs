@@ -3,6 +3,7 @@
 use anyhow::{ensure, Result};
 
 use crate::tensor::Matrix;
+use crate::xla;
 
 /// (B, S) token batch → i32 literal. Pads short rows with `pad` up to S.
 pub fn tokens_literal(batch: &[Vec<u32>], seq_len: usize, pad: u32) -> Result<xla::Literal> {

@@ -5,6 +5,7 @@
 //! a quantizer, the analysis engine, or `model::forward` uses it on a hot
 //! path, and each is written to be straightforwardly auto-vectorizable.
 
+pub mod par;
 pub mod rng;
 
 pub use rng::SplitMix64;
@@ -66,20 +67,44 @@ impl Matrix {
     }
 
     /// Per-row absolute maximum: the paper's `t` vector (len = rows).
+    ///
+    /// NaN-propagating: a NaN anywhere in a row yields a NaN maximum, so a
+    /// corrupt activation matrix surfaces in the scale field instead of
+    /// producing a plausible-looking delta (`f32::max` would silently
+    /// discard the NaN and the kernel-fraction numbers would be quietly
+    /// wrong). `quant::debug_assert_finite` turns that NaN into a panic in
+    /// debug builds at every `delta_field` entry.
     pub fn row_abs_max(&self) -> Vec<f32> {
-        (0..self.rows)
-            .map(|i| self.row(i).iter().fold(0.0f32, |m, &v| m.max(v.abs())))
-            .collect()
+        (0..self.rows).map(|i| abs_max_nan_propagating(0.0, self.row(i))).collect()
     }
 
     /// Per-column absolute maximum: the paper's `c` vector (len = cols).
+    /// Row-parallel (see [`par`]) and NaN-propagating like
+    /// [`Matrix::row_abs_max`].
     pub fn col_abs_max(&self) -> Vec<f32> {
-        let mut c = vec![0.0f32; self.cols];
-        for i in 0..self.rows {
-            let row = self.row(i);
-            for (cv, &v) in c.iter_mut().zip(row) {
-                let a = v.abs();
-                if a > *cv {
+        self.col_abs_max_threads(par::workers_for(self.rows, self.len()))
+    }
+
+    /// [`Matrix::col_abs_max`] with an explicit worker count (1 = the
+    /// serial reference the parallel path is property-tested against).
+    pub fn col_abs_max_threads(&self, workers: usize) -> Vec<f32> {
+        let partials = par::par_map_rows(self.rows, workers, |range| {
+            let mut c = vec![0.0f32; self.cols];
+            for i in range {
+                for (cv, &v) in c.iter_mut().zip(self.row(i)) {
+                    let a = v.abs();
+                    if a >= *cv || a.is_nan() {
+                        *cv = a;
+                    }
+                }
+            }
+            c
+        });
+        let mut partials = partials.into_iter();
+        let mut c = partials.next().unwrap_or_else(|| vec![0.0f32; self.cols]);
+        for p in partials {
+            for (cv, &a) in c.iter_mut().zip(&p) {
+                if a >= *cv || a.is_nan() {
                     *cv = a;
                 }
             }
@@ -89,26 +114,49 @@ impl Matrix {
 
     /// Dense matmul: self (m×k) · rhs (k×n) → (m×n).
     ///
-    /// Simple ikj loop order with the inner loop over contiguous rows of
-    /// `rhs`, which LLVM vectorizes; good enough for the tiny-model native
-    /// path (the PJRT path carries the large shapes).
+    /// Row-parallel, cache-blocked ikj kernel: each worker owns a
+    /// contiguous block of output rows; within a row, contributions
+    /// accumulate in strictly ascending k (walked in L1-sized k-blocks so
+    /// the touched `rhs` rows stay resident), which keeps the result
+    /// bit-identical for every worker count, including the serial
+    /// reference `matmul_threads(rhs, 1)`. The inner loop is branchless
+    /// over contiguous rows of `rhs`, which LLVM vectorizes — no
+    /// data-dependent `a == 0.0` skip: that branch defeated
+    /// autovectorization, made timings depend on activation sparsity, and
+    /// silently dropped -0.0/NaN propagation.
     pub fn matmul(&self, rhs: &Matrix) -> Matrix {
+        let cost = self.rows.saturating_mul(self.cols).saturating_mul(rhs.cols);
+        self.matmul_threads(rhs, par::workers_for(self.rows, cost))
+    }
+
+    /// [`Matrix::matmul`] with an explicit worker count.
+    pub fn matmul_threads(&self, rhs: &Matrix, workers: usize) -> Matrix {
         assert_eq!(self.cols, rhs.rows, "matmul shape mismatch");
-        let (m, k, n) = (self.rows, self.cols, rhs.cols);
-        let mut out = Matrix::zeros(m, n);
-        for i in 0..m {
-            let a_row = self.row(i);
-            let o_row = out.row_mut(i);
-            for (p, &a) in a_row.iter().enumerate().take(k) {
-                if a == 0.0 {
-                    continue;
-                }
-                let b_row = &rhs.data[p * n..(p + 1) * n];
-                for (o, &b) in o_row.iter_mut().zip(b_row) {
-                    *o += a * b;
+        let (k, n) = (self.cols, rhs.cols);
+        let mut out = Matrix::zeros(self.rows, n);
+        if out.is_empty() {
+            return out;
+        }
+        // 256 k-steps touch 256 rhs rows; with the output row that stays
+        // within L2 for the shapes this crate runs (n ≤ ~4096).
+        const KB: usize = 256;
+        par::par_rows_mut(&mut out.data, n, workers, |row0, chunk| {
+            for (local_i, o_row) in chunk.chunks_mut(n).enumerate() {
+                let a_row = self.row(row0 + local_i);
+                let mut p0 = 0usize;
+                while p0 < k {
+                    let p1 = (p0 + KB).min(k);
+                    for (off, &a) in a_row[p0..p1].iter().enumerate() {
+                        let p = p0 + off;
+                        let b_row = &rhs.data[p * n..(p + 1) * n];
+                        for (o, &b) in o_row.iter_mut().zip(b_row) {
+                            *o += a * b;
+                        }
+                    }
+                    p0 = p1;
                 }
             }
-        }
+        });
         out
     }
 
@@ -156,6 +204,21 @@ impl Matrix {
     }
 }
 
+/// `fold` for the absolute maximum that lets NaN win instead of being
+/// discarded (`f32::max(NaN, x)` returns `x`). If the accumulator is
+/// already NaN, every later comparison is false and it stays NaN.
+#[inline]
+fn abs_max_nan_propagating(init: f32, row: &[f32]) -> f32 {
+    row.iter().fold(init, |m, &v| {
+        let a = v.abs();
+        if a >= m || a.is_nan() {
+            a
+        } else {
+            m
+        }
+    })
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -180,6 +243,63 @@ mod tests {
         let m = Matrix::from_vec(2, 3, vec![1., -5., 2., -3., 4., 0.]);
         assert_eq!(m.row_abs_max(), vec![5., 4.]);
         assert_eq!(m.col_abs_max(), vec![3., 5., 2.]);
+    }
+
+    #[test]
+    fn matmul_propagates_nan_through_zero_lhs() {
+        // The seed's `a == 0.0` inner-loop skip silently dropped NaN
+        // propagation: a zero activation against a NaN weight must yield
+        // NaN, exactly as IEEE multiply-add does.
+        let a = Matrix::from_vec(1, 2, vec![0.0, 1.0]);
+        let b = Matrix::from_vec(2, 2, vec![f32::NAN, 2.0, 3.0, 4.0]);
+        let c = a.matmul(&b);
+        assert!(c.get(0, 0).is_nan(), "0·NaN must propagate, got {}", c.get(0, 0));
+        assert_eq!(c.get(0, 1), 4.0);
+    }
+
+    #[test]
+    fn matmul_threads_bit_exact_with_serial() {
+        let mut rng = SplitMix64::new(77);
+        let a = Matrix::randn(37, 53, 1.0, &mut rng);
+        let b = Matrix::randn(53, 29, 0.1, &mut rng);
+        let serial = a.matmul_threads(&b, 1);
+        for workers in [2, 4, 64] {
+            assert_eq!(a.matmul_threads(&b, workers).data, serial.data);
+        }
+    }
+
+    #[test]
+    fn matmul_degenerate_shapes() {
+        let a = Matrix::zeros(0, 5);
+        let b = Matrix::zeros(5, 3);
+        assert_eq!(a.matmul(&b), Matrix::zeros(0, 3));
+        let a = Matrix::zeros(4, 0);
+        let b = Matrix::zeros(0, 3);
+        assert_eq!(a.matmul(&b), Matrix::zeros(4, 3));
+        let a = Matrix::zeros(4, 5);
+        let b = Matrix::zeros(5, 0);
+        assert_eq!(a.matmul(&b), Matrix::zeros(4, 0));
+    }
+
+    #[test]
+    fn abs_max_propagates_nan() {
+        let m = Matrix::from_vec(2, 2, vec![1.0, f32::NAN, -3.0, 2.0]);
+        let t = m.row_abs_max();
+        assert!(t[0].is_nan(), "row NaN must survive the fold");
+        assert_eq!(t[1], 3.0);
+        let c = m.col_abs_max();
+        assert_eq!(c[0], 3.0);
+        assert!(c[1].is_nan(), "column NaN must survive the fold");
+    }
+
+    #[test]
+    fn col_abs_max_threads_matches_serial() {
+        let mut rng = SplitMix64::new(12);
+        let m = Matrix::randn(61, 33, 1.0, &mut rng);
+        let serial = m.col_abs_max_threads(1);
+        for workers in [2, 7, 100] {
+            assert_eq!(m.col_abs_max_threads(workers), serial);
+        }
     }
 
     #[test]

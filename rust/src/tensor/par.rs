@@ -1,0 +1,206 @@
+//! Zero-dependency row-parallelism primitive (the offline build has no
+//! rayon — see Cargo.toml).
+//!
+//! Every quantization hot path in this crate walks a row-major matrix row
+//! by row, so one primitive covers all of them: split a buffer into
+//! contiguous whole-row chunks and run one worker per chunk under
+//! [`std::thread::scope`]. The worker count comes from
+//! [`std::thread::available_parallelism`], can be overridden with the
+//! `CROSSQUANT_THREADS` environment variable, and collapses to a serial
+//! in-place call for small jobs (scoped-thread spawns cost ~10µs each, so
+//! tiny matrices must not pay for them).
+//!
+//! Chunk boundaries depend only on `(rows, workers)`, and every consumer
+//! keeps its per-row arithmetic identical between the serial and parallel
+//! paths, so results are bit-exact for any worker count — pinned by
+//! `rust/tests/parallel.rs`.
+
+use std::sync::OnceLock;
+
+/// Minimum element-operations a worker must receive before an extra
+/// thread pays for its spawn.
+pub const MIN_COST_PER_THREAD: usize = 32 * 1024;
+
+fn parse_threads(val: &str) -> Option<usize> {
+    val.trim().parse::<usize>().ok().filter(|&n| n >= 1)
+}
+
+/// The configured thread ceiling: `CROSSQUANT_THREADS` if set and valid,
+/// otherwise the machine's available parallelism (cached process-wide).
+pub fn max_threads() -> usize {
+    static CONF: OnceLock<usize> = OnceLock::new();
+    *CONF.get_or_init(|| {
+        std::env::var("CROSSQUANT_THREADS")
+            .ok()
+            .and_then(|v| parse_threads(&v))
+            .unwrap_or_else(|| std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1))
+    })
+}
+
+/// Worker count for a job of `cost` total element-operations spread over
+/// `rows` rows: 1 (serial) unless every worker gets a meaningful share,
+/// and never more workers than rows.
+pub fn workers_for(rows: usize, cost: usize) -> usize {
+    let w = (cost / MIN_COST_PER_THREAD).min(max_threads()).min(rows);
+    if w == 0 {
+        1
+    } else {
+        w
+    }
+}
+
+/// Split `data` into contiguous whole-row chunks (`cols` elements per
+/// row), run `f(first_row, chunk)` on `workers` scoped threads, and
+/// return the per-chunk results in row order. `workers <= 1` (or an empty
+/// buffer) runs one inline call — the serial reference path.
+pub fn par_rows_map_mut<T, R, F>(data: &mut [T], cols: usize, workers: usize, f: F) -> Vec<R>
+where
+    T: Send,
+    R: Send,
+    F: Fn(usize, &mut [T]) -> R + Sync,
+{
+    if cols == 0 || data.is_empty() || workers <= 1 {
+        return vec![f(0, data)];
+    }
+    let rows = data.len() / cols;
+    debug_assert_eq!(rows * cols, data.len(), "buffer must hold whole rows");
+    let workers = workers.min(rows);
+    let per = rows.div_ceil(workers);
+    // Chunk 0 runs on the calling thread (like par_map_rows below), so a
+    // job of W workers costs W−1 spawns and the caller's core works too.
+    let (first, mut rest) = data.split_at_mut(per * cols);
+    std::thread::scope(|scope| {
+        let mut handles = Vec::with_capacity(workers);
+        let mut row0 = per;
+        while row0 < rows {
+            let take = per.min(rows - row0);
+            let (chunk, tail) = std::mem::take(&mut rest).split_at_mut(take * cols);
+            rest = tail;
+            let f = &f;
+            let start = row0;
+            handles.push(scope.spawn(move || f(start, chunk)));
+            row0 += take;
+        }
+        let mut out = Vec::with_capacity(workers);
+        out.push(f(0, first));
+        for h in handles {
+            out.push(h.join().unwrap_or_else(|e| std::panic::resume_unwind(e)));
+        }
+        out
+    })
+}
+
+/// [`par_rows_map_mut`] without per-chunk results — the common shape for
+/// "fill this output buffer row-parallel".
+pub fn par_rows_mut<T, F>(data: &mut [T], cols: usize, workers: usize, f: F)
+where
+    T: Send,
+    F: Fn(usize, &mut [T]) + Sync,
+{
+    par_rows_map_mut(data, cols, workers, f);
+}
+
+/// Map disjoint row ranges to per-chunk values on scoped threads (no
+/// shared output buffer), returned in row order — the reduction-side
+/// primitive (`kernel_fraction`, `col_abs_max`, the qlinear rescale max).
+pub fn par_map_rows<R, F>(rows: usize, workers: usize, f: F) -> Vec<R>
+where
+    R: Send,
+    F: Fn(std::ops::Range<usize>) -> R + Sync,
+{
+    if rows == 0 {
+        return Vec::new();
+    }
+    let workers = workers.min(rows);
+    if workers <= 1 {
+        return vec![f(0..rows)];
+    }
+    let per = rows.div_ceil(workers);
+    let n_chunks = rows.div_ceil(per);
+    std::thread::scope(|scope| {
+        let handles: Vec<_> = (1..n_chunks)
+            .map(|c| {
+                let f = &f;
+                scope.spawn(move || f(c * per..((c + 1) * per).min(rows)))
+            })
+            .collect();
+        let mut out = Vec::with_capacity(n_chunks);
+        out.push(f(0..per.min(rows)));
+        for h in handles {
+            out.push(h.join().unwrap_or_else(|e| std::panic::resume_unwind(e)));
+        }
+        out
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parse_threads_accepts_positive_integers() {
+        assert_eq!(parse_threads("4"), Some(4));
+        assert_eq!(parse_threads(" 16 "), Some(16));
+        assert_eq!(parse_threads("0"), None);
+        assert_eq!(parse_threads("-2"), None);
+        assert_eq!(parse_threads("lots"), None);
+    }
+
+    #[test]
+    fn workers_never_exceed_rows_and_tiny_jobs_stay_serial() {
+        assert_eq!(workers_for(3, usize::MAX), 3.min(max_threads()));
+        assert_eq!(workers_for(1000, 100), 1); // below MIN_COST_PER_THREAD
+        assert_eq!(workers_for(0, usize::MAX), 1);
+    }
+
+    #[test]
+    fn par_rows_mut_fills_every_row_once() {
+        let (rows, cols) = (23, 7);
+        for workers in [1, 2, 5, 16, 64] {
+            let mut data = vec![0u32; rows * cols];
+            par_rows_mut(&mut data, cols, workers, |row0, chunk| {
+                for (local, row) in chunk.chunks_mut(cols).enumerate() {
+                    for v in row.iter_mut() {
+                        *v += (row0 + local) as u32 + 1;
+                    }
+                }
+            });
+            for i in 0..rows {
+                assert!(data[i * cols..(i + 1) * cols].iter().all(|&v| v == i as u32 + 1));
+            }
+        }
+    }
+
+    #[test]
+    fn par_rows_map_mut_returns_chunks_in_row_order() {
+        let mut data = vec![0u8; 10 * 3];
+        let starts = par_rows_map_mut(&mut data, 3, 4, |row0, _chunk| row0);
+        let mut sorted = starts.clone();
+        sorted.sort_unstable();
+        assert_eq!(starts, sorted);
+        assert_eq!(starts[0], 0);
+    }
+
+    #[test]
+    fn par_map_rows_covers_range_in_order() {
+        for workers in [1, 3, 7, 50] {
+            let ranges = par_map_rows(11, workers, |r| r);
+            let mut expect = 0usize;
+            for r in &ranges {
+                assert_eq!(r.start, expect);
+                assert!(r.end > r.start);
+                expect = r.end;
+            }
+            assert_eq!(expect, 11);
+        }
+    }
+
+    #[test]
+    fn empty_inputs_are_safe() {
+        let mut empty: Vec<f32> = Vec::new();
+        par_rows_mut(&mut empty, 4, 8, |_, chunk| assert!(chunk.is_empty()));
+        assert!(par_map_rows(0, 8, |r| r).is_empty());
+        let results = par_rows_map_mut(&mut empty, 0, 8, |_, _| 42usize);
+        assert_eq!(results, vec![42]);
+    }
+}

@@ -1,0 +1,234 @@
+//! Offline stand-in for the `xla` (xla_extension) bindings — the sole
+//! external dependency of this crate is `anyhow` (see Cargo.toml), so the
+//! PJRT surface the runtime layer codes against is provided here instead
+//! of by a native library.
+//!
+//! [`Literal`] is a real implementation — host-side typed buffers with
+//! shape metadata — so the marshalling layer in `runtime::literal` (and
+//! its tests) works unchanged. The PJRT pieces ([`PjRtClient`] onward)
+//! are honest stubs: constructing the client reports that no XLA runtime
+//! is linked, and callers degrade exactly as they would with a missing
+//! plugin — the integration tests skip, and the coordinator falls back to
+//! its native executor (see `coordinator::scheduler`).
+
+use std::fmt;
+
+/// Error type mirroring the real bindings' error far enough for
+/// `?`-conversion into `anyhow::Error`.
+#[derive(Clone, Debug)]
+pub struct Error(pub String);
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(&self.0)
+    }
+}
+
+impl std::error::Error for Error {}
+
+pub type Result<T> = std::result::Result<T, Error>;
+
+fn unavailable(what: &str) -> Error {
+    Error(format!(
+        "{what} failed: the xla_extension runtime is not linked into this offline build"
+    ))
+}
+
+/// Element types a [`Literal`] can carry.
+pub trait ArrayElement: Copy {
+    #[doc(hidden)]
+    fn into_payload(v: Vec<Self>) -> Payload;
+    #[doc(hidden)]
+    fn from_payload(p: &Payload) -> Option<Vec<Self>>;
+    #[doc(hidden)]
+    const TYPE_NAME: &'static str;
+}
+
+/// Typed storage of a literal (crate-internal; reachable only through the
+/// [`ArrayElement`] machinery).
+#[derive(Clone, Debug, PartialEq)]
+pub enum Payload {
+    F32(Vec<f32>),
+    I32(Vec<i32>),
+    Tuple(Vec<Literal>),
+}
+
+impl ArrayElement for f32 {
+    fn into_payload(v: Vec<f32>) -> Payload {
+        Payload::F32(v)
+    }
+    fn from_payload(p: &Payload) -> Option<Vec<f32>> {
+        match p {
+            Payload::F32(v) => Some(v.clone()),
+            _ => None,
+        }
+    }
+    const TYPE_NAME: &'static str = "f32";
+}
+
+impl ArrayElement for i32 {
+    fn into_payload(v: Vec<i32>) -> Payload {
+        Payload::I32(v)
+    }
+    fn from_payload(p: &Payload) -> Option<Vec<i32>> {
+        match p {
+            Payload::I32(v) => Some(v.clone()),
+            _ => None,
+        }
+    }
+    const TYPE_NAME: &'static str = "i32";
+}
+
+/// Host-side typed buffer + shape — the subset of `xla::Literal` this
+/// crate marshals through.
+#[derive(Clone, Debug, PartialEq)]
+pub struct Literal {
+    payload: Payload,
+    dims: Vec<i64>,
+}
+
+impl Literal {
+    /// 1-D literal from a host slice.
+    pub fn vec1<T: ArrayElement>(v: &[T]) -> Literal {
+        Literal { payload: T::into_payload(v.to_vec()), dims: vec![v.len() as i64] }
+    }
+
+    /// Rank-0 f32 literal.
+    pub fn scalar(v: f32) -> Literal {
+        Literal { payload: Payload::F32(vec![v]), dims: Vec::new() }
+    }
+
+    /// Tuple literal (what executions with `return_tuple=True` produce).
+    pub fn tuple(elems: Vec<Literal>) -> Literal {
+        Literal { dims: vec![elems.len() as i64], payload: Payload::Tuple(elems) }
+    }
+
+    pub fn element_count(&self) -> usize {
+        match &self.payload {
+            Payload::F32(v) => v.len(),
+            Payload::I32(v) => v.len(),
+            Payload::Tuple(v) => v.len(),
+        }
+    }
+
+    pub fn dims(&self) -> &[i64] {
+        &self.dims
+    }
+
+    /// Reinterpret the buffer under new dimensions (element count must
+    /// match).
+    pub fn reshape(&self, dims: &[i64]) -> Result<Literal> {
+        let want: i64 = dims.iter().product();
+        if want < 0 || want as usize != self.element_count() {
+            return Err(Error(format!(
+                "cannot reshape {} elements to {dims:?}",
+                self.element_count()
+            )));
+        }
+        Ok(Literal { payload: self.payload.clone(), dims: dims.to_vec() })
+    }
+
+    /// Copy the buffer out as a host vector of `T`.
+    pub fn to_vec<T: ArrayElement>(&self) -> Result<Vec<T>> {
+        T::from_payload(&self.payload)
+            .ok_or_else(|| Error(format!("literal does not hold {} elements", T::TYPE_NAME)))
+    }
+
+    pub fn get_first_element<T: ArrayElement>(&self) -> Result<T> {
+        self.to_vec::<T>()?.first().copied().ok_or_else(|| Error("empty literal".into()))
+    }
+
+    /// Decompose a tuple literal into its elements.
+    pub fn to_tuple(self) -> Result<Vec<Literal>> {
+        match self.payload {
+            Payload::Tuple(v) => Ok(v),
+            _ => Err(Error("literal is not a tuple".into())),
+        }
+    }
+}
+
+/// PJRT client stub: construction always reports unavailability so every
+/// caller takes its no-PJRT path (skip / fallback), never a partial one.
+pub struct PjRtClient;
+
+impl PjRtClient {
+    pub fn cpu() -> Result<PjRtClient> {
+        Err(unavailable("PJRT CPU client initialization"))
+    }
+
+    pub fn platform_name(&self) -> String {
+        "unavailable".to_string()
+    }
+
+    pub fn compile(&self, _computation: &XlaComputation) -> Result<PjRtLoadedExecutable> {
+        Err(unavailable("XLA compilation"))
+    }
+}
+
+/// Parsed HLO module stub.
+pub struct HloModuleProto;
+
+impl HloModuleProto {
+    pub fn from_text_file(path: impl AsRef<std::path::Path>) -> Result<HloModuleProto> {
+        Err(unavailable(&format!("parsing HLO text {}", path.as_ref().display())))
+    }
+}
+
+/// Computation handle stub.
+pub struct XlaComputation;
+
+impl XlaComputation {
+    pub fn from_proto(_proto: &HloModuleProto) -> XlaComputation {
+        XlaComputation
+    }
+}
+
+/// Compiled-executable stub.
+pub struct PjRtLoadedExecutable;
+
+impl PjRtLoadedExecutable {
+    pub fn execute<T: std::borrow::Borrow<Literal>>(
+        &self,
+        _inputs: &[T],
+    ) -> Result<Vec<Vec<PjRtBuffer>>> {
+        Err(unavailable("PJRT execution"))
+    }
+}
+
+/// Device-buffer stub.
+pub struct PjRtBuffer;
+
+impl PjRtBuffer {
+    pub fn to_literal_sync(&self) -> Result<Literal> {
+        Err(unavailable("device-to-host transfer"))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn literal_reshape_and_typed_readback() {
+        let lit = Literal::vec1(&[1i32, 2, 3, 4, 5, 6]).reshape(&[2, 3]).unwrap();
+        assert_eq!(lit.dims(), &[2, 3]);
+        assert_eq!(lit.to_vec::<i32>().unwrap(), vec![1, 2, 3, 4, 5, 6]);
+        assert!(lit.to_vec::<f32>().is_err(), "type-mismatched readback must fail");
+        assert!(lit.reshape(&[4, 2]).is_err(), "element-count mismatch must fail");
+    }
+
+    #[test]
+    fn scalar_and_tuple_literals() {
+        assert_eq!(Literal::scalar(0.5).get_first_element::<f32>().unwrap(), 0.5);
+        let t = Literal::tuple(vec![Literal::scalar(1.0), Literal::scalar(2.0)]);
+        let parts = t.to_tuple().unwrap();
+        assert_eq!(parts.len(), 2);
+        assert!(Literal::scalar(1.0).to_tuple().is_err());
+    }
+
+    #[test]
+    fn pjrt_client_reports_unavailable() {
+        let err = PjRtClient::cpu().expect_err("offline build has no PJRT");
+        assert!(format!("{err}").contains("failed"), "{err}");
+    }
+}

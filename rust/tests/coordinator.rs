@@ -65,12 +65,24 @@ mod tempdir {
 #[test]
 fn failure_injection_missing_artifact() {
     let (store, _guard) = broken_store();
-    let cfg = ModelConfig { vocab: 64, d_model: 16, n_layers: 1, n_heads: 2, d_ff: 32, seq_len: 12, eval_batch: 2 };
+    let cfg = ModelConfig {
+        vocab: 64,
+        d_model: 16,
+        n_layers: 1,
+        n_heads: 2,
+        d_ff: 32,
+        seq_len: 12,
+        eval_batch: 2,
+    };
     let coordinator = EvalCoordinator::start(
         store,
         cfg,
         vec![("w".into(), vec![0.0; 4])],
-        CoordinatorConfig { batch_size: 2, max_batch_delay: Duration::from_millis(2), max_queue: 8 },
+        CoordinatorConfig {
+            batch_size: 2,
+            max_batch_delay: Duration::from_millis(2),
+            max_queue: 8,
+        },
     );
     let handle = coordinator
         .submit(EvalRequest {
@@ -87,7 +99,15 @@ fn failure_injection_missing_artifact() {
 #[test]
 fn rejects_out_of_range_sequences() {
     let (store, _guard) = broken_store();
-    let cfg = ModelConfig { vocab: 64, d_model: 16, n_layers: 1, n_heads: 2, d_ff: 32, seq_len: 12, eval_batch: 2 };
+    let cfg = ModelConfig {
+        vocab: 64,
+        d_model: 16,
+        n_layers: 1,
+        n_heads: 2,
+        d_ff: 32,
+        seq_len: 12,
+        eval_batch: 2,
+    };
     let coordinator =
         EvalCoordinator::start(store, cfg, vec![], CoordinatorConfig::default());
     // too short

@@ -1,0 +1,245 @@
+//! Property tests pinning the parallel and fused engine paths bit-exact
+//! against their serial scalar references (hand-rolled randomized driver —
+//! the offline build has no proptest; see Cargo.toml).
+//!
+//! Every worker count must produce identical bytes: the row-parallel
+//! primitives split work on whole-row boundaries and each row runs the
+//! exact same scalar kernel, so float results cannot drift. Shapes cover
+//! the awkward cases — fewer rows than workers, 1×N, N×1, and empty.
+
+use crossquant::analysis::{
+    kernel_fraction_threads, quantize_with_report, quantize_with_report_threads, KernelReport,
+};
+use crossquant::quant::{
+    crossquant::CrossQuant, fake_quant_with_threads, per_token::PerToken, ActQuantizer, Bits,
+};
+use crossquant::tensor::{Matrix, SplitMix64};
+
+const CASES: usize = 60;
+const WORKER_GRID: [usize; 4] = [2, 3, 7, 16];
+
+/// Random matrix with occasional outlier columns and exact zeros.
+fn arb_matrix(rng: &mut SplitMix64) -> Matrix {
+    let rows = 1 + rng.below(80);
+    let cols = 1 + rng.below(80);
+    let mut x = Matrix::randn(rows, cols, 1.0, rng);
+    if rng.uniform() < 0.5 {
+        let j = rng.below(cols);
+        let scale = 10.0 + rng.uniform() as f32 * 90.0;
+        for i in 0..rows {
+            let v = x.get(i, j) * scale;
+            x.set(i, j, v);
+        }
+    }
+    if rng.uniform() < 0.3 {
+        for _ in 0..rows * cols / 10 {
+            let idx = rng.below(rows * cols);
+            x.data[idx] = 0.0;
+        }
+    }
+    x
+}
+
+/// The shapes where chunking logic can go wrong.
+fn edge_shapes(rng: &mut SplitMix64) -> Vec<Matrix> {
+    vec![
+        Matrix::randn(1, 97, 1.0, rng),  // 1×N: one row, many workers idle
+        Matrix::randn(97, 1, 1.0, rng),  // N×1: single-element rows
+        Matrix::randn(3, 50, 1.0, rng),  // rows < workers
+        Matrix::zeros(0, 13),            // empty: no rows
+        Matrix::zeros(13, 0),            // empty: no cols
+        Matrix::zeros(0, 0),             // empty: nothing at all
+    ]
+}
+
+fn arb_quant(rng: &mut SplitMix64) -> CrossQuant {
+    let alpha = (rng.uniform() as f32 * 100.0).round() / 100.0;
+    let bits = match rng.below(3) {
+        0 => Bits::Int4,
+        1 => Bits::Int8,
+        _ => Bits::Other(6),
+    };
+    CrossQuant::new(alpha, bits)
+}
+
+/// Parallel fake-quant is bit-exact with the serial reference for every
+/// worker count.
+#[test]
+fn prop_fake_quant_parallel_bit_exact() {
+    let mut rng = SplitMix64::new(0xA1);
+    for case in 0..CASES {
+        let x = arb_matrix(&mut rng);
+        let q = arb_quant(&mut rng);
+        let field = q.delta_field(&x);
+        let serial = fake_quant_with_threads(&x, &field, q.qmax(), 1);
+        for workers in WORKER_GRID {
+            let par = fake_quant_with_threads(&x, &field, q.qmax(), workers);
+            assert_eq!(par.data, serial.data, "case {case} workers {workers}");
+        }
+    }
+}
+
+/// Parallel kernel-fraction counts are identical to the serial scan.
+#[test]
+fn prop_kernel_fraction_parallel_bit_exact() {
+    let mut rng = SplitMix64::new(0xA2);
+    for case in 0..CASES {
+        let x = arb_matrix(&mut rng);
+        let q = arb_quant(&mut rng);
+        let field = q.delta_field(&x);
+        let serial = kernel_fraction_threads(&x, &field, 1);
+        for workers in WORKER_GRID {
+            let par = kernel_fraction_threads(&x, &field, workers);
+            assert_eq!(par, serial, "case {case} workers {workers}");
+        }
+    }
+}
+
+/// The blocked parallel matmul is bit-exact with its serial reference and
+/// with a naive scalar ikj triple loop (ascending-k accumulation).
+#[test]
+fn prop_matmul_blocked_parallel_bit_exact() {
+    let mut rng = SplitMix64::new(0xA3);
+    for case in 0..CASES / 3 {
+        let m = 1 + rng.below(24);
+        let k = 1 + rng.below(600); // exceed the 256-wide k-block
+        let n = 1 + rng.below(24);
+        let a = Matrix::randn(m, k, 1.0, &mut rng);
+        let b = Matrix::randn(k, n, 0.2, &mut rng);
+
+        let mut naive = Matrix::zeros(m, n);
+        for i in 0..m {
+            for p in 0..k {
+                let av = a.get(i, p);
+                for j in 0..n {
+                    let v = naive.get(i, j) + av * b.get(p, j);
+                    naive.set(i, j, v);
+                }
+            }
+        }
+
+        let serial = a.matmul_threads(&b, 1);
+        assert_eq!(serial.data, naive.data, "case {case}: blocked serial vs naive");
+        for workers in WORKER_GRID {
+            assert_eq!(
+                a.matmul_threads(&b, workers).data,
+                naive.data,
+                "case {case} workers {workers}"
+            );
+        }
+    }
+}
+
+/// Fused quantize_with_report == separate fake_quant + KernelReport:
+/// output matrix and integer counts exact, mean statistics within f64
+/// summation-regrouping tolerance.
+#[test]
+fn prop_fused_equals_separate() {
+    let mut rng = SplitMix64::new(0xA4);
+    for case in 0..CASES {
+        let x = arb_matrix(&mut rng);
+        let q = arb_quant(&mut rng);
+        let (fused_q, fused_r) = quantize_with_report(&x, &q);
+        assert_eq!(fused_q.data, q.fake_quant(&x).data, "case {case}: output");
+        let sep = KernelReport::compute(&x, &q);
+        assert_eq!(fused_r.count, sep.count, "case {case}: count");
+        assert_eq!(fused_r.total, sep.total, "case {case}: total");
+        assert_eq!(fused_r.fraction, sep.fraction, "case {case}: fraction");
+        let tol = 1e-6 * fused_r.mean_abs_kernel.abs().max(1.0);
+        assert!((fused_r.mean_abs_kernel - sep.mean_abs_kernel).abs() <= tol, "case {case}");
+        let tol = 1e-6 * fused_r.mean_abs_rest.abs().max(1.0);
+        assert!((fused_r.mean_abs_rest - sep.mean_abs_rest).abs() <= tol, "case {case}");
+    }
+}
+
+/// Per-token fused path agrees too (PerRow field variant).
+#[test]
+fn prop_fused_per_token_counts() {
+    let mut rng = SplitMix64::new(0xA5);
+    for _ in 0..CASES / 2 {
+        let x = arb_matrix(&mut rng);
+        let q = PerToken::new(Bits::Int8);
+        for workers in [1usize, 2, 16] {
+            let (out, r) = quantize_with_report_threads(&x, &q, workers);
+            assert_eq!(out.data, q.fake_quant(&x).data);
+            assert_eq!(r.count, KernelReport::compute(&x, &q).count);
+        }
+    }
+}
+
+/// Every engine entry point survives the degenerate shapes, with rows <
+/// workers and empty matrices included, and stays consistent with the
+/// serial path there.
+#[test]
+fn edge_shapes_consistent_across_worker_counts() {
+    let mut rng = SplitMix64::new(0xA6);
+    for x in edge_shapes(&mut rng) {
+        let q = CrossQuant::new(0.15, Bits::Int8);
+        let field = q.delta_field(&x);
+        let fq1 = fake_quant_with_threads(&x, &field, q.qmax(), 1);
+        let kf1 = kernel_fraction_threads(&x, &field, 1);
+        let cam1 = x.col_abs_max_threads(1);
+        for workers in WORKER_GRID {
+            assert_eq!(fake_quant_with_threads(&x, &field, q.qmax(), workers).data, fq1.data);
+            assert_eq!(kernel_fraction_threads(&x, &field, workers), kf1);
+            assert_eq!(x.col_abs_max_threads(workers), cam1);
+            let (out, r) = quantize_with_report_threads(&x, &q, workers);
+            assert_eq!(out.data, fq1.data);
+            assert_eq!(r.total, x.len());
+        }
+        // matmul against a compatible random rhs (cols can be zero)
+        let rhs = Matrix::randn(x.cols, 5, 1.0, &mut rng);
+        let mm1 = x.matmul_threads(&rhs, 1);
+        for workers in WORKER_GRID {
+            assert_eq!(x.matmul_threads(&rhs, workers).data, mm1.data);
+        }
+    }
+}
+
+/// The integer qlinear CrossQuant path (with its parallel per-batch
+/// weight-rescale pass) stays deterministic and α=1-consistent.
+#[test]
+fn qlinear_crossquant_deterministic_across_runs() {
+    use crossquant::quant::qlinear::QuantizedLinear;
+    let mut rng = SplitMix64::new(0xA7);
+    let x = Matrix::randn(64, 48, 1.0, &mut rng);
+    let w = Matrix::randn(48, 32, 0.1, &mut rng);
+    let lin = QuantizedLinear::from_weight(&w, Bits::Int8);
+    let a = lin.forward_crossquant(&x, 0.15, Bits::Int8);
+    let b = lin.forward_crossquant(&x, 0.15, Bits::Int8);
+    assert_eq!(a.data, b.data, "parallel rescale must be deterministic");
+}
+
+/// NaN handling end to end: abs-max propagates NaN instead of absorbing
+/// it, and the debug-build delta_field guard turns a corrupt activation
+/// matrix into a loud panic instead of quietly wrong kernel numbers.
+#[test]
+fn nan_propagates_through_abs_max() {
+    let mut x = Matrix::zeros(3, 4);
+    x.set(1, 2, f32::NAN);
+    x.set(0, 0, 5.0);
+    let t = x.row_abs_max();
+    assert_eq!(t[0], 5.0);
+    assert!(t[1].is_nan());
+    let c = x.col_abs_max();
+    assert_eq!(c[0], 5.0);
+    assert!(c[2].is_nan());
+}
+
+#[cfg(debug_assertions)]
+#[test]
+#[should_panic(expected = "non-finite activation")]
+fn delta_field_rejects_nan_in_debug_builds() {
+    let mut x = Matrix::zeros(4, 4);
+    x.set(2, 2, f32::NAN);
+    let _ = CrossQuant::new(0.15, Bits::Int8).delta_field(&x);
+}
+
+#[cfg(debug_assertions)]
+#[test]
+#[should_panic(expected = "non-finite activation")]
+fn delta_field_rejects_inf_in_debug_builds() {
+    let mut x = Matrix::zeros(4, 4);
+    x.set(0, 3, f32::INFINITY);
+    let _ = PerToken::new(Bits::Int8).delta_field(&x);
+}

@@ -227,8 +227,13 @@ fn integer_path_tracks_fake_quant_on_trained_model() {
     let nll_fake = fake.forward_nll(&seq, &mut site).unwrap();
 
     // integer deployment path
-    let qm = QuantizedModel::new(&weights, Bits::Int8, Bits::Int8, QuantPath::CrossQuant { alpha: 0.15 })
-        .unwrap();
+    let qm = QuantizedModel::new(
+        &weights,
+        Bits::Int8,
+        Bits::Int8,
+        QuantPath::CrossQuant { alpha: 0.15 },
+    )
+    .unwrap();
     let nll_int = qm.forward_nll(&seq).unwrap();
 
     let mean_fake: f32 = nll_fake.iter().sum::<f32>() / nll_fake.len() as f32;
