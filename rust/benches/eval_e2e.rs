@@ -64,6 +64,16 @@ fn main() {
         std::hint::black_box(qpt.forward_nll(&seq).unwrap());
     })
     .print_throughput(tokens_per_fwd, "tok");
+    // calibrated static-scale CrossQuant: zero per-batch weight rescale
+    let mut qst =
+        QuantizedModel::new(&weights, Bits::Int8, Bits::Int8, QuantPath::CrossQuant { alpha: 0.15 })
+            .expect("quantized model");
+    let calib: Vec<Vec<u32>> = (0..4).map(|_| gen.sequence(cfg.seq_len)).collect();
+    qst.calibrate_static(0.15, &calib).expect("calibrate");
+    bench("integer W8A8 forward (static-scale path)", budget, || {
+        std::hint::black_box(qst.forward_nll(&seq).unwrap());
+    })
+    .print_throughput(tokens_per_fwd, "tok");
 
     // ---------- PJRT path ----------
     let Some(store) = store else {

@@ -12,8 +12,15 @@
 //!   * fusion: `quantize_with_report` (1 field + 1 sweep) vs the seed's
 //!     3-sweep QuantSite path (field, kernel scan, field again, quant).
 //!
-//! Results are also written to `BENCH_quant_hot_path.json` at the repo
-//! root so the perf trajectory is tracked across PRs.
+//! Engine claims under test (PR 2):
+//!   * packed-panel int8 GEMM (`quant::gemm`) ≥2× the seed scalar kernel
+//!     at the serving shape 512×2048×2048;
+//!   * static-scale CrossQuant forward ≈ per-token cost (no per-batch
+//!     O(I·O) weight rescale), vs the dynamic path which pays it.
+//!
+//! Results are also written to `BENCH_quant_hot_path.json` and
+//! `BENCH_qlinear_gemm.json` at the repo root so the perf trajectory is
+//! tracked across PRs.
 //!
 //!     cargo bench --bench quant_hot_path
 
@@ -25,6 +32,9 @@ use crossquant::activations::{ActivationGen, FamilyProfile};
 use crossquant::analysis::{
     kernel_fraction_threads, quantize_with_report, KernelReport,
 };
+use crossquant::quant::crossquant::col_pow_scales;
+use crossquant::quant::gemm::{self, PackedInt8};
+use crossquant::quant::qlinear::{QuantizedLinear, ScaleMode};
 use crossquant::quant::{
     clipping::ClippedPerToken, crossquant::CrossQuant, fake_quant_with, fake_quant_with_threads,
     pack::PackedMatrix, per_channel::GroupWise, per_token::PerToken, smoothquant::SmoothQuant,
@@ -204,6 +214,93 @@ fn main() {
     record(r_mm_serial);
     record(r_mm_par);
 
+    // ---- packed-panel int8 GEMM vs the seed scalar kernel ----
+    // serving-sized W8A8 GEMM: 512 tokens × 2048 in × 2048 out
+    println!();
+    let (gm, gk, gn) = (512usize, 2048usize, 2048usize);
+    let gx = ActivationGen::new(FamilyProfile::by_name("opt-13b").unwrap(), 11).matrix(gm, gk);
+    let gw = Matrix::randn(gk, gn, 0.02, &mut rng);
+    let lin = QuantizedLinear::from_weight(&gw, Bits::Int8);
+    let act = QuantizedLinear::quantize_per_token(&gx, Bits::Int8);
+    let w_codes = lin.stored_codes();
+    let packed = PackedInt8::from_row_major(&w_codes, gk, gn);
+    let gemm_workers = par::workers_for(gm, gm * gk * gn);
+    let gemm_ops = 2.0 * gm as f64 * gk as f64 * gn as f64;
+
+    let r_seed_gemm = bench("seed gemm_i32 512×2048×2048 (scalar)", budget, || {
+        std::hint::black_box(seed_gemm_i32(
+            &act.codes,
+            gm,
+            gk,
+            &w_codes,
+            gn,
+            &act.row_scale,
+            lin.w_scales(),
+        ));
+    });
+    r_seed_gemm.print_throughput(gemm_ops, "op");
+    let r_packed_gemm = bench("packed-panel gemm 512×2048×2048 (µkernel)", budget, || {
+        std::hint::black_box(gemm::gemm_dequant(
+            &act.codes,
+            gm,
+            &packed,
+            &act.row_scale,
+            lin.w_scales(),
+            gemm_workers,
+        ));
+    });
+    r_packed_gemm.print_throughput(gemm_ops, "op");
+    let packed_speedup = r_seed_gemm.mean.as_secs_f64() / r_packed_gemm.mean.as_secs_f64();
+    println!("  -> packed vs seed kernel: {packed_speedup:.2}x (acceptance target ≥2x)\n");
+
+    // ---- deployment forwards: per-token vs dynamic vs static CrossQuant ----
+    let r_fwd_pt = bench("qlinear fwd per-token (no weight pass)", budget, || {
+        std::hint::black_box(lin.forward_per_token(&gx, Bits::Int8));
+    });
+    r_fwd_pt.print();
+    let r_fwd_dyn = bench("qlinear fwd crossquant dynamic (rescale/batch)", budget, || {
+        std::hint::black_box(lin.forward_crossquant(&gx, 0.15, Bits::Int8));
+    });
+    r_fwd_dyn.print();
+    let mut lin_static = lin.clone();
+    lin_static.set_scale_mode(ScaleMode::Static {
+        alpha: 0.15,
+        col_pow: col_pow_scales(&gx.col_abs_max(), 0.15),
+    });
+    let r_fwd_static = bench("qlinear fwd crossquant static (calibrated)", budget, || {
+        std::hint::black_box(lin_static.forward_crossquant_static(&gx, Bits::Int8));
+    });
+    r_fwd_static.print();
+    let static_speedup = r_fwd_dyn.mean.as_secs_f64() / r_fwd_static.mean.as_secs_f64();
+    let static_overhead = r_fwd_static.mean.as_secs_f64() / r_fwd_pt.mean.as_secs_f64();
+    println!("  -> static vs dynamic crossquant forward: {static_speedup:.2}x faster");
+    println!("  -> static overhead vs per-token: {static_overhead:.2}x (target ≈1x)");
+
+    // dedicated machine-readable dump for the deployment-path trajectory
+    let gemm_json = Json::obj(vec![
+        ("bench", Json::str("qlinear_gemm")),
+        ("shape", Json::str("512x2048x2048")),
+        ("threads", Json::num(par::max_threads() as f64)),
+        ("gops_seed", Json::num(gemm_ops / 1e9 / r_seed_gemm.mean.as_secs_f64())),
+        ("gops_packed", Json::num(gemm_ops / 1e9 / r_packed_gemm.mean.as_secs_f64())),
+        ("packed_vs_seed_speedup", Json::num(packed_speedup)),
+        ("forward_per_token_ms", Json::num(r_fwd_pt.mean.as_secs_f64() * 1e3)),
+        ("forward_dynamic_ms", Json::num(r_fwd_dyn.mean.as_secs_f64() * 1e3)),
+        ("forward_static_ms", Json::num(r_fwd_static.mean.as_secs_f64() * 1e3)),
+        ("static_vs_dynamic_speedup", Json::num(static_speedup)),
+        ("static_overhead_vs_per_token", Json::num(static_overhead)),
+    ]);
+    let gemm_path = concat!(env!("CARGO_MANIFEST_DIR"), "/../BENCH_qlinear_gemm.json");
+    match std::fs::write(gemm_path, gemm_json.render_pretty()) {
+        Ok(()) => println!("\nwrote {gemm_path}"),
+        Err(e) => eprintln!("\ncould not write {gemm_path}: {e}"),
+    }
+    record(r_seed_gemm);
+    record(r_packed_gemm);
+    record(r_fwd_pt);
+    record(r_fwd_dyn);
+    record(r_fwd_static);
+
     // ---- machine-readable dump for the perf trajectory ----
     let json = Json::obj(vec![
         ("bench", Json::str("quant_hot_path")),
@@ -225,4 +322,47 @@ fn main() {
         Ok(()) => println!("\nwrote {path}"),
         Err(e) => eprintln!("\ncould not write {path}: {e}"),
     }
+}
+
+/// The seed's scalar int8 GEMM, preserved verbatim as the baseline the
+/// packed-panel kernel is measured against: row-parallel, data-dependent
+/// `a == 0` skip, memory-resident accumulator row re-walked per k step.
+#[allow(clippy::too_many_arguments)]
+fn seed_gemm_i32(
+    a_codes: &[i8],
+    m: usize,
+    k_dim: usize,
+    w_codes: &[i8],
+    n: usize,
+    row_scale: &[f32],
+    w_scale: &[f32],
+) -> Matrix {
+    let mut out = Matrix::zeros(m, n);
+    if out.is_empty() {
+        return out;
+    }
+    let cost = m.saturating_mul(k_dim).saturating_mul(n);
+    par::par_rows_mut(&mut out.data, n, par::workers_for(m, cost), |row0, chunk| {
+        let mut acc = vec![0i32; n];
+        for (local_i, dst) in chunk.chunks_mut(n).enumerate() {
+            let i = row0 + local_i;
+            acc.iter_mut().for_each(|a| *a = 0);
+            let a_row = &a_codes[i * k_dim..(i + 1) * k_dim];
+            for (k, &a) in a_row.iter().enumerate() {
+                if a == 0 {
+                    continue;
+                }
+                let a = a as i32;
+                let w_row = &w_codes[k * n..(k + 1) * n];
+                for (o, &w) in acc.iter_mut().zip(w_row) {
+                    *o += a * w as i32;
+                }
+            }
+            let rs = row_scale[i];
+            for ((d, &a), &ws) in dst.iter_mut().zip(&acc).zip(w_scale) {
+                *d = a as f32 * rs * ws;
+            }
+        }
+    });
+    out
 }

@@ -12,5 +12,5 @@
 pub mod profile;
 pub mod synth;
 
-pub use profile::{Family, FamilyProfile};
+pub use profile::{ColStats, Family, FamilyProfile};
 pub use synth::ActivationGen;

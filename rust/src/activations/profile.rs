@@ -17,10 +17,64 @@
 //!     OPT, where the spike hugs zero; ~0 for LLaMA, whose bulk_floor
 //!     keeps magnitudes above B̃).
 
+use crate::tensor::Matrix;
+
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
 pub enum Family {
     Opt,
     Llama,
+}
+
+/// Streaming per-column activation statistics for static-scale CrossQuant
+/// calibration: accumulates column abs-maxima across calibration batches —
+/// the deployment-time stand-in for the live batch maxima the dynamic path
+/// measures (ZeroQuant-V2/LRQ-style static scales).
+///
+/// One `ColStats` per quantization site; `QuantizedModel::calibrate_static`
+/// drives a bank of them through the forward pass and folds the resulting
+/// [`ColStats::col_pow`] profile into each `QuantizedLinear`.
+#[derive(Clone, Debug, Default)]
+pub struct ColStats {
+    col_max: Vec<f32>,
+    /// Number of calibration batches observed.
+    pub batches: usize,
+}
+
+impl ColStats {
+    pub fn new() -> ColStats {
+        ColStats { col_max: Vec::new(), batches: 0 }
+    }
+
+    /// Fold one calibration activation batch into the statistics.
+    /// NaN-propagating like `Matrix::col_abs_max`: a corrupt calibration
+    /// batch surfaces in the profile instead of vanishing into a max.
+    pub fn observe(&mut self, x: &Matrix) {
+        let cm = x.col_abs_max();
+        if self.col_max.is_empty() {
+            self.col_max = cm;
+        } else {
+            assert_eq!(self.col_max.len(), cm.len(), "column count changed mid-calibration");
+            for (m, &v) in self.col_max.iter_mut().zip(&cm) {
+                if v > *m || v.is_nan() {
+                    *m = v;
+                }
+            }
+        }
+        self.batches += 1;
+    }
+
+    /// Calibrated column abs-maxima ĉ (empty before any `observe`).
+    pub fn col_max(&self) -> &[f32] {
+        &self.col_max
+    }
+
+    /// The calibrated CrossQuant column factors ĉ^(1−α) — the profile
+    /// payload of `quant::qlinear::ScaleMode::Static`, computed by the
+    /// shared eq. (5) helper so calibration can never drift from the
+    /// dynamic path's clamping.
+    pub fn col_pow(&self, alpha: f32) -> Vec<f32> {
+        crate::quant::crossquant::col_pow_scales(&self.col_max, alpha)
+    }
 }
 
 impl std::fmt::Display for Family {
@@ -136,6 +190,24 @@ mod tests {
         assert!(!FamilyProfile::by_name("opt-2.3b").unwrap().has_systematic_outliers());
         assert!(FamilyProfile::by_name("opt-6.7b").unwrap().has_systematic_outliers());
         assert!(FamilyProfile::by_name("opt-66b").unwrap().has_systematic_outliers());
+    }
+
+    #[test]
+    fn col_stats_accumulate_maxima_across_batches() {
+        let a = Matrix::from_vec(2, 3, vec![1.0, -5.0, 2.0, -3.0, 4.0, 0.0]);
+        let b = Matrix::from_vec(2, 3, vec![-7.0, 1.0, 0.5, 2.0, -1.0, 6.0]);
+        let mut stats = ColStats::new();
+        stats.observe(&a);
+        stats.observe(&b);
+        assert_eq!(stats.batches, 2);
+        assert_eq!(stats.col_max(), &[7.0, 5.0, 6.0]);
+        // α=1 ⇒ c^0 = 1 for every column (the per-token degeneration)
+        for p in stats.col_pow(1.0) {
+            assert!((p - 1.0).abs() < 1e-6);
+        }
+        // α=0 ⇒ the factors are the maxima themselves
+        let p0 = stats.col_pow(0.0);
+        assert!((p0[0] - 7.0).abs() < 1e-5 && (p0[2] - 6.0).abs() < 1e-5);
     }
 
     #[test]

@@ -24,6 +24,11 @@ pub enum ActScheme {
     CrossQuant { alpha: f32, qmax: f32 },
     /// Same graph, pure-jnp (XLA-fused) quantization path (`lm_aq_jnp`).
     CrossQuantFused { alpha: f32, qmax: f32 },
+    /// Calibrated static-scale CrossQuant on the true-integer path
+    /// (`lm_aq_static`): weights pre-folded with calibration-derived
+    /// ĉ^(1−α), zero per-batch rescale. Served by the native executor's
+    /// `QuantizedModel`; no PJRT artifact exists for it yet.
+    CrossQuantStatic { alpha: f32, qmax: f32 },
     /// Remove-kernel ablation with zero-bound multiplier θ (`lm_rk`).
     RemoveKernel { theta: f32 },
 }
@@ -34,6 +39,7 @@ impl ActScheme {
             ActScheme::Fp => "lm_fp",
             ActScheme::CrossQuant { .. } => "lm_aq",
             ActScheme::CrossQuantFused { .. } => "lm_aq_jnp",
+            ActScheme::CrossQuantStatic { .. } => "lm_aq_static",
             ActScheme::RemoveKernel { .. } => "lm_rk",
         }
     }
@@ -42,9 +48,9 @@ impl ActScheme {
     pub fn scalars(&self) -> Vec<f32> {
         match *self {
             ActScheme::Fp => vec![],
-            ActScheme::CrossQuant { alpha, qmax } | ActScheme::CrossQuantFused { alpha, qmax } => {
-                vec![alpha, qmax]
-            }
+            ActScheme::CrossQuant { alpha, qmax }
+            | ActScheme::CrossQuantFused { alpha, qmax }
+            | ActScheme::CrossQuantStatic { alpha, qmax } => vec![alpha, qmax],
             ActScheme::RemoveKernel { theta } => vec![theta],
         }
     }
@@ -54,9 +60,9 @@ impl ActScheme {
         let quant = |f: f32| (f * 1e6).round() as i64;
         let (a, b) = match *self {
             ActScheme::Fp => (0, 0),
-            ActScheme::CrossQuant { alpha, qmax } | ActScheme::CrossQuantFused { alpha, qmax } => {
-                (quant(alpha), quant(qmax))
-            }
+            ActScheme::CrossQuant { alpha, qmax }
+            | ActScheme::CrossQuantFused { alpha, qmax }
+            | ActScheme::CrossQuantStatic { alpha, qmax } => (quant(alpha), quant(qmax)),
             ActScheme::RemoveKernel { theta } => (quant(theta), 0),
         };
         SchemeKey {
@@ -85,7 +91,20 @@ mod tests {
     fn artifact_mapping() {
         assert_eq!(ActScheme::Fp.artifact(), "lm_fp");
         assert_eq!(ActScheme::CrossQuant { alpha: 0.15, qmax: 127.0 }.artifact(), "lm_aq");
+        assert_eq!(
+            ActScheme::CrossQuantStatic { alpha: 0.15, qmax: 127.0 }.artifact(),
+            "lm_aq_static"
+        );
         assert_eq!(ActScheme::RemoveKernel { theta: 0.01 }.artifact(), "lm_rk");
+    }
+
+    #[test]
+    fn static_and_dynamic_schemes_never_share_a_batch() {
+        let d = ActScheme::CrossQuant { alpha: 0.15, qmax: 127.0 };
+        let s = ActScheme::CrossQuantStatic { alpha: 0.15, qmax: 127.0 };
+        assert_ne!(d.key("w8"), s.key("w8"));
+        assert_eq!(s.key("w8"), s.key("w8"));
+        assert_eq!(s.scalars(), vec![0.15, 127.0]);
     }
 
     #[test]

@@ -24,10 +24,13 @@ use anyhow::{anyhow, ensure, Result};
 use super::batcher::{BatchAccumulator, ReadyBatch};
 use super::metrics::Metrics;
 use super::{ActScheme, SchemeKey};
+use crate::corpus::CorpusGen;
 use crate::model::config::ModelConfig;
-use crate::model::{IdentitySite, NativeModel, QuantSite, RemoveKernelSite, Weights};
+use crate::model::{
+    IdentitySite, NativeModel, QuantPath, QuantSite, QuantizedModel, RemoveKernelSite, Weights,
+};
 use crate::quant::{
-    crossquant::cross_delta_field, remove_kernel::RemoveKernel, ActQuantizer, DeltaField,
+    crossquant::cross_delta_field, remove_kernel::RemoveKernel, ActQuantizer, Bits, DeltaField,
 };
 use crate::runtime::literal::{literal_to_scalar, literal_to_vec, tokens_literal, vec_literal};
 use crate::runtime::{ArtifactStore, Runtime};
@@ -244,10 +247,24 @@ fn executor_loop(
 ) {
     match Runtime::new(store) {
         Ok(mut runtime) => {
+            // the static-scale scheme has no AOT artifact yet, so even a
+            // PJRT-linked executor serves it through the native integer
+            // model — every protocol scheme works on every build. The
+            // native executor is built lazily from the retained literals
+            // on the first static batch, so plain fp/crossquant serving
+            // never holds a second f32 copy of the weights.
             let weights: HashMap<String, xla::Literal> =
                 weight_sets.into_iter().map(|(k, v)| (k, vec_literal(&v))).collect();
+            let mut native: Option<NativeExecutor> = None;
             while let Ok(batch) = rx.recv() {
-                let result = execute_batch(&mut runtime, cfg, &weights, &batch);
+                let is_static =
+                    matches!(batch.requests[0].req.scheme, ActScheme::CrossQuantStatic { .. });
+                let result = if is_static {
+                    native_for_static(&mut native, cfg, &weights)
+                        .and_then(|n| n.execute_batch(&batch))
+                } else {
+                    execute_batch(&mut runtime, cfg, &weights, &batch)
+                };
                 metrics.executions.fetch_add(1, std::sync::atomic::Ordering::Relaxed);
                 respond(batch, result, &metrics);
             }
@@ -266,6 +283,24 @@ fn executor_loop(
             }
         }
     }
+}
+
+/// Lazily build the PJRT branch's sidecar [`NativeExecutor`] from the
+/// already-uploaded weight literals — paid only on the first
+/// `CrossQuantStatic` batch, never for plain PJRT traffic.
+fn native_for_static<'a>(
+    native: &'a mut Option<NativeExecutor>,
+    cfg: ModelConfig,
+    weights: &HashMap<String, xla::Literal>,
+) -> Result<&'a mut NativeExecutor> {
+    if native.is_none() {
+        let sets = weights
+            .iter()
+            .map(|(k, v)| Ok((k.clone(), literal_to_vec(v)?)))
+            .collect::<Result<Vec<_>>>()?;
+        *native = Some(NativeExecutor::new(cfg, sets));
+    }
+    Ok(native.as_mut().expect("initialised above"))
 }
 
 /// Fan a batch result out to its requests (success and failure paths
@@ -323,6 +358,9 @@ struct NativeExecutor {
     cfg: ModelConfig,
     weight_sets: HashMap<String, Vec<f32>>,
     models: HashMap<String, NativeModel>,
+    /// Calibrated static-scale integer models, keyed by
+    /// (weight set, α in micro-units). Calibration runs once per key.
+    static_models: HashMap<(String, i64), QuantizedModel>,
 }
 
 impl NativeExecutor {
@@ -331,6 +369,7 @@ impl NativeExecutor {
             cfg,
             weight_sets: weight_sets.into_iter().collect(),
             models: HashMap::new(),
+            static_models: HashMap::new(),
         }
     }
 
@@ -346,6 +385,44 @@ impl NativeExecutor {
         Ok(self.models.get(name).expect("inserted above"))
     }
 
+    /// Lazily build + calibrate the integer static-scale model for one
+    /// (weight set, α). Calibration runs the dynamic path over a fixed
+    /// deterministic synthetic stream — the offline stand-in for a
+    /// held-out calibration corpus — then folds the scales once; every
+    /// subsequent request on this key is pure per-token-cost serving.
+    fn static_model_for(&mut self, name: &str, alpha: f32) -> Result<&QuantizedModel> {
+        let key = (name.to_string(), (alpha as f64 * 1e6).round() as i64);
+        if !self.static_models.contains_key(&key) {
+            // α is client-supplied: bound the cache so an α sweep cannot
+            // grow it without limit. Each entry is a full integer model
+            // that also retains its dynamic-path state (FP weights +
+            // unfolded panels) — the accepted cost of switching back, kept
+            // bounded by the cap. Eviction is arbitrary — a re-requested α
+            // just pays one re-calibration.
+            const MAX_STATIC_MODELS: usize = 8;
+            if self.static_models.len() >= MAX_STATIC_MODELS {
+                let evict = self.static_models.keys().next().expect("cache non-empty").clone();
+                self.static_models.remove(&evict);
+            }
+            let flat = self
+                .weight_sets
+                .get(name)
+                .ok_or_else(|| anyhow!("unknown weight set {name}"))?;
+            let weights = Weights::from_config_flat(self.cfg, flat.clone())?;
+            let mut qm = QuantizedModel::new(
+                &weights,
+                Bits::Int8,
+                Bits::Int8,
+                QuantPath::CrossQuant { alpha },
+            )?;
+            let mut gen = CorpusGen::new(self.cfg.vocab, 0x5CA1E);
+            let calib: Vec<Vec<u32>> = (0..8).map(|_| gen.sequence(self.cfg.seq_len)).collect();
+            qm.calibrate_static(alpha, &calib)?;
+            self.static_models.insert(key.clone(), qm);
+        }
+        Ok(self.static_models.get(&key).expect("inserted above"))
+    }
+
     fn execute_batch(&mut self, batch: &ReadyBatch<Pending>) -> Result<Vec<EvalResponse>> {
         let vocab = self.cfg.vocab;
         for p in &batch.requests {
@@ -354,8 +431,24 @@ impl NativeExecutor {
                 "token id out of range (vocab {vocab})"
             );
         }
-        let model = self.model_for(&batch.key.weight_set)?;
         let scheme = batch.requests[0].req.scheme;
+        if let ActScheme::CrossQuantStatic { alpha, qmax } = scheme {
+            ensure!(alpha.is_finite() && (0.0..=1.0).contains(&alpha), "bad alpha {alpha}");
+            // the integer model quantizes on the Bits grid; the native
+            // static path serves INT8 activations (qmax 127) only
+            ensure!(
+                (qmax - 127.0).abs() < 0.5,
+                "native static path serves the INT8 grid (qmax 127), got {qmax}"
+            );
+            let model = self.static_model_for(&batch.key.weight_set, alpha)?;
+            let mut nlls = Vec::with_capacity(batch.requests.len());
+            for p in &batch.requests {
+                nlls.push(model.forward_nll(&p.req.tokens)?);
+            }
+            // the integer path reports no kernel statistic (aux = 0)
+            return Ok(nlls.into_iter().map(|nll| EvalResponse { nll, aux: 0.0 }).collect());
+        }
+        let model = self.model_for(&batch.key.weight_set)?;
         let mut nlls = Vec::with_capacity(batch.requests.len());
         let aux = match scheme {
             ActScheme::Fp => {
@@ -392,6 +485,7 @@ impl NativeExecutor {
                 }
                 site.removed_fraction()
             }
+            ActScheme::CrossQuantStatic { .. } => unreachable!("handled above"),
         };
         Ok(nlls.into_iter().map(|nll| EvalResponse { nll, aux }).collect())
     }

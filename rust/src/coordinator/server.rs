@@ -5,8 +5,8 @@
 //! Protocol: one JSON object per line.
 //!
 //! request:  {"tokens": [1,2,3,...], "scheme": "crossquant"|"per-token"|
-//!            "fp"|"remove-kernel", "alpha": 0.15, "qmax": 127.0,
-//!            "theta": 0.004, "weight_set": "w16"}
+//!            "crossquant-static"|"fp"|"remove-kernel", "alpha": 0.15,
+//!            "qmax": 127.0, "theta": 0.004, "weight_set": "w16"}
 //!           {"cmd": "metrics"}   |   {"cmd": "ping"}
 //! response: {"ok": true, "nll": [...], "ppl": ..., "aux": ...}
 //!           {"ok": false, "error": "..."}
@@ -100,6 +100,7 @@ pub fn handle_line(coordinator: &EvalCoordinator, line: &str) -> Result<Json> {
         "fp" => ActScheme::Fp,
         "crossquant" => ActScheme::CrossQuant { alpha, qmax },
         "crossquant-fused" => ActScheme::CrossQuantFused { alpha, qmax },
+        "crossquant-static" => ActScheme::CrossQuantStatic { alpha, qmax },
         "per-token" => ActScheme::CrossQuant { alpha: 1.0, qmax },
         "remove-kernel" => ActScheme::RemoveKernel { theta },
         other => return Err(anyhow!("unknown scheme '{other}'")),

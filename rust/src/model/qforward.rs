@@ -1,7 +1,13 @@
 //! True-integer model forward: every linear layer runs through
-//! [`QuantizedLinear`] (int8×int8→i32 GEMMs), embeddings/LayerNorms stay
-//! FP — the actual W8A8 deployment of the paper, as opposed to the
-//! fake-quant evaluation protocol used by the tables.
+//! [`QuantizedLinear`] (packed-panel int8 GEMMs — see `quant::gemm`),
+//! embeddings/LayerNorms stay FP — the actual W8A8 deployment of the
+//! paper, as opposed to the fake-quant evaluation protocol used by the
+//! tables.
+//!
+//! Deployment modes ([`QuantPath`]): per-token W8A8, dynamic CrossQuant
+//! (per-batch weight rescale), and calibrated static-scale CrossQuant
+//! ([`QuantizedModel::calibrate_static`]) whose per-batch cost is
+//! identical to per-token.
 //!
 //! Integration tests pin this path against the fake-quant NativeModel:
 //! identical scheme ⇒ near-identical NLLs, so the fake-quant tables are
@@ -11,15 +17,21 @@ use anyhow::Result;
 
 use super::config::ModelConfig;
 use super::weights::Weights;
-use crate::quant::qlinear::QuantizedLinear;
+use crate::activations::ColStats;
+use crate::quant::qlinear::{QuantizedLinear, ScaleMode};
 use crate::quant::Bits;
-use crate::tensor::Matrix;
+use crate::tensor::{par, Matrix};
 
 /// Which activation quantization runs in front of every integer GEMM.
 #[derive(Clone, Copy, Debug)]
 pub enum QuantPath {
     PerToken,
+    /// Dynamic CrossQuant: live batch column maxima, per-batch O(I·O)
+    /// weight rescale at every site.
     CrossQuant { alpha: f32 },
+    /// Static CrossQuant: calibration-derived column factors folded into
+    /// the weights once — requires [`QuantizedModel::calibrate_static`].
+    CrossQuantStatic { alpha: f32 },
 }
 
 struct QLayer {
@@ -56,6 +68,21 @@ impl QuantizedModel {
         act_bits: Bits,
         path: QuantPath,
     ) -> Result<QuantizedModel> {
+        // the static path needs calibration-derived folds that only
+        // calibrate_static installs — constructing with it directly would
+        // panic on the first forward
+        anyhow::ensure!(
+            !matches!(path, QuantPath::CrossQuantStatic { .. }),
+            "construct with a dynamic QuantPath and call calibrate_static \
+             to enable QuantPath::CrossQuantStatic"
+        );
+        // both grids materialise i8 codes — reject >8-bit widths here as
+        // an Err instead of a panic on the first forward
+        anyhow::ensure!(
+            weight_bits.qmax() <= 127.0 && act_bits.qmax() <= 127.0,
+            "the integer model stores i8 codes: weight/activation widths above 8 bits \
+             are not representable"
+        );
         let q = |name: &str| -> Result<QuantizedLinear> {
             Ok(QuantizedLinear::from_weight(&weights.get(name)?, weight_bits))
         };
@@ -94,11 +121,19 @@ impl QuantizedModel {
         match self.path {
             QuantPath::PerToken => lin.forward_per_token(x, self.act_bits),
             QuantPath::CrossQuant { alpha } => lin.forward_crossquant(x, alpha, self.act_bits),
+            QuantPath::CrossQuantStatic { .. } => lin.forward_crossquant_static(x, self.act_bits),
         }
     }
 
-    /// Per-position NLL through the all-integer linear stack.
-    pub fn forward_nll(&self, tokens: &[u32]) -> Result<Vec<f32>> {
+    /// Run the linear stack to logits, calling `observe(site, input)` with
+    /// every quantization-site input before its integer matmuls (4 sites
+    /// per layer — attn-in, attn-out, mlp-in, mlp-mid — plus the head
+    /// site). The calibration capture hook; forwards pass a no-op.
+    fn forward_logits(
+        &self,
+        tokens: &[u32],
+        observe: &mut dyn FnMut(usize, &Matrix),
+    ) -> Result<Matrix> {
         let cfg = self.config;
         let s = tokens.len();
         let d = cfg.d_model;
@@ -111,29 +146,41 @@ impl QuantizedModel {
             }
         }
 
+        let mut site = 0usize;
         for layer in &self.layers {
             let h = layer_norm(&x, &layer.ln1_g, &layer.ln1_b);
+            observe(site, &h);
             let q = self.qmatmul(&layer.wq, &h);
             let k = self.qmatmul(&layer.wk, &h);
             let v = self.qmatmul(&layer.wv, &h);
             let ctx = causal_attention(&q, &k, &v, cfg.n_heads);
+            observe(site + 1, &ctx);
             let attn_out = self.qmatmul(&layer.wo, &ctx);
             for (a, b) in x.data.iter_mut().zip(&attn_out.data) {
                 *a += b;
             }
 
             let h = layer_norm(&x, &layer.ln2_g, &layer.ln2_b);
+            observe(site + 2, &h);
             let mut hh = self.qmatmul(&layer.w1, &h);
             gelu_inplace(&mut hh);
+            observe(site + 3, &hh);
             let mlp_out = self.qmatmul(&layer.w2, &hh);
             for (a, b) in x.data.iter_mut().zip(&mlp_out.data) {
                 *a += b;
             }
+            site += 4;
         }
 
         let h = layer_norm(&x, &self.lnf_g, &self.lnf_b);
-        let logits = self.qmatmul(&self.w_out, &h);
+        observe(site, &h);
+        Ok(self.qmatmul(&self.w_out, &h))
+    }
 
+    /// Per-position NLL through the all-integer linear stack.
+    pub fn forward_nll(&self, tokens: &[u32]) -> Result<Vec<f32>> {
+        let logits = self.forward_logits(tokens, &mut |_, _| {})?;
+        let s = tokens.len();
         let mut nll = Vec::with_capacity(s - 1);
         for i in 0..s - 1 {
             let row = logits.row(i);
@@ -142,6 +189,56 @@ impl QuantizedModel {
             nll.push(logsum - row[tokens[i + 1] as usize]);
         }
         Ok(nll)
+    }
+
+    /// Calibrate static CrossQuant scales: run the calibration sequences
+    /// through the *dynamic* path, accumulate per-site column maxima
+    /// ([`ColStats`]), fold ĉ^(1−α) into every linear **once**, and switch
+    /// the model to [`QuantPath::CrossQuantStatic`]. Deployed forwards
+    /// then pay zero per-batch weight rescale — per-token W8A8 cost plus
+    /// one multiply per activation element.
+    pub fn calibrate_static(&mut self, alpha: f32, calib: &[Vec<u32>]) -> Result<()> {
+        anyhow::ensure!(!calib.is_empty(), "calibration needs at least one sequence");
+        anyhow::ensure!(
+            alpha.is_finite() && (0.0..=1.0).contains(&alpha),
+            "calibration alpha must be in [0,1], got {alpha}"
+        );
+        let n_sites = 4 * self.layers.len() + 1;
+        let mut stats: Vec<ColStats> = (0..n_sites).map(|_| ColStats::new()).collect();
+        let saved = self.path;
+        self.path = QuantPath::CrossQuant { alpha };
+        let mut run = Ok(());
+        for tokens in calib {
+            let r = self.forward_logits(tokens, &mut |site, x| stats[site].observe(x));
+            if let Err(e) = r {
+                run = Err(e);
+                break;
+            }
+        }
+        self.path = saved;
+        run?;
+        // ColStats propagates NaN by design; surface a corrupt
+        // calibration run as an Err before any weights are folded
+        for (site, s) in stats.iter().enumerate() {
+            anyhow::ensure!(
+                s.col_max().iter().all(|v| v.is_finite()),
+                "calibration produced non-finite statistics at site {site}"
+            );
+        }
+        let st = |cp: Vec<f32>| ScaleMode::Static { alpha, col_pow: cp };
+        for (l, layer) in self.layers.iter_mut().enumerate() {
+            let base = 4 * l;
+            let cp = stats[base].col_pow(alpha);
+            layer.wq.set_scale_mode(st(cp.clone()));
+            layer.wk.set_scale_mode(st(cp.clone()));
+            layer.wv.set_scale_mode(st(cp));
+            layer.wo.set_scale_mode(st(stats[base + 1].col_pow(alpha)));
+            layer.w1.set_scale_mode(st(stats[base + 2].col_pow(alpha)));
+            layer.w2.set_scale_mode(st(stats[base + 3].col_pow(alpha)));
+        }
+        self.w_out.set_scale_mode(st(stats[n_sites - 1].col_pow(alpha)));
+        self.path = QuantPath::CrossQuantStatic { alpha };
+        Ok(())
     }
 
     /// Total integer-weight payload bytes across the model.
@@ -162,54 +259,73 @@ impl QuantizedModel {
 // -- shared math, duplicated deliberately from forward.rs so the two paths
 //    stay independently auditable (they are cross-checked by tests) --
 
+/// Row-parallel LayerNorm (each row's statistics are independent, so the
+/// per-row math — and hence the result — is identical for any worker
+/// count).
 fn layer_norm(x: &Matrix, g: &Matrix, b: &Matrix) -> Matrix {
     let mut out = Matrix::zeros(x.rows, x.cols);
-    let n = x.cols as f32;
-    for i in 0..x.rows {
-        let row = x.row(i);
-        let mu = row.iter().sum::<f32>() / n;
-        let var = row.iter().map(|&v| (v - mu) * (v - mu)).sum::<f32>() / n;
-        let inv = 1.0 / (var + 1e-5).sqrt();
-        let dst = out.row_mut(i);
-        for (j, (&v, o)) in row.iter().zip(dst.iter_mut()).enumerate() {
-            *o = (v - mu) * inv * g.get(0, j) + b.get(0, j);
-        }
+    if out.is_empty() {
+        return out;
     }
+    let n = x.cols as f32;
+    let cols = x.cols;
+    par::par_rows_mut(&mut out.data, cols, par::workers_for(x.rows, x.len()), |row0, chunk| {
+        for (local, dst) in chunk.chunks_mut(cols).enumerate() {
+            let row = x.row(row0 + local);
+            let mu = row.iter().sum::<f32>() / n;
+            let var = row.iter().map(|&v| (v - mu) * (v - mu)).sum::<f32>() / n;
+            let inv = 1.0 / (var + 1e-5).sqrt();
+            for (j, (&v, o)) in row.iter().zip(dst.iter_mut()).enumerate() {
+                *o = (v - mu) * inv * g.get(0, j) + b.get(0, j);
+            }
+        }
+    });
     out
 }
 
+/// Causal attention, row-parallel over query positions: output row `i`
+/// reads only q row `i` and k/v rows ≤ `i`, which every worker can share
+/// immutably. Per-(row, head) math matches the serial loop exactly.
 fn causal_attention(q: &Matrix, k: &Matrix, v: &Matrix, n_heads: usize) -> Matrix {
     let s = q.rows;
     let d = q.cols;
+    let mut out = Matrix::zeros(s, d);
+    if out.is_empty() {
+        return out;
+    }
     let hd = d / n_heads;
     let scale = 1.0 / (hd as f32).sqrt();
-    let mut out = Matrix::zeros(s, d);
-    let mut scores = vec![0.0f32; s];
-    for h in 0..n_heads {
-        let off = h * hd;
-        for i in 0..s {
-            for (j, sc) in scores.iter_mut().enumerate().take(i + 1) {
-                let mut dot = 0.0f32;
+    // triangular cost ~ s²·d/2 (scores) + s²·d/2 (weighted sum)
+    let cost = s.saturating_mul(s).saturating_mul(d);
+    par::par_rows_mut(&mut out.data, d, par::workers_for(s, cost), |row0, chunk| {
+        let mut scores = vec![0.0f32; s];
+        for (local, dst) in chunk.chunks_mut(d).enumerate() {
+            let i = row0 + local;
+            for h in 0..n_heads {
+                let off = h * hd;
+                for (j, sc) in scores.iter_mut().enumerate().take(i + 1) {
+                    let mut dot = 0.0f32;
+                    for a in 0..hd {
+                        dot += q.get(i, off + a) * k.get(j, off + a);
+                    }
+                    *sc = dot * scale;
+                }
+                let max = scores[..=i].iter().fold(f32::NEG_INFINITY, |m, &v| m.max(v));
+                let mut denom = 0.0f32;
+                for sc in scores.iter_mut().take(i + 1) {
+                    *sc = (*sc - max).exp();
+                    denom += *sc;
+                }
                 for a in 0..hd {
-                    dot += q.get(i, off + a) * k.get(j, off + a);
+                    let mut acc = 0.0f32;
+                    for (j, &sc) in scores.iter().enumerate().take(i + 1) {
+                        acc += sc * v.get(j, off + a);
+                    }
+                    dst[off + a] = acc / denom;
                 }
-                *sc = dot * scale;
-            }
-            let max = scores[..=i].iter().fold(f32::NEG_INFINITY, |m, &v| m.max(v));
-            let mut denom = 0.0f32;
-            for sc in scores.iter_mut().take(i + 1) {
-                *sc = (*sc - max).exp();
-                denom += *sc;
-            }
-            for a in 0..hd {
-                let mut acc = 0.0f32;
-                for (j, &sc) in scores.iter().enumerate().take(i + 1) {
-                    acc += sc * v.get(j, off + a);
-                }
-                out.set(i, off + a, acc / denom);
             }
         }
-    }
+    });
     out
 }
 
@@ -279,6 +395,64 @@ mod tests {
         for (a, b) in nll_fake.iter().zip(&nll_int) {
             assert!((a - b).abs() < 0.05, "fake {a} int {b}");
         }
+    }
+
+    #[test]
+    fn static_scales_track_dynamic_nll() {
+        let w = synthetic_weights(cfg(), 23);
+        let mut qm = QuantizedModel::new(
+            &w,
+            Bits::Int8,
+            Bits::Int8,
+            QuantPath::CrossQuant { alpha: 0.15 },
+        )
+        .unwrap();
+        let nll_dyn = qm.forward_nll(&toks()).unwrap();
+        // calibration stream drawn from the same token process as eval
+        let calib: Vec<Vec<u32>> = (0..8)
+            .map(|s| (0..20).map(|i| ((i * 7 + s * 11) % 64) as u32).collect())
+            .collect();
+        qm.calibrate_static(0.15, &calib).unwrap();
+        assert!(matches!(qm.path, QuantPath::CrossQuantStatic { .. }));
+        let nll_st = qm.forward_nll(&toks()).unwrap();
+        let mean_dyn: f32 = nll_dyn.iter().sum::<f32>() / nll_dyn.len() as f32;
+        let mean_st: f32 = nll_st.iter().sum::<f32>() / nll_st.len() as f32;
+        let rel = (mean_dyn - mean_st).abs() / mean_dyn.max(1e-6);
+        assert!(rel < 0.02, "static NLL {mean_st} vs dynamic {mean_dyn} (rel {rel})");
+    }
+
+    #[test]
+    fn wide_grids_are_rejected_at_construction() {
+        // Bits::Other(12+) is fake-quant-legal but not i8-representable:
+        // must be an Err here, not a panic on the first forward
+        let w = synthetic_weights(cfg(), 26);
+        let bad_act = QuantizedModel::new(&w, Bits::Int8, Bits::Other(12), QuantPath::PerToken);
+        assert!(bad_act.is_err());
+        let bad_w = QuantizedModel::new(&w, Bits::Other(16), Bits::Int8, QuantPath::PerToken);
+        assert!(bad_w.is_err());
+    }
+
+    #[test]
+    fn uncalibrated_static_path_is_rejected_at_construction() {
+        let w = synthetic_weights(cfg(), 25);
+        let r = QuantizedModel::new(
+            &w,
+            Bits::Int8,
+            Bits::Int8,
+            QuantPath::CrossQuantStatic { alpha: 0.15 },
+        );
+        assert!(r.is_err(), "static path without calibration must not construct");
+    }
+
+    #[test]
+    fn calibration_restores_path_on_error() {
+        let w = synthetic_weights(cfg(), 24);
+        let mut qm =
+            QuantizedModel::new(&w, Bits::Int8, Bits::Int8, QuantPath::PerToken).unwrap();
+        // sequence longer than seq_len ⇒ calibration must fail cleanly
+        let bad = vec![(0..64).map(|i| (i % 64) as u32).collect::<Vec<u32>>()];
+        assert!(qm.calibrate_static(0.15, &bad).is_err());
+        assert!(matches!(qm.path, QuantPath::PerToken));
     }
 
     #[test]

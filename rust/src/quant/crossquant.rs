@@ -40,16 +40,31 @@ impl CrossQuant {
     }
 }
 
+/// The per-row side of eq. (5): t_i^α / qmax from row abs-maxima, with the
+/// shared EPS clamp. Every consumer of the row scale — fake-quant fields,
+/// the integer qlinear paths, the native executor — goes through here.
+pub fn row_pow_scales(t: &[f32], alpha: f32, qmax: f32) -> Vec<f32> {
+    t.iter().map(|&ti| ti.max(EPS).powf(alpha) / qmax).collect()
+}
+
+/// The per-column side of eq. (5): c_j^(1−α) from column abs-maxima, with
+/// the shared EPS clamp. The single home of the column factor — shared by
+/// [`cross_delta_field`], the qlinear dynamic rescale, and static-scale
+/// calibration (`activations::ColStats::col_pow`), so the clamping can
+/// never drift between the fake-quant and integer paths again.
+pub fn col_pow_scales(c: &[f32], alpha: f32) -> Vec<f32> {
+    c.iter().map(|&cj| cj.max(EPS).powf(1.0 - alpha)).collect()
+}
+
 /// The factored CrossQuant scale field Δ̃_ij = t_i^α·c_j^(1−α)/qmax for
 /// arbitrary runtime (α, qmax) — shared by [`CrossQuant::delta_field`]
 /// and the coordinator's native executor (whose artifacts take α/qmax as
 /// runtime scalars), so eq. (5) exists in exactly one place.
 pub fn cross_delta_field(x: &Matrix, alpha: f32, qmax: f32) -> DeltaField {
-    let row_pow: Vec<f32> =
-        x.row_abs_max().iter().map(|&t| t.max(EPS).powf(alpha) / qmax).collect();
-    let col_pow: Vec<f32> =
-        x.col_abs_max().iter().map(|&c| c.max(EPS).powf(1.0 - alpha)).collect();
-    DeltaField::Cross { row_pow, col_pow }
+    DeltaField::Cross {
+        row_pow: row_pow_scales(&x.row_abs_max(), alpha, qmax),
+        col_pow: col_pow_scales(&x.col_abs_max(), alpha),
+    }
 }
 
 impl ActQuantizer for CrossQuant {

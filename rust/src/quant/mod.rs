@@ -13,10 +13,13 @@
 //! - [`clipping`]     — OmniQuant stand-in (grid-searched clipping)
 //! - [`remove_kernel`]— the "Remove Kernel" ablation operator (Figs. 1/6/7/9)
 //! - [`pack`]         — real INT8/INT4 bit-packing for storage accounting
+//! - [`gemm`]         — packed-panel int8 GEMM microkernel (deployment path)
+//! - [`qlinear`]      — true-integer linear layers over [`gemm`]
 
 pub mod awq;
 pub mod clipping;
 pub mod crossquant;
+pub mod gemm;
 pub mod pack;
 pub mod qlinear;
 pub mod per_channel;

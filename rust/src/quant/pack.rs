@@ -9,6 +9,32 @@
 use super::{ActQuantizer, DeltaField};
 use crate::tensor::Matrix;
 
+/// Nibble-pack INT4 codes two per byte, low nibble first; a trailing odd
+/// code leaves the high nibble zero. Codes must already be on the INT4
+/// grid (−7..=7) — upper bits are truncated.
+pub fn pack_nibbles(ints: &[i8]) -> Vec<u8> {
+    let mut out = Vec::with_capacity(ints.len().div_ceil(2));
+    for pair in ints.chunks(2) {
+        let lo = (pair[0] as u8) & 0x0F;
+        let hi = if pair.len() > 1 { (pair[1] as u8) & 0x0F } else { 0 };
+        out.push(lo | (hi << 4));
+    }
+    out
+}
+
+/// Unpack `n` sign-extended INT4 codes from nibble-packed bytes (the
+/// inverse of [`pack_nibbles`]).
+pub fn unpack_nibbles(bytes: &[u8], n: usize) -> Vec<i8> {
+    assert!(n <= bytes.len() * 2, "asked for {n} codes from {} bytes", bytes.len());
+    let mut out = Vec::with_capacity(bytes.len() * 2);
+    for &b in bytes {
+        out.push(sign_extend4(b & 0x0F));
+        out.push(sign_extend4(b >> 4));
+    }
+    out.truncate(n);
+    out
+}
+
 /// A quantized tensor in storage form.
 #[derive(Clone, Debug)]
 pub struct PackedMatrix {
@@ -37,13 +63,7 @@ impl PackedMatrix {
             }
         }
         let codes = if int4 {
-            let mut c = Vec::with_capacity(n.div_ceil(2));
-            for pair in ints.chunks(2) {
-                let lo = (pair[0] as u8) & 0x0F;
-                let hi = if pair.len() > 1 { (pair[1] as u8) & 0x0F } else { 0 };
-                c.push(lo | (hi << 4));
-            }
-            c
+            pack_nibbles(&ints)
         } else {
             ints.iter().map(|&v| v as u8).collect()
         };
@@ -53,16 +73,11 @@ impl PackedMatrix {
     /// Dequantize back to f32 (bit-exact with the scheme's fake_quant).
     pub fn unpack(&self) -> Matrix {
         let n = self.rows * self.cols;
-        let mut ints = Vec::with_capacity(n);
-        if self.int4 {
-            for &b in &self.codes {
-                ints.push(sign_extend4(b & 0x0F));
-                ints.push(sign_extend4(b >> 4));
-            }
-            ints.truncate(n);
+        let ints = if self.int4 {
+            unpack_nibbles(&self.codes, n)
         } else {
-            ints.extend(self.codes.iter().map(|&b| b as i8));
-        }
+            self.codes.iter().map(|&b| b as i8).collect()
+        };
         let mut out = Matrix::zeros(self.rows, self.cols);
         for i in 0..self.rows {
             for j in 0..self.cols {
@@ -130,6 +145,18 @@ mod tests {
         for (a, b) in unpacked.data.iter().zip(&fq.data) {
             assert!((a - b).abs() < 1e-6 * a.abs().max(1e-3), "{a} vs {b}");
         }
+    }
+
+    #[test]
+    fn nibble_helpers_roundtrip() {
+        // every INT4 code, odd length (forces a half-filled tail byte)
+        let codes: Vec<i8> = (-7..=7).collect();
+        let packed = pack_nibbles(&codes);
+        assert_eq!(packed.len(), codes.len().div_ceil(2));
+        assert_eq!(unpack_nibbles(&packed, codes.len()), codes);
+        // empty is safe
+        assert!(pack_nibbles(&[]).is_empty());
+        assert!(unpack_nibbles(&[], 0).is_empty());
     }
 
     #[test]

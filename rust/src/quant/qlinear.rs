@@ -3,25 +3,59 @@
 //!
 //! Everything else in this crate follows the paper's *fake-quant*
 //! evaluation protocol; this module is the real thing: weights stored as
-//! INT8/INT4 codes, activations quantized to integer codes at run time,
-//! and the matmul accumulating in i32.
+//! INT8/INT4 codes (nibble-packed for INT4 — see [`super::pack`]),
+//! activations quantized to integer codes at run time, and the matmul
+//! running through the packed-panel microkernel in [`super::gemm`].
 //!
-//! Two activation schemes:
+//! Three activation schemes:
 //!
 //! * **per-token** — the classic W8A8 GEMM: the scale t_i/qmax is constant
 //!   along the contraction axis, so y_ij = (t_i/q)·s_j · Σ_k xq_ik·wq_kj
 //!   is one int8×int8→i32 GEMM plus a rank-1 dequant.
-//! * **CrossQuant** — the scale t_i^α·c_k^(1−α) varies along the
-//!   contraction axis, so it cannot be pulled out of an integer
-//!   accumulation. Deployment folds c_k^(1−α) into the weight *rows and
-//!   requantizes them to the integer grid per activation batch* (c changes
-//!   with the batch). The matmul stays int8×int8→i32; the price is a
-//!   per-batch O(I·O) weight-rescale pass — the honest engineering cost of
-//!   the method that the paper's complexity discussion (§4.2) abstracts
-//!   away, quantified in `rust/benches/quant_hot_path.rs`.
+//! * **CrossQuant, [`ScaleMode::Dynamic`]** — the scale t_i^α·c_k^(1−α)
+//!   varies along the contraction axis, so it cannot be pulled out of an
+//!   integer accumulation. The honest dynamic path folds c_k^(1−α) into
+//!   the weight *per activation batch* (c changes with the batch): the
+//!   matmul stays int8×int8→i32, but every batch pays an O(I·O)
+//!   weight-rescale pass — the engineering cost the paper's complexity
+//!   discussion (§4.2) abstracts away.
+//! * **CrossQuant, [`ScaleMode::Static`]** — the deployment fix: estimate
+//!   ĉ_k^(1−α) from *calibration* activations (ZeroQuant-V2/LRQ-style
+//!   static scales), fold it into the weight codes **once at model
+//!   build**, and serve with zero per-batch rescale. Deployed cost is
+//!   identical to per-token W8A8 plus one multiply per activation element
+//!   — exactly the paper's "one extra multiply" claim, made true.
+//!
+//! Both costs are quantified in `rust/benches/quant_hot_path.rs`
+//! (`BENCH_qlinear_gemm.json`).
 
-use super::{Bits, EPS};
+use super::gemm::{self, PackedInt8};
+use super::{crossquant, pack, Bits, EPS};
 use crate::tensor::{par, Matrix};
+
+/// How the CrossQuant column factor c^(1−α) is sourced at inference.
+#[derive(Clone, Debug)]
+pub enum ScaleMode {
+    /// Per-batch column maxima from the live activation: most faithful,
+    /// but every batch pays the O(I·O) weight-rescale pass.
+    Dynamic,
+    /// Calibration-derived column factors ĉ^(1−α), one per input column
+    /// (see `activations::ColStats::col_pow`), folded into the weight
+    /// codes once at build: zero per-batch rescale. `alpha` is the α the
+    /// factors were computed for — carried together so the activation
+    /// side can never run a different α than the fold.
+    Static { alpha: f32, col_pow: Vec<f32> },
+}
+
+/// The build-time product of [`ScaleMode::Static`]: weight panels with
+/// ĉ^(1−α) pre-folded, plus the calibrated activation-side factors.
+#[derive(Clone, Debug)]
+struct StaticFold {
+    alpha: f32,
+    col_pow: Vec<f32>,
+    panels: PackedInt8,
+    scale: Vec<f32>,
+}
 
 /// A linear layer with per-output-channel integer weights.
 #[derive(Clone, Debug)]
@@ -29,12 +63,18 @@ pub struct QuantizedLinear {
     pub in_dim: usize,
     pub out_dim: usize,
     pub bits: Bits,
-    /// Row-major (in_dim × out_dim) integer codes.
-    codes: Vec<i8>,
+    /// Packed-panel compute representation of the codes (see `gemm`) —
+    /// the single copy of the integer codes for byte-wide grids.
+    panels: PackedInt8,
+    /// Nibble-packed storage payload, present only for INT4 (the one
+    /// width where the shipped bytes differ from one-byte-per-code).
+    nibble_payload: Option<Vec<u8>>,
     /// Per-output-channel scale: w ≈ code · w_scale[j].
     w_scale: Vec<f32>,
-    /// FP copy of the weight for the CrossQuant requantization path.
+    /// FP copy of the weight for the dynamic CrossQuant rescale path.
     w_fp: Matrix,
+    /// Present iff `ScaleMode::Static` is installed.
+    static_fold: Option<StaticFold>,
 }
 
 /// Integer activation codes + their factored scales.
@@ -46,10 +86,19 @@ pub struct QuantizedActivation {
     pub row_scale: Vec<f32>,
 }
 
+/// The integer paths materialise codes as i8; widths above 8 bits would
+/// silently saturate at ±127, so they are rejected loudly (the fake-quant
+/// protocol still supports them — it never stores integers).
+fn i8_qmax(bits: Bits) -> f32 {
+    let q = bits.qmax();
+    assert!(q <= 127.0, "{bits}: the integer linear path stores i8 codes (max 8 bits)");
+    q
+}
+
 impl QuantizedLinear {
     /// Quantize a weight matrix (I × O) per output channel.
     pub fn from_weight(w: &Matrix, bits: Bits) -> QuantizedLinear {
-        let qmax = bits.qmax();
+        let qmax = i8_qmax(bits);
         let w_scale: Vec<f32> = w.col_abs_max().iter().map(|&c| c.max(EPS) / qmax).collect();
         let mut codes = Vec::with_capacity(w.len());
         for i in 0..w.rows {
@@ -57,27 +106,80 @@ impl QuantizedLinear {
                 codes.push((v / w_scale[j]).round().clamp(-qmax, qmax) as i8);
             }
         }
+        let panels = PackedInt8::from_row_major(&codes, w.rows, w.cols);
+        let nibble_payload = match bits {
+            Bits::Int4 => Some(pack::pack_nibbles(&codes)),
+            _ => None,
+        };
         QuantizedLinear {
             in_dim: w.rows,
             out_dim: w.cols,
             bits,
-            codes,
+            panels,
+            nibble_payload,
             w_scale,
             w_fp: w.clone(),
+            static_fold: None,
         }
     }
 
-    /// Integer payload bytes (weights only).
+    /// Integer payload bytes: the nibble-packed buffer actually stored
+    /// for INT4, one byte per code otherwise (panel padding excluded —
+    /// it is compute layout, not payload).
     pub fn payload_bytes(&self) -> usize {
-        match self.bits {
-            Bits::Int4 => self.codes.len().div_ceil(2),
-            _ => self.codes.len(),
+        match &self.nibble_payload {
+            Some(p) => p.len(),
+            None => self.in_dim * self.out_dim,
+        }
+    }
+
+    /// Row-major codes decoded from storage (the pack/unpack round-trip
+    /// surface; INT4 goes through `pack::unpack_nibbles`, byte-wide
+    /// grids decode from the panel layout).
+    pub fn stored_codes(&self) -> Vec<i8> {
+        match &self.nibble_payload {
+            Some(p) => pack::unpack_nibbles(p, self.in_dim * self.out_dim),
+            None => self.panels.to_row_major(),
+        }
+    }
+
+    /// Per-output-channel dequantization scales.
+    pub fn w_scales(&self) -> &[f32] {
+        &self.w_scale
+    }
+
+    /// Install a scale mode. `Static` folds the calibrated ĉ^(1−α) into
+    /// the weight codes once (the build-time pass); `Dynamic` drops any
+    /// fold and returns to per-batch rescaling.
+    pub fn set_scale_mode(&mut self, mode: ScaleMode) {
+        match mode {
+            ScaleMode::Dynamic => self.static_fold = None,
+            ScaleMode::Static { alpha, col_pow } => {
+                assert_eq!(col_pow.len(), self.in_dim, "static profile must match in_dim");
+                // a NaN factor would zero whole weight rows through the
+                // fold's saturating cast — fail loudly instead (the
+                // crate-wide NaN policy); O(I) check on a cold path
+                assert!(
+                    col_pow.iter().all(|v| v.is_finite()),
+                    "static profile contains non-finite factors (corrupt calibration)"
+                );
+                let (panels, scale) = self.fold_weight(&col_pow);
+                self.static_fold = Some(StaticFold { alpha, col_pow, panels, scale });
+            }
+        }
+    }
+
+    /// The currently installed scale mode.
+    pub fn scale_mode(&self) -> ScaleMode {
+        match &self.static_fold {
+            Some(f) => ScaleMode::Static { alpha: f.alpha, col_pow: f.col_pow.clone() },
+            None => ScaleMode::Dynamic,
         }
     }
 
     /// Per-token quantize an activation to integer codes.
     pub fn quantize_per_token(x: &Matrix, bits: Bits) -> QuantizedActivation {
-        let qmax = bits.qmax();
+        let qmax = i8_qmax(bits);
         let t = x.row_abs_max();
         let row_scale: Vec<f32> = t.iter().map(|&ti| ti.max(EPS) / qmax).collect();
         let mut codes = Vec::with_capacity(x.len());
@@ -93,17 +195,23 @@ impl QuantizedLinear {
     /// CrossQuant-quantize an activation: per-element scale
     /// t_i^α·c_j^(1−α)/q, codes on the integer grid; returns the codes,
     /// the per-row factor t_i^α/q, and the per-column factor c_j^(1−α)
-    /// the weight side must fold.
+    /// the weight side must fold. Both factors come from the shared
+    /// eq. (5) helpers in [`super::crossquant`].
     pub fn quantize_crossquant(
         x: &Matrix,
         alpha: f32,
         bits: Bits,
     ) -> (QuantizedActivation, Vec<f32>) {
-        let qmax = bits.qmax();
-        let row_scale: Vec<f32> =
-            x.row_abs_max().iter().map(|&t| t.max(EPS).powf(alpha) / qmax).collect();
-        let col_pow: Vec<f32> =
-            x.col_abs_max().iter().map(|&c| c.max(EPS).powf(1.0 - alpha)).collect();
+        let qmax = i8_qmax(bits);
+        let row_scale = crossquant::row_pow_scales(&x.row_abs_max(), alpha, qmax);
+        let col_pow = crossquant::col_pow_scales(&x.col_abs_max(), alpha);
+        let codes = Self::cross_codes(x, &row_scale, &col_pow, qmax);
+        (QuantizedActivation { rows: x.rows, cols: x.cols, codes, row_scale }, col_pow)
+    }
+
+    /// Emit CrossQuant codes for given factored scales (shared by the
+    /// dynamic and static activation paths — one code loop, not two).
+    fn cross_codes(x: &Matrix, row_scale: &[f32], col_pow: &[f32], qmax: f32) -> Vec<i8> {
         let mut codes = Vec::with_capacity(x.len());
         for i in 0..x.rows {
             let rp = row_scale[i];
@@ -112,33 +220,60 @@ impl QuantizedLinear {
                 codes.push((v / d).round().clamp(-qmax, qmax) as i8);
             }
         }
-        (QuantizedActivation { rows: x.rows, cols: x.cols, codes, row_scale }, col_pow)
+        codes
     }
 
     /// The W8A8 GEMM: int8×int8 → i32 accumulate, rank-1 dequant.
     pub fn forward_per_token(&self, x: &Matrix, act_bits: Bits) -> Matrix {
         let act = Self::quantize_per_token(x, act_bits);
-        self.gemm_i32(&act, &self.codes, &self.w_scale)
+        self.gemm(&act, &self.panels, &self.w_scale)
     }
 
-    /// The CrossQuant integer path: requantize weight rows with the
-    /// activation's c^(1−α) factor folded in (per batch), then the same
-    /// int8 GEMM.
+    /// The dynamic CrossQuant integer path: requantize + repack the weight
+    /// with the live batch's c^(1−α) folded in, then the packed GEMM.
     pub fn forward_crossquant(&self, x: &Matrix, alpha: f32, act_bits: Bits) -> Matrix {
         let (act, col_pow) = Self::quantize_crossquant(x, alpha, act_bits);
+        let (folded, folded_scale) = self.fold_weight(&col_pow);
+        self.gemm(&act, &folded, &folded_scale)
+    }
+
+    /// The static CrossQuant integer path: activation codes use the
+    /// calibrated ĉ^(1−α) (row maxima stay per-token dynamic — an O(T·I)
+    /// scan), weights are pre-folded — **no** per-batch weight pass.
+    ///
+    /// Panics if [`QuantizedLinear::set_scale_mode`] has not installed
+    /// `ScaleMode::Static`.
+    pub fn forward_crossquant_static(&self, x: &Matrix, act_bits: Bits) -> Matrix {
+        let fold = self
+            .static_fold
+            .as_ref()
+            .expect("forward_crossquant_static requires ScaleMode::Static");
+        let qmax = i8_qmax(act_bits);
+        let row_scale = crossquant::row_pow_scales(&x.row_abs_max(), fold.alpha, qmax);
+        let codes = Self::cross_codes(x, &row_scale, &fold.col_pow, qmax);
+        let act = QuantizedActivation { rows: x.rows, cols: x.cols, codes, row_scale };
+        self.gemm(&act, &fold.panels, &fold.scale)
+    }
+
+    /// FP reference product (unquantized weight).
+    pub fn forward_fp(&self, x: &Matrix) -> Matrix {
+        x.matmul(&self.w_fp)
+    }
+
+    /// Fold c_k^(1−α) into the FP weight rows and requantize per output
+    /// channel, packing straight into the panel layout — the per-batch
+    /// O(I·O) pass of the dynamic path, and the one-time build pass of
+    /// the static path. Two row-parallel sweeps: a per-output max
+    /// reduction, then a fused quantize+pack.
+    fn fold_weight(&self, col_pow: &[f32]) -> (PackedInt8, Vec<f32>) {
         let qmax = self.bits.qmax();
-        // Fold c_k^(1−α) into the FP weight rows and requantize per output
-        // channel — the per-batch O(I·O) rescale pass. Both halves are
-        // row-parallel over the weight (see tensor::par): workers reduce
-        // their row blocks to per-output maxima (merged below), then emit
-        // their blocks of folded integer codes.
         let n = self.out_dim;
         let workers = par::workers_for(self.in_dim, self.w_fp.len());
         let partial_max = par::par_map_rows(self.in_dim, workers, |range| {
             let mut m = vec![0.0f32; n];
-            for k in range {
-                let cp = col_pow[k];
-                for (mj, &v) in m.iter_mut().zip(self.w_fp.row(k)) {
+            for kk in range {
+                let cp = col_pow[kk];
+                for (mj, &v) in m.iter_mut().zip(self.w_fp.row(kk)) {
                     let a = (v * cp).abs();
                     if a > *mj {
                         *mj = a;
@@ -148,8 +283,8 @@ impl QuantizedLinear {
             m
         });
         let mut folded_scale = vec![0.0f32; n];
-        for m in &partial_max {
-            for (s, &a) in folded_scale.iter_mut().zip(m) {
+        for pm in &partial_max {
+            for (s, &a) in folded_scale.iter_mut().zip(pm) {
                 if a > *s {
                     *s = a;
                 }
@@ -158,61 +293,21 @@ impl QuantizedLinear {
         for s in folded_scale.iter_mut() {
             *s = s.max(EPS) / qmax;
         }
-        let mut folded_codes = vec![0i8; self.w_fp.len()];
-        par::par_rows_mut(&mut folded_codes, n.max(1), workers, |k0, chunk| {
-            for (local, dst) in chunk.chunks_mut(n.max(1)).enumerate() {
-                let k = k0 + local;
-                let cp = col_pow[k];
-                for ((c, &v), &s) in dst.iter_mut().zip(self.w_fp.row(k)).zip(&folded_scale) {
-                    *c = (v * cp / s).round().clamp(-qmax, qmax) as i8;
-                }
-            }
+        let pack_workers = par::workers_for(n.div_ceil(gemm::NR), self.w_fp.len());
+        let folded = PackedInt8::pack_with(self.in_dim, n, pack_workers, |kk, j| {
+            let v = self.w_fp.get(kk, j) * col_pow[kk] / folded_scale[j];
+            v.round().clamp(-qmax, qmax) as i8
         });
-        self.gemm_i32(&act, &folded_codes, &folded_scale)
+        (folded, folded_scale)
     }
 
-    /// FP reference product (unquantized weight).
-    pub fn forward_fp(&self, x: &Matrix) -> Matrix {
-        x.matmul(&self.w_fp)
-    }
-
-    /// int8 × int8 → i32 GEMM with row/col dequantization. Row-parallel:
-    /// each worker owns a block of output rows and its own i32
-    /// accumulator; integer sums make the result order-independent. The
-    /// `a == 0` skip is exact for integer codes (unlike the FP matmul's
-    /// removed shortcut) and pays off because quantized activations are
-    /// zero exactly on the quantization kernel.
-    fn gemm_i32(&self, act: &QuantizedActivation, w_codes: &[i8], w_scale: &[f32]) -> Matrix {
+    /// Dispatch into the packed-panel GEMM (see [`super::gemm`]); the
+    /// serial and parallel paths share the microkernel.
+    fn gemm(&self, act: &QuantizedActivation, w: &PackedInt8, w_scale: &[f32]) -> Matrix {
         assert_eq!(act.cols, self.in_dim, "activation/weight shape mismatch");
-        let (m, k_dim, n) = (act.rows, self.in_dim, self.out_dim);
-        let mut out = Matrix::zeros(m, n);
-        if out.is_empty() {
-            return out;
-        }
-        let cost = m.saturating_mul(k_dim).saturating_mul(n);
-        par::par_rows_mut(&mut out.data, n, par::workers_for(m, cost), |row0, chunk| {
-            let mut acc = vec![0i32; n];
-            for (local_i, dst) in chunk.chunks_mut(n).enumerate() {
-                let i = row0 + local_i;
-                acc.iter_mut().for_each(|a| *a = 0);
-                let a_row = &act.codes[i * k_dim..(i + 1) * k_dim];
-                for (k, &a) in a_row.iter().enumerate() {
-                    if a == 0 {
-                        continue;
-                    }
-                    let a = a as i32;
-                    let w_row = &w_codes[k * n..(k + 1) * n];
-                    for (o, &w) in acc.iter_mut().zip(w_row) {
-                        *o += a * w as i32;
-                    }
-                }
-                let rs = act.row_scale[i];
-                for ((d, &a), &ws) in dst.iter_mut().zip(&acc).zip(w_scale) {
-                    *d = a as f32 * rs * ws;
-                }
-            }
-        });
-        out
+        let cost = act.rows.saturating_mul(self.in_dim).saturating_mul(self.out_dim);
+        let workers = par::workers_for(act.rows, cost);
+        gemm::gemm_dequant(&act.codes, act.rows, w, &act.row_scale, w_scale, workers)
     }
 }
 
@@ -281,12 +376,88 @@ mod tests {
     }
 
     #[test]
+    fn static_fold_with_batch_stats_matches_dynamic_exactly() {
+        // ScaleMode::Static with the *live batch's* column stats produces
+        // identical codes and an identical fold — outputs must be
+        // bit-exact with the dynamic path.
+        let (x, w) = pair(true);
+        let mut lin = QuantizedLinear::from_weight(&w, Bits::Int8);
+        let dynamic = lin.forward_crossquant(&x, 0.15, Bits::Int8);
+        let cp = crossquant::col_pow_scales(&x.col_abs_max(), 0.15);
+        lin.set_scale_mode(ScaleMode::Static { alpha: 0.15, col_pow: cp });
+        assert!(matches!(lin.scale_mode(), ScaleMode::Static { .. }));
+        let st = lin.forward_crossquant_static(&x, Bits::Int8);
+        assert_eq!(st.data, dynamic.data);
+        // and Dynamic mode clears the fold again
+        lin.set_scale_mode(ScaleMode::Dynamic);
+        assert!(matches!(lin.scale_mode(), ScaleMode::Dynamic));
+    }
+
+    #[test]
+    fn static_fold_tolerates_shifted_calibration_stats() {
+        // calibration stats from a *different* batch of the same
+        // distribution: not bit-exact, but still close to FP
+        let mut rng = SplitMix64::new(77);
+        let x_calib = Matrix::randn(96, 64, 1.0, &mut rng);
+        let (x, w) = pair(false);
+        let mut lin = QuantizedLinear::from_weight(&w, Bits::Int8);
+        let cp = crossquant::col_pow_scales(&x_calib.col_abs_max(), 0.15);
+        lin.set_scale_mode(ScaleMode::Static { alpha: 0.15, col_pow: cp });
+        let st = lin.forward_crossquant_static(&x, Bits::Int8);
+        let fp = lin.forward_fp(&x);
+        let rel = st.distance(&fp) / fp.frobenius();
+        assert!(rel < 0.05, "static rel {rel}");
+    }
+
+    #[test]
     fn int4_payload_is_half() {
         let (_, w) = pair(false);
         let l8 = QuantizedLinear::from_weight(&w, Bits::Int8);
         let l4 = QuantizedLinear::from_weight(&w, Bits::Int4);
         assert_eq!(l8.payload_bytes(), 64 * 48);
         assert_eq!(l4.payload_bytes(), (64 * 48usize).div_ceil(2));
+    }
+
+    #[test]
+    fn stored_codes_roundtrip_for_all_widths() {
+        let (_, w) = pair(false);
+        for bits in [Bits::Int8, Bits::Int4, Bits::Other(6)] {
+            let lin = QuantizedLinear::from_weight(&w, bits);
+            let qmax = bits.qmax();
+            let decoded = lin.stored_codes();
+            assert_eq!(decoded.len(), 64 * 48);
+            // decoded payload must reproduce the quantization of w exactly
+            let mut scale_ok = true;
+            for i in 0..w.rows {
+                for (j, &v) in w.row(i).iter().enumerate() {
+                    let expect = (v / lin.w_scales()[j]).round().clamp(-qmax, qmax) as i8;
+                    if decoded[i * w.cols + j] != expect {
+                        scale_ok = false;
+                    }
+                }
+            }
+            assert!(scale_ok, "payload mismatch for {bits}");
+        }
+    }
+
+    #[test]
+    #[should_panic(expected = "non-finite factors")]
+    fn rejects_non_finite_static_profile() {
+        let (_, w) = pair(false);
+        let mut lin = QuantizedLinear::from_weight(&w, Bits::Int8);
+        let mut cp = vec![1.0f32; 64];
+        cp[3] = f32::NAN;
+        lin.set_scale_mode(ScaleMode::Static { alpha: 0.15, col_pow: cp });
+    }
+
+    #[test]
+    #[should_panic(expected = "i8 codes")]
+    fn rejects_widths_above_eight_bits() {
+        // Bits::Other(12) is a legal fake-quant width, but the integer
+        // path cannot represent its codes in i8 — must fail loudly, not
+        // silently saturate
+        let (_, w) = pair(false);
+        let _ = QuantizedLinear::from_weight(&w, Bits::Other(12));
     }
 
     #[test]

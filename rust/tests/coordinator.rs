@@ -97,6 +97,64 @@ fn failure_injection_missing_artifact() {
 }
 
 #[test]
+fn native_executor_serves_static_scale_scheme() {
+    let (store, _guard) = broken_store();
+    let cfg = ModelConfig {
+        vocab: 64,
+        d_model: 16,
+        n_layers: 1,
+        n_heads: 2,
+        d_ff: 32,
+        seq_len: 12,
+        eval_batch: 2,
+    };
+    let weights = crossquant::model::weights::synthetic_weights(cfg, 9);
+    let coordinator = EvalCoordinator::start(
+        store,
+        cfg,
+        vec![("w".into(), weights.flat.clone())],
+        CoordinatorConfig {
+            batch_size: 2,
+            max_batch_delay: Duration::from_millis(2),
+            max_queue: 8,
+        },
+    );
+    let mut gen = CorpusGen::new(cfg.vocab, 4);
+    let tokens = gen.sequence(cfg.seq_len);
+    let submit = |toks: Vec<u32>| {
+        coordinator
+            .submit(EvalRequest {
+                tokens: toks,
+                scheme: ActScheme::CrossQuantStatic { alpha: 0.15, qmax: 127.0 },
+                weight_set: "w".into(),
+            })
+            .unwrap()
+    };
+    // the executor serves the static scheme through the native integer
+    // model on every build (PJRT-linked or not) — this must succeed
+    let r = submit(tokens.clone())
+        .wait_timeout(Duration::from_secs(120))
+        .expect("static scheme must be served natively");
+    assert_eq!(r.nll.len(), cfg.seq_len - 1);
+    assert!(r.nll.iter().all(|v| v.is_finite()));
+    assert_eq!(r.aux, 0.0);
+    // the calibrated model is cached per (weight set, α): a repeat of
+    // the same request is deterministic
+    let again = submit(tokens).wait_timeout(Duration::from_secs(120)).unwrap();
+    assert_eq!(again.nll, r.nll);
+    // malformed static requests fail the request, not the process: the
+    // native path serves the INT8 grid only
+    let bad = coordinator
+        .submit(EvalRequest {
+            tokens: gen.sequence(cfg.seq_len),
+            scheme: ActScheme::CrossQuantStatic { alpha: 0.15, qmax: 50.0 },
+            weight_set: "w".into(),
+        })
+        .unwrap();
+    assert!(bad.wait_timeout(Duration::from_secs(120)).is_err());
+}
+
+#[test]
 fn rejects_out_of_range_sequences() {
     let (store, _guard) = broken_store();
     let cfg = ModelConfig {

@@ -1,0 +1,195 @@
+//! Property tests for the packed-panel int8 GEMM and the static-scale
+//! CrossQuant deployment path (hand-rolled randomized driver — the
+//! offline build has no proptest; see Cargo.toml).
+//!
+//! The packed kernel must be *bit-exact* against the naive i32 triple
+//! loop for every shape and worker count: integer accumulation is
+//! order-independent, so there is no tolerance anywhere in these
+//! comparisons. CI runs this file in release mode as well (optimized
+//! codegen exercises the vectorized microkernel paths).
+
+use crossquant::model::weights::synthetic_weights;
+use crossquant::model::{ModelConfig, QuantPath, QuantizedModel};
+use crossquant::quant::crossquant::col_pow_scales;
+use crossquant::quant::gemm::{
+    gemm_dequant, gemm_i32_packed, gemm_i32_ref, PackedInt8, KB, MR, NR,
+};
+use crossquant::quant::qlinear::{QuantizedLinear, ScaleMode};
+use crossquant::quant::Bits;
+use crossquant::tensor::{Matrix, SplitMix64};
+
+const WORKER_GRID: [usize; 4] = [1, 2, 5, 16];
+
+/// Random codes with a controllable zero fraction (the quantization
+/// kernel) — exercises both the dense path and the zero-block skip.
+fn arb_codes(rng: &mut SplitMix64, len: usize, zero_frac: f64) -> Vec<i8> {
+    (0..len)
+        .map(|_| {
+            if rng.uniform() < zero_frac {
+                0i8
+            } else {
+                (rng.below(255) as i64 - 127) as i8
+            }
+        })
+        .collect()
+}
+
+fn check_shape(rng: &mut SplitMix64, m: usize, k: usize, n: usize, zero_frac: f64) {
+    let a = arb_codes(rng, m * k, zero_frac);
+    let w = arb_codes(rng, k * n, 0.1);
+    let packed = PackedInt8::from_row_major(&w, k, n);
+    let reference = gemm_i32_ref(&a, m, k, &w, n);
+    for workers in WORKER_GRID {
+        assert_eq!(
+            gemm_i32_packed(&a, m, &packed, workers),
+            reference,
+            "m={m} k={k} n={n} zero={zero_frac:.2} workers={workers}"
+        );
+    }
+}
+
+/// Random shapes crossing every tiling boundary (MR row groups, NR
+/// panels, KB zero-skip blocks), random sparsity.
+#[test]
+fn prop_packed_gemm_bit_exact_vs_naive() {
+    let mut rng = SplitMix64::new(0xC1);
+    for _ in 0..40 {
+        let m = 1 + rng.below(6 * MR);
+        let k = rng.below(3 * KB);
+        let n = 1 + rng.below(6 * NR);
+        let zero_frac = rng.uniform();
+        check_shape(&mut rng, m, k, n, zero_frac);
+    }
+}
+
+/// The shapes where the tiling logic can go wrong, enumerated.
+#[test]
+fn packed_gemm_edge_shapes() {
+    let mut rng = SplitMix64::new(0xC2);
+    let shapes: &[(usize, usize, usize)] = &[
+        (1, 1, 1),                            // minimal
+        (MR - 1, KB, NR - 1),                 // remainder row group + remainder panel
+        (MR, KB, NR),                         // exact single tiles
+        (MR + 1, KB + 1, NR + 1),             // one past every boundary
+        (2 * MR + 3, 2 * KB + 7, 3 * NR + 5), // interior + remainders
+        (5, 0, 3),                            // K = 0: empty contraction
+        (1, 3 * KB, 2 * NR),                  // single row, many k-blocks
+        (3 * MR, 1, 1),                       // single column, single depth
+    ];
+    for &(m, k, n) in shapes {
+        for zero_frac in [0.0, 0.5, 1.0] {
+            check_shape(&mut rng, m, k, n, zero_frac);
+        }
+    }
+}
+
+/// All-zero blocks (the skip path) cannot change results, including
+/// whole-row and whole-block structured sparsity.
+#[test]
+fn packed_gemm_structured_sparsity_bit_exact() {
+    let mut rng = SplitMix64::new(0xC3);
+    let (m, k, n) = (2 * MR + 1, 4 * KB, 2 * NR + 3);
+    let mut a = arb_codes(&mut rng, m * k, 0.0);
+    // zero a full KB-aligned stripe and one full row
+    for row in a.chunks_mut(k) {
+        for v in &mut row[KB..3 * KB] {
+            *v = 0;
+        }
+    }
+    for v in &mut a[0..k] {
+        *v = 0;
+    }
+    let w = arb_codes(&mut rng, k * n, 0.0);
+    let packed = PackedInt8::from_row_major(&w, k, n);
+    let reference = gemm_i32_ref(&a, m, k, &w, n);
+    for workers in WORKER_GRID {
+        assert_eq!(gemm_i32_packed(&a, m, &packed, workers), reference);
+    }
+}
+
+/// The fused dequant writeback applies exactly out = acc · r_i · c_j.
+#[test]
+fn prop_dequant_matches_reference_scaling() {
+    let mut rng = SplitMix64::new(0xC4);
+    for _ in 0..10 {
+        let m = 1 + rng.below(3 * MR);
+        let k = 1 + rng.below(KB + 9);
+        let n = 1 + rng.below(3 * NR);
+        let a = arb_codes(&mut rng, m * k, 0.3);
+        let w = arb_codes(&mut rng, k * n, 0.1);
+        let packed = PackedInt8::from_row_major(&w, k, n);
+        let row_scale: Vec<f32> = (0..m).map(|_| 0.001 + rng.uniform() as f32 * 0.01).collect();
+        let col_scale: Vec<f32> = (0..n).map(|_| 0.001 + rng.uniform() as f32 * 0.01).collect();
+        let reference = gemm_i32_ref(&a, m, k, &w, n);
+        for workers in [1usize, 4] {
+            let out = gemm_dequant(&a, m, &packed, &row_scale, &col_scale, workers);
+            for i in 0..m {
+                for j in 0..n {
+                    let expect = reference[i * n + j] as f32 * row_scale[i] * col_scale[j];
+                    assert_eq!(out.get(i, j), expect, "({i},{j}) workers={workers}");
+                }
+            }
+        }
+    }
+}
+
+/// The qlinear integer forwards stay deterministic across repeated calls
+/// (panel packing + parallel fold must not introduce any order
+/// dependence), and the static fold built from the live batch's own
+/// statistics reproduces the dynamic path bit-for-bit.
+#[test]
+fn qlinear_static_fold_bit_exact_with_dynamic_on_matching_stats() {
+    let mut rng = SplitMix64::new(0xC5);
+    let x = Matrix::randn(37, 29, 1.0, &mut rng);
+    let w = Matrix::randn(29, 23, 0.1, &mut rng);
+    let mut lin = QuantizedLinear::from_weight(&w, Bits::Int8);
+    let dynamic = lin.forward_crossquant(&x, 0.15, Bits::Int8);
+    assert_eq!(dynamic.data, lin.forward_crossquant(&x, 0.15, Bits::Int8).data);
+    lin.set_scale_mode(ScaleMode::Static {
+        alpha: 0.15,
+        col_pow: col_pow_scales(&x.col_abs_max(), 0.15),
+    });
+    let st = lin.forward_crossquant_static(&x, Bits::Int8);
+    assert_eq!(st.data, dynamic.data);
+}
+
+/// End-to-end deployment contract: calibrated static scales track the
+/// dynamic path within 2% mean NLL on the synthetic eval (the paper-level
+/// accuracy cost of replacing live column maxima with calibration).
+#[test]
+fn static_scale_nll_within_two_percent_of_dynamic() {
+    let cfg = ModelConfig {
+        vocab: 64,
+        d_model: 16,
+        n_layers: 2,
+        n_heads: 2,
+        d_ff: 32,
+        seq_len: 20,
+        eval_batch: 2,
+    };
+    let w = synthetic_weights(cfg, 31);
+    let mut qm =
+        QuantizedModel::new(&w, Bits::Int8, Bits::Int8, QuantPath::CrossQuant { alpha: 0.15 })
+            .unwrap();
+    let eval: Vec<Vec<u32>> = (0..3)
+        .map(|s| (0..20).map(|i| ((i * 7 + s) % 64) as u32).collect())
+        .collect();
+    let mean_nll = |qm: &QuantizedModel| -> f32 {
+        let mut total = 0.0f32;
+        let mut count = 0usize;
+        for seq in &eval {
+            let nll = qm.forward_nll(seq).unwrap();
+            total += nll.iter().sum::<f32>();
+            count += nll.len();
+        }
+        total / count as f32
+    };
+    let dyn_mean = mean_nll(&qm);
+    let calib: Vec<Vec<u32>> = (0..8)
+        .map(|s| (0..20).map(|i| ((i * 7 + s) % 64) as u32).collect())
+        .collect();
+    qm.calibrate_static(0.15, &calib).unwrap();
+    let st_mean = mean_nll(&qm);
+    let rel = (dyn_mean - st_mean).abs() / dyn_mean.max(1e-6);
+    assert!(rel < 0.02, "static {st_mean} vs dynamic {dyn_mean} (rel {rel})");
+}
