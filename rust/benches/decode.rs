@@ -1,0 +1,192 @@
+//! Prefill-vs-incremental-decode benchmark — the generation workload's
+//! perf trajectory (`BENCH_decode.json`).
+//!
+//! Claims under test (PR 3):
+//!   * KV-cached decode turns the per-token cost from O(S²·d) (full
+//!     recompute of the growing prefix) into O(S·d): incremental
+//!     tokens/s must beat full-recompute tokens/s on every path;
+//!   * the decode step drives the packed `quant::gemm` microkernel with
+//!     M=1, so the static CrossQuant path decodes at per-token-W8A8-like
+//!     cost while dynamic CrossQuant pays its per-step weight rescale.
+//!
+//! Paths measured: FP (native), dynamic CrossQuant (integer), calibrated
+//! static CrossQuant (integer).
+//!
+//!     cargo bench --bench decode
+
+mod support;
+
+use std::time::Duration;
+
+use crossquant::corpus::CorpusGen;
+use crossquant::eval::generation::{
+    generate_timed, IncrementalDecoder, NativeDecoder, QuantizedDecoder,
+};
+use crossquant::model::weights::synthetic_weights;
+use crossquant::model::{
+    block, IdentitySite, ModelConfig, NativeModel, QuantPath, QuantizedModel,
+};
+use crossquant::quant::Bits;
+use crossquant::tensor::par;
+use crossquant::util::Json;
+use support::{bench, header};
+
+const PROMPT_TOKENS: usize = 32;
+const NEW_TOKENS: usize = 64;
+
+/// One path's numbers: incremental (KV-cached) vs full-recompute decode.
+struct PathReport {
+    name: &'static str,
+    prefill_tok_s: f64,
+    decode_tok_s: f64,
+    full_recompute_tok_s: f64,
+}
+
+impl PathReport {
+    fn speedup(&self) -> f64 {
+        self.decode_tok_s / self.full_recompute_tok_s.max(1e-12)
+    }
+
+    fn json(&self) -> Json {
+        Json::obj(vec![
+            ("path", Json::str(self.name)),
+            ("prefill_tok_s", Json::num(self.prefill_tok_s)),
+            ("decode_tok_s", Json::num(self.decode_tok_s)),
+            ("full_recompute_tok_s", Json::num(self.full_recompute_tok_s)),
+            ("incremental_vs_full_speedup", Json::num(self.speedup())),
+        ])
+    }
+}
+
+/// Measure one decoder: mean prefill/decode split over `bench`-paced
+/// repetitions, plus the full-recompute baseline driven by `rescore`
+/// (logits of the whole growing sequence each step — what serving without
+/// a KV cache would pay).
+fn measure(
+    name: &'static str,
+    budget: Duration,
+    decoder: &mut dyn IncrementalDecoder,
+    prompt: &[u32],
+    rescore: &mut dyn FnMut(&[u32]) -> Vec<f32>,
+) -> PathReport {
+    // one instrumented run for the prefill/decode split
+    let (tokens, timing) = generate_timed(decoder, prompt, NEW_TOKENS).expect("generate");
+    assert_eq!(tokens.len(), NEW_TOKENS);
+
+    let r_inc = bench(&format!("{name}: incremental decode"), budget, || {
+        let (t, _) = generate_timed(decoder, prompt, NEW_TOKENS).expect("generate");
+        std::hint::black_box(t);
+    });
+    r_inc.print_throughput((PROMPT_TOKENS + NEW_TOKENS) as f64, "tok");
+
+    let r_full = bench(&format!("{name}: full-recompute decode"), budget, || {
+        let mut seq = prompt.to_vec();
+        for _ in 0..NEW_TOKENS {
+            let last = rescore(&seq);
+            // same sampler as the cached path: divergence can only come
+            // from the logits, never from tie-breaking
+            seq.push(block::argmax(&last) as u32);
+        }
+        std::hint::black_box(seq);
+    });
+    r_full.print_throughput(NEW_TOKENS as f64, "tok");
+
+    // tokens/s from the bench means: incremental spends (prefill +
+    // decode) per run; attribute by the instrumented split so the decode
+    // rate excludes prefill
+    let split = timing.decode.as_secs_f64()
+        / (timing.prefill.as_secs_f64() + timing.decode.as_secs_f64()).max(1e-12);
+    let inc_total = r_inc.mean.as_secs_f64();
+    let report = PathReport {
+        name,
+        prefill_tok_s: PROMPT_TOKENS as f64 / (inc_total * (1.0 - split)).max(1e-12),
+        decode_tok_s: NEW_TOKENS as f64 / (inc_total * split).max(1e-12),
+        full_recompute_tok_s: NEW_TOKENS as f64 / r_full.mean.as_secs_f64(),
+    };
+    println!(
+        "  -> {name}: decode {:.0} tok/s (prefill {:.0} tok/s), full recompute {:.0} tok/s, \
+         speedup {:.2}x\n",
+        report.decode_tok_s,
+        report.prefill_tok_s,
+        report.full_recompute_tok_s,
+        report.speedup()
+    );
+    report
+}
+
+fn main() {
+    let budget = Duration::from_millis(400);
+    let cfg = ModelConfig::default_build();
+    let weights = synthetic_weights(cfg, 77);
+    let prompt = CorpusGen::new(cfg.vocab, 3).sequence(PROMPT_TOKENS);
+    assert!(PROMPT_TOKENS + NEW_TOKENS <= cfg.seq_len);
+
+    println!(
+        "greedy generation, {} prompt + {} new tokens, model d={} L={} vocab={} — {} worker \
+         threads\n",
+        PROMPT_TOKENS,
+        NEW_TOKENS,
+        cfg.d_model,
+        cfg.n_layers,
+        cfg.vocab,
+        par::max_threads()
+    );
+    header();
+
+    let fp = NativeModel::new(weights.clone());
+    let mut fp_site = IdentitySite;
+    let mut fp_dec = NativeDecoder { model: &fp, site: &mut fp_site };
+    let mut fp_rescore = |seq: &[u32]| {
+        let logits = fp.forward_logits(seq, &mut IdentitySite).unwrap();
+        logits.row(logits.rows - 1).to_vec()
+    };
+    let r_fp = measure("fp", budget, &mut fp_dec, &prompt, &mut fp_rescore);
+
+    let qdyn = QuantizedModel::new(
+        &weights,
+        Bits::Int8,
+        Bits::Int8,
+        QuantPath::CrossQuant { alpha: 0.15 },
+    )
+    .expect("dynamic model");
+    let mut dyn_dec = QuantizedDecoder(&qdyn);
+    let mut dyn_rescore = |seq: &[u32]| {
+        let logits = qdyn.forward_logits(seq).unwrap();
+        logits.row(logits.rows - 1).to_vec()
+    };
+    let r_dyn = measure("crossquant-dynamic", budget, &mut dyn_dec, &prompt, &mut dyn_rescore);
+
+    let mut qstat = QuantizedModel::new(
+        &weights,
+        Bits::Int8,
+        Bits::Int8,
+        QuantPath::CrossQuant { alpha: 0.15 },
+    )
+    .expect("static model");
+    let mut gen = CorpusGen::new(cfg.vocab, 9);
+    let calib: Vec<Vec<u32>> = (0..8).map(|_| gen.sequence(cfg.seq_len)).collect();
+    qstat.calibrate_static(0.15, &calib).expect("calibration");
+    let mut stat_dec = QuantizedDecoder(&qstat);
+    let mut stat_rescore = |seq: &[u32]| {
+        let logits = qstat.forward_logits(seq).unwrap();
+        logits.row(logits.rows - 1).to_vec()
+    };
+    let r_stat = measure("crossquant-static", budget, &mut stat_dec, &prompt, &mut stat_rescore);
+
+    let json = Json::obj(vec![
+        ("bench", Json::str("decode")),
+        ("prompt_tokens", Json::num(PROMPT_TOKENS as f64)),
+        ("new_tokens", Json::num(NEW_TOKENS as f64)),
+        ("threads", Json::num(par::max_threads() as f64)),
+        (
+            "kv_cache_bytes_per_request",
+            Json::num(fp.new_decode_state().memory_bytes() as f64),
+        ),
+        ("paths", Json::arr(vec![r_fp.json(), r_dyn.json(), r_stat.json()])),
+    ]);
+    let path = concat!(env!("CARGO_MANIFEST_DIR"), "/../BENCH_decode.json");
+    match std::fs::write(path, json.render_pretty()) {
+        Ok(()) => println!("wrote {path}"),
+        Err(e) => eprintln!("could not write {path}: {e}"),
+    }
+}

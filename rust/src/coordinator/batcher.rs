@@ -74,6 +74,21 @@ impl<R> BatchAccumulator<R> {
     pub fn pending_requests(&self) -> usize {
         self.pending.values().map(|(_, v)| v.len()).sum()
     }
+
+    /// Number of keys with a partially-filled batch pending.
+    pub fn len(&self) -> usize {
+        self.pending.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.pending.is_empty()
+    }
+
+    /// The keys currently holding pending requests (observability /
+    /// test surface; arbitrary order).
+    pub fn pending_keys(&self) -> Vec<SchemeKey> {
+        self.pending.keys().cloned().collect()
+    }
 }
 
 #[cfg(test)]
@@ -126,6 +141,39 @@ mod tests {
         acc.push(key(0.15), 1u32, t0);
         acc.push(key(0.45), 2, t0 + Duration::from_millis(2));
         assert_eq!(acc.next_deadline(), Some(t0 + Duration::from_millis(5)));
+    }
+
+    #[test]
+    fn fill_exactly_at_deadline_emits_once() {
+        // regression: a key whose batch fills at the very instant its
+        // deadline elapses must be emitted by `push` alone — the
+        // subsequent `flush_expired` sweep at the same instant must not
+        // emit it a second time (the batch loop always runs both).
+        let mut acc = BatchAccumulator::new(2, Duration::from_millis(5));
+        let t0 = Instant::now();
+        let deadline = t0 + Duration::from_millis(5);
+        assert!(acc.push(key(0.15), 1u32, t0).is_none());
+        let batch = acc.push(key(0.15), 2, deadline).expect("fills at the deadline");
+        assert_eq!(batch.requests, vec![1, 2]);
+        assert!(acc.flush_expired(deadline).is_empty(), "emitted batch must not duplicate");
+        assert!(acc.is_empty());
+        assert_eq!(acc.pending_requests(), 0);
+    }
+
+    #[test]
+    fn len_and_pending_keys_track_partial_batches() {
+        let mut acc = BatchAccumulator::new(3, Duration::from_millis(5));
+        let now = Instant::now();
+        assert!(acc.is_empty());
+        acc.push(key(0.15), 1u32, now);
+        acc.push(key(0.45), 2, now);
+        assert_eq!(acc.len(), 2);
+        let mut keys = acc.pending_keys();
+        keys.sort_by_key(|k| k.s0);
+        assert_eq!(keys, vec![key(0.15), key(0.45)]);
+        acc.push(key(0.15), 3, now);
+        assert_eq!(acc.len(), 2, "same key stays one pending batch");
+        assert_eq!(acc.pending_requests(), 3);
     }
 
     #[test]

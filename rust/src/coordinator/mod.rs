@@ -11,7 +11,7 @@ pub mod scheduler;
 pub mod server;
 
 pub use metrics::Metrics;
-pub use scheduler::{EvalCoordinator, EvalRequest, EvalResponse};
+pub use scheduler::{EvalCoordinator, EvalRequest, EvalResponse, RequestKind};
 pub use server::EvalServer;
 
 /// Activation-quantization scheme of a request — maps onto one AOT
@@ -56,6 +56,9 @@ impl ActScheme {
     }
 
     /// Batching key: requests with identical keys share an execution.
+    /// Scoring key — generation requests go through `EvalRequest::key`,
+    /// which flips [`SchemeKey::generate`] so decode work never shares a
+    /// batch with fixed-shape scoring executions.
     pub fn key(&self, weight_set: &str) -> SchemeKey {
         let quant = |f: f32| (f * 1e6).round() as i64;
         let (a, b) = match *self {
@@ -70,6 +73,7 @@ impl ActScheme {
             s0: a,
             s1: b,
             weight_set: weight_set.to_string(),
+            generate: false,
         }
     }
 }
@@ -81,6 +85,9 @@ pub struct SchemeKey {
     pub s0: i64,
     pub s1: i64,
     pub weight_set: String,
+    /// Generation requests batch separately from scoring requests under
+    /// the same scheme (their execution shapes differ).
+    pub generate: bool,
 }
 
 #[cfg(test)]
@@ -114,6 +121,18 @@ mod tests {
         assert_ne!(a.key("w8"), a.key("w4"));
         let b = ActScheme::CrossQuant { alpha: 0.45, qmax: 127.0 };
         assert_ne!(a.key("w8"), b.key("w8"));
+    }
+
+    #[test]
+    fn generation_never_shares_a_batch_with_scoring() {
+        let s = ActScheme::CrossQuant { alpha: 0.15, qmax: 127.0 };
+        let score = EvalRequest::score(vec![1, 2, 3], s, "w8");
+        let generate = EvalRequest::generate(vec![1, 2, 3], s, "w8", 4);
+        assert_ne!(score.key(), generate.key());
+        assert_eq!(score.key(), s.key("w8"));
+        // generation requests with different budgets still share a batch
+        let other = EvalRequest::generate(vec![9], s, "w8", 7);
+        assert_eq!(generate.key(), other.key());
     }
 
     #[test]

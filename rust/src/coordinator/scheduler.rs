@@ -27,7 +27,8 @@ use super::{ActScheme, SchemeKey};
 use crate::corpus::CorpusGen;
 use crate::model::config::ModelConfig;
 use crate::model::{
-    IdentitySite, NativeModel, QuantPath, QuantSite, QuantizedModel, RemoveKernelSite, Weights,
+    ActSite, IdentitySite, NativeModel, QuantPath, QuantSite, QuantizedModel, RemoveKernelSite,
+    Weights,
 };
 use crate::quant::{
     crossquant::cross_delta_field, remove_kernel::RemoveKernel, ActQuantizer, Bits, DeltaField,
@@ -35,7 +36,18 @@ use crate::quant::{
 use crate::runtime::literal::{literal_to_scalar, literal_to_vec, tokens_literal, vec_literal};
 use crate::runtime::{ArtifactStore, Runtime};
 use crate::tensor::Matrix;
+use crate::util::LruCache;
 use crate::xla;
+
+/// What a request asks the executor to do with its tokens.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum RequestKind {
+    /// Score the sequence: per-position NLL (the original workload).
+    Score,
+    /// Greedy generation: treat the tokens as a prompt, prefill once,
+    /// then KV-cached decode of `max_new_tokens` tokens.
+    Generate { max_new_tokens: usize },
+}
 
 /// One evaluation request: a token sequence under a scheme + weight set.
 #[derive(Clone)]
@@ -44,16 +56,50 @@ pub struct EvalRequest {
     pub scheme: ActScheme,
     /// Which registered weight set to run against (e.g. "w16", "w8", "w4g128").
     pub weight_set: String,
+    pub kind: RequestKind,
+}
+
+impl EvalRequest {
+    /// A scoring request (per-position NLL).
+    pub fn score(tokens: Vec<u32>, scheme: ActScheme, weight_set: impl Into<String>) -> Self {
+        EvalRequest { tokens, scheme, weight_set: weight_set.into(), kind: RequestKind::Score }
+    }
+
+    /// A greedy-generation request (`tokens` is the prompt).
+    pub fn generate(
+        tokens: Vec<u32>,
+        scheme: ActScheme,
+        weight_set: impl Into<String>,
+        max_new_tokens: usize,
+    ) -> Self {
+        EvalRequest {
+            tokens,
+            scheme,
+            weight_set: weight_set.into(),
+            kind: RequestKind::Generate { max_new_tokens },
+        }
+    }
+
+    /// Batching key: scheme key plus the kind discriminant, so generation
+    /// and scoring work under the same scheme never share an execution.
+    pub fn key(&self) -> SchemeKey {
+        let mut key = self.scheme.key(&self.weight_set);
+        key.generate = matches!(self.kind, RequestKind::Generate { .. });
+        key
+    }
 }
 
 /// Per-request result.
 #[derive(Clone, Debug)]
 pub struct EvalResponse {
-    /// Per-position NLL for the request's (unpadded) sequence.
+    /// Per-position NLL for the request's (unpadded) sequence — empty for
+    /// generation requests.
     pub nll: Vec<f32>,
     /// Scheme-reported auxiliary scalar (kernel fraction / removed
     /// fraction), measured over the whole executed batch. 0.0 for FP.
     pub aux: f32,
+    /// Greedy-decoded token ids — empty for scoring requests.
+    pub generated: Vec<u32>,
 }
 
 struct Pending {
@@ -143,11 +189,24 @@ impl EvalCoordinator {
     /// Submit one request; returns a handle resolving when its batch has
     /// executed. Blocks when the submit queue is full (backpressure).
     pub fn submit(&self, req: EvalRequest) -> Result<ResponseHandle> {
-        anyhow::ensure!(
-            req.tokens.len() >= 2 && req.tokens.len() <= self.config.seq_len,
-            "sequence length {} out of range",
-            req.tokens.len()
-        );
+        match req.kind {
+            RequestKind::Score => anyhow::ensure!(
+                req.tokens.len() >= 2 && req.tokens.len() <= self.config.seq_len,
+                "sequence length {} out of range",
+                req.tokens.len()
+            ),
+            RequestKind::Generate { max_new_tokens } => {
+                anyhow::ensure!(!req.tokens.is_empty(), "generation needs a non-empty prompt");
+                anyhow::ensure!(max_new_tokens >= 1, "max_new_tokens must be >= 1");
+                anyhow::ensure!(
+                    req.tokens.len() + max_new_tokens <= self.config.seq_len,
+                    "prompt length {} + max_new_tokens {max_new_tokens} exceeds model \
+                     context {}",
+                    req.tokens.len(),
+                    self.config.seq_len
+                );
+            }
+        }
         let (resp_tx, resp_rx) = std::sync::mpsc::sync_channel(1);
         self.metrics.submitted.fetch_add(1, std::sync::atomic::Ordering::Relaxed);
         self.tx
@@ -167,9 +226,7 @@ impl EvalCoordinator {
     ) -> Result<(f64, f32)> {
         let handles: Vec<ResponseHandle> = sequences
             .into_iter()
-            .map(|tokens| {
-                self.submit(EvalRequest { tokens, scheme, weight_set: weight_set.to_string() })
-            })
+            .map(|tokens| self.submit(EvalRequest::score(tokens, scheme, weight_set)))
             .collect::<Result<_>>()?;
         let mut total = 0.0f64;
         let mut count = 0usize;
@@ -201,7 +258,7 @@ fn batch_loop(
             .unwrap_or(Duration::from_secs(3600));
         match rx.recv_timeout(timeout) {
             Ok(p) => {
-                let key = p.req.scheme.key(&p.req.weight_set);
+                let key = p.req.key();
                 metrics.queue_depth.store(
                     acc.pending_requests() as u64 + 1,
                     std::sync::atomic::Ordering::Relaxed,
@@ -247,20 +304,22 @@ fn executor_loop(
 ) {
     match Runtime::new(store) {
         Ok(mut runtime) => {
-            // the static-scale scheme has no AOT artifact yet, so even a
-            // PJRT-linked executor serves it through the native integer
-            // model — every protocol scheme works on every build. The
+            // the static-scale scheme and the generation kind have no AOT
+            // artifact (the lowered graphs are fixed-shape scoring), so
+            // even a PJRT-linked executor serves them through the native
+            // models — every protocol request works on every build. The
             // native executor is built lazily from the retained literals
-            // on the first static batch, so plain fp/crossquant serving
+            // on the first such batch, so plain fp/crossquant scoring
             // never holds a second f32 copy of the weights.
             let weights: HashMap<String, xla::Literal> =
                 weight_sets.into_iter().map(|(k, v)| (k, vec_literal(&v))).collect();
             let mut native: Option<NativeExecutor> = None;
             while let Ok(batch) = rx.recv() {
-                let is_static =
-                    matches!(batch.requests[0].req.scheme, ActScheme::CrossQuantStatic { .. });
-                let result = if is_static {
-                    native_for_static(&mut native, cfg, &weights)
+                let req0 = &batch.requests[0].req;
+                let serve_native = matches!(req0.scheme, ActScheme::CrossQuantStatic { .. })
+                    || matches!(req0.kind, RequestKind::Generate { .. });
+                let result = if serve_native {
+                    native_for_fallback(&mut native, cfg, &weights)
                         .and_then(|n| n.execute_batch(&batch))
                 } else {
                     execute_batch(&mut runtime, cfg, &weights, &batch)
@@ -287,8 +346,8 @@ fn executor_loop(
 
 /// Lazily build the PJRT branch's sidecar [`NativeExecutor`] from the
 /// already-uploaded weight literals — paid only on the first
-/// `CrossQuantStatic` batch, never for plain PJRT traffic.
-fn native_for_static<'a>(
+/// `CrossQuantStatic` or generation batch, never for plain PJRT scoring.
+fn native_for_fallback<'a>(
     native: &'a mut Option<NativeExecutor>,
     cfg: ModelConfig,
     weights: &HashMap<String, xla::Literal>,
@@ -348,20 +407,84 @@ impl ActQuantizer for RuntimeCrossQuant {
     }
 }
 
+/// Builds the [`ActSite`] for one native scheme and reports its
+/// batch-level aux scalar — scheme validation and aux accounting live in
+/// exactly one place, shared by the scoring and generation paths.
+enum SchemeSite {
+    Identity(IdentitySite),
+    Cross(QuantSite<RuntimeCrossQuant>),
+    Remove(RemoveKernelSite),
+}
+
+impl SchemeSite {
+    fn build(scheme: ActScheme) -> Result<SchemeSite> {
+        match scheme {
+            ActScheme::Fp => Ok(SchemeSite::Identity(IdentitySite)),
+            // the native forward has no separate fused-graph variant —
+            // both artifact flavours share one implementation here
+            ActScheme::CrossQuant { alpha, qmax }
+            | ActScheme::CrossQuantFused { alpha, qmax } => {
+                // guard malformed client scalars: qmax ≤ 0 makes
+                // clamp(-qmax, qmax) panic (min > max) inside the executor
+                // thread, and a non-finite alpha yields NaN scale fields
+                ensure!(
+                    qmax.is_finite() && qmax > 0.0,
+                    "crossquant qmax must be finite and > 0, got {qmax}"
+                );
+                ensure!(alpha.is_finite(), "crossquant alpha must be finite, got {alpha}");
+                Ok(SchemeSite::Cross(QuantSite::new(RuntimeCrossQuant { alpha, qmax })))
+            }
+            ActScheme::RemoveKernel { theta } => {
+                // guard before RemoveKernel::new: its assert would panic
+                // the executor thread on a malformed client request
+                ensure!(theta >= 0.0, "remove-kernel theta must be >= 0, got {theta}");
+                Ok(SchemeSite::Remove(RemoveKernelSite::new(RemoveKernel::new(theta))))
+            }
+            ActScheme::CrossQuantStatic { .. } => {
+                unreachable!("static scheme is served by the integer model")
+            }
+        }
+    }
+
+    fn site(&mut self) -> &mut dyn ActSite {
+        match self {
+            SchemeSite::Identity(s) => s,
+            SchemeSite::Cross(s) => s,
+            SchemeSite::Remove(s) => s,
+        }
+    }
+
+    fn aux(&self) -> f32 {
+        match self {
+            SchemeSite::Identity(_) => 0.0,
+            SchemeSite::Cross(s) => s.kernel_fraction(),
+            SchemeSite::Remove(s) => s.removed_fraction(),
+        }
+    }
+}
+
 /// The offline executor: reconstructs each registered weight set into a
 /// [`NativeModel`] (lazily, cached per set) and runs batches through the
-/// native forward pass. Activation sites use the fused
-/// `quantize_with_report` sweep via [`QuantSite`], and `aux` is measured
-/// over the whole executed batch — the same batch-level scalar the PJRT
-/// artifacts emit.
+/// native forward pass — scoring and KV-cached greedy generation.
+/// Activation sites use the fused `quantize_with_report` sweep via
+/// [`QuantSite`], and `aux` is measured over the whole executed batch —
+/// the same batch-level scalar the PJRT artifacts emit.
 struct NativeExecutor {
     cfg: ModelConfig,
     weight_sets: HashMap<String, Vec<f32>>,
     models: HashMap<String, NativeModel>,
-    /// Calibrated static-scale integer models, keyed by
-    /// (weight set, α in micro-units). Calibration runs once per key.
-    static_models: HashMap<(String, i64), QuantizedModel>,
+    /// Calibrated static-scale integer models, keyed by (weight set, α in
+    /// micro-units). Calibration runs once per cached key; the cache is
+    /// genuine LRU, so an α sweep displaces the coldest model, never a
+    /// hot one.
+    static_models: LruCache<(String, i64), QuantizedModel>,
 }
+
+/// α is client-supplied: bound the static-model cache so an α sweep
+/// cannot grow it without limit. Each entry is a full integer model that
+/// also retains its dynamic-path state (FP weights + unfolded panels) —
+/// the accepted cost of switching back, kept bounded by the cap.
+const MAX_STATIC_MODELS: usize = 8;
 
 impl NativeExecutor {
     fn new(cfg: ModelConfig, weight_sets: Vec<(String, Vec<f32>)>) -> NativeExecutor {
@@ -369,7 +492,7 @@ impl NativeExecutor {
             cfg,
             weight_sets: weight_sets.into_iter().collect(),
             models: HashMap::new(),
-            static_models: HashMap::new(),
+            static_models: LruCache::new(MAX_STATIC_MODELS),
         }
     }
 
@@ -392,18 +515,7 @@ impl NativeExecutor {
     /// subsequent request on this key is pure per-token-cost serving.
     fn static_model_for(&mut self, name: &str, alpha: f32) -> Result<&QuantizedModel> {
         let key = (name.to_string(), (alpha as f64 * 1e6).round() as i64);
-        if !self.static_models.contains_key(&key) {
-            // α is client-supplied: bound the cache so an α sweep cannot
-            // grow it without limit. Each entry is a full integer model
-            // that also retains its dynamic-path state (FP weights +
-            // unfolded panels) — the accepted cost of switching back, kept
-            // bounded by the cap. Eviction is arbitrary — a re-requested α
-            // just pays one re-calibration.
-            const MAX_STATIC_MODELS: usize = 8;
-            if self.static_models.len() >= MAX_STATIC_MODELS {
-                let evict = self.static_models.keys().next().expect("cache non-empty").clone();
-                self.static_models.remove(&evict);
-            }
+        if !self.static_models.contains(&key) {
             let flat = self
                 .weight_sets
                 .get(name)
@@ -418,6 +530,9 @@ impl NativeExecutor {
             let mut gen = CorpusGen::new(self.cfg.vocab, 0x5CA1E);
             let calib: Vec<Vec<u32>> = (0..8).map(|_| gen.sequence(self.cfg.seq_len)).collect();
             qm.calibrate_static(alpha, &calib)?;
+            // LruCache::insert evicts the least-recently-used model once
+            // the cap is reached — a re-requested hot α never re-pays its
+            // calibration just because a sweep walked past it
             self.static_models.insert(key.clone(), qm);
         }
         Ok(self.static_models.get(&key).expect("inserted above"))
@@ -431,6 +546,7 @@ impl NativeExecutor {
                 "token id out of range (vocab {vocab})"
             );
         }
+        // requests in a batch share a key, so scheme and kind are uniform
         let scheme = batch.requests[0].req.scheme;
         if let ActScheme::CrossQuantStatic { alpha, qmax } = scheme {
             ensure!(alpha.is_finite() && (0.0..=1.0).contains(&alpha), "bad alpha {alpha}");
@@ -441,53 +557,38 @@ impl NativeExecutor {
                 "native static path serves the INT8 grid (qmax 127), got {qmax}"
             );
             let model = self.static_model_for(&batch.key.weight_set, alpha)?;
-            let mut nlls = Vec::with_capacity(batch.requests.len());
+            let mut responses = Vec::with_capacity(batch.requests.len());
             for p in &batch.requests {
-                nlls.push(model.forward_nll(&p.req.tokens)?);
+                // the integer path reports no kernel statistic (aux = 0)
+                responses.push(match p.req.kind {
+                    RequestKind::Score => EvalResponse {
+                        nll: model.forward_nll(&p.req.tokens)?,
+                        aux: 0.0,
+                        generated: Vec::new(),
+                    },
+                    RequestKind::Generate { max_new_tokens } => EvalResponse {
+                        nll: Vec::new(),
+                        aux: 0.0,
+                        generated: model.generate_greedy(&p.req.tokens, max_new_tokens)?,
+                    },
+                });
             }
-            // the integer path reports no kernel statistic (aux = 0)
-            return Ok(nlls.into_iter().map(|nll| EvalResponse { nll, aux: 0.0 }).collect());
+            return Ok(responses);
         }
+        let mut site = SchemeSite::build(scheme)?;
         let model = self.model_for(&batch.key.weight_set)?;
-        let mut nlls = Vec::with_capacity(batch.requests.len());
-        let aux = match scheme {
-            ActScheme::Fp => {
-                for p in &batch.requests {
-                    nlls.push(model.forward_nll(&p.req.tokens, &mut IdentitySite)?);
-                }
-                0.0
-            }
-            // the native forward has no separate fused-graph variant —
-            // both artifact flavours share one implementation here
-            ActScheme::CrossQuant { alpha, qmax }
-            | ActScheme::CrossQuantFused { alpha, qmax } => {
-                // guard malformed client scalars: qmax ≤ 0 makes
-                // clamp(-qmax, qmax) panic (min > max) inside the executor
-                // thread, and a non-finite alpha yields NaN scale fields
-                ensure!(
-                    qmax.is_finite() && qmax > 0.0,
-                    "crossquant qmax must be finite and > 0, got {qmax}"
-                );
-                ensure!(alpha.is_finite(), "crossquant alpha must be finite, got {alpha}");
-                let mut site = QuantSite::new(RuntimeCrossQuant { alpha, qmax });
-                for p in &batch.requests {
-                    nlls.push(model.forward_nll(&p.req.tokens, &mut site)?);
-                }
-                site.kernel_fraction()
-            }
-            ActScheme::RemoveKernel { theta } => {
-                // guard before RemoveKernel::new: its assert would panic
-                // the executor thread on a malformed client request
-                ensure!(theta >= 0.0, "remove-kernel theta must be >= 0, got {theta}");
-                let mut site = RemoveKernelSite::new(RemoveKernel::new(theta));
-                for p in &batch.requests {
-                    nlls.push(model.forward_nll(&p.req.tokens, &mut site)?);
-                }
-                site.removed_fraction()
-            }
-            ActScheme::CrossQuantStatic { .. } => unreachable!("handled above"),
-        };
-        Ok(nlls.into_iter().map(|nll| EvalResponse { nll, aux }).collect())
+        let mut rows = Vec::with_capacity(batch.requests.len());
+        for p in &batch.requests {
+            rows.push(match p.req.kind {
+                RequestKind::Score => (model.forward_nll(&p.req.tokens, site.site())?, Vec::new()),
+                RequestKind::Generate { max_new_tokens } => (
+                    Vec::new(),
+                    model.generate_greedy(&p.req.tokens, max_new_tokens, site.site())?,
+                ),
+            });
+        }
+        let aux = site.aux();
+        Ok(rows.into_iter().map(|(nll, generated)| EvalResponse { nll, aux, generated }).collect())
     }
 }
 
@@ -529,7 +630,7 @@ fn execute_batch(
             let row = &nll_flat[i * per_row..(i + 1) * per_row];
             // positions beyond the request's own length are padding
             let keep = p.req.tokens.len() - 1;
-            EvalResponse { nll: row[..keep].to_vec(), aux }
+            EvalResponse { nll: row[..keep].to_vec(), aux, generated: Vec::new() }
         })
         .collect();
     Ok(responses)

@@ -7,8 +7,11 @@
 //! request:  {"tokens": [1,2,3,...], "scheme": "crossquant"|"per-token"|
 //!            "crossquant-static"|"fp"|"remove-kernel", "alpha": 0.15,
 //!            "qmax": 127.0, "theta": 0.004, "weight_set": "w16"}
+//!           …with "max_new_tokens": N present, the tokens are a prompt
+//!           and the request is greedy generation instead of scoring
 //!           {"cmd": "metrics"}   |   {"cmd": "ping"}
 //! response: {"ok": true, "nll": [...], "ppl": ..., "aux": ...}
+//!           {"ok": true, "generated": [...], "prompt_tokens": N, "aux": ...}
 //!           {"ok": false, "error": "..."}
 
 use std::io::{BufRead, BufReader, Write};
@@ -108,7 +111,29 @@ pub fn handle_line(coordinator: &EvalCoordinator, line: &str) -> Result<Json> {
     let weight_set =
         req.get("weight_set").and_then(|w| w.as_str()).unwrap_or("w16").to_string();
 
-    let resp = coordinator.submit(EvalRequest { tokens, scheme, weight_set })?.wait()?;
+    // "max_new_tokens" present ⇒ greedy generation; absent ⇒ scoring.
+    // Context overflow (prompt + max_new_tokens > n_ctx) is rejected by
+    // `submit` as a structured {"ok": false} error, never a panic.
+    if let Some(max_new) = req.get("max_new_tokens") {
+        let max_new = max_new
+            .as_usize()
+            .ok_or_else(|| anyhow!("'max_new_tokens' must be a non-negative integer"))?;
+        let prompt_tokens = tokens.len();
+        let resp = coordinator
+            .submit(EvalRequest::generate(tokens, scheme, weight_set, max_new))?
+            .wait()?;
+        return Ok(Json::obj(vec![
+            ("ok", Json::Bool(true)),
+            (
+                "generated",
+                Json::arr(resp.generated.iter().map(|&t| Json::num(t as f64)).collect()),
+            ),
+            ("prompt_tokens", Json::num(prompt_tokens as f64)),
+            ("aux", Json::num(resp.aux as f64)),
+        ]));
+    }
+
+    let resp = coordinator.submit(EvalRequest::score(tokens, scheme, weight_set))?.wait()?;
     let mean = resp.nll.iter().map(|&v| v as f64).sum::<f64>() / resp.nll.len().max(1) as f64;
     Ok(Json::obj(vec![
         ("ok", Json::Bool(true)),

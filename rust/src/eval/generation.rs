@@ -1,0 +1,175 @@
+//! Generation-workload instrumentation: drive a model's KV-cached greedy
+//! decode and split the cost into prefill vs per-token decode — the
+//! numbers `benches/decode.rs` ships as `BENCH_decode.json`.
+//!
+//! Both model flavours plug in through [`IncrementalDecoder`], so the
+//! timed loop (and therefore the accounting) is identical for the FP
+//! fake-quant path and the true-integer paths.
+
+use std::time::{Duration, Instant};
+
+use anyhow::Result;
+
+use crate::model::block::{self, DecodeState};
+use crate::model::{ActSite, NativeModel, QuantizedModel};
+use crate::tensor::Matrix;
+
+/// Anything that can run an incremental (KV-cached) forward step.
+pub trait IncrementalDecoder {
+    /// Model context window (prompt + generated tokens must fit).
+    fn n_ctx(&self) -> usize;
+    /// A fresh, empty decode state sized for the model.
+    fn new_state(&self) -> DecodeState;
+    /// Append `tokens` after the cached prefix; logits for the new rows.
+    /// With `last_only`, implementations may return just the final row —
+    /// all the greedy loop ever reads.
+    fn step(&mut self, tokens: &[u32], state: &mut DecodeState, last_only: bool)
+        -> Result<Matrix>;
+}
+
+/// The native (FP / fake-quant) model plus its activation-site transform.
+pub struct NativeDecoder<'a> {
+    pub model: &'a NativeModel,
+    pub site: &'a mut dyn ActSite,
+}
+
+impl IncrementalDecoder for NativeDecoder<'_> {
+    fn n_ctx(&self) -> usize {
+        self.model.weights.config.seq_len
+    }
+
+    fn new_state(&self) -> DecodeState {
+        self.model.new_decode_state()
+    }
+
+    fn step(
+        &mut self,
+        tokens: &[u32],
+        state: &mut DecodeState,
+        last_only: bool,
+    ) -> Result<Matrix> {
+        self.model.forward_incremental_with(tokens, state, self.site, last_only)
+    }
+}
+
+/// The true-integer model (any [`crate::model::QuantPath`]).
+pub struct QuantizedDecoder<'a>(pub &'a QuantizedModel);
+
+impl IncrementalDecoder for QuantizedDecoder<'_> {
+    fn n_ctx(&self) -> usize {
+        self.0.config.seq_len
+    }
+
+    fn new_state(&self) -> DecodeState {
+        self.0.new_decode_state()
+    }
+
+    fn step(
+        &mut self,
+        tokens: &[u32],
+        state: &mut DecodeState,
+        last_only: bool,
+    ) -> Result<Matrix> {
+        self.0.forward_incremental_with(tokens, state, last_only)
+    }
+}
+
+/// Wall-clock split of one greedy generation.
+#[derive(Clone, Copy, Debug)]
+pub struct DecodeTiming {
+    pub prompt_tokens: usize,
+    pub new_tokens: usize,
+    /// Time to consume the prompt (one batched incremental forward).
+    pub prefill: Duration,
+    /// Time for all subsequent one-token decode steps.
+    pub decode: Duration,
+}
+
+impl DecodeTiming {
+    pub fn prefill_tokens_per_s(&self) -> f64 {
+        self.prompt_tokens as f64 / self.prefill.as_secs_f64().max(1e-12)
+    }
+
+    pub fn decode_tokens_per_s(&self) -> f64 {
+        self.new_tokens as f64 / self.decode.as_secs_f64().max(1e-12)
+    }
+}
+
+/// Greedy-generate `max_new_tokens` with per-phase timing. The loop is
+/// the models' own [`block::generate_greedy_with`] — identical semantics
+/// by construction — with a clock wrapped around every step: the first
+/// step is the prefill, the rest are decode.
+pub fn generate_timed(
+    decoder: &mut dyn IncrementalDecoder,
+    prompt: &[u32],
+    max_new_tokens: usize,
+) -> Result<(Vec<u32>, DecodeTiming)> {
+    let n_ctx = decoder.n_ctx();
+    let mut state = decoder.new_state();
+    let mut prefill = Duration::ZERO;
+    let mut decode = Duration::ZERO;
+    let mut prefilled = false;
+    let tokens =
+        block::generate_greedy_with(n_ctx, prompt, max_new_tokens, &mut state, &mut |toks, st| {
+            let t0 = Instant::now();
+            let r = decoder.step(toks, st, true);
+            let dt = t0.elapsed();
+            if prefilled {
+                decode += dt;
+            } else {
+                prefill = dt;
+                prefilled = true;
+            }
+            r
+        })?;
+    let timing = DecodeTiming {
+        prompt_tokens: prompt.len(),
+        new_tokens: tokens.len(),
+        prefill,
+        decode,
+    };
+    Ok((tokens, timing))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::config::ModelConfig;
+    use crate::model::weights::synthetic_weights;
+    use crate::model::IdentitySite;
+
+    fn cfg() -> ModelConfig {
+        ModelConfig {
+            vocab: 32,
+            d_model: 16,
+            n_layers: 2,
+            n_heads: 2,
+            d_ff: 32,
+            seq_len: 16,
+            eval_batch: 2,
+        }
+    }
+
+    #[test]
+    fn timed_generation_matches_generate_greedy() {
+        let model = NativeModel::new(synthetic_weights(cfg(), 31));
+        let prompt: Vec<u32> = vec![1, 5, 9, 2];
+        let reference = model.generate_greedy(&prompt, 8, &mut IdentitySite).unwrap();
+        let mut site = IdentitySite;
+        let mut dec = NativeDecoder { model: &model, site: &mut site };
+        let (tokens, timing) = generate_timed(&mut dec, &prompt, 8).unwrap();
+        assert_eq!(tokens, reference);
+        assert_eq!(timing.prompt_tokens, 4);
+        assert_eq!(timing.new_tokens, 8);
+        assert!(timing.prefill_tokens_per_s() > 0.0);
+        assert!(timing.decode_tokens_per_s() > 0.0);
+    }
+
+    #[test]
+    fn timed_generation_rejects_context_overflow() {
+        let model = NativeModel::new(synthetic_weights(cfg(), 32));
+        let mut site = IdentitySite;
+        let mut dec = NativeDecoder { model: &model, site: &mut site };
+        assert!(generate_timed(&mut dec, &[1; 12], 8).is_err());
+    }
+}

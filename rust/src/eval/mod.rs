@@ -1,9 +1,12 @@
-//! Evaluation suite: perplexity over the synthetic corpora plus the
-//! synthetic zero-/few-shot tasks mirroring the paper's lm-eval setup.
+//! Evaluation suite: perplexity over the synthetic corpora, the synthetic
+//! zero-/few-shot tasks mirroring the paper's lm-eval setup, and the
+//! generation-workload instrumentation (prefill/decode timing).
 
+pub mod generation;
 pub mod harness;
 pub mod perplexity;
 pub mod tasks;
 
+pub use generation::{generate_timed, DecodeTiming, IncrementalDecoder};
 pub use perplexity::{perplexity_native, PerplexityResult};
 pub use tasks::{Task, TaskResult, TaskSuite};

@@ -316,9 +316,19 @@ fn serve_eval(args: &Args, requests: usize, alpha: f32) -> Result<()> {
 
 fn serve(args: &Args, addr: &str) -> Result<()> {
     use crossquant::coordinator::EvalServer;
-    let store = ArtifactStore::discover(artifacts_dir(args).as_deref())?;
-    store.validate()?;
-    let weights = store.load_weights()?;
+    // --synthetic serves random weights with no artifacts on disk: the
+    // coordinator's native executor handles every scheme and the
+    // generation kind, so the full protocol is demoable anywhere
+    let (store, weights) = if args.flag("synthetic") {
+        let dir = artifacts_dir(args).unwrap_or_else(|| PathBuf::from("artifacts"));
+        let weights = synthetic_weights(ModelConfig::default_build(), args.num("seed", 0u64)?);
+        (ArtifactStore { dir }, weights)
+    } else {
+        let store = ArtifactStore::discover(artifacts_dir(args).as_deref())?;
+        store.validate()?;
+        let weights = store.load_weights()?;
+        (store, weights)
+    };
     let cfg = weights.config;
 
     // register the standard weight variants so clients can pick a precision
@@ -334,9 +344,10 @@ fn serve(args: &Args, addr: &str) -> Result<()> {
 
     let coordinator = EvalCoordinator::start(store, cfg, sets, CoordinatorConfig::default());
     let listener = std::net::TcpListener::bind(addr)?;
-    println!("serving quantized-LM evaluation on {addr}");
+    println!("serving quantized-LM evaluation + generation on {addr}");
     println!("  weight sets: w16, w8, w4g128 — protocol: one JSON per line");
-    println!("  try: echo '{{\"tokens\": [1,2,3,4,5], \"scheme\": \"crossquant\", \"weight_set\": \"w8\"}}' | nc {addr}");
+    println!("  score:    echo '{{\"tokens\": [1,2,3,4,5], \"scheme\": \"crossquant\", \"weight_set\": \"w8\"}}' | nc {addr}");
+    println!("  generate: echo '{{\"tokens\": [1,2,3,4,5], \"scheme\": \"crossquant-static\", \"max_new_tokens\": 8}}' | nc {addr}");
     EvalServer::new(coordinator).serve(listener)
 }
 

@@ -1,0 +1,491 @@
+//! The shared incremental transformer core.
+//!
+//! Before this module, `model/forward.rs` (FP + fake-quant ActSite paths)
+//! and `model/qforward.rs` (true-integer W8A8) each carried a verbatim
+//! copy of `layer_norm` / `causal_attention` / `gelu` and the pre-LN block
+//! loop. Both now drive the single implementation here, generic over the
+//! linear operator (`Matrix` for the native model, `QuantizedLinear` for
+//! the integer model), so the transformer math is defined exactly once.
+//!
+//! The second job of this module is *incremental* decode: [`LayerKvCache`]
+//! holds one layer's K/V prefix, [`DecodeState`] holds the whole stack's,
+//! and [`attention_with_prefix`] runs causal attention for new rows at
+//! absolute positions `offset..offset+t` over the cached prefix plus the
+//! new rows. Full-sequence prefill is the `offset == 0` special case, so
+//! scoring and generation share one attention kernel — and per-token
+//! decode costs O(S·d) per layer instead of the O(S²·d) a full recompute
+//! pays.
+//!
+//! All row-level math is identical to the pre-refactor implementations
+//! (same loop bodies, same fold order), which keeps the FP path bit-exact
+//! — pinned by rust/tests/decode.rs.
+
+use anyhow::Result;
+
+use super::config::ModelConfig;
+use crate::tensor::{par, Matrix};
+
+/// Per-layer K/V prefix for incremental decode. Capacity is allocated up
+/// front (`n_ctx` rows), so appends never reallocate mid-generation.
+pub struct LayerKvCache {
+    k: Matrix,
+    v: Matrix,
+    len: usize,
+}
+
+impl LayerKvCache {
+    pub fn new(capacity: usize, d_model: usize) -> LayerKvCache {
+        LayerKvCache {
+            k: Matrix::zeros(capacity, d_model),
+            v: Matrix::zeros(capacity, d_model),
+            len: 0,
+        }
+    }
+
+    /// Cached prefix length in tokens.
+    pub fn len(&self) -> usize {
+        self.len
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len == 0
+    }
+
+    /// Maximum prefix length (the model's context window).
+    pub fn capacity(&self) -> usize {
+        self.k.rows
+    }
+
+    /// Bytes held by this layer's cache (K + V, capacity rows — the
+    /// allocation is up-front, so this is also the peak).
+    pub fn memory_bytes(&self) -> usize {
+        (self.k.len() + self.v.len()) * std::mem::size_of::<f32>()
+    }
+
+    /// Append `t` new K/V rows (one per new token).
+    fn append(&mut self, k_new: &Matrix, v_new: &Matrix) {
+        debug_assert_eq!(k_new.rows, v_new.rows);
+        debug_assert_eq!(k_new.cols, self.k.cols);
+        assert!(self.len + k_new.rows <= self.k.rows, "KV cache overflow");
+        for i in 0..k_new.rows {
+            self.k.row_mut(self.len + i).copy_from_slice(k_new.row(i));
+            self.v.row_mut(self.len + i).copy_from_slice(v_new.row(i));
+        }
+        self.len += k_new.rows;
+    }
+}
+
+/// The whole stack's decode state: one [`LayerKvCache`] per layer plus the
+/// number of tokens consumed so far. Create via
+/// `NativeModel::new_decode_state` / `QuantizedModel::new_decode_state`
+/// (or [`DecodeState::new`] directly), feed it through
+/// `forward_incremental`, and positions advance automatically.
+pub struct DecodeState {
+    layers: Vec<LayerKvCache>,
+    len: usize,
+}
+
+impl DecodeState {
+    pub fn new(n_layers: usize, n_ctx: usize, d_model: usize) -> DecodeState {
+        DecodeState {
+            layers: (0..n_layers).map(|_| LayerKvCache::new(n_ctx, d_model)).collect(),
+            len: 0,
+        }
+    }
+
+    /// Tokens consumed so far (the next token's absolute position).
+    pub fn len(&self) -> usize {
+        self.len
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len == 0
+    }
+
+    /// Context-window capacity shared by every layer cache.
+    pub fn capacity(&self) -> usize {
+        self.layers.first().map_or(0, |l| l.capacity())
+    }
+
+    /// Tokens that can still be appended before the window is full.
+    pub fn remaining(&self) -> usize {
+        self.capacity() - self.len
+    }
+
+    /// Total KV-cache bytes across all layers
+    /// (= 2 · n_layers · n_ctx · d_model · 4 bytes).
+    pub fn memory_bytes(&self) -> usize {
+        self.layers.iter().map(|l| l.memory_bytes()).sum()
+    }
+
+    fn advance(&mut self, t: usize) {
+        self.len += t;
+        debug_assert!(self.layers.iter().all(|l| l.len() == self.len));
+    }
+}
+
+/// One transformer layer's parameters, generic over the linear operator
+/// `L` (`Matrix` on the native path, `QuantizedLinear` on the integer
+/// path).
+pub struct LayerView<'a, L> {
+    pub ln1_g: &'a Matrix,
+    pub ln1_b: &'a Matrix,
+    pub wq: &'a L,
+    pub wk: &'a L,
+    pub wv: &'a L,
+    pub wo: &'a L,
+    pub ln2_g: &'a Matrix,
+    pub ln2_b: &'a Matrix,
+    pub w1: &'a L,
+    pub w2: &'a L,
+}
+
+/// A borrowed view of a full model, consumed by [`forward_pass`]. Building
+/// one is a per-call Vec of references — cheap next to a single matmul.
+pub struct ModelView<'a, L> {
+    pub config: ModelConfig,
+    pub tok_emb: &'a Matrix,
+    pub pos_emb: &'a Matrix,
+    pub layers: Vec<LayerView<'a, L>>,
+    pub lnf_g: &'a Matrix,
+    pub lnf_b: &'a Matrix,
+    pub w_out: &'a L,
+}
+
+/// The single forward driver behind both models, both stateless scoring
+/// and KV-cached decode.
+///
+/// * `state: None` — stateless full-sequence forward (prefill semantics,
+///   nothing retained).
+/// * `state: Some(s)` — incremental step: `tokens` are appended at
+///   absolute positions `s.len()..`, each layer's K/V rows land in the
+///   cache, and only the new rows' logits come back.
+///
+/// `last_logits_only` slices the final hidden state to its last row
+/// before the head (greedy generation reads nothing else — the K/V rows
+/// of every position are already cached by then, so per-row values are
+/// unchanged and the head matmul drops from O(t·d·vocab) to
+/// O(d·vocab) during prefill). Scoring passes `false`.
+///
+/// `matmul` applies a linear operator; `site` is the activation-site hook
+/// (fake-quant transform on the native path, calibration observer or
+/// identity on the integer path), called with the global site index in
+/// forward order — site numbering is identical in both modes, so per-site
+/// calibrated transforms work unchanged under decode.
+pub fn forward_pass<L>(
+    view: &ModelView<'_, L>,
+    tokens: &[u32],
+    mut state: Option<&mut DecodeState>,
+    last_logits_only: bool,
+    matmul: &mut dyn FnMut(&L, &Matrix) -> Matrix,
+    site: &mut dyn FnMut(usize, Matrix) -> Matrix,
+) -> Result<Matrix> {
+    let cfg = view.config;
+    let t = tokens.len();
+    let offset = state.as_ref().map_or(0, |s| s.len());
+    anyhow::ensure!(t >= 1, "forward needs at least one token");
+    anyhow::ensure!(
+        offset + t <= cfg.seq_len,
+        "position {} exceeds model context {} (prefix {offset} + {t} new tokens)",
+        offset + t,
+        cfg.seq_len
+    );
+    anyhow::ensure!(
+        tokens.iter().all(|&tok| (tok as usize) < cfg.vocab),
+        "token id out of range (vocab {})",
+        cfg.vocab
+    );
+    if let Some(s) = state.as_ref() {
+        anyhow::ensure!(
+            s.layers.len() == view.layers.len() && s.capacity() == cfg.seq_len,
+            "decode state shape does not match the model"
+        );
+    }
+
+    let d = cfg.d_model;
+    let mut x = Matrix::zeros(t, d);
+    for (i, &tok) in tokens.iter().enumerate() {
+        for j in 0..d {
+            x.set(i, j, view.tok_emb.get(tok as usize, j) + view.pos_emb.get(offset + i, j));
+        }
+    }
+
+    let mut site_idx = 0usize;
+    for (l, layer) in view.layers.iter().enumerate() {
+        // --- attention block ---
+        let h = layer_norm(&x, layer.ln1_g, layer.ln1_b);
+        let hq = site(site_idx, h);
+        site_idx += 1;
+        let q = matmul(layer.wq, &hq);
+        let k = matmul(layer.wk, &hq);
+        let v = matmul(layer.wv, &hq);
+        let ctx = match state.as_deref_mut() {
+            Some(s) => {
+                let cache = &mut s.layers[l];
+                cache.append(&k, &v);
+                attention_with_prefix(&q, &cache.k, &cache.v, offset, cfg.n_heads)
+            }
+            None => attention_with_prefix(&q, &k, &v, 0, cfg.n_heads),
+        };
+        let ctxq = site(site_idx, ctx);
+        site_idx += 1;
+        let attn_out = matmul(layer.wo, &ctxq);
+        add_inplace(&mut x, &attn_out);
+
+        // --- MLP block ---
+        let h = layer_norm(&x, layer.ln2_g, layer.ln2_b);
+        let hq = site(site_idx, h);
+        site_idx += 1;
+        let mut hh = matmul(layer.w1, &hq);
+        gelu_inplace(&mut hh);
+        let hhq = site(site_idx, hh);
+        site_idx += 1;
+        let mlp_out = matmul(layer.w2, &hhq);
+        add_inplace(&mut x, &mlp_out);
+    }
+    if let Some(s) = state {
+        s.advance(t);
+    }
+
+    let x = if last_logits_only && x.rows > 1 {
+        Matrix::from_vec(1, d, x.row(t - 1).to_vec())
+    } else {
+        x
+    };
+    let h = layer_norm(&x, view.lnf_g, view.lnf_b);
+    let hq = site(site_idx, h);
+    Ok(matmul(view.w_out, &hq))
+}
+
+/// The greedy autoregressive loop shared by both models (and, with a
+/// timing wrapper, by `eval::generation`): validate the budget against
+/// the context window, prefill the prompt, then decode one token per
+/// step, argmaxing each step's last logits row. `step` runs one
+/// incremental forward (its logits may be last-row-only).
+pub fn generate_greedy_with(
+    n_ctx: usize,
+    prompt: &[u32],
+    max_new_tokens: usize,
+    state: &mut DecodeState,
+    step: &mut dyn FnMut(&[u32], &mut DecodeState) -> Result<Matrix>,
+) -> Result<Vec<u32>> {
+    anyhow::ensure!(!prompt.is_empty(), "generation needs a non-empty prompt");
+    anyhow::ensure!(max_new_tokens >= 1, "max_new_tokens must be >= 1");
+    anyhow::ensure!(
+        prompt.len() + max_new_tokens <= n_ctx,
+        "prompt length {} + max_new_tokens {max_new_tokens} exceeds model context {n_ctx}",
+        prompt.len(),
+    );
+    let logits = step(prompt, state)?;
+    let mut next = argmax(logits.row(logits.rows - 1)) as u32;
+    let mut out = Vec::with_capacity(max_new_tokens);
+    out.push(next);
+    while out.len() < max_new_tokens {
+        let logits = step(&[next], state)?;
+        next = argmax(logits.row(logits.rows - 1)) as u32;
+        out.push(next);
+    }
+    Ok(out)
+}
+
+/// Row-parallel LayerNorm (eps 1e-5). Each row's statistics are
+/// independent, so the per-row math — and hence the result — is identical
+/// for any worker count.
+pub fn layer_norm(x: &Matrix, g: &Matrix, b: &Matrix) -> Matrix {
+    let mut out = Matrix::zeros(x.rows, x.cols);
+    if out.is_empty() {
+        return out;
+    }
+    let n = x.cols as f32;
+    let cols = x.cols;
+    par::par_rows_mut(&mut out.data, cols, par::workers_for(x.rows, x.len()), |row0, chunk| {
+        for (local, dst) in chunk.chunks_mut(cols).enumerate() {
+            let row = x.row(row0 + local);
+            let mu = row.iter().sum::<f32>() / n;
+            let var = row.iter().map(|&v| (v - mu) * (v - mu)).sum::<f32>() / n;
+            let inv = 1.0 / (var + 1e-5).sqrt();
+            for (j, (&v, o)) in row.iter().zip(dst.iter_mut()).enumerate() {
+                *o = (v - mu) * inv * g.get(0, j) + b.get(0, j);
+            }
+        }
+    });
+    out
+}
+
+/// Causal softmax attention for `q` rows at absolute positions
+/// `offset..offset+q.rows` over `keys`/`values` rows `0..offset+q.rows`
+/// (the cached prefix plus the new rows; extra capacity rows beyond that
+/// are ignored). `offset == 0` with `keys == k`, `values == v` is plain
+/// full-sequence causal attention.
+///
+/// Row-parallel over query positions: output row `i` reads only q row `i`
+/// and key/value rows `<= offset + i`, which every worker shares
+/// immutably. Per-(row, head) math matches the serial loop exactly, for
+/// any worker count.
+pub fn attention_with_prefix(
+    q: &Matrix,
+    keys: &Matrix,
+    values: &Matrix,
+    offset: usize,
+    n_heads: usize,
+) -> Matrix {
+    let t = q.rows;
+    let d = q.cols;
+    let total = offset + t;
+    assert!(keys.rows >= total && values.rows >= total, "K/V shorter than attended prefix");
+    assert_eq!(keys.cols, d, "K/V width mismatch");
+    let mut out = Matrix::zeros(t, d);
+    if out.is_empty() {
+        return out;
+    }
+    let hd = d / n_heads;
+    let scale = 1.0 / (hd as f32).sqrt();
+    // triangular cost ~ t·total·d/2 (scores) + t·total·d/2 (weighted sum)
+    let cost = t.saturating_mul(total).saturating_mul(d);
+    par::par_rows_mut(&mut out.data, d, par::workers_for(t, cost), |row0, chunk| {
+        let mut scores = vec![0.0f32; total];
+        for (local, dst) in chunk.chunks_mut(d).enumerate() {
+            let i = row0 + local;
+            let pos = offset + i;
+            for h in 0..n_heads {
+                let off = h * hd;
+                for (j, sc) in scores.iter_mut().enumerate().take(pos + 1) {
+                    let mut dot = 0.0f32;
+                    for a in 0..hd {
+                        dot += q.get(i, off + a) * keys.get(j, off + a);
+                    }
+                    *sc = dot * scale;
+                }
+                let max = scores[..=pos].iter().fold(f32::NEG_INFINITY, |m, &v| m.max(v));
+                let mut denom = 0.0f32;
+                for sc in scores.iter_mut().take(pos + 1) {
+                    *sc = (*sc - max).exp();
+                    denom += *sc;
+                }
+                for a in 0..hd {
+                    let mut acc = 0.0f32;
+                    for (j, &sc) in scores.iter().enumerate().take(pos + 1) {
+                        acc += sc * values.get(j, off + a);
+                    }
+                    dst[off + a] = acc / denom;
+                }
+            }
+        }
+    });
+    out
+}
+
+/// Full-sequence causal attention — [`attention_with_prefix`] with an
+/// empty prefix, kept as the named entry point the scoring paths use.
+pub fn causal_attention(q: &Matrix, k: &Matrix, v: &Matrix, n_heads: usize) -> Matrix {
+    attention_with_prefix(q, k, v, 0, n_heads)
+}
+
+/// jax.nn.gelu default (approximate=True): tanh approximation.
+pub fn gelu_inplace(x: &mut Matrix) {
+    const C: f32 = 0.7978845608; // sqrt(2/π)
+    for v in x.data.iter_mut() {
+        let u = *v;
+        *v = 0.5 * u * (1.0 + (C * (u + 0.044715 * u * u * u)).tanh());
+    }
+}
+
+/// Residual add.
+pub fn add_inplace(x: &mut Matrix, y: &Matrix) {
+    debug_assert_eq!(x.len(), y.len());
+    for (a, b) in x.data.iter_mut().zip(&y.data) {
+        *a += b;
+    }
+}
+
+/// Per-position NLL against the shifted targets (len = tokens.len() − 1):
+/// `logits` row `i` scores target `tokens[i + 1]`.
+pub fn nll_from_logits(logits: &Matrix, tokens: &[u32]) -> Vec<f32> {
+    debug_assert_eq!(logits.rows, tokens.len());
+    let s = tokens.len();
+    let mut nll = Vec::with_capacity(s.saturating_sub(1));
+    for i in 0..s.saturating_sub(1) {
+        let row = logits.row(i);
+        let max = row.iter().fold(f32::NEG_INFINITY, |m, &v| m.max(v));
+        let logsum = max + row.iter().map(|&v| (v - max).exp()).sum::<f32>().ln();
+        nll.push(logsum - row[tokens[i + 1] as usize]);
+    }
+    nll
+}
+
+/// Log-softmax of one logits row (greedy-prediction tasks).
+pub fn log_softmax(row: &[f32]) -> Vec<f32> {
+    let max = row.iter().fold(f32::NEG_INFINITY, |m, &v| m.max(v));
+    let logsum = max + row.iter().map(|&v| (v - max).exp()).sum::<f32>().ln();
+    row.iter().map(|&v| v - logsum).collect()
+}
+
+/// Greedy argmax with `total_cmp` tie-breaking (last maximum wins) — the
+/// one sampler both models' `generate_greedy` share, so cached and
+/// full-recompute decodes can only diverge through the logits themselves.
+pub fn argmax(row: &[f32]) -> usize {
+    row.iter().enumerate().max_by(|a, b| a.1.total_cmp(b.1)).map(|(i, _)| i).unwrap_or(0)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::tensor::SplitMix64;
+
+    #[test]
+    fn prefix_attention_matches_full_attention_rowwise() {
+        let mut rng = SplitMix64::new(3);
+        let s = 10;
+        let d = 8;
+        let q = Matrix::randn(s, d, 1.0, &mut rng);
+        let k = Matrix::randn(s, d, 1.0, &mut rng);
+        let v = Matrix::randn(s, d, 1.0, &mut rng);
+        let full = causal_attention(&q, &k, &v, 2);
+        // feed the same rows through a cache, one token at a time
+        let mut cache = LayerKvCache::new(s, d);
+        for i in 0..s {
+            let qi = Matrix::from_vec(1, d, q.row(i).to_vec());
+            let ki = Matrix::from_vec(1, d, k.row(i).to_vec());
+            let vi = Matrix::from_vec(1, d, v.row(i).to_vec());
+            cache.append(&ki, &vi);
+            let step = attention_with_prefix(&qi, &cache.k, &cache.v, i, 2);
+            assert_eq!(step.row(0), full.row(i), "row {i} must be bit-exact");
+        }
+        assert_eq!(cache.len(), s);
+    }
+
+    #[test]
+    fn kv_cache_accounting() {
+        let state = DecodeState::new(3, 16, 8);
+        assert_eq!(state.capacity(), 16);
+        assert_eq!(state.remaining(), 16);
+        // 2 (K+V) · 3 layers · 16 ctx · 8 d_model · 4 bytes
+        assert_eq!(state.memory_bytes(), 2 * 3 * 16 * 8 * 4);
+        assert!(state.is_empty());
+    }
+
+    #[test]
+    #[should_panic(expected = "KV cache overflow")]
+    fn kv_cache_overflow_panics() {
+        let mut cache = LayerKvCache::new(2, 4);
+        let rows = Matrix::zeros(3, 4);
+        cache.append(&rows, &rows.clone());
+    }
+
+    #[test]
+    fn nll_and_log_softmax_agree() {
+        let logits = Matrix::from_vec(2, 3, vec![0.1, 2.0, -1.0, 0.5, 0.5, 3.0]);
+        let tokens = [0u32, 2, 1];
+        let nll = nll_from_logits(&logits, &tokens);
+        assert_eq!(nll.len(), 2);
+        let lp0 = log_softmax(logits.row(0));
+        assert!((nll[0] + lp0[2]).abs() < 1e-6);
+    }
+
+    #[test]
+    fn argmax_total_order() {
+        assert_eq!(argmax(&[0.0, 3.0, 3.0, -1.0]), 2); // last maximum
+        assert_eq!(argmax(&[f32::NEG_INFINITY, -1.0]), 1);
+        assert_eq!(argmax(&[]), 0);
+    }
+}

@@ -5,10 +5,14 @@
 //!
 //! Math mirrors python/compile/model.py exactly: pre-LN blocks, causal
 //! softmax attention, tanh-approximated GELU (jax.nn.gelu default), LN
-//! eps 1e-5, per-position NLL against the shifted targets.
+//! eps 1e-5, per-position NLL against the shifted targets. The transformer
+//! math itself lives in [`super::block`] — one implementation shared with
+//! the integer model — and this file contributes the ActSite machinery
+//! plus the weight views.
 
 use anyhow::Result;
 
+use super::block::{self, DecodeState, LayerView, ModelView};
 use super::weights::Weights;
 use crate::quant::{remove_kernel::RemoveKernel, ActQuantizer};
 use crate::tensor::Matrix;
@@ -196,6 +200,34 @@ impl NativeModel {
         }
     }
 
+    /// The borrowed [`ModelView`] the shared block driver consumes.
+    fn view(&self) -> ModelView<'_, Matrix> {
+        ModelView {
+            config: self.weights.config,
+            tok_emb: &self.tok_emb,
+            pos_emb: &self.pos_emb,
+            layers: self
+                .layers
+                .iter()
+                .map(|l| LayerView {
+                    ln1_g: &l.ln1_g,
+                    ln1_b: &l.ln1_b,
+                    wq: &l.wq,
+                    wk: &l.wk,
+                    wv: &l.wv,
+                    wo: &l.wo,
+                    ln2_g: &l.ln2_g,
+                    ln2_b: &l.ln2_b,
+                    w1: &l.w1,
+                    w2: &l.w2,
+                })
+                .collect(),
+            lnf_g: &self.lnf_g,
+            lnf_b: &self.lnf_b,
+            w_out: &self.w_out,
+        }
+    }
+
     /// Forward one sequence, returning the log-probability distribution at
     /// the final position (greedy-prediction tasks).
     pub fn forward_last_logprobs(
@@ -204,138 +236,87 @@ impl NativeModel {
         site: &mut dyn ActSite,
     ) -> Result<Vec<f32>> {
         let logits = self.forward_logits(tokens, site)?;
-        let last = logits.row(logits.rows - 1);
-        let max = last.iter().fold(f32::NEG_INFINITY, |m, &v| m.max(v));
-        let logsum = max + last.iter().map(|&v| (v - max).exp()).sum::<f32>().ln();
-        Ok(last.iter().map(|&v| v - logsum).collect())
+        Ok(block::log_softmax(logits.row(logits.rows - 1)))
     }
 
     /// Forward one sequence, returning per-position NLL (len = S−1).
     /// `site` is invoked at every quantization site in forward order.
     pub fn forward_nll(&self, tokens: &[u32], site: &mut dyn ActSite) -> Result<Vec<f32>> {
         let logits = self.forward_logits(tokens, site)?;
-        let s = tokens.len();
-        let mut nll = Vec::with_capacity(s - 1);
-        for i in 0..s - 1 {
-            let row = logits.row(i);
-            let max = row.iter().fold(f32::NEG_INFINITY, |m, &v| m.max(v));
-            let logsum = max + row.iter().map(|&v| (v - max).exp()).sum::<f32>().ln();
-            nll.push(logsum - row[tokens[i + 1] as usize]);
-        }
-        Ok(nll)
+        Ok(block::nll_from_logits(&logits, tokens))
     }
 
-    /// Full-logits forward (S × vocab).
+    /// Full-logits forward (S × vocab), stateless.
     pub fn forward_logits(&self, tokens: &[u32], site: &mut dyn ActSite) -> Result<Matrix> {
-        let cfg = self.weights.config;
         let s = tokens.len();
-        let d = cfg.d_model;
-        anyhow::ensure!(s >= 2 && s <= cfg.seq_len, "sequence length {s} out of range");
-
-        let mut x = Matrix::zeros(s, d);
-        for (i, &t) in tokens.iter().enumerate() {
-            for j in 0..d {
-                x.set(i, j, self.tok_emb.get(t as usize, j) + self.pos_emb.get(i, j));
-            }
-        }
-
-        let mut site_idx = 0usize;
-        for layer in &self.layers {
-            // --- attention block ---
-            let h = layer_norm(&x, &layer.ln1_g, &layer.ln1_b);
-            let hq = site.apply(site_idx, h);
-            site_idx += 1;
-            let q = hq.matmul(&layer.wq);
-            let k = hq.matmul(&layer.wk);
-            let v = hq.matmul(&layer.wv);
-            let ctx = causal_attention(&q, &k, &v, cfg.n_heads);
-            let ctxq = site.apply(site_idx, ctx);
-            site_idx += 1;
-            let attn_out = ctxq.matmul(&layer.wo);
-            add_inplace(&mut x, &attn_out);
-
-            // --- MLP block ---
-            let h = layer_norm(&x, &layer.ln2_g, &layer.ln2_b);
-            let hq = site.apply(site_idx, h);
-            site_idx += 1;
-            let mut hh = hq.matmul(&layer.w1);
-            gelu_inplace(&mut hh);
-            let hhq = site.apply(site_idx, hh);
-            site_idx += 1;
-            let mlp_out = hhq.matmul(&layer.w2);
-            add_inplace(&mut x, &mlp_out);
-        }
-
-        let h = layer_norm(&x, &self.lnf_g, &self.lnf_b);
-        let hq = site.apply(site_idx, h);
-        Ok(hq.matmul(&self.w_out))
+        anyhow::ensure!(
+            s >= 2 && s <= self.weights.config.seq_len,
+            "sequence length {s} out of range"
+        );
+        block::forward_pass(
+            &self.view(),
+            tokens,
+            None,
+            false,
+            &mut |w, x| x.matmul(w),
+            &mut |idx, x| site.apply(idx, x),
+        )
     }
-}
 
-fn layer_norm(x: &Matrix, g: &Matrix, b: &Matrix) -> Matrix {
-    let mut out = Matrix::zeros(x.rows, x.cols);
-    let n = x.cols as f32;
-    for i in 0..x.rows {
-        let row = x.row(i);
-        let mu = row.iter().sum::<f32>() / n;
-        let var = row.iter().map(|&v| (v - mu) * (v - mu)).sum::<f32>() / n;
-        let inv = 1.0 / (var + 1e-5).sqrt();
-        let dst = out.row_mut(i);
-        for (j, (&v, o)) in row.iter().zip(dst.iter_mut()).enumerate() {
-            *o = (v - mu) * inv * g.get(0, j) + b.get(0, j);
-        }
+    /// A fresh KV-cache decode state sized for this model.
+    pub fn new_decode_state(&self) -> DecodeState {
+        let cfg = self.weights.config;
+        DecodeState::new(cfg.n_layers, cfg.seq_len, cfg.d_model)
     }
-    out
-}
 
-fn causal_attention(q: &Matrix, k: &Matrix, v: &Matrix, n_heads: usize) -> Matrix {
-    let s = q.rows;
-    let d = q.cols;
-    let hd = d / n_heads;
-    let scale = 1.0 / (hd as f32).sqrt();
-    let mut out = Matrix::zeros(s, d);
-    let mut scores = vec![0.0f32; s];
-    for h in 0..n_heads {
-        let off = h * hd;
-        for i in 0..s {
-            // scores over keys 0..=i
-            for (j, sc) in scores.iter_mut().enumerate().take(i + 1) {
-                let mut dot = 0.0f32;
-                for a in 0..hd {
-                    dot += q.get(i, off + a) * k.get(j, off + a);
-                }
-                *sc = dot * scale;
-            }
-            let max = scores[..=i].iter().fold(f32::NEG_INFINITY, |m, &v| m.max(v));
-            let mut denom = 0.0f32;
-            for sc in scores.iter_mut().take(i + 1) {
-                *sc = (*sc - max).exp();
-                denom += *sc;
-            }
-            for a in 0..hd {
-                let mut acc = 0.0f32;
-                for (j, &sc) in scores.iter().enumerate().take(i + 1) {
-                    acc += sc * v.get(j, off + a);
-                }
-                out.set(i, off + a, acc / denom);
-            }
-        }
+    pub(crate) fn forward_incremental_with(
+        &self,
+        tokens: &[u32],
+        state: &mut DecodeState,
+        site: &mut dyn ActSite,
+        last_logits_only: bool,
+    ) -> Result<Matrix> {
+        block::forward_pass(
+            &self.view(),
+            tokens,
+            Some(state),
+            last_logits_only,
+            &mut |w, x| x.matmul(w),
+            &mut |idx, x| site.apply(idx, x),
+        )
     }
-    out
-}
 
-/// jax.nn.gelu default (approximate=True): tanh approximation.
-fn gelu_inplace(x: &mut Matrix) {
-    const C: f32 = 0.7978845608; // sqrt(2/π)
-    for v in x.data.iter_mut() {
-        let u = *v;
-        *v = 0.5 * u * (1.0 + (C * (u + 0.044715 * u * u * u)).tanh());
+    /// Incremental forward: append `tokens` after `state`'s cached prefix
+    /// and return logits for the new rows only. Prefill and per-token
+    /// decode are the same call — pass the prompt first, then one token at
+    /// a time.
+    pub fn forward_incremental(
+        &self,
+        tokens: &[u32],
+        state: &mut DecodeState,
+        site: &mut dyn ActSite,
+    ) -> Result<Matrix> {
+        self.forward_incremental_with(tokens, state, site, false)
     }
-}
 
-fn add_inplace(x: &mut Matrix, y: &Matrix) {
-    for (a, b) in x.data.iter_mut().zip(&y.data) {
-        *a += b;
+    /// Greedy autoregressive generation through the KV cache: prefill the
+    /// prompt once (head applied to the last row only), then decode one
+    /// token per step (M=1 matmuls). Returns the `max_new_tokens`
+    /// generated ids.
+    pub fn generate_greedy(
+        &self,
+        prompt: &[u32],
+        max_new_tokens: usize,
+        site: &mut dyn ActSite,
+    ) -> Result<Vec<u32>> {
+        let mut state = self.new_decode_state();
+        block::generate_greedy_with(
+            self.weights.config.seq_len,
+            prompt,
+            max_new_tokens,
+            &mut state,
+            &mut |toks, st| self.forward_incremental_with(toks, st, site, true),
+        )
     }
 }
 
@@ -401,6 +382,19 @@ mod tests {
         let mut cap = CaptureSite::all();
         m.forward_nll(&toks, &mut cap).unwrap();
         assert_eq!(cap.captured.len(), m.weights.config.n_quant_sites());
+    }
+
+    #[test]
+    fn generate_greedy_stays_in_vocab_and_context() {
+        let m = tiny();
+        let gen = m.generate_greedy(&[1, 2, 3], 5, &mut IdentitySite).unwrap();
+        assert_eq!(gen.len(), 5);
+        assert!(gen.iter().all(|&t| (t as usize) < m.weights.config.vocab));
+        // deterministic
+        assert_eq!(gen, m.generate_greedy(&[1, 2, 3], 5, &mut IdentitySite).unwrap());
+        // context overflow and empty prompt are Errs, not panics
+        assert!(m.generate_greedy(&[0; 10], 3, &mut IdentitySite).is_err());
+        assert!(m.generate_greedy(&[], 3, &mut IdentitySite).is_err());
     }
 
     #[test]

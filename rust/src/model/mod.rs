@@ -1,13 +1,18 @@
 //! The tiny-GPT model substrate on the rust side: manifest/weights loading,
 //! weight-space transforms (quantization, outlier injection, smoothing),
 //! and a native forward pass cross-checked against the PJRT artifacts.
+//! The transformer math itself (LN / attention / GELU / block loop, plus
+//! the KV-cached incremental decode) is defined once in [`block`] and
+//! shared by the FP and integer models.
 
+pub mod block;
 pub mod config;
 pub mod forward;
 pub mod qforward;
 pub mod quantized;
 pub mod weights;
 
+pub use block::{DecodeState, LayerKvCache};
 pub use config::ModelConfig;
 pub use forward::{ActSite, IdentitySite, NativeModel, QuantSite, RemoveKernelSite};
 pub use qforward::{QuantPath, QuantizedModel};

@@ -12,15 +12,20 @@
 //! Integration tests pin this path against the fake-quant NativeModel:
 //! identical scheme ⇒ near-identical NLLs, so the fake-quant tables are
 //! faithful proxies for the deployed system.
+//!
+//! The transformer math (LN, attention, GELU, block loop, KV-cached
+//! decode) is the shared core in [`super::block`]; this file contributes
+//! the quantized-linear dispatch and the calibration machinery.
 
 use anyhow::Result;
 
+use super::block::{self, DecodeState, LayerView, ModelView};
 use super::config::ModelConfig;
 use super::weights::Weights;
 use crate::activations::ColStats;
 use crate::quant::qlinear::{QuantizedLinear, ScaleMode};
 use crate::quant::Bits;
-use crate::tensor::{par, Matrix};
+use crate::tensor::Matrix;
 
 /// Which activation quantization runs in front of every integer GEMM.
 #[derive(Clone, Copy, Debug)]
@@ -125,70 +130,111 @@ impl QuantizedModel {
         }
     }
 
+    /// The borrowed [`ModelView`] the shared block driver consumes.
+    fn view(&self) -> ModelView<'_, QuantizedLinear> {
+        ModelView {
+            config: self.config,
+            tok_emb: &self.tok_emb,
+            pos_emb: &self.pos_emb,
+            layers: self
+                .layers
+                .iter()
+                .map(|l| LayerView {
+                    ln1_g: &l.ln1_g,
+                    ln1_b: &l.ln1_b,
+                    wq: &l.wq,
+                    wk: &l.wk,
+                    wv: &l.wv,
+                    wo: &l.wo,
+                    ln2_g: &l.ln2_g,
+                    ln2_b: &l.ln2_b,
+                    w1: &l.w1,
+                    w2: &l.w2,
+                })
+                .collect(),
+            lnf_g: &self.lnf_g,
+            lnf_b: &self.lnf_b,
+            w_out: &self.w_out,
+        }
+    }
+
     /// Run the linear stack to logits, calling `observe(site, input)` with
     /// every quantization-site input before its integer matmuls (4 sites
     /// per layer — attn-in, attn-out, mlp-in, mlp-mid — plus the head
     /// site). The calibration capture hook; forwards pass a no-op.
-    fn forward_logits(
+    fn forward_logits_observed(
         &self,
         tokens: &[u32],
         observe: &mut dyn FnMut(usize, &Matrix),
     ) -> Result<Matrix> {
-        let cfg = self.config;
         let s = tokens.len();
-        let d = cfg.d_model;
-        anyhow::ensure!(s >= 2 && s <= cfg.seq_len, "sequence length {s} out of range");
+        anyhow::ensure!(s >= 2 && s <= self.config.seq_len, "sequence length {s} out of range");
+        block::forward_pass(
+            &self.view(),
+            tokens,
+            None,
+            false,
+            &mut |lin, x| self.qmatmul(lin, x),
+            &mut |site, x| {
+                observe(site, &x);
+                x
+            },
+        )
+    }
 
-        let mut x = Matrix::zeros(s, d);
-        for (i, &t) in tokens.iter().enumerate() {
-            for j in 0..d {
-                x.set(i, j, self.tok_emb.get(t as usize, j) + self.pos_emb.get(i, j));
-            }
-        }
-
-        let mut site = 0usize;
-        for layer in &self.layers {
-            let h = layer_norm(&x, &layer.ln1_g, &layer.ln1_b);
-            observe(site, &h);
-            let q = self.qmatmul(&layer.wq, &h);
-            let k = self.qmatmul(&layer.wk, &h);
-            let v = self.qmatmul(&layer.wv, &h);
-            let ctx = causal_attention(&q, &k, &v, cfg.n_heads);
-            observe(site + 1, &ctx);
-            let attn_out = self.qmatmul(&layer.wo, &ctx);
-            for (a, b) in x.data.iter_mut().zip(&attn_out.data) {
-                *a += b;
-            }
-
-            let h = layer_norm(&x, &layer.ln2_g, &layer.ln2_b);
-            observe(site + 2, &h);
-            let mut hh = self.qmatmul(&layer.w1, &h);
-            gelu_inplace(&mut hh);
-            observe(site + 3, &hh);
-            let mlp_out = self.qmatmul(&layer.w2, &hh);
-            for (a, b) in x.data.iter_mut().zip(&mlp_out.data) {
-                *a += b;
-            }
-            site += 4;
-        }
-
-        let h = layer_norm(&x, &self.lnf_g, &self.lnf_b);
-        observe(site, &h);
-        Ok(self.qmatmul(&self.w_out, &h))
+    /// Full-logits forward (S × vocab) through the integer linear stack.
+    pub fn forward_logits(&self, tokens: &[u32]) -> Result<Matrix> {
+        self.forward_logits_observed(tokens, &mut |_, _| {})
     }
 
     /// Per-position NLL through the all-integer linear stack.
     pub fn forward_nll(&self, tokens: &[u32]) -> Result<Vec<f32>> {
-        let logits = self.forward_logits(tokens, &mut |_, _| {})?;
-        let s = tokens.len();
-        let mut nll = Vec::with_capacity(s - 1);
-        for i in 0..s - 1 {
-            let row = logits.row(i);
-            let max = row.iter().fold(f32::NEG_INFINITY, |m, &v| m.max(v));
-            let logsum = max + row.iter().map(|&v| (v - max).exp()).sum::<f32>().ln();
-            nll.push(logsum - row[tokens[i + 1] as usize]);
-        }
-        Ok(nll)
+        let logits = self.forward_logits(tokens)?;
+        Ok(block::nll_from_logits(&logits, tokens))
+    }
+
+    /// A fresh KV-cache decode state sized for this model.
+    pub fn new_decode_state(&self) -> DecodeState {
+        DecodeState::new(self.config.n_layers, self.config.seq_len, self.config.d_model)
+    }
+
+    pub(crate) fn forward_incremental_with(
+        &self,
+        tokens: &[u32],
+        state: &mut DecodeState,
+        last_logits_only: bool,
+    ) -> Result<Matrix> {
+        block::forward_pass(
+            &self.view(),
+            tokens,
+            Some(state),
+            last_logits_only,
+            &mut |lin, x| self.qmatmul(lin, x),
+            &mut |_, x| x,
+        )
+    }
+
+    /// Incremental forward: append `tokens` after `state`'s cached prefix
+    /// and return logits for the new rows only. Per-token decode drives
+    /// the packed `quant::gemm` microkernel with M=1.
+    pub fn forward_incremental(&self, tokens: &[u32], state: &mut DecodeState) -> Result<Matrix> {
+        self.forward_incremental_with(tokens, state, false)
+    }
+
+    /// Greedy autoregressive generation on the true-integer path: prefill
+    /// once (head applied to the last row only), then one-token decode
+    /// steps through the packed int8 GEMM. Works for every [`QuantPath`],
+    /// including `CrossQuantStatic` after
+    /// [`QuantizedModel::calibrate_static`]. Returns the generated ids.
+    pub fn generate_greedy(&self, prompt: &[u32], max_new_tokens: usize) -> Result<Vec<u32>> {
+        let mut state = self.new_decode_state();
+        block::generate_greedy_with(
+            self.config.seq_len,
+            prompt,
+            max_new_tokens,
+            &mut state,
+            &mut |toks, st| self.forward_incremental_with(toks, st, true),
+        )
     }
 
     /// Calibrate static CrossQuant scales: run the calibration sequences
@@ -209,7 +255,7 @@ impl QuantizedModel {
         self.path = QuantPath::CrossQuant { alpha };
         let mut run = Ok(());
         for tokens in calib {
-            let r = self.forward_logits(tokens, &mut |site, x| stats[site].observe(x));
+            let r = self.forward_logits_observed(tokens, &mut |site, x| stats[site].observe(x));
             if let Err(e) = r {
                 run = Err(e);
                 break;
@@ -253,87 +299,6 @@ impl QuantizedModel {
                 + l.w2.payload_bytes();
         }
         total
-    }
-}
-
-// -- shared math, duplicated deliberately from forward.rs so the two paths
-//    stay independently auditable (they are cross-checked by tests) --
-
-/// Row-parallel LayerNorm (each row's statistics are independent, so the
-/// per-row math — and hence the result — is identical for any worker
-/// count).
-fn layer_norm(x: &Matrix, g: &Matrix, b: &Matrix) -> Matrix {
-    let mut out = Matrix::zeros(x.rows, x.cols);
-    if out.is_empty() {
-        return out;
-    }
-    let n = x.cols as f32;
-    let cols = x.cols;
-    par::par_rows_mut(&mut out.data, cols, par::workers_for(x.rows, x.len()), |row0, chunk| {
-        for (local, dst) in chunk.chunks_mut(cols).enumerate() {
-            let row = x.row(row0 + local);
-            let mu = row.iter().sum::<f32>() / n;
-            let var = row.iter().map(|&v| (v - mu) * (v - mu)).sum::<f32>() / n;
-            let inv = 1.0 / (var + 1e-5).sqrt();
-            for (j, (&v, o)) in row.iter().zip(dst.iter_mut()).enumerate() {
-                *o = (v - mu) * inv * g.get(0, j) + b.get(0, j);
-            }
-        }
-    });
-    out
-}
-
-/// Causal attention, row-parallel over query positions: output row `i`
-/// reads only q row `i` and k/v rows ≤ `i`, which every worker can share
-/// immutably. Per-(row, head) math matches the serial loop exactly.
-fn causal_attention(q: &Matrix, k: &Matrix, v: &Matrix, n_heads: usize) -> Matrix {
-    let s = q.rows;
-    let d = q.cols;
-    let mut out = Matrix::zeros(s, d);
-    if out.is_empty() {
-        return out;
-    }
-    let hd = d / n_heads;
-    let scale = 1.0 / (hd as f32).sqrt();
-    // triangular cost ~ s²·d/2 (scores) + s²·d/2 (weighted sum)
-    let cost = s.saturating_mul(s).saturating_mul(d);
-    par::par_rows_mut(&mut out.data, d, par::workers_for(s, cost), |row0, chunk| {
-        let mut scores = vec![0.0f32; s];
-        for (local, dst) in chunk.chunks_mut(d).enumerate() {
-            let i = row0 + local;
-            for h in 0..n_heads {
-                let off = h * hd;
-                for (j, sc) in scores.iter_mut().enumerate().take(i + 1) {
-                    let mut dot = 0.0f32;
-                    for a in 0..hd {
-                        dot += q.get(i, off + a) * k.get(j, off + a);
-                    }
-                    *sc = dot * scale;
-                }
-                let max = scores[..=i].iter().fold(f32::NEG_INFINITY, |m, &v| m.max(v));
-                let mut denom = 0.0f32;
-                for sc in scores.iter_mut().take(i + 1) {
-                    *sc = (*sc - max).exp();
-                    denom += *sc;
-                }
-                for a in 0..hd {
-                    let mut acc = 0.0f32;
-                    for (j, &sc) in scores.iter().enumerate().take(i + 1) {
-                        acc += sc * v.get(j, off + a);
-                    }
-                    dst[off + a] = acc / denom;
-                }
-            }
-        }
-    });
-    out
-}
-
-fn gelu_inplace(x: &mut Matrix) {
-    const C: f32 = 0.7978845608;
-    for v in x.data.iter_mut() {
-        let u = *v;
-        *v = 0.5 * u * (1.0 + (C * (u + 0.044715 * u * u * u)).tanh());
     }
 }
 

@@ -1,0 +1,136 @@
+//! A small bounded least-recently-used cache.
+//!
+//! Built for caches of a handful of heavyweight entries (the coordinator's
+//! calibrated static models: capacity 8, each entry a full integer model),
+//! where the previous `HashMap` + `keys().next()` eviction dropped an
+//! *arbitrary* entry — under an α sweep that could evict the hottest model
+//! every time. Recency updates are O(capacity) Vec scans, which at these
+//! sizes is cheaper than any linked structure.
+
+use std::collections::{HashMap, VecDeque};
+use std::hash::Hash;
+
+/// Bounded map with least-recently-used eviction. Both `get` and `insert`
+/// count as a use.
+pub struct LruCache<K: Eq + Hash + Clone, V> {
+    capacity: usize,
+    map: HashMap<K, V>,
+    /// Recency order: front = least recently used, back = most.
+    order: VecDeque<K>,
+}
+
+impl<K: Eq + Hash + Clone, V> LruCache<K, V> {
+    pub fn new(capacity: usize) -> LruCache<K, V> {
+        assert!(capacity > 0, "LruCache capacity must be > 0");
+        LruCache { capacity, map: HashMap::new(), order: VecDeque::new() }
+    }
+
+    pub fn len(&self) -> usize {
+        self.map.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.map.is_empty()
+    }
+
+    pub fn capacity(&self) -> usize {
+        self.capacity
+    }
+
+    pub fn contains(&self, key: &K) -> bool {
+        self.map.contains_key(key)
+    }
+
+    /// Look up `key`, marking it most recently used on a hit.
+    pub fn get(&mut self, key: &K) -> Option<&V> {
+        if self.map.contains_key(key) {
+            self.touch(key);
+        }
+        self.map.get(key)
+    }
+
+    /// Insert (or replace) `key`, marking it most recently used. If this
+    /// pushes the cache past capacity, the least-recently-used entry is
+    /// evicted and returned.
+    pub fn insert(&mut self, key: K, value: V) -> Option<(K, V)> {
+        let replaced = self.map.insert(key.clone(), value).is_some();
+        if replaced {
+            self.touch(&key);
+        } else {
+            self.order.push_back(key);
+        }
+        if self.map.len() > self.capacity {
+            let lru = self.order.pop_front().expect("order tracks map");
+            let v = self.map.remove(&lru).expect("order keys live in map");
+            return Some((lru, v));
+        }
+        None
+    }
+
+    /// Keys from least to most recently used (test/debug surface).
+    pub fn keys_lru_order(&self) -> impl Iterator<Item = &K> {
+        self.order.iter()
+    }
+
+    fn touch(&mut self, key: &K) {
+        if let Some(pos) = self.order.iter().position(|k| k == key) {
+            let k = self.order.remove(pos).expect("position is in range");
+            self.order.push_back(k);
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn keys(c: &LruCache<i32, i32>) -> Vec<i32> {
+        c.keys_lru_order().copied().collect()
+    }
+
+    #[test]
+    fn evicts_least_recently_used_not_arbitrary() {
+        let mut c = LruCache::new(3);
+        for k in 1..=3 {
+            assert!(c.insert(k, k * 10).is_none());
+        }
+        // touch 1 — it becomes MRU, so 2 is now the eviction candidate
+        assert_eq!(c.get(&1), Some(&10));
+        assert_eq!(keys(&c), vec![2, 3, 1]);
+        let evicted = c.insert(4, 40);
+        assert_eq!(evicted, Some((2, 20)));
+        assert_eq!(c.len(), 3);
+        assert!(!c.contains(&2));
+        // full eviction order from here: 3, then 1, then 4
+        assert_eq!(c.insert(5, 50), Some((3, 30)));
+        assert_eq!(c.insert(6, 60), Some((1, 10)));
+        assert_eq!(keys(&c), vec![4, 5, 6]);
+    }
+
+    #[test]
+    fn reinsert_refreshes_recency_and_replaces_value() {
+        let mut c = LruCache::new(2);
+        c.insert(1, 10);
+        c.insert(2, 20);
+        c.insert(1, 11); // replace: no eviction, 1 becomes MRU
+        assert_eq!(c.len(), 2);
+        assert_eq!(keys(&c), vec![2, 1]);
+        assert_eq!(c.insert(3, 30), Some((2, 20)));
+        assert_eq!(c.get(&1), Some(&11));
+    }
+
+    #[test]
+    fn miss_does_not_disturb_order() {
+        let mut c = LruCache::new(2);
+        c.insert(1, 10);
+        c.insert(2, 20);
+        assert_eq!(c.get(&9), None);
+        assert_eq!(keys(&c), vec![1, 2]);
+    }
+
+    #[test]
+    #[should_panic(expected = "capacity must be > 0")]
+    fn zero_capacity_rejected() {
+        let _ = LruCache::<i32, i32>::new(0);
+    }
+}

@@ -2,5 +2,7 @@
 //! see Cargo.toml).
 
 pub mod json;
+pub mod lru;
 
 pub use json::Json;
+pub use lru::LruCache;

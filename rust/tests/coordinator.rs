@@ -85,11 +85,7 @@ fn failure_injection_missing_artifact() {
         },
     );
     let handle = coordinator
-        .submit(EvalRequest {
-            tokens: vec![1, 2, 3],
-            scheme: ActScheme::Fp,
-            weight_set: "w".into(),
-        })
+        .submit(EvalRequest::score(vec![1, 2, 3], ActScheme::Fp, "w"))
         .expect("submit should succeed");
     let err = handle.wait().expect_err("execution must fail");
     assert!(format!("{err}").contains("failed"), "unexpected error: {err}");
@@ -123,11 +119,11 @@ fn native_executor_serves_static_scale_scheme() {
     let tokens = gen.sequence(cfg.seq_len);
     let submit = |toks: Vec<u32>| {
         coordinator
-            .submit(EvalRequest {
-                tokens: toks,
-                scheme: ActScheme::CrossQuantStatic { alpha: 0.15, qmax: 127.0 },
-                weight_set: "w".into(),
-            })
+            .submit(EvalRequest::score(
+                toks,
+                ActScheme::CrossQuantStatic { alpha: 0.15, qmax: 127.0 },
+                "w",
+            ))
             .unwrap()
     };
     // the executor serves the static scheme through the native integer
@@ -145,13 +141,82 @@ fn native_executor_serves_static_scale_scheme() {
     // malformed static requests fail the request, not the process: the
     // native path serves the INT8 grid only
     let bad = coordinator
-        .submit(EvalRequest {
-            tokens: gen.sequence(cfg.seq_len),
-            scheme: ActScheme::CrossQuantStatic { alpha: 0.15, qmax: 50.0 },
-            weight_set: "w".into(),
-        })
+        .submit(EvalRequest::score(
+            gen.sequence(cfg.seq_len),
+            ActScheme::CrossQuantStatic { alpha: 0.15, qmax: 50.0 },
+            "w",
+        ))
         .unwrap();
     assert!(bad.wait_timeout(Duration::from_secs(120)).is_err());
+}
+
+#[test]
+fn generation_round_trips_for_every_scheme() {
+    let (store, _guard) = broken_store();
+    let cfg = ModelConfig {
+        vocab: 64,
+        d_model: 16,
+        n_layers: 1,
+        n_heads: 2,
+        d_ff: 32,
+        seq_len: 12,
+        eval_batch: 2,
+    };
+    let weights = crossquant::model::weights::synthetic_weights(cfg, 17);
+    let coordinator = EvalCoordinator::start(
+        store,
+        cfg,
+        vec![("w".into(), weights.flat.clone())],
+        CoordinatorConfig {
+            batch_size: 2,
+            max_batch_delay: Duration::from_millis(2),
+            max_queue: 8,
+        },
+    );
+    let mut gen = CorpusGen::new(cfg.vocab, 5);
+    for scheme in [
+        ActScheme::Fp,
+        ActScheme::CrossQuant { alpha: 0.15, qmax: 127.0 },
+        ActScheme::RemoveKernel { theta: 0.01 },
+        ActScheme::CrossQuantStatic { alpha: 0.15, qmax: 127.0 },
+    ] {
+        let prompt = gen.sequence(4);
+        let submit = |p: Vec<u32>| {
+            coordinator.submit(EvalRequest::generate(p, scheme, "w", 6)).unwrap()
+        };
+        let r = submit(prompt.clone())
+            .wait_timeout(Duration::from_secs(120))
+            .unwrap_or_else(|e| panic!("{scheme:?}: {e}"));
+        assert_eq!(r.generated.len(), 6, "{scheme:?}");
+        assert!(r.generated.iter().all(|&t| (t as usize) < cfg.vocab));
+        assert!(r.nll.is_empty(), "generation responses carry no NLL");
+        // greedy decode is deterministic per scheme
+        let again = submit(prompt).wait_timeout(Duration::from_secs(120)).unwrap();
+        assert_eq!(again.generated, r.generated, "{scheme:?}");
+    }
+}
+
+#[test]
+fn generation_context_overflow_is_a_structured_submit_error() {
+    let (store, _guard) = broken_store();
+    let cfg = ModelConfig {
+        vocab: 64,
+        d_model: 16,
+        n_layers: 1,
+        n_heads: 2,
+        d_ff: 32,
+        seq_len: 12,
+        eval_batch: 2,
+    };
+    let coordinator = EvalCoordinator::start(store, cfg, vec![], CoordinatorConfig::default());
+    // prompt 8 + 5 new tokens > n_ctx 12 ⇒ Err at submit, not a panic
+    let err = coordinator
+        .submit(EvalRequest::generate(vec![1; 8], ActScheme::Fp, "w", 5))
+        .expect_err("overflow must be rejected");
+    assert!(format!("{err}").contains("exceeds model context"), "unexpected error: {err}");
+    // empty prompt and zero budget are rejected too
+    assert!(coordinator.submit(EvalRequest::generate(vec![], ActScheme::Fp, "w", 3)).is_err());
+    assert!(coordinator.submit(EvalRequest::generate(vec![1; 4], ActScheme::Fp, "w", 0)).is_err());
 }
 
 #[test]
@@ -170,15 +235,11 @@ fn rejects_out_of_range_sequences() {
         EvalCoordinator::start(store, cfg, vec![], CoordinatorConfig::default());
     // too short
     assert!(coordinator
-        .submit(EvalRequest { tokens: vec![1], scheme: ActScheme::Fp, weight_set: "w".into() })
+        .submit(EvalRequest::score(vec![1], ActScheme::Fp, "w"))
         .is_err());
     // too long
     assert!(coordinator
-        .submit(EvalRequest {
-            tokens: vec![0; 13],
-            scheme: ActScheme::Fp,
-            weight_set: "w".into()
-        })
+        .submit(EvalRequest::score(vec![0; 13], ActScheme::Fp, "w"))
         .is_err());
 }
 
@@ -197,20 +258,12 @@ fn unknown_weight_set_fails_request_not_process() {
     );
     let mut gen = CorpusGen::new(cfg.vocab, 1);
     let bad = coordinator
-        .submit(EvalRequest {
-            tokens: gen.sequence(cfg.seq_len),
-            scheme: ActScheme::Fp,
-            weight_set: "nope".into(),
-        })
+        .submit(EvalRequest::score(gen.sequence(cfg.seq_len), ActScheme::Fp, "nope"))
         .unwrap();
     assert!(bad.wait().is_err());
     // the coordinator keeps serving afterwards
     let good = coordinator
-        .submit(EvalRequest {
-            tokens: gen.sequence(cfg.seq_len),
-            scheme: ActScheme::Fp,
-            weight_set: "good".into(),
-        })
+        .submit(EvalRequest::score(gen.sequence(cfg.seq_len), ActScheme::Fp, "good"))
         .unwrap();
     let resp = good.wait().unwrap();
     assert_eq!(resp.nll.len(), cfg.seq_len - 1);
@@ -240,11 +293,11 @@ fn batches_fill_and_results_map_back() {
         .iter()
         .map(|&l| {
             coordinator
-                .submit(EvalRequest {
-                    tokens: gen.sequence(l),
-                    scheme: ActScheme::CrossQuant { alpha: 0.15, qmax: 127.0 },
-                    weight_set: "w".into(),
-                })
+                .submit(EvalRequest::score(
+                    gen.sequence(l),
+                    ActScheme::CrossQuant { alpha: 0.15, qmax: 127.0 },
+                    "w",
+                ))
                 .unwrap()
         })
         .collect();
@@ -279,11 +332,7 @@ fn partial_batch_flushes_on_deadline() {
     let mut gen = CorpusGen::new(cfg.vocab, 3);
     // a single request can never fill the batch — only the deadline flushes it
     let h = coordinator
-        .submit(EvalRequest {
-            tokens: gen.sequence(cfg.seq_len),
-            scheme: ActScheme::Fp,
-            weight_set: "w".into(),
-        })
+        .submit(EvalRequest::score(gen.sequence(cfg.seq_len), ActScheme::Fp, "w"))
         .unwrap();
     let r = h.wait_timeout(Duration::from_secs(120)).unwrap();
     assert_eq!(r.nll.len(), cfg.seq_len - 1);

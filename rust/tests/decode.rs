@@ -1,0 +1,186 @@
+//! Incremental-decode equivalence: KV-cached forwards must reproduce the
+//! full-sequence (stateless) forward — bit-exact on the FP path, within
+//! tolerance on the integer paths — across the edge shapes generation
+//! meets in practice (1-token prompt, prompt == n_ctx − 1, single-head vs
+//! multi-head), plus greedy-generation equivalence against a
+//! full-recompute reference.
+
+use crossquant::model::config::ModelConfig;
+use crossquant::model::weights::synthetic_weights;
+use crossquant::model::{block, IdentitySite, NativeModel, QuantPath, QuantizedModel};
+use crossquant::quant::Bits;
+
+fn cfg(n_heads: usize, seq_len: usize) -> ModelConfig {
+    ModelConfig {
+        vocab: 48,
+        d_model: 16,
+        n_layers: 2,
+        n_heads,
+        d_ff: 32,
+        seq_len,
+        eval_batch: 2,
+    }
+}
+
+fn tokens(cfg: &ModelConfig, seed: u32) -> Vec<u32> {
+    (0..cfg.seq_len).map(|i| ((i as u32 * 7 + seed * 13 + 1) % cfg.vocab as u32)).collect()
+}
+
+/// Feed `toks` through the KV cache with the given prefill split and
+/// return one logits row per position (prefill rows + decode rows).
+fn incremental_rows_native(
+    model: &NativeModel,
+    toks: &[u32],
+    prefill: usize,
+) -> Vec<Vec<f32>> {
+    let mut state = model.new_decode_state();
+    let mut rows = Vec::with_capacity(toks.len());
+    let first = model.forward_incremental(&toks[..prefill], &mut state, &mut IdentitySite).unwrap();
+    for i in 0..first.rows {
+        rows.push(first.row(i).to_vec());
+    }
+    for &t in &toks[prefill..] {
+        let step = model.forward_incremental(&[t], &mut state, &mut IdentitySite).unwrap();
+        assert_eq!(step.rows, 1);
+        rows.push(step.row(0).to_vec());
+    }
+    rows
+}
+
+fn incremental_rows_quantized(
+    model: &QuantizedModel,
+    toks: &[u32],
+    prefill: usize,
+) -> Vec<Vec<f32>> {
+    let mut state = model.new_decode_state();
+    let mut rows = Vec::with_capacity(toks.len());
+    let first = model.forward_incremental(&toks[..prefill], &mut state).unwrap();
+    for i in 0..first.rows {
+        rows.push(first.row(i).to_vec());
+    }
+    for &t in &toks[prefill..] {
+        let step = model.forward_incremental(&[t], &mut state).unwrap();
+        rows.push(step.row(0).to_vec());
+    }
+    rows
+}
+
+#[test]
+fn fp_incremental_decode_is_bit_exact_with_full_forward() {
+    // edge shapes: single-head and multi-head; 1-token prompt and a
+    // prompt filling all but the last context slot
+    for (n_heads, seed) in [(1usize, 0u32), (2, 1), (4, 2)] {
+        let c = cfg(n_heads, 12);
+        let model = NativeModel::new(synthetic_weights(c, 40 + seed as u64));
+        let toks = tokens(&c, seed);
+        let full = model.forward_logits(&toks, &mut IdentitySite).unwrap();
+        for prefill in [1usize, 2, c.seq_len / 2, c.seq_len - 1, c.seq_len] {
+            let rows = incremental_rows_native(&model, &toks, prefill);
+            assert_eq!(rows.len(), full.rows);
+            for (i, row) in rows.iter().enumerate() {
+                assert_eq!(
+                    row.as_slice(),
+                    full.row(i),
+                    "heads {n_heads}, prefill {prefill}, position {i}: FP decode must be bit-exact"
+                );
+            }
+        }
+    }
+}
+
+#[test]
+fn integer_incremental_decode_matches_full_forward_per_token() {
+    // per-token W8A8: activation codes are row-local, so cached decode
+    // reproduces the full forward (tolerance guards against accumulation
+    // order, not semantics)
+    let c = cfg(2, 12);
+    let w = synthetic_weights(c, 50);
+    let model = QuantizedModel::new(&w, Bits::Int8, Bits::Int8, QuantPath::PerToken).unwrap();
+    let toks = tokens(&c, 3);
+    let full = model.forward_logits(&toks).unwrap();
+    for prefill in [1usize, c.seq_len - 1] {
+        let rows = incremental_rows_quantized(&model, &toks, prefill);
+        for (i, row) in rows.iter().enumerate() {
+            for (a, b) in row.iter().zip(full.row(i)) {
+                assert!(
+                    (a - b).abs() <= 1e-4 * b.abs().max(1.0),
+                    "prefill {prefill}, position {i}: {a} vs {b}"
+                );
+            }
+        }
+    }
+}
+
+#[test]
+fn integer_incremental_decode_matches_full_forward_static_crossquant() {
+    // calibrated static CrossQuant: the column factors are frozen at
+    // calibration, so decode-time codes are row-local too
+    let c = cfg(2, 12);
+    let w = synthetic_weights(c, 51);
+    let mut model =
+        QuantizedModel::new(&w, Bits::Int8, Bits::Int8, QuantPath::CrossQuant { alpha: 0.15 })
+            .unwrap();
+    let calib: Vec<Vec<u32>> = (0..6).map(|s| tokens(&c, 20 + s)).collect();
+    model.calibrate_static(0.15, &calib).unwrap();
+    let toks = tokens(&c, 4);
+    let full = model.forward_logits(&toks).unwrap();
+    for prefill in [1usize, c.seq_len / 2, c.seq_len - 1] {
+        let rows = incremental_rows_quantized(&model, &toks, prefill);
+        for (i, row) in rows.iter().enumerate() {
+            for (a, b) in row.iter().zip(full.row(i)) {
+                assert!(
+                    (a - b).abs() <= 1e-4 * b.abs().max(1.0),
+                    "prefill {prefill}, position {i}: {a} vs {b}"
+                );
+            }
+        }
+    }
+}
+
+#[test]
+fn fp_generate_greedy_matches_full_recompute_reference() {
+    let c = cfg(2, 16);
+    let model = NativeModel::new(synthetic_weights(c, 60));
+    let prompt: Vec<u32> = tokens(&c, 5)[..4].to_vec();
+    let max_new = 8;
+    let cached = model.generate_greedy(&prompt, max_new, &mut IdentitySite).unwrap();
+    // reference: no KV cache — rescore the whole growing sequence each
+    // step, with the same sampler as the cached path so any divergence
+    // must come from the logits
+    let mut seq = prompt.clone();
+    let mut reference = Vec::new();
+    for _ in 0..max_new {
+        let logits = model.forward_logits(&seq, &mut IdentitySite).unwrap();
+        let next = block::argmax(logits.row(logits.rows - 1)) as u32;
+        reference.push(next);
+        seq.push(next);
+    }
+    assert_eq!(cached, reference, "KV-cached greedy must equal full-recompute greedy");
+}
+
+#[test]
+fn quantized_generate_greedy_is_deterministic_for_every_path() {
+    let c = cfg(2, 16);
+    let w = synthetic_weights(c, 61);
+    let prompt: Vec<u32> = tokens(&c, 6)[..5].to_vec();
+    let per_token =
+        QuantizedModel::new(&w, Bits::Int8, Bits::Int8, QuantPath::PerToken).unwrap();
+    let dynamic =
+        QuantizedModel::new(&w, Bits::Int8, Bits::Int8, QuantPath::CrossQuant { alpha: 0.15 })
+            .unwrap();
+    let mut stat =
+        QuantizedModel::new(&w, Bits::Int8, Bits::Int8, QuantPath::CrossQuant { alpha: 0.15 })
+            .unwrap();
+    let calib: Vec<Vec<u32>> = (0..6).map(|s| tokens(&c, 30 + s)).collect();
+    stat.calibrate_static(0.15, &calib).unwrap();
+    for model in [&per_token, &dynamic, &stat] {
+        let a = model.generate_greedy(&prompt, 8).unwrap();
+        let b = model.generate_greedy(&prompt, 8).unwrap();
+        assert_eq!(a, b);
+        assert_eq!(a.len(), 8);
+        assert!(a.iter().all(|&t| (t as usize) < c.vocab));
+    }
+    // context accounting: prompt + max_new == n_ctx is legal, +1 is not
+    assert!(per_token.generate_greedy(&prompt, c.seq_len - prompt.len()).is_ok());
+    assert!(per_token.generate_greedy(&prompt, c.seq_len - prompt.len() + 1).is_err());
+}

@@ -1,5 +1,7 @@
 //! TCP eval-server integration: spin the server on an ephemeral port, talk
-//! the line protocol from a client socket. Skips without artifacts.
+//! the line protocol from a client socket. The artifact-backed tests skip
+//! without artifacts; the synthetic-weights tests (generation protocol)
+//! run everywhere through the native-executor fallback.
 
 use std::io::{BufRead, BufReader, Write};
 use std::net::{TcpListener, TcpStream};
@@ -8,6 +10,8 @@ use std::time::Duration;
 use crossquant::coordinator::scheduler::CoordinatorConfig;
 use crossquant::coordinator::{EvalCoordinator, EvalServer};
 use crossquant::corpus::CorpusGen;
+use crossquant::model::weights::synthetic_weights;
+use crossquant::model::ModelConfig;
 use crossquant::runtime::ArtifactStore;
 use crossquant::util::Json;
 
@@ -32,6 +36,47 @@ fn start_server() -> Option<(std::net::SocketAddr, crossquant::model::ModelConfi
         let _ = EvalServer::new(coordinator).serve(listener);
     });
     Some((addr, cfg))
+}
+
+/// A server over synthetic weights and a directory holding only a
+/// manifest: no artifacts anywhere, so the coordinator's native executor
+/// serves every request — runs on every build.
+fn start_synthetic_server() -> (std::net::SocketAddr, ModelConfig) {
+    let cfg = ModelConfig {
+        vocab: 64,
+        d_model: 16,
+        n_layers: 1,
+        n_heads: 2,
+        d_ff: 32,
+        seq_len: 12,
+        eval_batch: 2,
+    };
+    let dir = std::env::temp_dir().join(format!(
+        "cq-server-{}-{:?}",
+        std::process::id(),
+        std::time::SystemTime::now()
+            .duration_since(std::time::UNIX_EPOCH)
+            .unwrap()
+            .as_nanos()
+    ));
+    std::fs::create_dir_all(&dir).unwrap();
+    let weights = synthetic_weights(cfg, 23);
+    let coordinator = EvalCoordinator::start(
+        ArtifactStore { dir },
+        cfg,
+        vec![("w16".into(), weights.flat.clone())],
+        CoordinatorConfig {
+            batch_size: 2,
+            max_batch_delay: Duration::from_millis(2),
+            max_queue: 16,
+        },
+    );
+    let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+    let addr = listener.local_addr().unwrap();
+    std::thread::spawn(move || {
+        let _ = EvalServer::new(coordinator).serve(listener);
+    });
+    (addr, cfg)
 }
 
 fn roundtrip(stream: &mut TcpStream, reader: &mut BufReader<TcpStream>, req: &str) -> Json {
@@ -79,6 +124,64 @@ fn serves_eval_requests_over_tcp() {
     // metrics still served afterwards
     let m = roundtrip(&mut stream, &mut reader, r#"{"cmd": "metrics"}"#);
     assert!(m.get("metrics").unwrap().as_str().unwrap().contains("completed="));
+}
+
+#[test]
+fn generate_round_trips_over_tcp_for_every_scheme() {
+    let (addr, cfg) = start_synthetic_server();
+    let mut stream = TcpStream::connect(addr).unwrap();
+    stream.set_read_timeout(Some(Duration::from_secs(300))).unwrap();
+    let mut reader = BufReader::new(stream.try_clone().unwrap());
+
+    for scheme in ["fp", "crossquant", "crossquant-static"] {
+        let prompt = CorpusGen::new(cfg.vocab, 7).sequence(4);
+        let pj: Vec<String> = prompt.iter().map(|t| t.to_string()).collect();
+        let req = format!(
+            r#"{{"tokens": [{}], "scheme": "{scheme}", "alpha": 0.15, "max_new_tokens": 6, "weight_set": "w16"}}"#,
+            pj.join(", ")
+        );
+        let resp = roundtrip(&mut stream, &mut reader, &req);
+        assert_eq!(resp.get("ok"), Some(&Json::Bool(true)), "{scheme}: {resp:?}");
+        let generated = resp.get("generated").unwrap().as_arr().unwrap();
+        assert_eq!(generated.len(), 6, "{scheme}");
+        assert!(
+            generated.iter().all(|t| t.as_usize().is_some_and(|v| v < cfg.vocab)),
+            "{scheme}: generated ids must be in-vocab"
+        );
+        assert_eq!(resp.get("prompt_tokens").unwrap().as_usize(), Some(4));
+        // greedy decode is deterministic: the same request replays exactly
+        let again = roundtrip(&mut stream, &mut reader, &req);
+        assert_eq!(again.get("generated"), resp.get("generated"), "{scheme}");
+    }
+}
+
+#[test]
+fn generate_context_overflow_is_a_structured_protocol_error() {
+    let (addr, cfg) = start_synthetic_server();
+    let mut stream = TcpStream::connect(addr).unwrap();
+    stream.set_read_timeout(Some(Duration::from_secs(300))).unwrap();
+    let mut reader = BufReader::new(stream.try_clone().unwrap());
+
+    // prompt 8 + 5 new tokens > n_ctx 12: a structured error, no panic
+    let prompt = CorpusGen::new(cfg.vocab, 9).sequence(8);
+    let pj: Vec<String> = prompt.iter().map(|t| t.to_string()).collect();
+    let req = format!(
+        r#"{{"tokens": [{}], "scheme": "fp", "max_new_tokens": 5, "weight_set": "w16"}}"#,
+        pj.join(", ")
+    );
+    let resp = roundtrip(&mut stream, &mut reader, &req);
+    assert_eq!(resp.get("ok"), Some(&Json::Bool(false)), "{resp:?}");
+    let err = resp.get("error").unwrap().as_str().unwrap();
+    assert!(err.contains("exceeds model context"), "unexpected error: {err}");
+
+    // the connection survives and a well-formed request still succeeds
+    let ok_req = format!(
+        r#"{{"tokens": [{}], "scheme": "fp", "max_new_tokens": 4, "weight_set": "w16"}}"#,
+        pj.join(", ")
+    );
+    let ok = roundtrip(&mut stream, &mut reader, &ok_req);
+    assert_eq!(ok.get("ok"), Some(&Json::Bool(true)), "{ok:?}");
+    assert_eq!(ok.get("generated").unwrap().as_arr().unwrap().len(), 4);
 }
 
 #[test]
