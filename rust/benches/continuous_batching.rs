@@ -1,0 +1,234 @@
+//! Continuous-batching engine benchmark — `BENCH_continuous_batching.json`.
+//!
+//! Claims under test (PR 4):
+//!   * stacking N concurrent sequences into one M=N step amortises every
+//!     weight stream across the batch, so aggregate decode tok/s grows
+//!     with concurrency while the serial PR 3 baseline (one request at a
+//!     time, M=1 steps) stays flat — the acceptance bar is ≥ 3× aggregate
+//!     throughput at 16 concurrent sessions;
+//!   * engine outputs are **bit-identical** to sequential
+//!     `generate_greedy` for both the dynamic-CrossQuant serving path
+//!     (native fake-quant) and calibrated static CrossQuant (true-integer
+//!     GEMM), which the harness asserts before writing any number.
+//!
+//! Sessions at 1 / 4 / 16 concurrency; per-token latency is the mean
+//! client-observed wall time per decoded token.
+//!
+//!     cargo bench --bench continuous_batching
+
+mod support;
+
+use std::path::PathBuf;
+use std::time::Instant;
+
+use crossquant::coordinator::scheduler::CoordinatorConfig;
+use crossquant::coordinator::{ActScheme, EngineConfig, EvalCoordinator, EvalRequest};
+use crossquant::corpus::CorpusGen;
+use crossquant::eval::generation::{generate_serial, NativeDecoder, QuantizedDecoder};
+use crossquant::model::weights::synthetic_weights;
+use crossquant::model::{
+    IdentitySite, ModelConfig, NativeModel, QuantPath, QuantSite, QuantizedModel,
+};
+use crossquant::quant::crossquant::CrossQuant;
+use crossquant::quant::Bits;
+use crossquant::runtime::ArtifactStore;
+use crossquant::tensor::par;
+use crossquant::util::Json;
+
+const PROMPT_TOKENS: usize = 16;
+const NEW_TOKENS: usize = 32;
+const ALPHA: f32 = 0.15;
+const SESSIONS: [usize; 3] = [1, 4, 16];
+
+struct Cell {
+    sessions: usize,
+    engine_tok_s: f64,
+    serial_tok_s: f64,
+    engine_token_latency_ms: f64,
+    serial_token_latency_ms: f64,
+    bit_identical: bool,
+}
+
+impl Cell {
+    fn speedup(&self) -> f64 {
+        self.engine_tok_s / self.serial_tok_s.max(1e-12)
+    }
+
+    fn json(&self) -> Json {
+        Json::obj(vec![
+            ("sessions", Json::num(self.sessions as f64)),
+            ("engine_tok_s", Json::num(self.engine_tok_s)),
+            ("serial_tok_s", Json::num(self.serial_tok_s)),
+            ("speedup", Json::num(self.speedup())),
+            ("engine_token_latency_ms", Json::num(self.engine_token_latency_ms)),
+            ("serial_token_latency_ms", Json::num(self.serial_token_latency_ms)),
+            ("bit_identical", Json::Bool(self.bit_identical)),
+        ])
+    }
+}
+
+fn prompts_for(n: usize, cfg: ModelConfig) -> Vec<Vec<u32>> {
+    (0..n).map(|i| CorpusGen::new(cfg.vocab, 100 + i as u64).sequence(PROMPT_TOKENS)).collect()
+}
+
+/// Run `n` concurrent sessions through the engine; returns (wall seconds,
+/// outputs). All requests are submitted up front — the engine admits them
+/// into one running batch — and the clock stops when the last resolves.
+fn run_engine(
+    coordinator: &EvalCoordinator,
+    scheme: ActScheme,
+    prompts: &[Vec<u32>],
+) -> (f64, Vec<Vec<u32>>) {
+    let t0 = Instant::now();
+    let handles: Vec<_> = prompts
+        .iter()
+        .map(|p| {
+            coordinator
+                .submit(EvalRequest::generate(p.clone(), scheme, "w16", NEW_TOKENS))
+                .expect("submit")
+        })
+        .collect();
+    let outputs: Vec<Vec<u32>> =
+        handles.into_iter().map(|h| h.wait().expect("generate").generated).collect();
+    (t0.elapsed().as_secs_f64(), outputs)
+}
+
+fn measure(
+    name: &str,
+    coordinator: &EvalCoordinator,
+    scheme: ActScheme,
+    cfg: ModelConfig,
+    mut serial: impl FnMut(&[Vec<u32>]) -> (Vec<Vec<u32>>, f64),
+) -> Json {
+    println!("--- {name} ---");
+    let cells: Vec<Cell> = SESSIONS
+        .iter()
+        .map(|&n| {
+            let prompts = prompts_for(n, cfg);
+            // warm the engine's model/calibration caches out of the timing
+            let _ = run_engine(coordinator, scheme, &prompts[..1]);
+            let (serial_outs, serial_wall) = serial(&prompts);
+            let (engine_wall, engine_outs) = run_engine(coordinator, scheme, &prompts);
+            let bit_identical = engine_outs == serial_outs;
+            assert!(bit_identical, "{name}@{n}: engine must match sequential decode exactly");
+            let total = (n * NEW_TOKENS) as f64;
+            // client-observed per-token latency: engine sessions decode
+            // concurrently (all finish ≈ at the wall), while a serial
+            // client waits behind every earlier session — session i
+            // completes after i+1 generations, so the mean completion is
+            // wall·(n+1)/(2n)
+            let serial_mean_completion = serial_wall * (n as f64 + 1.0) / (2.0 * n as f64);
+            let cell = Cell {
+                sessions: n,
+                engine_tok_s: total / engine_wall.max(1e-12),
+                serial_tok_s: total / serial_wall.max(1e-12),
+                engine_token_latency_ms: engine_wall * 1e3 / NEW_TOKENS as f64,
+                serial_token_latency_ms: serial_mean_completion * 1e3 / NEW_TOKENS as f64,
+                bit_identical,
+            };
+            println!(
+                "  {n:2} sessions: engine {:8.0} tok/s, serial {:8.0} tok/s, speedup {:.2}x",
+                cell.engine_tok_s,
+                cell.serial_tok_s,
+                cell.speedup()
+            );
+            cell
+        })
+        .collect();
+    Json::obj(vec![
+        ("scheme", Json::str(name)),
+        ("sessions", Json::arr(cells.iter().map(|c| c.json()).collect())),
+    ])
+}
+
+fn main() {
+    let cfg = ModelConfig::default_build();
+    let weights = synthetic_weights(cfg, 77);
+    assert!(PROMPT_TOKENS + NEW_TOKENS <= cfg.seq_len);
+
+    println!(
+        "continuous batching, {} prompt + {} new tokens, model d={} L={} vocab={} — {} worker \
+         threads\n",
+        PROMPT_TOKENS,
+        NEW_TOKENS,
+        cfg.d_model,
+        cfg.n_layers,
+        cfg.vocab,
+        par::max_threads()
+    );
+
+    // the coordinator under test: native executor (no artifacts on disk),
+    // engine wide enough for the largest session count
+    let dir = std::env::temp_dir().join(format!("cq-cb-bench-{}", std::process::id()));
+    std::fs::create_dir_all(&dir).expect("bench tempdir");
+    let coordinator = EvalCoordinator::start(
+        ArtifactStore { dir: dir.clone() },
+        cfg,
+        vec![("w16".to_string(), weights.flat.clone())],
+        CoordinatorConfig {
+            engine: EngineConfig {
+                max_active_seqs: *SESSIONS.iter().max().unwrap(),
+                kv_pool_bytes: None,
+                max_waiting: 64,
+            },
+            ..Default::default()
+        },
+    );
+
+    // serial PR 3 baselines share the engine's exact model construction
+    let native = NativeModel::new(weights.clone());
+    let dynamic_scheme = ActScheme::CrossQuant { alpha: ALPHA, qmax: 127.0 };
+    let dyn_json = measure("crossquant-dynamic", &coordinator, dynamic_scheme, cfg, |prompts| {
+        let mut site = QuantSite::new(CrossQuant::new(ALPHA, Bits::Int8));
+        let mut dec = NativeDecoder { model: &native, site: &mut site };
+        let (outs, wall) = generate_serial(&mut dec, prompts, NEW_TOKENS).expect("serial");
+        (outs, wall.as_secs_f64())
+    });
+
+    let mut qstat = QuantizedModel::new(
+        &weights,
+        Bits::Int8,
+        Bits::Int8,
+        QuantPath::CrossQuant { alpha: ALPHA },
+    )
+    .expect("static model");
+    // identical calibration stream to the executor's (scheduler.rs), so
+    // the serial reference and the served model share their scale folds
+    let mut gen = CorpusGen::new(cfg.vocab, 0x5CA1E);
+    let calib: Vec<Vec<u32>> = (0..8).map(|_| gen.sequence(cfg.seq_len)).collect();
+    qstat.calibrate_static(ALPHA, &calib).expect("calibration");
+    let static_scheme = ActScheme::CrossQuantStatic { alpha: ALPHA, qmax: 127.0 };
+    let stat_json = measure("crossquant-static", &coordinator, static_scheme, cfg, |prompts| {
+        let mut dec = QuantizedDecoder(&qstat);
+        let (outs, wall) = generate_serial(&mut dec, prompts, NEW_TOKENS).expect("serial");
+        (outs, wall.as_secs_f64())
+    });
+
+    // fp rounds out the picture (and exercises the engine's IdentitySite path)
+    let fp_json = measure("fp", &coordinator, ActScheme::Fp, cfg, |prompts| {
+        let mut site = IdentitySite;
+        let mut dec = NativeDecoder { model: &native, site: &mut site };
+        let (outs, wall) = generate_serial(&mut dec, prompts, NEW_TOKENS).expect("serial");
+        (outs, wall.as_secs_f64())
+    });
+
+    let occupancy = coordinator.metrics.batch_occupancy();
+    println!("\nengine batch occupancy over the run: {occupancy:.2}");
+    coordinator.shutdown();
+    let _ = std::fs::remove_dir_all(&dir);
+
+    let json = Json::obj(vec![
+        ("bench", Json::str("continuous_batching")),
+        ("prompt_tokens", Json::num(PROMPT_TOKENS as f64)),
+        ("new_tokens", Json::num(NEW_TOKENS as f64)),
+        ("threads", Json::num(par::max_threads() as f64)),
+        ("batch_occupancy", Json::num(occupancy)),
+        ("schemes", Json::arr(vec![dyn_json, stat_json, fp_json])),
+    ]);
+    let path: PathBuf =
+        PathBuf::from(concat!(env!("CARGO_MANIFEST_DIR"), "/../BENCH_continuous_batching.json"));
+    match std::fs::write(&path, json.render_pretty()) {
+        Ok(()) => println!("wrote {}", path.display()),
+        Err(e) => eprintln!("could not write {}: {e}", path.display()),
+    }
+}

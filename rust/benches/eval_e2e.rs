@@ -119,6 +119,7 @@ fn main() {
                 batch_size,
                 max_batch_delay: Duration::from_millis(2),
                 max_queue: 256,
+                engine: Default::default(),
             },
         );
         let r = bench(label, Duration::from_millis(1500), || {

@@ -1,10 +1,16 @@
-//! Scheme-keyed dynamic batching.
+//! Scheme-keyed dynamic batching — the **scoring** path's policy.
 //!
 //! Requests targeting the same (artifact, scalars, weight-set) key are
 //! accumulated until the batch reaches the artifact's fixed batch size or a
 //! deadline elapses — the standard dynamic-batching policy of LLM serving
 //! routers, scaled to this evaluation workload. Pure logic (time injected),
 //! fully unit-testable.
+//!
+//! Generation requests bypass the accumulator entirely (see the batch
+//! loop in `coordinator::scheduler`): the continuous-batching engine
+//! re-batches decode work at *step* granularity, so holding a generation
+//! request back for the flush deadline would only add admission latency
+//! without improving its batching.
 
 use std::collections::HashMap;
 use std::time::{Duration, Instant};

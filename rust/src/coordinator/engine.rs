@@ -1,0 +1,653 @@
+//! The continuous-batching generation engine (vLLM's idea at this
+//! system's scale): instead of running each `generate` request's decode
+//! loop alone at M=1 on the executor thread, active sequences share one
+//! batched transformer step per token — late-arriving requests join the
+//! running batch at *step* granularity instead of waiting for earlier
+//! generations to finish.
+//!
+//! Three pieces:
+//!
+//! * [`KvPool`] — a bounded arena of preallocated per-layer K/V slots
+//!   ([`DecodeState`]s), leased to sequences and reset on release, with
+//!   `memory_bytes()` accounting. Replaces the one-fresh-allocation-per-
+//!   request behaviour of the serial path and bounds decode memory.
+//! * the sequence manager — admission queue (`waiting`) plus the active
+//!   set: prompt-prefill pending → decoding → finished, with admission
+//!   control that queues when the pool is exhausted and rejects with a
+//!   structured error when the queue itself is full.
+//! * the step loop ([`Engine::tick`]) — admits what fits, then stacks all
+//!   active sequences' next tokens into one M=N matrix per scheme group
+//!   and drives `forward_step_batched` (native or true-integer), sampling
+//!   one token per sequence per step and streaming it to the client.
+//!
+//! Bit-exactness contract: a sequence decoded by the engine produces
+//! exactly the tokens `generate_greedy` would have produced alone, for
+//! every served scheme — the batched step applies activation-site
+//! transforms per row and all shared math is per-row deterministic (see
+//! `model::block::forward_step_batched`). Pinned by rust/tests/engine.rs.
+//!
+//! The engine is owned and ticked by the coordinator's executor thread
+//! (models are not Sync); [`EngineModels`] is the narrow accessor the
+//! executor exposes for model lookup/calibration.
+
+use std::collections::VecDeque;
+use std::sync::atomic::Ordering::Relaxed;
+use std::sync::mpsc::{Sender, SyncSender};
+use std::sync::Arc;
+use std::time::Instant;
+
+use anyhow::{anyhow, ensure, Result};
+
+use super::metrics::Metrics;
+use super::scheduler::{EvalResponse, SchemeSite};
+use super::{ActScheme, SchemeKey};
+use crate::model::block::{self, DecodeState};
+use crate::model::{ActSite, ModelConfig, NativeModel, QuantizedModel};
+use crate::tensor::Matrix;
+
+/// One streamed decode event: sequence `seq` produced `token`.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct GenEvent {
+    pub seq: u64,
+    pub token: u32,
+}
+
+/// Engine knobs, surfaced as `repro serve --max-active-seqs` /
+/// `--kv-pool-mb` / `--admission-queue`.
+#[derive(Clone, Debug)]
+pub struct EngineConfig {
+    /// Upper bound on concurrently decoding sequences (the step-batch M).
+    pub max_active_seqs: usize,
+    /// Byte budget for the KV arena; the pool holds
+    /// `min(max_active_seqs, budget / slot_bytes)` slots (at least one).
+    /// `None` sizes the pool to `max_active_seqs` slots.
+    pub kv_pool_bytes: Option<usize>,
+    /// Admission-queue bound: sequences waiting for a KV slot beyond this
+    /// are rejected with a structured error instead of queueing unbounded.
+    /// Clamped to ≥ 1 — every submission passes through the queue on its
+    /// way to a slot, so a zero-length queue could admit nothing.
+    pub max_waiting: usize,
+}
+
+impl Default for EngineConfig {
+    fn default() -> Self {
+        EngineConfig { max_active_seqs: 32, kv_pool_bytes: None, max_waiting: 256 }
+    }
+}
+
+/// A bounded arena of preallocated KV-cache slots. Leasing pops a slot
+/// (reset to an empty prefix); releasing returns it. All slots are
+/// allocated up front, so `memory_bytes()` is both the current and the
+/// peak footprint of engine decode state.
+pub struct KvPool {
+    free: Vec<DecodeState>,
+    slots: usize,
+    slot_bytes: usize,
+}
+
+impl KvPool {
+    pub fn new(slots: usize, model: ModelConfig) -> KvPool {
+        assert!(slots >= 1, "a KV pool needs at least one slot");
+        let free: Vec<DecodeState> = (0..slots)
+            .map(|_| DecodeState::new(model.n_layers, model.seq_len, model.d_model))
+            .collect();
+        let slot_bytes = free[0].memory_bytes();
+        KvPool { free, slots, slot_bytes }
+    }
+
+    /// Pool sized from an [`EngineConfig`]: `max_active_seqs` slots,
+    /// shrunk to fit the byte budget (clamped to one slot — a pool that
+    /// can serve nothing would deadlock admission).
+    pub fn with_config(cfg: &EngineConfig, model: ModelConfig) -> KvPool {
+        let slot_bytes =
+            DecodeState::memory_bytes_for(model.n_layers, model.seq_len, model.d_model);
+        let by_budget = cfg
+            .kv_pool_bytes
+            .map(|b| (b / slot_bytes.max(1)).max(1))
+            .unwrap_or(usize::MAX);
+        KvPool::new(cfg.max_active_seqs.max(1).min(by_budget), model)
+    }
+
+    /// Lease a slot, reset to an empty prefix. `None` when exhausted —
+    /// the caller queues or rejects.
+    pub fn lease(&mut self) -> Option<DecodeState> {
+        self.free.pop().map(|mut s| {
+            s.reset();
+            s
+        })
+    }
+
+    /// Return a slot to the pool.
+    pub fn release(&mut self, state: DecodeState) {
+        debug_assert!(self.free.len() < self.slots, "released more slots than exist");
+        self.free.push(state);
+    }
+
+    pub fn slots(&self) -> usize {
+        self.slots
+    }
+
+    pub fn in_use(&self) -> usize {
+        self.slots - self.free.len()
+    }
+
+    /// Bytes of one slot (one sequence's full-stack KV capacity).
+    pub fn slot_bytes(&self) -> usize {
+        self.slot_bytes
+    }
+
+    /// Total arena bytes (allocation is up-front, so also the peak).
+    pub fn memory_bytes(&self) -> usize {
+        self.slots * self.slot_bytes
+    }
+}
+
+/// What the executor hands the engine for one generation request.
+pub(crate) struct GenRequest {
+    pub tokens: Vec<u32>,
+    pub scheme: ActScheme,
+    pub key: SchemeKey,
+    pub max_new: usize,
+    pub resp: SyncSender<Result<EvalResponse>>,
+    pub events: Option<Sender<GenEvent>>,
+    pub submitted: Instant,
+}
+
+/// Per-sequence activation-site state: native schemes carry their own
+/// [`SchemeSite`] (so aux accounting and batch-coupled scale fields stay
+/// per-sequence); the integer static path quantizes inside its GEMMs.
+enum SeqSite {
+    Native(SchemeSite),
+    Integer,
+}
+
+/// One decoding sequence (prefill already done).
+struct GenSeq {
+    id: u64,
+    scheme: ActScheme,
+    key: SchemeKey,
+    max_new: usize,
+    generated: Vec<u32>,
+    state: DecodeState,
+    site: SeqSite,
+    /// Last sampled token — the input to the next batched step.
+    next: u32,
+    resp: SyncSender<Result<EvalResponse>>,
+    events: Option<Sender<GenEvent>>,
+    submitted: Instant,
+}
+
+/// Narrow model accessor the executor exposes to the engine (lazy
+/// construction + static-scale calibration live behind it).
+pub(crate) trait EngineModels {
+    fn native_model(&mut self, weight_set: &str) -> Result<&NativeModel>;
+    fn static_model(&mut self, weight_set: &str, alpha: f32) -> Result<&QuantizedModel>;
+}
+
+pub(crate) struct Engine {
+    cfg: EngineConfig,
+    pool: KvPool,
+    waiting: VecDeque<GenRequest>,
+    active: Vec<GenSeq>,
+    next_id: u64,
+    metrics: Arc<Metrics>,
+}
+
+impl Engine {
+    pub(crate) fn new(mut cfg: EngineConfig, model: ModelConfig, metrics: Arc<Metrics>) -> Engine {
+        cfg.max_waiting = cfg.max_waiting.max(1);
+        let pool = KvPool::with_config(&cfg, model);
+        metrics.kv_pool_slots.store(pool.slots() as u64, Relaxed);
+        metrics.kv_pool_slot_bytes.store(pool.slot_bytes() as u64, Relaxed);
+        Engine { cfg, pool, waiting: VecDeque::new(), active: Vec::new(), next_id: 0, metrics }
+    }
+
+    /// No admitted or waiting work — the executor may block for requests.
+    pub(crate) fn is_idle(&self) -> bool {
+        self.active.is_empty() && self.waiting.is_empty()
+    }
+
+    /// Enqueue a generation request. Admission control: the request waits
+    /// for a KV slot in a bounded queue; when the queue is full it is
+    /// rejected immediately with a structured error (never a panic, never
+    /// unbounded memory).
+    pub(crate) fn submit(&mut self, req: GenRequest) {
+        if self.waiting.len() >= self.cfg.max_waiting {
+            self.metrics.engine_rejected.fetch_add(1, Relaxed);
+            self.metrics.failed.fetch_add(1, Relaxed);
+            let _ = req.resp.send(Err(anyhow!(
+                "engine at capacity: {} sequences active, admission queue full ({})",
+                self.active.len(),
+                self.cfg.max_waiting
+            )));
+            return;
+        }
+        self.waiting.push_back(req);
+        self.update_gauges();
+    }
+
+    /// One engine round: admit what fits (prefill runs here), then one
+    /// batched decode step per scheme group, then retire finished
+    /// sequences. The executor calls this between channel polls, which is
+    /// exactly how late arrivals join the running batch.
+    pub(crate) fn tick(&mut self, models: &mut dyn EngineModels) {
+        self.admit(models);
+        self.step(models);
+        self.update_gauges();
+    }
+
+    /// Fail every queued and active sequence (models unavailable).
+    pub(crate) fn fail_all(&mut self, why: &str) {
+        for req in std::mem::take(&mut self.waiting) {
+            self.metrics.failed.fetch_add(1, Relaxed);
+            let _ = req.resp.send(Err(anyhow!("{why}")));
+        }
+        for seq in std::mem::take(&mut self.active) {
+            self.fail(seq, why);
+        }
+        self.update_gauges();
+    }
+
+    fn admit(&mut self, models: &mut dyn EngineModels) {
+        while self.active.len() < self.cfg.max_active_seqs && !self.waiting.is_empty() {
+            let Some(state) = self.pool.lease() else { break };
+            let req = self.waiting.pop_front().expect("non-empty checked above");
+            self.admit_one(models, req, state);
+        }
+    }
+
+    /// Prefill one request into its leased slot and move it to the active
+    /// set (or straight to finished when `max_new == 1`).
+    fn admit_one(
+        &mut self,
+        models: &mut dyn EngineModels,
+        req: GenRequest,
+        mut state: DecodeState,
+    ) {
+        let id = self.next_id;
+        self.next_id += 1;
+        let run: Result<(SeqSite, Matrix)> = (|| {
+            match req.scheme {
+                ActScheme::CrossQuantStatic { alpha, qmax } => {
+                    ensure!(
+                        alpha.is_finite() && (0.0..=1.0).contains(&alpha),
+                        "bad alpha {alpha}"
+                    );
+                    ensure!(
+                        (qmax - 127.0).abs() < 0.5,
+                        "native static path serves the INT8 grid (qmax 127), got {qmax}"
+                    );
+                    let model = models.static_model(&req.key.weight_set, alpha)?;
+                    let logits = model.forward_incremental_with(&req.tokens, &mut state, true)?;
+                    Ok((SeqSite::Integer, logits))
+                }
+                scheme => {
+                    let mut site = SchemeSite::build(scheme)?;
+                    let model = models.native_model(&req.key.weight_set)?;
+                    let logits =
+                        model.forward_incremental_with(&req.tokens, &mut state, site.site(), true)?;
+                    Ok((SeqSite::Native(site), logits))
+                }
+            }
+        })();
+        match run {
+            Err(e) => {
+                self.metrics.failed.fetch_add(1, Relaxed);
+                let _ = req.resp.send(Err(e));
+                self.pool.release(state);
+            }
+            Ok((site, logits)) => {
+                let tok = block::argmax(logits.row(logits.rows - 1)) as u32;
+                let seq = GenSeq {
+                    id,
+                    scheme: req.scheme,
+                    key: req.key,
+                    max_new: req.max_new,
+                    generated: vec![tok],
+                    state,
+                    site,
+                    next: tok,
+                    resp: req.resp,
+                    events: req.events,
+                    submitted: req.submitted,
+                };
+                if let Some(ev) = &seq.events {
+                    let _ = ev.send(GenEvent { seq: id, token: tok });
+                }
+                if seq.generated.len() >= seq.max_new {
+                    self.finish(seq);
+                } else {
+                    self.active.push(seq);
+                }
+            }
+        }
+    }
+
+    /// One batched decode step per scheme group: all sequences sharing a
+    /// [`SchemeKey`] stack their next tokens into one M=N forward.
+    fn step(&mut self, models: &mut dyn EngineModels) {
+        if self.active.is_empty() {
+            return;
+        }
+        // partition the active set by key in one pass (admission order is
+        // preserved within each group)
+        let mut groups: Vec<(SchemeKey, Vec<GenSeq>)> = Vec::new();
+        for seq in std::mem::take(&mut self.active) {
+            match groups.iter_mut().find(|(k, _)| *k == seq.key) {
+                Some((_, group)) => group.push(seq),
+                None => {
+                    let key = seq.key.clone();
+                    groups.push((key, vec![seq]));
+                }
+            }
+        }
+        for (key, mut group) in groups {
+            let t0 = Instant::now();
+            let result = Self::step_group(models, &key, &mut group);
+            self.metrics.engine_steps.fetch_add(1, Relaxed);
+            self.metrics.engine_stepped_seqs.fetch_add(group.len() as u64, Relaxed);
+            self.metrics
+                .engine_decode_time_us
+                .fetch_add(t0.elapsed().as_micros() as u64, Relaxed);
+            match result {
+                Ok(()) => {
+                    self.metrics.engine_decoded_tokens.fetch_add(group.len() as u64, Relaxed);
+                    for seq in group {
+                        if seq.generated.len() >= seq.max_new {
+                            self.finish(seq);
+                        } else {
+                            self.active.push(seq);
+                        }
+                    }
+                }
+                Err(e) => {
+                    let why = format!("{e}");
+                    for seq in group {
+                        self.fail(seq, &why);
+                    }
+                }
+            }
+        }
+    }
+
+    fn step_group(
+        models: &mut dyn EngineModels,
+        key: &SchemeKey,
+        seqs: &mut [GenSeq],
+    ) -> Result<()> {
+        let scheme = seqs[0].scheme;
+        let tokens: Vec<u32> = seqs.iter().map(|s| s.next).collect();
+        let logits = match scheme {
+            ActScheme::CrossQuantStatic { alpha, .. } => {
+                let model = models.static_model(&key.weight_set, alpha)?;
+                let mut states: Vec<&mut DecodeState> =
+                    seqs.iter_mut().map(|s| &mut s.state).collect();
+                model.forward_step_batched(&tokens, &mut states)?
+            }
+            _ => {
+                let model = models.native_model(&key.weight_set)?;
+                let (mut states, mut sites): (Vec<&mut DecodeState>, Vec<&mut SeqSite>) =
+                    seqs.iter_mut().map(|s| (&mut s.state, &mut s.site)).unzip();
+                let mut hook = |row: usize, idx: usize, x: Matrix| match &mut *sites[row] {
+                    SeqSite::Native(ss) => ss.site().apply(idx, x),
+                    SeqSite::Integer => x,
+                };
+                // identity sites transform nothing — skip the per-row
+                // split on the fp path entirely
+                let hook_opt: Option<&mut dyn FnMut(usize, usize, Matrix) -> Matrix> =
+                    if matches!(scheme, ActScheme::Fp) { None } else { Some(&mut hook) };
+                model.forward_step_batched(&tokens, &mut states, hook_opt)?
+            }
+        };
+        for (i, s) in seqs.iter_mut().enumerate() {
+            let tok = block::argmax(logits.row(i)) as u32;
+            s.next = tok;
+            s.generated.push(tok);
+            if let Some(ev) = &s.events {
+                let _ = ev.send(GenEvent { seq: s.id, token: tok });
+            }
+        }
+        Ok(())
+    }
+
+    fn finish(&mut self, seq: GenSeq) {
+        let aux = match &seq.site {
+            SeqSite::Native(s) => s.aux(),
+            SeqSite::Integer => 0.0,
+        };
+        self.metrics.completed.fetch_add(1, Relaxed);
+        self.metrics.record_latency(seq.submitted.elapsed().as_micros() as u64);
+        let _ = seq.resp.send(Ok(EvalResponse {
+            nll: Vec::new(),
+            aux,
+            generated: seq.generated,
+        }));
+        self.pool.release(seq.state);
+    }
+
+    fn fail(&mut self, seq: GenSeq, why: &str) {
+        self.metrics.failed.fetch_add(1, Relaxed);
+        let _ = seq.resp.send(Err(anyhow!("{why}")));
+        self.pool.release(seq.state);
+    }
+
+    fn update_gauges(&self) {
+        self.metrics.engine_active_seqs.store(self.active.len() as u64, Relaxed);
+        self.metrics.engine_queue_depth.store(self.waiting.len() as u64, Relaxed);
+        self.metrics.kv_pool_in_use.store(self.pool.in_use() as u64, Relaxed);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use std::sync::mpsc::{channel, sync_channel, Receiver};
+
+    use super::*;
+    use crate::corpus::CorpusGen;
+    use crate::model::weights::synthetic_weights;
+    use crate::model::{IdentitySite, QuantPath};
+    use crate::quant::Bits;
+
+    fn cfg() -> ModelConfig {
+        ModelConfig {
+            vocab: 64,
+            d_model: 16,
+            n_layers: 2,
+            n_heads: 2,
+            d_ff: 32,
+            seq_len: 24,
+            eval_batch: 2,
+        }
+    }
+
+    /// Minimal [`EngineModels`]: one native model, lazily calibrated
+    /// static model — mirroring the executor's calibration stream.
+    struct TestModels {
+        native: NativeModel,
+        static_m: Option<QuantizedModel>,
+    }
+
+    impl TestModels {
+        fn new(seed: u64) -> TestModels {
+            TestModels { native: NativeModel::new(synthetic_weights(cfg(), seed)), static_m: None }
+        }
+    }
+
+    impl EngineModels for TestModels {
+        fn native_model(&mut self, _ws: &str) -> Result<&NativeModel> {
+            Ok(&self.native)
+        }
+
+        fn static_model(&mut self, _ws: &str, alpha: f32) -> Result<&QuantizedModel> {
+            if self.static_m.is_none() {
+                let mut qm = QuantizedModel::new(
+                    &self.native.weights,
+                    Bits::Int8,
+                    Bits::Int8,
+                    QuantPath::CrossQuant { alpha },
+                )?;
+                let mut gen = CorpusGen::new(cfg().vocab, 0x5CA1E);
+                let calib: Vec<Vec<u32>> = (0..4).map(|_| gen.sequence(cfg().seq_len)).collect();
+                qm.calibrate_static(alpha, &calib)?;
+                self.static_m = Some(qm);
+            }
+            Ok(self.static_m.as_ref().expect("installed above"))
+        }
+    }
+
+    #[allow(clippy::type_complexity)]
+    fn gen_req(
+        tokens: Vec<u32>,
+        scheme: ActScheme,
+        max_new: usize,
+    ) -> (GenRequest, Receiver<Result<EvalResponse>>, Receiver<GenEvent>) {
+        let (resp_tx, resp_rx) = sync_channel(1);
+        let (ev_tx, ev_rx) = channel();
+        let key = {
+            let mut k = scheme.key("w");
+            k.generate = true;
+            k
+        };
+        let req = GenRequest {
+            tokens,
+            scheme,
+            key,
+            max_new,
+            resp: resp_tx,
+            events: Some(ev_tx),
+            submitted: Instant::now(),
+        };
+        (req, resp_rx, ev_rx)
+    }
+
+    fn engine(max_active: usize, max_waiting: usize, kv_pool_bytes: Option<usize>) -> Engine {
+        Engine::new(
+            EngineConfig { max_active_seqs: max_active, kv_pool_bytes, max_waiting },
+            cfg(),
+            Arc::new(Metrics::new()),
+        )
+    }
+
+    #[test]
+    fn pool_lease_release_accounting() {
+        let mut pool = KvPool::new(2, cfg());
+        let per_slot = 2 * 2 * 24 * 16 * 4; // 2(K+V) · layers · ctx · d · f32
+        assert_eq!(pool.slot_bytes(), per_slot);
+        assert_eq!(pool.memory_bytes(), 2 * per_slot);
+        let a = pool.lease().expect("slot 0");
+        let _b = pool.lease().expect("slot 1");
+        assert!(pool.lease().is_none(), "exhausted pool must not lease");
+        assert_eq!(pool.in_use(), 2);
+        pool.release(a);
+        assert_eq!(pool.in_use(), 1);
+        let again = pool.lease().expect("released slot is reusable");
+        assert!(again.is_empty(), "leased slots start at an empty prefix");
+    }
+
+    #[test]
+    fn budget_clamps_pool_slots() {
+        let per_slot = 2 * 2 * 24 * 16 * 4;
+        let ec = EngineConfig {
+            max_active_seqs: 8,
+            kv_pool_bytes: Some(per_slot * 3 + 10),
+            max_waiting: 4,
+        };
+        assert_eq!(KvPool::with_config(&ec, cfg()).slots(), 3);
+        // budget below one slot still yields a working pool
+        let tiny = EngineConfig { kv_pool_bytes: Some(1), ..ec };
+        assert_eq!(KvPool::with_config(&tiny, cfg()).slots(), 1);
+    }
+
+    #[test]
+    fn queue_then_reject_when_pool_exhausted() {
+        // one slot, queue of one: seq A runs, B queues, C is rejected
+        let mut eng = engine(1, 1, None);
+        let mut models = TestModels::new(3);
+        let reference = |prompt: &[u32], n: usize| {
+            models.native.generate_greedy(prompt, n, &mut IdentitySite).unwrap()
+        };
+        let ra = reference(&[1, 2, 3], 6);
+        let rb = reference(&[4, 5], 4);
+        let (a, a_rx, a_ev) = gen_req(vec![1, 2, 3], ActScheme::Fp, 6);
+        let (b, b_rx, _b_ev) = gen_req(vec![4, 5], ActScheme::Fp, 4);
+        let (c, c_rx, _c_ev) = gen_req(vec![6], ActScheme::Fp, 2);
+        eng.submit(a);
+        eng.tick(&mut models); // A admitted (prefill + first step)
+        assert!(!eng.is_idle());
+        eng.submit(b); // pool exhausted → queues
+        eng.submit(c); // queue full → rejected immediately
+        let err = c_rx.recv().expect("rejection must respond").unwrap_err();
+        assert!(format!("{err}").contains("admission queue full"), "unexpected: {err}");
+        while !eng.is_idle() {
+            eng.tick(&mut models);
+        }
+        let resp_a = a_rx.recv().unwrap().unwrap();
+        let resp_b = b_rx.recv().unwrap().unwrap();
+        assert_eq!(resp_a.generated, ra, "A must match its solo decode");
+        assert_eq!(resp_b.generated, rb, "B must match its solo decode");
+        // streamed tokens equal the final payload
+        let streamed: Vec<u32> = a_ev.try_iter().map(|e| e.token).collect();
+        assert_eq!(streamed, resp_a.generated);
+        assert_eq!(eng.metrics.engine_rejected.load(Relaxed), 1);
+        assert_eq!(eng.metrics.kv_pool_in_use.load(Relaxed), 0);
+    }
+
+    #[test]
+    fn mid_flight_join_keeps_sequences_bit_exact() {
+        let mut eng = engine(4, 8, None);
+        let mut models = TestModels::new(7);
+        let ra = models.native.generate_greedy(&[1, 2, 3], 8, &mut IdentitySite).unwrap();
+        let rb = models.native.generate_greedy(&[9, 9], 5, &mut IdentitySite).unwrap();
+        let (a, a_rx, _) = gen_req(vec![1, 2, 3], ActScheme::Fp, 8);
+        eng.submit(a);
+        eng.tick(&mut models);
+        eng.tick(&mut models); // A is mid-decode…
+        let (b, b_rx, _) = gen_req(vec![9, 9], ActScheme::Fp, 5);
+        eng.submit(b); // …when B joins the running batch
+        while !eng.is_idle() {
+            eng.tick(&mut models);
+        }
+        assert_eq!(a_rx.recv().unwrap().unwrap().generated, ra);
+        assert_eq!(b_rx.recv().unwrap().unwrap().generated, rb);
+        // at least one step ran with both sequences stacked
+        assert!(eng.metrics.batch_occupancy() > 1.0, "join must share steps");
+    }
+
+    #[test]
+    fn scheme_groups_step_independently_and_stay_exact() {
+        // fp and crossquant-static sequences decode concurrently; each
+        // matches its own solo reference
+        let mut eng = engine(4, 8, None);
+        let mut models = TestModels::new(11);
+        let r_fp = models.native.generate_greedy(&[1, 2, 3, 4], 6, &mut IdentitySite).unwrap();
+        let r_st = models
+            .static_model("w", 0.15)
+            .unwrap()
+            .generate_greedy(&[1, 2, 3, 4], 6)
+            .unwrap();
+        let (a, a_rx, _) =
+            gen_req(vec![1, 2, 3, 4], ActScheme::CrossQuantStatic { alpha: 0.15, qmax: 127.0 }, 6);
+        let (b, b_rx, _) = gen_req(vec![1, 2, 3, 4], ActScheme::Fp, 6);
+        eng.submit(a);
+        eng.submit(b);
+        while !eng.is_idle() {
+            eng.tick(&mut models);
+        }
+        assert_eq!(a_rx.recv().unwrap().unwrap().generated, r_st);
+        assert_eq!(b_rx.recv().unwrap().unwrap().generated, r_fp);
+    }
+
+    #[test]
+    fn malformed_static_request_fails_cleanly() {
+        let mut eng = engine(2, 4, None);
+        let mut models = TestModels::new(13);
+        // qmax off the INT8 grid: structured error at admission, slot freed
+        let (a, a_rx, _) =
+            gen_req(vec![1, 2], ActScheme::CrossQuantStatic { alpha: 0.15, qmax: 50.0 }, 3);
+        eng.submit(a);
+        eng.tick(&mut models);
+        assert!(a_rx.recv().unwrap().is_err());
+        assert!(eng.is_idle());
+        assert_eq!(eng.pool.in_use(), 0, "failed admission must release its slot");
+    }
+}

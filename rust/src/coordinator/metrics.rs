@@ -1,7 +1,12 @@
 //! Coordinator metrics: lock-free counters + a fixed-bucket latency
-//! histogram, printable as a one-line summary or a detailed report.
+//! histogram, printable as a one-line summary or a detailed report, plus
+//! the continuous-batching engine's gauges (batch occupancy, admission
+//! queue depth, KV-pool utilisation, aggregate decode throughput) —
+//! rendered as structured JSON for the `{"cmd": "metrics"}` wire command.
 
 use std::sync::atomic::{AtomicU64, Ordering};
+
+use crate::util::Json;
 
 /// Latency buckets in microseconds.
 const BUCKETS_US: [u64; 10] =
@@ -16,6 +21,28 @@ pub struct Metrics {
     pub batched_requests: AtomicU64,
     pub executions: AtomicU64,
     pub queue_depth: AtomicU64,
+    // --- continuous-batching engine ---
+    /// Executed engine steps (one batched forward per scheme group).
+    pub engine_steps: AtomicU64,
+    /// Sequences stepped, summed over steps (occupancy numerator).
+    pub engine_stepped_seqs: AtomicU64,
+    /// Tokens decoded by the engine (excludes prefill).
+    pub engine_decoded_tokens: AtomicU64,
+    /// Wall time spent inside batched decode steps, microseconds.
+    pub engine_decode_time_us: AtomicU64,
+    /// Gauge: sequences currently decoding.
+    pub engine_active_seqs: AtomicU64,
+    /// Gauge: sequences waiting in the admission queue.
+    pub engine_queue_depth: AtomicU64,
+    /// Requests rejected because the admission queue was full.
+    pub engine_rejected: AtomicU64,
+    // --- KV pool ---
+    /// Gauge: total preallocated KV slots.
+    pub kv_pool_slots: AtomicU64,
+    /// Gauge: slots currently leased to sequences.
+    pub kv_pool_in_use: AtomicU64,
+    /// Gauge: bytes of one slot (= `DecodeState::memory_bytes()`).
+    pub kv_pool_slot_bytes: AtomicU64,
     latency_buckets: [AtomicU64; BUCKETS_US.len() + 1],
     latency_sum_us: AtomicU64,
 }
@@ -62,6 +89,55 @@ impl Metrics {
             return 0.0;
         }
         self.batched_requests.load(Ordering::Relaxed) as f64 / b as f64
+    }
+
+    /// Mean sequences per executed engine step — the continuous-batching
+    /// win in one number (1.0 = the serial pre-engine behaviour).
+    pub fn batch_occupancy(&self) -> f64 {
+        let steps = self.engine_steps.load(Ordering::Relaxed);
+        if steps == 0 {
+            return 0.0;
+        }
+        self.engine_stepped_seqs.load(Ordering::Relaxed) as f64 / steps as f64
+    }
+
+    /// Aggregate decode throughput across all engine sequences, tokens/s.
+    pub fn engine_decode_tok_s(&self) -> f64 {
+        let us = self.engine_decode_time_us.load(Ordering::Relaxed);
+        if us == 0 {
+            return 0.0;
+        }
+        self.engine_decoded_tokens.load(Ordering::Relaxed) as f64 / (us as f64 / 1e6)
+    }
+
+    /// Engine + KV-pool state as structured JSON — the `{"cmd":
+    /// "metrics"}` payload's `"engine"` object (the PR 3 gap: KV
+    /// `memory_bytes()` accounting existed but never crossed the wire).
+    pub fn engine_json(&self) -> Json {
+        let load = |a: &AtomicU64| a.load(Ordering::Relaxed) as f64;
+        let slot_bytes = load(&self.kv_pool_slot_bytes);
+        Json::obj(vec![
+            ("active_seqs", Json::num(load(&self.engine_active_seqs))),
+            ("queue_depth", Json::num(load(&self.engine_queue_depth))),
+            ("rejected", Json::num(load(&self.engine_rejected))),
+            ("steps", Json::num(load(&self.engine_steps))),
+            ("decoded_tokens", Json::num(load(&self.engine_decoded_tokens))),
+            ("batch_occupancy", Json::num(self.batch_occupancy())),
+            ("decode_tok_s", Json::num(self.engine_decode_tok_s())),
+            (
+                "kv_pool",
+                Json::obj(vec![
+                    ("slots", Json::num(load(&self.kv_pool_slots))),
+                    ("slots_in_use", Json::num(load(&self.kv_pool_in_use))),
+                    ("bytes_per_seq", Json::num(slot_bytes)),
+                    ("bytes", Json::num(load(&self.kv_pool_slots) * slot_bytes)),
+                    (
+                        "bytes_in_use",
+                        Json::num(load(&self.kv_pool_in_use) * slot_bytes),
+                    ),
+                ]),
+            ),
+        ])
     }
 
     pub fn summary(&self) -> String {
@@ -114,5 +190,26 @@ mod tests {
     fn summary_renders() {
         let m = Metrics::new();
         assert!(m.summary().contains("submitted=0"));
+    }
+
+    #[test]
+    fn engine_gauges_and_occupancy() {
+        let m = Metrics::new();
+        assert_eq!(m.batch_occupancy(), 0.0);
+        assert_eq!(m.engine_decode_tok_s(), 0.0);
+        m.engine_steps.store(4, Ordering::Relaxed);
+        m.engine_stepped_seqs.store(10, Ordering::Relaxed);
+        m.engine_decoded_tokens.store(10, Ordering::Relaxed);
+        m.engine_decode_time_us.store(2_000_000, Ordering::Relaxed);
+        assert!((m.batch_occupancy() - 2.5).abs() < 1e-9);
+        assert!((m.engine_decode_tok_s() - 5.0).abs() < 1e-9);
+        m.kv_pool_slots.store(4, Ordering::Relaxed);
+        m.kv_pool_in_use.store(3, Ordering::Relaxed);
+        m.kv_pool_slot_bytes.store(1024, Ordering::Relaxed);
+        let j = m.engine_json();
+        let kv = j.get("kv_pool").expect("kv_pool object");
+        assert_eq!(kv.get("bytes").and_then(|v| v.as_f64()), Some(4096.0));
+        assert_eq!(kv.get("bytes_in_use").and_then(|v| v.as_f64()), Some(3072.0));
+        assert_eq!(j.get("batch_occupancy").and_then(|v| v.as_f64()), Some(2.5));
     }
 }

@@ -3,13 +3,17 @@
 //! executor thread owning the (non-Send) PJRT client, backpressure, and
 //! metrics. This is the paper-system's "serving" shell: quantized-LM
 //! evaluation requests go in, per-token NLLs come out, Python nowhere on
-//! the path.
+//! the path. Generation requests are served by the continuous-batching
+//! [`engine`] (pooled KV slots, step-granular admission, per-token
+//! streaming) instead of one serial decode loop per request.
 
 pub mod batcher;
+pub mod engine;
 pub mod metrics;
 pub mod scheduler;
 pub mod server;
 
+pub use engine::{EngineConfig, GenEvent, KvPool};
 pub use metrics::Metrics;
 pub use scheduler::{EvalCoordinator, EvalRequest, EvalResponse, RequestKind};
 pub use server::EvalServer;

@@ -9,19 +9,34 @@
 //! surface is expressed with plain threads + channels; the protocol
 //! (scheme-keyed dynamic batching with a flush deadline) is identical.
 //!
+//! Scoring requests execute as fixed-shape batches exactly as before.
+//! **Generation requests route to the continuous-batching
+//! [`Engine`](super::engine::Engine)**: the executor polls its channel
+//! non-blockingly while sequences are active and runs one batched decode
+//! step between polls, so late-arriving generations join the running
+//! batch at step granularity instead of waiting behind earlier requests
+//! (the serial PR 3 behaviour). Per-token streaming is exposed through
+//! [`EvalCoordinator::submit_streaming`].
+//!
 //! When no PJRT runtime is linked (the offline build's `xla` stub), the
-//! executor thread falls back to a [`NativeExecutor`]: the same batching
-//! protocol served by [`NativeModel`] forwards, with the fused
-//! `analysis::quantize_with_report` path at every activation site.
+//! executor serves the same protocol through a [`NativeExecutor`]; a
+//! PJRT-linked executor still routes static-scale scoring and all
+//! generation through a lazily built native sidecar.
+//!
+//! [`EvalCoordinator::shutdown`] drains in-flight work (including active
+//! engine sequences) and joins both threads; dropping every coordinator
+//! clone triggers the same drain, so the threads are never leaked.
 
 use std::collections::HashMap;
-use std::sync::mpsc::{Receiver, RecvTimeoutError, SyncSender};
-use std::sync::Arc;
+use std::sync::mpsc::{Receiver, RecvTimeoutError, Sender, SyncSender, TryRecvError};
+use std::sync::{Arc, Mutex};
+use std::thread::JoinHandle;
 use std::time::{Duration, Instant};
 
 use anyhow::{anyhow, ensure, Result};
 
 use super::batcher::{BatchAccumulator, ReadyBatch};
+use super::engine::{Engine, EngineConfig, EngineModels, GenEvent, GenRequest};
 use super::metrics::Metrics;
 use super::{ActScheme, SchemeKey};
 use crate::corpus::CorpusGen;
@@ -96,16 +111,52 @@ pub struct EvalResponse {
     /// generation requests.
     pub nll: Vec<f32>,
     /// Scheme-reported auxiliary scalar (kernel fraction / removed
-    /// fraction), measured over the whole executed batch. 0.0 for FP.
+    /// fraction). Batch-level for scoring; per-sequence for engine
+    /// generation. 0.0 for FP and the integer path.
     pub aux: f32,
     /// Greedy-decoded token ids — empty for scoring requests.
     pub generated: Vec<u32>,
 }
 
-struct Pending {
+pub(crate) struct Pending {
     req: EvalRequest,
     resp: SyncSender<Result<EvalResponse>>,
+    /// Streaming sink: one [`GenEvent`] per decoded token (generation
+    /// requests submitted through `submit_streaming`).
+    events: Option<Sender<GenEvent>>,
     submitted: Instant,
+}
+
+impl Pending {
+    fn into_gen_request(self) -> GenRequest {
+        let max_new = match self.req.kind {
+            RequestKind::Generate { max_new_tokens } => max_new_tokens,
+            RequestKind::Score => unreachable!("scoring batches never route to the engine"),
+        };
+        let key = self.req.key();
+        GenRequest {
+            tokens: self.req.tokens,
+            scheme: self.req.scheme,
+            key,
+            max_new,
+            resp: self.resp,
+            events: self.events,
+            submitted: self.submitted,
+        }
+    }
+}
+
+/// Submit-side message: a request, or the shutdown marker that tells the
+/// batcher to flush and exit (forwarded to the executor so it drains).
+enum Msg {
+    Req(Pending),
+    Shutdown,
+}
+
+/// Batcher → executor message.
+enum ExecMsg {
+    Batch(ReadyBatch<Pending>),
+    Shutdown,
 }
 
 /// Await-able response slot for one submitted request.
@@ -130,9 +181,11 @@ impl ResponseHandle {
 
 #[derive(Clone)]
 pub struct EvalCoordinator {
-    tx: SyncSender<Pending>,
+    tx: SyncSender<Msg>,
     pub metrics: Arc<Metrics>,
     config: ModelConfig,
+    /// Batcher + executor handles, joined by [`EvalCoordinator::shutdown`].
+    threads: Arc<Mutex<Vec<JoinHandle<()>>>>,
 }
 
 pub struct CoordinatorConfig {
@@ -142,6 +195,8 @@ pub struct CoordinatorConfig {
     pub max_batch_delay: Duration,
     /// Bounded submit queue (backpressure limit).
     pub max_queue: usize,
+    /// Continuous-batching engine knobs (KV pool size, admission queue).
+    pub engine: EngineConfig,
 }
 
 impl Default for CoordinatorConfig {
@@ -150,6 +205,7 @@ impl Default for CoordinatorConfig {
             batch_size: 8,
             max_batch_delay: Duration::from_millis(5),
             max_queue: 256,
+            engine: EngineConfig::default(),
         }
     }
 }
@@ -166,39 +222,45 @@ impl EvalCoordinator {
         cfg: CoordinatorConfig,
     ) -> EvalCoordinator {
         let metrics = Arc::new(Metrics::new());
-        let (tx, rx) = std::sync::mpsc::sync_channel::<Pending>(cfg.max_queue);
-        let (batch_tx, batch_rx) = std::sync::mpsc::sync_channel::<ReadyBatch<Pending>>(16);
+        let (tx, rx) = std::sync::mpsc::sync_channel::<Msg>(cfg.max_queue);
+        let (batch_tx, batch_rx) = std::sync::mpsc::sync_channel::<ExecMsg>(16);
 
         let m1 = metrics.clone();
         let batch_size = cfg.batch_size;
         let max_delay = cfg.max_batch_delay;
-        std::thread::Builder::new()
+        let batcher = std::thread::Builder::new()
             .name("cq-batcher".into())
             .spawn(move || batch_loop(rx, batch_tx, batch_size, max_delay, m1))
             .expect("spawn batcher");
 
         let m2 = metrics.clone();
-        std::thread::Builder::new()
+        let engine_cfg = cfg.engine;
+        let executor = std::thread::Builder::new()
             .name("pjrt-executor".into())
-            .spawn(move || executor_loop(store, model_config, weight_sets, batch_rx, m2))
+            .spawn(move || {
+                executor_loop(store, model_config, weight_sets, batch_rx, m2, engine_cfg)
+            })
             .expect("spawn executor");
 
-        EvalCoordinator { tx, metrics, config: model_config }
+        EvalCoordinator {
+            tx,
+            metrics,
+            config: model_config,
+            threads: Arc::new(Mutex::new(vec![batcher, executor])),
+        }
     }
 
-    /// Submit one request; returns a handle resolving when its batch has
-    /// executed. Blocks when the submit queue is full (backpressure).
-    pub fn submit(&self, req: EvalRequest) -> Result<ResponseHandle> {
+    fn validate(&self, req: &EvalRequest) -> Result<()> {
         match req.kind {
-            RequestKind::Score => anyhow::ensure!(
+            RequestKind::Score => ensure!(
                 req.tokens.len() >= 2 && req.tokens.len() <= self.config.seq_len,
                 "sequence length {} out of range",
                 req.tokens.len()
             ),
             RequestKind::Generate { max_new_tokens } => {
-                anyhow::ensure!(!req.tokens.is_empty(), "generation needs a non-empty prompt");
-                anyhow::ensure!(max_new_tokens >= 1, "max_new_tokens must be >= 1");
-                anyhow::ensure!(
+                ensure!(!req.tokens.is_empty(), "generation needs a non-empty prompt");
+                ensure!(max_new_tokens >= 1, "max_new_tokens must be >= 1");
+                ensure!(
                     req.tokens.len() + max_new_tokens <= self.config.seq_len,
                     "prompt length {} + max_new_tokens {max_new_tokens} exceeds model \
                      context {}",
@@ -207,12 +269,60 @@ impl EvalCoordinator {
                 );
             }
         }
+        Ok(())
+    }
+
+    fn send(
+        &self,
+        req: EvalRequest,
+        events: Option<Sender<GenEvent>>,
+    ) -> Result<ResponseHandle> {
+        self.validate(&req)?;
         let (resp_tx, resp_rx) = std::sync::mpsc::sync_channel(1);
         self.metrics.submitted.fetch_add(1, std::sync::atomic::Ordering::Relaxed);
         self.tx
-            .send(Pending { req, resp: resp_tx, submitted: Instant::now() })
+            .send(Msg::Req(Pending { req, resp: resp_tx, events, submitted: Instant::now() }))
             .map_err(|_| anyhow!("coordinator shut down"))?;
         Ok(ResponseHandle { rx: resp_rx })
+    }
+
+    /// Submit one request; returns a handle resolving when its batch has
+    /// executed. Blocks when the submit queue is full (backpressure).
+    pub fn submit(&self, req: EvalRequest) -> Result<ResponseHandle> {
+        self.send(req, None)
+    }
+
+    /// Submit a generation request with per-token streaming: every decoded
+    /// token arrives as a [`GenEvent`] on the returned receiver (which
+    /// closes when the sequence finishes or fails), and the final
+    /// [`EvalResponse`] resolves on the handle as usual. The stream is
+    /// unbounded, so a slow consumer never stalls the engine's step loop.
+    pub fn submit_streaming(
+        &self,
+        req: EvalRequest,
+    ) -> Result<(Receiver<GenEvent>, ResponseHandle)> {
+        ensure!(
+            matches!(req.kind, RequestKind::Generate { .. }),
+            "streaming requires a generation request"
+        );
+        let (ev_tx, ev_rx) = std::sync::mpsc::channel();
+        let handle = self.send(req, Some(ev_tx))?;
+        Ok((ev_rx, handle))
+    }
+
+    /// Graceful shutdown: flush pending batches, drain in-flight engine
+    /// sequences (every accepted request still gets its response), and
+    /// join the batcher and executor threads. Idempotent; later `submit`s
+    /// fail with "coordinator shut down".
+    pub fn shutdown(&self) {
+        let mut threads = self.threads.lock().expect("shutdown mutex");
+        if threads.is_empty() {
+            return; // already shut down
+        }
+        let _ = self.tx.send(Msg::Shutdown);
+        for h in threads.drain(..) {
+            let _ = h.join();
+        }
     }
 
     /// Convenience: evaluate a set of sequences (pipelined through the
@@ -244,8 +354,8 @@ impl EvalCoordinator {
 }
 
 fn batch_loop(
-    rx: Receiver<Pending>,
-    batch_tx: SyncSender<ReadyBatch<Pending>>,
+    rx: Receiver<Msg>,
+    batch_tx: SyncSender<ExecMsg>,
     batch_size: usize,
     max_delay: Duration,
     metrics: Arc<Metrics>,
@@ -257,22 +367,39 @@ fn batch_loop(
             .map(|d| d.saturating_duration_since(Instant::now()))
             .unwrap_or(Duration::from_secs(3600));
         match rx.recv_timeout(timeout) {
-            Ok(p) => {
+            Ok(Msg::Req(p)) => {
                 let key = p.req.key();
-                metrics.queue_depth.store(
-                    acc.pending_requests() as u64 + 1,
-                    std::sync::atomic::Ordering::Relaxed,
-                );
-                if let Some(batch) = acc.push(key, p, Instant::now()) {
-                    dispatch(&batch_tx, batch, &metrics);
+                if key.generate {
+                    // continuous batching: the engine re-batches decode at
+                    // step granularity, so holding generation requests for
+                    // the dynamic-batching deadline would only add
+                    // admission latency — dispatch immediately
+                    dispatch(&batch_tx, ReadyBatch { key, requests: vec![p] }, &metrics);
+                } else {
+                    metrics.queue_depth.store(
+                        acc.pending_requests() as u64 + 1,
+                        std::sync::atomic::Ordering::Relaxed,
+                    );
+                    if let Some(batch) = acc.push(key, p, Instant::now()) {
+                        dispatch(&batch_tx, batch, &metrics);
+                    }
                 }
             }
-            Err(RecvTimeoutError::Timeout) => { /* deadline tick */ }
-            Err(RecvTimeoutError::Disconnected) => {
+            Ok(Msg::Shutdown) => {
                 for batch in acc.flush_all() {
                     dispatch(&batch_tx, batch, &metrics);
                 }
-                return; // all senders dropped
+                let _ = batch_tx.send(ExecMsg::Shutdown);
+                return;
+            }
+            Err(RecvTimeoutError::Timeout) => { /* deadline tick */ }
+            Err(RecvTimeoutError::Disconnected) => {
+                // all coordinator clones dropped: same drain as shutdown
+                for batch in acc.flush_all() {
+                    dispatch(&batch_tx, batch, &metrics);
+                }
+                let _ = batch_tx.send(ExecMsg::Shutdown);
+                return;
             }
         }
         for batch in acc.flush_expired(Instant::now()) {
@@ -281,85 +408,135 @@ fn batch_loop(
     }
 }
 
-fn dispatch(
-    tx: &SyncSender<ReadyBatch<Pending>>,
-    batch: ReadyBatch<Pending>,
-    metrics: &Metrics,
-) {
+fn dispatch(tx: &SyncSender<ExecMsg>, batch: ReadyBatch<Pending>, metrics: &Metrics) {
     metrics.batches.fetch_add(1, std::sync::atomic::Ordering::Relaxed);
     metrics
         .batched_requests
         .fetch_add(batch.requests.len() as u64, std::sync::atomic::Ordering::Relaxed);
     // sync_channel send blocks when the executor is saturated —
     // intended backpressure toward the batcher.
-    let _ = tx.send(batch);
+    let _ = tx.send(ExecMsg::Batch(batch));
 }
 
+/// The executor's model backend: PJRT runtime with a lazily built native
+/// sidecar, or the native executor alone (offline builds). The sidecar is
+/// built from the retained weight literals on first use, so plain PJRT
+/// scoring never holds a second f32 copy of the weights.
+enum Backend {
+    Pjrt {
+        runtime: Runtime,
+        literals: HashMap<String, xla::Literal>,
+        native: Option<NativeExecutor>,
+    },
+    Native(NativeExecutor),
+}
+
+impl Backend {
+    fn native_mut(&mut self, cfg: ModelConfig) -> Result<&mut NativeExecutor> {
+        match self {
+            Backend::Native(n) => Ok(n),
+            Backend::Pjrt { literals, native, .. } => {
+                if native.is_none() {
+                    let sets = literals
+                        .iter()
+                        .map(|(k, v)| Ok((k.clone(), literal_to_vec(v)?)))
+                        .collect::<Result<Vec<_>>>()?;
+                    *native = Some(NativeExecutor::new(cfg, sets));
+                }
+                Ok(native.as_mut().expect("initialised above"))
+            }
+        }
+    }
+
+    /// Execute one scoring batch on the right path: PJRT for artifact
+    /// schemes, the native executor for static-scale scoring and for
+    /// every scheme on offline builds.
+    fn execute_scoring(
+        &mut self,
+        cfg: ModelConfig,
+        batch: &ReadyBatch<Pending>,
+    ) -> Result<Vec<EvalResponse>> {
+        let needs_native =
+            matches!(batch.requests[0].req.scheme, ActScheme::CrossQuantStatic { .. });
+        if needs_native {
+            return self.native_mut(cfg)?.execute_batch(batch);
+        }
+        match self {
+            Backend::Native(n) => n.execute_batch(batch),
+            Backend::Pjrt { runtime, literals, .. } => execute_batch(runtime, cfg, literals, batch),
+        }
+    }
+}
+
+/// The executor thread: scoring batches execute as they arrive; generation
+/// batches are admitted into the continuous-batching engine, which is
+/// ticked between channel polls. While sequences are decoding the channel
+/// is polled non-blockingly, so a request arriving mid-generation joins
+/// the very next batched step.
 fn executor_loop(
     store: ArtifactStore,
     cfg: ModelConfig,
     weight_sets: Vec<(String, Vec<f32>)>,
-    rx: Receiver<ReadyBatch<Pending>>,
+    rx: Receiver<ExecMsg>,
     metrics: Arc<Metrics>,
+    engine_cfg: EngineConfig,
 ) {
-    match Runtime::new(store) {
-        Ok(mut runtime) => {
-            // the static-scale scheme and the generation kind have no AOT
-            // artifact (the lowered graphs are fixed-shape scoring), so
-            // even a PJRT-linked executor serves them through the native
-            // models — every protocol request works on every build. The
-            // native executor is built lazily from the retained literals
-            // on the first such batch, so plain fp/crossquant scoring
-            // never holds a second f32 copy of the weights.
-            let weights: HashMap<String, xla::Literal> =
+    let mut engine = Engine::new(engine_cfg, cfg, metrics.clone());
+    let mut backend = match Runtime::new(store) {
+        Ok(runtime) => {
+            let literals: HashMap<String, xla::Literal> =
                 weight_sets.into_iter().map(|(k, v)| (k, vec_literal(&v))).collect();
-            let mut native: Option<NativeExecutor> = None;
-            while let Ok(batch) = rx.recv() {
-                let req0 = &batch.requests[0].req;
-                let serve_native = matches!(req0.scheme, ActScheme::CrossQuantStatic { .. })
-                    || matches!(req0.kind, RequestKind::Generate { .. });
-                let result = if serve_native {
-                    native_for_fallback(&mut native, cfg, &weights)
-                        .and_then(|n| n.execute_batch(&batch))
-                } else {
-                    execute_batch(&mut runtime, cfg, &weights, &batch)
-                };
-                metrics.executions.fetch_add(1, std::sync::atomic::Ordering::Relaxed);
-                respond(batch, result, &metrics);
-            }
+            Backend::Pjrt { runtime, literals, native: None }
         }
         Err(e) => {
             // No PJRT runtime linked: serve the same protocol with the
             // native executor instead of failing every request.
-            eprintln!(
-                "coordinator: PJRT unavailable ({e}); falling back to the native executor"
-            );
-            let mut native = NativeExecutor::new(cfg, weight_sets);
-            while let Ok(batch) = rx.recv() {
-                let result = native.execute_batch(&batch);
-                metrics.executions.fetch_add(1, std::sync::atomic::Ordering::Relaxed);
-                respond(batch, result, &metrics);
+            eprintln!("coordinator: PJRT unavailable ({e}); falling back to the native executor");
+            Backend::Native(NativeExecutor::new(cfg, weight_sets))
+        }
+    };
+    let mut draining = false;
+    loop {
+        let msg = if engine.is_idle() {
+            if draining {
+                return; // drained and told to stop
+            }
+            match rx.recv() {
+                Ok(m) => Some(m),
+                Err(_) => return, // channel closed, nothing in flight
+            }
+        } else {
+            match rx.try_recv() {
+                Ok(m) => Some(m),
+                Err(TryRecvError::Empty) => None,
+                Err(TryRecvError::Disconnected) => {
+                    draining = true;
+                    None
+                }
+            }
+        };
+        match msg {
+            Some(ExecMsg::Batch(batch)) => {
+                if batch.key.generate {
+                    for p in batch.requests {
+                        engine.submit(p.into_gen_request());
+                    }
+                } else {
+                    let result = backend.execute_scoring(cfg, &batch);
+                    metrics.executions.fetch_add(1, std::sync::atomic::Ordering::Relaxed);
+                    respond(batch, result, &metrics);
+                }
+            }
+            Some(ExecMsg::Shutdown) => draining = true,
+            None => {}
+        }
+        if !engine.is_idle() {
+            match backend.native_mut(cfg) {
+                Ok(native) => engine.tick(native),
+                Err(e) => engine.fail_all(&format!("engine models unavailable: {e}")),
             }
         }
     }
-}
-
-/// Lazily build the PJRT branch's sidecar [`NativeExecutor`] from the
-/// already-uploaded weight literals — paid only on the first
-/// `CrossQuantStatic` or generation batch, never for plain PJRT scoring.
-fn native_for_fallback<'a>(
-    native: &'a mut Option<NativeExecutor>,
-    cfg: ModelConfig,
-    weights: &HashMap<String, xla::Literal>,
-) -> Result<&'a mut NativeExecutor> {
-    if native.is_none() {
-        let sets = weights
-            .iter()
-            .map(|(k, v)| Ok((k.clone(), literal_to_vec(v)?)))
-            .collect::<Result<Vec<_>>>()?;
-        *native = Some(NativeExecutor::new(cfg, sets));
-    }
-    Ok(native.as_mut().expect("initialised above"))
 }
 
 /// Fan a batch result out to its requests (success and failure paths
@@ -407,17 +584,18 @@ impl ActQuantizer for RuntimeCrossQuant {
     }
 }
 
-/// Builds the [`ActSite`] for one native scheme and reports its
-/// batch-level aux scalar — scheme validation and aux accounting live in
-/// exactly one place, shared by the scoring and generation paths.
-enum SchemeSite {
+/// Builds the [`ActSite`] for one native scheme and reports its aux
+/// scalar — scheme validation and aux accounting live in exactly one
+/// place, shared by the scoring path and the engine (which keeps one
+/// site per sequence, so aux is per-sequence under continuous batching).
+pub(crate) enum SchemeSite {
     Identity(IdentitySite),
     Cross(QuantSite<RuntimeCrossQuant>),
     Remove(RemoveKernelSite),
 }
 
 impl SchemeSite {
-    fn build(scheme: ActScheme) -> Result<SchemeSite> {
+    pub(crate) fn build(scheme: ActScheme) -> Result<SchemeSite> {
         match scheme {
             ActScheme::Fp => Ok(SchemeSite::Identity(IdentitySite)),
             // the native forward has no separate fused-graph variant —
@@ -446,7 +624,7 @@ impl SchemeSite {
         }
     }
 
-    fn site(&mut self) -> &mut dyn ActSite {
+    pub(crate) fn site(&mut self) -> &mut dyn ActSite {
         match self {
             SchemeSite::Identity(s) => s,
             SchemeSite::Cross(s) => s,
@@ -454,7 +632,7 @@ impl SchemeSite {
         }
     }
 
-    fn aux(&self) -> f32 {
+    pub(crate) fn aux(&self) -> f32 {
         match self {
             SchemeSite::Identity(_) => 0.0,
             SchemeSite::Cross(s) => s.kernel_fraction(),
@@ -464,12 +642,13 @@ impl SchemeSite {
 }
 
 /// The offline executor: reconstructs each registered weight set into a
-/// [`NativeModel`] (lazily, cached per set) and runs batches through the
-/// native forward pass — scoring and KV-cached greedy generation.
+/// [`NativeModel`] (lazily, cached per set) and runs scoring batches
+/// through the native forward pass; the continuous-batching engine
+/// borrows its models through [`EngineModels`] for generation.
 /// Activation sites use the fused `quantize_with_report` sweep via
-/// [`QuantSite`], and `aux` is measured over the whole executed batch —
-/// the same batch-level scalar the PJRT artifacts emit.
-struct NativeExecutor {
+/// [`QuantSite`], and scoring `aux` is measured over the whole executed
+/// batch — the same batch-level scalar the PJRT artifacts emit.
+pub(crate) struct NativeExecutor {
     cfg: ModelConfig,
     weight_sets: HashMap<String, Vec<f32>>,
     models: HashMap<String, NativeModel>,
@@ -539,6 +718,7 @@ impl NativeExecutor {
     }
 
     fn execute_batch(&mut self, batch: &ReadyBatch<Pending>) -> Result<Vec<EvalResponse>> {
+        ensure!(!batch.key.generate, "generation batches are served by the engine");
         let vocab = self.cfg.vocab;
         for p in &batch.requests {
             ensure!(
@@ -546,7 +726,7 @@ impl NativeExecutor {
                 "token id out of range (vocab {vocab})"
             );
         }
-        // requests in a batch share a key, so scheme and kind are uniform
+        // requests in a batch share a key, so the scheme is uniform
         let scheme = batch.requests[0].req.scheme;
         if let ActScheme::CrossQuantStatic { alpha, qmax } = scheme {
             ensure!(alpha.is_finite() && (0.0..=1.0).contains(&alpha), "bad alpha {alpha}");
@@ -557,38 +737,37 @@ impl NativeExecutor {
                 "native static path serves the INT8 grid (qmax 127), got {qmax}"
             );
             let model = self.static_model_for(&batch.key.weight_set, alpha)?;
-            let mut responses = Vec::with_capacity(batch.requests.len());
-            for p in &batch.requests {
-                // the integer path reports no kernel statistic (aux = 0)
-                responses.push(match p.req.kind {
-                    RequestKind::Score => EvalResponse {
+            return batch
+                .requests
+                .iter()
+                .map(|p| {
+                    // the integer path reports no kernel statistic (aux = 0)
+                    Ok(EvalResponse {
                         nll: model.forward_nll(&p.req.tokens)?,
                         aux: 0.0,
                         generated: Vec::new(),
-                    },
-                    RequestKind::Generate { max_new_tokens } => EvalResponse {
-                        nll: Vec::new(),
-                        aux: 0.0,
-                        generated: model.generate_greedy(&p.req.tokens, max_new_tokens)?,
-                    },
-                });
-            }
-            return Ok(responses);
+                    })
+                })
+                .collect();
         }
         let mut site = SchemeSite::build(scheme)?;
         let model = self.model_for(&batch.key.weight_set)?;
         let mut rows = Vec::with_capacity(batch.requests.len());
         for p in &batch.requests {
-            rows.push(match p.req.kind {
-                RequestKind::Score => (model.forward_nll(&p.req.tokens, site.site())?, Vec::new()),
-                RequestKind::Generate { max_new_tokens } => (
-                    Vec::new(),
-                    model.generate_greedy(&p.req.tokens, max_new_tokens, site.site())?,
-                ),
-            });
+            rows.push(model.forward_nll(&p.req.tokens, site.site())?);
         }
         let aux = site.aux();
-        Ok(rows.into_iter().map(|(nll, generated)| EvalResponse { nll, aux, generated }).collect())
+        Ok(rows.into_iter().map(|nll| EvalResponse { nll, aux, generated: Vec::new() }).collect())
+    }
+}
+
+impl EngineModels for NativeExecutor {
+    fn native_model(&mut self, weight_set: &str) -> Result<&NativeModel> {
+        self.model_for(weight_set)
+    }
+
+    fn static_model(&mut self, weight_set: &str, alpha: f32) -> Result<&QuantizedModel> {
+        self.static_model_for(weight_set, alpha)
     }
 }
 

@@ -8,40 +8,93 @@
 //!            "crossquant-static"|"fp"|"remove-kernel", "alpha": 0.15,
 //!            "qmax": 127.0, "theta": 0.004, "weight_set": "w16"}
 //!           …with "max_new_tokens": N present, the tokens are a prompt
-//!           and the request is greedy generation instead of scoring
+//!           and the request is greedy generation instead of scoring;
+//!           adding "stream": true streams the decode as it happens
 //!           {"cmd": "metrics"}   |   {"cmd": "ping"}
 //! response: {"ok": true, "nll": [...], "ppl": ..., "aux": ...}
 //!           {"ok": true, "generated": [...], "prompt_tokens": N, "aux": ...}
 //!           {"ok": false, "error": "..."}
+//!
+//! Streaming responses ("stream": true): one `{"token": t, "seq": s}`
+//! line per decoded token as the continuous-batching engine produces it,
+//! then a final summary line
+//! `{"ok": true, "done": true, "seq": s, "generated": [...],
+//!   "prompt_tokens": N, "aux": ...}`. Errors terminate the stream with
+//! the standard `{"ok": false, ...}` line.
+//!
+//! Connections are capped (default 256, `EvalServer::with_max_connections`):
+//! over-limit clients receive a structured
+//! `{"ok": false, "error": "server at connection capacity"}` line and are
+//! disconnected instead of spawning threads without bound.
 
 use std::io::{BufRead, BufReader, Write};
 use std::net::{TcpListener, TcpStream};
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::Arc;
 
 use anyhow::{anyhow, Result};
 
-use super::scheduler::{EvalCoordinator, EvalRequest};
+use super::scheduler::{EvalCoordinator, EvalRequest, RequestKind};
 use super::ActScheme;
 use crate::util::Json;
 
+/// Default cap on concurrent client connections.
+pub const DEFAULT_MAX_CONNECTIONS: usize = 256;
+
 pub struct EvalServer {
     pub coordinator: EvalCoordinator,
+    max_connections: usize,
+    active_connections: Arc<AtomicUsize>,
 }
 
 impl EvalServer {
     pub fn new(coordinator: EvalCoordinator) -> EvalServer {
-        EvalServer { coordinator }
+        EvalServer {
+            coordinator,
+            max_connections: DEFAULT_MAX_CONNECTIONS,
+            active_connections: Arc::new(AtomicUsize::new(0)),
+        }
     }
 
-    /// Serve forever on `listener`; one thread per connection (the PJRT
-    /// executor thread is the actual concurrency bottleneck, and the
-    /// batcher merges concurrent clients into shared batches — that is the
-    /// point of the coordinator).
+    /// Cap concurrent connections (clamped to ≥ 1).
+    pub fn with_max_connections(mut self, max: usize) -> EvalServer {
+        self.max_connections = max.max(1);
+        self
+    }
+
+    /// Connections currently being served (observability / tests).
+    pub fn active_connections(&self) -> usize {
+        self.active_connections.load(Ordering::SeqCst)
+    }
+
+    /// Serve forever on `listener`; one thread per connection, capped at
+    /// `max_connections` — over-limit clients get a structured error line
+    /// and are disconnected, so a connection flood cannot spawn threads
+    /// without bound. (The executor thread is the actual compute
+    /// bottleneck; the batcher and the generation engine merge concurrent
+    /// clients into shared executions — that is the point of the
+    /// coordinator.)
     pub fn serve(&self, listener: TcpListener) -> Result<()> {
         for stream in listener.incoming() {
-            let stream = stream?;
+            let mut stream = stream?;
+            // optimistic reserve: revert when over the cap (keeps the
+            // accept loop free of locks)
+            let n = self.active_connections.fetch_add(1, Ordering::SeqCst);
+            if n >= self.max_connections {
+                self.active_connections.fetch_sub(1, Ordering::SeqCst);
+                let refusal = Json::obj(vec![
+                    ("ok", Json::Bool(false)),
+                    ("error", Json::str("server at connection capacity")),
+                ]);
+                let _ = stream.write_all(refusal.render().as_bytes());
+                let _ = stream.write_all(b"\n");
+                continue; // drop closes the socket
+            }
             let coordinator = self.coordinator.clone();
+            let active = self.active_connections.clone();
             std::thread::spawn(move || {
                 let _ = handle_connection(coordinator, stream);
+                active.fetch_sub(1, Ordering::SeqCst);
             });
         }
         Ok(())
@@ -57,6 +110,29 @@ fn handle_connection(coordinator: EvalCoordinator, stream: TcpStream) -> Result<
         if line.trim().is_empty() {
             continue;
         }
+        // streamed generation writes its own lines; everything else is
+        // one-request → one-response
+        let streamed = match Json::parse(&line) {
+            Ok(req) if wants_stream(&req) => {
+                match handle_stream(&coordinator, &mut writer, &req) {
+                    Ok(()) => true,
+                    Err(e) => {
+                        write_line(
+                            &mut writer,
+                            &Json::obj(vec![
+                                ("ok", Json::Bool(false)),
+                                ("error", Json::str(format!("{e}"))),
+                            ]),
+                        )?;
+                        true
+                    }
+                }
+            }
+            _ => false,
+        };
+        if streamed {
+            continue;
+        }
         let response = match handle_line(&coordinator, &line) {
             Ok(json) => json,
             Err(e) => Json::obj(vec![
@@ -64,29 +140,25 @@ fn handle_connection(coordinator: EvalCoordinator, stream: TcpStream) -> Result<
                 ("error", Json::str(format!("{e}"))),
             ]),
         };
-        writer.write_all(response.render().as_bytes())?;
-        writer.write_all(b"\n")?;
+        write_line(&mut writer, &response)?;
     }
     let _ = peer;
     Ok(())
 }
 
-/// Parse one request line, run it, build the response (pure except for the
-/// coordinator call — unit-testable).
-pub fn handle_line(coordinator: &EvalCoordinator, line: &str) -> Result<Json> {
-    let req = Json::parse(line)?;
+fn write_line(writer: &mut impl Write, json: &Json) -> Result<()> {
+    writer.write_all(json.render().as_bytes())?;
+    writer.write_all(b"\n")?;
+    Ok(())
+}
 
-    if let Some(cmd) = req.get("cmd").and_then(|c| c.as_str()) {
-        return match cmd {
-            "ping" => Ok(Json::obj(vec![("ok", Json::Bool(true)), ("pong", Json::Bool(true))])),
-            "metrics" => Ok(Json::obj(vec![
-                ("ok", Json::Bool(true)),
-                ("metrics", Json::str(coordinator.metrics.summary())),
-            ])),
-            other => Err(anyhow!("unknown cmd '{other}'")),
-        };
-    }
+fn wants_stream(req: &Json) -> bool {
+    req.get("stream") == Some(&Json::Bool(true))
+}
 
+/// Parse one evaluation request (scoring or generation) from its JSON
+/// object — shared by the plain and streaming paths.
+fn parse_request(req: &Json) -> Result<EvalRequest> {
     let tokens: Vec<u32> = req
         .req("tokens")?
         .as_arr()
@@ -118,27 +190,100 @@ pub fn handle_line(coordinator: &EvalCoordinator, line: &str) -> Result<Json> {
         let max_new = max_new
             .as_usize()
             .ok_or_else(|| anyhow!("'max_new_tokens' must be a non-negative integer"))?;
-        let prompt_tokens = tokens.len();
-        let resp = coordinator
-            .submit(EvalRequest::generate(tokens, scheme, weight_set, max_new))?
-            .wait()?;
-        return Ok(Json::obj(vec![
+        Ok(EvalRequest::generate(tokens, scheme, weight_set, max_new))
+    } else {
+        Ok(EvalRequest::score(tokens, scheme, weight_set))
+    }
+}
+
+/// Streamed generation: one `{"token": ..., "seq": ...}` line per decoded
+/// token, then the final summary line.
+fn handle_stream(
+    coordinator: &EvalCoordinator,
+    writer: &mut impl Write,
+    req: &Json,
+) -> Result<()> {
+    let eval_req = parse_request(req)?;
+    anyhow::ensure!(
+        matches!(eval_req.kind, RequestKind::Generate { .. }),
+        "'stream': true requires 'max_new_tokens' (streaming is a generation feature)"
+    );
+    let prompt_tokens = eval_req.tokens.len();
+    let (events, handle) = coordinator.submit_streaming(eval_req)?;
+    let mut seq_id = 0u64;
+    for ev in events.iter() {
+        seq_id = ev.seq;
+        write_line(
+            writer,
+            &Json::obj(vec![
+                ("token", Json::num(ev.token as f64)),
+                ("seq", Json::num(ev.seq as f64)),
+            ]),
+        )?;
+    }
+    // the event sender is dropped when the sequence retires, so the
+    // response is already resolved here
+    let resp = handle.wait()?;
+    write_line(
+        writer,
+        &Json::obj(vec![
             ("ok", Json::Bool(true)),
+            ("done", Json::Bool(true)),
+            ("seq", Json::num(seq_id as f64)),
             (
                 "generated",
                 Json::arr(resp.generated.iter().map(|&t| Json::num(t as f64)).collect()),
             ),
             ("prompt_tokens", Json::num(prompt_tokens as f64)),
             ("aux", Json::num(resp.aux as f64)),
-        ]));
+        ]),
+    )
+}
+
+/// Parse one request line, run it, build the response (pure except for the
+/// coordinator call — unit-testable).
+pub fn handle_line(coordinator: &EvalCoordinator, line: &str) -> Result<Json> {
+    let req = Json::parse(line)?;
+
+    if let Some(cmd) = req.get("cmd").and_then(|c| c.as_str()) {
+        return match cmd {
+            "ping" => Ok(Json::obj(vec![("ok", Json::Bool(true)), ("pong", Json::Bool(true))])),
+            "metrics" => Ok(Json::obj(vec![
+                ("ok", Json::Bool(true)),
+                ("metrics", Json::str(coordinator.metrics.summary())),
+                // engine + KV-pool accounting (batch occupancy, queue
+                // depth, pool utilisation, aggregate decode tok/s)
+                ("engine", coordinator.metrics.engine_json()),
+            ])),
+            other => Err(anyhow!("unknown cmd '{other}'")),
+        };
     }
 
-    let resp = coordinator.submit(EvalRequest::score(tokens, scheme, weight_set))?.wait()?;
-    let mean = resp.nll.iter().map(|&v| v as f64).sum::<f64>() / resp.nll.len().max(1) as f64;
-    Ok(Json::obj(vec![
-        ("ok", Json::Bool(true)),
-        ("nll", Json::arr(resp.nll.iter().map(|&v| Json::num(v as f64)).collect())),
-        ("ppl", Json::num(mean.exp())),
-        ("aux", Json::num(resp.aux as f64)),
-    ]))
+    let eval_req = parse_request(&req)?;
+    match eval_req.kind {
+        RequestKind::Generate { .. } => {
+            let prompt_tokens = eval_req.tokens.len();
+            let resp = coordinator.submit(eval_req)?.wait()?;
+            Ok(Json::obj(vec![
+                ("ok", Json::Bool(true)),
+                (
+                    "generated",
+                    Json::arr(resp.generated.iter().map(|&t| Json::num(t as f64)).collect()),
+                ),
+                ("prompt_tokens", Json::num(prompt_tokens as f64)),
+                ("aux", Json::num(resp.aux as f64)),
+            ]))
+        }
+        RequestKind::Score => {
+            let resp = coordinator.submit(eval_req)?.wait()?;
+            let mean =
+                resp.nll.iter().map(|&v| v as f64).sum::<f64>() / resp.nll.len().max(1) as f64;
+            Ok(Json::obj(vec![
+                ("ok", Json::Bool(true)),
+                ("nll", Json::arr(resp.nll.iter().map(|&v| Json::num(v as f64)).collect())),
+                ("ppl", Json::num(mean.exp())),
+                ("aux", Json::num(resp.aux as f64)),
+            ]))
+        }
+    }
 }

@@ -131,6 +131,26 @@ pub fn generate_timed(
     Ok((tokens, timing))
 }
 
+/// The serial one-at-a-time baseline over a set of prompts — exactly what
+/// the pre-engine executor did: each generation runs alone at M=1, the
+/// next starts only when the previous finishes. Returns every output plus
+/// the total wall time; `n·max_new / wall` is the baseline aggregate
+/// decode throughput that `benches/continuous_batching.rs` compares the
+/// engine against.
+pub fn generate_serial(
+    decoder: &mut dyn IncrementalDecoder,
+    prompts: &[Vec<u32>],
+    max_new_tokens: usize,
+) -> Result<(Vec<Vec<u32>>, Duration)> {
+    let t0 = Instant::now();
+    let mut outputs = Vec::with_capacity(prompts.len());
+    for p in prompts {
+        let (tokens, _) = generate_timed(decoder, p, max_new_tokens)?;
+        outputs.push(tokens);
+    }
+    Ok((outputs, t0.elapsed()))
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -163,6 +183,20 @@ mod tests {
         assert_eq!(timing.new_tokens, 8);
         assert!(timing.prefill_tokens_per_s() > 0.0);
         assert!(timing.decode_tokens_per_s() > 0.0);
+    }
+
+    #[test]
+    fn serial_baseline_matches_per_prompt_generation() {
+        let model = NativeModel::new(synthetic_weights(cfg(), 33));
+        let prompts: Vec<Vec<u32>> = vec![vec![1, 2], vec![7, 8, 9]];
+        let mut site = IdentitySite;
+        let mut dec = NativeDecoder { model: &model, site: &mut site };
+        let (outs, wall) = generate_serial(&mut dec, &prompts, 5).unwrap();
+        assert_eq!(outs.len(), 2);
+        for (p, o) in prompts.iter().zip(&outs) {
+            assert_eq!(o, &model.generate_greedy(p, 5, &mut IdentitySite).unwrap());
+        }
+        assert!(wall > Duration::ZERO);
     }
 
     #[test]

@@ -7,6 +7,6 @@ pub mod harness;
 pub mod perplexity;
 pub mod tasks;
 
-pub use generation::{generate_timed, DecodeTiming, IncrementalDecoder};
+pub use generation::{generate_serial, generate_timed, DecodeTiming, IncrementalDecoder};
 pub use perplexity::{perplexity_native, PerplexityResult};
 pub use tasks::{Task, TaskResult, TaskSuite};

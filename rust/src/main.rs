@@ -40,7 +40,12 @@ commands:
   analyze                      kernel proportions across all profiles
   eval [--profile P] [--method M] [--setting S] [--alpha A] [--tasks]
   serve-eval [--requests N] [--alpha A]
-  serve [--addr HOST:PORT]     TCP line-protocol eval server
+  serve [--addr HOST:PORT]     TCP line-protocol eval + generation server
+        [--max-active-seqs N]  continuous-batching width (default 32)
+        [--kv-pool-mb MB]      KV-cache arena byte budget (default: unbounded
+                               up to max-active-seqs slots)
+        [--admission-queue N]  waiting sequences before rejection (default 256)
+        [--max-connections N]  concurrent client cap (default 256)
   reproduce <fig1|fig4|fig5|fig6|fig7|fig8|fig9|tab1|tab2|tab3|tab4|tab5|
              appendixA|weight-kernel|correlation|all> [--json PATH]
 
@@ -315,7 +320,7 @@ fn serve_eval(args: &Args, requests: usize, alpha: f32) -> Result<()> {
 }
 
 fn serve(args: &Args, addr: &str) -> Result<()> {
-    use crossquant::coordinator::EvalServer;
+    use crossquant::coordinator::{EngineConfig, EvalServer};
     // --synthetic serves random weights with no artifacts on disk: the
     // coordinator's native executor handles every scheme and the
     // generation kind, so the full protocol is demoable anywhere
@@ -342,13 +347,34 @@ fn serve(args: &Args, addr: &str) -> Result<()> {
         sets.push((name.to_string(), w.flat));
     }
 
-    let coordinator = EvalCoordinator::start(store, cfg, sets, CoordinatorConfig::default());
+    let defaults = EngineConfig::default();
+    let engine = EngineConfig {
+        max_active_seqs: args.num("max-active-seqs", defaults.max_active_seqs)?,
+        kv_pool_bytes: match args.get("kv-pool-mb") {
+            None => defaults.kv_pool_bytes,
+            Some(_) => Some(args.num::<usize>("kv-pool-mb", 0)? * 1024 * 1024),
+        },
+        max_waiting: args.num("admission-queue", defaults.max_waiting)?,
+    };
+    let max_connections = args.num("max-connections", 256usize)?;
+    let coordinator = EvalCoordinator::start(
+        store,
+        cfg,
+        sets,
+        CoordinatorConfig { engine, ..Default::default() },
+    );
     let listener = std::net::TcpListener::bind(addr)?;
     println!("serving quantized-LM evaluation + generation on {addr}");
     println!("  weight sets: w16, w8, w4g128 — protocol: one JSON per line");
+    println!(
+        "  continuous batching: {} max active seqs, {} max connections",
+        args.num("max-active-seqs", defaults.max_active_seqs)?,
+        max_connections
+    );
     println!("  score:    echo '{{\"tokens\": [1,2,3,4,5], \"scheme\": \"crossquant\", \"weight_set\": \"w8\"}}' | nc {addr}");
     println!("  generate: echo '{{\"tokens\": [1,2,3,4,5], \"scheme\": \"crossquant-static\", \"max_new_tokens\": 8}}' | nc {addr}");
-    EvalServer::new(coordinator).serve(listener)
+    println!("  stream:   add \"stream\": true for one {{\"token\": ...}} line per decoded token");
+    EvalServer::new(coordinator).with_max_connections(max_connections).serve(listener)
 }
 
 fn reproduce(args: &Args, opts: &ExpOpts, id: &str, json: Option<&Path>) -> Result<()> {

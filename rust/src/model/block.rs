@@ -68,10 +68,17 @@ impl LayerKvCache {
         debug_assert_eq!(k_new.cols, self.k.cols);
         assert!(self.len + k_new.rows <= self.k.rows, "KV cache overflow");
         for i in 0..k_new.rows {
-            self.k.row_mut(self.len + i).copy_from_slice(k_new.row(i));
-            self.v.row_mut(self.len + i).copy_from_slice(v_new.row(i));
+            self.append_row(k_new.row(i), v_new.row(i));
         }
-        self.len += k_new.rows;
+    }
+
+    /// Append one K/V row without materialising a 1-row [`Matrix`] — the
+    /// per-sequence path of the batched decode step.
+    fn append_row(&mut self, k_row: &[f32], v_row: &[f32]) {
+        assert!(self.len < self.k.rows, "KV cache overflow");
+        self.k.row_mut(self.len).copy_from_slice(k_row);
+        self.v.row_mut(self.len).copy_from_slice(v_row);
+        self.len += 1;
     }
 }
 
@@ -118,9 +125,25 @@ impl DecodeState {
         self.layers.iter().map(|l| l.memory_bytes()).sum()
     }
 
+    /// [`DecodeState::memory_bytes`] of a state with this shape, without
+    /// allocating one — pool sizing arithmetic.
+    pub fn memory_bytes_for(n_layers: usize, n_ctx: usize, d_model: usize) -> usize {
+        2 * n_layers * n_ctx * d_model * std::mem::size_of::<f32>()
+    }
+
     fn advance(&mut self, t: usize) {
         self.len += t;
         debug_assert!(self.layers.iter().all(|l| l.len() == self.len));
+    }
+
+    /// Clear back to an empty prefix. Capacity and allocations are
+    /// retained — this is the KV-pool reuse path: a released slot is reset
+    /// and leased to the next sequence without touching the allocator.
+    pub fn reset(&mut self) {
+        self.len = 0;
+        for l in &mut self.layers {
+            l.len = 0;
+        }
     }
 }
 
@@ -255,6 +278,128 @@ pub fn forward_pass<L>(
     let h = layer_norm(&x, view.lnf_g, view.lnf_b);
     let hq = site(site_idx, h);
     Ok(matmul(view.w_out, &hq))
+}
+
+/// One continuous-batching decode step: row `i` of the batch is the next
+/// token of an *independent* sequence whose KV prefix lives in
+/// `states[i]`, so the linear operators run once at M=N while attention
+/// runs per row over each sequence's own cache with its own prefix
+/// length — the generalisation of [`attention_with_prefix`] to per-row
+/// prefixes that the engine's step loop drives.
+///
+/// `row_site(row, site_idx, x)` is the activation-site hook applied to
+/// each sequence's 1-row slice *separately*. This is deliberate: schemes
+/// whose scale fields couple rows (dynamic CrossQuant's live column
+/// maxima) see exactly the M=1 matrices they would see in a sequential
+/// `generate_greedy`, and because every other op here is per-row
+/// deterministic (LayerNorm statistics, the ascending-k matmul fold, the
+/// exact i32 GEMM accumulation, element-wise GELU/residual), the batched
+/// step is **bit-identical** to N independent M=1 steps — pinned by
+/// rust/tests/engine.rs across every served scheme. Pass `None` when no
+/// transform applies (FP, or the integer path that quantizes inside its
+/// GEMMs) — the hot loop then skips the per-row split entirely.
+///
+/// Returns N × vocab logits (every row is that sequence's "last" row) and
+/// advances each state by one position.
+pub fn forward_step_batched<L>(
+    view: &ModelView<'_, L>,
+    tokens: &[u32],
+    states: &mut [&mut DecodeState],
+    matmul: &mut dyn FnMut(&L, &Matrix) -> Matrix,
+    mut row_site: Option<&mut dyn FnMut(usize, usize, Matrix) -> Matrix>,
+) -> Result<Matrix> {
+    let cfg = view.config;
+    let n = tokens.len();
+    anyhow::ensure!(n >= 1, "batched step needs at least one sequence");
+    anyhow::ensure!(states.len() == n, "tokens/states length mismatch ({n} vs {})", states.len());
+    anyhow::ensure!(
+        tokens.iter().all(|&tok| (tok as usize) < cfg.vocab),
+        "token id out of range (vocab {})",
+        cfg.vocab
+    );
+    for (i, s) in states.iter().enumerate() {
+        anyhow::ensure!(
+            s.layers.len() == view.layers.len() && s.capacity() == cfg.seq_len,
+            "decode state {i} does not match the model"
+        );
+        anyhow::ensure!(
+            s.len() < cfg.seq_len,
+            "sequence {i}: position {} exceeds model context {}",
+            s.len() + 1,
+            cfg.seq_len
+        );
+    }
+
+    let d = cfg.d_model;
+    let mut x = Matrix::zeros(n, d);
+    for (i, &tok) in tokens.iter().enumerate() {
+        let pos = states[i].len();
+        for j in 0..d {
+            x.set(i, j, view.tok_emb.get(tok as usize, j) + view.pos_emb.get(pos, j));
+        }
+    }
+
+    let mut site_idx = 0usize;
+    for (l, layer) in view.layers.iter().enumerate() {
+        // --- attention block ---
+        let h = layer_norm(&x, layer.ln1_g, layer.ln1_b);
+        let hq = apply_row_site(h, site_idx, &mut row_site);
+        site_idx += 1;
+        let q = matmul(layer.wq, &hq);
+        let k = matmul(layer.wk, &hq);
+        let v = matmul(layer.wv, &hq);
+        let mut ctx = Matrix::zeros(n, d);
+        for (i, state) in states.iter_mut().enumerate() {
+            let offset = state.len();
+            let cache = &mut state.layers[l];
+            cache.append_row(k.row(i), v.row(i));
+            let qi = Matrix::from_vec(1, d, q.row(i).to_vec());
+            let c = attention_with_prefix(&qi, &cache.k, &cache.v, offset, cfg.n_heads);
+            ctx.row_mut(i).copy_from_slice(c.row(0));
+        }
+        let ctxq = apply_row_site(ctx, site_idx, &mut row_site);
+        site_idx += 1;
+        let attn_out = matmul(layer.wo, &ctxq);
+        add_inplace(&mut x, &attn_out);
+
+        // --- MLP block ---
+        let h = layer_norm(&x, layer.ln2_g, layer.ln2_b);
+        let hq = apply_row_site(h, site_idx, &mut row_site);
+        site_idx += 1;
+        let mut hh = matmul(layer.w1, &hq);
+        gelu_inplace(&mut hh);
+        let hhq = apply_row_site(hh, site_idx, &mut row_site);
+        site_idx += 1;
+        let mlp_out = matmul(layer.w2, &hhq);
+        add_inplace(&mut x, &mlp_out);
+    }
+    for s in states.iter_mut() {
+        s.advance(1);
+    }
+
+    let h = layer_norm(&x, view.lnf_g, view.lnf_b);
+    let hq = apply_row_site(h, site_idx, &mut row_site);
+    Ok(matmul(view.w_out, &hq))
+}
+
+/// Apply the per-row site hook to every row of `x` independently (each
+/// row belongs to a different sequence, so scale fields must never couple
+/// them — see [`forward_step_batched`]). `None` is the identity: the
+/// matrix passes through untouched, no per-row split or copy.
+fn apply_row_site(
+    x: Matrix,
+    site_idx: usize,
+    row_site: &mut Option<&mut dyn FnMut(usize, usize, Matrix) -> Matrix>,
+) -> Matrix {
+    let Some(f) = row_site else { return x };
+    let (rows, cols) = (x.rows, x.cols);
+    let mut out = Matrix::zeros(rows, cols);
+    for i in 0..rows {
+        let r = f(i, site_idx, Matrix::from_vec(1, cols, x.row(i).to_vec()));
+        assert_eq!((r.rows, r.cols), (1, cols), "row site must preserve shape");
+        out.row_mut(i).copy_from_slice(r.row(0));
+    }
+    out
 }
 
 /// The greedy autoregressive loop shared by both models (and, with a
@@ -461,6 +606,7 @@ mod tests {
         assert_eq!(state.remaining(), 16);
         // 2 (K+V) · 3 layers · 16 ctx · 8 d_model · 4 bytes
         assert_eq!(state.memory_bytes(), 2 * 3 * 16 * 8 * 4);
+        assert_eq!(DecodeState::memory_bytes_for(3, 16, 8), state.memory_bytes());
         assert!(state.is_empty());
     }
 
@@ -470,6 +616,24 @@ mod tests {
         let mut cache = LayerKvCache::new(2, 4);
         let rows = Matrix::zeros(3, 4);
         cache.append(&rows, &rows.clone());
+    }
+
+    #[test]
+    fn reset_clears_lengths_but_keeps_capacity() {
+        let mut state = DecodeState::new(2, 8, 4);
+        let k = Matrix::zeros(3, 4);
+        for l in &mut state.layers {
+            l.append(&k, &k.clone());
+        }
+        state.advance(3);
+        assert_eq!(state.len(), 3);
+        state.reset();
+        assert_eq!(state.len(), 0);
+        assert_eq!(state.capacity(), 8);
+        assert_eq!(state.remaining(), 8);
+        assert!(state.layers.iter().all(|l| l.is_empty()));
+        // memory accounting is about the arena, not the logical length
+        assert_eq!(state.memory_bytes(), 2 * 2 * 8 * 4 * 4);
     }
 
     #[test]

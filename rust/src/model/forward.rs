@@ -299,6 +299,30 @@ impl NativeModel {
         self.forward_incremental_with(tokens, state, site, false)
     }
 
+    /// One continuous-batching decode step: `tokens[i]` is the next token
+    /// of the independent sequence cached in `states[i]`. The linear
+    /// operators run once at M=N; `row_site(row, site, x)` applies the
+    /// activation transform to each sequence's 1-row slice separately, so
+    /// batch-coupled scale fields (dynamic CrossQuant's live column
+    /// maxima) see exactly the M=1 matrices a sequential decode would —
+    /// outputs are bit-identical to per-sequence [`Self::forward_incremental`]
+    /// steps. Pass `None` for the FP path (identity sites): the hot loop
+    /// then skips the per-row split. Returns N × vocab logits.
+    pub fn forward_step_batched(
+        &self,
+        tokens: &[u32],
+        states: &mut [&mut DecodeState],
+        row_site: Option<&mut dyn FnMut(usize, usize, Matrix) -> Matrix>,
+    ) -> Result<Matrix> {
+        block::forward_step_batched(
+            &self.view(),
+            tokens,
+            states,
+            &mut |w, x| x.matmul(w),
+            row_site,
+        )
+    }
+
     /// Greedy autoregressive generation through the KV cache: prefill the
     /// prompt once (head applied to the last row only), then decode one
     /// token per step (M=1 matmuls). Returns the `max_new_tokens`
@@ -395,6 +419,48 @@ mod tests {
         // context overflow and empty prompt are Errs, not panics
         assert!(m.generate_greedy(&[0; 10], 3, &mut IdentitySite).is_err());
         assert!(m.generate_greedy(&[], 3, &mut IdentitySite).is_err());
+    }
+
+    #[test]
+    fn batched_step_bit_identical_to_sequential_steps() {
+        // three staggered sequences, each with its own fake-quant site:
+        // the M=3 batched step must reproduce the three M=1 steps exactly,
+        // including under the batch-coupled CrossQuant column maxima
+        // (applied per row by construction)
+        let m = tiny();
+        let prompts: [&[u32]; 3] = [&[1, 2, 3], &[9, 4], &[7, 7, 7, 7]];
+        // sequential reference: per-sequence M=1 decode steps
+        let mut ref_states: Vec<DecodeState> = Vec::new();
+        let mut ref_logits: Vec<Matrix> = Vec::new();
+        for p in prompts {
+            let mut st = m.new_decode_state();
+            let mut site = QuantSite::new(CrossQuant::new(0.15, Bits::Int8));
+            m.forward_incremental_with(p, &mut st, &mut site, true).unwrap();
+            let l = m
+                .forward_incremental_with(&[5], &mut st, &mut site, false)
+                .unwrap();
+            ref_logits.push(l);
+            ref_states.push(st);
+        }
+        // batched: prefill each alone, then one M=3 step
+        let mut states: Vec<DecodeState> = Vec::new();
+        let mut sites: Vec<QuantSite<CrossQuant>> = Vec::new();
+        for p in prompts {
+            let mut st = m.new_decode_state();
+            let mut site = QuantSite::new(CrossQuant::new(0.15, Bits::Int8));
+            m.forward_incremental_with(p, &mut st, &mut site, true).unwrap();
+            states.push(st);
+            sites.push(site);
+        }
+        let mut state_refs: Vec<&mut DecodeState> = states.iter_mut().collect();
+        let mut hook = |row: usize, idx: usize, x: Matrix| sites[row].apply(idx, x);
+        let logits =
+            m.forward_step_batched(&[5, 5, 5], &mut state_refs, Some(&mut hook)).unwrap();
+        assert_eq!(logits.rows, 3);
+        for (i, r) in ref_logits.iter().enumerate() {
+            assert_eq!(logits.row(i), r.row(0), "sequence {i} must be bit-exact");
+            assert_eq!(states[i].len(), ref_states[i].len());
+        }
     }
 
     #[test]

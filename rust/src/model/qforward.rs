@@ -221,6 +221,34 @@ impl QuantizedModel {
         self.forward_incremental_with(tokens, state, false)
     }
 
+    /// One continuous-batching decode step on the true-integer path:
+    /// `tokens[i]` is the next token of the independent sequence cached in
+    /// `states[i]`, and every linear site runs one packed int8 GEMM at
+    /// M=N. Per-token and static-CrossQuant activation scales are per-row
+    /// (row abs-maxima and calibration constants) and the i32 accumulation
+    /// is exact, so the batched step is bit-identical to per-sequence M=1
+    /// steps. The *dynamic* CrossQuant path is rejected: its live column
+    /// maxima would couple the stacked sequences (serve dynamic CrossQuant
+    /// through the native path, or calibrate static scales).
+    pub fn forward_step_batched(
+        &self,
+        tokens: &[u32],
+        states: &mut [&mut DecodeState],
+    ) -> Result<Matrix> {
+        anyhow::ensure!(
+            !matches!(self.path, QuantPath::CrossQuant { .. }),
+            "batched decode on the dynamic-CrossQuant integer path would couple sequences \
+             through the live column maxima"
+        );
+        block::forward_step_batched(
+            &self.view(),
+            tokens,
+            states,
+            &mut |lin, x| self.qmatmul(lin, x),
+            None,
+        )
+    }
+
     /// Greedy autoregressive generation on the true-integer path: prefill
     /// once (head applied to the last row only), then one-token decode
     /// steps through the packed int8 GEMM. Works for every [`QuantPath`],
@@ -384,6 +412,54 @@ mod tests {
         let mean_st: f32 = nll_st.iter().sum::<f32>() / nll_st.len() as f32;
         let rel = (mean_dyn - mean_st).abs() / mean_dyn.max(1e-6);
         assert!(rel < 0.02, "static NLL {mean_st} vs dynamic {mean_dyn} (rel {rel})");
+    }
+
+    #[test]
+    fn batched_integer_step_bit_identical_to_sequential() {
+        let w = synthetic_weights(cfg(), 27);
+        let mut qm = QuantizedModel::new(
+            &w,
+            Bits::Int8,
+            Bits::Int8,
+            QuantPath::CrossQuant { alpha: 0.15 },
+        )
+        .unwrap();
+        let calib: Vec<Vec<u32>> = (0..8)
+            .map(|s| (0..20).map(|i| ((i * 5 + s * 13) % 64) as u32).collect())
+            .collect();
+        qm.calibrate_static(0.15, &calib).unwrap();
+        let prompts: [&[u32]; 3] = [&[1, 2, 3], &[60, 61], &[4; 5]];
+        let mut ref_logits = Vec::new();
+        for p in prompts {
+            let mut st = qm.new_decode_state();
+            qm.forward_incremental_with(p, &mut st, true).unwrap();
+            ref_logits.push(qm.forward_incremental_with(&[8], &mut st, false).unwrap());
+        }
+        let mut states: Vec<DecodeState> = prompts
+            .iter()
+            .map(|p| {
+                let mut st = qm.new_decode_state();
+                qm.forward_incremental_with(p, &mut st, true).unwrap();
+                st
+            })
+            .collect();
+        let mut refs: Vec<&mut DecodeState> = states.iter_mut().collect();
+        let logits = qm.forward_step_batched(&[8, 8, 8], &mut refs).unwrap();
+        for (i, r) in ref_logits.iter().enumerate() {
+            assert_eq!(logits.row(i), r.row(0), "sequence {i} must be bit-exact");
+        }
+        // the dynamic path is rejected, not silently batch-coupled
+        let qdyn = QuantizedModel::new(
+            &w,
+            Bits::Int8,
+            Bits::Int8,
+            QuantPath::CrossQuant { alpha: 0.15 },
+        )
+        .unwrap();
+        let mut st = qdyn.new_decode_state();
+        qdyn.forward_incremental_with(&[1, 2], &mut st, true).unwrap();
+        let mut refs: Vec<&mut DecodeState> = vec![&mut st];
+        assert!(qdyn.forward_step_batched(&[3], &mut refs).is_err());
     }
 
     #[test]

@@ -82,6 +82,7 @@ fn failure_injection_missing_artifact() {
             batch_size: 2,
             max_batch_delay: Duration::from_millis(2),
             max_queue: 8,
+            engine: Default::default(),
         },
     );
     let handle = coordinator
@@ -113,6 +114,7 @@ fn native_executor_serves_static_scale_scheme() {
             batch_size: 2,
             max_batch_delay: Duration::from_millis(2),
             max_queue: 8,
+            engine: Default::default(),
         },
     );
     let mut gen = CorpusGen::new(cfg.vocab, 4);
@@ -171,6 +173,7 @@ fn generation_round_trips_for_every_scheme() {
             batch_size: 2,
             max_batch_delay: Duration::from_millis(2),
             max_queue: 8,
+            engine: Default::default(),
         },
     );
     let mut gen = CorpusGen::new(cfg.vocab, 5);
@@ -284,6 +287,7 @@ fn batches_fill_and_results_map_back() {
             batch_size: cfg.eval_batch,
             max_batch_delay: Duration::from_millis(3),
             max_queue: 64,
+            engine: Default::default(),
         },
     );
     let mut gen = CorpusGen::new(cfg.vocab, 2);
@@ -327,6 +331,7 @@ fn partial_batch_flushes_on_deadline() {
             batch_size: cfg.eval_batch,
             max_batch_delay: Duration::from_millis(5),
             max_queue: 8,
+            engine: Default::default(),
         },
     );
     let mut gen = CorpusGen::new(cfg.vocab, 3);

@@ -1,0 +1,279 @@
+//! Continuous-batching engine integration tests, through the public
+//! coordinator API: concurrent streamed generations must be bit-identical
+//! to sequential `generate_greedy` for every served scheme, a small KV
+//! pool must queue (not corrupt, not deadlock) excess sequences, a
+//! request admitted mid-decode must join the running batch correctly, and
+//! graceful shutdown must drain in-flight work and join the threads.
+//!
+//! Everything runs over synthetic weights and the native executor — no
+//! artifacts required, so these run on every build.
+
+use std::time::Duration;
+
+use crossquant::coordinator::scheduler::CoordinatorConfig;
+use crossquant::coordinator::{ActScheme, EngineConfig, EvalCoordinator, EvalRequest};
+use crossquant::corpus::CorpusGen;
+use crossquant::model::weights::synthetic_weights;
+use crossquant::model::{
+    IdentitySite, ModelConfig, NativeModel, QuantPath, QuantSite, QuantizedModel,
+};
+use crossquant::quant::crossquant::CrossQuant;
+use crossquant::quant::Bits;
+use crossquant::runtime::ArtifactStore;
+
+const SEED: u64 = 41;
+
+fn cfg() -> ModelConfig {
+    ModelConfig {
+        vocab: 64,
+        d_model: 16,
+        n_layers: 2,
+        n_heads: 2,
+        d_ff: 32,
+        seq_len: 48,
+        eval_batch: 2,
+    }
+}
+
+/// std has no tempdir; 8 lines suffice.
+struct TempDir(std::path::PathBuf);
+
+impl TempDir {
+    fn new() -> TempDir {
+        let p = std::env::temp_dir().join(format!(
+            "cq-engine-{}-{:?}",
+            std::process::id(),
+            std::time::SystemTime::now()
+                .duration_since(std::time::UNIX_EPOCH)
+                .unwrap()
+                .as_nanos()
+        ));
+        std::fs::create_dir_all(&p).unwrap();
+        TempDir(p)
+    }
+}
+
+impl Drop for TempDir {
+    fn drop(&mut self) {
+        let _ = std::fs::remove_dir_all(&self.0);
+    }
+}
+
+fn start(engine: EngineConfig) -> (EvalCoordinator, TempDir) {
+    let dir = TempDir::new();
+    let weights = synthetic_weights(cfg(), SEED);
+    let coordinator = EvalCoordinator::start(
+        ArtifactStore { dir: dir.0.clone() },
+        cfg(),
+        vec![("w16".into(), weights.flat.clone())],
+        CoordinatorConfig {
+            batch_size: 2,
+            max_batch_delay: Duration::from_millis(2),
+            max_queue: 64,
+            engine,
+        },
+    );
+    (coordinator, dir)
+}
+
+/// Sequential single-request reference for one scheme — what
+/// `generate_greedy` alone on the executor (the PR 3 serial path) would
+/// produce for this prompt.
+fn reference(scheme: ActScheme, prompt: &[u32], max_new: usize) -> Vec<u32> {
+    let weights = synthetic_weights(cfg(), SEED);
+    match scheme {
+        ActScheme::Fp => NativeModel::new(weights)
+            .generate_greedy(prompt, max_new, &mut IdentitySite)
+            .unwrap(),
+        ActScheme::CrossQuant { alpha, qmax } => {
+            assert_eq!(qmax, 127.0);
+            let mut site = QuantSite::new(CrossQuant::new(alpha, Bits::Int8));
+            NativeModel::new(weights).generate_greedy(prompt, max_new, &mut site).unwrap()
+        }
+        ActScheme::CrossQuantStatic { alpha, .. } => {
+            let mut qm = QuantizedModel::new(
+                &weights,
+                Bits::Int8,
+                Bits::Int8,
+                QuantPath::CrossQuant { alpha },
+            )
+            .unwrap();
+            // the executor's exact calibration stream (scheduler.rs)
+            let mut gen = CorpusGen::new(cfg().vocab, 0x5CA1E);
+            let calib: Vec<Vec<u32>> = (0..8).map(|_| gen.sequence(cfg().seq_len)).collect();
+            qm.calibrate_static(alpha, &calib).unwrap();
+            qm.generate_greedy(prompt, max_new).unwrap()
+        }
+        other => panic!("no reference for {other:?}"),
+    }
+}
+
+#[test]
+fn concurrent_streams_bit_identical_to_sequential_for_every_scheme() {
+    let (coordinator, _guard) = start(EngineConfig::default());
+    let schemes = [
+        ActScheme::Fp,
+        ActScheme::CrossQuant { alpha: 1.0, qmax: 127.0 }, // per-token
+        ActScheme::CrossQuant { alpha: 0.15, qmax: 127.0 },
+        ActScheme::CrossQuantStatic { alpha: 0.15, qmax: 127.0 },
+    ];
+    for scheme in schemes {
+        let n = 4;
+        let prompts: Vec<Vec<u32>> =
+            (0..n).map(|i| CorpusGen::new(cfg().vocab, 7 + i as u64).sequence(5)).collect();
+        let max_new = 8;
+        // all sessions in flight at once, each streaming its tokens
+        let sessions: Vec<_> = prompts
+            .iter()
+            .map(|p| {
+                coordinator
+                    .submit_streaming(EvalRequest::generate(p.clone(), scheme, "w16", max_new))
+                    .unwrap()
+            })
+            .collect();
+        for (p, (events, handle)) in prompts.iter().zip(sessions) {
+            let resp = handle.wait().unwrap_or_else(|e| panic!("{scheme:?}: {e}"));
+            let streamed: Vec<u32> = events.iter().map(|e| e.token).collect();
+            assert_eq!(streamed, resp.generated, "{scheme:?}: stream == final payload");
+            let expect = reference(scheme, p, max_new);
+            assert_eq!(resp.generated, expect, "{scheme:?}: engine == sequential decode");
+        }
+    }
+}
+
+#[test]
+fn tiny_kv_pool_queues_and_all_sequences_complete_exactly() {
+    // 2 KV slots for 6 concurrent sessions: four must wait for a lease;
+    // every one still decodes its exact sequential tokens
+    let slot = 2 * cfg().n_layers * cfg().seq_len * cfg().d_model * 4;
+    let (coordinator, _guard) = start(EngineConfig {
+        max_active_seqs: 16,
+        kv_pool_bytes: Some(2 * slot),
+        max_waiting: 16,
+    });
+    let scheme = ActScheme::Fp;
+    let prompts: Vec<Vec<u32>> =
+        (0..6).map(|i| CorpusGen::new(cfg().vocab, 20 + i as u64).sequence(4)).collect();
+    let handles: Vec<_> = prompts
+        .iter()
+        .map(|p| {
+            coordinator.submit(EvalRequest::generate(p.clone(), scheme, "w16", 10)).unwrap()
+        })
+        .collect();
+    for (p, h) in prompts.iter().zip(handles) {
+        let resp = h.wait().unwrap();
+        assert_eq!(resp.generated, reference(scheme, p, 10));
+    }
+    use std::sync::atomic::Ordering::Relaxed;
+    assert_eq!(coordinator.metrics.kv_pool_slots.load(Relaxed), 2, "budget caps the pool");
+    assert_eq!(coordinator.metrics.kv_pool_in_use.load(Relaxed), 0, "all slots released");
+    assert_eq!(coordinator.metrics.completed.load(Relaxed), 6);
+}
+
+#[test]
+fn mid_flight_join_produces_correct_tokens_for_both_sequences() {
+    let (coordinator, _guard) = start(EngineConfig::default());
+    let scheme = ActScheme::CrossQuant { alpha: 0.15, qmax: 127.0 };
+    let a_prompt = vec![1u32, 2, 3];
+    let b_prompt = vec![9u32, 9];
+    // A streams 24 tokens; B is submitted only after A has demonstrably
+    // started decoding, so B joins a running batch mid-flight
+    let (a_events, a_handle) = coordinator
+        .submit_streaming(EvalRequest::generate(a_prompt.clone(), scheme, "w16", 24))
+        .unwrap();
+    let first = a_events.recv_timeout(Duration::from_secs(120)).expect("A must start");
+    let b_handle = coordinator
+        .submit(EvalRequest::generate(b_prompt.clone(), scheme, "w16", 6))
+        .unwrap();
+    let b = b_handle.wait_timeout(Duration::from_secs(120)).unwrap();
+    let a = a_handle.wait_timeout(Duration::from_secs(120)).unwrap();
+    let a_expect = reference(scheme, &a_prompt, 24);
+    assert_eq!(first.token, a_expect[0], "stream starts with the first decoded token");
+    assert_eq!(a.generated, a_expect, "A unaffected by B joining mid-decode");
+    assert_eq!(b.generated, reference(scheme, &b_prompt, 6), "B correct from a late join");
+}
+
+#[test]
+fn admission_pressure_never_hangs_or_corrupts() {
+    // one KV slot, queue of one, many long generations in flight at once:
+    // every response must be either its exact sequential tokens or the
+    // structured capacity error — never a hang, never wrong tokens.
+    // (Deterministic rejection ordering is pinned by the engine's unit
+    // tests; this exercises the wiring end-to-end under pressure.)
+    let slot = 2 * cfg().n_layers * cfg().seq_len * cfg().d_model * 4;
+    let (coordinator, _guard) = start(EngineConfig {
+        max_active_seqs: 1,
+        kv_pool_bytes: Some(slot),
+        max_waiting: 1,
+    });
+    let scheme = ActScheme::Fp;
+    let prompts: Vec<Vec<u32>> =
+        (0..5).map(|i| CorpusGen::new(cfg().vocab, 60 + i as u64).sequence(3)).collect();
+    let handles: Vec<_> = prompts
+        .iter()
+        .map(|p| {
+            coordinator.submit(EvalRequest::generate(p.clone(), scheme, "w16", 20)).unwrap()
+        })
+        .collect();
+    let mut completed = 0usize;
+    for (p, h) in prompts.iter().zip(handles) {
+        match h.wait_timeout(Duration::from_secs(120)) {
+            Ok(resp) => {
+                assert_eq!(resp.generated, reference(scheme, p, 20));
+                completed += 1;
+            }
+            Err(e) => assert!(
+                format!("{e}").contains("admission queue full"),
+                "unexpected error: {e}"
+            ),
+        }
+    }
+    assert!(completed >= 1, "at least the first admitted sequence must complete");
+}
+
+#[test]
+fn shutdown_drains_in_flight_generation_and_joins_threads() {
+    let (coordinator, _guard) = start(EngineConfig::default());
+    let scheme = ActScheme::Fp;
+    let handle = coordinator
+        .submit(EvalRequest::generate(vec![3, 1, 4], scheme, "w16", 12))
+        .unwrap();
+    // shutdown returns only after the batcher flushed, the engine drained
+    // every in-flight sequence, and both threads joined
+    coordinator.shutdown();
+    let resp = handle.wait().expect("in-flight request must be drained, not dropped");
+    assert_eq!(resp.generated, reference(scheme, &[3, 1, 4], 12));
+    // the coordinator is now closed: new work is refused cleanly
+    let err = coordinator
+        .submit(EvalRequest::generate(vec![1], scheme, "w16", 2))
+        .expect_err("submit after shutdown must fail");
+    assert!(format!("{err}").contains("shut down"), "unexpected error: {err}");
+    // idempotent
+    coordinator.shutdown();
+}
+
+#[test]
+fn scoring_and_generation_interleave_without_interference() {
+    let (coordinator, _guard) = start(EngineConfig::default());
+    let gen_scheme = ActScheme::CrossQuantStatic { alpha: 0.15, qmax: 127.0 };
+    let score_scheme = ActScheme::CrossQuant { alpha: 0.15, qmax: 127.0 };
+    let gen_handle = coordinator
+        .submit(EvalRequest::generate(vec![2, 4, 6], gen_scheme, "w16", 16))
+        .unwrap();
+    // scoring requests land while the engine is mid-decode
+    let mut corp = CorpusGen::new(cfg().vocab, 5);
+    let score_handles: Vec<_> = (0..4)
+        .map(|_| {
+            coordinator
+                .submit(EvalRequest::score(corp.sequence(cfg().seq_len), score_scheme, "w16"))
+                .unwrap()
+        })
+        .collect();
+    for h in score_handles {
+        let r = h.wait_timeout(Duration::from_secs(120)).unwrap();
+        assert_eq!(r.nll.len(), cfg().seq_len - 1);
+        assert!(r.nll.iter().all(|v| v.is_finite()));
+    }
+    let g = gen_handle.wait_timeout(Duration::from_secs(120)).unwrap();
+    assert_eq!(g.generated, reference(gen_scheme, &[2, 4, 6], 16));
+}

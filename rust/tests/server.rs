@@ -28,6 +28,7 @@ fn start_server() -> Option<(std::net::SocketAddr, crossquant::model::ModelConfi
             batch_size: cfg.eval_batch,
             max_batch_delay: Duration::from_millis(3),
             max_queue: 64,
+            engine: Default::default(),
         },
     );
     let listener = TcpListener::bind("127.0.0.1:0").ok()?;
@@ -69,6 +70,7 @@ fn start_synthetic_server() -> (std::net::SocketAddr, ModelConfig) {
             batch_size: 2,
             max_batch_delay: Duration::from_millis(2),
             max_queue: 16,
+            engine: Default::default(),
         },
     );
     let listener = TcpListener::bind("127.0.0.1:0").unwrap();
@@ -182,6 +184,197 @@ fn generate_context_overflow_is_a_structured_protocol_error() {
     let ok = roundtrip(&mut stream, &mut reader, &ok_req);
     assert_eq!(ok.get("ok"), Some(&Json::Bool(true)), "{ok:?}");
     assert_eq!(ok.get("generated").unwrap().as_arr().unwrap().len(), 4);
+}
+
+#[test]
+fn streamed_generation_emits_token_lines_then_summary() {
+    let (addr, cfg) = start_synthetic_server();
+    let mut stream = TcpStream::connect(addr).unwrap();
+    stream.set_read_timeout(Some(Duration::from_secs(300))).unwrap();
+    let mut reader = BufReader::new(stream.try_clone().unwrap());
+
+    let prompt = CorpusGen::new(cfg.vocab, 11).sequence(3);
+    let pj: Vec<String> = prompt.iter().map(|t| t.to_string()).collect();
+    let req = format!(
+        r#"{{"tokens": [{}], "scheme": "crossquant", "alpha": 0.15, "max_new_tokens": 5, "stream": true, "weight_set": "w16"}}"#,
+        pj.join(", ")
+    );
+    stream.write_all(req.as_bytes()).unwrap();
+    stream.write_all(b"\n").unwrap();
+
+    // exactly max_new_tokens token lines, then the summary line
+    let mut tokens = Vec::new();
+    let summary = loop {
+        let mut line = String::new();
+        reader.read_line(&mut line).unwrap();
+        let j = Json::parse(&line).expect("stream lines must be valid JSON");
+        if let Some(t) = j.get("token") {
+            assert!(j.get("seq").and_then(|s| s.as_usize()).is_some(), "token lines carry seq");
+            tokens.push(t.as_usize().unwrap() as u32);
+        } else {
+            break j;
+        }
+    };
+    assert_eq!(tokens.len(), 5);
+    assert_eq!(summary.get("ok"), Some(&Json::Bool(true)), "{summary:?}");
+    assert_eq!(summary.get("done"), Some(&Json::Bool(true)));
+    let generated: Vec<u32> = summary
+        .get("generated")
+        .unwrap()
+        .as_arr()
+        .unwrap()
+        .iter()
+        .map(|t| t.as_usize().unwrap() as u32)
+        .collect();
+    assert_eq!(generated, tokens, "summary must repeat the streamed tokens");
+    assert_eq!(summary.get("prompt_tokens").unwrap().as_usize(), Some(3));
+
+    // the same request unstreamed is bit-identical — the engine serves both
+    let plain = roundtrip(
+        &mut stream,
+        &mut reader,
+        &format!(
+            r#"{{"tokens": [{}], "scheme": "crossquant", "alpha": 0.15, "max_new_tokens": 5, "weight_set": "w16"}}"#,
+            pj.join(", ")
+        ),
+    );
+    assert_eq!(plain.get("generated"), summary.get("generated"));
+
+    // streaming a scoring request is a structured error, connection survives
+    let err = roundtrip(
+        &mut stream,
+        &mut reader,
+        r#"{"tokens": [1,2,3], "scheme": "fp", "stream": true, "weight_set": "w16"}"#,
+    );
+    assert_eq!(err.get("ok"), Some(&Json::Bool(false)));
+    assert!(err.get("error").unwrap().as_str().unwrap().contains("max_new_tokens"));
+}
+
+#[test]
+fn metrics_report_engine_and_kv_pool_accounting() {
+    let (addr, cfg) = start_synthetic_server();
+    let mut stream = TcpStream::connect(addr).unwrap();
+    stream.set_read_timeout(Some(Duration::from_secs(300))).unwrap();
+    let mut reader = BufReader::new(stream.try_clone().unwrap());
+
+    // run one generation so the engine counters are non-trivial
+    let prompt = CorpusGen::new(cfg.vocab, 13).sequence(3);
+    let pj: Vec<String> = prompt.iter().map(|t| t.to_string()).collect();
+    let gen = roundtrip(
+        &mut stream,
+        &mut reader,
+        &format!(
+            r#"{{"tokens": [{}], "scheme": "fp", "max_new_tokens": 4, "weight_set": "w16"}}"#,
+            pj.join(", ")
+        ),
+    );
+    assert_eq!(gen.get("ok"), Some(&Json::Bool(true)), "{gen:?}");
+
+    let m = roundtrip(&mut stream, &mut reader, r#"{"cmd": "metrics"}"#);
+    assert_eq!(m.get("ok"), Some(&Json::Bool(true)));
+    // the summary string survives unchanged…
+    assert!(m.get("metrics").unwrap().as_str().unwrap().contains("completed="));
+    // …and the engine object surfaces KV memory accounting over the wire
+    let engine = m.get("engine").expect("engine metrics object");
+    let kv = engine.get("kv_pool").expect("kv_pool object");
+    let slot_bytes = kv.get("bytes_per_seq").unwrap().as_f64().unwrap();
+    // 2 (K+V) · n_layers · n_ctx · d_model · 4 bytes, from the model config
+    let expect = (2 * cfg.n_layers * cfg.seq_len * cfg.d_model * 4) as f64;
+    assert_eq!(slot_bytes, expect);
+    assert!(kv.get("bytes").unwrap().as_f64().unwrap() >= expect);
+    assert_eq!(kv.get("slots_in_use").unwrap().as_f64(), Some(0.0));
+    let decoded = engine.get("decoded_tokens").unwrap().as_f64().unwrap();
+    // 4 generated tokens: 1 sampled at prefill + 3 batched decode steps
+    assert_eq!(decoded, 3.0);
+    assert!(engine.get("batch_occupancy").unwrap().as_f64().unwrap() >= 1.0);
+}
+
+#[test]
+fn connection_cap_refuses_excess_clients_with_structured_error() {
+    // a server capped at 1 connection, built by hand (the helper uses the
+    // default cap)
+    let cfg = ModelConfig {
+        vocab: 64,
+        d_model: 16,
+        n_layers: 1,
+        n_heads: 2,
+        d_ff: 32,
+        seq_len: 12,
+        eval_batch: 2,
+    };
+    let dir = std::env::temp_dir().join(format!(
+        "cq-conncap-{}-{:?}",
+        std::process::id(),
+        std::time::SystemTime::now()
+            .duration_since(std::time::UNIX_EPOCH)
+            .unwrap()
+            .as_nanos()
+    ));
+    std::fs::create_dir_all(&dir).unwrap();
+    let weights = synthetic_weights(cfg, 29);
+    let coordinator = EvalCoordinator::start(
+        ArtifactStore { dir },
+        cfg,
+        vec![("w16".into(), weights.flat.clone())],
+        CoordinatorConfig {
+            batch_size: 2,
+            max_batch_delay: Duration::from_millis(2),
+            max_queue: 16,
+            engine: Default::default(),
+        },
+    );
+    let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+    let addr = listener.local_addr().unwrap();
+    std::thread::spawn(move || {
+        let _ = EvalServer::new(coordinator).with_max_connections(1).serve(listener);
+    });
+
+    // first client occupies the only slot (a ping proves it is registered)
+    let mut first = TcpStream::connect(addr).unwrap();
+    first.set_read_timeout(Some(Duration::from_secs(300))).unwrap();
+    let mut first_reader = BufReader::new(first.try_clone().unwrap());
+    let pong = roundtrip(&mut first, &mut first_reader, r#"{"cmd": "ping"}"#);
+    assert_eq!(pong.get("ok"), Some(&Json::Bool(true)));
+
+    // second client is refused with the structured capacity error
+    let second = TcpStream::connect(addr).unwrap();
+    second.set_read_timeout(Some(Duration::from_secs(300))).unwrap();
+    let mut second_reader = BufReader::new(second);
+    let mut line = String::new();
+    second_reader.read_line(&mut line).unwrap();
+    let refusal = Json::parse(&line).expect("refusal must be valid JSON");
+    assert_eq!(refusal.get("ok"), Some(&Json::Bool(false)));
+    assert!(refusal
+        .get("error")
+        .unwrap()
+        .as_str()
+        .unwrap()
+        .contains("connection capacity"));
+    // …and the socket is closed after the error line
+    line.clear();
+    assert_eq!(second_reader.read_line(&mut line).unwrap(), 0, "refused socket must close");
+
+    // once the first client disconnects, a new one is admitted
+    drop(first_reader);
+    drop(first);
+    let deadline = std::time::Instant::now() + Duration::from_secs(60);
+    loop {
+        let mut third = TcpStream::connect(addr).unwrap();
+        third.set_read_timeout(Some(Duration::from_secs(300))).unwrap();
+        let mut third_reader = BufReader::new(third.try_clone().unwrap());
+        third.write_all(b"{\"cmd\": \"ping\"}\n").unwrap();
+        let mut resp = String::new();
+        third_reader.read_line(&mut resp).unwrap();
+        let j = Json::parse(&resp).unwrap();
+        if j.get("ok") == Some(&Json::Bool(true)) && j.get("pong").is_some() {
+            break; // admitted again
+        }
+        assert!(
+            std::time::Instant::now() < deadline,
+            "slot must free after the first client disconnects"
+        );
+        std::thread::sleep(Duration::from_millis(20));
+    }
 }
 
 #[test]
