@@ -1,0 +1,131 @@
+//! Deployment cold-start benchmark — `BENCH_artifact_load.json`.
+//!
+//! Measures the two ways a serve process can reach a servable
+//! static-scale CrossQuant model:
+//!
+//! * **fp load + calibrate** — read the FP32 checkpoint, build the
+//!   integer model, run the calibration forwards, fold the scales (what
+//!   every process paid before `quant::artifact` existed);
+//! * **mmap artifact load** — open the `.cqa`, verify CRCs, borrow the
+//!   int8 panels in place, rebuild the model structs.
+//!
+//! Reports wall time for both, the speedup, resident-memory deltas
+//! (VmRSS, linux), and asserts the two models serve bit-identical NLLs.
+
+mod support;
+
+use std::time::Duration;
+
+use crossquant::corpus::CorpusGen;
+use crossquant::model::quantized::quantize_to_artifact;
+use crossquant::model::weights::{synthetic_weights, Weights};
+use crossquant::model::{ModelConfig, QuantPath, QuantizedModel};
+use crossquant::quant::Bits;
+use crossquant::util::Json;
+use support::{bench, header};
+
+/// VmRSS in KiB from /proc/self/status (0.0 where unavailable).
+fn rss_kb() -> f64 {
+    std::fs::read_to_string("/proc/self/status")
+        .ok()
+        .and_then(|s| {
+            s.lines()
+                .find(|l| l.starts_with("VmRSS:"))
+                .and_then(|l| l.split_whitespace().nth(1).and_then(|v| v.parse::<f64>().ok()))
+        })
+        .unwrap_or(0.0)
+}
+
+fn read_checkpoint(path: &std::path::Path, cfg: ModelConfig) -> Weights {
+    let raw = std::fs::read(path).expect("read weights.bin");
+    let flat: Vec<f32> = raw
+        .chunks_exact(4)
+        .map(|b| f32::from_le_bytes([b[0], b[1], b[2], b[3]]))
+        .collect();
+    Weights::from_config_flat(cfg, flat).expect("weights from flat")
+}
+
+fn main() {
+    let cfg = ModelConfig::default_build();
+    let alpha = 0.15f32;
+    let weights = synthetic_weights(cfg, 0xA51);
+    let mut gen = CorpusGen::new(cfg.vocab, 0x5CA1E);
+    let calib: Vec<Vec<u32>> = (0..8).map(|_| gen.sequence(cfg.seq_len)).collect();
+
+    // put both deployment units on disk so each cold start pays its read
+    let dir = std::env::temp_dir().join(format!("cqa-bench-{}", std::process::id()));
+    std::fs::create_dir_all(&dir).expect("bench tempdir");
+    let wpath = dir.join("weights.bin");
+    let bytes: Vec<u8> = weights.flat.iter().flat_map(|v| v.to_le_bytes()).collect();
+    std::fs::write(&wpath, &bytes).expect("write weights.bin");
+    let apath = dir.join("model.cqa");
+    let report = quantize_to_artifact(&weights, Bits::Int8, Bits::Int8, alpha, &calib, &apath)
+        .expect("quantize to artifact");
+
+    // resident-memory deltas: artifact model first (freshest baseline),
+    // then the fp+calibrate model on top
+    let probe: Vec<u32> = (0..cfg.seq_len).map(|i| ((i * 7) % cfg.vocab) as u32).collect();
+    let rss_base = rss_kb();
+    let art_model = QuantizedModel::load_artifact(&apath).expect("artifact load");
+    let rss_art = rss_kb() - rss_base;
+    let w = read_checkpoint(&wpath, cfg);
+    let mut fp_model =
+        QuantizedModel::new(&w, Bits::Int8, Bits::Int8, QuantPath::CrossQuant { alpha })
+            .expect("fp model");
+    fp_model.calibrate_static(alpha, &calib).expect("calibrate");
+    let rss_fp = rss_kb() - rss_base - rss_art;
+    let nll_fp = fp_model.forward_nll(&probe).expect("fp nll");
+    let nll_art = art_model.forward_nll(&probe).expect("artifact nll");
+    assert_eq!(nll_fp, nll_art, "the two cold starts must serve bit-identical NLLs");
+    drop(fp_model);
+    drop(art_model);
+
+    header();
+    let r_fp = bench("cold-start: fp load + calibrate_static", Duration::from_secs(3), || {
+        let w = read_checkpoint(&wpath, cfg);
+        let mut qm =
+            QuantizedModel::new(&w, Bits::Int8, Bits::Int8, QuantPath::CrossQuant { alpha })
+                .expect("fp model");
+        qm.calibrate_static(alpha, &calib).expect("calibrate");
+        std::hint::black_box(&qm);
+    });
+    r_fp.print();
+    let r_art = bench("cold-start: mmap artifact load", Duration::from_secs(3), || {
+        let qm = QuantizedModel::load_artifact(&apath).expect("artifact load");
+        std::hint::black_box(&qm);
+    });
+    r_art.print();
+
+    let speedup = r_fp.mean.as_secs_f64() / r_art.mean.as_secs_f64().max(1e-12);
+    println!();
+    println!(
+        "artifact cold start is {speedup:.1}x faster ({:.2} ms vs {:.2} ms)",
+        r_art.mean.as_secs_f64() * 1e3,
+        r_fp.mean.as_secs_f64() * 1e3
+    );
+    println!(
+        "shipped bytes: {} (artifact) vs {} (fp32) — {:.2}x compression",
+        report.artifact_bytes,
+        report.fp_bytes,
+        report.compression_ratio()
+    );
+
+    let json = Json::obj(vec![
+        ("config", Json::str("default_build")),
+        ("alpha", Json::num(alpha as f64)),
+        ("calib_sequences", Json::num(calib.len() as f64)),
+        ("fp_cold_start_ms", Json::num(r_fp.mean.as_secs_f64() * 1e3)),
+        ("artifact_cold_start_ms", Json::num(r_art.mean.as_secs_f64() * 1e3)),
+        ("speedup", Json::num(speedup)),
+        ("fp_bytes", Json::num(report.fp_bytes as f64)),
+        ("artifact_bytes", Json::num(report.artifact_bytes as f64)),
+        ("compression", Json::num(report.compression_ratio())),
+        ("artifact_resident_kb", Json::num(rss_art)),
+        ("fp_calibrate_resident_kb", Json::num(rss_fp)),
+        ("bit_identical", Json::Bool(true)),
+    ]);
+    let path = concat!(env!("CARGO_MANIFEST_DIR"), "/../BENCH_artifact_load.json");
+    std::fs::write(path, json.render_pretty()).expect("write BENCH_artifact_load.json");
+    println!("wrote {path}");
+    let _ = std::fs::remove_dir_all(&dir);
+}

@@ -120,6 +120,7 @@ fn main() {
                 max_batch_delay: Duration::from_millis(2),
                 max_queue: 256,
                 engine: Default::default(),
+                artifacts: Vec::new(),
             },
         );
         let r = bench(label, Duration::from_millis(1500), || {

@@ -45,6 +45,13 @@ impl ColStats {
         ColStats { col_max: Vec::new(), batches: 0 }
     }
 
+    /// Rebuild statistics from persisted column maxima — the
+    /// `quant::artifact` load path. The per-batch provenance is not
+    /// shipped, so `batches` reports 1 (observed once, as one artifact).
+    pub fn from_col_max(col_max: Vec<f32>) -> ColStats {
+        ColStats { col_max, batches: 1 }
+    }
+
     /// Fold one calibration activation batch into the statistics.
     /// NaN-propagating like `Matrix::col_abs_max`: a corrupt calibration
     /// batch surfaces in the profile instead of vanishing into a max.

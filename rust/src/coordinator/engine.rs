@@ -251,7 +251,12 @@ impl Engine {
     fn admit(&mut self, models: &mut dyn EngineModels) {
         while self.active.len() < self.cfg.max_active_seqs && !self.waiting.is_empty() {
             let Some(state) = self.pool.lease() else { break };
-            let req = self.waiting.pop_front().expect("non-empty checked above");
+            let Some(req) = self.waiting.pop_front() else {
+                // unreachable given the loop guard, but a leaked slot is
+                // the wrong failure mode if that invariant ever slips
+                self.pool.release(state);
+                break;
+            };
             self.admit_one(models, req, state);
         }
     }

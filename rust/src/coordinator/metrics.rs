@@ -43,6 +43,17 @@ pub struct Metrics {
     pub kv_pool_in_use: AtomicU64,
     /// Gauge: bytes of one slot (= `DecodeState::memory_bytes()`).
     pub kv_pool_slot_bytes: AtomicU64,
+    // --- deployment artifacts ---
+    /// Artifacts successfully mounted at executor startup.
+    pub artifacts_mounted: AtomicU64,
+    /// Static models served from a mounted `.cqa` artifact (mmap load —
+    /// no FP weights, no calibration).
+    pub artifact_loads: AtomicU64,
+    /// Wall time spent loading artifacts, microseconds.
+    pub artifact_load_us: AtomicU64,
+    /// Static models built by the lazy FP-load + calibrate path (the
+    /// cold-start cost a mounted artifact avoids).
+    pub static_calibrations: AtomicU64,
     latency_buckets: [AtomicU64; BUCKETS_US.len() + 1],
     latency_sum_us: AtomicU64,
 }
@@ -140,6 +151,18 @@ impl Metrics {
         ])
     }
 
+    /// Deployment-artifact accounting as structured JSON — the `{"cmd":
+    /// "metrics"}` payload's `"artifacts"` object.
+    pub fn artifact_json(&self) -> Json {
+        let load = |a: &AtomicU64| a.load(Ordering::Relaxed) as f64;
+        Json::obj(vec![
+            ("mounted", Json::num(load(&self.artifacts_mounted))),
+            ("loads", Json::num(load(&self.artifact_loads))),
+            ("load_ms_total", Json::num(load(&self.artifact_load_us) / 1000.0)),
+            ("calibrations", Json::num(load(&self.static_calibrations))),
+        ])
+    }
+
     pub fn summary(&self) -> String {
         format!(
             "submitted={} completed={} failed={} batches={} mean_batch={:.2} mean_lat={:.1}ms p90={:.1}ms",
@@ -190,6 +213,20 @@ mod tests {
     fn summary_renders() {
         let m = Metrics::new();
         assert!(m.summary().contains("submitted=0"));
+    }
+
+    #[test]
+    fn artifact_accounting_json() {
+        let m = Metrics::new();
+        m.artifacts_mounted.store(1, Ordering::Relaxed);
+        m.artifact_loads.store(2, Ordering::Relaxed);
+        m.artifact_load_us.store(1500, Ordering::Relaxed);
+        m.static_calibrations.store(3, Ordering::Relaxed);
+        let j = m.artifact_json();
+        assert_eq!(j.get("mounted").and_then(|v| v.as_f64()), Some(1.0));
+        assert_eq!(j.get("loads").and_then(|v| v.as_f64()), Some(2.0));
+        assert_eq!(j.get("load_ms_total").and_then(|v| v.as_f64()), Some(1.5));
+        assert_eq!(j.get("calibrations").and_then(|v| v.as_f64()), Some(3.0));
     }
 
     #[test]

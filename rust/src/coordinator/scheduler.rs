@@ -28,12 +28,13 @@
 //! clone triggers the same drain, so the threads are never leaked.
 
 use std::collections::HashMap;
+use std::path::PathBuf;
 use std::sync::mpsc::{Receiver, RecvTimeoutError, Sender, SyncSender, TryRecvError};
 use std::sync::{Arc, Mutex};
 use std::thread::JoinHandle;
 use std::time::{Duration, Instant};
 
-use anyhow::{anyhow, ensure, Result};
+use anyhow::{anyhow, ensure, Context, Result};
 
 use super::batcher::{BatchAccumulator, ReadyBatch};
 use super::engine::{Engine, EngineConfig, EngineModels, GenEvent, GenRequest};
@@ -45,6 +46,7 @@ use crate::model::{
     ActSite, IdentitySite, NativeModel, QuantPath, QuantSite, QuantizedModel, RemoveKernelSite,
     Weights,
 };
+use crate::quant::artifact::Artifact;
 use crate::quant::{
     crossquant::cross_delta_field, remove_kernel::RemoveKernel, ActQuantizer, Bits, DeltaField,
 };
@@ -197,6 +199,12 @@ pub struct CoordinatorConfig {
     pub max_queue: usize,
     /// Continuous-batching engine knobs (KV pool size, admission queue).
     pub engine: EngineConfig,
+    /// Mounted `.cqa` deployment artifacts: (weight-set name, path). A
+    /// `crossquant-static` request whose (set, α) matches a mount is
+    /// served from the artifact — mmap load, no FP weights, no
+    /// calibration — replacing the lazy per-(set, α) `calibrate_static`
+    /// path for that key.
+    pub artifacts: Vec<(String, PathBuf)>,
 }
 
 impl Default for CoordinatorConfig {
@@ -206,6 +214,7 @@ impl Default for CoordinatorConfig {
             max_batch_delay: Duration::from_millis(5),
             max_queue: 256,
             engine: EngineConfig::default(),
+            artifacts: Vec::new(),
         }
     }
 }
@@ -235,10 +244,11 @@ impl EvalCoordinator {
 
         let m2 = metrics.clone();
         let engine_cfg = cfg.engine;
+        let artifacts = cfg.artifacts;
         let executor = std::thread::Builder::new()
             .name("pjrt-executor".into())
             .spawn(move || {
-                executor_loop(store, model_config, weight_sets, batch_rx, m2, engine_cfg)
+                executor_loop(store, model_config, weight_sets, artifacts, batch_rx, m2, engine_cfg)
             })
             .expect("spawn executor");
 
@@ -315,7 +325,12 @@ impl EvalCoordinator {
     /// join the batcher and executor threads. Idempotent; later `submit`s
     /// fail with "coordinator shut down".
     pub fn shutdown(&self) {
-        let mut threads = self.threads.lock().expect("shutdown mutex");
+        // a thread that panicked while holding the lock must not turn a
+        // graceful shutdown into a second panic — take the poisoned guard
+        let mut threads = match self.threads.lock() {
+            Ok(g) => g,
+            Err(poisoned) => poisoned.into_inner(),
+        };
         if threads.is_empty() {
             return; // already shut down
         }
@@ -427,6 +442,9 @@ enum Backend {
         runtime: Runtime,
         literals: HashMap<String, xla::Literal>,
         native: Option<NativeExecutor>,
+        /// Handed to the native sidecar at its lazy construction.
+        artifacts: Vec<(String, PathBuf)>,
+        metrics: Arc<Metrics>,
     },
     Native(NativeExecutor),
 }
@@ -435,15 +453,16 @@ impl Backend {
     fn native_mut(&mut self, cfg: ModelConfig) -> Result<&mut NativeExecutor> {
         match self {
             Backend::Native(n) => Ok(n),
-            Backend::Pjrt { literals, native, .. } => {
+            Backend::Pjrt { literals, native, artifacts, metrics, .. } => {
                 if native.is_none() {
                     let sets = literals
                         .iter()
                         .map(|(k, v)| Ok((k.clone(), literal_to_vec(v)?)))
                         .collect::<Result<Vec<_>>>()?;
-                    *native = Some(NativeExecutor::new(cfg, sets));
+                    *native =
+                        Some(NativeExecutor::new(cfg, sets, artifacts.clone(), metrics.clone()));
                 }
-                Ok(native.as_mut().expect("initialised above"))
+                native.as_mut().ok_or_else(|| anyhow!("native sidecar failed to initialise"))
             }
         }
     }
@@ -456,8 +475,9 @@ impl Backend {
         cfg: ModelConfig,
         batch: &ReadyBatch<Pending>,
     ) -> Result<Vec<EvalResponse>> {
-        let needs_native =
-            matches!(batch.requests[0].req.scheme, ActScheme::CrossQuantStatic { .. });
+        let first =
+            batch.requests.first().ok_or_else(|| anyhow!("empty batch dispatched"))?;
+        let needs_native = matches!(first.req.scheme, ActScheme::CrossQuantStatic { .. });
         if needs_native {
             return self.native_mut(cfg)?.execute_batch(batch);
         }
@@ -477,6 +497,7 @@ fn executor_loop(
     store: ArtifactStore,
     cfg: ModelConfig,
     weight_sets: Vec<(String, Vec<f32>)>,
+    artifacts: Vec<(String, PathBuf)>,
     rx: Receiver<ExecMsg>,
     metrics: Arc<Metrics>,
     engine_cfg: EngineConfig,
@@ -486,13 +507,13 @@ fn executor_loop(
         Ok(runtime) => {
             let literals: HashMap<String, xla::Literal> =
                 weight_sets.into_iter().map(|(k, v)| (k, vec_literal(&v))).collect();
-            Backend::Pjrt { runtime, literals, native: None }
+            Backend::Pjrt { runtime, literals, native: None, artifacts, metrics: metrics.clone() }
         }
         Err(e) => {
             // No PJRT runtime linked: serve the same protocol with the
             // native executor instead of failing every request.
             eprintln!("coordinator: PJRT unavailable ({e}); falling back to the native executor");
-            Backend::Native(NativeExecutor::new(cfg, weight_sets))
+            Backend::Native(NativeExecutor::new(cfg, weight_sets, artifacts, metrics.clone()))
         }
     };
     let mut draining = false;
@@ -655,8 +676,40 @@ pub(crate) struct NativeExecutor {
     /// Calibrated static-scale integer models, keyed by (weight set, α in
     /// micro-units). Calibration runs once per cached key; the cache is
     /// genuine LRU, so an α sweep displaces the coldest model, never a
-    /// hot one.
+    /// hot one. Artifact-backed models share the cache under the same
+    /// keys — a mounted artifact is just a much cheaper way to fill it.
     static_models: LruCache<(String, i64), QuantizedModel>,
+    /// The artifact repository, keyed by weight-set name. Static requests
+    /// hitting a matching (set, α) rebuild the model from the retained
+    /// mapping — no FP weights, no calibration — instead of the lazy
+    /// calibrate path.
+    artifacts: HashMap<String, MountState>,
+    metrics: Arc<Metrics>,
+}
+
+/// One mounted `.cqa`: the artifact is opened (and CRC-verified) once at
+/// mount and retained, so request-time model builds are pure struct
+/// rebuilds over the already-validated mapping — no re-read, no window
+/// for the file to change or vanish between mount and first request.
+struct MountedArtifact {
+    alpha_micro: i64,
+    path: PathBuf,
+    artifact: Artifact,
+}
+
+/// A mount slot: the retained validated artifact, or the reason the
+/// mount failed — kept so requests against a broken mount get that
+/// precise error instead of a generic "unknown weight set".
+enum MountState {
+    Ready(MountedArtifact),
+    Failed(String),
+}
+
+/// The (weight set, α) cache key's α quantization — one definition shared
+/// by the mount table and the request path, so the two can never drift
+/// into silently missing each other.
+fn alpha_micro(alpha: f32) -> i64 {
+    (alpha as f64 * 1e6).round() as i64
 }
 
 /// α is client-supplied: bound the static-model cache so an α sweep
@@ -666,55 +719,125 @@ pub(crate) struct NativeExecutor {
 const MAX_STATIC_MODELS: usize = 8;
 
 impl NativeExecutor {
-    fn new(cfg: ModelConfig, weight_sets: Vec<(String, Vec<f32>)>) -> NativeExecutor {
+    fn new(
+        cfg: ModelConfig,
+        weight_sets: Vec<(String, Vec<f32>)>,
+        artifact_mounts: Vec<(String, PathBuf)>,
+        metrics: Arc<Metrics>,
+    ) -> NativeExecutor {
+        // mount artifacts up front: the one full open validates every CRC
+        // (a corrupt file surfaces at startup as one structured log line)
+        // and the parsed artifact is retained for request-time rebuilds
+        let mut artifacts = HashMap::new();
+        for (name, path) in artifact_mounts {
+            let state = match Artifact::open(&path) {
+                Ok(artifact) => {
+                    metrics
+                        .artifacts_mounted
+                        .fetch_add(1, std::sync::atomic::Ordering::Relaxed);
+                    let am = alpha_micro(artifact.alpha);
+                    MountState::Ready(MountedArtifact { alpha_micro: am, path, artifact })
+                }
+                Err(e) => {
+                    eprintln!(
+                        "coordinator: failed to mount artifact {} for weight set '{name}': {e:#}",
+                        path.display()
+                    );
+                    MountState::Failed(format!("{e:#}"))
+                }
+            };
+            artifacts.insert(name, state);
+        }
         NativeExecutor {
             cfg,
             weight_sets: weight_sets.into_iter().collect(),
             models: HashMap::new(),
             static_models: LruCache::new(MAX_STATIC_MODELS),
+            artifacts,
+            metrics,
+        }
+    }
+
+    /// Structured "no such set" error, aware of artifact-only mounts.
+    fn unknown_set(&self, name: &str) -> anyhow::Error {
+        match self.artifacts.get(name) {
+            Some(MountState::Ready(m)) => anyhow!(
+                "weight set {name} is artifact-only (mounted at α={}): only the \
+                 crossquant-static scheme at that α is served without FP weights",
+                m.alpha_micro as f64 / 1e6
+            ),
+            Some(MountState::Failed(e)) => {
+                anyhow!("weight set {name}'s mounted artifact failed to load: {e}")
+            }
+            None => anyhow!("unknown weight set {name}"),
         }
     }
 
     fn model_for(&mut self, name: &str) -> Result<&NativeModel> {
         if !self.models.contains_key(name) {
-            let flat = self
-                .weight_sets
-                .get(name)
-                .ok_or_else(|| anyhow!("unknown weight set {name}"))?;
+            let flat = self.weight_sets.get(name).ok_or_else(|| self.unknown_set(name))?;
             let weights = Weights::from_config_flat(self.cfg, flat.clone())?;
             self.models.insert(name.to_string(), NativeModel::new(weights));
         }
-        Ok(self.models.get(name).expect("inserted above"))
+        self.models.get(name).ok_or_else(|| anyhow!("model cache lost entry for {name}"))
     }
 
-    /// Lazily build + calibrate the integer static-scale model for one
-    /// (weight set, α). Calibration runs the dynamic path over a fixed
-    /// deterministic synthetic stream — the offline stand-in for a
-    /// held-out calibration corpus — then folds the scales once; every
-    /// subsequent request on this key is pure per-token-cost serving.
+    /// Lazily build the integer static-scale model for one (weight set,
+    /// α). A mounted artifact with a matching (set, α) is loaded in place
+    /// (mmap — the deployment fast path); otherwise calibration runs the
+    /// dynamic path over a fixed deterministic synthetic stream — the
+    /// offline stand-in for a held-out calibration corpus — then folds
+    /// the scales once. Either way every subsequent request on this key
+    /// is pure per-token-cost serving.
     fn static_model_for(&mut self, name: &str, alpha: f32) -> Result<&QuantizedModel> {
-        let key = (name.to_string(), (alpha as f64 * 1e6).round() as i64);
+        let key = (name.to_string(), alpha_micro(alpha));
         if !self.static_models.contains(&key) {
-            let flat = self
-                .weight_sets
-                .get(name)
-                .ok_or_else(|| anyhow!("unknown weight set {name}"))?;
-            let weights = Weights::from_config_flat(self.cfg, flat.clone())?;
-            let mut qm = QuantizedModel::new(
-                &weights,
-                Bits::Int8,
-                Bits::Int8,
-                QuantPath::CrossQuant { alpha },
-            )?;
-            let mut gen = CorpusGen::new(self.cfg.vocab, 0x5CA1E);
-            let calib: Vec<Vec<u32>> = (0..8).map(|_| gen.sequence(self.cfg.seq_len)).collect();
-            qm.calibrate_static(alpha, &calib)?;
+            let qm = self.build_static_model(name, alpha, key.1)?;
             // LruCache::insert evicts the least-recently-used model once
             // the cap is reached — a re-requested hot α never re-pays its
-            // calibration just because a sweep walked past it
+            // calibration (or artifact load) just because a sweep walked
+            // past it
             self.static_models.insert(key.clone(), qm);
         }
-        Ok(self.static_models.get(&key).expect("inserted above"))
+        self.static_models
+            .get(&key)
+            .ok_or_else(|| anyhow!("static model cache lost entry for {name}"))
+    }
+
+    fn build_static_model(
+        &mut self,
+        name: &str,
+        alpha: f32,
+        key_alpha: i64,
+    ) -> Result<QuantizedModel> {
+        if let Some(MountState::Ready(m)) = self.artifacts.get(name) {
+            if m.alpha_micro == key_alpha {
+                let t0 = Instant::now();
+                // rebuild over the mapping retained at mount — no re-read,
+                // no re-validation, no window for the file to have changed
+                let qm = QuantizedModel::from_artifact(&m.artifact)
+                    .with_context(|| format!("loading mounted artifact {}", m.path.display()))?;
+                ensure!(
+                    qm.config == self.cfg,
+                    "artifact config {:?} does not match the serving config {:?}",
+                    qm.config,
+                    self.cfg
+                );
+                let rl = std::sync::atomic::Ordering::Relaxed;
+                self.metrics.artifact_loads.fetch_add(1, rl);
+                self.metrics.artifact_load_us.fetch_add(t0.elapsed().as_micros() as u64, rl);
+                return Ok(qm);
+            }
+        }
+        let flat = self.weight_sets.get(name).ok_or_else(|| self.unknown_set(name))?;
+        let weights = Weights::from_config_flat(self.cfg, flat.clone())?;
+        let mut qm =
+            QuantizedModel::new(&weights, Bits::Int8, Bits::Int8, QuantPath::CrossQuant { alpha })?;
+        let mut gen = CorpusGen::new(self.cfg.vocab, 0x5CA1E);
+        let calib: Vec<Vec<u32>> = (0..8).map(|_| gen.sequence(self.cfg.seq_len)).collect();
+        qm.calibrate_static(alpha, &calib)?;
+        self.metrics.static_calibrations.fetch_add(1, std::sync::atomic::Ordering::Relaxed);
+        Ok(qm)
     }
 
     fn execute_batch(&mut self, batch: &ReadyBatch<Pending>) -> Result<Vec<EvalResponse>> {
@@ -727,7 +850,12 @@ impl NativeExecutor {
             );
         }
         // requests in a batch share a key, so the scheme is uniform
-        let scheme = batch.requests[0].req.scheme;
+        let scheme = batch
+            .requests
+            .first()
+            .ok_or_else(|| anyhow!("empty batch dispatched"))?
+            .req
+            .scheme;
         if let ActScheme::CrossQuantStatic { alpha, qmax } = scheme {
             ensure!(alpha.is_finite() && (0.0..=1.0).contains(&alpha), "bad alpha {alpha}");
             // the integer model quantizes on the Bits grid; the native
@@ -785,8 +913,9 @@ fn execute_batch(
     // Assemble the fixed-size token batch; pad missing rows by repeating
     // the last request (their outputs are discarded).
     let mut rows: Vec<Vec<u32>> = batch.requests.iter().map(|p| p.req.tokens.clone()).collect();
+    let pad = rows.last().cloned().ok_or_else(|| anyhow!("empty batch dispatched"))?;
     while rows.len() < cfg.eval_batch {
-        rows.push(rows.last().expect("non-empty batch").clone());
+        rows.push(pad.clone());
     }
     anyhow::ensure!(rows.len() == cfg.eval_batch, "batch overflow: {}", rows.len());
     let tokens = tokens_literal(&rows, cfg.seq_len, 0)?;

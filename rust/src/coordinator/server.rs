@@ -254,6 +254,9 @@ pub fn handle_line(coordinator: &EvalCoordinator, line: &str) -> Result<Json> {
                 // engine + KV-pool accounting (batch occupancy, queue
                 // depth, pool utilisation, aggregate decode tok/s)
                 ("engine", coordinator.metrics.engine_json()),
+                // deployment-artifact accounting (mounts, mmap loads vs
+                // lazy calibrations)
+                ("artifacts", coordinator.metrics.artifact_json()),
             ])),
             other => Err(anyhow!("unknown cmd '{other}'")),
         };

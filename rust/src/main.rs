@@ -3,10 +3,12 @@
 //!
 //! Subcommands:
 //!   info                 artifact + manifest inventory
-//!   quantize             quantize a profile's activations, report stats
+//!   quantize             calibrate + write a deployable .cqa artifact
+//!   inspect              print a .cqa artifact's header/sections/ratios
 //!   analyze              kernel analysis across profiles (Figure-4 style)
 //!   eval                 ppl + zero-shot eval of one method×setting cell
 //!   serve-eval           the PJRT/coordinator path: batched eval requests
+//!   serve                TCP server (optionally booted from a .cqa artifact)
 //!   reproduce <id>       regenerate a paper table/figure (fig1 … tab5, all)
 //!
 //! Global flags: --artifacts <dir> --synthetic --eval-sequences N
@@ -16,8 +18,7 @@ use std::path::{Path, PathBuf};
 
 use anyhow::{anyhow, bail, Result};
 
-use crossquant::activations::{ActivationGen, Family, FamilyProfile};
-use crossquant::analysis::{kernel::KernelReport, CrossStats};
+use crossquant::activations::{Family, FamilyProfile};
 use crossquant::coordinator::scheduler::CoordinatorConfig;
 use crossquant::coordinator::{ActScheme, EvalCoordinator};
 use crossquant::corpus::{CorpusGen, CorpusKind};
@@ -26,9 +27,11 @@ use crossquant::exp::{
     self,
     common::{prepare, run_ppl, run_tasks, ExpOpts, Method, Setting},
 };
-use crossquant::model::weights::{synthetic_weights, Weights};
+use crossquant::model::quantized::quantize_to_artifact;
+use crossquant::model::weights::{fp_weight_bytes, synthetic_weights, Weights};
 use crossquant::model::ModelConfig;
-use crossquant::quant::{crossquant::CrossQuant, per_token::PerToken, Bits};
+use crossquant::quant::artifact::{Artifact, SectionKind};
+use crossquant::quant::Bits;
 use crossquant::runtime::{ArtifactStore, Runtime};
 use crossquant::util::Json;
 
@@ -36,11 +39,18 @@ const USAGE: &str = "usage: repro [GLOBAL FLAGS] <command> [ARGS]
 
 commands:
   info                         artifact + manifest inventory
-  quantize [--profile P] [--alpha A] [--bits N]
+  quantize [--alpha A] [--bits 4|8] [--calib-sequences N] [--out PATH]
+                               calibrate static CrossQuant scales once and
+                               write a deployable .cqa artifact
+                               (default out: model.cqa)
+  inspect <artifact.cqa>       print a .cqa artifact's header, sections,
+                               checksums and compression ratio
   analyze                      kernel proportions across all profiles
   eval [--profile P] [--method M] [--setting S] [--alpha A] [--tasks]
   serve-eval [--requests N] [--alpha A]
   serve [--addr HOST:PORT]     TCP line-protocol eval + generation server
+        [--artifact PATH]      boot from a .cqa artifact: no weights.bin, no
+                               calibration; crossquant-static served zero-copy
         [--max-active-seqs N]  continuous-batching width (default 32)
         [--kv-pool-mb MB]      KV-cache arena byte budget (default: unbounded
                                up to max-active-seqs slots)
@@ -130,11 +140,14 @@ fn main() -> Result<()> {
 
     match cmd {
         "info" => info(&args),
-        "quantize" => quantize(
-            &args.get_or("profile", "opt-13b"),
-            args.num("alpha", 0.15f32)?,
-            args.num("bits", 8u8)?,
-        ),
+        "quantize" => quantize(&args, &opts),
+        "inspect" => {
+            let path = args
+                .positional
+                .get(1)
+                .ok_or_else(|| anyhow!("inspect needs an artifact path (e.g. model.cqa)"))?;
+            inspect(path)
+        }
         "analyze" => analyze(&args, &opts),
         "eval" => eval_cell(
             &args,
@@ -185,31 +198,105 @@ fn info(args: &Args) -> Result<()> {
     Ok(())
 }
 
-fn quantize(profile: &str, alpha: f32, bits: u8) -> Result<()> {
-    let p =
-        FamilyProfile::by_name(profile).ok_or_else(|| anyhow!("unknown profile {profile}"))?;
-    let bits = if bits <= 4 { Bits::Int4 } else { Bits::Int8 };
-    let x = ActivationGen::new(p.clone(), 7).matrix(1024, 512);
-    println!("profile {profile}: {} outlier channels × {}×", p.outlier_channels, p.outlier_scale);
-    for report in [
-        KernelReport::compute(&x, &PerToken::new(bits)),
-        KernelReport::compute(&x, &CrossQuant::new(alpha, bits)),
-    ] {
+/// "W8"/"W4"-style weight-grid label (Bits's Display is the activation
+/// flavour).
+fn weight_label(bits: Bits) -> String {
+    match bits {
+        Bits::Int4 => "W4".into(),
+        Bits::Int8 => "W8".into(),
+        Bits::Other(n) => format!("W{n}"),
+    }
+}
+
+/// The deployment pipeline's first half: load FP weights (trained store
+/// or --synthetic), calibrate static CrossQuant scales on a deterministic
+/// corpus, fold ĉ^(1−α) into the codes once, and write the `.cqa`
+/// artifact `repro serve --artifact` boots from.
+fn quantize(args: &Args, opts: &ExpOpts) -> Result<()> {
+    let alpha = args.num("alpha", 0.15f32)?;
+    let bits = match args.num("bits", 8u8)? {
+        4 => Bits::Int4,
+        8 => Bits::Int8,
+        other => bail!("--bits must be 4 or 8 for the integer deployment path, got {other}"),
+    };
+    let n_calib = args.num("calib-sequences", 8usize)?;
+    let out = PathBuf::from(args.get_or("out", "model.cqa"));
+    let weights = load_weights(args, opts.seed)?;
+    let cfg = weights.config;
+    let mut gen = CorpusGen::new(cfg.vocab, opts.seed ^ 0x5CA1E);
+    let calib: Vec<Vec<u32>> = (0..n_calib).map(|_| gen.sequence(cfg.seq_len)).collect();
+    let t0 = std::time::Instant::now();
+    let report = quantize_to_artifact(&weights, bits, Bits::Int8, alpha, &calib, &out)?;
+    println!(
+        "wrote {} ({} sections, {} bytes) in {:.2?}",
+        out.display(),
+        report.sections,
+        report.artifact_bytes,
+        t0.elapsed()
+    );
+    println!(
+        "  {} weights, α = {}, calibrated on {} sequences",
+        weight_label(report.weight_bits),
+        report.alpha,
+        report.calib_sequences
+    );
+    println!(
+        "  fp32 checkpoint {} bytes → {:.2}x compression",
+        report.fp_bytes,
+        report.compression_ratio()
+    );
+    println!("  inspect it: repro inspect {}", out.display());
+    println!("  serve it:   repro serve --artifact {}", out.display());
+    Ok(())
+}
+
+/// Print a `.cqa` artifact's header, per-section shapes/bytes/checksums,
+/// and the compression ratio against the FP32 checkpoint it replaces.
+fn inspect(path: &str) -> Result<()> {
+    let art = Artifact::open(Path::new(path))?;
+    println!("artifact        : {path}");
+    println!(
+        "format          : .cqa v{}  ({} sections, {} bytes, mmap: {})",
+        art.version,
+        art.sections().len(),
+        art.file_bytes(),
+        art.is_mapped()
+    );
+    let c = art.config;
+    println!(
+        "model           : vocab {}  d_model {}  layers {}  heads {}  d_ff {}  n_ctx {}",
+        c.vocab, c.d_model, c.n_layers, c.n_heads, c.d_ff, c.seq_len
+    );
+    println!(
+        "quantization    : {} weights, {} activations, α = {}",
+        weight_label(art.weight_bits),
+        art.act_bits,
+        art.alpha
+    );
+    println!();
+    println!("{:<22} {:>10} {:>12} {:>10}  crc32", "section", "kind", "shape", "bytes");
+    let (mut panel_bytes, mut f32_bytes) = (0usize, 0usize);
+    for s in art.sections() {
+        match s.kind {
+            SectionKind::F32 => f32_bytes += s.len,
+            SectionKind::PanelsI8 | SectionKind::PanelsI4 => panel_bytes += s.len,
+        }
         println!(
-            "  {:28} kernel {:6.2}%  ({} / {} elements, mean|x| in kernel {:.4})",
-            report.scheme,
-            report.fraction * 100.0,
-            report.count,
-            report.total,
-            report.mean_abs_kernel,
+            "{:<22} {:>10} {:>12} {:>10}  {:08x}",
+            s.name,
+            s.kind.label(),
+            format!("{}x{}", s.rows, s.cols),
+            s.len,
+            s.crc
         );
     }
-    let stats = CrossStats::compute(&x, alpha, bits);
-    println!(
-        "  c_j≥t_i: {:.2}%   B̃<B: {:.2}%",
-        stats.frac_col_ge_row * 100.0,
-        stats.frac_bound_smaller * 100.0
-    );
+    let fp = fp_weight_bytes(&art.config);
+    println!();
+    println!("integer panels  : {panel_bytes} bytes");
+    println!("fp32 sections   : {f32_bytes} bytes (embeddings, LN affines, scales, stats)");
+    println!("fp32 checkpoint : {fp} bytes");
+    let ratio = fp as f64 / art.file_bytes() as f64;
+    println!("compression     : {ratio:.2}x vs the fp32 checkpoint");
     Ok(())
 }
 
@@ -319,24 +406,8 @@ fn serve_eval(args: &Args, requests: usize, alpha: f32) -> Result<()> {
     Ok(())
 }
 
-fn serve(args: &Args, addr: &str) -> Result<()> {
-    use crossquant::coordinator::{EngineConfig, EvalServer};
-    // --synthetic serves random weights with no artifacts on disk: the
-    // coordinator's native executor handles every scheme and the
-    // generation kind, so the full protocol is demoable anywhere
-    let (store, weights) = if args.flag("synthetic") {
-        let dir = artifacts_dir(args).unwrap_or_else(|| PathBuf::from("artifacts"));
-        let weights = synthetic_weights(ModelConfig::default_build(), args.num("seed", 0u64)?);
-        (ArtifactStore { dir }, weights)
-    } else {
-        let store = ArtifactStore::discover(artifacts_dir(args).as_deref())?;
-        store.validate()?;
-        let weights = store.load_weights()?;
-        (store, weights)
-    };
-    let cfg = weights.config;
-
-    // register the standard weight variants so clients can pick a precision
+/// The standard weight variants clients can pick a precision from.
+fn weight_variants(weights: &Weights) -> Result<Vec<(String, Vec<f32>)>> {
     let mut sets = vec![("w16".to_string(), weights.flat.clone())];
     for (name, scheme) in [
         ("w8", crossquant::model::quantized::WeightScheme::PerChannel(Bits::Int8)),
@@ -346,10 +417,57 @@ fn serve(args: &Args, addr: &str) -> Result<()> {
         crossquant::model::quantized::quantize_weights(&mut w, scheme)?;
         sets.push((name.to_string(), w.flat));
     }
+    Ok(sets)
+}
+
+fn serve(args: &Args, addr: &str) -> Result<()> {
+    use crossquant::coordinator::{EngineConfig, EvalServer};
+    // three boot modes:
+    //  * --artifact P: boot from the .cqa alone — config comes from its
+    //    header, weights.bin is never read, no calibration runs; the
+    //    "w16" set serves crossquant-static straight off the mapping
+    //  * --synthetic: random weights, full scheme surface, no disk state
+    //  * default: the trained artifacts store
+    let dir = artifacts_dir(args).unwrap_or_else(|| PathBuf::from("artifacts"));
+    // the last tuple element is the α the printed request examples use —
+    // an artifact serves only its own α, so the examples interpolate it
+    let (store, cfg, sets, mounts, example_alpha) = if let Some(apath) = args.get("artifact") {
+        let apath = PathBuf::from(apath);
+        // this open feeds the engine config + banner; the executor thread
+        // re-opens and retains its own mapping at mount (a second
+        // full-file validation at startup — accepted so the config
+        // surface stays a plain path and mount errors stay request-visible
+        // through the executor's MountState)
+        let art = Artifact::open(&apath)?;
+        println!(
+            "mounted artifact {} (α = {}, {} weights, {} sections, {} bytes)",
+            apath.display(),
+            art.alpha,
+            weight_label(art.weight_bits),
+            art.sections().len(),
+            art.file_bytes()
+        );
+        let mounts = vec![("w16".to_string(), apath)];
+        (ArtifactStore { dir }, art.config, Vec::new(), mounts, art.alpha)
+    } else if args.flag("synthetic") {
+        // random weights with no artifacts on disk: the native executor
+        // handles every scheme, so the full protocol is demoable anywhere
+        let weights = synthetic_weights(ModelConfig::default_build(), args.num("seed", 0u64)?);
+        let cfg = weights.config;
+        (ArtifactStore { dir }, cfg, weight_variants(&weights)?, Vec::new(), 0.15)
+    } else {
+        let store = ArtifactStore::discover(artifacts_dir(args).as_deref())?;
+        store.validate()?;
+        let weights = store.load_weights()?;
+        let cfg = weights.config;
+        let sets = weight_variants(&weights)?;
+        (store, cfg, sets, Vec::new(), 0.15)
+    };
 
     let defaults = EngineConfig::default();
+    let max_active = args.num("max-active-seqs", defaults.max_active_seqs)?;
     let engine = EngineConfig {
-        max_active_seqs: args.num("max-active-seqs", defaults.max_active_seqs)?,
+        max_active_seqs: max_active,
         kv_pool_bytes: match args.get("kv-pool-mb") {
             None => defaults.kv_pool_bytes,
             Some(_) => Some(args.num::<usize>("kv-pool-mb", 0)? * 1024 * 1024),
@@ -357,22 +475,31 @@ fn serve(args: &Args, addr: &str) -> Result<()> {
         max_waiting: args.num("admission-queue", defaults.max_waiting)?,
     };
     let max_connections = args.num("max-connections", 256usize)?;
+    let artifact_only = !mounts.is_empty();
     let coordinator = EvalCoordinator::start(
         store,
         cfg,
         sets,
-        CoordinatorConfig { engine, ..Default::default() },
+        CoordinatorConfig { engine, artifacts: mounts, ..Default::default() },
     );
     let listener = std::net::TcpListener::bind(addr)?;
     println!("serving quantized-LM evaluation + generation on {addr}");
-    println!("  weight sets: w16, w8, w4g128 — protocol: one JSON per line");
+    if artifact_only {
+        println!("  artifact-only: \"w16\" serves scheme \"crossquant-static\" (mmap, zero-copy)");
+    } else {
+        println!("  weight sets: w16, w8, w4g128 — protocol: one JSON per line");
+    }
     println!(
-        "  continuous batching: {} max active seqs, {} max connections",
-        args.num("max-active-seqs", defaults.max_active_seqs)?,
-        max_connections
+        "  continuous batching: {max_active} max active seqs, {max_connections} max connections"
     );
-    println!("  score:    echo '{{\"tokens\": [1,2,3,4,5], \"scheme\": \"crossquant\", \"weight_set\": \"w8\"}}' | nc {addr}");
-    println!("  generate: echo '{{\"tokens\": [1,2,3,4,5], \"scheme\": \"crossquant-static\", \"max_new_tokens\": 8}}' | nc {addr}");
+    println!(
+        "  score:    echo '{{\"tokens\": [1,2,3,4,5], \"scheme\": \"crossquant-static\", \
+         \"alpha\": {example_alpha}}}' | nc {addr}"
+    );
+    println!(
+        "  generate: echo '{{\"tokens\": [1,2,3,4,5], \"scheme\": \"crossquant-static\", \
+         \"alpha\": {example_alpha}, \"max_new_tokens\": 8}}' | nc {addr}"
+    );
     println!("  stream:   add \"stream\": true for one {{\"token\": ...}} line per decoded token");
     EvalServer::new(coordinator).with_max_connections(max_connections).serve(listener)
 }

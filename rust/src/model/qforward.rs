@@ -17,12 +17,15 @@
 //! decode) is the shared core in [`super::block`]; this file contributes
 //! the quantized-linear dispatch and the calibration machinery.
 
-use anyhow::Result;
+use std::path::Path;
+
+use anyhow::{anyhow, Context, Result};
 
 use super::block::{self, DecodeState, LayerView, ModelView};
 use super::config::ModelConfig;
 use super::weights::Weights;
 use crate::activations::ColStats;
+use crate::quant::artifact::{Artifact, ArtifactWriter};
 use crate::quant::qlinear::{QuantizedLinear, ScaleMode};
 use crate::quant::Bits;
 use crate::tensor::Matrix;
@@ -64,6 +67,9 @@ pub struct QuantizedModel {
     lnf_g: Matrix,
     lnf_b: Matrix,
     w_out: QuantizedLinear,
+    /// Per-site calibration statistics retained by `calibrate_static` (or
+    /// rebuilt from an artifact) so `write_artifact` can ship them.
+    calib_stats: Option<Vec<ColStats>>,
 }
 
 impl QuantizedModel {
@@ -119,6 +125,7 @@ impl QuantizedModel {
             lnf_g: weights.get("lnf_g")?,
             lnf_b: weights.get("lnf_b")?,
             w_out: q("w_out")?,
+            calib_stats: None,
         })
     }
 
@@ -311,8 +318,167 @@ impl QuantizedModel {
             layer.w2.set_scale_mode(st(stats[base + 3].col_pow(alpha)));
         }
         self.w_out.set_scale_mode(st(stats[n_sites - 1].col_pow(alpha)));
+        self.calib_stats = Some(stats);
         self.path = QuantPath::CrossQuantStatic { alpha };
         Ok(())
+    }
+
+    /// The (name, layer) pairs of every quantized linear, in artifact
+    /// section order — one definition, so the writer can never drift
+    /// from the layer structure.
+    fn linear_slots(&self) -> Vec<(String, &QuantizedLinear)> {
+        let mut slots = Vec::with_capacity(6 * self.layers.len() + 1);
+        for (l, layer) in self.layers.iter().enumerate() {
+            for (slot, lin) in [
+                ("wq", &layer.wq),
+                ("wk", &layer.wk),
+                ("wv", &layer.wv),
+                ("wo", &layer.wo),
+                ("w1", &layer.w1),
+                ("w2", &layer.w2),
+            ] {
+                slots.push((format!("layer{l}.{slot}"), lin));
+            }
+        }
+        slots.push(("w_out".to_string(), &self.w_out));
+        slots
+    }
+
+    /// Persist the calibrated model as a `.cqa` deployment artifact (see
+    /// `quant::artifact` for the byte layout): folded int8/int4 panels,
+    /// folded scales, activation-side column factors, FP embeddings + LN
+    /// affines, and the raw calibration column maxima. Requires
+    /// [`QuantizedModel::calibrate_static`] (or an artifact load) first.
+    /// Returns the number of sections written.
+    pub fn write_artifact(&self, path: &Path) -> Result<usize> {
+        let alpha = match self.path {
+            QuantPath::CrossQuantStatic { alpha } => alpha,
+            _ => anyhow::bail!(
+                "write_artifact requires a calibrated static model \
+                 (run calibrate_static first)"
+            ),
+        };
+        let stats = self
+            .calib_stats
+            .as_ref()
+            .ok_or_else(|| anyhow!("no calibration statistics retained"))?;
+        let mut w = ArtifactWriter::new(self.config, alpha, self.weight_bits, self.act_bits);
+        w.add_matrix("tok_emb", &self.tok_emb)?;
+        w.add_matrix("pos_emb", &self.pos_emb)?;
+        for (l, layer) in self.layers.iter().enumerate() {
+            w.add_matrix(&format!("layer{l}.ln1_g"), &layer.ln1_g)?;
+            w.add_matrix(&format!("layer{l}.ln1_b"), &layer.ln1_b)?;
+            w.add_matrix(&format!("layer{l}.ln2_g"), &layer.ln2_g)?;
+            w.add_matrix(&format!("layer{l}.ln2_b"), &layer.ln2_b)?;
+        }
+        w.add_matrix("lnf_g", &self.lnf_g)?;
+        w.add_matrix("lnf_b", &self.lnf_b)?;
+        for (name, lin) in self.linear_slots() {
+            let (_, col_pow, panels, scale) = lin
+                .static_parts()
+                .ok_or_else(|| anyhow!("linear '{name}' has no static fold"))?;
+            w.add_panels(&format!("{name}.panels"), panels)?;
+            w.add_f32(&format!("{name}.scale"), 1, scale.len(), scale)?;
+            w.add_f32(&format!("{name}.colpow"), 1, col_pow.len(), col_pow)?;
+        }
+        for (i, s) in stats.iter().enumerate() {
+            w.add_f32(&format!("site{i}.colmax"), 1, s.col_max().len(), s.col_max())?;
+        }
+        let sections = w.section_count();
+        w.write(path)?;
+        Ok(sections)
+    }
+
+    /// Rebuild a serving model from an opened `.cqa` artifact — **no FP
+    /// weights, no calibration**: the folded int8 panels are borrowed
+    /// straight from the file mapping (zero copy; INT4 nibbles decode to
+    /// owned buffers), and the model comes up already on
+    /// [`QuantPath::CrossQuantStatic`]. Bit-identical to the in-memory
+    /// `calibrate_static` model it was written from (pinned by
+    /// rust/tests/artifact.rs).
+    pub fn from_artifact(art: &Artifact) -> Result<QuantizedModel> {
+        let cfg = art.config;
+        let alpha = art.alpha;
+        anyhow::ensure!(
+            alpha.is_finite() && (0.0..=1.0).contains(&alpha),
+            "artifact alpha {alpha} out of range"
+        );
+        anyhow::ensure!(
+            cfg.n_heads > 0 && cfg.d_model % cfg.n_heads == 0,
+            "artifact config: d_model {} is not divisible by n_heads {}",
+            cfg.d_model,
+            cfg.n_heads
+        );
+        let mat = |name: &str, rows: usize, cols: usize| -> Result<Matrix> {
+            let m = art.matrix(name)?;
+            anyhow::ensure!(
+                (m.rows, m.cols) == (rows, cols),
+                "section '{name}': shape {}x{} does not match the config's {rows}x{cols}",
+                m.rows,
+                m.cols
+            );
+            Ok(m)
+        };
+        let lin = |name: &str, in_dim: usize, out_dim: usize| -> Result<QuantizedLinear> {
+            let panels = art.panels(&format!("{name}.panels"))?;
+            anyhow::ensure!(
+                (panels.k, panels.n) == (in_dim, out_dim),
+                "section '{name}.panels': shape {}x{} does not match the config's \
+                 {in_dim}x{out_dim}",
+                panels.k,
+                panels.n
+            );
+            QuantizedLinear::from_static_parts(
+                art.weight_bits,
+                alpha,
+                art.f32_vec(&format!("{name}.colpow"))?,
+                panels,
+                art.f32_vec(&format!("{name}.scale"))?,
+            )
+            .with_context(|| format!("rebuilding linear '{name}'"))
+        };
+        let d = cfg.d_model;
+        let layers = (0..cfg.n_layers)
+            .map(|l| -> Result<QLayer> {
+                Ok(QLayer {
+                    ln1_g: mat(&format!("layer{l}.ln1_g"), 1, d)?,
+                    ln1_b: mat(&format!("layer{l}.ln1_b"), 1, d)?,
+                    wq: lin(&format!("layer{l}.wq"), d, d)?,
+                    wk: lin(&format!("layer{l}.wk"), d, d)?,
+                    wv: lin(&format!("layer{l}.wv"), d, d)?,
+                    wo: lin(&format!("layer{l}.wo"), d, d)?,
+                    ln2_g: mat(&format!("layer{l}.ln2_g"), 1, d)?,
+                    ln2_b: mat(&format!("layer{l}.ln2_b"), 1, d)?,
+                    w1: lin(&format!("layer{l}.w1"), d, cfg.d_ff)?,
+                    w2: lin(&format!("layer{l}.w2"), cfg.d_ff, d)?,
+                })
+            })
+            .collect::<Result<Vec<_>>>()?;
+        let n_sites = cfg.n_quant_sites();
+        let calib_stats = (0..n_sites)
+            .map(|i| Ok(ColStats::from_col_max(art.f32_vec(&format!("site{i}.colmax"))?)))
+            .collect::<Result<Vec<_>>>()?;
+        Ok(QuantizedModel {
+            config: cfg,
+            weight_bits: art.weight_bits,
+            act_bits: art.act_bits,
+            path: QuantPath::CrossQuantStatic { alpha },
+            tok_emb: mat("tok_emb", cfg.vocab, d)?,
+            pos_emb: mat("pos_emb", cfg.seq_len, d)?,
+            layers,
+            lnf_g: mat("lnf_g", 1, d)?,
+            lnf_b: mat("lnf_b", 1, d)?,
+            w_out: lin("w_out", d, cfg.vocab)?,
+            calib_stats: Some(calib_stats),
+        })
+    }
+
+    /// [`Artifact::open`] + [`QuantizedModel::from_artifact`] in one step
+    /// — the serving cold-start path benchmarked in
+    /// benches/artifact_load.rs.
+    pub fn load_artifact(path: &Path) -> Result<QuantizedModel> {
+        let art = Artifact::open(path)?;
+        Self::from_artifact(&art)
     }
 
     /// Total integer-weight payload bytes across the model.

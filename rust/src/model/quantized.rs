@@ -10,10 +10,17 @@
 //! * [`apply_smoothquant`] — fold calibrated SmoothQuant scales into the
 //!   ln gains and consuming weights (the standard deployment trick: the
 //!   per-channel division of activations is absorbed by the preceding
-//!   LayerNorm's affine, so the runtime graph is unchanged).
+//!   LayerNorm's affine, so the runtime graph is unchanged);
+//! * [`quantize_to_artifact`] — the calibrate-once deployment pipeline:
+//!   FP weights → static-scale CrossQuant calibration → persisted `.cqa`
+//!   artifact (`quant::artifact`), the unit `repro quantize` ships and
+//!   `repro serve --artifact` boots from.
+
+use std::path::Path;
 
 use anyhow::Result;
 
+use super::qforward::{QuantPath, QuantizedModel};
 use super::weights::Weights;
 use crate::quant::{
     crossquant::CrossQuant, per_channel::GroupWise, per_channel::PerChannel, ActQuantizer, Bits,
@@ -65,6 +72,55 @@ pub fn quantize_weights(w: &mut Weights, scheme: WeightScheme) -> Result<()> {
         w.set(&name, &q)?;
     }
     Ok(())
+}
+
+/// What [`quantize_to_artifact`] produced, for reporting (`repro
+/// quantize` prints it; benches log it).
+#[derive(Clone, Debug)]
+pub struct ArtifactBuildReport {
+    pub alpha: f32,
+    pub weight_bits: Bits,
+    pub calib_sequences: usize,
+    /// Bytes of the FP32 flat checkpoint the artifact replaces.
+    pub fp_bytes: usize,
+    /// Bytes of the written `.cqa` file (header + table + payloads).
+    pub artifact_bytes: usize,
+    pub sections: usize,
+}
+
+impl ArtifactBuildReport {
+    /// Shipped-bytes compression vs the FP32 checkpoint.
+    pub fn compression_ratio(&self) -> f64 {
+        self.fp_bytes as f64 / self.artifact_bytes.max(1) as f64
+    }
+}
+
+/// The calibrate-once deployment pipeline: build the integer model from
+/// FP weights, calibrate static CrossQuant scales on `calib` (folding
+/// ĉ^(1−α) into the codes once), and persist the `.cqa` artifact at
+/// `path`. Serving then boots from the artifact alone —
+/// `QuantizedModel::load_artifact` — without FP weights or calibration.
+pub fn quantize_to_artifact(
+    weights: &Weights,
+    weight_bits: Bits,
+    act_bits: Bits,
+    alpha: f32,
+    calib: &[Vec<u32>],
+    path: &Path,
+) -> Result<ArtifactBuildReport> {
+    let mut qm =
+        QuantizedModel::new(weights, weight_bits, act_bits, QuantPath::CrossQuant { alpha })?;
+    qm.calibrate_static(alpha, calib)?;
+    let sections = qm.write_artifact(path)?;
+    let artifact_bytes = std::fs::metadata(path)?.len() as usize;
+    Ok(ArtifactBuildReport {
+        alpha,
+        weight_bits,
+        calib_sequences: calib.len(),
+        fp_bytes: weights.flat.len() * 4,
+        artifact_bytes,
+        sections,
+    })
 }
 
 /// Inject a family profile's outlier channels into the model,

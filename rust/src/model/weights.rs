@@ -219,6 +219,13 @@ fn param_layout(cfg: &ModelConfig) -> (Vec<ParamEntry>, usize) {
     (params, offset)
 }
 
+/// Bytes of the flat FP32 checkpoint a config implies — the
+/// compression-ratio denominator `repro inspect` reports for `.cqa`
+/// artifacts.
+pub fn fp_weight_bytes(cfg: &ModelConfig) -> usize {
+    param_layout(cfg).1 * 4
+}
+
 /// Build randomly-initialised Weights with the python parameter layout —
 /// the substrate for unit tests, property tests and `--synthetic` CLI runs
 /// that don't have trained artifacts on disk.

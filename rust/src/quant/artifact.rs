@@ -1,0 +1,650 @@
+//! `.cqa` deployable quantized-model artifacts — the persisted form of a
+//! calibrated static-scale CrossQuant model.
+//!
+//! The rest of the crate calibrates lazily: every serve process pays FP
+//! weight load + calibration forwards + panel packing before the first
+//! static-scale request. This module closes the paper's deployment story
+//! (calibrate **once**, fold the eq. (5) ĉ^(1−α) factors into the codes
+//! **once**, ship int8): a versioned, checksummed, 64-byte-aligned binary
+//! file holding the model config, the folded packed weight panels, the
+//! folded per-output scales, the activation-side column factors, the raw
+//! calibration statistics, and α — laid out so the int8 panels are
+//! readable **in place** through [`crate::util::Mmap`]
+//! ([`PackedInt8::from_mapped`]): the serving microkernel streams the
+//! mapped bytes with zero copy.
+//!
+//! ## Byte layout (version 1)
+//!
+//! ```text
+//! offset  size  field
+//! ------  ----  -----------------------------------------------------
+//!      0     4  magic  b"CQA1"
+//!      4     4  format version (u32 LE) = 1
+//!      8    28  ModelConfig: vocab, d_model, n_layers, n_heads, d_ff,
+//!               seq_len, eval_batch (7 × u32 LE)
+//!     36     4  α (f32 LE) — the calibration exponent of every fold
+//!     40     1  weight bit-width (4 = INT4, 8 = INT8)
+//!     41     1  activation bit-width
+//!     42     2  reserved (zero)
+//!     44     4  section count N (u32 LE)
+//!     48     8  total file length (u64 LE) — truncation detector
+//!     56     4  CRC-32 of the section table
+//!     60     4  CRC-32 of header bytes 0..60
+//!     64  N×64  section table, one 64-byte entry per section:
+//!               name[32] (NUL-padded) | kind u32 | rows u32 | cols u32
+//!               | offset u64 | len u64 | payload CRC-32 u32
+//!      …     …  payloads, each starting on a 64-byte boundary
+//! ```
+//!
+//! Section kinds: `1` = f32 LE values (`rows × cols`), `2` = int8 packed
+//! panels written verbatim in the [`PackedInt8`] NR=8 layout (`rows` = k,
+//! `cols` = n), `3` = the same panel buffer nibble-packed two codes per
+//! byte (INT4 weights — halves the shipped bytes; decoded to an owned
+//! buffer at load, since nibbles cannot be referenced in place).
+//!
+//! Every load error is structured and distinct (truncated file, bad
+//! magic, unsupported version, header/table/section CRC mismatch, shape
+//! mismatch) — pinned by the corruption suite in rust/tests/artifact.rs.
+
+use std::path::Path;
+use std::sync::Arc;
+
+use anyhow::{anyhow, bail, ensure, Context, Result};
+
+use super::gemm::PackedInt8;
+use super::{pack, Bits};
+use crate::model::config::ModelConfig;
+use crate::tensor::Matrix;
+use crate::util::{crc32, Mmap};
+
+/// File magic: "CQA" + format generation.
+pub const MAGIC: [u8; 4] = *b"CQA1";
+/// Format version this build reads and writes.
+pub const VERSION: u32 = 1;
+/// Every payload section starts on this boundary (cache-line / SIMD
+/// friendly, and what `PackedInt8::from_mapped` is handed).
+pub const ALIGN: usize = 64;
+/// Fixed header size.
+pub const HEADER_BYTES: usize = 64;
+/// Fixed section-table entry size.
+pub const ENTRY_BYTES: usize = 64;
+/// NUL-padded name field inside an entry.
+const NAME_BYTES: usize = 32;
+
+/// What a section's payload holds.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum SectionKind {
+    /// `rows × cols` f32 LE values (embeddings, LN affines, scale vectors).
+    F32,
+    /// Verbatim [`PackedInt8`] panel buffer (`rows` = k, `cols` = n) —
+    /// mmap-servable in place.
+    PanelsI8,
+    /// Nibble-packed panel buffer (two INT4 codes per byte).
+    PanelsI4,
+}
+
+impl SectionKind {
+    fn code(self) -> u32 {
+        match self {
+            SectionKind::F32 => 1,
+            SectionKind::PanelsI8 => 2,
+            SectionKind::PanelsI4 => 3,
+        }
+    }
+
+    fn from_code(c: u32) -> Result<SectionKind> {
+        match c {
+            1 => Ok(SectionKind::F32),
+            2 => Ok(SectionKind::PanelsI8),
+            3 => Ok(SectionKind::PanelsI4),
+            other => bail!("unknown section kind {other}"),
+        }
+    }
+
+    pub fn label(self) -> &'static str {
+        match self {
+            SectionKind::F32 => "f32",
+            SectionKind::PanelsI8 => "i8-panels",
+            SectionKind::PanelsI4 => "i4-panels",
+        }
+    }
+
+    /// Payload byte length a `rows × cols` section of this kind must have.
+    fn expected_len(self, rows: usize, cols: usize) -> usize {
+        match self {
+            SectionKind::F32 => rows * cols * 4,
+            SectionKind::PanelsI8 => PackedInt8::layout_bytes(rows, cols),
+            SectionKind::PanelsI4 => PackedInt8::layout_bytes(rows, cols).div_ceil(2),
+        }
+    }
+}
+
+/// One parsed section-table entry.
+#[derive(Clone, Debug)]
+pub struct Section {
+    pub name: String,
+    pub kind: SectionKind,
+    pub rows: usize,
+    pub cols: usize,
+    /// Payload offset from the start of the file (64-byte aligned).
+    pub offset: usize,
+    /// Payload byte length.
+    pub len: usize,
+    pub crc: u32,
+}
+
+fn bits_code(bits: Bits) -> Result<u8> {
+    let code = match bits {
+        Bits::Int4 => 4,
+        Bits::Int8 => 8,
+        Bits::Other(n) => n,
+    };
+    // artifact payloads are i8 codes — wider grids are not representable
+    ensure!((2..=8).contains(&code), "bit width {code} is not representable in i8 codes");
+    Ok(code)
+}
+
+fn bits_from_code(code: u8) -> Result<Bits> {
+    match code {
+        4 => Ok(Bits::Int4),
+        8 => Ok(Bits::Int8),
+        n if (2..=8).contains(&n) => Ok(Bits::Other(n)),
+        other => bail!("unsupported bit width {other} (this build serves 2..=8-bit i8 codes)"),
+    }
+}
+
+fn align_up(x: usize) -> usize {
+    x.div_ceil(ALIGN) * ALIGN
+}
+
+fn u32_le(b: &[u8], off: usize) -> u32 {
+    u32::from_le_bytes([b[off], b[off + 1], b[off + 2], b[off + 3]])
+}
+
+fn u64_le(b: &[u8], off: usize) -> u64 {
+    let mut v = [0u8; 8];
+    v.copy_from_slice(&b[off..off + 8]);
+    u64::from_le_bytes(v)
+}
+
+/// Builds a `.cqa` file section by section; `write` lays out, checksums
+/// and emits the bytes. Section names must be unique and ≤ 31 bytes.
+pub struct ArtifactWriter {
+    config: ModelConfig,
+    alpha: f32,
+    weight_bits: Bits,
+    act_bits: Bits,
+    sections: Vec<(Section, Vec<u8>)>,
+}
+
+impl ArtifactWriter {
+    pub fn new(config: ModelConfig, alpha: f32, weight_bits: Bits, act_bits: Bits) -> Self {
+        ArtifactWriter { config, alpha, weight_bits, act_bits, sections: Vec::new() }
+    }
+
+    fn push(
+        &mut self,
+        name: &str,
+        kind: SectionKind,
+        rows: usize,
+        cols: usize,
+        payload: Vec<u8>,
+    ) -> Result<()> {
+        ensure!(
+            !name.is_empty() && name.len() < NAME_BYTES && name.is_ascii(),
+            "section name '{name}' must be 1..{NAME_BYTES} ASCII bytes"
+        );
+        ensure!(
+            !self.sections.iter().any(|(s, _)| s.name == name),
+            "duplicate section '{name}'"
+        );
+        ensure!(
+            payload.len() == kind.expected_len(rows, cols),
+            "section '{name}': payload is {} bytes, its {rows}x{cols} {} shape needs {}",
+            payload.len(),
+            kind.label(),
+            kind.expected_len(rows, cols)
+        );
+        let crc = crc32(&payload);
+        let len = payload.len();
+        let section = Section { name: name.to_string(), kind, rows, cols, offset: 0, len, crc };
+        self.sections.push((section, payload));
+        Ok(())
+    }
+
+    /// Add a `rows × cols` f32 section.
+    pub fn add_f32(&mut self, name: &str, rows: usize, cols: usize, data: &[f32]) -> Result<()> {
+        ensure!(
+            data.len() == rows * cols,
+            "section '{name}': {rows}x{cols} needs {} values",
+            rows * cols
+        );
+        let mut bytes = Vec::with_capacity(data.len() * 4);
+        for v in data {
+            bytes.extend_from_slice(&v.to_le_bytes());
+        }
+        self.push(name, SectionKind::F32, rows, cols, bytes)
+    }
+
+    /// Add a matrix as an f32 section.
+    pub fn add_matrix(&mut self, name: &str, m: &Matrix) -> Result<()> {
+        self.add_f32(name, m.rows, m.cols, &m.data)
+    }
+
+    /// Add packed weight panels: the buffer is written verbatim for
+    /// byte-wide grids (mmap-servable in place) and nibble-packed for
+    /// INT4 weights (half the shipped bytes).
+    pub fn add_panels(&mut self, name: &str, p: &PackedInt8) -> Result<()> {
+        match self.weight_bits {
+            Bits::Int4 => {
+                let codes: Vec<i8> = p.raw_bytes().iter().map(|&b| b as i8).collect();
+                self.push(name, SectionKind::PanelsI4, p.k, p.n, pack::pack_nibbles(&codes))
+            }
+            _ => self.push(name, SectionKind::PanelsI8, p.k, p.n, p.raw_bytes().to_vec()),
+        }
+    }
+
+    /// Sections added so far.
+    pub fn section_count(&self) -> usize {
+        self.sections.len()
+    }
+
+    /// Serialize the full artifact to bytes (header | table | payloads).
+    pub fn to_bytes(&self) -> Result<Vec<u8>> {
+        let n = self.sections.len();
+        ensure!(n > 0, "artifact has no sections");
+        let payload_start = align_up(HEADER_BYTES + n * ENTRY_BYTES);
+        let mut offsets = Vec::with_capacity(n);
+        let mut off = payload_start;
+        for (_, payload) in &self.sections {
+            offsets.push(off);
+            off = align_up(off + payload.len());
+        }
+        let file_len = off;
+
+        let mut table = Vec::with_capacity(n * ENTRY_BYTES);
+        for (i, (s, _)) in self.sections.iter().enumerate() {
+            let mut name = [0u8; NAME_BYTES];
+            name[..s.name.len()].copy_from_slice(s.name.as_bytes());
+            table.extend_from_slice(&name);
+            table.extend_from_slice(&s.kind.code().to_le_bytes());
+            table.extend_from_slice(&(s.rows as u32).to_le_bytes());
+            table.extend_from_slice(&(s.cols as u32).to_le_bytes());
+            table.extend_from_slice(&(offsets[i] as u64).to_le_bytes());
+            table.extend_from_slice(&(s.len as u64).to_le_bytes());
+            table.extend_from_slice(&s.crc.to_le_bytes());
+        }
+        debug_assert_eq!(table.len(), n * ENTRY_BYTES);
+
+        let cfg = self.config;
+        let mut head = Vec::with_capacity(HEADER_BYTES);
+        head.extend_from_slice(&MAGIC);
+        head.extend_from_slice(&VERSION.to_le_bytes());
+        for v in [
+            cfg.vocab, cfg.d_model, cfg.n_layers, cfg.n_heads, cfg.d_ff, cfg.seq_len,
+            cfg.eval_batch,
+        ] {
+            head.extend_from_slice(&(v as u32).to_le_bytes());
+        }
+        head.extend_from_slice(&self.alpha.to_le_bytes());
+        head.push(bits_code(self.weight_bits)?);
+        head.push(bits_code(self.act_bits)?);
+        head.extend_from_slice(&[0u8; 2]);
+        head.extend_from_slice(&(n as u32).to_le_bytes());
+        head.extend_from_slice(&(file_len as u64).to_le_bytes());
+        head.extend_from_slice(&crc32(&table).to_le_bytes());
+        let hcrc = crc32(&head);
+        head.extend_from_slice(&hcrc.to_le_bytes());
+        debug_assert_eq!(head.len(), HEADER_BYTES);
+
+        let mut out = vec![0u8; file_len];
+        out[..HEADER_BYTES].copy_from_slice(&head);
+        out[HEADER_BYTES..HEADER_BYTES + table.len()].copy_from_slice(&table);
+        for (i, (_, payload)) in self.sections.iter().enumerate() {
+            out[offsets[i]..offsets[i] + payload.len()].copy_from_slice(payload);
+        }
+        Ok(out)
+    }
+
+    /// Serialize and write the artifact file **atomically**: the bytes go
+    /// to a temporary sibling first and are renamed over `path`, so an
+    /// interrupted write (kill, ENOSPC) can never destroy a previously
+    /// good artifact at the destination.
+    pub fn write(&self, path: &Path) -> Result<()> {
+        let bytes = self.to_bytes()?;
+        let mut tmp = path.as_os_str().to_os_string();
+        tmp.push(format!(".tmp.{}", std::process::id()));
+        let tmp = std::path::PathBuf::from(tmp);
+        std::fs::write(&tmp, &bytes)
+            .with_context(|| format!("writing artifact {}", tmp.display()))?;
+        if let Err(e) = std::fs::rename(&tmp, path) {
+            let _ = std::fs::remove_file(&tmp);
+            return Err(e).with_context(|| {
+                format!("renaming {} over {}", tmp.display(), path.display())
+            });
+        }
+        Ok(())
+    }
+}
+
+/// A validated, opened `.cqa` artifact: header fields plus typed section
+/// accessors. Every section CRC is verified at open, so downstream reads
+/// never observe corrupt payloads.
+#[derive(Debug)]
+pub struct Artifact {
+    map: Arc<Mmap>,
+    pub version: u32,
+    pub config: ModelConfig,
+    pub alpha: f32,
+    pub weight_bits: Bits,
+    pub act_bits: Bits,
+    sections: Vec<Section>,
+}
+
+impl Artifact {
+    /// Open + validate an artifact file (memory-mapped where the platform
+    /// allows; int8 panel sections are then servable in place).
+    pub fn open(path: &Path) -> Result<Artifact> {
+        let map = Mmap::map(path)
+            .with_context(|| format!("opening artifact {}", path.display()))?;
+        Self::from_mmap(Arc::new(map))
+            .with_context(|| format!("loading artifact {}", path.display()))
+    }
+
+    /// Validate an in-memory artifact image (tests, pre-write checks).
+    pub fn from_bytes(bytes: Vec<u8>) -> Result<Artifact> {
+        Self::from_mmap(Arc::new(Mmap::from_vec(bytes)))
+    }
+
+    fn from_mmap(map: Arc<Mmap>) -> Result<Artifact> {
+        let b = map.bytes();
+        ensure!(
+            b.len() >= HEADER_BYTES,
+            "truncated artifact: {} bytes, the fixed header needs {HEADER_BYTES}",
+            b.len()
+        );
+        ensure!(
+            b[..4] == MAGIC,
+            "bad magic {:02x?} — not a .cqa artifact (expected {:02x?})",
+            &b[..4],
+            MAGIC
+        );
+        let version = u32_le(b, 4);
+        ensure!(
+            version == VERSION,
+            "unsupported artifact version {version} (this build reads version {VERSION})"
+        );
+        ensure!(
+            crc32(&b[..HEADER_BYTES - 4]) == u32_le(b, HEADER_BYTES - 4),
+            "header CRC mismatch (corrupt header)"
+        );
+        let u = |i: usize| u32_le(b, 8 + 4 * i) as usize;
+        let config = ModelConfig {
+            vocab: u(0),
+            d_model: u(1),
+            n_layers: u(2),
+            n_heads: u(3),
+            d_ff: u(4),
+            seq_len: u(5),
+            eval_batch: u(6),
+        };
+        let alpha = f32::from_le_bytes([b[36], b[37], b[38], b[39]]);
+        let weight_bits = bits_from_code(b[40]).context("weight bit-width field")?;
+        let act_bits = bits_from_code(b[41]).context("activation bit-width field")?;
+        let n = u32_le(b, 44) as usize;
+        let file_len = u64_le(b, 48) as usize;
+        ensure!(
+            b.len() >= file_len,
+            "truncated artifact: file has {} bytes, header records {file_len}",
+            b.len()
+        );
+        ensure!(
+            b.len() == file_len,
+            "artifact has {} trailing bytes past the recorded length {file_len}",
+            b.len() - file_len
+        );
+        let table_end = HEADER_BYTES + n * ENTRY_BYTES;
+        ensure!(
+            table_end <= b.len(),
+            "truncated artifact: the {n}-entry section table needs {table_end} bytes, \
+             file has {}",
+            b.len()
+        );
+        let table = &b[HEADER_BYTES..table_end];
+        ensure!(
+            crc32(table) == u32_le(b, 56),
+            "section table CRC mismatch (corrupt table)"
+        );
+        let mut sections = Vec::with_capacity(n);
+        for i in 0..n {
+            let e = &table[i * ENTRY_BYTES..(i + 1) * ENTRY_BYTES];
+            let name_end = e[..NAME_BYTES].iter().position(|&c| c == 0).unwrap_or(NAME_BYTES);
+            let name = std::str::from_utf8(&e[..name_end])
+                .map_err(|_| anyhow!("section {i}: name is not UTF-8"))?
+                .to_string();
+            let kind = SectionKind::from_code(u32_le(e, 32))
+                .with_context(|| format!("section '{name}'"))?;
+            let rows = u32_le(e, 36) as usize;
+            let cols = u32_le(e, 40) as usize;
+            let offset = u64_le(e, 44) as usize;
+            let len = u64_le(e, 52) as usize;
+            let crc = u32_le(e, 60);
+            // keep `expected_len`'s products far from usize overflow even
+            // for adversarial table contents
+            ensure!(
+                rows <= (1 << 30) && cols <= (1 << 30),
+                "section '{name}': implausible shape {rows}x{cols}"
+            );
+            ensure!(
+                offset % ALIGN == 0,
+                "section '{name}': payload offset {offset} is not {ALIGN}-byte aligned"
+            );
+            ensure!(
+                offset.checked_add(len).is_some_and(|end| end <= b.len()),
+                "truncated artifact: section '{name}' spans {offset}..{offset}+{len} \
+                 past {} file bytes",
+                b.len()
+            );
+            ensure!(
+                len == kind.expected_len(rows, cols),
+                "section '{name}': {len} bytes, its {rows}x{cols} {} shape needs {}",
+                kind.label(),
+                kind.expected_len(rows, cols)
+            );
+            ensure!(
+                crc32(&b[offset..offset + len]) == crc,
+                "CRC mismatch in section '{name}' (corrupt payload)"
+            );
+            sections.push(Section { name, kind, rows, cols, offset, len, crc });
+        }
+        Ok(Artifact { map, version, config, alpha, weight_bits, act_bits, sections })
+    }
+
+    /// All sections in file order.
+    pub fn sections(&self) -> &[Section] {
+        &self.sections
+    }
+
+    /// Total file size in bytes.
+    pub fn file_bytes(&self) -> usize {
+        self.map.len()
+    }
+
+    /// True when the artifact is served by a real file mapping (int8
+    /// panel sections then reach the microkernel with zero copy).
+    pub fn is_mapped(&self) -> bool {
+        self.map.is_mapped()
+    }
+
+    /// Look a section up by name.
+    pub fn section(&self, name: &str) -> Result<&Section> {
+        self.sections
+            .iter()
+            .find(|s| s.name == name)
+            .ok_or_else(|| anyhow!("artifact has no section '{name}'"))
+    }
+
+    fn payload(&self, s: &Section) -> &[u8] {
+        &self.map.bytes()[s.offset..s.offset + s.len]
+    }
+
+    /// Decode an f32 section into a flat vector.
+    pub fn f32_vec(&self, name: &str) -> Result<Vec<f32>> {
+        let s = self.section(name)?;
+        ensure!(s.kind == SectionKind::F32, "section '{name}' is {}, not f32", s.kind.label());
+        Ok(self
+            .payload(s)
+            .chunks_exact(4)
+            .map(|c| f32::from_le_bytes([c[0], c[1], c[2], c[3]]))
+            .collect())
+    }
+
+    /// Decode an f32 section into a `rows × cols` matrix.
+    pub fn matrix(&self, name: &str) -> Result<Matrix> {
+        let s = self.section(name)?;
+        let (rows, cols) = (s.rows, s.cols);
+        Ok(Matrix::from_vec(rows, cols, self.f32_vec(name)?))
+    }
+
+    /// Reconstruct a panel section: int8 panels are **borrowed in place**
+    /// from the mapping (zero copy — `PackedInt8::is_mapped` holds);
+    /// nibble-packed INT4 panels are decoded to an owned buffer.
+    pub fn panels(&self, name: &str) -> Result<PackedInt8> {
+        let s = self.section(name)?;
+        match s.kind {
+            SectionKind::PanelsI8 => {
+                PackedInt8::from_mapped(s.rows, s.cols, self.map.clone(), s.offset)
+            }
+            SectionKind::PanelsI4 => {
+                let codes =
+                    pack::unpack_nibbles(self.payload(s), PackedInt8::layout_bytes(s.rows, s.cols));
+                Ok(PackedInt8::from_raw(s.rows, s.cols, codes))
+            }
+            SectionKind::F32 => bail!("section '{name}' is f32, not packed panels"),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn cfg() -> ModelConfig {
+        ModelConfig {
+            vocab: 32,
+            d_model: 16,
+            n_layers: 1,
+            n_heads: 2,
+            d_ff: 32,
+            seq_len: 8,
+            eval_batch: 2,
+        }
+    }
+
+    fn sample() -> ArtifactWriter {
+        let mut w = ArtifactWriter::new(cfg(), 0.15, Bits::Int8, Bits::Int8);
+        w.add_f32("scales", 1, 3, &[1.0, 2.5, -0.5]).unwrap();
+        let codes: Vec<i8> = (0..(5 * 11)).map(|v| (v % 13) as i8 - 6).collect();
+        w.add_panels("w.panels", &PackedInt8::from_row_major(&codes, 5, 11)).unwrap();
+        w
+    }
+
+    #[test]
+    fn roundtrip_header_sections_and_payloads() {
+        let w = sample();
+        let bytes = w.to_bytes().unwrap();
+        let art = Artifact::from_bytes(bytes).unwrap();
+        assert_eq!(art.version, VERSION);
+        assert_eq!(art.config, cfg());
+        assert!((art.alpha - 0.15).abs() < 1e-7);
+        assert_eq!(art.weight_bits, Bits::Int8);
+        assert_eq!(art.sections().len(), 2);
+        assert_eq!(art.f32_vec("scales").unwrap(), vec![1.0, 2.5, -0.5]);
+        let p = art.panels("w.panels").unwrap();
+        assert_eq!((p.k, p.n), (5, 11));
+        let codes: Vec<i8> = (0..(5 * 11)).map(|v| (v % 13) as i8 - 6).collect();
+        assert_eq!(p.to_row_major(), codes);
+        // every payload is aligned
+        for s in art.sections() {
+            assert_eq!(s.offset % ALIGN, 0, "section {}", s.name);
+        }
+    }
+
+    #[test]
+    fn int4_panels_nibble_pack_and_decode() {
+        let mut w = ArtifactWriter::new(cfg(), 0.15, Bits::Int4, Bits::Int8);
+        let codes: Vec<i8> = (0..(6 * 9)).map(|v| (v % 15) as i8 - 7).collect();
+        let panels = PackedInt8::from_row_major(&codes, 6, 9);
+        w.add_panels("w.panels", &panels).unwrap();
+        let art = Artifact::from_bytes(w.to_bytes().unwrap()).unwrap();
+        let s = art.section("w.panels").unwrap();
+        assert_eq!(s.kind, SectionKind::PanelsI4);
+        assert_eq!(s.len, PackedInt8::layout_bytes(6, 9).div_ceil(2));
+        let p = art.panels("w.panels").unwrap();
+        assert!(!p.is_mapped(), "nibbles decode to an owned buffer");
+        assert_eq!(p.to_row_major(), codes);
+    }
+
+    #[test]
+    fn duplicate_and_oversized_names_rejected() {
+        let mut w = sample();
+        assert!(w.add_f32("scales", 1, 1, &[0.0]).is_err());
+        let long = "x".repeat(NAME_BYTES);
+        assert!(w.add_f32(&long, 1, 1, &[0.0]).is_err());
+    }
+
+    #[test]
+    fn distinct_structured_load_errors() {
+        let good = sample().to_bytes().unwrap();
+
+        // truncation below the header
+        let e = Artifact::from_bytes(good[..10].to_vec()).unwrap_err();
+        assert!(format!("{e:#}").contains("truncated"), "{e:#}");
+        // truncation inside the payloads
+        let e = Artifact::from_bytes(good[..good.len() - 1].to_vec()).unwrap_err();
+        assert!(format!("{e:#}").contains("truncated"), "{e:#}");
+        // trailing junk
+        let mut long = good.clone();
+        long.push(0);
+        let e = Artifact::from_bytes(long).unwrap_err();
+        assert!(format!("{e:#}").contains("trailing"), "{e:#}");
+
+        // bad magic
+        let mut bad = good.clone();
+        bad[0] ^= 0xFF;
+        let e = Artifact::from_bytes(bad).unwrap_err();
+        assert!(format!("{e:#}").contains("magic"), "{e:#}");
+
+        // unsupported version (header CRC re-stamped so the version check
+        // is what fires)
+        let mut bad = good.clone();
+        bad[4..8].copy_from_slice(&99u32.to_le_bytes());
+        let c = crc32(&bad[..HEADER_BYTES - 4]);
+        bad[HEADER_BYTES - 4..HEADER_BYTES].copy_from_slice(&c.to_le_bytes());
+        let e = Artifact::from_bytes(bad).unwrap_err();
+        assert!(format!("{e:#}").contains("version"), "{e:#}");
+
+        // header corruption
+        let mut bad = good.clone();
+        bad[20] ^= 0x01;
+        let e = Artifact::from_bytes(bad).unwrap_err();
+        assert!(format!("{e:#}").contains("header CRC"), "{e:#}");
+
+        // table corruption
+        let mut bad = good.clone();
+        bad[HEADER_BYTES + 2] ^= 0x01;
+        let e = Artifact::from_bytes(bad).unwrap_err();
+        assert!(format!("{e:#}").contains("table CRC"), "{e:#}");
+
+        // payload corruption names the section
+        let art = Artifact::from_bytes(good.clone()).unwrap();
+        let s = art.section("w.panels").unwrap();
+        let (off, name) = (s.offset, s.name.clone());
+        drop(art);
+        let mut bad = good;
+        bad[off] ^= 0x40;
+        let e = Artifact::from_bytes(bad).unwrap_err();
+        let msg = format!("{e:#}");
+        assert!(msg.contains("CRC mismatch") && msg.contains(&name), "{msg}");
+    }
+}

@@ -28,7 +28,10 @@
 //! and integer sums — bit-exact for any worker count, pinned against the
 //! naive reference in `rust/tests/gemm.rs`.
 
+use std::sync::Arc;
+
 use crate::tensor::{par, Matrix};
+use crate::util::Mmap;
 
 /// Microkernel row tile: activation rows per register block.
 pub const MR: usize = 4;
@@ -36,6 +39,30 @@ pub const MR: usize = 4;
 pub const NR: usize = 8;
 /// Granularity (in `k`) of the all-zero activation-block skip.
 pub const KB: usize = 64;
+
+/// The owned/borrowed split behind [`PackedInt8`]: panels either own
+/// their buffer (built by `pack_with`) or borrow it in place from a file
+/// mapping (`quant::artifact`'s zero-copy load path — the Arc keeps the
+/// map alive, the microkernel streams the mapped bytes directly).
+#[derive(Clone, Debug)]
+enum PanelData {
+    Owned(Vec<i8>),
+    Mapped { map: Arc<Mmap>, offset: usize, len: usize },
+}
+
+impl PanelData {
+    #[inline]
+    fn as_slice(&self) -> &[i8] {
+        match self {
+            PanelData::Owned(v) => v,
+            PanelData::Mapped { map, offset, len } => {
+                let bytes = &map.bytes()[*offset..*offset + *len];
+                // i8 and u8 share layout; the panel bytes are plain codes
+                unsafe { std::slice::from_raw_parts(bytes.as_ptr() as *const i8, bytes.len()) }
+            }
+        }
+    }
+}
 
 /// Weight codes packed for the microkernel: `n.div_ceil(NR)` column panels,
 /// each storing its `NR` columns K-major (`panel[kk*NR + jj]` is column
@@ -46,7 +73,7 @@ pub struct PackedInt8 {
     pub k: usize,
     /// True output columns (excluding panel padding).
     pub n: usize,
-    data: Vec<i8>,
+    data: PanelData,
 }
 
 impl PackedInt8 {
@@ -54,6 +81,54 @@ impl PackedInt8 {
     pub fn from_row_major(codes: &[i8], k: usize, n: usize) -> PackedInt8 {
         assert_eq!(codes.len(), k * n, "codes/shape mismatch");
         Self::pack_with(k, n, 1, |kk, j| codes[kk * n + j])
+    }
+
+    /// Packed-buffer size in bytes for a (k × n) layout, padding included
+    /// — the byte contract between pack_with, [`PackedInt8::from_raw`],
+    /// and the `quant::artifact` panel sections.
+    pub fn layout_bytes(k: usize, n: usize) -> usize {
+        n.div_ceil(NR) * k * NR
+    }
+
+    /// Rebuild from a raw packed buffer (the inverse of
+    /// [`PackedInt8::raw_bytes`]) — the owned load path for payloads that
+    /// cannot be referenced in place (nibble-packed INT4 sections).
+    pub fn from_raw(k: usize, n: usize, data: Vec<i8>) -> PackedInt8 {
+        assert_eq!(data.len(), Self::layout_bytes(k, n), "raw panel buffer size");
+        PackedInt8 { k, n, data: PanelData::Owned(data) }
+    }
+
+    /// Borrow panels in place from a file mapping — the zero-copy load
+    /// path of `quant::artifact`. The `layout_bytes(k, n)` bytes at
+    /// `offset` must hold a buffer produced by `pack_with` (length is
+    /// verified here; content integrity is the artifact CRC's job).
+    pub fn from_mapped(
+        k: usize,
+        n: usize,
+        map: Arc<Mmap>,
+        offset: usize,
+    ) -> anyhow::Result<PackedInt8> {
+        let len = Self::layout_bytes(k, n);
+        anyhow::ensure!(
+            offset.checked_add(len).is_some_and(|end| end <= map.len()),
+            "mapped panels out of bounds: need {len} bytes at offset {offset}, map has {}",
+            map.len()
+        );
+        Ok(PackedInt8 { k, n, data: PanelData::Mapped { map, offset, len } })
+    }
+
+    /// True when the codes are served from a file mapping rather than
+    /// owned memory (the zero-copy invariant pinned by
+    /// rust/tests/artifact.rs).
+    pub fn is_mapped(&self) -> bool {
+        matches!(self.data, PanelData::Mapped { .. })
+    }
+
+    /// The raw packed buffer (padding included) — the bytes
+    /// `quant::artifact` writes verbatim.
+    pub fn raw_bytes(&self) -> &[u8] {
+        let s = self.data.as_slice();
+        unsafe { std::slice::from_raw_parts(s.as_ptr() as *const u8, s.len()) }
     }
 
     /// Pack from a generator, panel-parallel — used by the dynamic
@@ -69,7 +144,7 @@ impl PackedInt8 {
         let n_panels = n.div_ceil(NR);
         let mut data = vec![0i8; n_panels * k * NR];
         if data.is_empty() {
-            return PackedInt8 { k, n, data };
+            return PackedInt8 { k, n, data: PanelData::Owned(data) };
         }
         par::par_rows_mut(&mut data, k * NR, workers, |p0, chunk| {
             for (local, panel) in chunk.chunks_mut(k * NR).enumerate() {
@@ -82,7 +157,7 @@ impl PackedInt8 {
                 }
             }
         });
-        PackedInt8 { k, n, data }
+        PackedInt8 { k, n, data: PanelData::Owned(data) }
     }
 
     /// Number of column panels (last one possibly padded).
@@ -109,12 +184,12 @@ impl PackedInt8 {
 
     /// Packed buffer size in bytes, padding included.
     pub fn packed_bytes(&self) -> usize {
-        self.data.len()
+        self.data.as_slice().len()
     }
 
     #[inline]
     fn panel(&self, p: usize) -> &[i8] {
-        &self.data[p * self.k * NR..(p + 1) * self.k * NR]
+        &self.data.as_slice()[p * self.k * NR..(p + 1) * self.k * NR]
     }
 }
 
@@ -321,6 +396,30 @@ mod tests {
             let packed = PackedInt8::from_row_major(&codes, k, n);
             assert_eq!(packed.to_row_major(), codes, "k={k} n={n}");
         }
+    }
+
+    #[test]
+    fn mapped_and_raw_panels_match_owned() {
+        let mut rng = SplitMix64::new(9);
+        let (k, n) = (7, NR + 5);
+        let codes = arb_codes(&mut rng, k * n, 0.3);
+        let owned = PackedInt8::from_row_major(&codes, k, n);
+        assert_eq!(owned.raw_bytes().len(), PackedInt8::layout_bytes(k, n));
+        // raw round-trip (the owned artifact load path)
+        let raw: Vec<i8> = owned.raw_bytes().iter().map(|&b| b as i8).collect();
+        let rebuilt = PackedInt8::from_raw(k, n, raw);
+        assert!(!rebuilt.is_mapped());
+        assert_eq!(rebuilt.to_row_major(), codes);
+        // borrowed round-trip (the zero-copy artifact load path): the
+        // microkernel must produce identical sums over the mapped view
+        let map = std::sync::Arc::new(crate::util::Mmap::from_vec(owned.raw_bytes().to_vec()));
+        let mapped = PackedInt8::from_mapped(k, n, map.clone(), 0).unwrap();
+        assert!(mapped.is_mapped());
+        assert_eq!(mapped.to_row_major(), codes);
+        let a = arb_codes(&mut rng, 3 * k, 0.2);
+        assert_eq!(gemm_i32_packed(&a, 3, &mapped, 2), gemm_i32_packed(&a, 3, &owned, 1));
+        // an out-of-bounds view is rejected, not sliced past the map
+        assert!(PackedInt8::from_mapped(k, n, map, 8).is_err());
     }
 
     // the full bit-exactness property suite (random shapes, structured

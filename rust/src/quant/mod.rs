@@ -15,7 +15,10 @@
 //! - [`pack`]         — real INT8/INT4 bit-packing for storage accounting
 //! - [`gemm`]         — packed-panel int8 GEMM microkernel (deployment path)
 //! - [`qlinear`]      — true-integer linear layers over [`gemm`]
+//! - [`artifact`]     — `.cqa` deployable quantized-model artifacts
+//!                      (calibrate once, ship int8, serve via mmap)
 
+pub mod artifact;
 pub mod awq;
 pub mod clipping;
 pub mod crossquant;

@@ -29,6 +29,8 @@
 //! Both costs are quantified in `rust/benches/quant_hot_path.rs`
 //! (`BENCH_qlinear_gemm.json`).
 
+use anyhow::Result;
+
 use super::gemm::{self, PackedInt8};
 use super::{crossquant, pack, Bits, EPS};
 use crate::tensor::{par, Matrix};
@@ -123,13 +125,77 @@ impl QuantizedLinear {
         }
     }
 
+    /// Rebuild a layer from persisted `.cqa` artifact parts: folded
+    /// panels (possibly borrowed straight from a file mapping — see
+    /// `PackedInt8::from_mapped`), folded per-output scales, and the
+    /// activation-side column factors. The layer carries **no** FP weight
+    /// and no dynamic panel grid: only
+    /// [`QuantizedLinear::forward_crossquant_static`] is servable, which
+    /// is exactly what the artifact deployment path runs.
+    pub fn from_static_parts(
+        bits: Bits,
+        alpha: f32,
+        col_pow: Vec<f32>,
+        panels: PackedInt8,
+        scale: Vec<f32>,
+    ) -> Result<QuantizedLinear> {
+        anyhow::ensure!(
+            bits.qmax() <= 127.0,
+            "{bits}: the integer linear path stores i8 codes (max 8 bits)"
+        );
+        anyhow::ensure!(
+            alpha.is_finite() && (0.0..=1.0).contains(&alpha),
+            "alpha {alpha} out of range (corrupt artifact?)"
+        );
+        let (in_dim, out_dim) = (panels.k, panels.n);
+        anyhow::ensure!(
+            col_pow.len() == in_dim,
+            "col_pow holds {} factors, panels expect in_dim {in_dim}",
+            col_pow.len()
+        );
+        anyhow::ensure!(
+            scale.len() == out_dim,
+            "scale holds {} factors, panels expect out_dim {out_dim}",
+            scale.len()
+        );
+        anyhow::ensure!(
+            col_pow.iter().chain(scale.iter()).all(|v| v.is_finite()),
+            "non-finite scale factors (corrupt artifact?)"
+        );
+        Ok(QuantizedLinear {
+            in_dim,
+            out_dim,
+            bits,
+            panels: PackedInt8::from_raw(0, 0, Vec::new()),
+            nibble_payload: None,
+            w_scale: Vec::new(),
+            w_fp: Matrix::zeros(0, 0),
+            static_fold: Some(StaticFold { alpha, col_pow, panels, scale }),
+        })
+    }
+
+    /// The installed static fold, exported for artifact serialization:
+    /// (α, activation-side column factors, folded panels, folded
+    /// per-output scales).
+    pub(crate) fn static_parts(&self) -> Option<(f32, &[f32], &PackedInt8, &[f32])> {
+        self.static_fold
+            .as_ref()
+            .map(|f| (f.alpha, f.col_pow.as_slice(), &f.panels, f.scale.as_slice()))
+    }
+
+    /// False for artifact-loaded layers: the FP weight (and with it every
+    /// dynamic/per-token path) was deliberately never shipped.
+    fn has_fp(&self) -> bool {
+        !self.w_fp.is_empty()
+    }
+
     /// Integer payload bytes: the nibble-packed buffer actually stored
     /// for INT4, one byte per code otherwise (panel padding excluded —
     /// it is compute layout, not payload).
     pub fn payload_bytes(&self) -> usize {
-        match &self.nibble_payload {
-            Some(p) => p.len(),
-            None => self.in_dim * self.out_dim,
+        match self.bits {
+            Bits::Int4 => (self.in_dim * self.out_dim).div_ceil(2),
+            _ => self.in_dim * self.out_dim,
         }
     }
 
@@ -137,6 +203,7 @@ impl QuantizedLinear {
     /// surface; INT4 goes through `pack::unpack_nibbles`, byte-wide
     /// grids decode from the panel layout).
     pub fn stored_codes(&self) -> Vec<i8> {
+        assert!(self.has_fp(), "artifact-loaded layer: base weight codes were never shipped");
         match &self.nibble_payload {
             Some(p) => pack::unpack_nibbles(p, self.in_dim * self.out_dim),
             None => self.panels.to_row_major(),
@@ -152,6 +219,10 @@ impl QuantizedLinear {
     /// the weight codes once (the build-time pass); `Dynamic` drops any
     /// fold and returns to per-batch rescaling.
     pub fn set_scale_mode(&mut self, mode: ScaleMode) {
+        assert!(
+            self.has_fp(),
+            "artifact-loaded layer: the shipped static fold is the only scale mode"
+        );
         match mode {
             ScaleMode::Dynamic => self.static_fold = None,
             ScaleMode::Static { alpha, col_pow } => {
@@ -225,6 +296,10 @@ impl QuantizedLinear {
 
     /// The W8A8 GEMM: int8×int8 → i32 accumulate, rank-1 dequant.
     pub fn forward_per_token(&self, x: &Matrix, act_bits: Bits) -> Matrix {
+        assert!(
+            self.has_fp(),
+            "artifact-loaded layer: only forward_crossquant_static is servable"
+        );
         let act = Self::quantize_per_token(x, act_bits);
         self.gemm(&act, &self.panels, &self.w_scale)
     }
@@ -232,6 +307,10 @@ impl QuantizedLinear {
     /// The dynamic CrossQuant integer path: requantize + repack the weight
     /// with the live batch's c^(1−α) folded in, then the packed GEMM.
     pub fn forward_crossquant(&self, x: &Matrix, alpha: f32, act_bits: Bits) -> Matrix {
+        assert!(
+            self.has_fp(),
+            "artifact-loaded layer: only forward_crossquant_static is servable"
+        );
         let (act, col_pow) = Self::quantize_crossquant(x, alpha, act_bits);
         let (folded, folded_scale) = self.fold_weight(&col_pow);
         self.gemm(&act, &folded, &folded_scale)
@@ -257,6 +336,7 @@ impl QuantizedLinear {
 
     /// FP reference product (unquantized weight).
     pub fn forward_fp(&self, x: &Matrix) -> Matrix {
+        assert!(self.has_fp(), "artifact-loaded layer: the FP weight was never shipped");
         x.matmul(&self.w_fp)
     }
 
@@ -438,6 +518,85 @@ mod tests {
             }
             assert!(scale_ok, "payload mismatch for {bits}");
         }
+    }
+
+    fn static_lin(x: &Matrix, w: &Matrix) -> QuantizedLinear {
+        let mut lin = QuantizedLinear::from_weight(w, Bits::Int8);
+        let cp = crossquant::col_pow_scales(&x.col_abs_max(), 0.15);
+        lin.set_scale_mode(ScaleMode::Static { alpha: 0.15, col_pow: cp });
+        lin
+    }
+
+    #[test]
+    fn artifact_parts_roundtrip_is_bit_exact() {
+        // export the static fold, rebuild a weight-free layer from the
+        // parts, and demand bit-identical outputs — the layer-level core
+        // of the .cqa round-trip guarantee
+        let (x, w) = pair(true);
+        let lin = static_lin(&x, &w);
+        let want = lin.forward_crossquant_static(&x, Bits::Int8);
+        let (alpha, col_pow, panels, scale) = lin.static_parts().expect("fold installed");
+        let rebuilt = QuantizedLinear::from_static_parts(
+            Bits::Int8,
+            alpha,
+            col_pow.to_vec(),
+            panels.clone(),
+            scale.to_vec(),
+        )
+        .unwrap();
+        assert_eq!(rebuilt.forward_crossquant_static(&x, Bits::Int8).data, want.data);
+        assert_eq!((rebuilt.in_dim, rebuilt.out_dim), (lin.in_dim, lin.out_dim));
+    }
+
+    #[test]
+    fn from_static_parts_validates_inputs() {
+        let (x, w) = pair(false);
+        let lin = static_lin(&x, &w);
+        let (alpha, col_pow, panels, scale) = lin.static_parts().unwrap();
+        let bad_cp = col_pow[..col_pow.len() - 1].to_vec();
+        assert!(QuantizedLinear::from_static_parts(
+            Bits::Int8,
+            alpha,
+            bad_cp,
+            panels.clone(),
+            scale.to_vec()
+        )
+        .is_err());
+        let mut nan_scale = scale.to_vec();
+        nan_scale[0] = f32::NAN;
+        assert!(QuantizedLinear::from_static_parts(
+            Bits::Int8,
+            alpha,
+            col_pow.to_vec(),
+            panels.clone(),
+            nan_scale
+        )
+        .is_err());
+        assert!(QuantizedLinear::from_static_parts(
+            Bits::Int8,
+            2.0,
+            col_pow.to_vec(),
+            panels.clone(),
+            scale.to_vec()
+        )
+        .is_err());
+    }
+
+    #[test]
+    #[should_panic(expected = "artifact-loaded layer")]
+    fn artifact_layer_rejects_dynamic_paths() {
+        let (x, w) = pair(false);
+        let lin = static_lin(&x, &w);
+        let (alpha, col_pow, panels, scale) = lin.static_parts().unwrap();
+        let rebuilt = QuantizedLinear::from_static_parts(
+            Bits::Int8,
+            alpha,
+            col_pow.to_vec(),
+            panels.clone(),
+            scale.to_vec(),
+        )
+        .unwrap();
+        let _ = rebuilt.forward_per_token(&x, Bits::Int8);
     }
 
     #[test]

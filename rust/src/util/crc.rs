@@ -1,0 +1,57 @@
+//! CRC-32 (IEEE 802.3, the zlib/PNG polynomial) — the integrity checksum
+//! of the `.cqa` deployment artifact format (`quant::artifact`). Table-
+//! driven, built at compile time; no external crate (offline dependency
+//! policy, see Cargo.toml).
+
+const fn build_table() -> [u32; 256] {
+    let mut table = [0u32; 256];
+    let mut i = 0;
+    while i < 256 {
+        let mut c = i as u32;
+        let mut k = 0;
+        while k < 8 {
+            c = if c & 1 != 0 { 0xEDB8_8320 ^ (c >> 1) } else { c >> 1 };
+            k += 1;
+        }
+        table[i] = c;
+        i += 1;
+    }
+    table
+}
+
+static TABLE: [u32; 256] = build_table();
+
+/// CRC-32 of `bytes` (init 0xFFFFFFFF, reflected, final xor — the
+/// standard checksum `cksum`/zlib users expect; `crc32(b"123456789")`
+/// is `0xCBF43926`).
+pub fn crc32(bytes: &[u8]) -> u32 {
+    let mut c = 0xFFFF_FFFFu32;
+    for &b in bytes {
+        c = TABLE[((c ^ b as u32) & 0xFF) as usize] ^ (c >> 8);
+    }
+    c ^ 0xFFFF_FFFF
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn check_value() {
+        // the canonical CRC-32 check value
+        assert_eq!(crc32(b"123456789"), 0xCBF4_3926);
+    }
+
+    #[test]
+    fn empty_and_sensitivity() {
+        assert_eq!(crc32(b""), 0);
+        let a = crc32(b"deployable artifact");
+        let b = crc32(b"deployable artifacu");
+        assert_ne!(a, b);
+        // a single flipped bit anywhere changes the sum
+        let mut buf = vec![0xA5u8; 1024];
+        let clean = crc32(&buf);
+        buf[517] ^= 0x10;
+        assert_ne!(crc32(&buf), clean);
+    }
+}

@@ -1,0 +1,186 @@
+//! Minimal read-only file memory-mapping (the offline build has no
+//! memmap2 — see Cargo.toml). On 64-bit unix the mapping goes through
+//! the raw `mmap`/`munmap` symbols libc already links into every binary;
+//! elsewhere — 32-bit targets (where `off_t`'s width is configuration-
+//! dependent and a mismatched extern signature would be UB, not a clean
+//! error), non-unix platforms, empty files, and any syscall failure —
+//! the bytes are read into an owned buffer behind the same API, so
+//! callers never branch on platform.
+//!
+//! The map is `PROT_READ`/`MAP_PRIVATE`: the bytes live in the page
+//! cache, are shared between processes mapping the same file, and are
+//! paged in on first touch — the zero-copy substrate under
+//! [`crate::quant::artifact`]'s panel sections.
+
+use std::fs::File;
+use std::path::Path;
+
+use anyhow::{Context, Result};
+
+#[cfg(all(unix, target_pointer_width = "64"))]
+mod sys {
+    use std::ffi::c_void;
+    extern "C" {
+        pub fn mmap(
+            addr: *mut c_void,
+            len: usize,
+            prot: i32,
+            flags: i32,
+            fd: i32,
+            offset: i64,
+        ) -> *mut c_void;
+        pub fn munmap(addr: *mut c_void, len: usize) -> i32;
+    }
+    pub const PROT_READ: i32 = 1;
+    pub const MAP_PRIVATE: i32 = 2;
+}
+
+enum Backing {
+    #[cfg(all(unix, target_pointer_width = "64"))]
+    Mapped { ptr: *const u8, len: usize },
+    Owned(Vec<u8>),
+}
+
+/// A read-only byte view of a file: memory-mapped where possible, an
+/// owned buffer otherwise.
+pub struct Mmap {
+    backing: Backing,
+}
+
+// The mapping is read-only for its whole lifetime and unmapped exactly
+// once in Drop, so sharing the view across threads is safe.
+unsafe impl Send for Mmap {}
+unsafe impl Sync for Mmap {}
+
+impl Mmap {
+    /// Map `path` read-only. Falls back to reading the file into memory
+    /// when mapping is unavailable (non-unix or 32-bit target, empty
+    /// file, syscall error).
+    pub fn map(path: &Path) -> Result<Mmap> {
+        let file =
+            File::open(path).with_context(|| format!("opening {}", path.display()))?;
+        let len = file
+            .metadata()
+            .with_context(|| format!("stat {}", path.display()))?
+            .len() as usize;
+        #[cfg(all(unix, target_pointer_width = "64"))]
+        if len > 0 {
+            use std::os::unix::io::AsRawFd;
+            let ptr = unsafe {
+                sys::mmap(
+                    std::ptr::null_mut(),
+                    len,
+                    sys::PROT_READ,
+                    sys::MAP_PRIVATE,
+                    file.as_raw_fd(),
+                    0,
+                )
+            };
+            if ptr as isize != -1 {
+                return Ok(Mmap { backing: Backing::Mapped { ptr: ptr as *const u8, len } });
+            }
+        }
+        #[cfg(not(all(unix, target_pointer_width = "64")))]
+        let _ = len;
+        let bytes =
+            std::fs::read(path).with_context(|| format!("reading {}", path.display()))?;
+        Ok(Mmap { backing: Backing::Owned(bytes) })
+    }
+
+    /// Wrap an in-memory buffer behind the same API (tests, writers that
+    /// validate before hitting disk).
+    pub fn from_vec(bytes: Vec<u8>) -> Mmap {
+        Mmap { backing: Backing::Owned(bytes) }
+    }
+
+    /// The mapped (or owned) bytes.
+    pub fn bytes(&self) -> &[u8] {
+        match &self.backing {
+            #[cfg(all(unix, target_pointer_width = "64"))]
+            Backing::Mapped { ptr, len } => unsafe { std::slice::from_raw_parts(*ptr, *len) },
+            Backing::Owned(v) => v,
+        }
+    }
+
+    pub fn len(&self) -> usize {
+        self.bytes().len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// True when the bytes are served by a real file mapping rather than
+    /// an owned buffer — the zero-copy invariant artifact tests pin.
+    pub fn is_mapped(&self) -> bool {
+        match &self.backing {
+            #[cfg(all(unix, target_pointer_width = "64"))]
+            Backing::Mapped { .. } => true,
+            Backing::Owned(_) => false,
+        }
+    }
+}
+
+impl Drop for Mmap {
+    fn drop(&mut self) {
+        #[cfg(all(unix, target_pointer_width = "64"))]
+        if let Backing::Mapped { ptr, len } = &self.backing {
+            unsafe {
+                sys::munmap(*ptr as *mut std::ffi::c_void, *len);
+            }
+        }
+    }
+}
+
+impl std::fmt::Debug for Mmap {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.debug_struct("Mmap")
+            .field("len", &self.len())
+            .field("mapped", &self.is_mapped())
+            .finish()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tmp(name: &str) -> std::path::PathBuf {
+        std::env::temp_dir().join(format!("cq-mmap-{}-{name}", std::process::id()))
+    }
+
+    #[test]
+    fn maps_file_contents() {
+        let path = tmp("basic");
+        std::fs::write(&path, b"panel bytes in place").unwrap();
+        let m = Mmap::map(&path).unwrap();
+        assert_eq!(m.bytes(), b"panel bytes in place");
+        assert_eq!(m.len(), 20);
+        #[cfg(all(unix, target_pointer_width = "64"))]
+        assert!(m.is_mapped(), "64-bit unix must serve a real mapping");
+        drop(m); // munmap must not fault
+        let _ = std::fs::remove_file(&path);
+    }
+
+    #[test]
+    fn empty_file_is_owned_and_safe() {
+        let path = tmp("empty");
+        std::fs::write(&path, b"").unwrap();
+        let m = Mmap::map(&path).unwrap();
+        assert!(m.is_empty());
+        assert!(!m.is_mapped());
+        let _ = std::fs::remove_file(&path);
+    }
+
+    #[test]
+    fn missing_file_is_error() {
+        assert!(Mmap::map(Path::new("/nonexistent/nowhere.cqa")).is_err());
+    }
+
+    #[test]
+    fn from_vec_roundtrip() {
+        let m = Mmap::from_vec(vec![1, 2, 3]);
+        assert_eq!(m.bytes(), &[1, 2, 3]);
+        assert!(!m.is_mapped());
+    }
+}

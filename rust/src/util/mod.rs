@@ -1,8 +1,12 @@
 //! Small self-contained utilities (the offline build has no serde/clap —
 //! see Cargo.toml).
 
+pub mod crc;
 pub mod json;
 pub mod lru;
+pub mod mmap;
 
+pub use crc::crc32;
 pub use json::Json;
 pub use lru::LruCache;
+pub use mmap::Mmap;

@@ -1,0 +1,283 @@
+//! `.cqa` deployment-artifact integration tests: quantize → write →
+//! mmap-load → serve must be **bit-identical** to the in-memory
+//! `calibrate_static` model (logits, NLLs, greedy decodes), across head
+//! counts and the INT4 nibble-packed payload path; corruption of any
+//! byte must surface as a structured error, never a panic; and the
+//! coordinator must serve a mounted artifact without any FP weight set.
+
+use std::path::PathBuf;
+use std::time::Duration;
+
+use crossquant::coordinator::scheduler::{CoordinatorConfig, EvalCoordinator, EvalRequest};
+use crossquant::coordinator::ActScheme;
+use crossquant::model::weights::synthetic_weights;
+use crossquant::model::{ModelConfig, QuantPath, QuantizedModel};
+use crossquant::quant::artifact::Artifact;
+use crossquant::quant::gemm::PackedInt8;
+use crossquant::quant::Bits;
+use crossquant::runtime::ArtifactStore;
+use crossquant::tensor::SplitMix64;
+
+fn cfg(n_heads: usize) -> ModelConfig {
+    ModelConfig {
+        vocab: 64,
+        d_model: 16,
+        n_layers: 2,
+        n_heads,
+        d_ff: 32,
+        seq_len: 20,
+        eval_batch: 2,
+    }
+}
+
+fn calib(cfg: &ModelConfig) -> Vec<Vec<u32>> {
+    (0..6)
+        .map(|s| (0..cfg.seq_len).map(|i| ((i * 7 + s * 11) % cfg.vocab) as u32).collect())
+        .collect()
+}
+
+fn toks(cfg: &ModelConfig) -> Vec<u32> {
+    (0..cfg.seq_len).map(|i| ((i * 5 + 3) % cfg.vocab) as u32).collect()
+}
+
+/// Build + calibrate the in-memory static model the artifact round-trips
+/// against.
+fn build_calibrated(cfg: ModelConfig, bits: Bits, seed: u64, alpha: f32) -> QuantizedModel {
+    let w = synthetic_weights(cfg, seed);
+    let mut qm =
+        QuantizedModel::new(&w, bits, Bits::Int8, QuantPath::CrossQuant { alpha }).unwrap();
+    qm.calibrate_static(alpha, &calib(&cfg)).unwrap();
+    qm
+}
+
+struct TempFile(PathBuf);
+
+impl TempFile {
+    fn new(name: &str) -> TempFile {
+        TempFile(std::env::temp_dir().join(format!("cqa-it-{}-{name}", std::process::id())))
+    }
+}
+
+impl Drop for TempFile {
+    fn drop(&mut self) {
+        let _ = std::fs::remove_file(&self.0);
+    }
+}
+
+struct TempDir(PathBuf);
+
+impl TempDir {
+    fn new(name: &str) -> TempDir {
+        let p = std::env::temp_dir().join(format!("cqa-itd-{}-{name}", std::process::id()));
+        std::fs::create_dir_all(&p).unwrap();
+        TempDir(p)
+    }
+}
+
+impl Drop for TempDir {
+    fn drop(&mut self) {
+        let _ = std::fs::remove_dir_all(&self.0);
+    }
+}
+
+#[test]
+fn roundtrip_bit_identical_logits_across_head_counts() {
+    for (i, n_heads) in [1usize, 2, 4].into_iter().enumerate() {
+        let c = cfg(n_heads);
+        let qm = build_calibrated(c, Bits::Int8, 100 + i as u64, 0.15);
+        let f = TempFile::new(&format!("heads{n_heads}.cqa"));
+        qm.write_artifact(&f.0).unwrap();
+        let loaded = QuantizedModel::load_artifact(&f.0).unwrap();
+        assert!(matches!(loaded.path, QuantPath::CrossQuantStatic { .. }));
+        let t = toks(&c);
+        let a = qm.forward_logits(&t).unwrap();
+        let b = loaded.forward_logits(&t).unwrap();
+        assert_eq!(a.data, b.data, "n_heads={n_heads}: logits must be bit-identical");
+        assert_eq!(
+            qm.forward_nll(&t).unwrap(),
+            loaded.forward_nll(&t).unwrap(),
+            "n_heads={n_heads}: NLLs must be bit-identical"
+        );
+        // a re-saved artifact is byte-identical to the original (the
+        // loader retains everything the writer ships)
+        let f2 = TempFile::new(&format!("heads{n_heads}-resave.cqa"));
+        loaded.write_artifact(&f2.0).unwrap();
+        assert_eq!(std::fs::read(&f.0).unwrap(), std::fs::read(&f2.0).unwrap());
+    }
+}
+
+#[test]
+fn roundtrip_int4_nibble_packed_payload() {
+    let c = cfg(2);
+    let qm = build_calibrated(c, Bits::Int4, 7, 0.15);
+    let f = TempFile::new("int4.cqa");
+    qm.write_artifact(&f.0).unwrap();
+    let art = Artifact::open(&f.0).unwrap();
+    assert_eq!(art.weight_bits, Bits::Int4);
+    // the shipped panel payload is nibble-packed: half the buffer bytes
+    let s = art.section("layer0.wq.panels").unwrap();
+    assert_eq!(s.len, PackedInt8::layout_bytes(16, 16).div_ceil(2));
+    let loaded = QuantizedModel::from_artifact(&art).unwrap();
+    let t = toks(&c);
+    assert_eq!(
+        qm.forward_logits(&t).unwrap().data,
+        loaded.forward_logits(&t).unwrap().data,
+        "int4 logits must be bit-identical"
+    );
+}
+
+#[test]
+fn int8_panels_serve_zero_copy_from_the_mapping() {
+    let c = cfg(2);
+    let qm = build_calibrated(c, Bits::Int8, 8, 0.15);
+    let f = TempFile::new("zerocopy.cqa");
+    qm.write_artifact(&f.0).unwrap();
+    let art = Artifact::open(&f.0).unwrap();
+    if !art.is_mapped() {
+        return; // platform without mmap: nothing to pin
+    }
+    for name in ["layer0.wq.panels", "layer1.w2.panels", "w_out.panels"] {
+        let p = art.panels(name).unwrap();
+        assert!(p.is_mapped(), "{name} must be borrowed from the file mapping");
+    }
+}
+
+#[test]
+fn greedy_generation_matches_in_memory_model() {
+    let c = cfg(2);
+    let qm = build_calibrated(c, Bits::Int8, 9, 0.15);
+    let f = TempFile::new("gen.cqa");
+    qm.write_artifact(&f.0).unwrap();
+    let loaded = QuantizedModel::load_artifact(&f.0).unwrap();
+    let want = qm.generate_greedy(&[1, 2, 3], 8).unwrap();
+    assert_eq!(loaded.generate_greedy(&[1, 2, 3], 8).unwrap(), want);
+}
+
+#[test]
+fn corruption_never_panics_and_truncation_is_structured() {
+    let c = cfg(2);
+    let qm = build_calibrated(c, Bits::Int8, 10, 0.15);
+    let f = TempFile::new("fuzz.cqa");
+    qm.write_artifact(&f.0).unwrap();
+    let good = std::fs::read(&f.0).unwrap();
+
+    // every strict truncation yields a structured error, never a panic
+    for cut in [0usize, 1, 37, 63, 64, 200, good.len() / 2, good.len() - 1] {
+        let err = Artifact::from_bytes(good[..cut].to_vec()).unwrap_err();
+        assert!(
+            format!("{err:#}").contains("truncated"),
+            "cut at {cut}: expected a truncation error, got: {err:#}"
+        );
+    }
+
+    // fuzz-style bit flips over random positions: never a panic; either a
+    // structured load error or — when only alignment padding was hit — a
+    // still-valid artifact that still rebuilds into a model
+    let mut rng = SplitMix64::new(0xC0FFEE);
+    for _ in 0..256 {
+        let pos = rng.below(good.len());
+        let bit = 1u8 << rng.below(8);
+        let mut bytes = good.clone();
+        bytes[pos] ^= bit;
+        match Artifact::from_bytes(bytes) {
+            Ok(art) => {
+                let _ = QuantizedModel::from_artifact(&art);
+            }
+            Err(e) => {
+                assert!(!format!("{e:#}").is_empty());
+            }
+        }
+    }
+}
+
+#[test]
+fn broken_mount_surfaces_structured_error() {
+    let c = cfg(2);
+    let dir = TempDir::new("broken-mount");
+    let coordinator = EvalCoordinator::start(
+        ArtifactStore { dir: dir.0.clone() },
+        c,
+        vec![],
+        CoordinatorConfig {
+            batch_size: 2,
+            max_batch_delay: Duration::from_millis(2),
+            max_queue: 16,
+            engine: Default::default(),
+            artifacts: vec![("w16".to_string(), dir.0.join("missing.cqa"))],
+        },
+    );
+    let scheme = ActScheme::CrossQuantStatic { alpha: 0.15, qmax: 127.0 };
+    let err = coordinator
+        .submit(EvalRequest::score(toks(&c), scheme, "w16"))
+        .unwrap()
+        .wait()
+        .unwrap_err();
+    // the mount failure reason reaches the requester, not a generic
+    // "unknown weight set"
+    assert!(format!("{err:#}").contains("failed to load"), "{err:#}");
+    coordinator.shutdown();
+}
+
+#[test]
+fn coordinator_serves_mounted_artifact_without_fp_weights() {
+    let c = cfg(2);
+    let alpha = 0.15f32;
+    // the in-memory reference, calibrated on the exact stream the
+    // artifact was built from
+    let reference = build_calibrated(c, Bits::Int8, 11, alpha);
+    let f = TempFile::new("served.cqa");
+    reference.write_artifact(&f.0).unwrap();
+
+    let dir = TempDir::new("serve");
+    // note: zero FP weight sets — weights.bin is never read
+    let coordinator = EvalCoordinator::start(
+        ArtifactStore { dir: dir.0.clone() },
+        c,
+        vec![],
+        CoordinatorConfig {
+            batch_size: 2,
+            max_batch_delay: Duration::from_millis(2),
+            max_queue: 64,
+            engine: Default::default(),
+            artifacts: vec![("w16".to_string(), f.0.clone())],
+        },
+    );
+    let t = toks(&c);
+    let scheme = ActScheme::CrossQuantStatic { alpha, qmax: 127.0 };
+
+    // scoring: bit-identical to the in-memory calibrated model
+    let resp = coordinator
+        .submit(EvalRequest::score(t.clone(), scheme, "w16"))
+        .unwrap()
+        .wait()
+        .unwrap();
+    assert_eq!(resp.nll, reference.forward_nll(&t).unwrap());
+
+    // generation through the continuous-batching engine: same tokens
+    let gen = coordinator
+        .submit(EvalRequest::generate(vec![1, 2, 3], scheme, "w16", 5))
+        .unwrap()
+        .wait()
+        .unwrap();
+    assert_eq!(gen.generated, reference.generate_greedy(&[1, 2, 3], 5).unwrap());
+
+    // a non-static scheme on the artifact-only set fails structurally
+    let err = coordinator
+        .submit(EvalRequest::score(t.clone(), ActScheme::Fp, "w16"))
+        .unwrap()
+        .wait()
+        .unwrap_err();
+    assert!(format!("{err:#}").contains("artifact-only"), "{err:#}");
+
+    // an α the artifact was not calibrated for cannot be served without
+    // FP weights — structured error, not a panic
+    let other = ActScheme::CrossQuantStatic { alpha: 0.5, qmax: 127.0 };
+    let err = coordinator
+        .submit(EvalRequest::score(t, other, "w16"))
+        .unwrap()
+        .wait()
+        .unwrap_err();
+    assert!(format!("{err:#}").contains("artifact-only"), "{err:#}");
+
+    coordinator.shutdown();
+}

@@ -83,6 +83,7 @@ fn failure_injection_missing_artifact() {
             max_batch_delay: Duration::from_millis(2),
             max_queue: 8,
             engine: Default::default(),
+            artifacts: Vec::new(),
         },
     );
     let handle = coordinator
@@ -115,6 +116,7 @@ fn native_executor_serves_static_scale_scheme() {
             max_batch_delay: Duration::from_millis(2),
             max_queue: 8,
             engine: Default::default(),
+            artifacts: Vec::new(),
         },
     );
     let mut gen = CorpusGen::new(cfg.vocab, 4);
@@ -174,6 +176,7 @@ fn generation_round_trips_for_every_scheme() {
             max_batch_delay: Duration::from_millis(2),
             max_queue: 8,
             engine: Default::default(),
+            artifacts: Vec::new(),
         },
     );
     let mut gen = CorpusGen::new(cfg.vocab, 5);
@@ -288,6 +291,7 @@ fn batches_fill_and_results_map_back() {
             max_batch_delay: Duration::from_millis(3),
             max_queue: 64,
             engine: Default::default(),
+            artifacts: Vec::new(),
         },
     );
     let mut gen = CorpusGen::new(cfg.vocab, 2);
@@ -332,6 +336,7 @@ fn partial_batch_flushes_on_deadline() {
             max_batch_delay: Duration::from_millis(5),
             max_queue: 8,
             engine: Default::default(),
+            artifacts: Vec::new(),
         },
     );
     let mut gen = CorpusGen::new(cfg.vocab, 3);

@@ -71,6 +71,7 @@ fn start(engine: EngineConfig) -> (EvalCoordinator, TempDir) {
             max_batch_delay: Duration::from_millis(2),
             max_queue: 64,
             engine,
+            artifacts: Vec::new(),
         },
     );
     (coordinator, dir)

@@ -29,6 +29,7 @@ fn start_server() -> Option<(std::net::SocketAddr, crossquant::model::ModelConfi
             max_batch_delay: Duration::from_millis(3),
             max_queue: 64,
             engine: Default::default(),
+            artifacts: Vec::new(),
         },
     );
     let listener = TcpListener::bind("127.0.0.1:0").ok()?;
@@ -71,6 +72,7 @@ fn start_synthetic_server() -> (std::net::SocketAddr, ModelConfig) {
             max_batch_delay: Duration::from_millis(2),
             max_queue: 16,
             engine: Default::default(),
+            artifacts: Vec::new(),
         },
     );
     let listener = TcpListener::bind("127.0.0.1:0").unwrap();
@@ -321,6 +323,7 @@ fn connection_cap_refuses_excess_clients_with_structured_error() {
             max_batch_delay: Duration::from_millis(2),
             max_queue: 16,
             engine: Default::default(),
+            artifacts: Vec::new(),
         },
     );
     let listener = TcpListener::bind("127.0.0.1:0").unwrap();
