@@ -20,6 +20,7 @@ use crossquant::corpus::CorpusGen;
 use crossquant::model::quantized::quantize_to_artifact;
 use crossquant::model::weights::{synthetic_weights, Weights};
 use crossquant::model::{ModelConfig, QuantPath, QuantizedModel};
+use crossquant::quant::registry::{SchemeId, StaticSpec};
 use crossquant::quant::Bits;
 use crossquant::util::Json;
 use support::{bench, header};
@@ -59,7 +60,8 @@ fn main() {
     let bytes: Vec<u8> = weights.flat.iter().flat_map(|v| v.to_le_bytes()).collect();
     std::fs::write(&wpath, &bytes).expect("write weights.bin");
     let apath = dir.join("model.cqa");
-    let report = quantize_to_artifact(&weights, Bits::Int8, Bits::Int8, alpha, &calib, &apath)
+    let spec = StaticSpec::new(SchemeId::CrossQuantStatic, alpha, 0);
+    let report = quantize_to_artifact(&weights, Bits::Int8, Bits::Int8, &spec, &calib, &apath)
         .expect("quantize to artifact");
 
     // resident-memory deltas: artifact model first (freshest baseline),

@@ -43,6 +43,7 @@ use super::scheduler::{EvalResponse, SchemeSite};
 use super::{ActScheme, SchemeKey};
 use crate::model::block::{self, DecodeState};
 use crate::model::{ActSite, ModelConfig, NativeModel, QuantizedModel};
+use crate::quant::registry::StaticSpec;
 use crate::tensor::Matrix;
 
 /// One streamed decode event: sequence `seq` produced `token`.
@@ -181,7 +182,7 @@ struct GenSeq {
 /// construction + static-scale calibration live behind it).
 pub(crate) trait EngineModels {
     fn native_model(&mut self, weight_set: &str) -> Result<&NativeModel>;
-    fn static_model(&mut self, weight_set: &str, alpha: f32) -> Result<&QuantizedModel>;
+    fn static_model(&mut self, weight_set: &str, spec: &StaticSpec) -> Result<&QuantizedModel>;
 }
 
 pub(crate) struct Engine {
@@ -272,8 +273,9 @@ impl Engine {
         let id = self.next_id;
         self.next_id += 1;
         let run: Result<(SeqSite, Matrix)> = (|| {
-            match req.scheme {
-                ActScheme::CrossQuantStatic { alpha, qmax } => {
+            match req.scheme.static_spec() {
+                Some((spec, qmax)) => {
+                    let alpha = spec.alpha;
                     ensure!(
                         alpha.is_finite() && (0.0..=1.0).contains(&alpha),
                         "bad alpha {alpha}"
@@ -282,12 +284,12 @@ impl Engine {
                         (qmax - 127.0).abs() < 0.5,
                         "native static path serves the INT8 grid (qmax 127), got {qmax}"
                     );
-                    let model = models.static_model(&req.key.weight_set, alpha)?;
+                    let model = models.static_model(&req.key.weight_set, &spec)?;
                     let logits = model.forward_incremental_with(&req.tokens, &mut state, true)?;
                     Ok((SeqSite::Integer, logits))
                 }
-                scheme => {
-                    let mut site = SchemeSite::build(scheme)?;
+                None => {
+                    let mut site = SchemeSite::build(req.scheme)?;
                     let model = models.native_model(&req.key.weight_set)?;
                     let logits =
                         model.forward_incremental_with(&req.tokens, &mut state, site.site(), true)?;
@@ -382,14 +384,14 @@ impl Engine {
     ) -> Result<()> {
         let scheme = seqs[0].scheme;
         let tokens: Vec<u32> = seqs.iter().map(|s| s.next).collect();
-        let logits = match scheme {
-            ActScheme::CrossQuantStatic { alpha, .. } => {
-                let model = models.static_model(&key.weight_set, alpha)?;
+        let logits = match scheme.static_spec() {
+            Some((spec, _)) => {
+                let model = models.static_model(&key.weight_set, &spec)?;
                 let mut states: Vec<&mut DecodeState> =
                     seqs.iter_mut().map(|s| &mut s.state).collect();
                 model.forward_step_batched(&tokens, &mut states)?
             }
-            _ => {
+            None => {
                 let model = models.native_model(&key.weight_set)?;
                 let (mut states, mut sites): (Vec<&mut DecodeState>, Vec<&mut SeqSite>) =
                     seqs.iter_mut().map(|s| (&mut s.state, &mut s.site)).unzip();
@@ -447,10 +449,13 @@ impl Engine {
 mod tests {
     use std::sync::mpsc::{channel, sync_channel, Receiver};
 
+    use std::collections::HashMap;
+
     use super::*;
     use crate::corpus::CorpusGen;
     use crate::model::weights::synthetic_weights;
-    use crate::model::{IdentitySite, QuantPath};
+    use crate::model::IdentitySite;
+    use crate::quant::registry::{self, SchemeId};
     use crate::quant::Bits;
 
     fn cfg() -> ModelConfig {
@@ -465,16 +470,20 @@ mod tests {
         }
     }
 
-    /// Minimal [`EngineModels`]: one native model, lazily calibrated
-    /// static model — mirroring the executor's calibration stream.
+    /// Minimal [`EngineModels`]: one native model plus a spec-keyed cache
+    /// of registry-built static models — mirroring the executor's
+    /// calibration stream.
     struct TestModels {
         native: NativeModel,
-        static_m: Option<QuantizedModel>,
+        static_ms: HashMap<(u16, i64, usize), QuantizedModel>,
     }
 
     impl TestModels {
         fn new(seed: u64) -> TestModels {
-            TestModels { native: NativeModel::new(synthetic_weights(cfg(), seed)), static_m: None }
+            TestModels {
+                native: NativeModel::new(synthetic_weights(cfg(), seed)),
+                static_ms: HashMap::new(),
+            }
         }
     }
 
@@ -483,20 +492,21 @@ mod tests {
             Ok(&self.native)
         }
 
-        fn static_model(&mut self, _ws: &str, alpha: f32) -> Result<&QuantizedModel> {
-            if self.static_m.is_none() {
-                let mut qm = QuantizedModel::new(
+        fn static_model(&mut self, _ws: &str, spec: &StaticSpec) -> Result<&QuantizedModel> {
+            let key = spec.cache_key();
+            if !self.static_ms.contains_key(&key) {
+                let mut gen = CorpusGen::new(cfg().vocab, 0x5CA1E);
+                let calib: Vec<Vec<u32>> = (0..4).map(|_| gen.sequence(cfg().seq_len)).collect();
+                let qm = registry::build_static_model(
                     &self.native.weights,
                     Bits::Int8,
                     Bits::Int8,
-                    QuantPath::CrossQuant { alpha },
+                    spec,
+                    &calib,
                 )?;
-                let mut gen = CorpusGen::new(cfg().vocab, 0x5CA1E);
-                let calib: Vec<Vec<u32>> = (0..4).map(|_| gen.sequence(cfg().seq_len)).collect();
-                qm.calibrate_static(alpha, &calib)?;
-                self.static_m = Some(qm);
+                self.static_ms.insert(key, qm);
             }
-            Ok(self.static_m.as_ref().expect("installed above"))
+            Ok(self.static_ms.get(&key).expect("installed above"))
         }
     }
 
@@ -626,7 +636,7 @@ mod tests {
         let mut models = TestModels::new(11);
         let r_fp = models.native.generate_greedy(&[1, 2, 3, 4], 6, &mut IdentitySite).unwrap();
         let r_st = models
-            .static_model("w", 0.15)
+            .static_model("w", &StaticSpec::new(SchemeId::CrossQuantStatic, 0.15, 0))
             .unwrap()
             .generate_greedy(&[1, 2, 3, 4], 6)
             .unwrap();
@@ -640,6 +650,23 @@ mod tests {
         }
         assert_eq!(a_rx.recv().unwrap().unwrap().generated, r_st);
         assert_eq!(b_rx.recv().unwrap().unwrap().generated, r_fp);
+    }
+
+    #[test]
+    fn registry_schemes_decode_bit_exact_in_the_engine() {
+        // a gptq sequence decoded by the engine matches its solo decode on
+        // the same registry-built model
+        let mut eng = engine(4, 8, None);
+        let mut models = TestModels::new(17);
+        let spec = StaticSpec::new(SchemeId::Gptq, 0.15, 0);
+        let r = models.static_model("w", &spec).unwrap().generate_greedy(&[2, 3, 4], 5).unwrap();
+        let (a, a_rx, _) =
+            gen_req(vec![2, 3, 4], ActScheme::Gptq { alpha: 0.15, qmax: 127.0 }, 5);
+        eng.submit(a);
+        while !eng.is_idle() {
+            eng.tick(&mut models);
+        }
+        assert_eq!(a_rx.recv().unwrap().unwrap().generated, r);
     }
 
     #[test]

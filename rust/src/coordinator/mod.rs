@@ -18,8 +18,13 @@ pub use metrics::Metrics;
 pub use scheduler::{EvalCoordinator, EvalRequest, EvalResponse, RequestKind};
 pub use server::EvalServer;
 
+use crate::quant::registry::{SchemeId, StaticSpec};
+
 /// Activation-quantization scheme of a request — maps onto one AOT
-/// artifact plus its runtime scalar inputs.
+/// artifact plus its runtime scalar inputs. The static variants (from
+/// [`ActScheme::CrossQuantStatic`] down) are all served by the native
+/// executor's `QuantizedModel`, built through the scheme registry's one
+/// pipeline ([`crate::quant::registry::build_static_model`]).
 #[derive(Clone, Copy, Debug, PartialEq)]
 pub enum ActScheme {
     /// FP forward (`lm_fp`).
@@ -35,6 +40,17 @@ pub enum ActScheme {
     CrossQuantStatic { alpha: f32, qmax: f32 },
     /// Remove-kernel ablation with zero-bound multiplier θ (`lm_rk`).
     RemoveKernel { theta: f32 },
+    /// SmoothQuant: scale migration folded into the weights, per-token
+    /// static fold (`lm_sq`).
+    SmoothQuant { alpha: f32, qmax: f32 },
+    /// AWQ: activation-aware weight scales folded in, served static
+    /// (`lm_awq_s`).
+    Awq { alpha: f32, qmax: f32 },
+    /// GPTQ error-minimising weight rounding on the static fold
+    /// (`lm_gptq`).
+    Gptq { alpha: f32, qmax: f32 },
+    /// Static fold plus rank-r LoRC residual correction (`lm_lorc`).
+    Lorc { alpha: f32, rank: usize, qmax: f32 },
 }
 
 impl ActScheme {
@@ -45,6 +61,10 @@ impl ActScheme {
             ActScheme::CrossQuantFused { .. } => "lm_aq_jnp",
             ActScheme::CrossQuantStatic { .. } => "lm_aq_static",
             ActScheme::RemoveKernel { .. } => "lm_rk",
+            ActScheme::SmoothQuant { .. } => "lm_sq",
+            ActScheme::Awq { .. } => "lm_awq_s",
+            ActScheme::Gptq { .. } => "lm_gptq",
+            ActScheme::Lorc { .. } => "lm_lorc",
         }
     }
 
@@ -54,8 +74,38 @@ impl ActScheme {
             ActScheme::Fp => vec![],
             ActScheme::CrossQuant { alpha, qmax }
             | ActScheme::CrossQuantFused { alpha, qmax }
-            | ActScheme::CrossQuantStatic { alpha, qmax } => vec![alpha, qmax],
+            | ActScheme::CrossQuantStatic { alpha, qmax }
+            | ActScheme::SmoothQuant { alpha, qmax }
+            | ActScheme::Awq { alpha, qmax }
+            | ActScheme::Gptq { alpha, qmax } => vec![alpha, qmax],
+            ActScheme::Lorc { alpha, rank, qmax } => vec![alpha, rank as f32, qmax],
             ActScheme::RemoveKernel { theta } => vec![theta],
+        }
+    }
+
+    /// The registry build spec when this scheme is served by the
+    /// calibrated integer model, plus its requested activation grid —
+    /// `None` for the FP/dynamic schemes. This is the single dispatch
+    /// point that used to be a scattered `CrossQuantStatic` match arm in
+    /// the scheduler, engine and server.
+    pub fn static_spec(&self) -> Option<(StaticSpec, f32)> {
+        match *self {
+            ActScheme::CrossQuantStatic { alpha, qmax } => {
+                Some((StaticSpec::new(SchemeId::CrossQuantStatic, alpha, 0), qmax))
+            }
+            ActScheme::SmoothQuant { alpha, qmax } => {
+                Some((StaticSpec::new(SchemeId::SmoothQuant, alpha, 0), qmax))
+            }
+            ActScheme::Awq { alpha, qmax } => {
+                Some((StaticSpec::new(SchemeId::Awq, alpha, 0), qmax))
+            }
+            ActScheme::Gptq { alpha, qmax } => {
+                Some((StaticSpec::new(SchemeId::Gptq, alpha, 0), qmax))
+            }
+            ActScheme::Lorc { alpha, rank, qmax } => {
+                Some((StaticSpec::new(SchemeId::Lorc, alpha, rank), qmax))
+            }
+            _ => None,
         }
     }
 
@@ -69,7 +119,14 @@ impl ActScheme {
             ActScheme::Fp => (0, 0),
             ActScheme::CrossQuant { alpha, qmax }
             | ActScheme::CrossQuantFused { alpha, qmax }
-            | ActScheme::CrossQuantStatic { alpha, qmax } => (quant(alpha), quant(qmax)),
+            | ActScheme::CrossQuantStatic { alpha, qmax }
+            | ActScheme::SmoothQuant { alpha, qmax }
+            | ActScheme::Awq { alpha, qmax }
+            | ActScheme::Gptq { alpha, qmax } => (quant(alpha), quant(qmax)),
+            ActScheme::Lorc { alpha, rank, qmax } => {
+                // fold the rank in so different ranks never share a model
+                (quant(alpha), quant(qmax) ^ ((rank as i64) << 40))
+            }
             ActScheme::RemoveKernel { theta } => (quant(theta), 0),
         };
         SchemeKey {
@@ -144,5 +201,33 @@ mod tests {
         assert!(ActScheme::Fp.scalars().is_empty());
         assert_eq!(ActScheme::CrossQuant { alpha: 0.15, qmax: 127.0 }.scalars(), vec![0.15, 127.0]);
         assert_eq!(ActScheme::RemoveKernel { theta: 0.01 }.scalars(), vec![0.01]);
+    }
+
+    #[test]
+    fn static_specs_cover_exactly_the_registry_static_schemes() {
+        assert!(ActScheme::Fp.static_spec().is_none());
+        assert!(ActScheme::CrossQuant { alpha: 0.15, qmax: 127.0 }.static_spec().is_none());
+        let (spec, qmax) =
+            ActScheme::CrossQuantStatic { alpha: 0.15, qmax: 127.0 }.static_spec().unwrap();
+        assert_eq!(spec.id, SchemeId::CrossQuantStatic);
+        assert_eq!(qmax, 127.0);
+        let (spec, _) =
+            ActScheme::Lorc { alpha: 0.15, rank: 8, qmax: 127.0 }.static_spec().unwrap();
+        assert_eq!((spec.id, spec.rank), (SchemeId::Lorc, 8));
+        for s in [
+            ActScheme::SmoothQuant { alpha: 0.15, qmax: 127.0 },
+            ActScheme::Awq { alpha: 0.15, qmax: 127.0 },
+            ActScheme::Gptq { alpha: 0.15, qmax: 127.0 },
+        ] {
+            assert!(s.static_spec().unwrap().0.id.is_static(), "{s:?}");
+        }
+    }
+
+    #[test]
+    fn lorc_ranks_never_share_a_batch() {
+        let a = ActScheme::Lorc { alpha: 0.15, rank: 4, qmax: 127.0 };
+        let b = ActScheme::Lorc { alpha: 0.15, rank: 8, qmax: 127.0 };
+        assert_ne!(a.key("w16"), b.key("w16"));
+        assert_eq!(a.key("w16"), a.key("w16"));
     }
 }

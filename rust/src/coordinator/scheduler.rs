@@ -43,10 +43,10 @@ use super::{ActScheme, SchemeKey};
 use crate::corpus::CorpusGen;
 use crate::model::config::ModelConfig;
 use crate::model::{
-    ActSite, IdentitySite, NativeModel, QuantPath, QuantSite, QuantizedModel, RemoveKernelSite,
-    Weights,
+    ActSite, IdentitySite, NativeModel, QuantSite, QuantizedModel, RemoveKernelSite, Weights,
 };
 use crate::quant::artifact::Artifact;
+use crate::quant::registry::{self, StaticSpec};
 use crate::quant::{
     crossquant::cross_delta_field, remove_kernel::RemoveKernel, ActQuantizer, Bits, DeltaField,
 };
@@ -200,10 +200,9 @@ pub struct CoordinatorConfig {
     /// Continuous-batching engine knobs (KV pool size, admission queue).
     pub engine: EngineConfig,
     /// Mounted `.cqa` deployment artifacts: (weight-set name, path). A
-    /// `crossquant-static` request whose (set, α) matches a mount is
+    /// static-scheme request whose (set, scheme, α) matches a mount is
     /// served from the artifact — mmap load, no FP weights, no
-    /// calibration — replacing the lazy per-(set, α) `calibrate_static`
-    /// path for that key.
+    /// calibration — replacing the lazy registry-build path for that key.
     pub artifacts: Vec<(String, PathBuf)>,
 }
 
@@ -477,7 +476,7 @@ impl Backend {
     ) -> Result<Vec<EvalResponse>> {
         let first =
             batch.requests.first().ok_or_else(|| anyhow!("empty batch dispatched"))?;
-        let needs_native = matches!(first.req.scheme, ActScheme::CrossQuantStatic { .. });
+        let needs_native = first.req.scheme.static_spec().is_some();
         if needs_native {
             return self.native_mut(cfg)?.execute_batch(batch);
         }
@@ -639,7 +638,11 @@ impl SchemeSite {
                 ensure!(theta >= 0.0, "remove-kernel theta must be >= 0, got {theta}");
                 Ok(SchemeSite::Remove(RemoveKernelSite::new(RemoveKernel::new(theta))))
             }
-            ActScheme::CrossQuantStatic { .. } => {
+            ActScheme::CrossQuantStatic { .. }
+            | ActScheme::SmoothQuant { .. }
+            | ActScheme::Awq { .. }
+            | ActScheme::Gptq { .. }
+            | ActScheme::Lorc { .. } => {
                 unreachable!("static scheme is served by the integer model")
             }
         }
@@ -673,16 +676,17 @@ pub(crate) struct NativeExecutor {
     cfg: ModelConfig,
     weight_sets: HashMap<String, Vec<f32>>,
     models: HashMap<String, NativeModel>,
-    /// Calibrated static-scale integer models, keyed by (weight set, α in
-    /// micro-units). Calibration runs once per cached key; the cache is
-    /// genuine LRU, so an α sweep displaces the coldest model, never a
-    /// hot one. Artifact-backed models share the cache under the same
-    /// keys — a mounted artifact is just a much cheaper way to fill it.
-    static_models: LruCache<(String, i64), QuantizedModel>,
+    /// Calibrated static-scale integer models, keyed by (weight set,
+    /// registry spec key) — scheme id, α in micro-units, LoRC rank. The
+    /// registry build runs once per cached key; the cache is genuine LRU,
+    /// so a scheme/α sweep displaces the coldest model, never a hot one.
+    /// Artifact-backed models share the cache under the same keys — a
+    /// mounted artifact is just a much cheaper way to fill it.
+    static_models: LruCache<(String, (u16, i64, usize)), QuantizedModel>,
     /// The artifact repository, keyed by weight-set name. Static requests
-    /// hitting a matching (set, α) rebuild the model from the retained
-    /// mapping — no FP weights, no calibration — instead of the lazy
-    /// calibrate path.
+    /// hitting a matching (set, scheme, α) rebuild the model from the
+    /// retained mapping — no FP weights, no calibration — instead of the
+    /// lazy registry-build path.
     artifacts: HashMap<String, MountState>,
     metrics: Arc<Metrics>,
 }
@@ -763,7 +767,7 @@ impl NativeExecutor {
         match self.artifacts.get(name) {
             Some(MountState::Ready(m)) => anyhow!(
                 "weight set {name} is artifact-only (mounted at α={}): only the \
-                 crossquant-static scheme at that α is served without FP weights",
+                 artifact's own scheme at that α is served without FP weights",
                 m.alpha_micro as f64 / 1e6
             ),
             Some(MountState::Failed(e)) => {
@@ -783,20 +787,21 @@ impl NativeExecutor {
     }
 
     /// Lazily build the integer static-scale model for one (weight set,
-    /// α). A mounted artifact with a matching (set, α) is loaded in place
-    /// (mmap — the deployment fast path); otherwise calibration runs the
-    /// dynamic path over a fixed deterministic synthetic stream — the
-    /// offline stand-in for a held-out calibration corpus — then folds
-    /// the scales once. Either way every subsequent request on this key
-    /// is pure per-token-cost serving.
-    fn static_model_for(&mut self, name: &str, alpha: f32) -> Result<&QuantizedModel> {
-        let key = (name.to_string(), alpha_micro(alpha));
+    /// registry spec). A mounted artifact with a matching (set, scheme,
+    /// α) is loaded in place (mmap — the deployment fast path); otherwise
+    /// the registry pipeline quantizes + calibrates over a fixed
+    /// deterministic synthetic stream — the offline stand-in for a
+    /// held-out calibration corpus — and folds the scales once. Either
+    /// way every subsequent request on this key is pure per-token-cost
+    /// serving.
+    fn static_model_for(&mut self, name: &str, spec: &StaticSpec) -> Result<&QuantizedModel> {
+        let key = (name.to_string(), spec.cache_key());
         if !self.static_models.contains(&key) {
-            let qm = self.build_static_model(name, alpha, key.1)?;
+            let qm = self.build_static_model(name, spec)?;
             // LruCache::insert evicts the least-recently-used model once
-            // the cap is reached — a re-requested hot α never re-pays its
-            // calibration (or artifact load) just because a sweep walked
-            // past it
+            // the cap is reached — a re-requested hot scheme never
+            // re-pays its calibration (or artifact load) just because a
+            // sweep walked past it
             self.static_models.insert(key.clone(), qm);
         }
         self.static_models
@@ -804,14 +809,13 @@ impl NativeExecutor {
             .ok_or_else(|| anyhow!("static model cache lost entry for {name}"))
     }
 
-    fn build_static_model(
-        &mut self,
-        name: &str,
-        alpha: f32,
-        key_alpha: i64,
-    ) -> Result<QuantizedModel> {
+    fn build_static_model(&mut self, name: &str, spec: &StaticSpec) -> Result<QuantizedModel> {
         if let Some(MountState::Ready(m)) = self.artifacts.get(name) {
-            if m.alpha_micro == key_alpha {
+            // the artifact pins the scheme that produced it (header scheme
+            // id) and the α it was calibrated at — serve it only for that
+            // exact request shape, never as a stand-in for another scheme
+            let eff_alpha = alpha_micro(registry::effective_alpha(spec.id, spec.alpha));
+            if m.artifact.scheme == spec.id.artifact_code() && m.alpha_micro == eff_alpha {
                 let t0 = Instant::now();
                 // rebuild over the mapping retained at mount — no re-read,
                 // no re-validation, no window for the file to have changed
@@ -831,11 +835,9 @@ impl NativeExecutor {
         }
         let flat = self.weight_sets.get(name).ok_or_else(|| self.unknown_set(name))?;
         let weights = Weights::from_config_flat(self.cfg, flat.clone())?;
-        let mut qm =
-            QuantizedModel::new(&weights, Bits::Int8, Bits::Int8, QuantPath::CrossQuant { alpha })?;
         let mut gen = CorpusGen::new(self.cfg.vocab, 0x5CA1E);
         let calib: Vec<Vec<u32>> = (0..8).map(|_| gen.sequence(self.cfg.seq_len)).collect();
-        qm.calibrate_static(alpha, &calib)?;
+        let qm = registry::build_static_model(&weights, Bits::Int8, Bits::Int8, spec, &calib)?;
         self.metrics.static_calibrations.fetch_add(1, std::sync::atomic::Ordering::Relaxed);
         Ok(qm)
     }
@@ -856,7 +858,8 @@ impl NativeExecutor {
             .ok_or_else(|| anyhow!("empty batch dispatched"))?
             .req
             .scheme;
-        if let ActScheme::CrossQuantStatic { alpha, qmax } = scheme {
+        if let Some((spec, qmax)) = scheme.static_spec() {
+            let alpha = spec.alpha;
             ensure!(alpha.is_finite() && (0.0..=1.0).contains(&alpha), "bad alpha {alpha}");
             // the integer model quantizes on the Bits grid; the native
             // static path serves INT8 activations (qmax 127) only
@@ -864,7 +867,7 @@ impl NativeExecutor {
                 (qmax - 127.0).abs() < 0.5,
                 "native static path serves the INT8 grid (qmax 127), got {qmax}"
             );
-            let model = self.static_model_for(&batch.key.weight_set, alpha)?;
+            let model = self.static_model_for(&batch.key.weight_set, &spec)?;
             return batch
                 .requests
                 .iter()
@@ -894,8 +897,8 @@ impl EngineModels for NativeExecutor {
         self.model_for(weight_set)
     }
 
-    fn static_model(&mut self, weight_set: &str, alpha: f32) -> Result<&QuantizedModel> {
-        self.static_model_for(weight_set, alpha)
+    fn static_model(&mut self, weight_set: &str, spec: &StaticSpec) -> Result<&QuantizedModel> {
+        self.static_model_for(weight_set, spec)
     }
 }
 

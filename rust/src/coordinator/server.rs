@@ -5,8 +5,11 @@
 //! Protocol: one JSON object per line.
 //!
 //! request:  {"tokens": [1,2,3,...], "scheme": "crossquant"|"per-token"|
-//!            "crossquant-static"|"fp"|"remove-kernel", "alpha": 0.15,
-//!            "qmax": 127.0, "theta": 0.004, "weight_set": "w16"}
+//!            "crossquant-static"|"fp"|"remove-kernel"|"smoothquant"|
+//!            "awq"|"gptq"|"lorc", "alpha": 0.15, "qmax": 127.0,
+//!            "theta": 0.004, "rank": 8, "weight_set": "w16"}
+//!           (scheme names are the canonical `quant::registry` names,
+//!           shared with the CLI and the artifact scheme-ID field)
 //!           …with "max_new_tokens": N present, the tokens are a prompt
 //!           and the request is greedy generation instead of scoring;
 //!           adding "stream": true streams the decode as it happens
@@ -36,6 +39,7 @@ use anyhow::{anyhow, Result};
 
 use super::scheduler::{EvalCoordinator, EvalRequest, RequestKind};
 use super::ActScheme;
+use crate::quant::registry::SchemeId;
 use crate::util::Json;
 
 /// Default cap on concurrent client connections.
@@ -171,14 +175,26 @@ fn parse_request(req: &Json) -> Result<EvalRequest> {
     let alpha = req.get("alpha").and_then(|a| a.as_f64()).unwrap_or(0.15) as f32;
     let qmax = req.get("qmax").and_then(|a| a.as_f64()).unwrap_or(127.0) as f32;
     let theta = req.get("theta").and_then(|a| a.as_f64()).unwrap_or(0.5 / 127.0) as f32;
-    let scheme = match scheme_name {
-        "fp" => ActScheme::Fp,
-        "crossquant" => ActScheme::CrossQuant { alpha, qmax },
-        "crossquant-fused" => ActScheme::CrossQuantFused { alpha, qmax },
-        "crossquant-static" => ActScheme::CrossQuantStatic { alpha, qmax },
-        "per-token" => ActScheme::CrossQuant { alpha: 1.0, qmax },
-        "remove-kernel" => ActScheme::RemoveKernel { theta },
-        other => return Err(anyhow!("unknown scheme '{other}'")),
+    let rank = req.get("rank").and_then(|r| r.as_usize()).unwrap_or(8);
+    // one canonical name table (registry) shared by wire, CLI and artifact
+    let id: SchemeId = scheme_name.parse()?;
+    let scheme = match id {
+        SchemeId::Fp => ActScheme::Fp,
+        SchemeId::PerToken => ActScheme::CrossQuant { alpha: 1.0, qmax },
+        SchemeId::CrossQuant => ActScheme::CrossQuant { alpha, qmax },
+        SchemeId::CrossQuantFused => ActScheme::CrossQuantFused { alpha, qmax },
+        SchemeId::CrossQuantStatic => ActScheme::CrossQuantStatic { alpha, qmax },
+        SchemeId::RemoveKernel => ActScheme::RemoveKernel { theta },
+        SchemeId::SmoothQuant => ActScheme::SmoothQuant { alpha, qmax },
+        SchemeId::Awq => ActScheme::Awq { alpha, qmax },
+        SchemeId::Gptq => ActScheme::Gptq { alpha, qmax },
+        SchemeId::Lorc => ActScheme::Lorc { alpha, rank, qmax },
+        other => {
+            return Err(anyhow!(
+                "scheme '{}' is an offline eval method, not servable over the wire",
+                other.name()
+            ))
+        }
     };
     let weight_set =
         req.get("weight_set").and_then(|w| w.as_str()).unwrap_or("w16").to_string();

@@ -104,8 +104,9 @@ impl Default for ExpOpts {
 }
 
 /// Map each quantization-site index to the linear weights it feeds
-/// (calibration bookkeeping for SmoothQuant / AWQ).
-fn site_consumers(n_layers: usize, l_site: usize) -> Vec<String> {
+/// (calibration bookkeeping for SmoothQuant / AWQ; also used by the
+/// scheme registry's static pipeline).
+pub fn site_consumers(n_layers: usize, l_site: usize) -> Vec<String> {
     let l = l_site / 4;
     if l >= n_layers {
         return vec!["w_out".into()];
@@ -119,7 +120,7 @@ fn site_consumers(n_layers: usize, l_site: usize) -> Vec<String> {
 }
 
 /// LN-fed sites (the smoothable edges): ln1 (4l), ln2 (4l+2), lnf (4L).
-fn ln_site_name(n_layers: usize, site: usize) -> Option<String> {
+pub fn ln_site_name(n_layers: usize, site: usize) -> Option<String> {
     let l = site / 4;
     if l >= n_layers {
         return Some("lnf_g".into());

@@ -11,6 +11,7 @@ pub mod fig4;
 pub mod fig5;
 pub mod fig67;
 pub mod fig8;
+pub mod registry_sweep;
 pub mod tab1;
 pub mod tab2;
 pub mod tab3;

@@ -31,6 +31,7 @@ use crossquant::model::quantized::quantize_to_artifact;
 use crossquant::model::weights::{fp_weight_bytes, synthetic_weights, Weights};
 use crossquant::model::ModelConfig;
 use crossquant::quant::artifact::{Artifact, SectionKind};
+use crossquant::quant::registry::{self, SchemeId, StaticSpec};
 use crossquant::quant::Bits;
 use crossquant::runtime::{ArtifactStore, Runtime};
 use crossquant::util::Json;
@@ -39,10 +40,14 @@ const USAGE: &str = "usage: repro [GLOBAL FLAGS] <command> [ARGS]
 
 commands:
   info                         artifact + manifest inventory
-  quantize [--alpha A] [--bits 4|8] [--calib-sequences N] [--out PATH]
-                               calibrate static CrossQuant scales once and
-                               write a deployable .cqa artifact
-                               (default out: model.cqa)
+  quantize [--scheme S] [--alpha A] [--rank R] [--bits 4|8]
+           [--calib-sequences N] [--out PATH]
+                               run the registry pipeline (quantize →
+                               calibrate → fold) for one static scheme
+                               (crossquant-static, smoothquant, awq, gptq,
+                               lorc) and write a deployable .cqa artifact
+                               (default scheme: crossquant-static, out:
+                               model.cqa; --rank applies to lorc)
   inspect <artifact.cqa>       print a .cqa artifact's header, sections,
                                checksums and compression ratio
   analyze                      kernel proportions across all profiles
@@ -56,8 +61,12 @@ commands:
                                up to max-active-seqs slots)
         [--admission-queue N]  waiting sequences before rejection (default 256)
         [--max-connections N]  concurrent client cap (default 256)
+  bench-trend [--out PATH]     measure every served scheme (GOP/s, decode
+                               tok/s, NLL) and append the rows to the
+                               checked-in trend file
+                               (default out: BENCH_TREND.json)
   reproduce <fig1|fig4|fig5|fig6|fig7|fig8|fig9|tab1|tab2|tab3|tab4|tab5|
-             appendixA|weight-kernel|correlation|all> [--json PATH]
+             appendixA|weight-kernel|correlation|schemes|all> [--json PATH]
 
 global flags:
   --artifacts DIR    artifacts directory (default ./artifacts)
@@ -160,6 +169,7 @@ fn main() -> Result<()> {
         ),
         "serve-eval" => serve_eval(&args, args.num("requests", 32usize)?, args.num("alpha", 0.15f32)?),
         "serve" => serve(&args, &args.get_or("addr", "127.0.0.1:8471")),
+        "bench-trend" => bench_trend(&args),
         "reproduce" => {
             let id = args
                 .positional
@@ -209,11 +219,13 @@ fn weight_label(bits: Bits) -> String {
 }
 
 /// The deployment pipeline's first half: load FP weights (trained store
-/// or --synthetic), calibrate static CrossQuant scales on a deterministic
-/// corpus, fold ĉ^(1−α) into the codes once, and write the `.cqa`
+/// or --synthetic), run the registry's static pipeline (quantize →
+/// calibrate → fold) for the requested scheme, and write the `.cqa`
 /// artifact `repro serve --artifact` boots from.
 fn quantize(args: &Args, opts: &ExpOpts) -> Result<()> {
+    let scheme: SchemeId = args.get_or("scheme", "crossquant-static").parse()?;
     let alpha = args.num("alpha", 0.15f32)?;
+    let rank = args.num("rank", crossquant::exp::registry_sweep::DEFAULT_RANK)?;
     let bits = match args.num("bits", 8u8)? {
         4 => Bits::Int4,
         8 => Bits::Int8,
@@ -225,8 +237,9 @@ fn quantize(args: &Args, opts: &ExpOpts) -> Result<()> {
     let cfg = weights.config;
     let mut gen = CorpusGen::new(cfg.vocab, opts.seed ^ 0x5CA1E);
     let calib: Vec<Vec<u32>> = (0..n_calib).map(|_| gen.sequence(cfg.seq_len)).collect();
+    let spec = StaticSpec::new(scheme, alpha, if scheme == SchemeId::Lorc { rank } else { 0 });
     let t0 = std::time::Instant::now();
-    let report = quantize_to_artifact(&weights, bits, Bits::Int8, alpha, &calib, &out)?;
+    let report = quantize_to_artifact(&weights, bits, Bits::Int8, &spec, &calib, &out)?;
     println!(
         "wrote {} ({} sections, {} bytes) in {:.2?}",
         out.display(),
@@ -235,7 +248,8 @@ fn quantize(args: &Args, opts: &ExpOpts) -> Result<()> {
         t0.elapsed()
     );
     println!(
-        "  {} weights, α = {}, calibrated on {} sequences",
+        "  scheme {}, {} weights, α = {}, calibrated on {} sequences",
+        scheme.name(),
         weight_label(report.weight_bits),
         report.alpha,
         report.calib_sequences
@@ -267,8 +281,11 @@ fn inspect(path: &str) -> Result<()> {
         "model           : vocab {}  d_model {}  layers {}  heads {}  d_ff {}  n_ctx {}",
         c.vocab, c.d_model, c.n_layers, c.n_heads, c.d_ff, c.seq_len
     );
+    let scheme = SchemeId::from_artifact_code(art.scheme)
+        .map(|s| s.name().to_string())
+        .unwrap_or_else(|_| format!("unknown (code {})", art.scheme));
     println!(
-        "quantization    : {} weights, {} activations, α = {}",
+        "quantization    : scheme {scheme}, {} weights, {} activations, α = {}",
         weight_label(art.weight_bits),
         art.act_bits,
         art.alpha
@@ -309,15 +326,22 @@ fn analyze(args: &Args, opts: &ExpOpts) -> Result<()> {
 }
 
 fn parse_method(m: &str, alpha: f32) -> Result<Method> {
-    Ok(match m {
-        "fp16" => Method::Fp16,
-        "per-token" => Method::PerToken,
-        "smoothquant" => Method::SmoothQuant,
-        "crossquant" => Method::CrossQuant { alpha },
-        "awq" => Method::Awq,
-        "cq+awq" => Method::CrossQuantAwq { alpha },
-        "omniquant" => Method::OmniQuant,
-        _ => bail!("unknown method {m}"),
+    // one name table for the whole crate: the registry parses, and this
+    // maps the offline-eval subset onto the tables' Method rows
+    let id: SchemeId = m.parse()?;
+    Ok(match id {
+        SchemeId::Fp => Method::Fp16,
+        SchemeId::PerToken => Method::PerToken,
+        SchemeId::SmoothQuant => Method::SmoothQuant,
+        SchemeId::CrossQuant => Method::CrossQuant { alpha },
+        SchemeId::Awq => Method::Awq,
+        SchemeId::CrossQuantAwq => Method::CrossQuantAwq { alpha },
+        SchemeId::OmniQuant => Method::OmniQuant,
+        other => bail!(
+            "scheme '{}' is not an offline eval method; see `repro reproduce schemes` for \
+             the registry sweep over the served schemes",
+            other.name()
+        ),
     })
 }
 
@@ -431,7 +455,9 @@ fn serve(args: &Args, addr: &str) -> Result<()> {
     let dir = artifacts_dir(args).unwrap_or_else(|| PathBuf::from("artifacts"));
     // the last tuple element is the α the printed request examples use —
     // an artifact serves only its own α, so the examples interpolate it
-    let (store, cfg, sets, mounts, example_alpha) = if let Some(apath) = args.get("artifact") {
+    let (store, cfg, sets, mounts, example_alpha, example_scheme) = if let Some(apath) =
+        args.get("artifact")
+    {
         let apath = PathBuf::from(apath);
         // this open feeds the engine config + banner; the executor thread
         // re-opens and retains its own mapping at mount (a second
@@ -439,29 +465,31 @@ fn serve(args: &Args, addr: &str) -> Result<()> {
         // surface stays a plain path and mount errors stay request-visible
         // through the executor's MountState)
         let art = Artifact::open(&apath)?;
+        let scheme = SchemeId::from_artifact_code(art.scheme)?;
         println!(
-            "mounted artifact {} (α = {}, {} weights, {} sections, {} bytes)",
+            "mounted artifact {} (scheme {}, α = {}, {} weights, {} sections, {} bytes)",
             apath.display(),
+            scheme.name(),
             art.alpha,
             weight_label(art.weight_bits),
             art.sections().len(),
             art.file_bytes()
         );
         let mounts = vec![("w16".to_string(), apath)];
-        (ArtifactStore { dir }, art.config, Vec::new(), mounts, art.alpha)
+        (ArtifactStore { dir }, art.config, Vec::new(), mounts, art.alpha, scheme.name())
     } else if args.flag("synthetic") {
         // random weights with no artifacts on disk: the native executor
         // handles every scheme, so the full protocol is demoable anywhere
         let weights = synthetic_weights(ModelConfig::default_build(), args.num("seed", 0u64)?);
         let cfg = weights.config;
-        (ArtifactStore { dir }, cfg, weight_variants(&weights)?, Vec::new(), 0.15)
+        (ArtifactStore { dir }, cfg, weight_variants(&weights)?, Vec::new(), 0.15, "crossquant-static")
     } else {
         let store = ArtifactStore::discover(artifacts_dir(args).as_deref())?;
         store.validate()?;
         let weights = store.load_weights()?;
         let cfg = weights.config;
         let sets = weight_variants(&weights)?;
-        (store, cfg, sets, Vec::new(), 0.15)
+        (store, cfg, sets, Vec::new(), 0.15, "crossquant-static")
     };
 
     let defaults = EngineConfig::default();
@@ -485,7 +513,7 @@ fn serve(args: &Args, addr: &str) -> Result<()> {
     let listener = std::net::TcpListener::bind(addr)?;
     println!("serving quantized-LM evaluation + generation on {addr}");
     if artifact_only {
-        println!("  artifact-only: \"w16\" serves scheme \"crossquant-static\" (mmap, zero-copy)");
+        println!("  artifact-only: \"w16\" serves scheme \"{example_scheme}\" (mmap, zero-copy)");
     } else {
         println!("  weight sets: w16, w8, w4g128 — protocol: one JSON per line");
     }
@@ -493,15 +521,105 @@ fn serve(args: &Args, addr: &str) -> Result<()> {
         "  continuous batching: {max_active} max active seqs, {max_connections} max connections"
     );
     println!(
-        "  score:    echo '{{\"tokens\": [1,2,3,4,5], \"scheme\": \"crossquant-static\", \
+        "  score:    echo '{{\"tokens\": [1,2,3,4,5], \"scheme\": \"{example_scheme}\", \
          \"alpha\": {example_alpha}}}' | nc {addr}"
     );
     println!(
-        "  generate: echo '{{\"tokens\": [1,2,3,4,5], \"scheme\": \"crossquant-static\", \
+        "  generate: echo '{{\"tokens\": [1,2,3,4,5], \"scheme\": \"{example_scheme}\", \
          \"alpha\": {example_alpha}, \"max_new_tokens\": 8}}' | nc {addr}"
     );
     println!("  stream:   add \"stream\": true for one {{\"token\": ...}} line per decoded token");
     EvalServer::new(coordinator).with_max_connections(max_connections).serve(listener)
+}
+
+/// Measure every served scheme on a small fixed synthetic model —
+/// scoring throughput (GOP/s over the checkpoint's linear work),
+/// KV-cached greedy decode rate (tok/s), and mean NLL — and append the
+/// rows to the checked-in trend file, so the CI history shows when a
+/// scheme's speed or quality moves.
+fn bench_trend(args: &Args) -> Result<()> {
+    use crossquant::exp::registry_sweep::{served_schemes, DEFAULT_RANK};
+    use crossquant::model::{ActSite, IdentitySite, NativeModel, QuantSite};
+    use crossquant::quant::crossquant::CrossQuant;
+
+    let out = PathBuf::from(args.get_or("out", "BENCH_TREND.json"));
+    let cfg = ModelConfig {
+        vocab: 128,
+        d_model: 32,
+        n_layers: 2,
+        n_heads: 2,
+        d_ff: 64,
+        seq_len: 48,
+        eval_batch: 2,
+    };
+    let alpha = 0.15f32;
+    let weights = synthetic_weights(cfg, 0xBE7C);
+    let native = NativeModel::new(weights.clone());
+    let mut gen = CorpusGen::new(cfg.vocab, 0x5CA1E);
+    let calib: Vec<Vec<u32>> = (0..4).map(|_| gen.sequence(cfg.seq_len)).collect();
+    let probe: Vec<u32> = (0..cfg.seq_len).map(|i| ((i * 7) % cfg.vocab) as u32).collect();
+    let prompt = &probe[..8];
+    let new_tokens = 24usize;
+    // per-token linear work ≈ one multiply-add through every weight
+    let ops_per_token = 2.0 * weights.flat.len() as f64;
+
+    let mut rows: Vec<Json> = match std::fs::read_to_string(&out) {
+        Ok(s) => match Json::parse(&s)? {
+            Json::Arr(v) => v,
+            _ => bail!("{} is not a JSON array of trend rows", out.display()),
+        },
+        Err(_) => Vec::new(),
+    };
+    let run_id = rows.len();
+
+    let measure_native = |site: &mut dyn ActSite| -> Result<(f64, f64, f64)> {
+        let t0 = std::time::Instant::now();
+        let nll_v = native.forward_nll(&probe, site)?;
+        let gops = ops_per_token * probe.len() as f64 / t0.elapsed().as_secs_f64().max(1e-9) / 1e9;
+        let nll = nll_v.iter().map(|&v| v as f64).sum::<f64>() / nll_v.len().max(1) as f64;
+        let t1 = std::time::Instant::now();
+        let toks = native.generate_greedy(prompt, new_tokens, site)?;
+        let tok_s = toks.len() as f64 / t1.elapsed().as_secs_f64().max(1e-9);
+        Ok((nll, gops, tok_s))
+    };
+
+    println!("{:<20} {:>10} {:>14} {:>10}", "scheme", "GOP/s", "decode tok/s", "NLL");
+    for id in served_schemes() {
+        let (nll, gops, tok_s) = match id {
+            SchemeId::Fp => measure_native(&mut IdentitySite)?,
+            SchemeId::PerToken | SchemeId::CrossQuant => {
+                let eff = registry::effective_alpha(id, alpha);
+                measure_native(&mut QuantSite::new(CrossQuant::new(eff, Bits::Int8)))?
+            }
+            _ => {
+                let rank = if id == SchemeId::Lorc { DEFAULT_RANK } else { 0 };
+                let spec = StaticSpec::new(id, alpha, rank);
+                let qm =
+                    registry::build_static_model(&weights, Bits::Int8, Bits::Int8, &spec, &calib)?;
+                let t0 = std::time::Instant::now();
+                let nll_v = qm.forward_nll(&probe)?;
+                let gops = ops_per_token * probe.len() as f64
+                    / t0.elapsed().as_secs_f64().max(1e-9)
+                    / 1e9;
+                let nll = nll_v.iter().map(|&v| v as f64).sum::<f64>() / nll_v.len().max(1) as f64;
+                let t1 = std::time::Instant::now();
+                let toks = qm.generate_greedy(prompt, new_tokens)?;
+                let tok_s = toks.len() as f64 / t1.elapsed().as_secs_f64().max(1e-9);
+                (nll, gops, tok_s)
+            }
+        };
+        println!("{:<20} {gops:>10.2} {tok_s:>14.1} {nll:>10.3}", id.name());
+        rows.push(Json::obj(vec![
+            ("run", Json::num(run_id as f64)),
+            ("scheme", Json::str(id.name())),
+            ("gops", Json::num(gops)),
+            ("decode_tok_s", Json::num(tok_s)),
+            ("nll", Json::num(nll)),
+        ]));
+    }
+    std::fs::write(&out, Json::Arr(rows).render_pretty())?;
+    println!("appended run {run_id} to {}", out.display());
+    Ok(())
 }
 
 fn reproduce(args: &Args, opts: &ExpOpts, id: &str, json: Option<&Path>) -> Result<()> {
@@ -510,7 +628,7 @@ fn reproduce(args: &Args, opts: &ExpOpts, id: &str, json: Option<&Path>) -> Resu
     let ids: Vec<&str> = if id == "all" {
         vec![
             "fig1", "fig4", "fig5", "fig6", "fig7", "fig8", "fig9", "tab1", "tab2", "tab3",
-            "tab4", "tab5", "appendixA", "weight-kernel", "correlation",
+            "tab4", "tab5", "appendixA", "weight-kernel", "correlation", "schemes",
         ]
     } else {
         vec![id]
@@ -548,6 +666,7 @@ fn reproduce(args: &Args, opts: &ExpOpts, id: &str, json: Option<&Path>) -> Resu
             "tab4" => tables.push(exp::tab4::run(&base, opts)?),
             "appendixA" | "appa" => tables.push(exp::appendix_a::run(&base, opts)?),
             "correlation" => tables.push(exp::correlation::run(&base, opts)?),
+            "schemes" => tables.push(exp::registry_sweep::run(&base, opts)?),
             "weight-kernel" | "appb" => tables.push(exp::weight_kernel::run(&base, opts)?),
             "tab5" => tables.extend(exp::tab3::run(
                 &base,

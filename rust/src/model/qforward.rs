@@ -70,6 +70,10 @@ pub struct QuantizedModel {
     /// Per-site calibration statistics retained by `calibrate_static` (or
     /// rebuilt from an artifact) so `write_artifact` can ship them.
     calib_stats: Option<Vec<ColStats>>,
+    /// Registry scheme ID this model was built as (see
+    /// `quant::registry::SchemeId::artifact_code`); 0 = plain
+    /// crossquant-static. Stamped into the `.cqa` header on write.
+    pub scheme_code: u16,
 }
 
 impl QuantizedModel {
@@ -126,6 +130,7 @@ impl QuantizedModel {
             lnf_b: weights.get("lnf_b")?,
             w_out: q("w_out")?,
             calib_stats: None,
+            scheme_code: 0,
         })
     }
 
@@ -323,6 +328,26 @@ impl QuantizedModel {
         Ok(())
     }
 
+    /// Mutable access to every quantized linear together with its
+    /// activation-site index (wq/wk/wv share 4l, wo 4l+1, w1 4l+2,
+    /// w2 4l+3, the head 4L) — the hook the registry's GPTQ and LoRC
+    /// build passes iterate.
+    pub(crate) fn linear_slots_mut(&mut self) -> Vec<(String, usize, &mut QuantizedLinear)> {
+        let mut slots = Vec::with_capacity(6 * self.layers.len() + 1);
+        let n_layers = self.layers.len();
+        for (l, layer) in self.layers.iter_mut().enumerate() {
+            let base = 4 * l;
+            slots.push((format!("layer{l}.wq"), base, &mut layer.wq));
+            slots.push((format!("layer{l}.wk"), base, &mut layer.wk));
+            slots.push((format!("layer{l}.wv"), base, &mut layer.wv));
+            slots.push((format!("layer{l}.wo"), base + 1, &mut layer.wo));
+            slots.push((format!("layer{l}.w1"), base + 2, &mut layer.w1));
+            slots.push((format!("layer{l}.w2"), base + 3, &mut layer.w2));
+        }
+        slots.push(("w_out".to_string(), 4 * n_layers, &mut self.w_out));
+        slots
+    }
+
     /// The (name, layer) pairs of every quantized linear, in artifact
     /// section order — one definition, so the writer can never drift
     /// from the layer structure.
@@ -363,6 +388,7 @@ impl QuantizedModel {
             .as_ref()
             .ok_or_else(|| anyhow!("no calibration statistics retained"))?;
         let mut w = ArtifactWriter::new(self.config, alpha, self.weight_bits, self.act_bits);
+        w.set_scheme(self.scheme_code);
         w.add_matrix("tok_emb", &self.tok_emb)?;
         w.add_matrix("pos_emb", &self.pos_emb)?;
         for (l, layer) in self.layers.iter().enumerate() {
@@ -380,6 +406,12 @@ impl QuantizedModel {
             w.add_panels(&format!("{name}.panels"), panels)?;
             w.add_f32(&format!("{name}.scale"), 1, scale.len(), scale)?;
             w.add_f32(&format!("{name}.colpow"), 1, col_pow.len(), col_pow)?;
+            // LoRC correction pair rides along in fixed position so a
+            // load → save round-trip reproduces the bytes exactly
+            if let Some((u, v)) = lin.lorc() {
+                w.add_matrix(&format!("{name}.lorc_u"), u)?;
+                w.add_matrix(&format!("{name}.lorc_v"), v)?;
+            }
         }
         for (i, s) in stats.iter().enumerate() {
             w.add_f32(&format!("site{i}.colmax"), 1, s.col_max().len(), s.col_max())?;
@@ -428,14 +460,29 @@ impl QuantizedModel {
                 panels.k,
                 panels.n
             );
-            QuantizedLinear::from_static_parts(
+            let mut q = QuantizedLinear::from_static_parts(
                 art.weight_bits,
                 alpha,
                 art.f32_vec(&format!("{name}.colpow"))?,
                 panels,
                 art.f32_vec(&format!("{name}.scale"))?,
             )
-            .with_context(|| format!("rebuilding linear '{name}'"))
+            .with_context(|| format!("rebuilding linear '{name}'"))?;
+            if art.section(&format!("{name}.lorc_u")).is_ok() {
+                let u = art.matrix(&format!("{name}.lorc_u"))?;
+                let v = art.matrix(&format!("{name}.lorc_v"))?;
+                anyhow::ensure!(
+                    u.rows == in_dim && v.cols == out_dim && u.cols == v.rows,
+                    "section '{name}.lorc_u/v': rank-r pair {}x{} · {}x{} does not \
+                     correct a {in_dim}x{out_dim} linear",
+                    u.rows,
+                    u.cols,
+                    v.rows,
+                    v.cols
+                );
+                q.set_lorc(u, v);
+            }
+            Ok(q)
         };
         let d = cfg.d_model;
         let layers = (0..cfg.n_layers)
@@ -470,6 +517,7 @@ impl QuantizedModel {
             lnf_b: mat("lnf_b", 1, d)?,
             w_out: lin("w_out", d, cfg.vocab)?,
             calib_stats: Some(calib_stats),
+            scheme_code: art.scheme,
         })
     }
 

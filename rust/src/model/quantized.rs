@@ -20,8 +20,8 @@ use std::path::Path;
 
 use anyhow::Result;
 
-use super::qforward::{QuantPath, QuantizedModel};
 use super::weights::Weights;
+use crate::quant::registry::{self, StaticSpec};
 use crate::quant::{
     crossquant::CrossQuant, per_channel::GroupWise, per_channel::PerChannel, ActQuantizer, Bits,
 };
@@ -95,26 +95,26 @@ impl ArtifactBuildReport {
     }
 }
 
-/// The calibrate-once deployment pipeline: build the integer model from
-/// FP weights, calibrate static CrossQuant scales on `calib` (folding
-/// ĉ^(1−α) into the codes once), and persist the `.cqa` artifact at
-/// `path`. Serving then boots from the artifact alone —
+/// The calibrate-once deployment pipeline: build the calibrated integer
+/// model for any registered static scheme
+/// ([`registry::build_static_model`] — plain crossquant-static,
+/// smoothquant/awq folds, gptq rounding, lorc correction) and persist
+/// the `.cqa` artifact at `path`, scheme ID stamped in the header.
+/// Serving then boots from the artifact alone —
 /// `QuantizedModel::load_artifact` — without FP weights or calibration.
 pub fn quantize_to_artifact(
     weights: &Weights,
     weight_bits: Bits,
     act_bits: Bits,
-    alpha: f32,
+    spec: &StaticSpec,
     calib: &[Vec<u32>],
     path: &Path,
 ) -> Result<ArtifactBuildReport> {
-    let mut qm =
-        QuantizedModel::new(weights, weight_bits, act_bits, QuantPath::CrossQuant { alpha })?;
-    qm.calibrate_static(alpha, calib)?;
+    let qm = registry::build_static_model(weights, weight_bits, act_bits, spec, calib)?;
     let sections = qm.write_artifact(path)?;
     let artifact_bytes = std::fs::metadata(path)?.len() as usize;
     Ok(ArtifactBuildReport {
-        alpha,
+        alpha: registry::effective_alpha(spec.id, spec.alpha),
         weight_bits,
         calib_sequences: calib.len(),
         fp_bytes: weights.flat.len() * 4,

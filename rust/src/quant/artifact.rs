@@ -13,19 +13,21 @@
 //! ([`PackedInt8::from_mapped`]): the serving microkernel streams the
 //! mapped bytes with zero copy.
 //!
-//! ## Byte layout (version 1)
+//! ## Byte layout (version 2)
 //!
 //! ```text
 //! offset  size  field
 //! ------  ----  -----------------------------------------------------
 //!      0     4  magic  b"CQA1"
-//!      4     4  format version (u32 LE) = 1
+//!      4     4  format version (u32 LE) = 2 (1 still readable)
 //!      8    28  ModelConfig: vocab, d_model, n_layers, n_heads, d_ff,
 //!               seq_len, eval_batch (7 × u32 LE)
 //!     36     4  α (f32 LE) — the calibration exponent of every fold
 //!     40     1  weight bit-width (4 = INT4, 8 = INT8)
 //!     41     1  activation bit-width
-//!     42     2  reserved (zero)
+//!     42     2  quantizer-scheme ID (u16 LE, see
+//!               `registry::SchemeId::artifact_code`; version-1 files
+//!               wrote zeros here, which decodes to crossquant-static)
 //!     44     4  section count N (u32 LE)
 //!     48     8  total file length (u64 LE) — truncation detector
 //!     56     4  CRC-32 of the section table
@@ -59,8 +61,11 @@ use crate::util::{crc32, Mmap};
 
 /// File magic: "CQA" + format generation.
 pub const MAGIC: [u8; 4] = *b"CQA1";
-/// Format version this build reads and writes.
-pub const VERSION: u32 = 1;
+/// Format version this build writes. Version 1 (identical layout, the
+/// scheme-ID bytes reserved as zero) is still readable.
+pub const VERSION: u32 = 2;
+/// Oldest format version this build still reads.
+pub const MIN_VERSION: u32 = 1;
 /// Every payload section starts on this boundary (cache-line / SIMD
 /// friendly, and what `PackedInt8::from_mapped` is handed).
 pub const ALIGN: usize = 64;
@@ -174,12 +179,19 @@ pub struct ArtifactWriter {
     alpha: f32,
     weight_bits: Bits,
     act_bits: Bits,
+    scheme: u16,
     sections: Vec<(Section, Vec<u8>)>,
 }
 
 impl ArtifactWriter {
     pub fn new(config: ModelConfig, alpha: f32, weight_bits: Bits, act_bits: Bits) -> Self {
-        ArtifactWriter { config, alpha, weight_bits, act_bits, sections: Vec::new() }
+        ArtifactWriter { config, alpha, weight_bits, act_bits, scheme: 0, sections: Vec::new() }
+    }
+
+    /// Stamp the quantizer-scheme ID into the header (default 0 =
+    /// crossquant-static, the only scheme version-1 files could hold).
+    pub fn set_scheme(&mut self, scheme: u16) {
+        self.scheme = scheme;
     }
 
     fn push(
@@ -289,7 +301,7 @@ impl ArtifactWriter {
         head.extend_from_slice(&self.alpha.to_le_bytes());
         head.push(bits_code(self.weight_bits)?);
         head.push(bits_code(self.act_bits)?);
-        head.extend_from_slice(&[0u8; 2]);
+        head.extend_from_slice(&self.scheme.to_le_bytes());
         head.extend_from_slice(&(n as u32).to_le_bytes());
         head.extend_from_slice(&(file_len as u64).to_le_bytes());
         head.extend_from_slice(&crc32(&table).to_le_bytes());
@@ -338,6 +350,10 @@ pub struct Artifact {
     pub alpha: f32,
     pub weight_bits: Bits,
     pub act_bits: Bits,
+    /// Quantizer-scheme ID (`registry::SchemeId::artifact_code`). Always
+    /// 0 (crossquant-static) for version-1 files, whose reserved bytes
+    /// were written as zero.
+    pub scheme: u16,
     sections: Vec<Section>,
 }
 
@@ -371,8 +387,9 @@ impl Artifact {
         );
         let version = u32_le(b, 4);
         ensure!(
-            version == VERSION,
-            "unsupported artifact version {version} (this build reads version {VERSION})"
+            (MIN_VERSION..=VERSION).contains(&version),
+            "unsupported artifact version {version} \
+             (this build reads versions {MIN_VERSION}..={VERSION})"
         );
         ensure!(
             crc32(&b[..HEADER_BYTES - 4]) == u32_le(b, HEADER_BYTES - 4),
@@ -391,6 +408,10 @@ impl Artifact {
         let alpha = f32::from_le_bytes([b[36], b[37], b[38], b[39]]);
         let weight_bits = bits_from_code(b[40]).context("weight bit-width field")?;
         let act_bits = bits_from_code(b[41]).context("activation bit-width field")?;
+        // version-1 files reserved these bytes as zero — which is exactly
+        // scheme 0 (crossquant-static), so one unconditional read serves
+        // both versions
+        let scheme = u16::from_le_bytes([b[42], b[43]]);
         let n = u32_le(b, 44) as usize;
         let file_len = u64_le(b, 48) as usize;
         ensure!(
@@ -457,7 +478,7 @@ impl Artifact {
             );
             sections.push(Section { name, kind, rows, cols, offset, len, crc });
         }
-        Ok(Artifact { map, version, config, alpha, weight_bits, act_bits, sections })
+        Ok(Artifact { map, version, config, alpha, weight_bits, act_bits, scheme, sections })
     }
 
     /// All sections in file order.
@@ -568,6 +589,32 @@ mod tests {
         for s in art.sections() {
             assert_eq!(s.offset % ALIGN, 0, "section {}", s.name);
         }
+    }
+
+    #[test]
+    fn scheme_id_round_trips_through_the_header() {
+        let mut w = sample();
+        w.set_scheme(2);
+        let art = Artifact::from_bytes(w.to_bytes().unwrap()).unwrap();
+        assert_eq!(art.scheme, 2);
+        // default writer stamps scheme 0
+        let art = Artifact::from_bytes(sample().to_bytes().unwrap()).unwrap();
+        assert_eq!(art.scheme, 0);
+    }
+
+    #[test]
+    fn version_1_files_still_load_with_scheme_zero() {
+        // forge a version-1 image: same layout, version stamp 1, the
+        // scheme bytes reserved as zero, header CRC re-stamped
+        let mut v1 = sample().to_bytes().unwrap();
+        v1[4..8].copy_from_slice(&1u32.to_le_bytes());
+        v1[42..44].copy_from_slice(&[0u8; 2]);
+        let c = crc32(&v1[..HEADER_BYTES - 4]);
+        v1[HEADER_BYTES - 4..HEADER_BYTES].copy_from_slice(&c.to_le_bytes());
+        let art = Artifact::from_bytes(v1).unwrap();
+        assert_eq!(art.version, 1);
+        assert_eq!(art.scheme, 0);
+        assert_eq!(art.f32_vec("scales").unwrap(), vec![1.0, 2.5, -0.5]);
     }
 
     #[test]

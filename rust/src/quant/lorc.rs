@@ -1,0 +1,131 @@
+//! LoRC — low-rank compensation of the weight-quantization residual
+//! (ZeroQuant-V2, Yao et al., 2023).
+//!
+//! After rounding a weight to the integer grid, the residual
+//! E = W − dequant(Q) is approximated by a rank-r factorization U·V and
+//! added back *in fp* after the int8 GEMM: y = gemm_int8(x) + (x·U)·V.
+//! Two skinny fp matmuls (I×r and r×O) recover most of the rounding error
+//! at a cost that vanishes for r ≪ min(I, O) — the mechanism that makes
+//! INT4 weights usable.
+//!
+//! The factorization is a deterministic randomized subspace iteration
+//! (seeded [`SplitMix64`], Gram-Schmidt orthonormalization): no LAPACK in
+//! the build environment, and determinism is required for the `.cqa`
+//! resave byte-identity guarantee.
+
+use crate::tensor::{Matrix, SplitMix64};
+
+/// Rank-r factorization of `e` (I × O): returns `(U: I × r, V: r × O)`
+/// with U·V = Q·Qᵀ·e for an orthonormal Q spanning an approximate top-r
+/// column subspace of `e`. Since U·V is an orthogonal projection of `e`,
+/// ‖e − U·V‖_F ≤ ‖e‖_F always, with equality only when the subspace
+/// misses `e` entirely. `rank` is clamped to the matrix dimensions.
+/// Deterministic in `seed`.
+pub fn factor(e: &Matrix, rank: usize, seed: u64) -> (Matrix, Matrix) {
+    let r = rank.clamp(1, e.rows.min(e.cols).max(1));
+    if e.is_empty() {
+        return (Matrix::zeros(e.rows, r), Matrix::zeros(r, e.cols));
+    }
+    let mut rng = SplitMix64::new(seed);
+    let g = Matrix::randn(e.cols, r, 1.0, &mut rng);
+    let mut y = e.matmul(&g); // I × r
+    let et = e.transpose();
+    // two rounds of subspace iteration sharpen the captured spectrum
+    for _ in 0..2 {
+        let q = orthonormal_cols(&y);
+        let z = orthonormal_cols(&et.matmul(&q)); // O × r
+        y = e.matmul(&z);
+    }
+    let u = orthonormal_cols(&y); // I × r
+    let v = u.transpose().matmul(e); // r × O
+    (u, v)
+}
+
+/// Gram-Schmidt orthonormalization of the columns of `m` (modified GS,
+/// f64 accumulation). Numerically dead columns become zero columns, which
+/// keeps U·V a (partial) orthogonal projection.
+fn orthonormal_cols(m: &Matrix) -> Matrix {
+    let mut t = m.transpose(); // rows of t = columns of m
+    let cols = t.cols;
+    for i in 0..t.rows {
+        for p in 0..i {
+            let dot: f64 = (0..cols)
+                .map(|k| t.get(i, k) as f64 * t.get(p, k) as f64)
+                .sum();
+            if dot != 0.0 {
+                for k in 0..cols {
+                    let v = t.get(i, k) - (dot * t.get(p, k) as f64) as f32;
+                    t.set(i, k, v);
+                }
+            }
+        }
+        let norm: f64 = (0..cols).map(|k| (t.get(i, k) as f64).powi(2)).sum::<f64>().sqrt();
+        if norm > 1e-12 {
+            for k in 0..cols {
+                let v = (t.get(i, k) as f64 / norm) as f32;
+                t.set(i, k, v);
+            }
+        } else {
+            for k in 0..cols {
+                t.set(i, k, 0.0);
+            }
+        }
+    }
+    t.transpose()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn factor_reduces_residual_norm() {
+        let mut rng = SplitMix64::new(3);
+        let e = Matrix::randn(24, 16, 1.0, &mut rng);
+        let (u, v) = factor(&e, 4, 42);
+        assert_eq!((u.rows, u.cols), (24, 4));
+        assert_eq!((v.rows, v.cols), (4, 16));
+        let res = e.distance(&u.matmul(&v));
+        assert!(res < e.frobenius(), "res={res} norm={}", e.frobenius());
+    }
+
+    #[test]
+    fn full_rank_is_near_exact() {
+        let mut rng = SplitMix64::new(9);
+        let e = Matrix::randn(10, 6, 1.0, &mut rng);
+        let (u, v) = factor(&e, 6, 1);
+        let rel = e.distance(&u.matmul(&v)) / e.frobenius();
+        assert!(rel < 1e-3, "rel={rel}");
+    }
+
+    #[test]
+    fn low_rank_structure_is_recovered() {
+        // a genuinely rank-2 residual is captured almost exactly at r = 2
+        let mut rng = SplitMix64::new(17);
+        let a = Matrix::randn(20, 2, 1.0, &mut rng);
+        let b = Matrix::randn(2, 12, 1.0, &mut rng);
+        let e = a.matmul(&b);
+        let (u, v) = factor(&e, 2, 7);
+        let rel = e.distance(&u.matmul(&v)) / e.frobenius();
+        assert!(rel < 1e-3, "rel={rel}");
+    }
+
+    #[test]
+    fn deterministic_in_seed() {
+        let mut rng = SplitMix64::new(5);
+        let e = Matrix::randn(12, 8, 1.0, &mut rng);
+        let (u1, v1) = factor(&e, 3, 99);
+        let (u2, v2) = factor(&e, 3, 99);
+        assert_eq!(u1.data, u2.data);
+        assert_eq!(v1.data, v2.data);
+    }
+
+    #[test]
+    fn rank_is_clamped_to_dims() {
+        let mut rng = SplitMix64::new(6);
+        let e = Matrix::randn(4, 3, 1.0, &mut rng);
+        let (u, v) = factor(&e, 64, 2);
+        assert_eq!(u.cols, 3);
+        assert_eq!(v.rows, 3);
+    }
+}

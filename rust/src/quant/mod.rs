@@ -17,16 +17,26 @@
 //! - [`qlinear`]      — true-integer linear layers over [`gemm`]
 //! - [`artifact`]     — `.cqa` deployable quantized-model artifacts
 //!                      (calibrate once, ship int8, serve via mmap)
+//! - [`gptq`]         — GPTQ-style error-minimising weight rounding (OBS)
+//! - [`lorc`]         — ZeroQuant-V2-style low-rank correction of the
+//!                      weight-quantization residual
+//! - [`registry`]     — the unified scheme registry: canonical names,
+//!                      artifact scheme IDs, and the one static pipeline
+//!                      (quantize → calibrate → fold → serve) every scheme
+//!                      is built through
 
 pub mod artifact;
 pub mod awq;
 pub mod clipping;
 pub mod crossquant;
 pub mod gemm;
+pub mod gptq;
+pub mod lorc;
 pub mod pack;
 pub mod qlinear;
 pub mod per_channel;
 pub mod per_token;
+pub mod registry;
 pub mod remove_kernel;
 pub mod smoothquant;
 

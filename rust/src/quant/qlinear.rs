@@ -77,6 +77,10 @@ pub struct QuantizedLinear {
     w_fp: Matrix,
     /// Present iff `ScaleMode::Static` is installed.
     static_fold: Option<StaticFold>,
+    /// LoRC rank-r correction (U: I×r, V: r×O) of the weight-quantization
+    /// residual, added in fp after the int8 GEMM (see
+    /// [`crate::quant::lorc`]). `None` for every non-LoRC scheme.
+    lorc: Option<(Matrix, Matrix)>,
 }
 
 /// Integer activation codes + their factored scales.
@@ -122,6 +126,7 @@ impl QuantizedLinear {
             w_scale,
             w_fp: w.clone(),
             static_fold: None,
+            lorc: None,
         }
     }
 
@@ -171,7 +176,42 @@ impl QuantizedLinear {
             w_scale: Vec::new(),
             w_fp: Matrix::zeros(0, 0),
             static_fold: Some(StaticFold { alpha, col_pow, panels, scale }),
+            lorc: None,
         })
+    }
+
+    /// Install a LoRC correction pair (U: I×r, V: r×O); applied by
+    /// [`QuantizedLinear::forward_crossquant_static`] after the int8 GEMM.
+    pub(crate) fn set_lorc(&mut self, u: Matrix, v: Matrix) {
+        assert_eq!(u.rows, self.in_dim, "LoRC U rows must match in_dim");
+        assert_eq!(v.cols, self.out_dim, "LoRC V cols must match out_dim");
+        assert_eq!(u.cols, v.rows, "LoRC U/V rank mismatch");
+        self.lorc = Some((u, v));
+    }
+
+    /// The installed LoRC correction, if any (artifact serialization).
+    pub(crate) fn lorc(&self) -> Option<&(Matrix, Matrix)> {
+        self.lorc.as_ref()
+    }
+
+    /// The FP weight (I × O) — available only on builder-constructed
+    /// layers, used by the registry's GPTQ/LoRC build passes.
+    pub(crate) fn fp_weight(&self) -> &Matrix {
+        assert!(self.has_fp(), "artifact-loaded layer: the FP weight was never shipped");
+        &self.w_fp
+    }
+
+    /// Replace the static fold's weight codes in place (row-major I × O),
+    /// keeping the fold's grid (`scale`) and activation factors — the hook
+    /// GPTQ re-rounding rides: same panels format, same serving kernel,
+    /// different integers.
+    pub(crate) fn set_static_codes(&mut self, codes: &[i8]) {
+        let fold = self
+            .static_fold
+            .as_mut()
+            .expect("set_static_codes requires an installed static fold");
+        assert_eq!(codes.len(), self.in_dim * self.out_dim, "code buffer shape mismatch");
+        fold.panels = PackedInt8::from_row_major(codes, self.in_dim, self.out_dim);
     }
 
     /// The installed static fold, exported for artifact serialization:
@@ -331,7 +371,17 @@ impl QuantizedLinear {
         let row_scale = crossquant::row_pow_scales(&x.row_abs_max(), fold.alpha, qmax);
         let codes = Self::cross_codes(x, &row_scale, &fold.col_pow, qmax);
         let act = QuantizedActivation { rows: x.rows, cols: x.cols, codes, row_scale };
-        self.gemm(&act, &fold.panels, &fold.scale)
+        let mut y = self.gemm(&act, &fold.panels, &fold.scale);
+        // LoRC: two skinny fp matmuls recover the rounding residual —
+        // row-independent, so the batched engine step stays bit-identical
+        // to sequential decode
+        if let Some((u, v)) = &self.lorc {
+            let corr = x.matmul(u).matmul(v);
+            for (o, c) in y.data.iter_mut().zip(&corr.data) {
+                *o += c;
+            }
+        }
+        y
     }
 
     /// FP reference product (unquantized weight).
@@ -580,6 +630,57 @@ mod tests {
             scale.to_vec()
         )
         .is_err());
+    }
+
+    #[test]
+    fn lorc_correction_recovers_int4_weight_error() {
+        // INT4 weights: rounding error dominates. A (near-)full-rank LoRC
+        // pair built from the exact effective-weight residual must recover
+        // almost all of it, leaving only the activation-quantization error.
+        let (x, w) = pair(true);
+        let mut lin = QuantizedLinear::from_weight(&w, Bits::Int4);
+        let cp = crossquant::col_pow_scales(&x.col_abs_max(), 0.15);
+        lin.set_scale_mode(ScaleMode::Static { alpha: 0.15, col_pow: cp });
+        let fp = lin.forward_fp(&x);
+        let base = lin.forward_crossquant_static(&x, Bits::Int8).distance(&fp);
+        let e = {
+            let (_, col_pow, panels, scale) = lin.static_parts().unwrap();
+            let codes = panels.to_row_major();
+            Matrix::from_fn(w.rows, w.cols, |j, k| {
+                w.get(j, k) - codes[j * w.cols + k] as f32 * scale[k] / col_pow[j]
+            })
+        };
+        let (u, v) = crate::quant::lorc::factor(&e, w.cols, 1);
+        lin.set_lorc(u, v);
+        let corr = lin.forward_crossquant_static(&x, Bits::Int8).distance(&fp);
+        assert!(corr < base * 0.5, "corrected {corr} vs base {base}");
+    }
+
+    #[test]
+    fn gptq_codes_ride_the_static_fold() {
+        // replacing the fold's codes with GPTQ-rounded ones keeps the
+        // serving kernel identical and must not hurt the output error
+        let (x, w) = pair(true);
+        let mut lin = static_lin(&x, &w);
+        let fp = lin.forward_fp(&x);
+        let base = lin.forward_crossquant_static(&x, Bits::Int8).distance(&fp);
+        let codes = {
+            let (_, col_pow, _, scale) = lin.static_parts().unwrap();
+            let folded =
+                Matrix::from_fn(w.rows, w.cols, |j, k| w.get(j, k) * col_pow[j]);
+            let x_eff = Matrix::from_fn(x.rows, x.cols, |i, j| x.get(i, j) / col_pow[j]);
+            crate::quant::gptq::round_weight(
+                &folded,
+                scale,
+                &x_eff,
+                Bits::Int8.qmax(),
+                crate::quant::gptq::DEFAULT_DAMPING,
+            )
+            .unwrap()
+        };
+        lin.set_static_codes(&codes);
+        let gptq = lin.forward_crossquant_static(&x, Bits::Int8).distance(&fp);
+        assert!(gptq <= base * 1.05, "gptq {gptq} vs base {base}");
     }
 
     #[test]

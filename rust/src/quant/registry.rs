@@ -1,0 +1,505 @@
+//! The unified quantizer-scheme registry.
+//!
+//! One canonical name table and one static build pipeline for every
+//! scheme the crate serves. The wire protocol (`coordinator::server`),
+//! the CLI (`main`), and the `.cqa` artifact header all speak
+//! [`SchemeId`]; everything that needs a calibrated integer model —
+//! the scheduler, the continuous-batching engine, `repro quantize`,
+//! the eval sweeps — goes through [`build_static_model`], which runs the
+//! same four lifecycle stages for every scheme:
+//!
+//! ```text
+//! quantize ──► calibrate ──► fold ──► serve
+//!    │            │            │        │
+//!    │            │            │        └ CrossQuantStatic int8 GEMM
+//!    │            │            └ ĉ^(1−α) into the codes; SmoothQuant /
+//!    │            │              AWQ scale migration into LN affines;
+//!    │            │              GPTQ re-rounding; LoRC U·V residual
+//!    │            └ observer over the 4·L+1 activation sites
+//!    └ FP weights → per-column integer grids
+//! ```
+//!
+//! Schemes differ only in which hooks they use: per-token and the
+//! CrossQuant family are pure (quantize, calibrate); SmoothQuant and AWQ
+//! add a pre-quantization fold of activation scale into the LayerNorm
+//! affines; GPTQ replaces the nearest-rounded codes with
+//! error-minimising ones ([`super::gptq`]); LoRC attaches a rank-r fp
+//! correction of the rounding residual ([`super::lorc`]). The serving
+//! kernel — [`super::gemm`] over [`super::qlinear`] — is identical for
+//! all of them, which is what makes the registry a registry rather than
+//! five pipelines.
+
+use anyhow::{anyhow, bail, ensure, Context, Result};
+
+use super::awq::Awq;
+use super::smoothquant::SmoothQuant;
+use super::{gptq, lorc, Bits};
+use crate::exp::common::{ln_site_name, site_consumers};
+use crate::model::forward::CaptureSite;
+use crate::model::qforward::{QuantPath, QuantizedModel};
+use crate::model::quantized::apply_smoothquant;
+use crate::model::weights::Weights;
+use crate::model::NativeModel;
+use crate::tensor::Matrix;
+
+/// SmoothQuant migration strength for the registry's served path (the
+/// synthetic model's activation statistics sit in the OPT regime).
+const SMOOTH_STRENGTH: f32 = 0.5;
+/// AWQ group size (paper default g128, clamped to the weight size).
+const AWQ_GROUP: usize = 128;
+/// Base seed for the deterministic LoRC factorization (xor'd with the
+/// linear-slot index so every layer gets an independent sketch).
+const LORC_SEED: u64 = 0x10C0_57A7;
+
+/// Every scheme the crate knows, by canonical wire/CLI/artifact name.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub enum SchemeId {
+    /// FP reference (no quantization).
+    Fp,
+    /// Per-token activation quantization, eq. (1) — CrossQuant at α = 1.
+    PerToken,
+    /// CrossQuant eq. (5), dynamic scales.
+    CrossQuant,
+    /// CrossQuant with the quantize-GEMM fusion.
+    CrossQuantFused,
+    /// CrossQuant with calibrated static column factors — the integer
+    /// serving path, and the base every other static scheme folds onto.
+    CrossQuantStatic,
+    /// The paper's "Remove Kernel" ablation operator.
+    RemoveKernel,
+    /// SmoothQuant (Xiao et al. 2023): scale migration into LN affines,
+    /// then per-token — served here as α = 1 static on smoothed weights.
+    SmoothQuant,
+    /// AWQ (Lin et al. 2024): activation-aware per-channel weight scale,
+    /// folded the same way.
+    Awq,
+    /// CrossQuant on AWQ-scaled weights (offline eval tables only).
+    CrossQuantAwq,
+    /// OmniQuant stand-in (grid-searched clipping; offline eval only).
+    OmniQuant,
+    /// GPTQ-style error-minimising weight rounding on the static fold.
+    Gptq,
+    /// ZeroQuant-V2-style low-rank correction of the rounding residual.
+    Lorc,
+}
+
+/// All registered schemes, in display order.
+pub const ALL: [SchemeId; 12] = [
+    SchemeId::Fp,
+    SchemeId::PerToken,
+    SchemeId::CrossQuant,
+    SchemeId::CrossQuantFused,
+    SchemeId::CrossQuantStatic,
+    SchemeId::RemoveKernel,
+    SchemeId::SmoothQuant,
+    SchemeId::Awq,
+    SchemeId::CrossQuantAwq,
+    SchemeId::OmniQuant,
+    SchemeId::Gptq,
+    SchemeId::Lorc,
+];
+
+impl SchemeId {
+    /// Canonical name — what the wire protocol, the CLI and the docs use.
+    pub fn name(self) -> &'static str {
+        match self {
+            SchemeId::Fp => "fp",
+            SchemeId::PerToken => "per-token",
+            SchemeId::CrossQuant => "crossquant",
+            SchemeId::CrossQuantFused => "crossquant-fused",
+            SchemeId::CrossQuantStatic => "crossquant-static",
+            SchemeId::RemoveKernel => "remove-kernel",
+            SchemeId::SmoothQuant => "smoothquant",
+            SchemeId::Awq => "awq",
+            SchemeId::CrossQuantAwq => "cq+awq",
+            SchemeId::OmniQuant => "omniquant",
+            SchemeId::Gptq => "gptq",
+            SchemeId::Lorc => "lorc",
+        }
+    }
+
+    /// True for schemes served by the calibrated integer model (built
+    /// through [`build_static_model`], persistable as a `.cqa` artifact).
+    pub fn is_static(self) -> bool {
+        matches!(
+            self,
+            SchemeId::CrossQuantStatic
+                | SchemeId::SmoothQuant
+                | SchemeId::Awq
+                | SchemeId::Gptq
+                | SchemeId::Lorc
+        )
+    }
+
+    /// The u16 stamped into the `.cqa` header for a static scheme.
+    /// CrossQuantStatic is 0 so version-1 artifacts (reserved-zero bytes)
+    /// decode to the only scheme they could hold.
+    pub fn artifact_code(self) -> u16 {
+        match self {
+            SchemeId::CrossQuantStatic => 0,
+            SchemeId::Gptq => 1,
+            SchemeId::Lorc => 2,
+            SchemeId::SmoothQuant => 3,
+            SchemeId::Awq => 4,
+            other => panic!("{} is not an artifact scheme", other.name()),
+        }
+    }
+
+    /// Inverse of [`SchemeId::artifact_code`] — structured error on an
+    /// unknown code (artifact written by a newer build).
+    pub fn from_artifact_code(code: u16) -> Result<SchemeId> {
+        match code {
+            0 => Ok(SchemeId::CrossQuantStatic),
+            1 => Ok(SchemeId::Gptq),
+            2 => Ok(SchemeId::Lorc),
+            3 => Ok(SchemeId::SmoothQuant),
+            4 => Ok(SchemeId::Awq),
+            other => bail!("unknown artifact scheme code {other} (newer format?)"),
+        }
+    }
+}
+
+impl std::str::FromStr for SchemeId {
+    type Err = anyhow::Error;
+
+    fn from_str(s: &str) -> Result<SchemeId> {
+        // "fp16" kept as an alias: the eval tables' historical name
+        if s == "fp16" {
+            return Ok(SchemeId::Fp);
+        }
+        ALL.iter().copied().find(|id| id.name() == s).ok_or_else(|| {
+            let known: Vec<&str> = ALL.iter().map(|id| id.name()).collect();
+            anyhow!("unknown scheme '{s}' (known: {})", known.join(", "))
+        })
+    }
+}
+
+impl std::fmt::Display for SchemeId {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.write_str(self.name())
+    }
+}
+
+/// Everything that determines a calibrated static model's bits: the
+/// scheme, the CrossQuant exponent of its fold, and (LoRC only) the
+/// correction rank. Two requests with equal specs share one model.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct StaticSpec {
+    pub id: SchemeId,
+    pub alpha: f32,
+    /// LoRC correction rank; 0 for every other scheme.
+    pub rank: usize,
+}
+
+impl StaticSpec {
+    pub fn new(id: SchemeId, alpha: f32, rank: usize) -> StaticSpec {
+        StaticSpec { id, alpha, rank }
+    }
+
+    /// Hashable cache key (α at micro precision — well past f32's).
+    pub fn cache_key(&self) -> (u16, i64, usize) {
+        (self.id.artifact_code(), (self.alpha as f64 * 1e6).round() as i64, self.rank)
+    }
+}
+
+/// The effective CrossQuant exponent a scheme's static fold uses:
+/// SmoothQuant and AWQ are per-token methods (their migration already
+/// moved the channel scale into the weights), so their fold runs at
+/// α = 1, where eq. (5) degenerates to per-token.
+pub fn effective_alpha(id: SchemeId, alpha: f32) -> f32 {
+    match id {
+        SchemeId::SmoothQuant | SchemeId::Awq | SchemeId::PerToken => 1.0,
+        _ => alpha,
+    }
+}
+
+/// The one static pipeline: build the calibrated integer model for any
+/// static scheme. `calib` is the calibration token stream (also what the
+/// observer stage replays for SmoothQuant/AWQ/GPTQ statistics). For
+/// `SchemeId::CrossQuantStatic` this is *exactly* the historical
+/// `QuantizedModel::new` + `calibrate_static` sequence — bit-identical
+/// by construction, pinned by rust/tests/registry.rs.
+pub fn build_static_model(
+    weights: &Weights,
+    weight_bits: Bits,
+    act_bits: Bits,
+    spec: &StaticSpec,
+    calib: &[Vec<u32>],
+) -> Result<QuantizedModel> {
+    ensure!(
+        spec.id.is_static(),
+        "scheme '{}' has no static integer model (dynamic/offline only)",
+        spec.id.name()
+    );
+    ensure!(
+        spec.alpha.is_finite() && (0.0..=1.0).contains(&spec.alpha),
+        "calibration alpha must be in [0,1], got {}",
+        spec.alpha
+    );
+    ensure!(!calib.is_empty(), "scheme calibration needs at least one sequence");
+    let alpha = effective_alpha(spec.id, spec.alpha);
+    let cfg = weights.config;
+
+    // ---- fold stage (pre-quantization): scale migration ----
+    let mut w = weights.clone();
+    if matches!(spec.id, SchemeId::SmoothQuant | SchemeId::Awq) {
+        let acts = capture_site_activations(weights, calib)?;
+        let mut folds = Vec::new();
+        for site in 0..cfg.n_quant_sites() {
+            if let Some(ln) = ln_site_name(cfg.n_layers, site) {
+                let consumer = &site_consumers(cfg.n_layers, site)[0];
+                let wm = w.get(consumer)?;
+                let scales = match spec.id {
+                    SchemeId::SmoothQuant => {
+                        SmoothQuant::calibrate(&acts[site], &wm, SMOOTH_STRENGTH).scales
+                    }
+                    _ => Awq::search(&acts[site], &wm, weight_bits, AWQ_GROUP.min(wm.len())).scales,
+                };
+                folds.push((ln, scales));
+            }
+        }
+        apply_smoothquant(&mut w, &folds)?;
+    }
+
+    // ---- quantize + calibrate stages (shared by every scheme) ----
+    let mut qm = QuantizedModel::new(&w, weight_bits, act_bits, QuantPath::CrossQuant { alpha })?;
+    qm.calibrate_static(alpha, calib)?;
+
+    // ---- fold stage (post-quantization): code refinement ----
+    match spec.id {
+        SchemeId::Gptq => apply_gptq(&mut qm, &w, calib)?,
+        SchemeId::Lorc => apply_lorc(&mut qm, spec.rank)?,
+        _ => {}
+    }
+    qm.scheme_code = spec.id.artifact_code();
+    Ok(qm)
+}
+
+/// Run the FP model over the calibration stream capturing the matrix
+/// entering each of the 4·L+1 quantization sites (concatenated across
+/// sequences) — the registry's observer stage.
+fn capture_site_activations(weights: &Weights, calib: &[Vec<u32>]) -> Result<Vec<Matrix>> {
+    let model = NativeModel::new(weights.clone());
+    let cfg = weights.config;
+    let mut cap = CaptureSite::all();
+    for toks in calib {
+        model.forward_nll(toks, &mut cap)?;
+    }
+    let n_sites = cfg.n_quant_sites();
+    let mut per_site: Vec<Vec<&Matrix>> = vec![Vec::new(); n_sites];
+    for (site, m) in &cap.captured {
+        ensure!(*site < n_sites, "captured site {site} out of range ({n_sites} sites)");
+        per_site[*site].push(m);
+    }
+    Ok(per_site
+        .into_iter()
+        .map(|mats| {
+            let rows: usize = mats.iter().map(|m| m.rows).sum();
+            let cols = mats.first().map(|m| m.cols).unwrap_or(0);
+            let mut out = Matrix::zeros(rows, cols);
+            let mut r = 0;
+            for m in mats {
+                out.data[r * cols..(r + m.rows) * cols].copy_from_slice(&m.data);
+                r += m.rows;
+            }
+            out
+        })
+        .collect())
+}
+
+/// Replace every linear's nearest-rounded codes with GPTQ
+/// error-minimising ones, on the *folded* weight W′ = diag(ĉ^(1−α))·W
+/// against the *effective* calibration activations X̃ = X·diag(ĉ^(α−1))
+/// — the pair the static int8 GEMM actually multiplies, so minimising
+/// ‖X̃·(W′ − Q·diag(s))‖ minimises the served layer's output error.
+fn apply_gptq(qm: &mut QuantizedModel, folded_weights: &Weights, calib: &[Vec<u32>]) -> Result<()> {
+    let acts = capture_site_activations(folded_weights, calib)?;
+    let qmax = qm.weight_bits.qmax();
+    for (name, site, lin) in qm.linear_slots_mut() {
+        let (cp, scale) = {
+            let (_, col_pow, _, scale) = lin
+                .static_parts()
+                .ok_or_else(|| anyhow!("linear '{name}' has no static fold"))?;
+            (col_pow.to_vec(), scale.to_vec())
+        };
+        let folded = {
+            let w_fp = lin.fp_weight();
+            Matrix::from_fn(w_fp.rows, w_fp.cols, |j, k| w_fp.get(j, k) * cp[j])
+        };
+        let x = &acts[site];
+        ensure!(
+            x.cols == cp.len(),
+            "site {site} activations are {} wide, linear '{name}' takes {}",
+            x.cols,
+            cp.len()
+        );
+        let x_eff = Matrix::from_fn(x.rows, x.cols, |i, j| x.get(i, j) / cp[j]);
+        let codes = gptq::round_weight(&folded, &scale, &x_eff, qmax, gptq::DEFAULT_DAMPING)
+            .with_context(|| format!("gptq rounding '{name}'"))?;
+        lin.set_static_codes(&codes);
+    }
+    Ok(())
+}
+
+/// Attach the rank-r LoRC correction to every linear: factor the
+/// *effective-weight* rounding residual E = W − Q·diag(s)/diag(ĉ^(1−α))
+/// (what the static GEMM's output is missing in fp space) and store
+/// U·V ≈ E so serving adds x·U·V after the int8 GEMM.
+fn apply_lorc(qm: &mut QuantizedModel, rank: usize) -> Result<()> {
+    ensure!(rank >= 1, "lorc rank must be >= 1, got {rank}");
+    for (idx, (name, _site, lin)) in qm.linear_slots_mut().into_iter().enumerate() {
+        let (cp, scale, codes) = {
+            let (_, col_pow, panels, scale) = lin
+                .static_parts()
+                .ok_or_else(|| anyhow!("linear '{name}' has no static fold"))?;
+            (col_pow.to_vec(), scale.to_vec(), panels.to_row_major())
+        };
+        let e = {
+            let w_fp = lin.fp_weight();
+            let cols = w_fp.cols;
+            Matrix::from_fn(w_fp.rows, cols, |j, k| {
+                w_fp.get(j, k) - codes[j * cols + k] as f32 * scale[k] / cp[j]
+            })
+        };
+        let (u, v) = lorc::factor(&e, rank, LORC_SEED ^ idx as u64);
+        lin.set_lorc(u, v);
+    }
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::corpus::CorpusGen;
+    use crate::model::config::ModelConfig;
+    use crate::model::weights::synthetic_weights;
+
+    fn cfg() -> ModelConfig {
+        ModelConfig {
+            vocab: 64,
+            d_model: 16,
+            n_layers: 2,
+            n_heads: 2,
+            d_ff: 32,
+            seq_len: 20,
+            eval_batch: 2,
+        }
+    }
+
+    fn calib() -> Vec<Vec<u32>> {
+        let mut gen = CorpusGen::new(cfg().vocab, 0x5CA1E);
+        (0..4).map(|_| gen.sequence(cfg().seq_len)).collect()
+    }
+
+    fn toks() -> Vec<u32> {
+        (0..20).map(|i| (i * 7) % 64).collect()
+    }
+
+    #[test]
+    fn names_round_trip_for_every_scheme() {
+        for id in ALL {
+            assert_eq!(id.name().parse::<SchemeId>().unwrap(), id);
+        }
+        assert_eq!("fp16".parse::<SchemeId>().unwrap(), SchemeId::Fp);
+        let e = "nope".parse::<SchemeId>().unwrap_err();
+        assert!(e.to_string().contains("unknown scheme"), "{e}");
+    }
+
+    #[test]
+    fn artifact_codes_round_trip() {
+        for id in ALL.into_iter().filter(|id| id.is_static()) {
+            assert_eq!(SchemeId::from_artifact_code(id.artifact_code()).unwrap(), id);
+        }
+        assert_eq!(SchemeId::CrossQuantStatic.artifact_code(), 0, "v1 compat");
+        assert!(SchemeId::from_artifact_code(999).is_err());
+    }
+
+    #[test]
+    fn registry_crossquant_static_is_bit_identical_to_direct_build() {
+        let w = synthetic_weights(cfg(), 7);
+        let spec = StaticSpec::new(SchemeId::CrossQuantStatic, 0.15, 0);
+        let via_registry =
+            build_static_model(&w, Bits::Int8, Bits::Int8, &spec, &calib()).unwrap();
+        let mut direct =
+            QuantizedModel::new(&w, Bits::Int8, Bits::Int8, QuantPath::CrossQuant { alpha: 0.15 })
+                .unwrap();
+        direct.calibrate_static(0.15, &calib()).unwrap();
+        let a = via_registry.forward_logits(&toks()).unwrap();
+        let b = direct.forward_logits(&toks()).unwrap();
+        assert_eq!(a.data, b.data);
+        assert_eq!(via_registry.scheme_code, 0);
+    }
+
+    #[test]
+    fn every_static_scheme_builds_and_scores() {
+        let w = synthetic_weights(cfg(), 7);
+        for id in ALL.into_iter().filter(|id| id.is_static()) {
+            let spec = StaticSpec::new(id, 0.15, 4);
+            let qm = build_static_model(&w, Bits::Int8, Bits::Int8, &spec, &calib())
+                .unwrap_or_else(|e| panic!("{id}: {e:#}"));
+            assert_eq!(qm.scheme_code, id.artifact_code());
+            let nll = qm.forward_nll(&toks()).unwrap();
+            assert!(nll.iter().all(|v| v.is_finite()), "{id}");
+        }
+    }
+
+    #[test]
+    fn gptq_and_lorc_track_the_fp_model_at_least_as_well_as_nearest() {
+        // both refinements only ever shrink the weight-rounding error, so
+        // their logits should stay close to the plain static build's
+        let w = synthetic_weights(cfg(), 7);
+        let base = build_static_model(
+            &w,
+            Bits::Int4,
+            Bits::Int8,
+            &StaticSpec::new(SchemeId::CrossQuantStatic, 0.15, 0),
+            &calib(),
+        )
+        .unwrap();
+        let fp = NativeModel::new(w.clone());
+        let fp_nll: f32 =
+            fp.forward_nll(&toks(), &mut crate::model::IdentitySite).unwrap().iter().sum();
+        let sum = |m: &QuantizedModel| m.forward_nll(&toks()).unwrap().iter().sum::<f32>();
+        let base_gap = (sum(&base) - fp_nll).abs();
+        for (id, rank) in [(SchemeId::Gptq, 0), (SchemeId::Lorc, 8)] {
+            let qm = build_static_model(
+                &w,
+                Bits::Int4,
+                Bits::Int8,
+                &StaticSpec::new(id, 0.15, rank),
+                &calib(),
+            )
+            .unwrap();
+            let gap = (sum(&qm) - fp_nll).abs();
+            assert!(
+                gap <= base_gap * 1.5 + 0.05,
+                "{id}: refined gap {gap} vs nearest-rounding gap {base_gap}"
+            );
+        }
+    }
+
+    #[test]
+    fn non_static_schemes_are_rejected_by_the_pipeline() {
+        let w = synthetic_weights(cfg(), 7);
+        let e = build_static_model(
+            &w,
+            Bits::Int8,
+            Bits::Int8,
+            &StaticSpec::new(SchemeId::CrossQuant, 0.15, 0),
+            &calib(),
+        )
+        .unwrap_err();
+        assert!(e.to_string().contains("no static integer model"), "{e}");
+    }
+
+    #[test]
+    fn cache_keys_separate_schemes_alphas_and_ranks() {
+        let k = |id, a, r| StaticSpec::new(id, a, r).cache_key();
+        assert_ne!(k(SchemeId::Gptq, 0.15, 0), k(SchemeId::CrossQuantStatic, 0.15, 0));
+        assert_ne!(
+            k(SchemeId::CrossQuantStatic, 0.15, 0),
+            k(SchemeId::CrossQuantStatic, 0.2, 0)
+        );
+        assert_ne!(k(SchemeId::Lorc, 0.15, 4), k(SchemeId::Lorc, 0.15, 8));
+    }
+}

@@ -1,0 +1,275 @@
+//! Scheme-registry conformance suite: every registered scheme must
+//! round-trip through the `.cqa` artifact bit-identically, be selectable
+//! through the coordinator, decode identically under the
+//! continuous-batching engine and solo, and — for the schemes migrated
+//! off the old scattered match arms — serve the same NLLs as the
+//! pre-refactor paths they replaced.
+
+use std::path::PathBuf;
+use std::time::Duration;
+
+use crossquant::coordinator::scheduler::CoordinatorConfig;
+use crossquant::coordinator::{ActScheme, EvalCoordinator, EvalRequest};
+use crossquant::corpus::CorpusGen;
+use crossquant::model::weights::{synthetic_weights, Weights};
+use crossquant::model::{IdentitySite, ModelConfig, NativeModel, QuantSite, QuantizedModel};
+use crossquant::quant::artifact::Artifact;
+use crossquant::quant::crossquant::CrossQuant;
+use crossquant::quant::registry::{self, SchemeId, StaticSpec, ALL};
+use crossquant::quant::Bits;
+use crossquant::runtime::ArtifactStore;
+
+fn cfg() -> ModelConfig {
+    ModelConfig {
+        vocab: 64,
+        d_model: 16,
+        n_layers: 1,
+        n_heads: 2,
+        d_ff: 32,
+        seq_len: 12,
+        eval_batch: 2,
+    }
+}
+
+fn base_weights() -> Weights {
+    synthetic_weights(cfg(), 23)
+}
+
+/// The scheduler's FP-path calibration stream (8 sequences, seed
+/// 0x5CA1E) — references built on it match the served models exactly.
+fn serving_calib() -> Vec<Vec<u32>> {
+    let c = cfg();
+    let mut gen = CorpusGen::new(c.vocab, 0x5CA1E);
+    (0..8).map(|_| gen.sequence(c.seq_len)).collect()
+}
+
+fn probe() -> Vec<u32> {
+    let c = cfg();
+    (0..c.seq_len).map(|i| ((i * 7) % c.vocab) as u32).collect()
+}
+
+fn static_schemes() -> Vec<(SchemeId, usize)> {
+    ALL.into_iter()
+        .filter(|id| id.is_static())
+        .map(|id| (id, if id == SchemeId::Lorc { 4 } else { 0 }))
+        .collect()
+}
+
+fn temp_dir(tag: &str) -> PathBuf {
+    let dir = std::env::temp_dir().join(format!(
+        "cq-registry-{tag}-{}-{:?}",
+        std::process::id(),
+        std::time::SystemTime::now()
+            .duration_since(std::time::UNIX_EPOCH)
+            .unwrap()
+            .as_nanos()
+    ));
+    std::fs::create_dir_all(&dir).unwrap();
+    dir
+}
+
+fn start_coordinator(weight_sets: Vec<(String, Vec<f32>)>) -> EvalCoordinator {
+    EvalCoordinator::start(
+        ArtifactStore { dir: temp_dir("store") },
+        cfg(),
+        weight_sets,
+        CoordinatorConfig {
+            batch_size: 2,
+            max_batch_delay: Duration::from_millis(2),
+            max_queue: 32,
+            engine: Default::default(),
+            artifacts: Vec::new(),
+        },
+    )
+}
+
+#[test]
+fn every_registered_scheme_round_trips_its_artifact_bit_identically() {
+    let w = base_weights();
+    let calib = serving_calib();
+    let dir = temp_dir("artifacts");
+    for (id, rank) in static_schemes() {
+        let spec = StaticSpec::new(id, 0.15, rank);
+        let qm = registry::build_static_model(&w, Bits::Int8, Bits::Int8, &spec, &calib)
+            .unwrap_or_else(|e| panic!("{id}: {e:#}"));
+        let path = dir.join(format!("{}.cqa", id.name()));
+        qm.write_artifact(&path).unwrap();
+
+        // the header carries the scheme id, readable without a model
+        let art = Artifact::open(&path).unwrap();
+        assert_eq!(art.scheme, id.artifact_code(), "{id}");
+
+        // the loaded model serves bit-identical NLLs and keeps its scheme
+        let loaded = QuantizedModel::load_artifact(&path).unwrap();
+        assert_eq!(loaded.scheme_code, id.artifact_code(), "{id}");
+        assert_eq!(
+            qm.forward_nll(&probe()).unwrap(),
+            loaded.forward_nll(&probe()).unwrap(),
+            "{id}: artifact load must not perturb serving"
+        );
+
+        // resave byte-identity: load → write is a fixed point
+        let resave = dir.join(format!("{}-resave.cqa", id.name()));
+        loaded.write_artifact(&resave).unwrap();
+        assert_eq!(
+            std::fs::read(&path).unwrap(),
+            std::fs::read(&resave).unwrap(),
+            "{id}: resave must be byte-identical"
+        );
+    }
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+#[test]
+fn migrated_schemes_serve_the_pre_refactor_nlls() {
+    let w = base_weights();
+    let coordinator = start_coordinator(vec![("w16".into(), w.flat.clone())]);
+    let toks = probe();
+
+    // fp: bit-identical to the plain native forward
+    let fp = coordinator
+        .submit(EvalRequest::score(toks.clone(), ActScheme::Fp, "w16"))
+        .unwrap()
+        .wait()
+        .unwrap();
+    let native = NativeModel::new(w.clone());
+    assert_eq!(fp.nll, native.forward_nll(&toks, &mut IdentitySite).unwrap());
+
+    // crossquant-static: bit-identical to the registry build on the
+    // scheduler's calibration stream (the historical calibrate_static path)
+    let st = coordinator
+        .submit(EvalRequest::score(
+            toks.clone(),
+            ActScheme::CrossQuantStatic { alpha: 0.15, qmax: 127.0 },
+            "w16",
+        ))
+        .unwrap()
+        .wait()
+        .unwrap();
+    let reference = registry::build_static_model(
+        &w,
+        Bits::Int8,
+        Bits::Int8,
+        &StaticSpec::new(SchemeId::CrossQuantStatic, 0.15, 0),
+        &serving_calib(),
+    )
+    .unwrap();
+    assert_eq!(st.nll, reference.forward_nll(&toks).unwrap());
+
+    // dynamic crossquant (and per-token at α = 1): the served NLL tracks
+    // the library quantizer to float tolerance
+    for alpha in [0.15f32, 1.0] {
+        let served = coordinator
+            .submit(EvalRequest::score(
+                toks.clone(),
+                ActScheme::CrossQuant { alpha, qmax: 127.0 },
+                "w16",
+            ))
+            .unwrap()
+            .wait()
+            .unwrap();
+        let mut site = QuantSite::new(CrossQuant::new(alpha, Bits::Int8));
+        let expect = native.forward_nll(&toks, &mut site).unwrap();
+        for (a, b) in served.nll.iter().zip(&expect) {
+            assert!((a - b).abs() <= 1e-5 * b.abs().max(1.0), "α={alpha}: {a} vs {b}");
+        }
+    }
+    coordinator.shutdown();
+}
+
+#[test]
+fn engine_decode_matches_solo_decode_for_every_static_scheme() {
+    let w = base_weights();
+    let coordinator = start_coordinator(vec![("w16".into(), w.flat.clone())]);
+    let prompt = vec![2u32, 3, 4];
+    for (id, rank) in static_schemes() {
+        let scheme = match id {
+            SchemeId::CrossQuantStatic => ActScheme::CrossQuantStatic { alpha: 0.15, qmax: 127.0 },
+            SchemeId::SmoothQuant => ActScheme::SmoothQuant { alpha: 0.15, qmax: 127.0 },
+            SchemeId::Awq => ActScheme::Awq { alpha: 0.15, qmax: 127.0 },
+            SchemeId::Gptq => ActScheme::Gptq { alpha: 0.15, qmax: 127.0 },
+            SchemeId::Lorc => ActScheme::Lorc { alpha: 0.15, rank, qmax: 127.0 },
+            other => panic!("{other} is not static"),
+        };
+        let served = coordinator
+            .submit(EvalRequest::generate(prompt.clone(), scheme, "w16", 5))
+            .unwrap()
+            .wait()
+            .unwrap_or_else(|e| panic!("{id}: {e:#}"));
+        let solo = registry::build_static_model(
+            &w,
+            Bits::Int8,
+            Bits::Int8,
+            &StaticSpec::new(id, 0.15, rank),
+            &serving_calib(),
+        )
+        .unwrap()
+        .generate_greedy(&prompt, 5)
+        .unwrap();
+        assert_eq!(served.generated, solo, "{id}: engine and solo decode must agree");
+    }
+    coordinator.shutdown();
+}
+
+#[test]
+fn mounted_artifact_serves_only_its_own_scheme() {
+    let w = base_weights();
+    let calib = serving_calib();
+    let dir = temp_dir("mount");
+    let spec = StaticSpec::new(SchemeId::Gptq, 0.15, 0);
+    let reference =
+        registry::build_static_model(&w, Bits::Int8, Bits::Int8, &spec, &calib).unwrap();
+    let apath = dir.join("gptq.cqa");
+    reference.write_artifact(&apath).unwrap();
+
+    // artifact-only coordinator: no FP weight sets at all
+    let coordinator = EvalCoordinator::start(
+        ArtifactStore { dir: dir.clone() },
+        cfg(),
+        Vec::new(),
+        CoordinatorConfig {
+            batch_size: 2,
+            max_batch_delay: Duration::from_millis(2),
+            max_queue: 32,
+            engine: Default::default(),
+            artifacts: vec![("w16".into(), apath)],
+        },
+    );
+    let toks = probe();
+
+    // the artifact's own scheme is served straight off the mapping,
+    // bit-identical to the model that wrote it
+    let served = coordinator
+        .submit(EvalRequest::score(
+            toks.clone(),
+            ActScheme::Gptq { alpha: 0.15, qmax: 127.0 },
+            "w16",
+        ))
+        .unwrap()
+        .wait()
+        .unwrap();
+    assert_eq!(served.nll, reference.forward_nll(&toks).unwrap());
+
+    // any other scheme against the mount needs FP weights → structured
+    // artifact-only refusal
+    let err = coordinator
+        .submit(EvalRequest::score(
+            toks,
+            ActScheme::CrossQuantStatic { alpha: 0.15, qmax: 127.0 },
+            "w16",
+        ))
+        .unwrap()
+        .wait()
+        .unwrap_err();
+    assert!(err.to_string().contains("artifact-only"), "{err:#}");
+    coordinator.shutdown();
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+#[test]
+fn wire_names_cover_the_whole_registry() {
+    for id in ALL {
+        assert_eq!(id.name().parse::<SchemeId>().unwrap(), id, "{id}");
+    }
+    assert!("bogus".parse::<SchemeId>().unwrap_err().to_string().contains("unknown scheme"));
+}

@@ -137,7 +137,18 @@ fn generate_round_trips_over_tcp_for_every_scheme() {
     stream.set_read_timeout(Some(Duration::from_secs(300))).unwrap();
     let mut reader = BufReader::new(stream.try_clone().unwrap());
 
-    for scheme in ["fp", "crossquant", "crossquant-static"] {
+    // the full wire-servable registry surface: FP, both dynamic
+    // quantizers, and every registry-built static scheme
+    for scheme in [
+        "fp",
+        "per-token",
+        "crossquant",
+        "crossquant-static",
+        "smoothquant",
+        "awq",
+        "gptq",
+        "lorc",
+    ] {
         let prompt = CorpusGen::new(cfg.vocab, 7).sequence(4);
         let pj: Vec<String> = prompt.iter().map(|t| t.to_string()).collect();
         let req = format!(
