@@ -31,6 +31,7 @@
 //! executor exposes for model lookup/calibration.
 
 use std::collections::VecDeque;
+use std::sync::atomic::AtomicBool;
 use std::sync::atomic::Ordering::Relaxed;
 use std::sync::mpsc::{Sender, SyncSender};
 use std::sync::Arc;
@@ -151,6 +152,9 @@ pub(crate) struct GenRequest {
     pub max_new: usize,
     pub resp: SyncSender<Result<EvalResponse>>,
     pub events: Option<Sender<GenEvent>>,
+    /// Set when the client disconnects; the engine reaps the sequence at
+    /// the next tick and releases its KV slot.
+    pub cancel: Arc<AtomicBool>,
     pub submitted: Instant,
 }
 
@@ -175,6 +179,7 @@ struct GenSeq {
     next: u32,
     resp: SyncSender<Result<EvalResponse>>,
     events: Option<Sender<GenEvent>>,
+    cancel: Arc<AtomicBool>,
     submitted: Instant,
 }
 
@@ -232,9 +237,43 @@ impl Engine {
     /// sequences. The executor calls this between channel polls, which is
     /// exactly how late arrivals join the running batch.
     pub(crate) fn tick(&mut self, models: &mut dyn EngineModels) {
+        self.reap_cancelled();
         self.admit(models);
         self.step(models);
         self.update_gauges();
+    }
+
+    /// Retire sequences whose client disconnected: queued requests never
+    /// admit, active sequences release their KV slot immediately instead
+    /// of decoding the rest of `max_new_tokens` into a closed socket.
+    fn reap_cancelled(&mut self) {
+        let cancelled_waiting =
+            self.waiting.iter().any(|req| req.cancel.load(Relaxed));
+        if cancelled_waiting {
+            let mut kept = VecDeque::with_capacity(self.waiting.len());
+            for req in std::mem::take(&mut self.waiting) {
+                if req.cancel.load(Relaxed) {
+                    self.metrics.engine_cancelled.fetch_add(1, Relaxed);
+                    self.metrics.failed.fetch_add(1, Relaxed);
+                    let _ = req.resp.send(Err(anyhow!("request cancelled: client disconnected")));
+                } else {
+                    kept.push_back(req);
+                }
+            }
+            self.waiting = kept;
+        }
+        if self.active.iter().any(|seq| seq.cancel.load(Relaxed)) {
+            let mut kept = Vec::with_capacity(self.active.len());
+            for seq in std::mem::take(&mut self.active) {
+                if seq.cancel.load(Relaxed) {
+                    self.metrics.engine_cancelled.fetch_add(1, Relaxed);
+                    self.fail(seq, "request cancelled: client disconnected");
+                } else {
+                    kept.push(seq);
+                }
+            }
+            self.active = kept;
+        }
     }
 
     /// Fail every queued and active sequence (models unavailable).
@@ -316,6 +355,7 @@ impl Engine {
                     next: tok,
                     resp: req.resp,
                     events: req.events,
+                    cancel: req.cancel,
                     submitted: req.submitted,
                 };
                 if let Some(ev) = &seq.events {
@@ -530,6 +570,7 @@ mod tests {
             max_new,
             resp: resp_tx,
             events: Some(ev_tx),
+            cancel: Arc::new(AtomicBool::new(false)),
             submitted: Instant::now(),
         };
         (req, resp_rx, ev_rx)
@@ -667,6 +708,45 @@ mod tests {
             eng.tick(&mut models);
         }
         assert_eq!(a_rx.recv().unwrap().unwrap().generated, r);
+    }
+
+    #[test]
+    fn cancelled_sequence_is_reaped_and_releases_its_slot() {
+        let mut eng = engine(2, 4, None);
+        let mut models = TestModels::new(5);
+        let (a, a_rx, _a_ev) = gen_req(vec![1, 2, 3], ActScheme::Fp, 16);
+        let cancel = a.cancel.clone();
+        eng.submit(a);
+        eng.tick(&mut models); // admitted, mid-decode
+        assert_eq!(eng.pool.in_use(), 1);
+        cancel.store(true, Relaxed);
+        eng.tick(&mut models); // reaped before the next step
+        assert!(eng.is_idle(), "cancelled sequence must leave the active set");
+        assert_eq!(eng.pool.in_use(), 0, "cancel must release the KV slot");
+        assert_eq!(eng.metrics.engine_cancelled.load(Relaxed), 1);
+        let err = a_rx.recv().unwrap().unwrap_err();
+        assert!(format!("{err}").contains("cancelled"), "unexpected: {err}");
+    }
+
+    #[test]
+    fn cancelled_queued_request_never_admits() {
+        // one slot: A occupies it, B queues, B's client disconnects
+        let mut eng = engine(1, 4, None);
+        let mut models = TestModels::new(5);
+        let (a, a_rx, _) = gen_req(vec![1, 2, 3], ActScheme::Fp, 6);
+        let (b, b_rx, _) = gen_req(vec![4, 5], ActScheme::Fp, 4);
+        let cancel_b = b.cancel.clone();
+        eng.submit(a);
+        eng.tick(&mut models);
+        eng.submit(b);
+        cancel_b.store(true, Relaxed);
+        while !eng.is_idle() {
+            eng.tick(&mut models);
+        }
+        assert!(a_rx.recv().unwrap().is_ok(), "A is unaffected by B's cancel");
+        let err = b_rx.recv().unwrap().unwrap_err();
+        assert!(format!("{err}").contains("cancelled"), "unexpected: {err}");
+        assert_eq!(eng.metrics.engine_cancelled.load(Relaxed), 1);
     }
 
     #[test]

@@ -1,0 +1,640 @@
+//! The worker-fleet supervisor: spawns N `repro serve --worker`
+//! processes (each mmap-ing the same `.cqa` artifact through the
+//! zero-copy loader, so the page cache is shared across the fleet),
+//! health-checks them with heartbeat pings, and restarts crashed or
+//! wedged workers with exponential backoff plus a crash-loop circuit
+//! breaker.
+//!
+//! Worker lifecycle:
+//!
+//! * spawn → the worker binds `127.0.0.1:0` and prints
+//!   `CROSSQUANT_WORKER_READY addr=<ip:port>` on stdout; a per-spawn
+//!   reader thread parses that line and publishes the address.
+//! * alive → the supervisor pings `{"cmd":"ping"}` every heartbeat
+//!   interval; [`FleetConfig::heartbeat_misses`] consecutive failures
+//!   mean the worker is wedged and it is killed (the next tick sees the
+//!   exit and schedules the restart).
+//! * crashed → restart after an exponential backoff, reset when the
+//!   process had been up longer than the breaker window; more than
+//!   [`FleetConfig::breaker_crashes`] crashes inside the window trips
+//!   the circuit breaker and the worker stays down (the router sheds or
+//!   retries around it) instead of burning CPU on a crash loop.
+//!
+//! The supervisor never touches request traffic — that is
+//! [`super::router::Router`]'s job; the two share [`Worker`] state
+//! (address, health, in-flight count) through atomics.
+
+use std::collections::VecDeque;
+use std::io::{BufRead, BufReader, Write};
+use std::net::{SocketAddr, TcpStream};
+use std::path::PathBuf;
+use std::process::{Child, Command, Stdio};
+use std::sync::atomic::{AtomicBool, AtomicU32, AtomicU64, AtomicUsize, Ordering};
+use std::sync::{Arc, Mutex};
+use std::thread::JoinHandle;
+use std::time::{Duration, Instant};
+
+use anyhow::{anyhow, Context, Result};
+
+use super::metrics::FleetMetrics;
+
+/// The stdout line a worker prints once its listener is bound.
+pub const READY_PREFIX: &str = "CROSSQUANT_WORKER_READY addr=";
+
+#[derive(Clone, Debug)]
+pub struct FleetConfig {
+    /// Worker processes to keep alive.
+    pub num_workers: usize,
+    /// Worker executable (normally `std::env::current_exe()`).
+    pub worker_cmd: PathBuf,
+    /// Arguments for every worker (e.g. `serve --worker --artifact …`).
+    pub worker_args: Vec<String>,
+    /// Environment applied to every worker.
+    pub worker_env: Vec<(String, String)>,
+    /// Extra per-index environment (e.g. a `CROSSQUANT_FAULT` plan on
+    /// worker 0 only); indexes beyond the vec get nothing extra.
+    pub per_worker_env: Vec<Vec<(String, String)>>,
+    /// Heartbeat / supervision tick interval.
+    pub heartbeat_interval: Duration,
+    /// Per-ping connect/read timeout.
+    pub heartbeat_timeout: Duration,
+    /// Consecutive failed pings before a worker is declared wedged.
+    pub heartbeat_misses: u32,
+    /// First restart delay after a crash.
+    pub initial_backoff: Duration,
+    /// Backoff cap.
+    pub max_backoff: Duration,
+    /// Crash-counting window for the circuit breaker (also the uptime
+    /// after which the backoff resets to `initial_backoff`).
+    pub breaker_window: Duration,
+    /// Crashes within the window that trip the breaker.
+    pub breaker_crashes: usize,
+    /// How long a freshly spawned worker may take to print its ready
+    /// line before it is treated as wedged.
+    pub ready_timeout: Duration,
+}
+
+impl Default for FleetConfig {
+    fn default() -> Self {
+        FleetConfig {
+            num_workers: 2,
+            worker_cmd: PathBuf::new(),
+            worker_args: Vec::new(),
+            worker_env: Vec::new(),
+            per_worker_env: Vec::new(),
+            heartbeat_interval: Duration::from_millis(250),
+            heartbeat_timeout: Duration::from_millis(1000),
+            heartbeat_misses: 3,
+            initial_backoff: Duration::from_millis(100),
+            max_backoff: Duration::from_secs(5),
+            breaker_window: Duration::from_secs(10),
+            breaker_crashes: 5,
+            ready_timeout: Duration::from_secs(30),
+        }
+    }
+}
+
+/// Shared per-worker state: written by the supervisor, read (and
+/// in-flight-counted) by the router.
+pub struct Worker {
+    index: usize,
+    addr: Mutex<Option<SocketAddr>>,
+    healthy: AtomicBool,
+    breaker_open: AtomicBool,
+    in_flight: AtomicUsize,
+    restarts: AtomicU64,
+    pid: AtomicU32,
+}
+
+/// Point-in-time snapshot of one worker (metrics / tests).
+#[derive(Clone, Debug)]
+pub struct WorkerStatus {
+    pub index: usize,
+    pub healthy: bool,
+    pub addr: Option<SocketAddr>,
+    pub in_flight: usize,
+    pub restarts: u64,
+    pub breaker_open: bool,
+    pub pid: Option<u32>,
+}
+
+impl Worker {
+    fn new(index: usize) -> Worker {
+        Worker {
+            index,
+            addr: Mutex::new(None),
+            healthy: AtomicBool::new(false),
+            breaker_open: AtomicBool::new(false),
+            in_flight: AtomicUsize::new(0),
+            restarts: AtomicU64::new(0),
+            pid: AtomicU32::new(0),
+        }
+    }
+
+    pub fn index(&self) -> usize {
+        self.index
+    }
+
+    pub fn addr(&self) -> Option<SocketAddr> {
+        match self.addr.lock() {
+            Ok(g) => *g,
+            Err(poisoned) => *poisoned.into_inner(),
+        }
+    }
+
+    fn set_addr(&self, addr: Option<SocketAddr>) {
+        match self.addr.lock() {
+            Ok(mut g) => *g = addr,
+            Err(poisoned) => *poisoned.into_inner() = addr,
+        }
+    }
+
+    pub fn is_healthy(&self) -> bool {
+        self.healthy.load(Ordering::SeqCst)
+    }
+
+    pub fn breaker_open(&self) -> bool {
+        self.breaker_open.load(Ordering::SeqCst)
+    }
+
+    pub fn in_flight(&self) -> usize {
+        self.in_flight.load(Ordering::SeqCst)
+    }
+
+    pub fn restarts(&self) -> u64 {
+        self.restarts.load(Ordering::SeqCst)
+    }
+
+    /// OS pid of the current process incarnation (tests `kill -9` it).
+    pub fn pid(&self) -> Option<u32> {
+        match self.pid.load(Ordering::SeqCst) {
+            0 => None,
+            p => Some(p),
+        }
+    }
+
+    /// Router-side load accounting around one dispatched request.
+    pub fn begin_request(&self) {
+        self.in_flight.fetch_add(1, Ordering::SeqCst);
+    }
+
+    pub fn end_request(&self) {
+        self.in_flight.fetch_sub(1, Ordering::SeqCst);
+    }
+
+    pub fn status(&self) -> WorkerStatus {
+        WorkerStatus {
+            index: self.index,
+            healthy: self.is_healthy(),
+            addr: self.addr(),
+            in_flight: self.in_flight(),
+            restarts: self.restarts(),
+            breaker_open: self.breaker_open(),
+            pid: self.pid(),
+        }
+    }
+}
+
+/// Restart scheduling: exponential backoff with reset-on-stable-uptime,
+/// plus the crash-loop circuit breaker. Pure bookkeeping, unit-tested
+/// without processes.
+struct RestartPolicy {
+    backoff: Duration,
+    initial: Duration,
+    max: Duration,
+    window: Duration,
+    limit: usize,
+    crashes: VecDeque<Instant>,
+}
+
+impl RestartPolicy {
+    fn new(cfg: &FleetConfig) -> RestartPolicy {
+        RestartPolicy {
+            backoff: cfg.initial_backoff,
+            initial: cfg.initial_backoff,
+            max: cfg.max_backoff,
+            window: cfg.breaker_window,
+            limit: cfg.breaker_crashes.max(1),
+            crashes: VecDeque::new(),
+        }
+    }
+
+    /// Record a crash observed at `now` after `uptime` of running.
+    /// Returns the delay before the next restart attempt, or `None` when
+    /// the crash-loop breaker trips.
+    fn on_crash(&mut self, now: Instant, uptime: Duration) -> Option<Duration> {
+        if uptime > self.window {
+            // the process was stable; this is a fresh failure, not a loop
+            self.backoff = self.initial;
+            self.crashes.clear();
+        }
+        self.crashes.push_back(now);
+        while let Some(&front) = self.crashes.front() {
+            if now.duration_since(front) > self.window {
+                self.crashes.pop_front();
+            } else {
+                break;
+            }
+        }
+        if self.crashes.len() >= self.limit {
+            return None;
+        }
+        let delay = self.backoff;
+        self.backoff = (self.backoff * 2).min(self.max);
+        Some(delay)
+    }
+}
+
+/// Supervisor-private state for one worker slot.
+struct Slot {
+    worker: Arc<Worker>,
+    child: Option<Child>,
+    spawned_at: Instant,
+    /// When the next spawn attempt may run (`None` = spawn immediately
+    /// unless the breaker is open).
+    restart_at: Option<Instant>,
+    policy: RestartPolicy,
+    hb_misses: u32,
+    /// Set once this incarnation printed its ready line.
+    ready_seen: Arc<AtomicBool>,
+}
+
+pub struct Fleet {
+    workers: Vec<Arc<Worker>>,
+    metrics: Arc<FleetMetrics>,
+    shutdown: Arc<AtomicBool>,
+    supervisor: Mutex<Option<JoinHandle<()>>>,
+}
+
+impl Fleet {
+    /// Spawn the fleet and its supervision thread. Workers come up
+    /// asynchronously — use [`Fleet::wait_ready`] to block until they
+    /// are serving.
+    pub fn start(cfg: FleetConfig, metrics: Arc<FleetMetrics>) -> Result<Fleet> {
+        anyhow::ensure!(cfg.num_workers >= 1, "a fleet needs at least one worker");
+        anyhow::ensure!(
+            !cfg.worker_cmd.as_os_str().is_empty(),
+            "fleet config has no worker command"
+        );
+        let workers: Vec<Arc<Worker>> =
+            (0..cfg.num_workers).map(|i| Arc::new(Worker::new(i))).collect();
+        let shutdown = Arc::new(AtomicBool::new(false));
+        let sup_workers = workers.clone();
+        let sup_shutdown = shutdown.clone();
+        let sup_metrics = metrics.clone();
+        let supervisor = std::thread::Builder::new()
+            .name("cq-fleet".into())
+            .spawn(move || supervise(cfg, sup_workers, sup_metrics, sup_shutdown))
+            .context("spawning fleet supervisor")?;
+        Ok(Fleet { workers, metrics, shutdown, supervisor: Mutex::new(Some(supervisor)) })
+    }
+
+    pub fn workers(&self) -> &[Arc<Worker>] {
+        &self.workers
+    }
+
+    pub fn metrics(&self) -> &Arc<FleetMetrics> {
+        &self.metrics
+    }
+
+    pub fn status(&self) -> Vec<WorkerStatus> {
+        self.workers.iter().map(|w| w.status()).collect()
+    }
+
+    /// Block until every worker is healthy (or `timeout` elapses).
+    pub fn wait_ready(&self, timeout: Duration) -> Result<()> {
+        let deadline = Instant::now() + timeout;
+        loop {
+            if self.workers.iter().all(|w| w.is_healthy()) {
+                return Ok(());
+            }
+            if Instant::now() > deadline {
+                let down: Vec<usize> = self
+                    .workers
+                    .iter()
+                    .filter(|w| !w.is_healthy())
+                    .map(|w| w.index())
+                    .collect();
+                return Err(anyhow!("fleet not ready after {timeout:?}: workers {down:?} down"));
+            }
+            std::thread::sleep(Duration::from_millis(20));
+        }
+    }
+
+    /// Stop supervising and kill every worker. Idempotent.
+    pub fn shutdown(&self) {
+        self.shutdown.store(true, Ordering::SeqCst);
+        let handle = match self.supervisor.lock() {
+            Ok(mut g) => g.take(),
+            Err(poisoned) => poisoned.into_inner().take(),
+        };
+        if let Some(h) = handle {
+            let _ = h.join();
+        }
+    }
+}
+
+impl Drop for Fleet {
+    fn drop(&mut self) {
+        self.shutdown();
+    }
+}
+
+/// Parse a worker's ready line into its socket address.
+fn parse_ready_line(line: &str) -> Option<SocketAddr> {
+    line.trim().strip_prefix(READY_PREFIX)?.trim().parse().ok()
+}
+
+/// One `{"cmd":"ping"}` round-trip against a worker. Control frames only
+/// — heartbeats must never advance a worker's fault-injection counter.
+fn ping(addr: SocketAddr, timeout: Duration) -> bool {
+    let Ok(stream) = TcpStream::connect_timeout(&addr, timeout) else {
+        return false;
+    };
+    if stream.set_read_timeout(Some(timeout)).is_err()
+        || stream.set_write_timeout(Some(timeout)).is_err()
+    {
+        return false;
+    }
+    let mut writer = match stream.try_clone() {
+        Ok(w) => w,
+        Err(_) => return false,
+    };
+    if writer.write_all(b"{\"cmd\": \"ping\"}\n").is_err() {
+        return false;
+    }
+    let mut reader = BufReader::new(stream);
+    let mut line = String::new();
+    matches!(reader.read_line(&mut line), Ok(n) if n > 0 && line.contains("\"ok\": true"))
+}
+
+fn spawn_worker(cfg: &FleetConfig, slot: &mut Slot, first_spawn: bool) {
+    let index = slot.worker.index();
+    let mut cmd = Command::new(&cfg.worker_cmd);
+    cmd.args(&cfg.worker_args)
+        .stdin(Stdio::null())
+        .stdout(Stdio::piped())
+        .stderr(Stdio::inherit());
+    for (k, v) in &cfg.worker_env {
+        cmd.env(k, v);
+    }
+    if let Some(extra) = cfg.per_worker_env.get(index) {
+        for (k, v) in extra {
+            cmd.env(k, v);
+        }
+    }
+    cmd.env("CROSSQUANT_WORKER_INDEX", index.to_string());
+    slot.worker.set_addr(None);
+    slot.worker.healthy.store(false, Ordering::SeqCst);
+    slot.hb_misses = 0;
+    slot.ready_seen = Arc::new(AtomicBool::new(false));
+    match cmd.spawn() {
+        Ok(mut child) => {
+            slot.worker.pid.store(child.id(), Ordering::SeqCst);
+            if !first_spawn {
+                slot.worker.restarts.fetch_add(1, Ordering::SeqCst);
+            }
+            if let Some(stdout) = child.stdout.take() {
+                // per-spawn reader: publishes the ready line's address,
+                // then drains stdout until the process dies
+                let worker = slot.worker.clone();
+                let ready = slot.ready_seen.clone();
+                let _ = std::thread::Builder::new()
+                    .name(format!("cq-worker-{index}-out"))
+                    .spawn(move || {
+                        for line in BufReader::new(stdout).lines() {
+                            let Ok(line) = line else { break };
+                            if let Some(addr) = parse_ready_line(&line) {
+                                worker.set_addr(Some(addr));
+                                worker.healthy.store(true, Ordering::SeqCst);
+                                ready.store(true, Ordering::SeqCst);
+                            } else if !line.trim().is_empty() {
+                                eprintln!("[worker {index}] {line}");
+                            }
+                        }
+                    });
+            }
+            slot.child = Some(child);
+            slot.spawned_at = Instant::now();
+            slot.restart_at = None;
+        }
+        Err(e) => {
+            eprintln!("fleet: spawning worker {index} failed: {e}");
+            // treat a failed spawn like a crash so the backoff applies
+            let now = Instant::now();
+            match slot.policy.on_crash(now, Duration::ZERO) {
+                Some(delay) => slot.restart_at = Some(now + delay),
+                None => {
+                    slot.worker.breaker_open.store(true, Ordering::SeqCst);
+                    slot.restart_at = None;
+                }
+            }
+        }
+    }
+}
+
+fn kill_slot(slot: &mut Slot) {
+    if let Some(child) = &mut slot.child {
+        let _ = child.kill();
+        let _ = child.wait();
+    }
+    slot.child = None;
+    slot.worker.healthy.store(false, Ordering::SeqCst);
+    slot.worker.set_addr(None);
+    slot.worker.pid.store(0, Ordering::SeqCst);
+}
+
+/// The supervision loop: one tick per heartbeat interval.
+fn supervise(
+    cfg: FleetConfig,
+    workers: Vec<Arc<Worker>>,
+    metrics: Arc<FleetMetrics>,
+    shutdown: Arc<AtomicBool>,
+) {
+    let mut slots: Vec<Slot> = workers
+        .into_iter()
+        .map(|worker| Slot {
+            worker,
+            child: None,
+            spawned_at: Instant::now(),
+            restart_at: None,
+            policy: RestartPolicy::new(&cfg),
+            hb_misses: 0,
+            ready_seen: Arc::new(AtomicBool::new(false)),
+        })
+        .collect();
+    for slot in &mut slots {
+        spawn_worker(&cfg, slot, true);
+    }
+    while !shutdown.load(Ordering::SeqCst) {
+        for slot in &mut slots {
+            tick_slot(&cfg, slot, &metrics);
+        }
+        std::thread::sleep(cfg.heartbeat_interval);
+    }
+    for slot in &mut slots {
+        kill_slot(slot);
+    }
+}
+
+fn tick_slot(cfg: &FleetConfig, slot: &mut Slot, metrics: &FleetMetrics) {
+    let Some(child) = &mut slot.child else {
+        // down: restart when the backoff expires (never past the breaker)
+        if slot.worker.breaker_open() {
+            return;
+        }
+        if slot.restart_at.map_or(true, |t| Instant::now() >= t) {
+            spawn_worker(cfg, slot, false);
+        }
+        return;
+    };
+    match child.try_wait() {
+        Ok(Some(status)) => {
+            // the process is gone — crashed, killed, or exited on its own
+            let uptime = slot.spawned_at.elapsed();
+            eprintln!(
+                "fleet: worker {} (pid {}) exited with {status} after {uptime:?}",
+                slot.worker.index(),
+                slot.worker.pid().unwrap_or(0),
+            );
+            metrics.worker_crashes.fetch_add(1, Ordering::SeqCst);
+            slot.child = None;
+            slot.worker.healthy.store(false, Ordering::SeqCst);
+            slot.worker.set_addr(None);
+            slot.worker.pid.store(0, Ordering::SeqCst);
+            let now = Instant::now();
+            match slot.policy.on_crash(now, uptime) {
+                Some(delay) => {
+                    metrics.worker_restarts.fetch_add(1, Ordering::SeqCst);
+                    slot.restart_at = Some(now + delay);
+                }
+                None => {
+                    eprintln!(
+                        "fleet: worker {} crash-looping, circuit breaker open",
+                        slot.worker.index()
+                    );
+                    metrics.breaker_trips.fetch_add(1, Ordering::SeqCst);
+                    slot.worker.breaker_open.store(true, Ordering::SeqCst);
+                    slot.restart_at = None;
+                }
+            }
+        }
+        Ok(None) => {
+            // alive: heartbeat once it is ready, enforce the ready timeout
+            if slot.ready_seen.load(Ordering::SeqCst) {
+                if let Some(addr) = slot.worker.addr() {
+                    if ping(addr, cfg.heartbeat_timeout) {
+                        slot.hb_misses = 0;
+                        slot.worker.healthy.store(true, Ordering::SeqCst);
+                    } else {
+                        slot.hb_misses += 1;
+                        if slot.hb_misses >= cfg.heartbeat_misses {
+                            eprintln!(
+                                "fleet: worker {} missed {} heartbeats, killing it",
+                                slot.worker.index(),
+                                slot.hb_misses
+                            );
+                            metrics.worker_wedged.fetch_add(1, Ordering::SeqCst);
+                            kill_slot(slot);
+                        } else {
+                            // degrade immediately: the router stops
+                            // dispatching while the worker is suspect
+                            slot.worker.healthy.store(false, Ordering::SeqCst);
+                        }
+                    }
+                }
+            } else if slot.spawned_at.elapsed() > cfg.ready_timeout {
+                eprintln!(
+                    "fleet: worker {} never became ready, killing it",
+                    slot.worker.index()
+                );
+                metrics.worker_wedged.fetch_add(1, Ordering::SeqCst);
+                kill_slot(slot);
+            }
+        }
+        Err(e) => {
+            eprintln!("fleet: try_wait on worker {} failed: {e}", slot.worker.index());
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn policy(initial_ms: u64, max_ms: u64, window_ms: u64, limit: usize) -> RestartPolicy {
+        RestartPolicy::new(&FleetConfig {
+            initial_backoff: Duration::from_millis(initial_ms),
+            max_backoff: Duration::from_millis(max_ms),
+            breaker_window: Duration::from_millis(window_ms),
+            breaker_crashes: limit,
+            ..FleetConfig::default()
+        })
+    }
+
+    #[test]
+    fn ready_line_parses() {
+        assert_eq!(
+            parse_ready_line("CROSSQUANT_WORKER_READY addr=127.0.0.1:8421\n"),
+            Some("127.0.0.1:8421".parse().unwrap())
+        );
+        assert_eq!(parse_ready_line("starting up..."), None);
+        assert_eq!(parse_ready_line("CROSSQUANT_WORKER_READY addr=not-an-addr"), None);
+    }
+
+    #[test]
+    fn backoff_doubles_and_caps() {
+        let mut p = policy(100, 400, 60_000, 100);
+        let t0 = Instant::now();
+        assert_eq!(p.on_crash(t0, Duration::ZERO), Some(Duration::from_millis(100)));
+        assert_eq!(p.on_crash(t0, Duration::ZERO), Some(Duration::from_millis(200)));
+        assert_eq!(p.on_crash(t0, Duration::ZERO), Some(Duration::from_millis(400)));
+        // capped
+        assert_eq!(p.on_crash(t0, Duration::ZERO), Some(Duration::from_millis(400)));
+    }
+
+    #[test]
+    fn stable_uptime_resets_backoff() {
+        let mut p = policy(100, 6_400, 1_000, 100);
+        let t0 = Instant::now();
+        assert_eq!(p.on_crash(t0, Duration::ZERO), Some(Duration::from_millis(100)));
+        assert_eq!(p.on_crash(t0, Duration::ZERO), Some(Duration::from_millis(200)));
+        // the worker then ran for longer than the window before dying
+        assert_eq!(
+            p.on_crash(t0, Duration::from_millis(5_000)),
+            Some(Duration::from_millis(100))
+        );
+    }
+
+    #[test]
+    fn breaker_trips_on_crash_loop() {
+        let mut p = policy(10, 100, 10_000, 3);
+        let t0 = Instant::now();
+        assert!(p.on_crash(t0, Duration::ZERO).is_some());
+        assert!(p.on_crash(t0 + Duration::from_millis(20), Duration::ZERO).is_some());
+        // third crash inside the window: breaker
+        assert!(p.on_crash(t0 + Duration::from_millis(40), Duration::ZERO).is_none());
+    }
+
+    #[test]
+    fn crashes_outside_window_do_not_trip() {
+        let mut p = policy(10, 100, 50, 3);
+        let t0 = Instant::now();
+        // spaced crashes fall out of the 50ms window before the count hits 3
+        assert!(p.on_crash(t0, Duration::ZERO).is_some());
+        assert!(p.on_crash(t0 + Duration::from_millis(100), Duration::ZERO).is_some());
+        assert!(p.on_crash(t0 + Duration::from_millis(200), Duration::ZERO).is_some());
+        assert!(p.on_crash(t0 + Duration::from_millis(300), Duration::ZERO).is_some());
+    }
+
+    #[test]
+    fn worker_status_snapshot() {
+        let w = Worker::new(3);
+        assert!(!w.is_healthy());
+        w.begin_request();
+        w.begin_request();
+        w.end_request();
+        let s = w.status();
+        assert_eq!((s.index, s.in_flight, s.healthy, s.pid), (3, 1, false, None));
+    }
+}

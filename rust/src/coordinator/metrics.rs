@@ -36,6 +36,9 @@ pub struct Metrics {
     pub engine_queue_depth: AtomicU64,
     /// Requests rejected because the admission queue was full.
     pub engine_rejected: AtomicU64,
+    /// Sequences cancelled before finishing (client disconnected
+    /// mid-stream); their KV slots were released early.
+    pub engine_cancelled: AtomicU64,
     // --- KV pool ---
     /// Gauge: total preallocated KV slots.
     pub kv_pool_slots: AtomicU64,
@@ -131,6 +134,7 @@ impl Metrics {
             ("active_seqs", Json::num(load(&self.engine_active_seqs))),
             ("queue_depth", Json::num(load(&self.engine_queue_depth))),
             ("rejected", Json::num(load(&self.engine_rejected))),
+            ("cancelled", Json::num(load(&self.engine_cancelled))),
             ("steps", Json::num(load(&self.engine_steps))),
             ("decoded_tokens", Json::num(load(&self.engine_decoded_tokens))),
             ("batch_occupancy", Json::num(self.batch_occupancy())),
@@ -163,6 +167,23 @@ impl Metrics {
         ])
     }
 
+    /// Flat numeric counters — the shape the fleet router sums across
+    /// workers when aggregating `{"cmd": "metrics"}` responses. Every
+    /// field must stay a plain number for that summation to hold.
+    pub fn counters_json(&self) -> Json {
+        let load = |a: &AtomicU64| a.load(Ordering::Relaxed) as f64;
+        Json::obj(vec![
+            ("submitted", Json::num(load(&self.submitted))),
+            ("completed", Json::num(load(&self.completed))),
+            ("failed", Json::num(load(&self.failed))),
+            ("batches", Json::num(load(&self.batches))),
+            ("executions", Json::num(load(&self.executions))),
+            ("engine_rejected", Json::num(load(&self.engine_rejected))),
+            ("engine_cancelled", Json::num(load(&self.engine_cancelled))),
+            ("decoded_tokens", Json::num(load(&self.engine_decoded_tokens))),
+        ])
+    }
+
     pub fn summary(&self) -> String {
         format!(
             "submitted={} completed={} failed={} batches={} mean_batch={:.2} mean_lat={:.1}ms p90={:.1}ms",
@@ -177,6 +198,62 @@ impl Metrics {
                 v => v as f64 / 1000.0,
             },
         )
+    }
+}
+
+/// Counters for the sharded serving tier (supervisor + router). Shared
+/// between the fleet supervision thread and the router's connection
+/// threads; surfaced under `"router"` / `"fleet"` in the aggregated
+/// `{"cmd": "metrics"}` response.
+#[derive(Default)]
+pub struct FleetMetrics {
+    /// Data requests the router accepted for dispatch.
+    pub requests: AtomicU64,
+    /// Requests that ultimately returned `ok: true` to the client.
+    pub succeeded: AtomicU64,
+    /// Requests retried on another worker after a mid-request failure.
+    pub retried: AtomicU64,
+    /// Requests that exhausted their deadline.
+    pub deadline_exceeded: AtomicU64,
+    /// Requests shed because no healthy worker was available.
+    pub shed: AtomicU64,
+    /// Malformed client frames refused with a structured error.
+    pub malformed: AtomicU64,
+    /// Worker processes observed dead (crash or kill).
+    pub worker_crashes: AtomicU64,
+    /// Worker restarts performed by the supervisor.
+    pub worker_restarts: AtomicU64,
+    /// Workers killed for missing heartbeats (wedged, not crashed).
+    pub worker_wedged: AtomicU64,
+    /// Crash-loop circuit breakers tripped.
+    pub breaker_trips: AtomicU64,
+}
+
+impl FleetMetrics {
+    pub fn new() -> FleetMetrics {
+        FleetMetrics::default()
+    }
+
+    pub fn router_json(&self) -> Json {
+        let load = |a: &AtomicU64| a.load(Ordering::Relaxed) as f64;
+        Json::obj(vec![
+            ("requests", Json::num(load(&self.requests))),
+            ("succeeded", Json::num(load(&self.succeeded))),
+            ("retried", Json::num(load(&self.retried))),
+            ("deadline_exceeded", Json::num(load(&self.deadline_exceeded))),
+            ("shed", Json::num(load(&self.shed))),
+            ("malformed", Json::num(load(&self.malformed))),
+        ])
+    }
+
+    pub fn fleet_json(&self) -> Json {
+        let load = |a: &AtomicU64| a.load(Ordering::Relaxed) as f64;
+        Json::obj(vec![
+            ("worker_crashes", Json::num(load(&self.worker_crashes))),
+            ("worker_restarts", Json::num(load(&self.worker_restarts))),
+            ("worker_wedged", Json::num(load(&self.worker_wedged))),
+            ("breaker_trips", Json::num(load(&self.breaker_trips))),
+        ])
     }
 }
 
@@ -248,5 +325,36 @@ mod tests {
         assert_eq!(kv.get("bytes").and_then(|v| v.as_f64()), Some(4096.0));
         assert_eq!(kv.get("bytes_in_use").and_then(|v| v.as_f64()), Some(3072.0));
         assert_eq!(j.get("batch_occupancy").and_then(|v| v.as_f64()), Some(2.5));
+    }
+
+    #[test]
+    fn counters_json_is_flat_numeric() {
+        let m = Metrics::new();
+        m.submitted.store(7, Ordering::Relaxed);
+        m.engine_cancelled.store(2, Ordering::Relaxed);
+        let j = m.counters_json();
+        match &j {
+            Json::Obj(fields) => {
+                for (k, v) in fields {
+                    assert!(v.as_f64().is_some(), "counter `{k}` is not numeric");
+                }
+            }
+            other => panic!("expected object, got {other:?}"),
+        }
+        assert_eq!(j.get("submitted").and_then(|v| v.as_f64()), Some(7.0));
+        assert_eq!(j.get("engine_cancelled").and_then(|v| v.as_f64()), Some(2.0));
+    }
+
+    #[test]
+    fn fleet_metrics_json() {
+        let f = FleetMetrics::new();
+        f.requests.store(10, Ordering::Relaxed);
+        f.retried.store(3, Ordering::Relaxed);
+        f.worker_restarts.store(1, Ordering::Relaxed);
+        let r = f.router_json();
+        assert_eq!(r.get("requests").and_then(|v| v.as_f64()), Some(10.0));
+        assert_eq!(r.get("retried").and_then(|v| v.as_f64()), Some(3.0));
+        let fl = f.fleet_json();
+        assert_eq!(fl.get("worker_restarts").and_then(|v| v.as_f64()), Some(1.0));
     }
 }

@@ -9,12 +9,16 @@
 
 pub mod batcher;
 pub mod engine;
+pub mod fleet;
 pub mod metrics;
+pub mod router;
 pub mod scheduler;
 pub mod server;
 
 pub use engine::{EngineConfig, GenEvent, KvPool};
-pub use metrics::Metrics;
+pub use fleet::{Fleet, FleetConfig, WorkerStatus};
+pub use metrics::{FleetMetrics, Metrics};
+pub use router::{Router, RouterConfig};
 pub use scheduler::{EvalCoordinator, EvalRequest, EvalResponse, RequestKind};
 pub use server::EvalServer;
 

@@ -1,0 +1,556 @@
+//! The fleet router: a line-protocol TCP front-end that dispatches each
+//! client request to the least-loaded healthy worker, enforces
+//! per-request deadlines, and transparently retries idempotent requests
+//! on a surviving worker when one fails mid-request.
+//!
+//! Protocol: the worker protocol (see [`super::server`]), verbatim —
+//! the router forwards the client's raw line and relays the worker's
+//! response line(s), so anything a worker serves the router serves. Two
+//! additions:
+//!
+//! * `"deadline_ms"` on any data request bounds its total time in the
+//!   tier (dispatch + all retries); exceeding it returns
+//!   `{"ok": false, "error": "deadline exceeded…", "retryable": true}`.
+//! * `{"cmd": "metrics"}` aggregates across the fleet: per-worker
+//!   status, summed worker counters, and the router's own counters.
+//!
+//! Retry safety: score and generate are deterministic (greedy decode,
+//! pinned by rust/tests/engine.rs), so re-running a request on another
+//! worker returns bit-identical results — failover is invisible to the
+//! client. A streamed generation is only retried when *zero* token
+//! lines have been relayed; after that the stream fails explicitly
+//! rather than replaying tokens.
+//!
+//! When no healthy worker exists the router sheds load with a
+//! structured retryable error instead of hanging; a `shutdown` request
+//! stops the accept loop and [`Router::drain`] waits for in-flight
+//! requests before the process exits.
+
+use std::io::{BufRead, BufReader, Write};
+use std::net::{SocketAddr, TcpListener, TcpStream};
+use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+use anyhow::Result;
+
+use super::fleet::{Fleet, Worker};
+use super::metrics::FleetMetrics;
+use crate::util::Json;
+
+#[derive(Clone, Debug)]
+pub struct RouterConfig {
+    /// Deadline applied when a request carries no `"deadline_ms"`.
+    pub default_deadline: Duration,
+    /// Failover attempts after the first (so `3` means up to 4 workers
+    /// see the request).
+    pub max_retries: usize,
+    /// Poll interval while waiting for a healthy worker (fleet
+    /// restarting) under an unexpired deadline.
+    pub retry_poll: Duration,
+    /// Idle read timeout for client connections.
+    pub idle_timeout: Option<Duration>,
+    /// Per-worker timeout when fanning out metrics aggregation.
+    pub metrics_timeout: Duration,
+}
+
+impl Default for RouterConfig {
+    fn default() -> Self {
+        RouterConfig {
+            default_deadline: Duration::from_secs(30),
+            max_retries: 3,
+            retry_poll: Duration::from_millis(25),
+            idle_timeout: Some(Duration::from_secs(300)),
+            metrics_timeout: Duration::from_millis(500),
+        }
+    }
+}
+
+#[derive(Clone)]
+pub struct Router {
+    fleet: Arc<Fleet>,
+    cfg: RouterConfig,
+    metrics: Arc<FleetMetrics>,
+    in_flight: Arc<AtomicUsize>,
+    shutdown: Arc<AtomicBool>,
+}
+
+/// Outcome of one attempt against one worker.
+enum Attempt {
+    /// A complete response was relayed to the client.
+    Served { ok: bool },
+    /// The worker failed mid-request (connect refused, connection died,
+    /// torn frame, or a retryable worker error) — safe to try elsewhere.
+    WorkerFailed(String),
+    /// The per-request deadline expired during this attempt.
+    TimedOut,
+    /// The *client* connection died — abandon the request.
+    ClientGone,
+}
+
+/// Panic-safe in-flight counter guard (drain correctness).
+struct InFlightGuard(Arc<AtomicUsize>);
+
+impl InFlightGuard {
+    fn new(counter: Arc<AtomicUsize>) -> InFlightGuard {
+        counter.fetch_add(1, Ordering::SeqCst);
+        InFlightGuard(counter)
+    }
+}
+
+impl Drop for InFlightGuard {
+    fn drop(&mut self) {
+        self.0.fetch_sub(1, Ordering::SeqCst);
+    }
+}
+
+impl Router {
+    pub fn new(fleet: Arc<Fleet>, cfg: RouterConfig) -> Router {
+        let metrics = fleet.metrics().clone();
+        Router {
+            fleet,
+            cfg,
+            metrics,
+            in_flight: Arc::new(AtomicUsize::new(0)),
+            shutdown: Arc::new(AtomicBool::new(false)),
+        }
+    }
+
+    /// Stop accepting new connections; `serve` returns at its next poll.
+    pub fn request_shutdown(&self) {
+        self.shutdown.store(true, Ordering::SeqCst);
+    }
+
+    /// Data requests currently being dispatched (drain accounting).
+    pub fn in_flight(&self) -> usize {
+        self.in_flight.load(Ordering::SeqCst)
+    }
+
+    /// Wait for in-flight requests to finish (bounded by `timeout`).
+    /// Returns true when the tier drained cleanly.
+    pub fn drain(&self, timeout: Duration) -> bool {
+        let deadline = Instant::now() + timeout;
+        while self.in_flight() > 0 {
+            if Instant::now() > deadline {
+                return false;
+            }
+            std::thread::sleep(Duration::from_millis(10));
+        }
+        true
+    }
+
+    /// Accept loop: one thread per client connection. Polls the shutdown
+    /// flag between accepts, so `request_shutdown` (e.g. from a SIGTERM
+    /// handler) ends the loop instead of blocking in `accept` forever.
+    pub fn serve(&self, listener: TcpListener) -> Result<()> {
+        listener.set_nonblocking(true)?;
+        while !self.shutdown.load(Ordering::SeqCst) {
+            match listener.accept() {
+                Ok((stream, _peer)) => {
+                    let router = self.clone();
+                    std::thread::spawn(move || {
+                        let _ = router.handle_connection(stream);
+                    });
+                }
+                Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => {
+                    std::thread::sleep(Duration::from_millis(10));
+                }
+                Err(e) => return Err(e.into()),
+            }
+        }
+        Ok(())
+    }
+
+    fn handle_connection(&self, stream: TcpStream) -> Result<()> {
+        stream.set_nonblocking(false)?;
+        stream.set_read_timeout(self.cfg.idle_timeout)?;
+        let mut writer = stream.try_clone()?;
+        let mut reader = BufReader::new(stream);
+        let mut line = String::new();
+        loop {
+            line.clear();
+            match reader.read_line(&mut line) {
+                Ok(0) => return Ok(()),
+                Ok(_) => {}
+                Err(e)
+                    if matches!(
+                        e.kind(),
+                        std::io::ErrorKind::WouldBlock | std::io::ErrorKind::TimedOut
+                    ) =>
+                {
+                    let _ = write_line(
+                        &mut writer,
+                        &error_json("idle timeout: closing connection", true),
+                    );
+                    return Ok(());
+                }
+                // e.g. invalid UTF-8 from the fuzzer: close, never panic
+                Err(_) => return Ok(()),
+            }
+            if line.trim().is_empty() {
+                continue;
+            }
+            let parsed = match Json::parse(&line) {
+                Ok(j) => j,
+                Err(e) => {
+                    self.metrics.malformed.fetch_add(1, Ordering::SeqCst);
+                    let err = error_json(&format!("malformed request: {e}"), false);
+                    write_line(&mut writer, &err)?;
+                    continue;
+                }
+            };
+            if let Some(cmd) = parsed.get("cmd").and_then(|c| c.as_str()) {
+                let resp = match cmd {
+                    "ping" => {
+                        Json::obj(vec![("ok", Json::Bool(true)), ("pong", Json::Bool(true))])
+                    }
+                    "metrics" => self.aggregate_metrics(),
+                    other => error_json(&format!("unknown cmd '{other}'"), false),
+                };
+                write_line(&mut writer, &resp)?;
+                continue;
+            }
+            if !matches!(parsed, Json::Obj(_)) {
+                self.metrics.malformed.fetch_add(1, Ordering::SeqCst);
+                write_line(
+                    &mut writer,
+                    &error_json("malformed request: expected a JSON object", false),
+                )?;
+                continue;
+            }
+            if self.dispatch(&line, &parsed, &mut writer).is_err() {
+                return Ok(()); // client connection is gone
+            }
+        }
+    }
+
+    /// Route one data request: deadline, least-loaded pick, failover.
+    /// `Err` means the *client* connection died; every other outcome is
+    /// written to the client as a structured line.
+    fn dispatch(&self, raw_line: &str, req: &Json, writer: &mut TcpStream) -> Result<()> {
+        let _guard = InFlightGuard::new(self.in_flight.clone());
+        self.metrics.requests.fetch_add(1, Ordering::SeqCst);
+        let deadline = match req.get("deadline_ms") {
+            None => self.cfg.default_deadline,
+            Some(ms) => match ms.as_f64() {
+                Some(v) if v.is_finite() && v >= 1.0 => Duration::from_millis(v as u64),
+                _ => {
+                    self.metrics.malformed.fetch_add(1, Ordering::SeqCst);
+                    let msg = "malformed request: 'deadline_ms' must be a positive integer";
+                    write_line(writer, &error_json(msg, false))?;
+                    return Ok(());
+                }
+            },
+        };
+        let deadline = Instant::now() + deadline;
+        let streaming = req.get("stream") == Some(&Json::Bool(true));
+        let line = format!("{}\n", raw_line.trim_end());
+
+        let mut tried: Vec<usize> = Vec::new();
+        let mut attempts = 0usize;
+        let mut last_err = String::from("no healthy worker available");
+        loop {
+            if Instant::now() >= deadline {
+                self.metrics.deadline_exceeded.fetch_add(1, Ordering::SeqCst);
+                write_line(
+                    writer,
+                    &error_json(&format!("deadline exceeded (last failure: {last_err})"), true),
+                )?;
+                return Ok(());
+            }
+            let Some(worker) = self.pick_worker(&tried) else {
+                if self.fleet.workers().iter().all(|w| w.breaker_open()) {
+                    // nothing will ever come back without intervention
+                    self.metrics.shed.fetch_add(1, Ordering::SeqCst);
+                    write_line(
+                        writer,
+                        &error_json("no healthy workers: all circuit breakers open", true),
+                    )?;
+                    return Ok(());
+                }
+                // every worker is down or already tried: let the
+                // supervisor restart one, within the deadline
+                tried.clear();
+                std::thread::sleep(self.cfg.retry_poll);
+                continue;
+            };
+            if attempts > self.cfg.max_retries {
+                self.metrics.shed.fetch_add(1, Ordering::SeqCst);
+                write_line(
+                    writer,
+                    &error_json(
+                        &format!("request failed after {attempts} attempts: {last_err}"),
+                        true,
+                    ),
+                )?;
+                return Ok(());
+            }
+            attempts += 1;
+            if attempts > 1 {
+                self.metrics.retried.fetch_add(1, Ordering::SeqCst);
+            }
+            worker.begin_request();
+            let outcome = attempt_worker(&worker, &line, deadline, streaming, writer);
+            worker.end_request();
+            match outcome {
+                Attempt::Served { ok } => {
+                    if ok {
+                        self.metrics.succeeded.fetch_add(1, Ordering::SeqCst);
+                    }
+                    return Ok(());
+                }
+                Attempt::WorkerFailed(err) => {
+                    tried.push(worker.index());
+                    last_err = err;
+                }
+                Attempt::TimedOut => {
+                    self.metrics.deadline_exceeded.fetch_add(1, Ordering::SeqCst);
+                    write_line(
+                        writer,
+                        &error_json("deadline exceeded waiting for worker response", true),
+                    )?;
+                    return Ok(());
+                }
+                Attempt::ClientGone => return Err(anyhow::anyhow!("client disconnected")),
+            }
+        }
+    }
+
+    /// Least-loaded healthy worker not yet tried for this request.
+    fn pick_worker(&self, tried: &[usize]) -> Option<Arc<Worker>> {
+        self.fleet
+            .workers()
+            .iter()
+            .filter(|w| w.is_healthy() && w.addr().is_some() && !tried.contains(&w.index()))
+            .min_by_key(|w| (w.in_flight(), w.index()))
+            .cloned()
+    }
+
+    /// Fleet-wide `{"cmd": "metrics"}`: per-worker status, worker
+    /// counters summed across the fleet, and the router's own counters.
+    fn aggregate_metrics(&self) -> Json {
+        let mut aggregate: Vec<(String, f64)> = Vec::new();
+        let mut worker_rows = Vec::new();
+        for w in self.fleet.workers() {
+            let status = w.status();
+            let counters = status
+                .addr
+                .filter(|_| status.healthy)
+                .and_then(|addr| fetch_worker_metrics(addr, self.cfg.metrics_timeout));
+            let fleet_counters = counters.as_ref().and_then(|c| c.get("counters")).cloned();
+            if let Some(Json::Obj(fields)) = fleet_counters {
+                for (k, v) in fields {
+                    if let Some(n) = v.as_f64() {
+                        match aggregate.iter_mut().find(|(name, _)| *name == k) {
+                            Some((_, total)) => *total += n,
+                            None => aggregate.push((k, n)),
+                        }
+                    }
+                }
+            }
+            worker_rows.push(Json::obj(vec![
+                ("index", Json::num(status.index as f64)),
+                ("healthy", Json::Bool(status.healthy)),
+                ("addr", status.addr.map_or(Json::Null, |a| Json::str(a.to_string()))),
+                ("in_flight", Json::num(status.in_flight as f64)),
+                ("restarts", Json::num(status.restarts as f64)),
+                ("breaker_open", Json::Bool(status.breaker_open)),
+            ]));
+        }
+        let aggregate_obj =
+            Json::Obj(aggregate.into_iter().map(|(k, v)| (k, Json::num(v))).collect());
+        Json::obj(vec![
+            ("ok", Json::Bool(true)),
+            ("router", self.metrics.router_json()),
+            ("fleet", self.metrics.fleet_json()),
+            ("workers", Json::arr(worker_rows)),
+            ("aggregate", aggregate_obj),
+        ])
+    }
+}
+
+/// One request → response cycle against one worker, relaying to the
+/// client. Streamed responses relay every line; a worker failure after
+/// at least one relayed token line is reported to the client instead of
+/// retried (tokens must not replay).
+fn attempt_worker(
+    worker: &Worker,
+    line: &str,
+    deadline: Instant,
+    streaming: bool,
+    client: &mut TcpStream,
+) -> Attempt {
+    let Some(addr) = worker.addr() else {
+        return Attempt::WorkerFailed("worker lost its address".into());
+    };
+    let Some(remaining) = deadline.checked_duration_since(Instant::now()) else {
+        return Attempt::TimedOut;
+    };
+    let stream = match TcpStream::connect_timeout(&addr, remaining.min(Duration::from_secs(5))) {
+        Ok(s) => s,
+        Err(e) => return Attempt::WorkerFailed(format!("connect to worker {addr}: {e}")),
+    };
+    if stream.set_write_timeout(Some(remaining)).is_err() {
+        return Attempt::WorkerFailed("worker socket setup failed".into());
+    }
+    let mut wtx = match stream.try_clone() {
+        Ok(w) => w,
+        Err(e) => return Attempt::WorkerFailed(format!("worker socket clone: {e}")),
+    };
+    if let Err(e) = wtx.write_all(line.as_bytes()) {
+        return Attempt::WorkerFailed(format!("write to worker: {e}"));
+    }
+    let mut reader = BufReader::new(stream);
+    let mut relayed = 0usize;
+    let mut buf = String::new();
+    loop {
+        let Some(remaining) = deadline.checked_duration_since(Instant::now()) else {
+            return if relayed == 0 {
+                Attempt::TimedOut
+            } else {
+                fail_stream(client, "deadline exceeded mid-stream")
+            };
+        };
+        if reader.get_ref().set_read_timeout(Some(remaining)).is_err() {
+            return Attempt::WorkerFailed("worker socket setup failed".into());
+        }
+        buf.clear();
+        match reader.read_line(&mut buf) {
+            Ok(0) => {
+                // worker closed without a (complete) response — the
+                // dropped-connection and crash-mid-request cases
+                return if relayed == 0 {
+                    Attempt::WorkerFailed("worker closed the connection mid-request".into())
+                } else {
+                    fail_stream(client, "worker died mid-stream")
+                };
+            }
+            Ok(_) => {}
+            Err(e)
+                if matches!(
+                    e.kind(),
+                    std::io::ErrorKind::WouldBlock | std::io::ErrorKind::TimedOut
+                ) =>
+            {
+                return if relayed == 0 {
+                    Attempt::TimedOut
+                } else {
+                    fail_stream(client, "deadline exceeded mid-stream")
+                };
+            }
+            Err(e) => {
+                return if relayed == 0 {
+                    Attempt::WorkerFailed(format!("read from worker: {e}"))
+                } else {
+                    fail_stream(client, "worker connection failed mid-stream")
+                };
+            }
+        }
+        if !buf.ends_with('\n') {
+            // torn frame (worker died mid-write / truncation fault)
+            return if relayed == 0 {
+                Attempt::WorkerFailed("truncated response frame from worker".into())
+            } else {
+                fail_stream(client, "truncated frame mid-stream")
+            };
+        }
+        let Ok(resp) = Json::parse(&buf) else {
+            return if relayed == 0 {
+                Attempt::WorkerFailed("unparseable response frame from worker".into())
+            } else {
+                fail_stream(client, "unparseable frame mid-stream")
+            };
+        };
+        match resp.get("ok") {
+            None if streaming => {
+                // token line: relay and keep reading
+                if client.write_all(buf.as_bytes()).is_err() {
+                    return Attempt::ClientGone;
+                }
+                relayed += 1;
+            }
+            None => {
+                return Attempt::WorkerFailed("response frame without 'ok' field".into());
+            }
+            Some(ok_val) => {
+                let ok = ok_val == &Json::Bool(true);
+                // a retryable worker error fails over (when nothing has
+                // been relayed yet); every other response is final
+                let retryable = resp.get("retryable") == Some(&Json::Bool(true));
+                if !ok && retryable && relayed == 0 {
+                    let msg = resp
+                        .get("error")
+                        .and_then(|e| e.as_str())
+                        .unwrap_or("worker reported a retryable error");
+                    return Attempt::WorkerFailed(format!("worker error: {msg}"));
+                }
+                if client.write_all(buf.as_bytes()).is_err() {
+                    return Attempt::ClientGone;
+                }
+                return Attempt::Served { ok };
+            }
+        }
+    }
+}
+
+/// Report a mid-stream failure to the client (tokens were already
+/// relayed, so failover would replay them — fail explicitly instead).
+fn fail_stream(client: &mut TcpStream, why: &str) -> Attempt {
+    let gone = write_line(client, &error_json(why, false)).is_err();
+    if gone {
+        Attempt::ClientGone
+    } else {
+        Attempt::Served { ok: false }
+    }
+}
+
+/// Fetch one worker's `{"cmd":"metrics"}` response.
+fn fetch_worker_metrics(addr: SocketAddr, timeout: Duration) -> Option<Json> {
+    let stream = TcpStream::connect_timeout(&addr, timeout).ok()?;
+    stream.set_read_timeout(Some(timeout)).ok()?;
+    stream.set_write_timeout(Some(timeout)).ok()?;
+    let mut writer = stream.try_clone().ok()?;
+    writer.write_all(b"{\"cmd\": \"metrics\"}\n").ok()?;
+    let mut reader = BufReader::new(stream);
+    let mut line = String::new();
+    reader.read_line(&mut line).ok()?;
+    Json::parse(&line).ok()
+}
+
+fn error_json(msg: &str, retryable: bool) -> Json {
+    Json::obj(vec![
+        ("ok", Json::Bool(false)),
+        ("error", Json::str(msg)),
+        ("retryable", Json::Bool(retryable)),
+    ])
+}
+
+fn write_line(writer: &mut impl Write, json: &Json) -> Result<()> {
+    writer.write_all(json.render().as_bytes())?;
+    writer.write_all(b"\n")?;
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn error_json_shape() {
+        let e = error_json("deadline exceeded", true);
+        assert_eq!(e.get("ok"), Some(&Json::Bool(false)));
+        assert_eq!(e.get("retryable"), Some(&Json::Bool(true)));
+        assert_eq!(e.get("error").and_then(|v| v.as_str()), Some("deadline exceeded"));
+    }
+
+    #[test]
+    fn in_flight_guard_is_panic_safe() {
+        let counter = Arc::new(AtomicUsize::new(0));
+        let c2 = counter.clone();
+        let _ = std::panic::catch_unwind(move || {
+            let _g = InFlightGuard::new(c2);
+            panic!("boom");
+        });
+        assert_eq!(counter.load(Ordering::SeqCst), 0);
+    }
+}

@@ -29,6 +29,7 @@
 
 use std::collections::HashMap;
 use std::path::PathBuf;
+use std::sync::atomic::AtomicBool;
 use std::sync::mpsc::{Receiver, RecvTimeoutError, Sender, SyncSender, TryRecvError};
 use std::sync::{Arc, Mutex};
 use std::thread::JoinHandle;
@@ -126,6 +127,10 @@ pub(crate) struct Pending {
     /// Streaming sink: one [`GenEvent`] per decoded token (generation
     /// requests submitted through `submit_streaming`).
     events: Option<Sender<GenEvent>>,
+    /// Cooperative cancellation: set by [`ResponseHandle::cancel`] when
+    /// the client disconnects; the engine reaps the sequence at the next
+    /// tick and releases its KV slot.
+    cancel: Arc<AtomicBool>,
     submitted: Instant,
 }
 
@@ -143,6 +148,7 @@ impl Pending {
             max_new,
             resp: self.resp,
             events: self.events,
+            cancel: self.cancel,
             submitted: self.submitted,
         }
     }
@@ -161,23 +167,89 @@ enum ExecMsg {
     Shutdown,
 }
 
+/// Why the batcher/executor threads exited — recorded by a drop guard in
+/// each thread so a client whose response sender vanished can report the
+/// *cause* ("executor exited: executor thread panicked") instead of
+/// blocking forever or guessing. A panic always overwrites a previously
+/// recorded graceful exit; a graceful exit never overwrites a panic.
+#[derive(Default)]
+pub(crate) struct Epitaph(Mutex<Option<String>>);
+
+impl Epitaph {
+    fn record(&self, msg: String, force: bool) {
+        let mut slot = match self.0.lock() {
+            Ok(g) => g,
+            Err(poisoned) => poisoned.into_inner(),
+        };
+        if force || slot.is_none() {
+            *slot = Some(msg);
+        }
+    }
+
+    fn get(&self) -> Option<String> {
+        match self.0.lock() {
+            Ok(g) => g.clone(),
+            Err(poisoned) => poisoned.into_inner().clone(),
+        }
+    }
+}
+
+/// Drop guard owned by each coordinator thread: records how the thread
+/// exited, panics included — `Drop` runs during unwinding, which is the
+/// only hook that observes a panic from inside the dying thread.
+struct ThreadExitGuard {
+    epitaph: Arc<Epitaph>,
+    thread: &'static str,
+}
+
+impl Drop for ThreadExitGuard {
+    fn drop(&mut self) {
+        if std::thread::panicking() {
+            self.epitaph.record(format!("{} thread panicked", self.thread), true);
+        } else {
+            self.epitaph.record(format!("{} thread shut down", self.thread), false);
+        }
+    }
+}
+
 /// Await-able response slot for one submitted request.
 pub struct ResponseHandle {
     rx: Receiver<Result<EvalResponse>>,
+    epitaph: Arc<Epitaph>,
+    cancel: Arc<AtomicBool>,
 }
 
 impl ResponseHandle {
-    /// Block until the request's batch has executed.
+    fn executor_exited(&self) -> anyhow::Error {
+        match self.epitaph.get() {
+            Some(cause) => anyhow!("executor exited: {cause}"),
+            None => anyhow!("executor exited: response channel dropped without a recorded cause"),
+        }
+    }
+
+    /// Block until the request's batch has executed. If the executor died
+    /// and dropped the response sender, returns a structured "executor
+    /// exited" error instead of blocking the connection forever.
     pub fn wait(self) -> Result<EvalResponse> {
-        self.rx.recv().map_err(|_| anyhow!("executor dropped request"))?
+        match self.rx.recv() {
+            Ok(r) => r,
+            Err(_) => Err(self.executor_exited()),
+        }
     }
 
     pub fn wait_timeout(self, timeout: Duration) -> Result<EvalResponse> {
         match self.rx.recv_timeout(timeout) {
             Ok(r) => r,
             Err(RecvTimeoutError::Timeout) => Err(anyhow!("request timed out")),
-            Err(RecvTimeoutError::Disconnected) => Err(anyhow!("executor dropped request")),
+            Err(RecvTimeoutError::Disconnected) => Err(self.executor_exited()),
         }
+    }
+
+    /// Ask the engine to stop decoding this request (client went away).
+    /// The sequence is reaped at the next engine tick, releasing its KV
+    /// slot instead of decoding the rest of `max_new_tokens` for nobody.
+    pub fn cancel(&self) {
+        self.cancel.store(true, std::sync::atomic::Ordering::SeqCst);
     }
 }
 
@@ -186,6 +258,8 @@ pub struct EvalCoordinator {
     tx: SyncSender<Msg>,
     pub metrics: Arc<Metrics>,
     config: ModelConfig,
+    /// Why the coordinator threads exited, for structured client errors.
+    epitaph: Arc<Epitaph>,
     /// Batcher + executor handles, joined by [`EvalCoordinator::shutdown`].
     threads: Arc<Mutex<Vec<JoinHandle<()>>>>,
 }
@@ -230,23 +304,30 @@ impl EvalCoordinator {
         cfg: CoordinatorConfig,
     ) -> EvalCoordinator {
         let metrics = Arc::new(Metrics::new());
+        let epitaph = Arc::new(Epitaph::default());
         let (tx, rx) = std::sync::mpsc::sync_channel::<Msg>(cfg.max_queue);
         let (batch_tx, batch_rx) = std::sync::mpsc::sync_channel::<ExecMsg>(16);
 
         let m1 = metrics.clone();
+        let e1 = epitaph.clone();
         let batch_size = cfg.batch_size;
         let max_delay = cfg.max_batch_delay;
         let batcher = std::thread::Builder::new()
             .name("cq-batcher".into())
-            .spawn(move || batch_loop(rx, batch_tx, batch_size, max_delay, m1))
+            .spawn(move || {
+                let _exit = ThreadExitGuard { epitaph: e1, thread: "batcher" };
+                batch_loop(rx, batch_tx, batch_size, max_delay, m1)
+            })
             .expect("spawn batcher");
 
         let m2 = metrics.clone();
+        let e2 = epitaph.clone();
         let engine_cfg = cfg.engine;
         let artifacts = cfg.artifacts;
         let executor = std::thread::Builder::new()
             .name("pjrt-executor".into())
             .spawn(move || {
+                let _exit = ThreadExitGuard { epitaph: e2, thread: "executor" };
                 executor_loop(store, model_config, weight_sets, artifacts, batch_rx, m2, engine_cfg)
             })
             .expect("spawn executor");
@@ -255,6 +336,7 @@ impl EvalCoordinator {
             tx,
             metrics,
             config: model_config,
+            epitaph,
             threads: Arc::new(Mutex::new(vec![batcher, executor])),
         }
     }
@@ -288,11 +370,18 @@ impl EvalCoordinator {
     ) -> Result<ResponseHandle> {
         self.validate(&req)?;
         let (resp_tx, resp_rx) = std::sync::mpsc::sync_channel(1);
+        let cancel = Arc::new(AtomicBool::new(false));
         self.metrics.submitted.fetch_add(1, std::sync::atomic::Ordering::Relaxed);
         self.tx
-            .send(Msg::Req(Pending { req, resp: resp_tx, events, submitted: Instant::now() }))
+            .send(Msg::Req(Pending {
+                req,
+                resp: resp_tx,
+                events,
+                cancel: cancel.clone(),
+                submitted: Instant::now(),
+            }))
             .map_err(|_| anyhow!("coordinator shut down"))?;
-        Ok(ResponseHandle { rx: resp_rx })
+        Ok(ResponseHandle { rx: resp_rx, epitaph: self.epitaph.clone(), cancel })
     }
 
     /// Submit one request; returns a handle resolving when its batch has
@@ -945,4 +1034,72 @@ fn execute_batch(
         })
         .collect();
     Ok(responses)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn orphan_handle(epitaph: Arc<Epitaph>) -> ResponseHandle {
+        // build a handle whose sender is already gone — the state a client
+        // is left in when the executor dies mid-request
+        let (tx, rx) = std::sync::mpsc::sync_channel::<Result<EvalResponse>>(1);
+        drop(tx);
+        ResponseHandle { rx, epitaph, cancel: Arc::new(AtomicBool::new(false)) }
+    }
+
+    #[test]
+    fn wait_reports_executor_panic_instead_of_blocking() {
+        let epitaph = Arc::new(Epitaph::default());
+        epitaph.record("executor thread panicked".into(), true);
+        let err = orphan_handle(epitaph).wait().unwrap_err().to_string();
+        assert!(err.contains("executor exited"), "got: {err}");
+        assert!(err.contains("panicked"), "got: {err}");
+    }
+
+    #[test]
+    fn wait_timeout_reports_disconnect_cause() {
+        let epitaph = Arc::new(Epitaph::default());
+        epitaph.record("executor thread shut down".into(), false);
+        let err = orphan_handle(epitaph)
+            .wait_timeout(Duration::from_millis(50))
+            .unwrap_err()
+            .to_string();
+        assert!(err.contains("executor exited"), "got: {err}");
+        assert!(err.contains("shut down"), "got: {err}");
+    }
+
+    #[test]
+    fn epitaph_panic_outranks_graceful_exit() {
+        let e = Epitaph::default();
+        e.record("batcher thread shut down".into(), false);
+        e.record("executor thread panicked".into(), true);
+        e.record("executor thread shut down".into(), false);
+        assert_eq!(e.get().as_deref(), Some("executor thread panicked"));
+    }
+
+    #[test]
+    fn exit_guard_records_graceful_exit() {
+        let epitaph = Arc::new(Epitaph::default());
+        let e = epitaph.clone();
+        std::thread::spawn(move || {
+            let _exit = ThreadExitGuard { epitaph: e, thread: "executor" };
+        })
+        .join()
+        .unwrap();
+        assert_eq!(epitaph.get().as_deref(), Some("executor thread shut down"));
+    }
+
+    #[test]
+    fn exit_guard_records_panic() {
+        let epitaph = Arc::new(Epitaph::default());
+        let e = epitaph.clone();
+        let res = std::thread::spawn(move || {
+            let _exit = ThreadExitGuard { epitaph: e, thread: "executor" };
+            panic!("boom");
+        })
+        .join();
+        assert!(res.is_err());
+        assert_eq!(epitaph.get().as_deref(), Some("executor thread panicked"));
+    }
 }

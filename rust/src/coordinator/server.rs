@@ -34,20 +34,29 @@ use std::io::{BufRead, BufReader, Write};
 use std::net::{TcpListener, TcpStream};
 use std::sync::atomic::{AtomicUsize, Ordering};
 use std::sync::Arc;
+use std::time::Duration;
 
 use anyhow::{anyhow, Result};
 
 use super::scheduler::{EvalCoordinator, EvalRequest, RequestKind};
 use super::ActScheme;
 use crate::quant::registry::SchemeId;
-use crate::util::Json;
+use crate::util::{FaultAction, FaultInjector, Json};
 
 /// Default cap on concurrent client connections.
 pub const DEFAULT_MAX_CONNECTIONS: usize = 256;
 
+/// Default idle read timeout: a connection that sends nothing for this
+/// long is closed with a structured error, freeing its slot under the
+/// connection cap instead of pinning it until the cap refuses live
+/// traffic.
+pub const DEFAULT_IDLE_TIMEOUT_SECS: u64 = 300;
+
 pub struct EvalServer {
     pub coordinator: EvalCoordinator,
     max_connections: usize,
+    idle_timeout: Option<Duration>,
+    fault: Arc<FaultInjector>,
     active_connections: Arc<AtomicUsize>,
 }
 
@@ -56,6 +65,8 @@ impl EvalServer {
         EvalServer {
             coordinator,
             max_connections: DEFAULT_MAX_CONNECTIONS,
+            idle_timeout: Some(Duration::from_secs(DEFAULT_IDLE_TIMEOUT_SECS)),
+            fault: Arc::new(FaultInjector::none()),
             active_connections: Arc::new(AtomicUsize::new(0)),
         }
     }
@@ -63,6 +74,21 @@ impl EvalServer {
     /// Cap concurrent connections (clamped to ≥ 1).
     pub fn with_max_connections(mut self, max: usize) -> EvalServer {
         self.max_connections = max.max(1);
+        self
+    }
+
+    /// Idle read timeout per connection (`None` disables — the pre-PR-7
+    /// behaviour where a dead client pinned its slot forever).
+    pub fn with_idle_timeout(mut self, timeout: Option<Duration>) -> EvalServer {
+        self.idle_timeout = timeout;
+        self
+    }
+
+    /// Install a deterministic fault-injection plan (worker mode threads
+    /// the parsed `CROSSQUANT_FAULT` plan through here; the default
+    /// injector never fires).
+    pub fn with_fault_injector(mut self, fault: Arc<FaultInjector>) -> EvalServer {
+        self.fault = fault;
         self
     }
 
@@ -89,6 +115,8 @@ impl EvalServer {
                 let refusal = Json::obj(vec![
                     ("ok", Json::Bool(false)),
                     ("error", Json::str("server at connection capacity")),
+                    // capacity is transient — a router should try elsewhere
+                    ("retryable", Json::Bool(true)),
                 ]);
                 let _ = stream.write_all(refusal.render().as_bytes());
                 let _ = stream.write_all(b"\n");
@@ -96,8 +124,10 @@ impl EvalServer {
             }
             let coordinator = self.coordinator.clone();
             let active = self.active_connections.clone();
+            let idle_timeout = self.idle_timeout;
+            let fault = self.fault.clone();
             std::thread::spawn(move || {
-                let _ = handle_connection(coordinator, stream);
+                let _ = handle_connection(coordinator, stream, idle_timeout, fault);
                 active.fetch_sub(1, Ordering::SeqCst);
             });
         }
@@ -105,49 +135,109 @@ impl EvalServer {
     }
 }
 
-fn handle_connection(coordinator: EvalCoordinator, stream: TcpStream) -> Result<()> {
+fn handle_connection(
+    coordinator: EvalCoordinator,
+    stream: TcpStream,
+    idle_timeout: Option<Duration>,
+    fault: Arc<FaultInjector>,
+) -> Result<()> {
     let peer = stream.peer_addr().ok();
+    stream.set_read_timeout(idle_timeout)?;
     let mut writer = stream.try_clone()?;
-    let reader = BufReader::new(stream);
-    for line in reader.lines() {
-        let line = line?;
+    let mut reader = BufReader::new(stream);
+    let mut line = String::new();
+    loop {
+        line.clear();
+        match reader.read_line(&mut line) {
+            Ok(0) => break, // EOF: client closed cleanly
+            Ok(_) => {}
+            Err(e)
+                if matches!(
+                    e.kind(),
+                    std::io::ErrorKind::WouldBlock | std::io::ErrorKind::TimedOut
+                ) =>
+            {
+                // idle client: free the slot under the connection cap
+                let _ = write_line(
+                    &mut writer,
+                    &Json::obj(vec![
+                        ("ok", Json::Bool(false)),
+                        ("error", Json::str("idle timeout: closing connection")),
+                        ("retryable", Json::Bool(true)),
+                    ]),
+                );
+                break;
+            }
+            Err(e) => return Err(e.into()),
+        }
         if line.trim().is_empty() {
             continue;
         }
+        // fault injection counts *data* requests only — control frames
+        // (ping/metrics heartbeats) must never perturb a deterministic
+        // fault schedule
+        let parsed = Json::parse(&line);
+        let is_data = matches!(&parsed, Ok(j) if j.get("cmd").is_none());
+        let mut action = FaultAction::None;
+        if is_data {
+            action = fault.apply_local(fault.on_data_request());
+            if action == FaultAction::DropConnection {
+                return Ok(()); // drop closes the socket, no response line
+            }
+        }
         // streamed generation writes its own lines; everything else is
         // one-request → one-response
-        let streamed = match Json::parse(&line) {
-            Ok(req) if wants_stream(&req) => {
-                match handle_stream(&coordinator, &mut writer, &req) {
-                    Ok(()) => true,
-                    Err(e) => {
-                        write_line(
-                            &mut writer,
-                            &Json::obj(vec![
-                                ("ok", Json::Bool(false)),
-                                ("error", Json::str(format!("{e}"))),
-                            ]),
-                        )?;
-                        true
+        if action == FaultAction::None {
+            let streamed = match &parsed {
+                Ok(req) if wants_stream(req) => {
+                    match handle_stream(&coordinator, &mut writer, req) {
+                        Ok(()) => true,
+                        Err(e) => {
+                            write_line(&mut writer, &error_response(&e))?;
+                            true
+                        }
                     }
                 }
+                _ => false,
+            };
+            if streamed {
+                continue;
             }
-            _ => false,
-        };
-        if streamed {
-            continue;
         }
         let response = match handle_line(&coordinator, &line) {
             Ok(json) => json,
-            Err(e) => Json::obj(vec![
-                ("ok", Json::Bool(false)),
-                ("error", Json::str(format!("{e}"))),
-            ]),
+            Err(e) => error_response(&e),
         };
+        if action == FaultAction::TruncateResponse {
+            // write half the rendered response with no newline, then close
+            // — the client sees a torn frame and a dead connection
+            let rendered = response.render();
+            let half = &rendered.as_bytes()[..rendered.len() / 2];
+            writer.write_all(half)?;
+            writer.flush()?;
+            return Ok(());
+        }
         write_line(&mut writer, &response)?;
     }
     let _ = peer;
     Ok(())
+}
+
+/// Structured error line. `retryable` tells a fleet router whether the
+/// request is safe and useful to retry on another worker: transient
+/// conditions (dead executor, capacity) are; deterministic request
+/// errors (bad scheme, context overflow) are not.
+fn error_response(e: &anyhow::Error) -> Json {
+    let msg = format!("{e}");
+    let retryable = msg.contains("executor exited")
+        || msg.contains("engine at capacity")
+        || msg.contains("coordinator shut down")
+        || msg.contains("server at connection capacity");
+    Json::obj(vec![
+        ("ok", Json::Bool(false)),
+        ("error", Json::str(msg)),
+        ("retryable", Json::Bool(retryable)),
+    ])
 }
 
 fn write_line(writer: &mut impl Write, json: &Json) -> Result<()> {
@@ -229,13 +319,20 @@ fn handle_stream(
     let mut seq_id = 0u64;
     for ev in events.iter() {
         seq_id = ev.seq;
-        write_line(
+        let wrote = write_line(
             writer,
             &Json::obj(vec![
                 ("token", Json::num(ev.token as f64)),
                 ("seq", Json::num(ev.seq as f64)),
             ]),
-        )?;
+        );
+        if let Err(e) = wrote {
+            // broken pipe mid-stream: the client is gone, so cancel the
+            // sequence — the engine reaps it at the next tick and returns
+            // its KV slot instead of decoding the rest for nobody
+            handle.cancel();
+            return Err(e);
+        }
     }
     // the event sender is dropped when the sequence retires, so the
     // response is already resolved here
@@ -267,6 +364,9 @@ pub fn handle_line(coordinator: &EvalCoordinator, line: &str) -> Result<Json> {
             "metrics" => Ok(Json::obj(vec![
                 ("ok", Json::Bool(true)),
                 ("metrics", Json::str(coordinator.metrics.summary())),
+                // flat numeric counters — what the fleet router sums when
+                // aggregating metrics across workers
+                ("counters", coordinator.metrics.counters_json()),
                 // engine + KV-pool accounting (batch occupancy, queue
                 // depth, pool utilisation, aggregate decode tok/s)
                 ("engine", coordinator.metrics.engine_json()),

@@ -9,6 +9,8 @@
 //!   eval                 ppl + zero-shot eval of one method×setting cell
 //!   serve-eval           the PJRT/coordinator path: batched eval requests
 //!   serve                TCP server (optionally booted from a .cqa artifact)
+//!   route                fault-tolerant tier: supervised worker fleet with
+//!                        health checks, deadlines, retry/failover
 //!   reproduce <id>       regenerate a paper table/figure (fig1 … tab5, all)
 //!
 //! Global flags: --artifacts <dir> --synthetic --eval-sequences N
@@ -61,6 +63,23 @@ commands:
                                up to max-active-seqs slots)
         [--admission-queue N]  waiting sequences before rejection (default 256)
         [--max-connections N]  concurrent client cap (default 256)
+        [--idle-timeout-s S]   idle-connection read timeout (default 300,
+                               0 disables)
+        [--worker]             fleet-worker mode: bind --addr (use port 0),
+                               print CROSSQUANT_WORKER_READY addr=… on stdout,
+                               honour a CROSSQUANT_FAULT injection plan
+  route [--addr HOST:PORT]     fault-tolerant serving tier (default port 8472):
+        [--num-workers N]      supervise N `serve --worker` processes (default
+        [--artifact PATH]      2) over one artifact, heartbeat + restart with
+        [--synthetic]          exponential backoff and a crash-loop breaker,
+        [--deadline-ms MS]     route requests to the least-loaded healthy
+        [--retries N]          worker with per-request deadlines (default
+                               30000 ms, override per request via
+                               \"deadline_ms\") and transparent retry of
+                               idempotent requests (default 3 failovers);
+                               {\"cmd\": \"metrics\"} aggregates the fleet
+        [--heartbeat-ms MS] [--breaker-crashes N] [--ready-timeout-s S]
+                               supervision knobs (defaults 250 / 5 / 30)
   bench-trend [--out PATH]     measure every served scheme (GOP/s, decode
                                tok/s, NLL) and append the rows to the
                                checked-in trend file
@@ -134,7 +153,7 @@ fn main() -> Result<()> {
         print!("{USAGE}");
         return Ok(());
     }
-    let args = Args::parse(&argv, &["synthetic", "tasks", "help"])?;
+    let args = Args::parse(&argv, &["synthetic", "tasks", "help", "worker"])?;
     if args.flag("help") {
         print!("{USAGE}");
         return Ok(());
@@ -169,6 +188,7 @@ fn main() -> Result<()> {
         ),
         "serve-eval" => serve_eval(&args, args.num("requests", 32usize)?, args.num("alpha", 0.15f32)?),
         "serve" => serve(&args, &args.get_or("addr", "127.0.0.1:8471")),
+        "route" => route(&args, &args.get_or("addr", "127.0.0.1:8472")),
         "bench-trend" => bench_trend(&args),
         "reproduce" => {
             let id = args
@@ -445,7 +465,12 @@ fn weight_variants(weights: &Weights) -> Result<Vec<(String, Vec<f32>)>> {
 }
 
 fn serve(args: &Args, addr: &str) -> Result<()> {
+    use crossquant::coordinator::server::DEFAULT_IDLE_TIMEOUT_SECS;
     use crossquant::coordinator::{EngineConfig, EvalServer};
+    use crossquant::util::FaultInjector;
+    // --worker: spawned by `repro route` — no banner, machine-readable
+    // ready line on stdout, deterministic fault plan from the environment
+    let worker = args.flag("worker");
     // three boot modes:
     //  * --artifact P: boot from the .cqa alone — config comes from its
     //    header, weights.bin is never read, no calibration runs; the
@@ -466,15 +491,17 @@ fn serve(args: &Args, addr: &str) -> Result<()> {
         // through the executor's MountState)
         let art = Artifact::open(&apath)?;
         let scheme = SchemeId::from_artifact_code(art.scheme)?;
-        println!(
-            "mounted artifact {} (scheme {}, α = {}, {} weights, {} sections, {} bytes)",
-            apath.display(),
-            scheme.name(),
-            art.alpha,
-            weight_label(art.weight_bits),
-            art.sections().len(),
-            art.file_bytes()
-        );
+        if !worker {
+            println!(
+                "mounted artifact {} (scheme {}, α = {}, {} weights, {} sections, {} bytes)",
+                apath.display(),
+                scheme.name(),
+                art.alpha,
+                weight_label(art.weight_bits),
+                art.sections().len(),
+                art.file_bytes()
+            );
+        }
         let mounts = vec![("w16".to_string(), apath)];
         (ArtifactStore { dir }, art.config, Vec::new(), mounts, art.alpha, scheme.name())
     } else if args.flag("synthetic") {
@@ -503,6 +530,12 @@ fn serve(args: &Args, addr: &str) -> Result<()> {
         max_waiting: args.num("admission-queue", defaults.max_waiting)?,
     };
     let max_connections = args.num("max-connections", 256usize)?;
+    let idle_secs = args.num("idle-timeout-s", DEFAULT_IDLE_TIMEOUT_SECS)?;
+    let idle_timeout =
+        if idle_secs == 0 { None } else { Some(std::time::Duration::from_secs(idle_secs)) };
+    // absent env → inactive injector; a malformed plan is a hard startup
+    // error (a silently ignored fault plan would fake test passes)
+    let fault = std::sync::Arc::new(FaultInjector::from_env()?);
     let artifact_only = !mounts.is_empty();
     let coordinator = EvalCoordinator::start(
         store,
@@ -511,25 +544,150 @@ fn serve(args: &Args, addr: &str) -> Result<()> {
         CoordinatorConfig { engine, artifacts: mounts, ..Default::default() },
     );
     let listener = std::net::TcpListener::bind(addr)?;
-    println!("serving quantized-LM evaluation + generation on {addr}");
-    if artifact_only {
-        println!("  artifact-only: \"w16\" serves scheme \"{example_scheme}\" (mmap, zero-copy)");
+    if worker {
+        // the supervisor parses this exact line for the dispatch address
+        use std::io::Write as _;
+        let local = listener.local_addr()?;
+        println!("{}{local}", crossquant::coordinator::fleet::READY_PREFIX);
+        std::io::stdout().flush()?;
+        if fault.is_active() {
+            eprintln!("fault injection active: CROSSQUANT_FAULT plan loaded");
+        }
     } else {
-        println!("  weight sets: w16, w8, w4g128 — protocol: one JSON per line");
+        println!("serving quantized-LM evaluation + generation on {addr}");
+        if artifact_only {
+            println!(
+                "  artifact-only: \"w16\" serves scheme \"{example_scheme}\" (mmap, zero-copy)"
+            );
+        } else {
+            println!("  weight sets: w16, w8, w4g128 — protocol: one JSON per line");
+        }
+        println!(
+            "  continuous batching: {max_active} max active seqs, {max_connections} max connections"
+        );
+        println!(
+            "  score:    echo '{{\"tokens\": [1,2,3,4,5], \"scheme\": \"{example_scheme}\", \
+             \"alpha\": {example_alpha}}}' | nc {addr}"
+        );
+        println!(
+            "  generate: echo '{{\"tokens\": [1,2,3,4,5], \"scheme\": \"{example_scheme}\", \
+             \"alpha\": {example_alpha}, \"max_new_tokens\": 8}}' | nc {addr}"
+        );
+        println!(
+            "  stream:   add \"stream\": true for one {{\"token\": ...}} line per decoded token"
+        );
+    }
+    EvalServer::new(coordinator)
+        .with_max_connections(max_connections)
+        .with_idle_timeout(idle_timeout)
+        .with_fault_injector(fault)
+        .serve(listener)
+}
+
+/// Process-wide shutdown flag flipped by SIGTERM/SIGINT. Signal handlers
+/// may only do async-signal-safe work; storing to an atomic qualifies.
+static SHUTDOWN: std::sync::atomic::AtomicBool = std::sync::atomic::AtomicBool::new(false);
+
+extern "C" fn on_shutdown_signal(_sig: i32) {
+    SHUTDOWN.store(true, std::sync::atomic::Ordering::SeqCst);
+}
+
+/// Install SIGTERM/SIGINT handlers without a libc dependency (the same
+/// pattern as the raw mmap bindings in util/mmap.rs).
+fn install_shutdown_handlers() {
+    extern "C" {
+        fn signal(signum: i32, handler: extern "C" fn(i32)) -> usize;
+    }
+    const SIGINT: i32 = 2;
+    const SIGTERM: i32 = 15;
+    unsafe {
+        signal(SIGINT, on_shutdown_signal);
+        signal(SIGTERM, on_shutdown_signal);
+    }
+}
+
+/// The fault-tolerant serving tier: a supervised fleet of `serve
+/// --worker` processes behind a deadline-enforcing, retrying router.
+/// SIGTERM drains in-flight requests before the fleet is torn down.
+fn route(args: &Args, addr: &str) -> Result<()> {
+    use crossquant::coordinator::{Fleet, FleetConfig, FleetMetrics, Router, RouterConfig};
+    use std::sync::atomic::Ordering;
+    use std::sync::Arc;
+    use std::time::Duration;
+
+    let num_workers = args.num("num-workers", 2usize)?;
+    let exe = std::env::current_exe()?;
+    // workers bind an ephemeral port and report it via their ready line
+    let mut worker_args: Vec<String> =
+        ["serve", "--worker", "--addr", "127.0.0.1:0"].iter().map(|s| s.to_string()).collect();
+    if args.flag("synthetic") {
+        worker_args.push("--synthetic".to_string());
+    }
+    for flag in [
+        "artifact",
+        "artifacts",
+        "seed",
+        "max-active-seqs",
+        "kv-pool-mb",
+        "admission-queue",
+        "max-connections",
+        "idle-timeout-s",
+    ] {
+        if let Some(v) = args.get(flag) {
+            worker_args.push(format!("--{flag}"));
+            worker_args.push(v.to_string());
+        }
+    }
+    let defaults = FleetConfig::default();
+    let ready_timeout = Duration::from_secs(args.num("ready-timeout-s", 30u64)?);
+    let fleet_cfg = FleetConfig {
+        num_workers,
+        worker_cmd: exe,
+        worker_args,
+        heartbeat_interval: Duration::from_millis(args.num("heartbeat-ms", 250u64)?),
+        breaker_crashes: args.num("breaker-crashes", defaults.breaker_crashes)?,
+        ready_timeout,
+        ..defaults
+    };
+    let fleet = Arc::new(Fleet::start(fleet_cfg, Arc::new(FleetMetrics::new()))?);
+    fleet.wait_ready(ready_timeout)?;
+    let router_cfg = RouterConfig {
+        default_deadline: Duration::from_millis(args.num("deadline-ms", 30_000u64)?),
+        max_retries: args.num("retries", 3usize)?,
+        ..Default::default()
+    };
+    let default_deadline = router_cfg.default_deadline;
+    let max_retries = router_cfg.max_retries;
+    let router = Router::new(fleet.clone(), router_cfg);
+
+    install_shutdown_handlers();
+    let watcher = router.clone();
+    std::thread::spawn(move || {
+        while !SHUTDOWN.load(Ordering::SeqCst) {
+            std::thread::sleep(Duration::from_millis(50));
+        }
+        watcher.request_shutdown();
+    });
+
+    let listener = std::net::TcpListener::bind(addr)?;
+    println!("routing across {num_workers} workers on {addr}");
+    for w in fleet.status() {
+        let a = w.addr.map_or("<down>".to_string(), |a| a.to_string());
+        println!("  worker {}: {a} (pid {})", w.index, w.pid.unwrap_or(0));
     }
     println!(
-        "  continuous batching: {max_active} max active seqs, {max_connections} max connections"
+        "  deadlines: {} ms default (per-request \"deadline_ms\"), {} failover retries",
+        default_deadline.as_millis(),
+        max_retries
     );
-    println!(
-        "  score:    echo '{{\"tokens\": [1,2,3,4,5], \"scheme\": \"{example_scheme}\", \
-         \"alpha\": {example_alpha}}}' | nc {addr}"
-    );
-    println!(
-        "  generate: echo '{{\"tokens\": [1,2,3,4,5], \"scheme\": \"{example_scheme}\", \
-         \"alpha\": {example_alpha}, \"max_new_tokens\": 8}}' | nc {addr}"
-    );
-    println!("  stream:   add \"stream\": true for one {{\"token\": ...}} line per decoded token");
-    EvalServer::new(coordinator).with_max_connections(max_connections).serve(listener)
+    println!("  metrics:  echo '{{\"cmd\": \"metrics\"}}' | nc {addr}");
+    router.serve(listener)?;
+    eprintln!("shutdown: draining in-flight requests");
+    if !router.drain(Duration::from_secs(10)) {
+        eprintln!("drain timed out with {} requests in flight", router.in_flight());
+    }
+    fleet.shutdown();
+    Ok(())
 }
 
 /// Measure every served scheme on a small fixed synthetic model —

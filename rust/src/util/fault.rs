@@ -1,0 +1,274 @@
+//! Deterministic fault injection for the serving tier.
+//!
+//! A worker process parses the `CROSSQUANT_FAULT` environment variable once at
+//! startup into a [`FaultInjector`]. Request-handling code consults the
+//! injector on every *data* request (score/generate — never `cmd` control
+//! frames, so heartbeats and metrics cannot perturb the schedule) and applies
+//! whichever action the plan selects. Because the plan keys off a per-process
+//! request counter, fault scenarios are bit-for-bit reproducible: the Nth data
+//! request always hits the same fault regardless of thread interleaving.
+//!
+//! Plan grammar (`;`-separated rules, first matching rule wins):
+//!
+//! ```text
+//! CROSSQUANT_FAULT="panic:nth=5"              # abort the process on request 5
+//! CROSSQUANT_FAULT="latency:ms=250,every=2"   # sleep 250ms on every 2nd request
+//! CROSSQUANT_FAULT="drop:nth=3"               # drop the connection, no response
+//! CROSSQUANT_FAULT="truncate:nth=2"           # write half a response, no newline
+//! CROSSQUANT_FAULT="latency:ms=50,after=10"   # sleep on every request past 10
+//! ```
+//!
+//! Selectors: `nth=K` fires exactly on the Kth data request (1-based),
+//! `every=K` fires on every Kth request, `after=K` fires on every request
+//! strictly after the Kth. A rule with no selector fires on every request.
+
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::time::Duration;
+
+/// What the request handler should do to the current request.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum FaultAction {
+    /// No fault scheduled for this request.
+    None,
+    /// Abort the whole process (simulates a worker crash mid-request).
+    Panic,
+    /// Sleep for the given duration before responding.
+    Latency(Duration),
+    /// Close the connection without writing a response line.
+    DropConnection,
+    /// Write a truncated response (partial line, no terminating newline),
+    /// then close the connection.
+    TruncateResponse,
+}
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+enum Selector {
+    /// Fire exactly on the Kth request (1-based).
+    Nth(u64),
+    /// Fire on every Kth request.
+    Every(u64),
+    /// Fire on every request strictly after the Kth.
+    After(u64),
+    /// Fire on every request.
+    Always,
+}
+
+impl Selector {
+    fn matches(self, n: u64) -> bool {
+        match self {
+            Selector::Nth(k) => n == k,
+            Selector::Every(k) => k > 0 && n % k == 0,
+            Selector::After(k) => n > k,
+            Selector::Always => true,
+        }
+    }
+}
+
+#[derive(Debug, Clone, Copy)]
+struct Rule {
+    selector: Selector,
+    action: FaultAction,
+}
+
+/// Parsed fault plan plus the shared data-request counter.
+#[derive(Debug)]
+pub struct FaultInjector {
+    rules: Vec<Rule>,
+    counter: AtomicU64,
+}
+
+impl FaultInjector {
+    /// Parse the `CROSSQUANT_FAULT` environment variable. Absent or empty
+    /// means no faults; a malformed plan is a hard error so a typo in a test
+    /// harness can never silently disable the scenario it meant to set up.
+    pub fn from_env() -> anyhow::Result<Self> {
+        match std::env::var("CROSSQUANT_FAULT") {
+            Ok(plan) => Self::parse(&plan),
+            Err(_) => Ok(Self::none()),
+        }
+    }
+
+    /// An injector that never fires.
+    pub fn none() -> Self {
+        FaultInjector {
+            rules: Vec::new(),
+            counter: AtomicU64::new(0),
+        }
+    }
+
+    /// True when the plan contains at least one rule.
+    pub fn is_active(&self) -> bool {
+        !self.rules.is_empty()
+    }
+
+    /// Parse a plan string (see module docs for the grammar).
+    pub fn parse(plan: &str) -> anyhow::Result<Self> {
+        let mut rules = Vec::new();
+        for part in plan.split(';') {
+            let part = part.trim();
+            if part.is_empty() {
+                continue;
+            }
+            rules.push(Self::parse_rule(part)?);
+        }
+        Ok(FaultInjector {
+            rules,
+            counter: AtomicU64::new(0),
+        })
+    }
+
+    fn parse_rule(rule: &str) -> anyhow::Result<Rule> {
+        let (kind, args) = match rule.split_once(':') {
+            Some((k, a)) => (k.trim(), a.trim()),
+            None => (rule, ""),
+        };
+        let mut selector = Selector::Always;
+        let mut latency_ms: Option<u64> = None;
+        for kv in args.split(',') {
+            let kv = kv.trim();
+            if kv.is_empty() {
+                continue;
+            }
+            let (key, value) = kv.split_once('=').ok_or_else(|| {
+                anyhow::anyhow!("fault rule `{rule}`: expected key=value, got `{kv}`")
+            })?;
+            let value: u64 = value
+                .trim()
+                .parse()
+                .map_err(|_| anyhow::anyhow!("fault rule `{rule}`: `{kv}` is not an integer"))?;
+            match key.trim() {
+                "nth" => selector = Selector::Nth(value),
+                "every" => {
+                    if value == 0 {
+                        anyhow::bail!("fault rule `{rule}`: every=0 is meaningless");
+                    }
+                    selector = Selector::Every(value);
+                }
+                "after" => selector = Selector::After(value),
+                "ms" => latency_ms = Some(value),
+                other => anyhow::bail!("fault rule `{rule}`: unknown key `{other}`"),
+            }
+        }
+        let action = match kind {
+            "panic" => FaultAction::Panic,
+            "latency" => {
+                let ms = latency_ms.ok_or_else(|| {
+                    anyhow::anyhow!("fault rule `{rule}`: latency requires ms=<int>")
+                })?;
+                FaultAction::Latency(Duration::from_millis(ms))
+            }
+            "drop" => FaultAction::DropConnection,
+            "truncate" => FaultAction::TruncateResponse,
+            other => anyhow::bail!("unknown fault kind `{other}` in rule `{rule}`"),
+        };
+        if kind != "latency" && latency_ms.is_some() {
+            anyhow::bail!("fault rule `{rule}`: ms= only applies to latency");
+        }
+        Ok(Rule { selector, action })
+    }
+
+    /// Advance the data-request counter and return the action scheduled for
+    /// this request, if any. First matching rule wins.
+    pub fn on_data_request(&self) -> FaultAction {
+        if self.rules.is_empty() {
+            return FaultAction::None;
+        }
+        let n = self.counter.fetch_add(1, Ordering::SeqCst) + 1;
+        for rule in &self.rules {
+            if rule.selector.matches(n) {
+                return rule.action;
+            }
+        }
+        FaultAction::None
+    }
+
+    /// Apply the process-local side of an action: sleeping for latency faults
+    /// and aborting for panic faults. Connection-level actions (drop,
+    /// truncate) are returned to the caller, which owns the socket.
+    pub fn apply_local(&self, action: FaultAction) -> FaultAction {
+        match action {
+            FaultAction::Latency(d) => {
+                std::thread::sleep(d);
+                FaultAction::None
+            }
+            FaultAction::Panic => {
+                eprintln!("CROSSQUANT_FAULT: injected panic, aborting worker");
+                std::process::abort();
+            }
+            other => other,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn empty_plan_never_fires() {
+        let inj = FaultInjector::parse("").unwrap();
+        assert!(!inj.is_active());
+        for _ in 0..16 {
+            assert_eq!(inj.on_data_request(), FaultAction::None);
+        }
+    }
+
+    #[test]
+    fn nth_fires_exactly_once() {
+        let inj = FaultInjector::parse("panic:nth=3").unwrap();
+        assert_eq!(inj.on_data_request(), FaultAction::None);
+        assert_eq!(inj.on_data_request(), FaultAction::None);
+        assert_eq!(inj.on_data_request(), FaultAction::Panic);
+        assert_eq!(inj.on_data_request(), FaultAction::None);
+    }
+
+    #[test]
+    fn every_fires_periodically() {
+        let inj = FaultInjector::parse("latency:ms=5,every=2").unwrap();
+        let expect = FaultAction::Latency(Duration::from_millis(5));
+        assert_eq!(inj.on_data_request(), FaultAction::None);
+        assert_eq!(inj.on_data_request(), expect);
+        assert_eq!(inj.on_data_request(), FaultAction::None);
+        assert_eq!(inj.on_data_request(), expect);
+    }
+
+    #[test]
+    fn after_fires_past_threshold() {
+        let inj = FaultInjector::parse("drop:after=2").unwrap();
+        assert_eq!(inj.on_data_request(), FaultAction::None);
+        assert_eq!(inj.on_data_request(), FaultAction::None);
+        assert_eq!(inj.on_data_request(), FaultAction::DropConnection);
+        assert_eq!(inj.on_data_request(), FaultAction::DropConnection);
+    }
+
+    #[test]
+    fn multiple_rules_first_match_wins() {
+        let inj = FaultInjector::parse("truncate:nth=2; drop:every=3").unwrap();
+        assert_eq!(inj.on_data_request(), FaultAction::None);
+        assert_eq!(inj.on_data_request(), FaultAction::TruncateResponse);
+        assert_eq!(inj.on_data_request(), FaultAction::DropConnection);
+        assert_eq!(inj.on_data_request(), FaultAction::None);
+    }
+
+    #[test]
+    fn malformed_plans_are_rejected() {
+        for bad in [
+            "explode:nth=1",
+            "panic:nth",
+            "panic:nth=x",
+            "latency:every=2",
+            "latency:ms=1,bogus=2",
+            "drop:ms=5",
+            "latency:ms=1,every=0",
+        ] {
+            assert!(FaultInjector::parse(bad).is_err(), "accepted: {bad}");
+        }
+    }
+
+    #[test]
+    fn bare_kind_fires_always() {
+        let inj = FaultInjector::parse("drop").unwrap();
+        assert_eq!(inj.on_data_request(), FaultAction::DropConnection);
+        assert_eq!(inj.on_data_request(), FaultAction::DropConnection);
+    }
+}

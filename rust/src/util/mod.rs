@@ -2,11 +2,13 @@
 //! see Cargo.toml).
 
 pub mod crc;
+pub mod fault;
 pub mod json;
 pub mod lru;
 pub mod mmap;
 
 pub use crc::crc32;
+pub use fault::{FaultAction, FaultInjector};
 pub use json::Json;
 pub use lru::LruCache;
 pub use mmap::Mmap;

@@ -1,6 +1,7 @@
 //! Failure-mode tests: corrupt artifacts, malformed manifests, truncated
-//! weight files, and JSON round-trips. None of these require `make
-//! artifacts`.
+//! weight files, JSON round-trips — and the fault-tolerant serving tier
+//! (a real supervised worker fleet with deterministic fault injection).
+//! None of these require `make artifacts`.
 
 use std::path::PathBuf;
 
@@ -97,6 +98,381 @@ fn table_json_roundtrips_through_parser() {
             assert_eq!(v.get("rows").unwrap().as_arr().unwrap().len(), 2);
         }
         Err(e) => panic!("table JSON must be parseable: {e}"),
+    }
+}
+
+// ─────────────────────────────────────────────────────────────────────
+// Fleet suite: real `repro serve --worker` processes over a tiny .cqa
+// artifact, supervised by Fleet and fronted by Router. Faults are
+// injected deterministically via per-worker CROSSQUANT_FAULT plans.
+
+mod fleet_suite {
+    use super::tmp_dir;
+    use std::io::{BufRead, BufReader, Write};
+    use std::net::{SocketAddr, TcpListener, TcpStream};
+    use std::path::{Path, PathBuf};
+    use std::sync::Arc;
+    use std::time::{Duration, Instant};
+
+    use crossquant::coordinator::{Fleet, FleetConfig, FleetMetrics, Router, RouterConfig};
+    use crossquant::corpus::CorpusGen;
+    use crossquant::model::quantized::quantize_to_artifact;
+    use crossquant::model::weights::synthetic_weights;
+    use crossquant::model::ModelConfig;
+    use crossquant::quant::registry::{SchemeId, StaticSpec};
+    use crossquant::quant::Bits;
+    use crossquant::util::Json;
+
+    /// Build a minimal .cqa artifact every worker in a fleet mmaps.
+    fn tiny_artifact(dir: &Path) -> PathBuf {
+        let cfg = ModelConfig {
+            vocab: 64,
+            d_model: 16,
+            n_layers: 1,
+            n_heads: 2,
+            d_ff: 32,
+            seq_len: 32,
+            eval_batch: 2,
+        };
+        let weights = synthetic_weights(cfg, 0xFEE7);
+        let mut gen = CorpusGen::new(cfg.vocab, 0x5CA1E);
+        let calib: Vec<Vec<u32>> = (0..2).map(|_| gen.sequence(cfg.seq_len)).collect();
+        let spec = StaticSpec::new(SchemeId::CrossQuantStatic, 0.15, 0);
+        let path = dir.join("model.cqa");
+        quantize_to_artifact(&weights, Bits::Int8, Bits::Int8, &spec, &calib, &path).unwrap();
+        path
+    }
+
+    /// Start a fleet of worker processes (test-tuned supervision
+    /// timings) plus a router, and wait until every worker is ready.
+    fn start_tier(
+        num_workers: usize,
+        artifact: &Path,
+        per_worker_env: Vec<Vec<(String, String)>>,
+        tune: impl FnOnce(&mut FleetConfig),
+    ) -> (Arc<Fleet>, Router) {
+        let mut cfg = FleetConfig {
+            num_workers,
+            worker_cmd: PathBuf::from(env!("CARGO_BIN_EXE_repro")),
+            worker_args: vec![
+                "serve".to_string(),
+                "--worker".to_string(),
+                "--addr".to_string(),
+                "127.0.0.1:0".to_string(),
+                "--artifact".to_string(),
+                artifact.display().to_string(),
+            ],
+            per_worker_env,
+            heartbeat_interval: Duration::from_millis(50),
+            heartbeat_timeout: Duration::from_millis(500),
+            initial_backoff: Duration::from_millis(50),
+            max_backoff: Duration::from_millis(400),
+            ..FleetConfig::default()
+        };
+        tune(&mut cfg);
+        let fleet = Arc::new(Fleet::start(cfg, Arc::new(FleetMetrics::new())).unwrap());
+        fleet.wait_ready(Duration::from_secs(60)).unwrap();
+        let router = Router::new(
+            fleet.clone(),
+            RouterConfig {
+                default_deadline: Duration::from_secs(20),
+                max_retries: 3,
+                retry_poll: Duration::from_millis(20),
+                ..RouterConfig::default()
+            },
+        );
+        (fleet, router)
+    }
+
+    /// Serve the router on an ephemeral port from a background thread.
+    fn start_router(router: &Router) -> SocketAddr {
+        let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+        let addr = listener.local_addr().unwrap();
+        let r = router.clone();
+        std::thread::spawn(move || {
+            let _ = r.serve(listener);
+        });
+        addr
+    }
+
+    /// One request → one JSON response line through the router.
+    fn request(addr: SocketAddr, line: &str) -> Json {
+        let mut s = TcpStream::connect(addr).unwrap();
+        s.set_read_timeout(Some(Duration::from_secs(60))).unwrap();
+        s.write_all(line.as_bytes()).unwrap();
+        s.write_all(b"\n").unwrap();
+        let mut reader = BufReader::new(s);
+        let mut resp = String::new();
+        reader.read_line(&mut resp).unwrap();
+        Json::parse(&resp).unwrap_or_else(|e| panic!("unparseable response {resp:?}: {e}"))
+    }
+
+    fn score_line(seed: usize) -> String {
+        let tokens: Vec<String> = (0..8).map(|i| ((seed * 7 + i * 3) % 64).to_string()).collect();
+        format!(
+            "{{\"tokens\": [{}], \"scheme\": \"crossquant-static\", \"alpha\": 0.15}}",
+            tokens.join(", ")
+        )
+    }
+
+    fn generate_line(seed: usize) -> String {
+        format!(
+            "{{\"tokens\": [{}, {}], \"scheme\": \"crossquant-static\", \"alpha\": 0.15, \
+             \"max_new_tokens\": 3}}",
+            seed % 64,
+            (seed * 5) % 64
+        )
+    }
+
+    fn is_ok(resp: &Json) -> bool {
+        resp.get("ok") == Some(&Json::Bool(true))
+    }
+
+    fn wait_until(timeout: Duration, what: &str, mut cond: impl FnMut() -> bool) {
+        let deadline = Instant::now() + timeout;
+        while !cond() {
+            assert!(Instant::now() < deadline, "timed out waiting for {what}");
+            std::thread::sleep(Duration::from_millis(50));
+        }
+    }
+
+    /// The headline acceptance scenario: concurrent mixed load on a
+    /// 4-worker fleet, `kill -9` one worker mid-stream of requests —
+    /// clients must see zero failures (transparent failover) and the
+    /// victim must rejoin the fleet within its restart backoff.
+    #[test]
+    fn kill9_under_load_is_invisible_to_clients_and_worker_rejoins() {
+        let dir = tmp_dir("fleet-kill9");
+        let artifact = tiny_artifact(&dir);
+        let (fleet, router) = start_tier(4, &artifact, Vec::new(), |_| {});
+        let addr = start_router(&router);
+
+        // clients loop until told to stop, so the load provably spans
+        // the kill and the restart window
+        let stop = Arc::new(std::sync::atomic::AtomicBool::new(false));
+        let handles: Vec<_> = (0..4)
+            .map(|c| {
+                let stop = stop.clone();
+                std::thread::spawn(move || {
+                    let (mut i, mut done, mut failures) = (0usize, 0usize, Vec::new());
+                    while !stop.load(std::sync::atomic::Ordering::SeqCst) {
+                        let line = if (c + i) % 3 == 0 {
+                            generate_line(c * 100 + i)
+                        } else {
+                            score_line(c * 100 + i)
+                        };
+                        let resp = request(addr, &line);
+                        if !is_ok(&resp) {
+                            failures.push(resp.render());
+                        }
+                        i += 1;
+                        done += 1;
+                    }
+                    (done, failures)
+                })
+            })
+            .collect();
+
+        // let the load ramp, then hard-kill one worker under it
+        std::thread::sleep(Duration::from_millis(100));
+        let victim = fleet.workers()[0].pid().expect("worker 0 has a pid");
+        let killed = std::process::Command::new("kill")
+            .args(["-9", &victim.to_string()])
+            .status()
+            .unwrap();
+        assert!(killed.success(), "kill -9 {victim} failed");
+
+        // keep the load running until the victim has rejoined the fleet
+        wait_until(Duration::from_secs(30), "worker 0 to rejoin", || {
+            fleet.workers()[0].is_healthy()
+        });
+        std::thread::sleep(Duration::from_millis(200));
+        stop.store(true, std::sync::atomic::Ordering::SeqCst);
+
+        let mut total = 0usize;
+        for h in handles {
+            let (done, failures) = h.join().unwrap();
+            total += done;
+            assert!(failures.is_empty(), "client-visible failures after kill -9: {failures:?}");
+        }
+        assert!(total > 0, "clients made no requests");
+        assert!(fleet.workers()[0].restarts() >= 1);
+        assert!(fleet.metrics().worker_crashes.load(std::sync::atomic::Ordering::SeqCst) >= 1);
+        fleet.shutdown();
+        std::fs::remove_dir_all(dir).ok();
+    }
+
+    /// A worker stalled past the request deadline yields a structured,
+    /// retryable deadline error — not a hang, not a panic.
+    #[test]
+    fn deadline_exceeded_returns_structured_retryable_error() {
+        let dir = tmp_dir("fleet-deadline");
+        let artifact = tiny_artifact(&dir);
+        // every data request on the only worker stalls for 2 s;
+        // heartbeats are never perturbed, so it stays "healthy"
+        let faults =
+            vec![vec![("CROSSQUANT_FAULT".to_string(), "latency:ms=2000,every=1".to_string())]];
+        let (fleet, router) = start_tier(1, &artifact, faults, |_| {});
+        let addr = start_router(&router);
+
+        let line = format!(
+            "{{\"deadline_ms\": 300, {}",
+            score_line(1).strip_prefix('{').unwrap()
+        );
+        let resp = request(addr, &line);
+        assert_eq!(resp.get("ok"), Some(&Json::Bool(false)), "{resp:?}");
+        assert_eq!(resp.get("retryable"), Some(&Json::Bool(true)), "{resp:?}");
+        let err = resp.get("error").and_then(|e| e.as_str()).unwrap_or_default();
+        assert!(err.contains("deadline"), "unexpected error text: {err}");
+
+        let metrics = request(addr, "{\"cmd\": \"metrics\"}");
+        let exceeded = metrics
+            .get("router")
+            .and_then(|r| r.get("deadline_exceeded"))
+            .and_then(|v| v.as_f64())
+            .unwrap_or(0.0);
+        assert!(exceeded >= 1.0, "{metrics:?}");
+        fleet.shutdown();
+        std::fs::remove_dir_all(dir).ok();
+    }
+
+    /// A worker that aborts on every request crash-loops; the breaker
+    /// must trip (stopping futile restarts) while every client response
+    /// stays a structured error.
+    #[test]
+    fn crash_loop_trips_circuit_breaker() {
+        let dir = tmp_dir("fleet-breaker");
+        let artifact = tiny_artifact(&dir);
+        let faults = vec![vec![("CROSSQUANT_FAULT".to_string(), "panic:every=1".to_string())]];
+        let (fleet, router) = start_tier(1, &artifact, faults, |cfg| {
+            cfg.breaker_crashes = 3;
+            cfg.initial_backoff = Duration::from_millis(20);
+        });
+        let addr = start_router(&router);
+
+        let deadline = Instant::now() + Duration::from_secs(60);
+        while !fleet.workers()[0].breaker_open() {
+            assert!(Instant::now() < deadline, "breaker never tripped");
+            let line = format!(
+                "{{\"deadline_ms\": 4000, {}",
+                score_line(2).strip_prefix('{').unwrap()
+            );
+            let resp = request(addr, &line);
+            // the worker aborts on every data request: never ok, always
+            // a parseable structured error
+            assert_eq!(resp.get("ok"), Some(&Json::Bool(false)), "{resp:?}");
+            assert!(resp.get("error").is_some(), "{resp:?}");
+        }
+        assert!(fleet.metrics().breaker_trips.load(std::sync::atomic::Ordering::SeqCst) >= 1);
+        // with every breaker open the tier sheds load instead of hanging
+        let resp = request(addr, &score_line(3));
+        assert_eq!(resp.get("ok"), Some(&Json::Bool(false)));
+        assert_eq!(resp.get("retryable"), Some(&Json::Bool(true)));
+        fleet.shutdown();
+        std::fs::remove_dir_all(dir).ok();
+    }
+
+    /// A worker whose responses are truncated mid-frame is treated as
+    /// failed and the request transparently retries on the clean worker.
+    #[test]
+    fn truncated_worker_frames_fail_over_to_surviving_worker() {
+        let dir = tmp_dir("fleet-trunc");
+        let artifact = tiny_artifact(&dir);
+        let faults = vec![
+            vec![("CROSSQUANT_FAULT".to_string(), "truncate:every=1".to_string())],
+            Vec::new(), // worker 1 is clean
+        ];
+        let (fleet, router) = start_tier(2, &artifact, faults, |_| {});
+        let addr = start_router(&router);
+
+        for i in 0..6 {
+            let resp = request(addr, &score_line(i));
+            assert!(is_ok(&resp), "failover should hide truncation: {resp:?}");
+        }
+        let retried = fleet.metrics().retried.load(std::sync::atomic::Ordering::SeqCst);
+        assert!(retried >= 1, "expected at least one failover retry, saw {retried}");
+        fleet.shutdown();
+        std::fs::remove_dir_all(dir).ok();
+    }
+
+    /// Malformed, non-object, invalid-UTF-8 and client-truncated frames
+    /// must never panic the router; it answers with structured errors
+    /// and keeps serving good requests afterwards.
+    #[test]
+    fn malformed_and_truncated_client_frames_never_panic_router() {
+        let dir = tmp_dir("fleet-fuzz");
+        let artifact = tiny_artifact(&dir);
+        let (fleet, router) = start_tier(1, &artifact, Vec::new(), |_| {});
+        let addr = start_router(&router);
+
+        for junk in [
+            "this is not json",
+            "{\"tokens\": [1, 2",     // unterminated object
+            "[1, 2, 3]",              // valid JSON, not an object
+            "42",                     // valid JSON scalar
+            "{\"cmd\": \"no-such\"}", // unknown command
+            "{\"tokens\": [1, 2, 3], \"deadline_ms\": -5}", // bad deadline
+            "{}",                     // data request with no tokens
+        ] {
+            let resp = request(addr, junk);
+            assert_eq!(resp.get("ok"), Some(&Json::Bool(false)), "{junk} → {resp:?}");
+            assert!(resp.get("error").is_some(), "{junk} → {resp:?}");
+        }
+
+        // invalid UTF-8: the router closes the connection, no panic
+        let mut s = TcpStream::connect(addr).unwrap();
+        s.write_all(&[0xff, 0xfe, 0xfd, b'\n']).unwrap();
+        drop(s);
+
+        // client truncation: open, write half a frame, vanish
+        let mut s = TcpStream::connect(addr).unwrap();
+        s.write_all(b"{\"tokens\": [1, ").unwrap();
+        drop(s);
+
+        // the tier still serves correct requests afterwards
+        let resp = request(addr, &score_line(9));
+        assert!(is_ok(&resp), "router wedged after fuzzing: {resp:?}");
+        let metrics = request(addr, "{\"cmd\": \"metrics\"}");
+        let malformed = metrics
+            .get("router")
+            .and_then(|r| r.get("malformed"))
+            .and_then(|v| v.as_f64())
+            .unwrap_or(0.0);
+        assert!(malformed >= 3.0, "{metrics:?}");
+        fleet.shutdown();
+        std::fs::remove_dir_all(dir).ok();
+    }
+
+    /// Aggregated metrics: worker counters are summed across the fleet
+    /// and per-worker status rows are present.
+    #[test]
+    fn metrics_aggregate_across_fleet() {
+        let dir = tmp_dir("fleet-metrics");
+        let artifact = tiny_artifact(&dir);
+        let (fleet, router) = start_tier(2, &artifact, Vec::new(), |_| {});
+        let addr = start_router(&router);
+
+        for i in 0..4 {
+            assert!(is_ok(&request(addr, &score_line(i))));
+        }
+        let m = request(addr, "{\"cmd\": \"metrics\"}");
+        assert!(is_ok(&m), "{m:?}");
+        let workers = m.get("workers").and_then(|w| w.as_arr()).unwrap();
+        assert_eq!(workers.len(), 2);
+        let completed = m
+            .get("aggregate")
+            .and_then(|a| a.get("completed"))
+            .and_then(|v| v.as_f64())
+            .unwrap_or(0.0);
+        assert!(completed >= 4.0, "fleet-wide completed should sum to ≥ 4: {m:?}");
+        let routed = m
+            .get("router")
+            .and_then(|r| r.get("requests"))
+            .and_then(|v| v.as_f64())
+            .unwrap_or(0.0);
+        assert!(routed >= 4.0, "{m:?}");
+        fleet.shutdown();
+        std::fs::remove_dir_all(dir).ok();
     }
 }
 
