@@ -253,6 +253,38 @@ fn main() {
     let packed_speedup = r_seed_gemm.mean.as_secs_f64() / r_packed_gemm.mean.as_secs_f64();
     println!("  -> packed vs seed kernel: {packed_speedup:.2}x (acceptance target ≥2x)\n");
 
+    // ---- microkernel dispatch: explicit per-ISA sections, same shape ----
+    // gemm_i32_packed_isa pins the kernel per section, so one process can
+    // measure every path this host supports (the CROSSQUANT_ISA override
+    // is read once and would pin all of them to one kernel).
+    let isa_active = gemm::dispatch::active();
+    println!("  active dispatch ISA: {isa_active} (CROSSQUANT_ISA to override)");
+    let mut isa_gops: Vec<(&'static str, f64)> = Vec::new();
+    for isa in gemm::Isa::ALL {
+        if !gemm::dispatch::supported(isa) {
+            continue;
+        }
+        let r_isa = bench(&format!("packed gemm 512×2048×2048 [{isa}]"), budget, || {
+            std::hint::black_box(gemm::gemm_i32_packed_isa(
+                &act.codes,
+                gm,
+                &packed,
+                gemm_workers,
+                isa,
+            ));
+        });
+        r_isa.print_throughput(gemm_ops, "op");
+        isa_gops.push((isa.name(), gemm_ops / 1e9 / r_isa.mean.as_secs_f64()));
+        record(r_isa);
+    }
+    let scalar_gops = isa_gops.iter().find(|(n, _)| *n == "scalar").map_or(0.0, |&(_, g)| g);
+    for &(name, g) in &isa_gops {
+        if name != "scalar" && scalar_gops > 0.0 {
+            println!("  -> {name} vs scalar microkernel: {:.2}x (target ≥2x)", g / scalar_gops);
+        }
+    }
+    println!();
+
     // ---- deployment forwards: per-token vs dynamic vs static CrossQuant ----
     let r_fwd_pt = bench("qlinear fwd per-token (no weight pass)", budget, || {
         std::hint::black_box(lin.forward_per_token(&gx, Bits::Int8));
@@ -277,19 +309,31 @@ fn main() {
     println!("  -> static overhead vs per-token: {static_overhead:.2}x (target ≈1x)");
 
     // dedicated machine-readable dump for the deployment-path trajectory
-    let gemm_json = Json::obj(vec![
+    let mut gemm_fields = vec![
         ("bench", Json::str("qlinear_gemm")),
         ("shape", Json::str("512x2048x2048")),
         ("threads", Json::num(par::max_threads() as f64)),
+        ("isa_active", Json::str(isa_active.name())),
         ("gops_seed", Json::num(gemm_ops / 1e9 / r_seed_gemm.mean.as_secs_f64())),
         ("gops_packed", Json::num(gemm_ops / 1e9 / r_packed_gemm.mean.as_secs_f64())),
         ("packed_vs_seed_speedup", Json::num(packed_speedup)),
+    ];
+    for &(name, g) in &isa_gops {
+        gemm_fields.push(match name {
+            "scalar" => ("gops_isa_scalar", Json::num(g)),
+            "avx2" => ("gops_isa_avx2", Json::num(g)),
+            "neon" => ("gops_isa_neon", Json::num(g)),
+            _ => continue,
+        });
+    }
+    gemm_fields.extend(vec![
         ("forward_per_token_ms", Json::num(r_fwd_pt.mean.as_secs_f64() * 1e3)),
         ("forward_dynamic_ms", Json::num(r_fwd_dyn.mean.as_secs_f64() * 1e3)),
         ("forward_static_ms", Json::num(r_fwd_static.mean.as_secs_f64() * 1e3)),
         ("static_vs_dynamic_speedup", Json::num(static_speedup)),
         ("static_overhead_vs_per_token", Json::num(static_overhead)),
     ]);
+    let gemm_json = Json::obj(gemm_fields);
     let gemm_path = concat!(env!("CARGO_MANIFEST_DIR"), "/../BENCH_qlinear_gemm.json");
     match std::fs::write(gemm_path, gemm_json.render_pretty()) {
         Ok(()) => println!("\nwrote {gemm_path}"),

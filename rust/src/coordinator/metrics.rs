@@ -164,6 +164,13 @@ impl Metrics {
             ("loads", Json::num(load(&self.artifact_loads))),
             ("load_ms_total", Json::num(load(&self.artifact_load_us) / 1000.0)),
             ("calibrations", Json::num(load(&self.static_calibrations))),
+            // process-wide, not per-coordinator: mapped panel sections that
+            // failed the PANEL_ALIGN check and were copied instead of
+            // borrowed (zero-copy lost, results unchanged)
+            (
+                "unaligned_panel_copies",
+                Json::num(crate::quant::gemm::unaligned_panel_copies() as f64),
+            ),
         ])
     }
 

@@ -18,7 +18,7 @@
 
 use std::path::{Path, PathBuf};
 
-use anyhow::{anyhow, bail, Result};
+use anyhow::{anyhow, bail, ensure, Result};
 
 use crossquant::activations::{Family, FamilyProfile};
 use crossquant::coordinator::scheduler::CoordinatorConfig;
@@ -729,6 +729,9 @@ fn bench_trend(args: &Args) -> Result<()> {
         Err(_) => Vec::new(),
     };
     let run_id = rows.len();
+    // which GEMM microkernel served this run — trend rows are only
+    // comparable within one ISA (scalar vs avx2 is the point of the row)
+    let isa = crossquant::quant::gemm::dispatch::active().name();
 
     let measure_native = |site: &mut dyn ActSite| -> Result<(f64, f64, f64)> {
         let t0 = std::time::Instant::now();
@@ -770,13 +773,25 @@ fn bench_trend(args: &Args) -> Result<()> {
         rows.push(Json::obj(vec![
             ("run", Json::num(run_id as f64)),
             ("scheme", Json::str(id.name())),
+            ("isa", Json::str(isa)),
             ("gops", Json::num(gops)),
             ("decode_tok_s", Json::num(tok_s)),
             ("nll", Json::num(nll)),
         ]));
     }
+    // a trend run that appends nothing is a broken registry or a broken
+    // measure loop — fail here rather than let CI commit a no-op "run"
+    ensure!(
+        rows.len() > run_id,
+        "bench-trend appended no rows (served_schemes() is empty?) — refusing to write {}",
+        out.display()
+    );
     std::fs::write(&out, Json::Arr(rows).render_pretty())?;
-    println!("appended run {run_id} to {}", out.display());
+    println!(
+        "appended {} rows (run {run_id}, isa {isa}) to {}",
+        rows.len() - run_id,
+        out.display()
+    );
     Ok(())
 }
 

@@ -1,0 +1,120 @@
+//! AVX2 microkernel: i8×i8→i32 dot-product accumulation via
+//! `_mm256_maddubs_epi16` + `_mm256_madd_epi16`.
+//!
+//! `maddubs` multiplies **unsigned** bytes by **signed** bytes, but both
+//! our operands are signed. The classic operand fix-up makes the pair
+//! legal without changing the product: feed it `|a|` (unsigned) and
+//! `w·sign(a)` (signed, via `_mm256_sign_epi8`) — `|a| · w·sign(a) =
+//! a·w`, and `sign_epi8` zeroing the weight where `a == 0` is exactly
+//! right. Saturation is then impossible: `|a| ≤ 128`, `|w| ≤ 127`, so a
+//! pair sum is at most `2·128·127 = 32512 < 32767` (and `2·128·(−128) =
+//! −32768` is representable). The single value outside the contract is a
+//! **weight** byte of −128 combined with a negative activation —
+//! `sign_epi8` cannot negate −128 — which no quantizer emits (codes are
+//! clamped to ±qmax ≤ 127 and panel padding is 0). Activations of −128
+//! are handled exactly (`abs_epi8(−128)` reads back as u8 128 = |−128|).
+//!
+//! Register scheme, per 4 `k`-steps: one 32-byte unaligned panel load
+//! covers 4 K-major rows of [`NR`] = 8 columns. Three shuffles transpose
+//! it to column-major quads `[w(k0,cj) w(k1,cj) w(k2,cj) w(k3,cj)] × 8`.
+//! Each activation row contributes a 4-byte quad `[a(k0)..a(k3)]`
+//! broadcast across the register; `maddubs` reduces (k0,k1) and (k2,k3)
+//! pairs to i16, `madd_epi16` against ones reduces the two pairs to one
+//! i32 per column — a full 8-column FMA per row per instruction pair.
+//! All loads are unaligned (`loadu`): owned panel buffers guarantee no
+//! alignment, mapped ones guarantee [`super::PANEL_ALIGN`]; alignment
+//! only moves loads off cache-line splits, never correctness.
+
+#[allow(clippy::wildcard_imports)]
+use std::arch::x86_64::*;
+
+use super::{KB, MR, NR};
+
+/// Safe wrapper: the caller ([`super::dispatch`]) only hands out this
+/// kernel after `is_x86_feature_detected!("avx2")` has confirmed support.
+pub(super) fn microkernel(
+    a_block: &[i8],
+    mr: usize,
+    k: usize,
+    panel: &[i8],
+    live: &[bool],
+) -> [[i32; NR]; MR] {
+    debug_assert!(std::arch::is_x86_feature_detected!("avx2"));
+    // safety: avx2 presence is guaranteed by dispatch (asserted above in
+    // debug); slices are bounds-checked inside
+    unsafe { kernel_avx2(a_block, mr, k, panel, live) }
+}
+
+#[target_feature(enable = "avx2")]
+unsafe fn kernel_avx2(
+    a_block: &[i8],
+    mr: usize,
+    k: usize,
+    panel: &[i8],
+    live: &[bool],
+) -> [[i32; NR]; MR] {
+    debug_assert!(a_block.len() >= mr * k);
+    debug_assert!(panel.len() >= k * NR);
+    let mut acc = [[0i32; NR]; MR];
+    let mut vacc = [_mm256_setzero_si256(); MR];
+    let ones = _mm256_set1_epi16(1);
+    // per-128-lane byte shuffle interleaving the lane's two 8-byte K-rows
+    // into 16-bit (k, k+1) column pairs: [x0 y0 x1 y1 … x7 y7]
+    let interleave = _mm256_setr_epi8(
+        0, 8, 1, 9, 2, 10, 3, 11, 4, 12, 5, 13, 6, 14, 7, 15, //
+        0, 8, 1, 9, 2, 10, 3, 11, 4, 12, 5, 13, 6, 14, 7, 15,
+    );
+    for (b, &is_live) in live.iter().enumerate() {
+        if !is_live {
+            continue;
+        }
+        let k0 = b * KB;
+        let k1 = (k0 + KB).min(k);
+        let mut kk = k0;
+        while kk + 4 <= k1 {
+            // 32 bytes = 4 K-major panel rows: [k0c0‥k0c7 | k1… | k2… | k3…]
+            let w_raw = _mm256_loadu_si256(panel.as_ptr().add(kk * NR) as *const __m256i);
+            // transpose 4×8 bytes → 8 column quads [w(k0,cj)‥w(k3,cj)]:
+            // lane-local interleave to (k0,k1)/(k2,k3) 16-bit pairs…
+            let t = _mm256_shuffle_epi8(w_raw, interleave);
+            // …gather each lane's pairs for columns 0-3 / 4-7 together…
+            let s = _mm256_permute4x64_epi64(t, 0b11_01_10_00);
+            // …and zip the (k0,k1) pairs with the (k2,k3) pairs per column
+            let sw = _mm256_shuffle_epi32(s, 0b01_00_11_10);
+            let wt = _mm256_unpacklo_epi16(s, sw);
+            for (r, vr) in vacc.iter_mut().enumerate().take(mr) {
+                // 4 consecutive activation codes of row r as one i32 quad
+                let quad = (a_block.as_ptr().add(r * k + kk) as *const i32).read_unaligned();
+                let av = _mm256_set1_epi32(quad);
+                // signed×signed → unsigned×signed operand fix-up (see
+                // module docs): maddubs needs its first operand unsigned
+                let au = _mm256_abs_epi8(av);
+                let ws = _mm256_sign_epi8(wt, av);
+                let p16 = _mm256_maddubs_epi16(au, ws); // (k0,k1)+(k2,k3) pairs
+                let p32 = _mm256_madd_epi16(p16, ones); // pair-of-pairs → i32
+                *vr = _mm256_add_epi32(*vr, p32);
+            }
+            kk += 4;
+        }
+        // scalar tail: k-block length not a multiple of 4 (only possible
+        // in the final partial block — KB is a multiple of 4)
+        while kk < k1 {
+            let w_row = &panel[kk * NR..kk * NR + NR];
+            for (r, acc_r) in acc.iter_mut().enumerate().take(mr) {
+                let ar = a_block[r * k + kk] as i32;
+                for (jj, &wv) in w_row.iter().enumerate() {
+                    acc_r[jj] += ar * wv as i32;
+                }
+            }
+            kk += 1;
+        }
+    }
+    for (acc_r, vr) in acc.iter_mut().zip(vacc.iter()).take(mr) {
+        let mut lanes = [0i32; NR];
+        _mm256_storeu_si256(lanes.as_mut_ptr() as *mut __m256i, *vr);
+        for (a, l) in acc_r.iter_mut().zip(lanes) {
+            *a += l;
+        }
+    }
+    acc
+}

@@ -1,0 +1,196 @@
+//! Runtime ISA dispatch for the packed-GEMM microkernel.
+//!
+//! The host is probed **once** per process (`is_x86_feature_detected!` on
+//! x86_64; NEON is a baseline feature of aarch64) and the winning kernel
+//! is cached as a plain function pointer — the hot path pays one atomic
+//! load, no per-call feature detection. The `CROSSQUANT_ISA` environment
+//! variable (`scalar` | `avx2` | `neon`, read at the same single probe)
+//! forces a specific path for testing; requesting an ISA the host cannot
+//! run, or an unknown name, is a loud startup panic rather than a silent
+//! fallback — a forced-ISA test run must never silently measure the wrong
+//! kernel.
+//!
+//! Every kernel is bit-identical over the quantization code range (the
+//! AVX2 operand fix-up excludes only weight byte −128, which no quantizer
+//! emits), so dispatch is a pure speed decision — pinned per-path against
+//! `gemm_i32_ref` in `rust/tests/gemm.rs`.
+
+use std::sync::OnceLock;
+
+use super::Microkernel;
+
+/// The instruction sets the packed GEMM can run on.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Isa {
+    /// Portable scalar microkernel — always available, and the reference
+    /// the SIMD paths are pinned against.
+    Scalar,
+    /// x86_64 AVX2: `_mm256_maddubs_epi16`/`_mm256_madd_epi16` dot-product
+    /// accumulation with the unsigned×signed operand fix-up.
+    Avx2,
+    /// aarch64 NEON: `smull` widening multiply + `sadalp` pairwise
+    /// accumulate.
+    Neon,
+}
+
+impl Isa {
+    /// The wire/env name (`CROSSQUANT_ISA` values, bench labels).
+    pub fn name(self) -> &'static str {
+        match self {
+            Isa::Scalar => "scalar",
+            Isa::Avx2 => "avx2",
+            Isa::Neon => "neon",
+        }
+    }
+
+    /// Every ISA this build knows about (supported or not).
+    pub const ALL: [Isa; 3] = [Isa::Scalar, Isa::Avx2, Isa::Neon];
+}
+
+impl std::fmt::Display for Isa {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.write_str(self.name())
+    }
+}
+
+impl std::str::FromStr for Isa {
+    type Err = String;
+
+    fn from_str(s: &str) -> Result<Isa, String> {
+        match s.trim().to_ascii_lowercase().as_str() {
+            "scalar" => Ok(Isa::Scalar),
+            "avx2" => Ok(Isa::Avx2),
+            "neon" => Ok(Isa::Neon),
+            other => Err(format!("unknown ISA '{other}' (expected scalar|avx2|neon)")),
+        }
+    }
+}
+
+/// Can this host execute `isa`'s microkernel?
+pub fn supported(isa: Isa) -> bool {
+    match isa {
+        Isa::Scalar => true,
+        #[cfg(target_arch = "x86_64")]
+        Isa::Avx2 => std::arch::is_x86_feature_detected!("avx2"),
+        #[cfg(not(target_arch = "x86_64"))]
+        Isa::Avx2 => false,
+        #[cfg(target_arch = "aarch64")]
+        Isa::Neon => true,
+        #[cfg(not(target_arch = "aarch64"))]
+        Isa::Neon => false,
+    }
+}
+
+/// The fastest supported ISA on this host (ignoring any override).
+pub fn best() -> Isa {
+    if supported(Isa::Avx2) {
+        Isa::Avx2
+    } else if supported(Isa::Neon) {
+        Isa::Neon
+    } else {
+        Isa::Scalar
+    }
+}
+
+/// Resolve an optional `CROSSQUANT_ISA` value against the probe — split
+/// out from the cached [`active`] so the selection rules are unit-testable
+/// without touching process-global state.
+fn resolve(env_override: Option<&str>) -> Isa {
+    match env_override {
+        None => best(),
+        Some(v) => {
+            let isa: Isa = v
+                .parse()
+                .unwrap_or_else(|e: String| panic!("CROSSQUANT_ISA: {e}"));
+            assert!(
+                supported(isa),
+                "CROSSQUANT_ISA={} requested but this host cannot run it \
+                 (supported: {})",
+                isa.name(),
+                Isa::ALL
+                    .iter()
+                    .filter(|&&i| supported(i))
+                    .map(|i| i.name())
+                    .collect::<Vec<_>>()
+                    .join(", ")
+            );
+            isa
+        }
+    }
+}
+
+/// The ISA serving [`super::gemm_i32_packed`]: probed (and the
+/// `CROSSQUANT_ISA` override read) once per process, then cached.
+pub fn active() -> Isa {
+    static ACTIVE: OnceLock<Isa> = OnceLock::new();
+    *ACTIVE.get_or_init(|| resolve(std::env::var("CROSSQUANT_ISA").ok().as_deref()))
+}
+
+/// The microkernel implementing `isa`. Panics if the host cannot run it —
+/// the explicit-ISA entry points are for tests and benches, which must
+/// fail loudly rather than quietly measure a different kernel.
+pub(super) fn kernel(isa: Isa) -> Microkernel {
+    assert!(
+        supported(isa),
+        "ISA {} is not supported on this host (arch {})",
+        isa.name(),
+        std::env::consts::ARCH
+    );
+    match isa {
+        Isa::Scalar => super::scalar::microkernel,
+        #[cfg(target_arch = "x86_64")]
+        Isa::Avx2 => super::avx2::microkernel,
+        #[cfg(target_arch = "aarch64")]
+        Isa::Neon => super::neon::microkernel,
+        #[allow(unreachable_patterns)] // unsupported ISAs die in the assert
+        _ => unreachable!("kernel() past a failed support check"),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parse_accepts_known_names_case_insensitively() {
+        assert_eq!("scalar".parse::<Isa>().unwrap(), Isa::Scalar);
+        assert_eq!(" AVX2 ".parse::<Isa>().unwrap(), Isa::Avx2);
+        assert_eq!("neon".parse::<Isa>().unwrap(), Isa::Neon);
+        assert!("sse9".parse::<Isa>().is_err());
+        assert!("".parse::<Isa>().is_err());
+    }
+
+    #[test]
+    fn scalar_is_always_supported_and_best_is_runnable() {
+        assert!(supported(Isa::Scalar));
+        assert!(supported(best()));
+        // the cached active ISA must be runnable too (env override or not)
+        assert!(supported(active()));
+        let _ = kernel(active());
+    }
+
+    #[test]
+    fn resolve_honors_explicit_override() {
+        assert_eq!(resolve(None), best());
+        assert_eq!(resolve(Some("scalar")), Isa::Scalar);
+    }
+
+    #[test]
+    #[should_panic(expected = "unknown ISA")]
+    fn resolve_rejects_unknown_names_loudly() {
+        let _ = resolve(Some("quantum"));
+    }
+
+    #[test]
+    fn unsupported_isas_exist_per_arch() {
+        // exactly one of avx2/neon can ever be supported on one host
+        assert!(!(supported(Isa::Avx2) && supported(Isa::Neon)));
+    }
+
+    #[cfg(target_arch = "x86_64")]
+    #[test]
+    #[should_panic(expected = "cannot run it")]
+    fn resolve_rejects_foreign_arch_isa_loudly() {
+        let _ = resolve(Some("neon"));
+    }
+}

@@ -13,25 +13,43 @@
 //!   inner loop stays uniform; writeback clips to the true width). Built
 //!   once per weight in `QuantizedLinear::from_weight`, and rebuilt by the
 //!   dynamic CrossQuant rescale via [`PackedInt8::pack_with`].
-//! * **microkernel** — an [`MR`]×[`NR`] register tile of i8×i8→i32
+//! * **microkernels** — an [`MR`]×[`NR`] register tile of i8×i8→i32
 //!   accumulators: each loaded weight value feeds `MR` rows and each loaded
 //!   activation value feeds `NR` columns, cutting cache traffic ~`MR`× and
-//!   keeping the accumulators out of memory. The element loop is
-//!   branch-free — the seed's data-dependent `a == 0` skip is gone.
+//!   keeping the accumulators out of memory. Three implementations share
+//!   one contract (portable [`scalar`], AVX2 `maddubs`/`madd`, NEON
+//!   `smull`/`sadalp`) and are selected at runtime by [`dispatch`]:
+//!   `is_x86_feature_detected!` probing cached process-wide, with a
+//!   `CROSSQUANT_ISA=scalar|avx2|neon` override for testing. All paths are
+//!   bit-identical over the quantization code range — pinned against
+//!   [`gemm_i32_ref`] in `rust/tests/gemm.rs`.
 //! * **zero-block skip** — where the quantization-kernel sparsity actually
-//!   pays: per row group, `k` is scanned once into per-[`KB`]-block
-//!   "any nonzero" flags, and the microkernel skips dead blocks for every
-//!   panel. One branch per `MR`×`KB` block instead of one per element.
-//!
-//! Both entry points thread through [`crate::tensor::par`] row blocking, so
-//! the serial (1-worker) and parallel paths run the identical microkernel
-//! and integer sums — bit-exact for any worker count, pinned against the
-//! naive reference in `rust/tests/gemm.rs`.
+//!   pays: per row group, `k` is scanned **once** (word-at-a-time, shared
+//!   across every panel and tile) into per-[`KB`]-block "any nonzero"
+//!   flags, and every microkernel skips dead blocks. One branch per
+//!   `MR`×`KB` block instead of one per element.
+//! * **2-D tiling** — the parallel path splits work over a grid of
+//!   (row-group chunk × panel chunk) tiles (see `par::tile_grid`), not just
+//!   rows: an M=4 decode step or an M=N engine tick fans out across
+//!   N-panels instead of leaving all but `M` workers idle. Each tile owns a
+//!   disjoint region of the output, and per-element arithmetic is
+//!   tile-independent, so results stay bit-exact for any worker count.
 
+use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::Arc;
 
 use crate::tensor::{par, Matrix};
 use crate::util::Mmap;
+
+pub mod dispatch;
+mod scalar;
+
+#[cfg(target_arch = "x86_64")]
+mod avx2;
+#[cfg(target_arch = "aarch64")]
+mod neon;
+
+pub use dispatch::Isa;
 
 /// Microkernel row tile: activation rows per register block.
 pub const MR: usize = 4;
@@ -39,6 +57,24 @@ pub const MR: usize = 4;
 pub const NR: usize = 8;
 /// Granularity (in `k`) of the all-zero activation-block skip.
 pub const KB: usize = 64;
+
+/// Alignment the SIMD microkernels want panel buffers to start at so their
+/// widest loads never straddle more cache lines than necessary. Correctness
+/// never depends on it (every kernel uses unaligned loads), but
+/// [`PackedInt8::from_mapped`] refuses to *borrow* a mapped buffer below
+/// this alignment and copies it instead — see [`unaligned_panel_copies`].
+pub const PANEL_ALIGN: usize = 16;
+
+/// How many mapped panel sections failed the [`PANEL_ALIGN`] check and were
+/// copied to owned memory instead of borrowed zero-copy. Non-zero means a
+/// `.cqa` artifact's 64-byte section alignment did not survive the mapping
+/// (or the file came from a foreign writer) — served results are still
+/// correct, but the zero-copy property is lost for those sections.
+pub fn unaligned_panel_copies() -> u64 {
+    UNALIGNED_PANEL_COPIES.load(Ordering::Relaxed)
+}
+
+static UNALIGNED_PANEL_COPIES: AtomicU64 = AtomicU64::new(0);
 
 /// The owned/borrowed split behind [`PackedInt8`]: panels either own
 /// their buffer (built by `pack_with`) or borrow it in place from a file
@@ -102,6 +138,13 @@ impl PackedInt8 {
     /// path of `quant::artifact`. The `layout_bytes(k, n)` bytes at
     /// `offset` must hold a buffer produced by `pack_with` (length is
     /// verified here; content integrity is the artifact CRC's job).
+    ///
+    /// The mapped pointer is validated against [`PANEL_ALIGN`] — the
+    /// artifact writer 64-byte-aligns panel sections, but a foreign writer
+    /// (or an owned fallback read of the file) can break that promise. A
+    /// misaligned view is copied to an owned buffer instead of borrowed,
+    /// counted by [`unaligned_panel_copies`]; results are identical either
+    /// way, only zero-copy is lost.
     pub fn from_mapped(
         k: usize,
         n: usize,
@@ -114,6 +157,15 @@ impl PackedInt8 {
             "mapped panels out of bounds: need {len} bytes at offset {offset}, map has {}",
             map.len()
         );
+        if len > 0 {
+            let ptr = map.bytes()[offset..].as_ptr();
+            if (ptr as usize) % PANEL_ALIGN != 0 {
+                UNALIGNED_PANEL_COPIES.fetch_add(1, Ordering::Relaxed);
+                let bytes = &map.bytes()[offset..offset + len];
+                let data: Vec<i8> = bytes.iter().map(|&b| b as i8).collect();
+                return Ok(PackedInt8 { k, n, data: PanelData::Owned(data) });
+            }
+        }
         Ok(PackedInt8 { k, n, data: PanelData::Mapped { map, offset, len } })
     }
 
@@ -193,104 +245,112 @@ impl PackedInt8 {
     }
 }
 
-/// Per-`KB`-block "any nonzero activation" flags for one row group —
-/// computed once per group, shared across all panels.
-fn live_kblocks(a_block: &[i8], mr: usize, k: usize) -> Vec<bool> {
-    let mut live = vec![false; k.div_ceil(KB)];
-    for (b, flag) in live.iter_mut().enumerate() {
+/// The shared microkernel contract: `mr` (≤ [`MR`]) activation rows
+/// against one K-major panel, skipping [`KB`]-blocks whose `live` flag is
+/// false. Every implementation must return identical i32 sums for codes
+/// in the quantization range (±127; the AVX2 operand fix-up documents the
+/// one excluded weight value, −128, which no quantizer emits).
+pub(crate) type Microkernel = fn(&[i8], usize, usize, &[i8], &[bool]) -> [[i32; NR]; MR];
+
+/// Word-at-a-time "any nonzero byte" scan — the zero-skip flag pass must
+/// not cost more than the skip saves at small `k`, so it reads u64 words,
+/// not bytes.
+#[inline]
+fn any_nonzero(bytes: &[i8]) -> bool {
+    // i8 → u64 reinterpret of the aligned middle is sound: both are plain
+    // integers, and a word is nonzero iff one of its bytes is
+    let (pre, mid, post) = unsafe { bytes.align_to::<u64>() };
+    pre.iter().any(|&v| v != 0) || mid.iter().any(|&w| w != 0) || post.iter().any(|&v| v != 0)
+}
+
+/// Fill per-[`KB`]-block "any nonzero activation" flags for one `mr`-row
+/// group. Called once per row group per GEMM — the flags are shared across
+/// every panel and every column tile that touches the group.
+fn scan_live(a_block: &[i8], mr: usize, k: usize, flags: &mut [bool]) {
+    for (b, flag) in flags.iter_mut().enumerate() {
         let k0 = b * KB;
         let k1 = (k0 + KB).min(k);
-        *flag = (0..mr).any(|r| a_block[r * k + k0..r * k + k1].iter().any(|&v| v != 0));
+        *flag = (0..mr).any(|r| any_nonzero(&a_block[r * k + k0..r * k + k1]));
     }
-    live
 }
 
-/// The register-tiled i8×i8→i32 microkernel: `mr` (≤ [`MR`]) activation
-/// rows against one K-major panel. The element loop is branch-free; the
-/// only data-dependent branch is the per-[`KB`]-block skip.
-#[inline]
-fn microkernel(
-    a_block: &[i8],
-    mr: usize,
-    k: usize,
-    panel: &[i8],
-    live: &[bool],
-) -> [[i32; NR]; MR] {
-    let mut acc = [[0i32; NR]; MR];
-    if mr == MR {
-        // full-height fast path: fixed trip counts so the 4×8 accumulator
-        // tile stays in registers (MR is hardcoded in the a0..a3 loads)
-        for (b, &is_live) in live.iter().enumerate() {
-            if !is_live {
-                continue;
-            }
-            let k0 = b * KB;
-            let k1 = (k0 + KB).min(k);
-            for kk in k0..k1 {
-                let w_row = &panel[kk * NR..kk * NR + NR];
-                let a0 = a_block[kk] as i32;
-                let a1 = a_block[k + kk] as i32;
-                let a2 = a_block[2 * k + kk] as i32;
-                let a3 = a_block[3 * k + kk] as i32;
-                for (jj, &wv) in w_row.iter().enumerate() {
-                    let wv = wv as i32;
-                    acc[0][jj] += a0 * wv;
-                    acc[1][jj] += a1 * wv;
-                    acc[2][jj] += a2 * wv;
-                    acc[3][jj] += a3 * wv;
-                }
-            }
-        }
-    } else {
-        // remainder row group (< MR rows): same math, rolled over rows
-        for (b, &is_live) in live.iter().enumerate() {
-            if !is_live {
-                continue;
-            }
-            let k0 = b * KB;
-            let k1 = (k0 + KB).min(k);
-            for kk in k0..k1 {
-                let w_row = &panel[kk * NR..kk * NR + NR];
-                for (r, acc_r) in acc.iter_mut().enumerate().take(mr) {
-                    let ar = a_block[r * k + kk] as i32;
-                    for (jj, &wv) in w_row.iter().enumerate() {
-                        acc_r[jj] += ar * wv as i32;
-                    }
-                }
-            }
-        }
-    }
-    acc
-}
+/// A raw output pointer smuggled into the tile workers. Each tile writes a
+/// disjoint (row range × column range) region, so concurrent writes never
+/// alias — the reason row-chunk splitting via `split_at_mut` is not enough
+/// here (column tiles of one row interleave in the row-major buffer).
+#[derive(Clone, Copy)]
+struct SendPtr(*mut i32);
+unsafe impl Send for SendPtr {}
+unsafe impl Sync for SendPtr {}
 
-/// Integer-only packed GEMM: `out[i*n + j] = Σ_k a[i,k]·w[k,j]` in i32.
-/// The bit-exactness oracle surface — integer sums are order-independent,
-/// so every worker count returns identical bytes.
+/// Integer-only packed GEMM: `out[i*n + j] = Σ_k a[i,k]·w[k,j]` in i32,
+/// on the runtime-dispatched microkernel ([`dispatch::active`]).
+/// The bit-exactness oracle surface — every ISA, worker count, and tile
+/// shape returns identical bytes.
 pub fn gemm_i32_packed(a_codes: &[i8], m: usize, w: &PackedInt8, workers: usize) -> Vec<i32> {
+    gemm_i32_packed_isa(a_codes, m, w, workers, dispatch::active())
+}
+
+/// [`gemm_i32_packed`] with an explicit microkernel choice — the oracle
+/// tests and the per-ISA bench sections compare paths inside one process,
+/// where the `CROSSQUANT_ISA` override (read once) cannot be varied.
+/// Panics if `isa` is not supported on this host.
+pub fn gemm_i32_packed_isa(
+    a_codes: &[i8],
+    m: usize,
+    w: &PackedInt8,
+    workers: usize,
+    isa: Isa,
+) -> Vec<i32> {
+    let kern = dispatch::kernel(isa);
     let (k, n) = (w.k, w.n);
     assert_eq!(a_codes.len(), m * k, "activation codes/shape mismatch");
     let mut out = vec![0i32; m * n];
-    if out.is_empty() {
-        return out;
+    if out.is_empty() || k == 0 {
+        return out; // empty output, or empty contraction (all-zero output)
     }
-    par::par_rows_mut(&mut out, n, workers, |row0, chunk| {
-        let rows = chunk.len() / n;
-        let mut i = 0usize;
-        while i < rows {
-            let mr = MR.min(rows - i);
-            let a0 = (row0 + i) * k;
-            let a_block = &a_codes[a0..a0 + mr * k];
-            let live = live_kblocks(a_block, mr, k);
-            for p in 0..w.n_panels() {
-                let acc = microkernel(a_block, mr, k, w.panel(p), &live);
-                let j0 = p * NR;
-                let width = NR.min(n - j0);
-                for (r, acc_r) in acc.iter().enumerate().take(mr) {
-                    let dst = &mut chunk[(i + r) * n + j0..(i + r) * n + j0 + width];
-                    dst.copy_from_slice(&acc_r[..width]);
+    let row_groups = m.div_ceil(MR);
+    let kblocks = k.div_ceil(KB);
+    // hoisted live-flag pass: one O(m·k) scan for the whole GEMM, instead
+    // of one per (row group × column tile) inside the parallel closure
+    let mut live = vec![false; row_groups * kblocks];
+    par::par_rows_mut(&mut live, kblocks, workers.min(row_groups), |g0, chunk| {
+        for (local, flags) in chunk.chunks_mut(kblocks).enumerate() {
+            let i = (g0 + local) * MR;
+            let mr = MR.min(m - i);
+            scan_live(&a_codes[i * k..i * k + mr * k], mr, k, flags);
+        }
+    });
+    let n_panels = w.n_panels();
+    let (row_chunks, col_chunks) = par::tile_grid(row_groups, n_panels, workers);
+    let g_per = row_groups.div_ceil(row_chunks);
+    let p_per = n_panels.div_ceil(col_chunks);
+    let tiles = row_chunks * col_chunks;
+    let out_ptr = SendPtr(out.as_mut_ptr());
+    par::par_map_rows(tiles, workers.min(tiles), |range| {
+        for t in range {
+            let (rc, cc) = (t / col_chunks, t % col_chunks);
+            let (g0, g1) = (rc * g_per, ((rc + 1) * g_per).min(row_groups));
+            let (p0, p1) = (cc * p_per, ((cc + 1) * p_per).min(n_panels));
+            for g in g0..g1 {
+                let i = g * MR;
+                let mr = MR.min(m - i);
+                let a_block = &a_codes[i * k..i * k + mr * k];
+                let lv = &live[g * kblocks..(g + 1) * kblocks];
+                for p in p0..p1 {
+                    let acc = kern(a_block, mr, k, w.panel(p), lv);
+                    let j0 = p * NR;
+                    let width = NR.min(n - j0);
+                    for (r, acc_r) in acc.iter().enumerate().take(mr) {
+                        // safety: tile (rc, cc) exclusively owns rows
+                        // [g0·MR, g1·MR) × cols [p0·NR, p1·NR) of out
+                        let dst = unsafe {
+                            std::slice::from_raw_parts_mut(out_ptr.0.add((i + r) * n + j0), width)
+                        };
+                        dst.copy_from_slice(&acc_r[..width]);
+                    }
                 }
             }
-            i += mr;
         }
     });
     out
@@ -414,7 +474,6 @@ mod tests {
         // microkernel must produce identical sums over the mapped view
         let map = std::sync::Arc::new(crate::util::Mmap::from_vec(owned.raw_bytes().to_vec()));
         let mapped = PackedInt8::from_mapped(k, n, map.clone(), 0).unwrap();
-        assert!(mapped.is_mapped());
         assert_eq!(mapped.to_row_major(), codes);
         let a = arb_codes(&mut rng, 3 * k, 0.2);
         assert_eq!(gemm_i32_packed(&a, 3, &mapped, 2), gemm_i32_packed(&a, 3, &owned, 1));
@@ -422,9 +481,28 @@ mod tests {
         assert!(PackedInt8::from_mapped(k, n, map, 8).is_err());
     }
 
+    #[test]
+    fn misaligned_mapped_panels_fall_back_to_owned_copy() {
+        let mut rng = SplitMix64::new(11);
+        let (k, n) = (6, NR);
+        let codes = arb_codes(&mut rng, k * n, 0.2);
+        let packed = PackedInt8::from_row_major(&codes, k, n);
+        // prepend one byte so the panel bytes start at alignment 1 mod
+        // PANEL_ALIGN — the artifact's 64-byte promise, deliberately broken
+        let mut buf = vec![0u8];
+        buf.extend_from_slice(packed.raw_bytes());
+        let map = std::sync::Arc::new(crate::util::Mmap::from_vec(buf));
+        let before = unaligned_panel_copies();
+        let view = PackedInt8::from_mapped(k, n, map, 1).unwrap();
+        assert!(!view.is_mapped(), "misaligned view must be copied, not borrowed");
+        assert!(unaligned_panel_copies() > before, "fallback must be counted");
+        assert_eq!(view.to_row_major(), codes, "the copy must decode identically");
+    }
+
     // the full bit-exactness property suite (random shapes, structured
-    // sparsity, dequant scaling, worker grids) lives in rust/tests/gemm.rs
-    // — only layout-internal and degenerate checks stay in-module
+    // sparsity, dequant scaling, worker grids, every dispatch path) lives
+    // in rust/tests/gemm.rs — only layout-internal and degenerate checks
+    // stay in-module
 
     #[test]
     fn degenerate_shapes_are_safe() {
@@ -436,5 +514,17 @@ mod tests {
         assert!(gemm_i32_packed(&[0i8; 10], 2, &packed, 1).is_empty());
         let packed = PackedInt8::from_row_major(&[1, 2, 3], 1, 3);
         assert!(gemm_i32_packed(&[], 0, &packed, 1).is_empty());
+    }
+
+    #[test]
+    fn word_scan_sees_every_byte_position() {
+        for len in [0usize, 1, 7, 8, 9, 63, 64, 65] {
+            assert!(!any_nonzero(&vec![0i8; len]));
+            for pos in 0..len {
+                let mut v = vec![0i8; len];
+                v[pos] = -1;
+                assert!(any_nonzero(&v), "len={len} pos={pos}");
+            }
+        }
     }
 }

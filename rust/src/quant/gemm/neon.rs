@@ -1,0 +1,92 @@
+//! NEON microkernel: i8×i8→i32 via widening multiply + pairwise
+//! accumulate — `smull` (`vmull_s8`) then `sadalp` (`vpadalq_s16`).
+//!
+//! Unlike the AVX2 path there is no operand-signedness fix-up to make:
+//! `vmull_s8` is a true signed i8×i8→i16 widening multiply, exact for
+//! every i8 value including −128, and `vpadalq_s16` adds adjacent i16
+//! pairs into i32 accumulators without any saturation. The kernel is
+//! therefore bit-exact over the full i8 domain.
+//!
+//! Register scheme, per 2 `k`-steps: one 16-byte unaligned load covers 2
+//! K-major panel rows of [`NR`] = 8 columns; `vzip_s8` interleaves them
+//! into per-column (k, k+1) byte pairs. Each activation row contributes
+//! its `[a(k) a(k+1)]` pair broadcast across 8 bytes; `vmull_s8` produces
+//! the 8 pair products and `vpadalq_s16` folds each column's pair into
+//! one of two i32×4 accumulators (columns 0‥3 and 4‥7).
+
+#[allow(clippy::wildcard_imports)]
+use std::arch::aarch64::*;
+
+use super::{KB, MR, NR};
+
+/// Safe wrapper: NEON (asimd) is a baseline feature of aarch64, so the
+/// kernel is always callable once the target architecture matches.
+pub(super) fn microkernel(
+    a_block: &[i8],
+    mr: usize,
+    k: usize,
+    panel: &[i8],
+    live: &[bool],
+) -> [[i32; NR]; MR] {
+    // safety: neon is mandatory on aarch64; slices are bounds-checked inside
+    unsafe { kernel_neon(a_block, mr, k, panel, live) }
+}
+
+#[target_feature(enable = "neon")]
+unsafe fn kernel_neon(
+    a_block: &[i8],
+    mr: usize,
+    k: usize,
+    panel: &[i8],
+    live: &[bool],
+) -> [[i32; NR]; MR] {
+    debug_assert!(a_block.len() >= mr * k);
+    debug_assert!(panel.len() >= k * NR);
+    let mut acc = [[0i32; NR]; MR];
+    let mut acc_lo = [vdupq_n_s32(0); MR];
+    let mut acc_hi = [vdupq_n_s32(0); MR];
+    for (b, &is_live) in live.iter().enumerate() {
+        if !is_live {
+            continue;
+        }
+        let k0 = b * KB;
+        let k1 = (k0 + KB).min(k);
+        let mut kk = k0;
+        while kk + 2 <= k1 {
+            // 16 bytes = 2 K-major panel rows: [k0c0‥k0c7 | k1c0‥k1c7]
+            let w16 = vld1q_s8(panel.as_ptr().add(kk * NR));
+            // zip into per-column (k0, k1) pairs: z.0 = cols 0‥3, z.1 = 4‥7
+            let z = vzip_s8(vget_low_s8(w16), vget_high_s8(w16));
+            for r in 0..mr {
+                let a0 = *a_block.get_unchecked(r * k + kk) as u8 as u16;
+                let a1 = *a_block.get_unchecked(r * k + kk + 1) as u8 as u16;
+                // little-endian: byte 0 = a(k0), byte 1 = a(k1), ×8
+                let apair = vreinterpret_s8_u16(vdup_n_u16(a0 | (a1 << 8)));
+                // smull widen-multiply, sadalp pairwise widen-accumulate
+                acc_lo[r] = vpadalq_s16(acc_lo[r], vmull_s8(z.0, apair));
+                acc_hi[r] = vpadalq_s16(acc_hi[r], vmull_s8(z.1, apair));
+            }
+            kk += 2;
+        }
+        // scalar tail: odd-length final block (KB itself is even)
+        while kk < k1 {
+            let w_row = &panel[kk * NR..kk * NR + NR];
+            for (r, acc_r) in acc.iter_mut().enumerate().take(mr) {
+                let ar = a_block[r * k + kk] as i32;
+                for (jj, &wv) in w_row.iter().enumerate() {
+                    acc_r[jj] += ar * wv as i32;
+                }
+            }
+            kk += 1;
+        }
+    }
+    for r in 0..mr {
+        let mut lanes = [0i32; NR];
+        vst1q_s32(lanes.as_mut_ptr(), acc_lo[r]);
+        vst1q_s32(lanes.as_mut_ptr().add(4), acc_hi[r]);
+        for (a, l) in acc[r].iter_mut().zip(lanes) {
+            *a += l;
+        }
+    }
+    acc
+}

@@ -1,0 +1,63 @@
+//! The portable scalar microkernel — the reference implementation every
+//! SIMD path must match bit-for-bit, and the fallback [`super::dispatch`]
+//! selects when no vector ISA is available (or `CROSSQUANT_ISA=scalar`
+//! forces it).
+
+use super::{KB, MR, NR};
+
+/// Register-tiled i8×i8→i32 microkernel: `mr` (≤ [`MR`]) activation rows
+/// against one K-major panel. The element loop is branch-free; the only
+/// data-dependent branch is the per-[`KB`]-block skip.
+pub(super) fn microkernel(
+    a_block: &[i8],
+    mr: usize,
+    k: usize,
+    panel: &[i8],
+    live: &[bool],
+) -> [[i32; NR]; MR] {
+    let mut acc = [[0i32; NR]; MR];
+    if mr == MR {
+        // full-height fast path: fixed trip counts so the 4×8 accumulator
+        // tile stays in registers (MR is hardcoded in the a0..a3 loads)
+        for (b, &is_live) in live.iter().enumerate() {
+            if !is_live {
+                continue;
+            }
+            let k0 = b * KB;
+            let k1 = (k0 + KB).min(k);
+            for kk in k0..k1 {
+                let w_row = &panel[kk * NR..kk * NR + NR];
+                let a0 = a_block[kk] as i32;
+                let a1 = a_block[k + kk] as i32;
+                let a2 = a_block[2 * k + kk] as i32;
+                let a3 = a_block[3 * k + kk] as i32;
+                for (jj, &wv) in w_row.iter().enumerate() {
+                    let wv = wv as i32;
+                    acc[0][jj] += a0 * wv;
+                    acc[1][jj] += a1 * wv;
+                    acc[2][jj] += a2 * wv;
+                    acc[3][jj] += a3 * wv;
+                }
+            }
+        }
+    } else {
+        // remainder row group (< MR rows): same math, rolled over rows
+        for (b, &is_live) in live.iter().enumerate() {
+            if !is_live {
+                continue;
+            }
+            let k0 = b * KB;
+            let k1 = (k0 + KB).min(k);
+            for kk in k0..k1 {
+                let w_row = &panel[kk * NR..kk * NR + NR];
+                for (r, acc_r) in acc.iter_mut().enumerate().take(mr) {
+                    let ar = a_block[r * k + kk] as i32;
+                    for (jj, &wv) in w_row.iter().enumerate() {
+                        acc_r[jj] += ar * wv as i32;
+                    }
+                }
+            }
+        }
+    }
+    acc
+}

@@ -432,11 +432,15 @@ impl QuantizedLinear {
     }
 
     /// Dispatch into the packed-panel GEMM (see [`super::gemm`]); the
-    /// serial and parallel paths share the microkernel.
+    /// serial and parallel paths share the microkernel. Workers are sized
+    /// by the full 2-D tile count (row groups × column panels), not row
+    /// count — a small-M decode step against a wide weight still fans out
+    /// across N-panels (`par::tile_grid`).
     fn gemm(&self, act: &QuantizedActivation, w: &PackedInt8, w_scale: &[f32]) -> Matrix {
         assert_eq!(act.cols, self.in_dim, "activation/weight shape mismatch");
         let cost = act.rows.saturating_mul(self.in_dim).saturating_mul(self.out_dim);
-        let workers = par::workers_for(act.rows, cost);
+        let tiles = act.rows.div_ceil(gemm::MR).saturating_mul(w.n_panels());
+        let workers = par::workers_for(tiles, cost);
         gemm::gemm_dequant(&act.codes, act.rows, w, &act.row_scale, w_scale, workers)
     }
 }

@@ -49,6 +49,25 @@ pub fn workers_for(rows: usize, cost: usize) -> usize {
     }
 }
 
+/// Split a 2-D iteration space of `row_units × col_units` independent
+/// work units into a `(row_chunks, col_chunks)` tile grid for `workers`
+/// workers. Rows are preferred (a row chunk streams each column unit
+/// once; a column split re-reads its row inputs), so the column dimension
+/// is only split when there are fewer row units than workers — the
+/// shape where pure row-chunking leaves workers idle (an M=4 decode
+/// step against thousands of output panels). Every returned grid
+/// satisfies `row_chunks ≤ max(row_units, 1)` and
+/// `col_chunks ≤ max(col_units, 1)`.
+pub fn tile_grid(row_units: usize, col_units: usize, workers: usize) -> (usize, usize) {
+    let row_chunks = row_units.min(workers).max(1);
+    let col_chunks = if row_chunks >= workers {
+        1
+    } else {
+        (workers / row_chunks).min(col_units).max(1)
+    };
+    (row_chunks, col_chunks)
+}
+
 /// Split `data` into contiguous whole-row chunks (`cols` elements per
 /// row), run `f(first_row, chunk)` on `workers` scoped threads, and
 /// return the per-chunk results in row order. `workers <= 1` (or an empty
@@ -193,6 +212,22 @@ mod tests {
             }
             assert_eq!(expect, 11);
         }
+    }
+
+    #[test]
+    fn tile_grid_prefers_rows_and_splits_columns_when_rows_run_out() {
+        // plenty of rows: pure row split, no column tiling
+        assert_eq!(tile_grid(128, 256, 8), (8, 1));
+        // one row group, many panels: all parallelism moves to columns
+        assert_eq!(tile_grid(1, 256, 8), (1, 8));
+        // rows absorb some workers, columns the rest
+        assert_eq!(tile_grid(2, 256, 8), (2, 4));
+        // never more chunks than units
+        assert_eq!(tile_grid(1, 2, 16), (1, 2));
+        assert_eq!(tile_grid(3, 1, 16), (3, 1));
+        // degenerate inputs stay a valid 1×1 grid
+        assert_eq!(tile_grid(0, 0, 4), (1, 1));
+        assert_eq!(tile_grid(5, 5, 0), (1, 1));
     }
 
     #[test]

@@ -12,7 +12,8 @@ use crossquant::model::weights::synthetic_weights;
 use crossquant::model::{ModelConfig, QuantPath, QuantizedModel};
 use crossquant::quant::crossquant::col_pow_scales;
 use crossquant::quant::gemm::{
-    gemm_dequant, gemm_i32_packed, gemm_i32_ref, PackedInt8, KB, MR, NR,
+    dispatch, gemm_dequant, gemm_i32_packed, gemm_i32_packed_isa, gemm_i32_ref, Isa, PackedInt8,
+    KB, MR, NR,
 };
 use crossquant::quant::qlinear::{QuantizedLinear, ScaleMode};
 use crossquant::quant::Bits;
@@ -34,6 +35,13 @@ fn arb_codes(rng: &mut SplitMix64, len: usize, zero_frac: f64) -> Vec<i8> {
         .collect()
 }
 
+/// Every ISA this host can actually execute — scalar always, plus the
+/// native vector path. ISAs the host cannot run are covered by the
+/// loud-panic tests in `quant::gemm::dispatch` instead.
+fn isas_under_test() -> Vec<Isa> {
+    Isa::ALL.into_iter().filter(|&isa| dispatch::supported(isa)).collect()
+}
+
 fn check_shape(rng: &mut SplitMix64, m: usize, k: usize, n: usize, zero_frac: f64) {
     let a = arb_codes(rng, m * k, zero_frac);
     let w = arb_codes(rng, k * n, 0.1);
@@ -45,6 +53,16 @@ fn check_shape(rng: &mut SplitMix64, m: usize, k: usize, n: usize, zero_frac: f6
             reference,
             "m={m} k={k} n={n} zero={zero_frac:.2} workers={workers}"
         );
+    }
+    // every supported dispatch path must agree bit-for-bit, serial and tiled
+    for isa in isas_under_test() {
+        for workers in [1usize, 5] {
+            assert_eq!(
+                gemm_i32_packed_isa(&a, m, &packed, workers, isa),
+                reference,
+                "isa={isa} m={m} k={k} n={n} zero={zero_frac:.2} workers={workers}"
+            );
+        }
     }
 }
 
@@ -104,6 +122,91 @@ fn packed_gemm_structured_sparsity_bit_exact() {
     let reference = gemm_i32_ref(&a, m, k, &w, n);
     for workers in WORKER_GRID {
         assert_eq!(gemm_i32_packed(&a, m, &packed, workers), reference);
+    }
+}
+
+/// Per-ISA oracle on the shapes where a SIMD kernel can go wrong: `m`
+/// around the MR tile, `k` straddling the AVX2 4-step / NEON 2-step
+/// vector bodies and the KB skip blocks (so the scalar tails run), `n`
+/// straddling the NR panel width. `check_shape` compares every supported
+/// ISA against `gemm_i32_ref` for each combination.
+#[test]
+fn dispatch_paths_bit_identical_on_edge_shapes() {
+    let mut rng = SplitMix64::new(0xD1);
+    for m in [1usize, 3, 4, 5] {
+        for k in [2usize, KB - 1, KB + 1, KB + 3] {
+            for n in [1usize, NR - 1, NR + 1] {
+                check_shape(&mut rng, m, k, n, 0.3);
+            }
+        }
+    }
+}
+
+/// All-zero activation blocks short-circuit through the shared live-flag
+/// skip in every kernel — including rows that are entirely zero and the
+/// fully-zero batch (every block skipped, output identically zero).
+#[test]
+fn dispatch_paths_agree_on_all_zero_blocks() {
+    let mut rng = SplitMix64::new(0xD2);
+    let (m, k, n) = (MR + 1, 3 * KB + 5, 2 * NR + 3);
+    let mut a = arb_codes(&mut rng, m * k, 0.0);
+    for row in a.chunks_mut(k) {
+        for v in &mut row[KB..2 * KB] {
+            *v = 0;
+        }
+    }
+    for v in &mut a[..k] {
+        *v = 0;
+    }
+    let w = arb_codes(&mut rng, k * n, 0.1);
+    let packed = PackedInt8::from_row_major(&w, k, n);
+    let reference = gemm_i32_ref(&a, m, k, &w, n);
+    for isa in isas_under_test() {
+        assert_eq!(gemm_i32_packed_isa(&a, m, &packed, 3, isa), reference, "isa={isa}");
+        let zeros = vec![0i8; m * k];
+        assert_eq!(gemm_i32_packed_isa(&zeros, m, &packed, 1, isa), vec![0i32; m * n], "{isa}");
+    }
+}
+
+/// The mmapped `.cqa` panel form feeds the same kernels: pack, reload
+/// the raw bytes through an Mmap view, and require every ISA to
+/// reproduce the naive reference exactly over the borrowed panels.
+#[test]
+fn dispatch_paths_bit_identical_on_mapped_panels() {
+    use std::sync::Arc;
+
+    use crossquant::util::Mmap;
+
+    let mut rng = SplitMix64::new(0xD3);
+    let (m, k, n) = (5usize, KB + 9, 3 * NR + 5);
+    let a = arb_codes(&mut rng, m * k, 0.4);
+    let w = arb_codes(&mut rng, k * n, 0.1);
+    let owned = PackedInt8::from_row_major(&w, k, n);
+    let map = Arc::new(Mmap::from_vec(owned.raw_bytes().to_vec()));
+    let mapped = PackedInt8::from_mapped(k, n, map, 0).unwrap();
+    let reference = gemm_i32_ref(&a, m, k, &w, n);
+    for isa in isas_under_test() {
+        for workers in [1usize, 4] {
+            assert_eq!(
+                gemm_i32_packed_isa(&a, m, &mapped, workers, isa),
+                reference,
+                "mapped panels, isa={isa} workers={workers}"
+            );
+        }
+    }
+}
+
+/// `CROSSQUANT_ISA` pins the process-wide dispatch decision — the knob
+/// CI uses to re-run this whole suite on the forced-scalar path. Without
+/// the override, dispatch picks the best ISA the host supports.
+#[test]
+fn active_isa_honors_env_override() {
+    match std::env::var("CROSSQUANT_ISA") {
+        Ok(v) => {
+            let want: Isa = v.parse().expect("CROSSQUANT_ISA must name a known ISA");
+            assert_eq!(dispatch::active(), want, "CROSSQUANT_ISA override must win");
+        }
+        Err(_) => assert_eq!(dispatch::active(), dispatch::best()),
     }
 }
 
