@@ -14,6 +14,12 @@
 //! Sessions at 1 / 4 / 16 concurrency; per-token latency is the mean
 //! client-observed wall time per decoded token.
 //!
+//! PR 9 adds a tracing-overhead gate: a fully traced run (per-stage
+//! spans for queue wait, admission, prefill, every decode token, plus
+//! GEMM timing) must keep ≥ 98% of the untraced decode throughput at
+//! the widest session count; the measured overhead is appended to
+//! `BENCH_TREND.json` as a `crossquant-traced` row.
+//!
 //!     cargo bench --bench continuous_batching
 
 mod support;
@@ -212,6 +218,49 @@ fn main() {
         (outs, wall.as_secs_f64())
     });
 
+    // --- tracing overhead: traced vs untraced decode, best-of-5 each ---
+    // span recording is a handful of relaxed atomics per stage, so a
+    // fully traced request must stay within 2% of untraced throughput
+    let n = *SESSIONS.iter().max().unwrap();
+    let prompts = prompts_for(n, cfg);
+    let _ = run_engine(&coordinator, dynamic_scheme, &prompts[..1]); // warm
+    let total = (n * NEW_TOKENS) as f64;
+    let best_tok_s = |traced: bool| -> f64 {
+        (0..5)
+            .map(|_| {
+                let t0 = Instant::now();
+                let handles: Vec<_> = prompts
+                    .iter()
+                    .map(|p| {
+                        let mut req =
+                            EvalRequest::generate(p.clone(), dynamic_scheme, "w16", NEW_TOKENS);
+                        if traced {
+                            req = req.with_trace(crossquant::obs::next_trace_id());
+                        }
+                        coordinator.submit(req).expect("submit")
+                    })
+                    .collect();
+                for h in handles {
+                    h.wait().expect("generate");
+                }
+                total / t0.elapsed().as_secs_f64().max(1e-12)
+            })
+            .fold(0.0f64, f64::max)
+    };
+    let untraced_tok_s = best_tok_s(false);
+    let traced_tok_s = best_tok_s(true);
+    let overhead = 1.0 - traced_tok_s / untraced_tok_s.max(1e-12);
+    println!(
+        "\ntracing overhead @ {n} sessions: untraced {untraced_tok_s:.0} tok/s, \
+         traced {traced_tok_s:.0} tok/s ({:+.2}%)",
+        overhead * 100.0
+    );
+    assert!(
+        traced_tok_s >= 0.98 * untraced_tok_s,
+        "tracing overhead above 2%: untraced {untraced_tok_s:.0} tok/s vs traced \
+         {traced_tok_s:.0} tok/s"
+    );
+
     let occupancy = coordinator.metrics.batch_occupancy();
     println!("\nengine batch occupancy over the run: {occupancy:.2}");
     coordinator.shutdown();
@@ -223,6 +272,7 @@ fn main() {
         ("new_tokens", Json::num(NEW_TOKENS as f64)),
         ("threads", Json::num(par::max_threads() as f64)),
         ("batch_occupancy", Json::num(occupancy)),
+        ("tracing_overhead", Json::num(overhead)),
         ("schemes", Json::arr(vec![dyn_json, stat_json, fp_json])),
     ]);
     let path: PathBuf =
@@ -230,5 +280,30 @@ fn main() {
     match std::fs::write(&path, json.render_pretty()) {
         Ok(()) => println!("wrote {}", path.display()),
         Err(e) => eprintln!("could not write {}: {e}", path.display()),
+    }
+
+    // append the traced-decode datapoint to the cross-PR trend file, so
+    // the history shows if span recording ever gets expensive
+    let trend_path: PathBuf =
+        PathBuf::from(concat!(env!("CARGO_MANIFEST_DIR"), "/../BENCH_TREND.json"));
+    let mut rows: Vec<Json> = match std::fs::read_to_string(&trend_path) {
+        Ok(s) => match Json::parse(&s) {
+            Ok(Json::Arr(v)) => v,
+            _ => Vec::new(),
+        },
+        Err(_) => Vec::new(),
+    };
+    let run_id = rows.len();
+    rows.push(Json::obj(vec![
+        ("run", Json::num(run_id as f64)),
+        ("scheme", Json::str("crossquant-traced")),
+        ("isa", Json::str(crossquant::quant::gemm::dispatch::active().name())),
+        ("decode_tok_s", Json::num(traced_tok_s)),
+        ("untraced_tok_s", Json::num(untraced_tok_s)),
+        ("tracing_overhead", Json::num(overhead)),
+    ]));
+    match std::fs::write(&trend_path, Json::Arr(rows).render_pretty()) {
+        Ok(()) => println!("appended crossquant-traced row to {}", trend_path.display()),
+        Err(e) => eprintln!("could not write {}: {e}", trend_path.display()),
     }
 }

@@ -44,6 +44,8 @@ use super::scheduler::{EvalResponse, SchemeSite};
 use super::{ActScheme, SchemeKey};
 use crate::model::block::{self, DecodeState};
 use crate::model::{ActSite, ModelConfig, NativeModel, QuantizedModel};
+use crate::obs::{self, Span, SpanKind};
+use crate::quant::gemm::{gemm_timing_enable, gemm_timing_take};
 use crate::quant::registry::StaticSpec;
 use crate::tensor::Matrix;
 
@@ -156,6 +158,9 @@ pub(crate) struct GenRequest {
     /// the next tick and releases its KV slot.
     pub cancel: Arc<AtomicBool>,
     pub submitted: Instant,
+    /// Request trace id (0 = untraced). Traced sequences emit queue-wait,
+    /// admission, prefill, and per-token decode spans into the span ring.
+    pub trace: u64,
 }
 
 /// Per-sequence activation-site state: native schemes carry their own
@@ -181,6 +186,10 @@ struct GenSeq {
     events: Option<Sender<GenEvent>>,
     cancel: Arc<AtomicBool>,
     submitted: Instant,
+    trace: u64,
+    /// When the previous token was streamed — the anchor for inter-token
+    /// latency and per-token decode spans.
+    last_token_at: Instant,
 }
 
 /// Narrow model accessor the executor exposes to the engine (lazy
@@ -193,7 +202,9 @@ pub(crate) trait EngineModels {
 pub(crate) struct Engine {
     cfg: EngineConfig,
     pool: KvPool,
-    waiting: VecDeque<GenRequest>,
+    /// Admission queue; each entry keeps its enqueue time so admission
+    /// wait is measurable per request.
+    waiting: VecDeque<(Instant, GenRequest)>,
     active: Vec<GenSeq>,
     next_id: u64,
     metrics: Arc<Metrics>,
@@ -228,7 +239,18 @@ impl Engine {
             )));
             return;
         }
-        self.waiting.push_back(req);
+        let wait_us = req.submitted.elapsed().as_micros() as u64;
+        self.metrics.queue_wait.record_us(wait_us);
+        if req.trace != 0 {
+            self.metrics.spans.record(Span {
+                trace: req.trace,
+                kind: SpanKind::QueueWait,
+                start_us: obs::now_us().saturating_sub(wait_us),
+                dur_us: wait_us,
+                aux: 0,
+            });
+        }
+        self.waiting.push_back((Instant::now(), req));
         self.update_gauges();
     }
 
@@ -248,16 +270,16 @@ impl Engine {
     /// of decoding the rest of `max_new_tokens` into a closed socket.
     fn reap_cancelled(&mut self) {
         let cancelled_waiting =
-            self.waiting.iter().any(|req| req.cancel.load(Relaxed));
+            self.waiting.iter().any(|(_, req)| req.cancel.load(Relaxed));
         if cancelled_waiting {
             let mut kept = VecDeque::with_capacity(self.waiting.len());
-            for req in std::mem::take(&mut self.waiting) {
+            for (at, req) in std::mem::take(&mut self.waiting) {
                 if req.cancel.load(Relaxed) {
                     self.metrics.engine_cancelled.fetch_add(1, Relaxed);
                     self.metrics.failed.fetch_add(1, Relaxed);
                     let _ = req.resp.send(Err(anyhow!("request cancelled: client disconnected")));
                 } else {
-                    kept.push_back(req);
+                    kept.push_back((at, req));
                 }
             }
             self.waiting = kept;
@@ -278,7 +300,7 @@ impl Engine {
 
     /// Fail every queued and active sequence (models unavailable).
     pub(crate) fn fail_all(&mut self, why: &str) {
-        for req in std::mem::take(&mut self.waiting) {
+        for (_, req) in std::mem::take(&mut self.waiting) {
             self.metrics.failed.fetch_add(1, Relaxed);
             let _ = req.resp.send(Err(anyhow!("{why}")));
         }
@@ -291,13 +313,13 @@ impl Engine {
     fn admit(&mut self, models: &mut dyn EngineModels) {
         while self.active.len() < self.cfg.max_active_seqs && !self.waiting.is_empty() {
             let Some(state) = self.pool.lease() else { break };
-            let Some(req) = self.waiting.pop_front() else {
+            let Some((enqueued, req)) = self.waiting.pop_front() else {
                 // unreachable given the loop guard, but a leaked slot is
                 // the wrong failure mode if that invariant ever slips
                 self.pool.release(state);
                 break;
             };
-            self.admit_one(models, req, state);
+            self.admit_one(models, req, state, enqueued);
         }
     }
 
@@ -308,9 +330,22 @@ impl Engine {
         models: &mut dyn EngineModels,
         req: GenRequest,
         mut state: DecodeState,
+        enqueued: Instant,
     ) {
         let id = self.next_id;
         self.next_id += 1;
+        let adm_us = enqueued.elapsed().as_micros() as u64;
+        if req.trace != 0 {
+            self.metrics.spans.record(Span {
+                trace: req.trace,
+                kind: SpanKind::AdmissionWait,
+                start_us: obs::now_us().saturating_sub(adm_us),
+                dur_us: adm_us,
+                aux: 0,
+            });
+        }
+        let kernel = self.metrics.kernel.clone();
+        let t0 = Instant::now();
         let run: Result<(SeqSite, Matrix)> = (|| {
             match req.scheme.static_spec() {
                 Some((spec, qmax)) => {
@@ -328,7 +363,7 @@ impl Engine {
                     Ok((SeqSite::Integer, logits))
                 }
                 None => {
-                    let mut site = SchemeSite::build(req.scheme)?;
+                    let mut site = SchemeSite::build(req.scheme, Some(kernel))?;
                     let model = models.native_model(&req.key.weight_set)?;
                     let logits =
                         model.forward_incremental_with(&req.tokens, &mut state, site.site(), true)?;
@@ -343,6 +378,17 @@ impl Engine {
                 self.pool.release(state);
             }
             Ok((site, logits)) => {
+                let prefill_us = t0.elapsed().as_micros() as u64;
+                self.metrics.ttft.record_us(req.submitted.elapsed().as_micros() as u64);
+                if req.trace != 0 {
+                    self.metrics.spans.record(Span {
+                        trace: req.trace,
+                        kind: SpanKind::Prefill,
+                        start_us: obs::now_us().saturating_sub(prefill_us),
+                        dur_us: prefill_us,
+                        aux: req.tokens.len() as u64,
+                    });
+                }
                 let tok = block::argmax(logits.row(logits.rows - 1)) as u32;
                 let seq = GenSeq {
                     id,
@@ -357,6 +403,8 @@ impl Engine {
                     events: req.events,
                     cancel: req.cancel,
                     submitted: req.submitted,
+                    trace: req.trace,
+                    last_token_at: Instant::now(),
                 };
                 if let Some(ev) = &seq.events {
                     let _ = ev.send(GenEvent { seq: id, token: tok });
@@ -389,13 +437,33 @@ impl Engine {
             }
         }
         for (key, mut group) in groups {
+            let traced = group.iter().any(|s| s.trace != 0);
+            if traced {
+                gemm_timing_enable(true);
+            }
             let t0 = Instant::now();
-            let result = Self::step_group(models, &key, &mut group);
+            let result = Self::step_group(models, &key, &mut group, &self.metrics);
+            let fwd_us = t0.elapsed().as_micros() as u64;
             self.metrics.engine_steps.fetch_add(1, Relaxed);
             self.metrics.engine_stepped_seqs.fetch_add(group.len() as u64, Relaxed);
-            self.metrics
-                .engine_decode_time_us
-                .fetch_add(t0.elapsed().as_micros() as u64, Relaxed);
+            self.metrics.engine_decode_time_us.fetch_add(fwd_us, Relaxed);
+            self.metrics.batch_forward.record_us(fwd_us);
+            if traced {
+                let (gemm_calls, gemm_ns) = gemm_timing_take();
+                gemm_timing_enable(false);
+                if gemm_calls > 0 {
+                    let start_us = obs::now_us().saturating_sub(fwd_us);
+                    for seq in group.iter().filter(|s| s.trace != 0) {
+                        self.metrics.spans.record(Span {
+                            trace: seq.trace,
+                            kind: SpanKind::Gemm,
+                            start_us,
+                            dur_us: gemm_ns / 1_000,
+                            aux: gemm_calls,
+                        });
+                    }
+                }
+            }
             match result {
                 Ok(()) => {
                     self.metrics.engine_decoded_tokens.fetch_add(group.len() as u64, Relaxed);
@@ -421,6 +489,7 @@ impl Engine {
         models: &mut dyn EngineModels,
         key: &SchemeKey,
         seqs: &mut [GenSeq],
+        metrics: &Metrics,
     ) -> Result<()> {
         let scheme = seqs[0].scheme;
         let tokens: Vec<u32> = seqs.iter().map(|s| s.next).collect();
@@ -450,6 +519,18 @@ impl Engine {
             let tok = block::argmax(logits.row(i)) as u32;
             s.next = tok;
             s.generated.push(tok);
+            let gap_us = s.last_token_at.elapsed().as_micros() as u64;
+            s.last_token_at = Instant::now();
+            metrics.inter_token.record_us(gap_us);
+            if s.trace != 0 {
+                metrics.spans.record(Span {
+                    trace: s.trace,
+                    kind: SpanKind::DecodeToken,
+                    start_us: obs::now_us().saturating_sub(gap_us),
+                    dur_us: gap_us,
+                    aux: s.generated.len() as u64 - 1,
+                });
+            }
             if let Some(ev) = &s.events {
                 let _ = ev.send(GenEvent { seq: s.id, token: tok });
             }
@@ -572,6 +653,7 @@ mod tests {
             events: Some(ev_tx),
             cancel: Arc::new(AtomicBool::new(false)),
             submitted: Instant::now(),
+            trace: 0,
         };
         (req, resp_rx, ev_rx)
     }
@@ -747,6 +829,40 @@ mod tests {
         let err = b_rx.recv().unwrap().unwrap_err();
         assert!(format!("{err}").contains("cancelled"), "unexpected: {err}");
         assert_eq!(eng.metrics.engine_cancelled.load(Relaxed), 1);
+    }
+
+    #[test]
+    fn traced_sequence_emits_contiguous_spans() {
+        let mut eng = engine(2, 4, None);
+        let mut models = TestModels::new(19);
+        let (mut a, a_rx, _) = gen_req(vec![1, 2, 3], ActScheme::Fp, 6);
+        a.trace = 0xFEED;
+        eng.submit(a);
+        while !eng.is_idle() {
+            eng.tick(&mut models);
+        }
+        a_rx.recv().unwrap().unwrap();
+        let spans = eng.metrics.spans.for_trace(0xFEED);
+        let kind_count =
+            |k: SpanKind| spans.iter().filter(|s| s.kind == k).count();
+        assert_eq!(kind_count(SpanKind::QueueWait), 1);
+        assert_eq!(kind_count(SpanKind::AdmissionWait), 1);
+        assert_eq!(kind_count(SpanKind::Prefill), 1);
+        // 6 tokens: one at prefill, five decode steps
+        assert_eq!(kind_count(SpanKind::DecodeToken), 5);
+        // histograms observed alongside the spans
+        assert_eq!(eng.metrics.ttft.total.count(), 1);
+        assert_eq!(eng.metrics.inter_token.total.count(), 5);
+        assert!(eng.metrics.batch_forward.total.count() >= 5);
+        // an untraced request leaves the ring untouched
+        let before = eng.metrics.spans.recorded();
+        let (b, b_rx, _) = gen_req(vec![4, 5], ActScheme::Fp, 3);
+        eng.submit(b);
+        while !eng.is_idle() {
+            eng.tick(&mut models);
+        }
+        b_rx.recv().unwrap().unwrap();
+        assert_eq!(eng.metrics.spans.recorded(), before);
     }
 
     #[test]

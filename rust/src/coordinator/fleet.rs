@@ -37,6 +37,7 @@ use std::time::{Duration, Instant};
 use anyhow::{anyhow, Context, Result};
 
 use super::metrics::FleetMetrics;
+use crate::obs::log as olog;
 
 /// The stdout line a worker prints once its listener is bound.
 pub const READY_PREFIX: &str = "CROSSQUANT_WORKER_READY addr=";
@@ -419,7 +420,11 @@ fn spawn_worker(cfg: &FleetConfig, slot: &mut Slot, first_spawn: bool) {
             slot.restart_at = None;
         }
         Err(e) => {
-            eprintln!("fleet: spawning worker {index} failed: {e}");
+            olog::error(
+                "fleet",
+                "spawning worker failed",
+                &[("worker", index.to_string()), ("err", e.to_string())],
+            );
             // treat a failed spawn like a crash so the backoff applies
             let now = Instant::now();
             match slot.policy.on_crash(now, Duration::ZERO) {
@@ -492,10 +497,15 @@ fn tick_slot(cfg: &FleetConfig, slot: &mut Slot, metrics: &FleetMetrics) {
         Ok(Some(status)) => {
             // the process is gone — crashed, killed, or exited on its own
             let uptime = slot.spawned_at.elapsed();
-            eprintln!(
-                "fleet: worker {} (pid {}) exited with {status} after {uptime:?}",
-                slot.worker.index(),
-                slot.worker.pid().unwrap_or(0),
+            olog::warn(
+                "fleet",
+                "worker exited",
+                &[
+                    ("worker", slot.worker.index().to_string()),
+                    ("pid", slot.worker.pid().unwrap_or(0).to_string()),
+                    ("status", status.to_string()),
+                    ("uptime", format!("{uptime:?}")),
+                ],
             );
             metrics.worker_crashes.fetch_add(1, Ordering::SeqCst);
             slot.child = None;
@@ -509,9 +519,10 @@ fn tick_slot(cfg: &FleetConfig, slot: &mut Slot, metrics: &FleetMetrics) {
                     slot.restart_at = Some(now + delay);
                 }
                 None => {
-                    eprintln!(
-                        "fleet: worker {} crash-looping, circuit breaker open",
-                        slot.worker.index()
+                    olog::error(
+                        "fleet",
+                        "worker crash-looping, circuit breaker open",
+                        &[("worker", slot.worker.index().to_string())],
                     );
                     metrics.breaker_trips.fetch_add(1, Ordering::SeqCst);
                     slot.worker.breaker_open.store(true, Ordering::SeqCst);
@@ -529,10 +540,13 @@ fn tick_slot(cfg: &FleetConfig, slot: &mut Slot, metrics: &FleetMetrics) {
                     } else {
                         slot.hb_misses += 1;
                         if slot.hb_misses >= cfg.heartbeat_misses {
-                            eprintln!(
-                                "fleet: worker {} missed {} heartbeats, killing it",
-                                slot.worker.index(),
-                                slot.hb_misses
+                            olog::warn(
+                                "fleet",
+                                "worker missed heartbeats, killing it",
+                                &[
+                                    ("worker", slot.worker.index().to_string()),
+                                    ("misses", slot.hb_misses.to_string()),
+                                ],
                             );
                             metrics.worker_wedged.fetch_add(1, Ordering::SeqCst);
                             kill_slot(slot);
@@ -544,16 +558,21 @@ fn tick_slot(cfg: &FleetConfig, slot: &mut Slot, metrics: &FleetMetrics) {
                     }
                 }
             } else if slot.spawned_at.elapsed() > cfg.ready_timeout {
-                eprintln!(
-                    "fleet: worker {} never became ready, killing it",
-                    slot.worker.index()
+                olog::warn(
+                    "fleet",
+                    "worker never became ready, killing it",
+                    &[("worker", slot.worker.index().to_string())],
                 );
                 metrics.worker_wedged.fetch_add(1, Ordering::SeqCst);
                 kill_slot(slot);
             }
         }
         Err(e) => {
-            eprintln!("fleet: try_wait on worker {} failed: {e}", slot.worker.index());
+            olog::warn(
+                "fleet",
+                "try_wait on worker failed",
+                &[("worker", slot.worker.index().to_string()), ("err", e.to_string())],
+            );
         }
     }
 }

@@ -1,16 +1,16 @@
-//! Coordinator metrics: lock-free counters + a fixed-bucket latency
-//! histogram, printable as a one-line summary or a detailed report, plus
-//! the continuous-batching engine's gauges (batch occupancy, admission
-//! queue depth, KV-pool utilisation, aggregate decode throughput) —
-//! rendered as structured JSON for the `{"cmd": "metrics"}` wire command.
+//! Coordinator metrics: lock-free counters, log-bucketed latency
+//! histograms with rolling windows (`obs::hist`), the per-stage span ring
+//! (`obs::trace`), and live quantization-kernel telemetry
+//! (`obs::kernel`) — rendered as structured JSON for the
+//! `{"cmd": "metrics"}` wire command and as Prometheus text for
+//! `{"cmd": "metrics", "format": "prometheus"}`.
 
 use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Arc;
 
+use crate::obs::prom::PromWriter;
+use crate::obs::{KernelTelemetry, LatencyTrack, SpanRing};
 use crate::util::Json;
-
-/// Latency buckets in microseconds.
-const BUCKETS_US: [u64; 10] =
-    [100, 500, 1_000, 5_000, 10_000, 50_000, 100_000, 500_000, 1_000_000, 5_000_000];
 
 #[derive(Default)]
 pub struct Metrics {
@@ -57,8 +57,22 @@ pub struct Metrics {
     /// Static models built by the lazy FP-load + calibrate path (the
     /// cold-start cost a mounted artifact avoids).
     pub static_calibrations: AtomicU64,
-    latency_buckets: [AtomicU64; BUCKETS_US.len() + 1],
-    latency_sum_us: AtomicU64,
+    // --- latency tracks (lifetime histogram + 1s/10s/60s windows) ---
+    /// Whole-request latency (submit → respond), every request kind.
+    pub request_latency: LatencyTrack,
+    /// Time-to-first-token for engine generate requests.
+    pub ttft: LatencyTrack,
+    /// Inter-token latency: previous token emit → this token emit.
+    pub inter_token: LatencyTrack,
+    /// Submit → executor/engine pickup.
+    pub queue_wait: LatencyTrack,
+    /// One batched forward (scoring batch or engine step group).
+    pub batch_forward: LatencyTrack,
+    // --- tracing & paper-metric telemetry ---
+    /// Per-stage span ring for traced requests (`{"cmd":"trace"}`).
+    pub spans: SpanRing,
+    /// Live quantization-kernel sampling (shared into activation sites).
+    pub kernel: Arc<KernelTelemetry>,
 }
 
 impl Metrics {
@@ -66,35 +80,30 @@ impl Metrics {
         Metrics::default()
     }
 
+    /// Record one whole-request latency observation.
     pub fn record_latency(&self, micros: u64) {
-        let idx = BUCKETS_US.iter().position(|&b| micros <= b).unwrap_or(BUCKETS_US.len());
-        self.latency_buckets[idx].fetch_add(1, Ordering::Relaxed);
-        self.latency_sum_us.fetch_add(micros, Ordering::Relaxed);
+        self.request_latency.record_us(micros);
     }
 
+    /// Mean request latency over the histogram's **own** observation
+    /// count — the seed divided by `completed`, which skewed the mean
+    /// whenever a failed request had also recorded a latency.
     pub fn mean_latency_us(&self) -> f64 {
-        let n = self.completed.load(Ordering::Relaxed);
-        if n == 0 {
-            return 0.0;
-        }
-        self.latency_sum_us.load(Ordering::Relaxed) as f64 / n as f64
+        self.request_latency.total.mean_us()
     }
 
-    /// Approximate quantile from the histogram (upper bucket bound).
+    /// Approximate request-latency quantile (upper bucket bound, ≤6.25%
+    /// relative error). Clamps to the last finite bucket bound instead of
+    /// the seed's `u64::MAX` sentinel (1.8e19 µs once serialized);
+    /// [`Self::latency_overflow_count`] says whether clamping happened.
     pub fn latency_quantile_us(&self, q: f64) -> u64 {
-        let total: u64 = self.latency_buckets.iter().map(|b| b.load(Ordering::Relaxed)).sum();
-        if total == 0 {
-            return 0;
-        }
-        let target = (total as f64 * q).ceil() as u64;
-        let mut acc = 0u64;
-        for (i, b) in self.latency_buckets.iter().enumerate() {
-            acc += b.load(Ordering::Relaxed);
-            if acc >= target {
-                return BUCKETS_US.get(i).copied().unwrap_or(u64::MAX);
-            }
-        }
-        u64::MAX
+        self.request_latency.total.quantile_us(q)
+    }
+
+    /// Observations past the histogram's finite range — the explicit
+    /// signal the old overflow sentinel stood in for.
+    pub fn latency_overflow_count(&self) -> u64 {
+        self.request_latency.total.overflow_count()
     }
 
     pub fn mean_batch_size(&self) -> f64 {
@@ -174,9 +183,30 @@ impl Metrics {
         ])
     }
 
+    /// All five latency tracks — the `{"cmd": "metrics"}` payload's
+    /// `"latency"` object. Each track carries the lifetime summary
+    /// (count/mean/p50/p95/p99/p999/max/overflow) plus `w1s`/`w10s`/
+    /// `w60s` windowed quantiles, so dashboards read *now* and autopsies
+    /// read the whole run.
+    pub fn latency_json(&self) -> Json {
+        Json::obj(vec![
+            ("request", self.request_latency.json()),
+            ("ttft", self.ttft.json()),
+            ("inter_token", self.inter_token.json()),
+            ("queue_wait", self.queue_wait.json()),
+            ("batch_forward", self.batch_forward.json()),
+        ])
+    }
+
     /// Flat numeric counters — the shape the fleet router sums across
     /// workers when aggregating `{"cmd": "metrics"}` responses. Every
     /// field must stay a plain number for that summation to hold.
+    ///
+    /// `deadline_exceeded` and `shed` are router-level failures, so a
+    /// worker always reports 0 — they exist here so the aggregate shape
+    /// has the keys and the router can fold its own counts into the same
+    /// sum (the only keys intentionally shared with [`FleetMetrics`];
+    /// pinned by `fleet_and_counter_keys_only_collide_deliberately`).
     pub fn counters_json(&self) -> Json {
         let load = |a: &AtomicU64| a.load(Ordering::Relaxed) as f64;
         Json::obj(vec![
@@ -188,6 +218,8 @@ impl Metrics {
             ("engine_rejected", Json::num(load(&self.engine_rejected))),
             ("engine_cancelled", Json::num(load(&self.engine_cancelled))),
             ("decoded_tokens", Json::num(load(&self.engine_decoded_tokens))),
+            ("deadline_exceeded", Json::num(0.0)),
+            ("shed", Json::num(0.0)),
         ])
     }
 
@@ -200,11 +232,105 @@ impl Metrics {
             self.batches.load(Ordering::Relaxed),
             self.mean_batch_size(),
             self.mean_latency_us() / 1000.0,
-            match self.latency_quantile_us(0.9) {
-                u64::MAX => f64::INFINITY,
-                v => v as f64 / 1000.0,
-            },
+            self.latency_quantile_us(0.9) as f64 / 1000.0,
         )
+    }
+
+    /// Worker-side Prometheus exposition body (text format 0.0.4) — the
+    /// `{"cmd": "metrics", "format": "prometheus"}` payload.
+    pub fn prometheus(&self) -> String {
+        let mut w = PromWriter::new();
+        self.prom_into(&mut w);
+        w.finish()
+    }
+
+    pub fn prom_into(&self, w: &mut PromWriter) {
+        let load = |a: &AtomicU64| a.load(Ordering::Relaxed) as f64;
+        let decoded = load(&self.engine_decoded_tokens);
+        let counters: [(&str, &str, f64); 8] = [
+            ("cq_requests_submitted_total", "Requests accepted.", load(&self.submitted)),
+            ("cq_requests_completed_total", "Requests answered ok.", load(&self.completed)),
+            ("cq_requests_failed_total", "Requests answered with an error.", load(&self.failed)),
+            ("cq_batches_total", "Scoring batches flushed.", load(&self.batches)),
+            ("cq_executions_total", "Executor invocations.", load(&self.executions)),
+            ("cq_engine_rejected_total", "Rejected at admission.", load(&self.engine_rejected)),
+            ("cq_engine_cancelled_total", "Cancelled mid-stream.", load(&self.engine_cancelled)),
+            ("cq_decoded_tokens_total", "Engine-decoded tokens.", decoded),
+        ];
+        for (name, help, v) in counters {
+            w.write(name, "counter", help, &[], v);
+        }
+        let slot_bytes = load(&self.kv_pool_slot_bytes);
+        let kv_bytes_in_use = load(&self.kv_pool_in_use) * slot_bytes;
+        let gauges: [(&str, &str, f64); 6] = [
+            ("cq_engine_active_seqs", "Sequences decoding now.", load(&self.engine_active_seqs)),
+            ("cq_engine_queue_depth", "Admission queue depth.", load(&self.engine_queue_depth)),
+            ("cq_batch_occupancy", "Mean sequences per engine step.", self.batch_occupancy()),
+            ("cq_decode_tok_s", "Decode throughput, tok/s.", self.engine_decode_tok_s()),
+            ("cq_kv_pool_slots_in_use", "KV slots leased.", load(&self.kv_pool_in_use)),
+            ("cq_kv_pool_bytes_in_use", "KV bytes leased.", kv_bytes_in_use),
+        ];
+        for (name, help, v) in gauges {
+            w.write(name, "gauge", help, &[], v);
+        }
+        let tracks: [(&str, &LatencyTrack); 5] = [
+            ("request", &self.request_latency),
+            ("ttft", &self.ttft),
+            ("inter_token", &self.inter_token),
+            ("queue_wait", &self.queue_wait),
+            ("batch_forward", &self.batch_forward),
+        ];
+        for (track, t) in tracks {
+            let labels: &[(&str, &str)] = &[("track", track)];
+            w.write(
+                "cq_latency_count_total",
+                "counter",
+                "Latency observations per track.",
+                labels,
+                t.total.count() as f64,
+            );
+            w.write(
+                "cq_latency_overflow_total",
+                "counter",
+                "Observations past the histogram's finite range.",
+                labels,
+                t.total.overflow_count() as f64,
+            );
+            w.write(
+                "cq_latency_mean_us",
+                "gauge",
+                "Lifetime mean latency, microseconds.",
+                labels,
+                t.total.mean_us(),
+            );
+            for (q, qs) in [(0.5, "0.5"), (0.95, "0.95"), (0.99, "0.99"), (0.999, "0.999")] {
+                w.write(
+                    "cq_latency_us",
+                    "gauge",
+                    "Lifetime latency quantile, microseconds.",
+                    &[("track", track), ("quantile", qs)],
+                    t.total.quantile_us(q) as f64,
+                );
+            }
+            let w60 = t.rolling.window(60);
+            for (q, qs) in [(0.5, "0.5"), (0.95, "0.95"), (0.99, "0.99")] {
+                w.write(
+                    "cq_latency_w60s_us",
+                    "gauge",
+                    "Last-60s latency quantile, microseconds.",
+                    &[("track", track), ("quantile", qs)],
+                    w60.quantile_us(q) as f64,
+                );
+            }
+        }
+        w.write(
+            "cq_spans_recorded_total",
+            "counter",
+            "Spans recorded into the trace ring.",
+            &[],
+            self.spans.recorded() as f64,
+        );
+        self.kernel.prom(w);
     }
 }
 
@@ -234,6 +360,9 @@ pub struct FleetMetrics {
     pub worker_wedged: AtomicU64,
     /// Crash-loop circuit breakers tripped.
     pub breaker_trips: AtomicU64,
+    /// Router-side spans: one [`crate::obs::SpanKind::Dispatch`] span per
+    /// completed data request (aux = worker index that served it).
+    pub spans: SpanRing,
 }
 
 impl FleetMetrics {
@@ -262,6 +391,37 @@ impl FleetMetrics {
             ("breaker_trips", Json::num(load(&self.breaker_trips))),
         ])
     }
+
+    /// Router-side Prometheus samples (the worker bodies are appended by
+    /// the router after re-labeling, so names here must not collide with
+    /// worker metric names).
+    pub fn prom_into(&self, w: &mut PromWriter) {
+        let load = |a: &AtomicU64| a.load(Ordering::Relaxed) as f64;
+        let deadline = load(&self.deadline_exceeded);
+        let wedged = load(&self.worker_wedged);
+        let counters: [(&str, &str, f64); 10] = [
+            ("cq_router_requests_total", "Requests dispatched.", load(&self.requests)),
+            ("cq_router_succeeded_total", "Requests answered ok.", load(&self.succeeded)),
+            ("cq_router_retried_total", "Requests retried.", load(&self.retried)),
+            ("cq_router_deadline_exceeded_total", "Deadlines exhausted.", deadline),
+            ("cq_router_shed_total", "Requests shed.", load(&self.shed)),
+            ("cq_router_malformed_total", "Malformed frames refused.", load(&self.malformed)),
+            ("cq_fleet_worker_crashes_total", "Workers observed dead.", load(&self.worker_crashes)),
+            ("cq_fleet_worker_restarts_total", "Worker restarts.", load(&self.worker_restarts)),
+            ("cq_fleet_worker_wedged_total", "Workers killed as wedged.", wedged),
+            ("cq_fleet_breaker_trips_total", "Breakers tripped.", load(&self.breaker_trips)),
+        ];
+        for (name, help, v) in counters {
+            w.write(name, "counter", help, &[], v);
+        }
+        w.write(
+            "cq_router_spans_recorded_total",
+            "counter",
+            "Dispatch spans recorded by the router.",
+            &[],
+            self.spans.recorded() as f64,
+        );
+    }
 }
 
 #[cfg(test)]
@@ -277,12 +437,27 @@ mod tests {
         for _ in 0..10 {
             m.record_latency(400_000);
         }
-        for _ in 0..100 {
-            m.completed.fetch_add(1, Ordering::Relaxed);
-        }
-        assert_eq!(m.latency_quantile_us(0.5), 500);
-        assert_eq!(m.latency_quantile_us(0.95), 500_000);
-        assert!(m.mean_latency_us() > 0.0);
+        // p50 lands in 400's bucket: within 6.25% above the value
+        let p50 = m.latency_quantile_us(0.5);
+        assert!((400..=426).contains(&p50), "p50={p50}");
+        // p95 lands in 400_000's bucket, tightened to the observed max
+        assert_eq!(m.latency_quantile_us(0.95), 400_000);
+        // mean divides by the histogram's own count, not `completed`
+        // (which is still 0 here — the seed bug made this 0.0 or worse)
+        let expect = (90.0 * 400.0 + 10.0 * 400_000.0) / 100.0;
+        assert!((m.mean_latency_us() - expect).abs() < 1e-9);
+        assert_eq!(m.latency_overflow_count(), 0);
+    }
+
+    #[test]
+    fn overflow_is_reported_not_sentineled() {
+        let m = Metrics::new();
+        m.record_latency(u64::MAX);
+        assert_eq!(m.latency_overflow_count(), 1);
+        let p99 = m.latency_quantile_us(0.99);
+        assert!(p99 < u64::MAX, "quantile clamps instead of returning the sentinel");
+        // and the summary line stays finite
+        assert!(!m.summary().contains("inf"));
     }
 
     #[test]
@@ -350,6 +525,65 @@ mod tests {
         }
         assert_eq!(j.get("submitted").and_then(|v| v.as_f64()), Some(7.0));
         assert_eq!(j.get("engine_cancelled").and_then(|v| v.as_f64()), Some(2.0));
+        // router-level failures exist in the flat shape so aggregation can
+        // sum them — a worker must always report zero
+        assert_eq!(j.get("deadline_exceeded").and_then(|v| v.as_f64()), Some(0.0));
+        assert_eq!(j.get("shed").and_then(|v| v.as_f64()), Some(0.0));
+    }
+
+    /// The fleet aggregation contract: `FleetMetrics` keys and the flat
+    /// worker `counters` keys may only collide on the two counters the
+    /// router deliberately folds into the worker sum (`deadline_exceeded`
+    /// and `shed`, always 0 on workers). Any other collision would
+    /// double-count in the aggregated `{"cmd":"metrics"}` view.
+    #[test]
+    fn fleet_and_counter_keys_only_collide_deliberately() {
+        let keys = |j: &Json| -> Vec<String> {
+            match j {
+                Json::Obj(fields) => fields.keys().cloned().collect(),
+                other => panic!("expected object, got {other:?}"),
+            }
+        };
+        let m = Metrics::new();
+        let f = FleetMetrics::new();
+        let counters = keys(&m.counters_json());
+        let mut fleet_keys = keys(&f.router_json());
+        fleet_keys.extend(keys(&f.fleet_json()));
+        let collisions: Vec<&String> =
+            fleet_keys.iter().filter(|k| counters.contains(k)).collect();
+        assert_eq!(
+            collisions,
+            vec!["deadline_exceeded", "shed"],
+            "unexpected key collision between FleetMetrics and worker counters"
+        );
+    }
+
+    #[test]
+    fn latency_json_has_all_tracks_and_windows() {
+        let m = Metrics::new();
+        m.record_latency(2_000);
+        m.ttft.record_us(1_000);
+        m.inter_token.record_us(50);
+        let j = m.latency_json();
+        for track in ["request", "ttft", "inter_token", "queue_wait", "batch_forward"] {
+            let t = j.get(track).unwrap_or_else(|| panic!("missing track {track}"));
+            assert!(t.get("p99_us").is_some());
+            assert!(t.get("overflow").is_some());
+            assert!(t.get("w60s").is_some());
+        }
+        assert_eq!(j.get("ttft").unwrap().get("count").and_then(|v| v.as_f64()), Some(1.0));
+    }
+
+    #[test]
+    fn prometheus_body_renders_counters_and_quantiles() {
+        let m = Metrics::new();
+        m.submitted.store(3, Ordering::Relaxed);
+        m.record_latency(1_000);
+        let body = m.prometheus();
+        assert!(body.contains("# TYPE cq_requests_submitted_total counter"));
+        assert!(body.contains("cq_requests_submitted_total 3\n"));
+        assert!(body.contains("cq_latency_us{track=\"request\",quantile=\"0.99\"}"));
+        assert!(body.contains("cq_latency_count_total{track=\"request\"} 1\n"));
     }
 
     #[test]
@@ -363,5 +597,8 @@ mod tests {
         assert_eq!(r.get("retried").and_then(|v| v.as_f64()), Some(3.0));
         let fl = f.fleet_json();
         assert_eq!(fl.get("worker_restarts").and_then(|v| v.as_f64()), Some(1.0));
+        let mut w = crate::obs::prom::PromWriter::new();
+        f.prom_into(&mut w);
+        assert!(w.finish().contains("cq_router_requests_total 10\n"));
     }
 }

@@ -13,6 +13,17 @@
 //!   `{"ok": false, "error": "deadline exceeded…", "retryable": true}`.
 //! * `{"cmd": "metrics"}` aggregates across the fleet: per-worker
 //!   status, summed worker counters, and the router's own counters.
+//!   With `"format": "prometheus"` it returns one exposition body: the
+//!   router's samples plus every healthy worker's body re-labeled with
+//!   `worker="<index>"`.
+//! * Every data request is assigned a trace id before relay: a client
+//!   `"trace"` field is honored, otherwise the router generates one and
+//!   injects it, so worker-side spans always correlate. The id is
+//!   echoed in the final response and a dispatch span (aux = worker
+//!   index) is recorded router-side.
+//! * `{"cmd": "trace", "id": …}` merges the router's dispatch spans for
+//!   that id with every healthy worker's spans (`"format": "chrome"`
+//!   returns merged Chrome `trace_event` JSON instead).
 //!
 //! Retry safety: score and generate are deterministic (greedy decode,
 //! pinned by rust/tests/engine.rs), so re-running a request on another
@@ -36,6 +47,9 @@ use anyhow::Result;
 
 use super::fleet::{Fleet, Worker};
 use super::metrics::FleetMetrics;
+use crate::obs::prom::{relabel, PromWriter};
+use crate::obs::trace::chrome_trace_json;
+use crate::obs::{self, Span, SpanKind};
 use crate::util::Json;
 
 #[derive(Clone, Debug)]
@@ -204,7 +218,14 @@ impl Router {
                     "ping" => {
                         Json::obj(vec![("ok", Json::Bool(true)), ("pong", Json::Bool(true))])
                     }
-                    "metrics" => self.aggregate_metrics(),
+                    "metrics" => {
+                        if parsed.get("format").and_then(|f| f.as_str()) == Some("prometheus") {
+                            self.fleet_prometheus()
+                        } else {
+                            self.aggregate_metrics()
+                        }
+                    }
+                    "trace" => self.fleet_trace(&parsed),
                     other => error_json(&format!("unknown cmd '{other}'"), false),
                 };
                 write_line(&mut writer, &resp)?;
@@ -244,7 +265,21 @@ impl Router {
         };
         let deadline = Instant::now() + deadline;
         let streaming = req.get("stream") == Some(&Json::Bool(true));
-        let line = format!("{}\n", raw_line.trim_end());
+        // Assign (or honor) the trace id and inject it into the relayed
+        // frame so worker-side spans correlate with the router's.
+        let trace = req
+            .get("trace")
+            .and_then(obs::parse_trace_field)
+            .unwrap_or_else(obs::next_trace_id);
+        let line = match req {
+            Json::Obj(fields) => {
+                let mut fields = fields.clone();
+                fields.insert("trace".to_string(), Json::str(obs::trace_id_string(trace)));
+                format!("{}\n", Json::Obj(fields).render())
+            }
+            _ => format!("{}\n", raw_line.trim_end()),
+        };
+        let t0 = Instant::now();
 
         let mut tried: Vec<usize> = Vec::new();
         let mut attempts = 0usize;
@@ -252,6 +287,14 @@ impl Router {
         loop {
             if Instant::now() >= deadline {
                 self.metrics.deadline_exceeded.fetch_add(1, Ordering::SeqCst);
+                obs::log::warn(
+                    "router",
+                    "deadline exceeded",
+                    &[
+                        ("trace", obs::trace_id_string(trace)),
+                        ("last_err", last_err.clone()),
+                    ],
+                );
                 write_line(
                     writer,
                     &error_json(&format!("deadline exceeded (last failure: {last_err})"), true),
@@ -262,6 +305,11 @@ impl Router {
                 if self.fleet.workers().iter().all(|w| w.breaker_open()) {
                     // nothing will ever come back without intervention
                     self.metrics.shed.fetch_add(1, Ordering::SeqCst);
+                    obs::log::warn(
+                        "router",
+                        "request shed: all circuit breakers open",
+                        &[("trace", obs::trace_id_string(trace))],
+                    );
                     write_line(
                         writer,
                         &error_json("no healthy workers: all circuit breakers open", true),
@@ -276,6 +324,15 @@ impl Router {
             };
             if attempts > self.cfg.max_retries {
                 self.metrics.shed.fetch_add(1, Ordering::SeqCst);
+                obs::log::warn(
+                    "router",
+                    "request shed: retry budget exhausted",
+                    &[
+                        ("trace", obs::trace_id_string(trace)),
+                        ("attempts", attempts.to_string()),
+                        ("last_err", last_err.clone()),
+                    ],
+                );
                 write_line(
                     writer,
                     &error_json(
@@ -297,6 +354,14 @@ impl Router {
                     if ok {
                         self.metrics.succeeded.fetch_add(1, Ordering::SeqCst);
                     }
+                    let dur_us = t0.elapsed().as_micros() as u64;
+                    self.metrics.spans.record(Span {
+                        trace,
+                        kind: SpanKind::Dispatch,
+                        start_us: obs::now_us().saturating_sub(dur_us),
+                        dur_us,
+                        aux: worker.index() as u64,
+                    });
                     return Ok(());
                 }
                 Attempt::WorkerFailed(err) => {
@@ -357,6 +422,19 @@ impl Router {
                 ("breaker_open", Json::Bool(status.breaker_open)),
             ]));
         }
+        // Workers report `deadline_exceeded` / `shed` as zero (those
+        // outcomes are decided in this tier), so folding the router's
+        // counts in keeps the aggregate honest without double counting.
+        let router_only = [
+            ("deadline_exceeded", self.metrics.deadline_exceeded.load(Ordering::Relaxed)),
+            ("shed", self.metrics.shed.load(Ordering::Relaxed)),
+        ];
+        for (k, v) in router_only {
+            match aggregate.iter_mut().find(|(name, _)| name == k) {
+                Some((_, total)) => *total += v as f64,
+                None => aggregate.push((k.to_string(), v as f64)),
+            }
+        }
         let aggregate_obj =
             Json::Obj(aggregate.into_iter().map(|(k, v)| (k, Json::num(v))).collect());
         Json::obj(vec![
@@ -366,6 +444,85 @@ impl Router {
             ("workers", Json::arr(worker_rows)),
             ("aggregate", aggregate_obj),
         ])
+    }
+
+    /// Fleet-wide Prometheus exposition: the router's own samples
+    /// followed by each healthy worker's body, re-labeled with
+    /// `worker="<index>"` so per-worker series stay distinguishable.
+    fn fleet_prometheus(&self) -> Json {
+        let mut w = PromWriter::new();
+        self.metrics.prom_into(&mut w);
+        let mut body = w.finish();
+        let req = Json::obj(vec![
+            ("cmd", Json::str("metrics")),
+            ("format", Json::str("prometheus")),
+        ]);
+        for worker in self.fleet.workers() {
+            let status = worker.status();
+            let Some(addr) = status.addr.filter(|_| status.healthy) else {
+                continue;
+            };
+            let Some(resp) = fetch_worker_line(addr, &req, self.cfg.metrics_timeout) else {
+                continue;
+            };
+            if let Some(worker_body) = resp.get("body").and_then(|b| b.as_str()) {
+                body.push_str(&relabel(worker_body, "worker", &status.index.to_string()));
+            }
+        }
+        Json::obj(vec![
+            ("ok", Json::Bool(true)),
+            ("content_type", Json::str("text/plain; version=0.0.4")),
+            ("body", Json::str(body)),
+        ])
+    }
+
+    /// Fleet-wide `{"cmd": "trace"}`: the router's spans for the id
+    /// merged with every healthy worker's (`id` absent or 0 dumps
+    /// everything). `"format": "chrome"` merges Chrome trace events.
+    fn fleet_trace(&self, req: &Json) -> Json {
+        let id = req.get("id").and_then(obs::parse_trace_field).unwrap_or(0);
+        let chrome = req.get("format").and_then(|f| f.as_str()) == Some("chrome");
+        let own = self.metrics.spans.for_trace(id);
+        let mut worker_fields = vec![
+            ("cmd", Json::str("trace")),
+            ("format", Json::str(if chrome { "chrome" } else { "spans" })),
+        ];
+        if id != 0 {
+            // an explicit hex 0 would parse back as `0 | 1`; omitting
+            // the field is the protocol's "dump everything"
+            worker_fields.push(("id", Json::str(obs::trace_id_string(id))));
+        }
+        let worker_req = Json::obj(worker_fields);
+        let mut rows: Vec<Json> = if chrome {
+            match chrome_trace_json(&own).get("traceEvents") {
+                Some(Json::Arr(events)) => events.clone(),
+                _ => Vec::new(),
+            }
+        } else {
+            own.iter().map(|s| s.json()).collect()
+        };
+        let key = if chrome { "traceEvents" } else { "spans" };
+        for worker in self.fleet.workers() {
+            let status = worker.status();
+            let Some(addr) = status.addr.filter(|_| status.healthy) else {
+                continue;
+            };
+            let Some(resp) = fetch_worker_line(addr, &worker_req, self.cfg.metrics_timeout) else {
+                continue;
+            };
+            if let Some(Json::Arr(worker_rows)) = resp.get(key) {
+                rows.extend(worker_rows.iter().cloned());
+            }
+        }
+        if chrome {
+            Json::obj(vec![("ok", Json::Bool(true)), ("traceEvents", Json::Arr(rows))])
+        } else {
+            Json::obj(vec![
+                ("ok", Json::Bool(true)),
+                ("trace", Json::str(obs::trace_id_string(id))),
+                ("spans", Json::Arr(rows)),
+            ])
+        }
     }
 }
 
@@ -506,11 +663,19 @@ fn fail_stream(client: &mut TcpStream, why: &str) -> Attempt {
 
 /// Fetch one worker's `{"cmd":"metrics"}` response.
 fn fetch_worker_metrics(addr: SocketAddr, timeout: Duration) -> Option<Json> {
+    let req = Json::obj(vec![("cmd", Json::str("metrics"))]);
+    fetch_worker_line(addr, &req, timeout)
+}
+
+/// Send one control request to a worker and parse its single-line reply
+/// (the fan-out primitive behind metrics and trace aggregation).
+fn fetch_worker_line(addr: SocketAddr, req: &Json, timeout: Duration) -> Option<Json> {
     let stream = TcpStream::connect_timeout(&addr, timeout).ok()?;
     stream.set_read_timeout(Some(timeout)).ok()?;
     stream.set_write_timeout(Some(timeout)).ok()?;
     let mut writer = stream.try_clone().ok()?;
-    writer.write_all(b"{\"cmd\": \"metrics\"}\n").ok()?;
+    writer.write_all(req.render().as_bytes()).ok()?;
+    writer.write_all(b"\n").ok()?;
     let mut reader = BufReader::new(stream);
     let mut line = String::new();
     reader.read_line(&mut line).ok()?;

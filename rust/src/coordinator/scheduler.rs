@@ -46,6 +46,7 @@ use crate::model::config::ModelConfig;
 use crate::model::{
     ActSite, IdentitySite, NativeModel, QuantSite, QuantizedModel, RemoveKernelSite, Weights,
 };
+use crate::obs::{self, KernelTelemetry, Span, SpanKind};
 use crate::quant::artifact::Artifact;
 use crate::quant::registry::{self, StaticSpec};
 use crate::quant::{
@@ -75,12 +76,21 @@ pub struct EvalRequest {
     /// Which registered weight set to run against (e.g. "w16", "w8", "w4g128").
     pub weight_set: String,
     pub kind: RequestKind,
+    /// Trace id (0 = untraced). Assigned at the router or supplied via the
+    /// `"trace"` wire field; every stage span records under this id.
+    pub trace: u64,
 }
 
 impl EvalRequest {
     /// A scoring request (per-position NLL).
     pub fn score(tokens: Vec<u32>, scheme: ActScheme, weight_set: impl Into<String>) -> Self {
-        EvalRequest { tokens, scheme, weight_set: weight_set.into(), kind: RequestKind::Score }
+        EvalRequest {
+            tokens,
+            scheme,
+            weight_set: weight_set.into(),
+            kind: RequestKind::Score,
+            trace: 0,
+        }
     }
 
     /// A greedy-generation request (`tokens` is the prompt).
@@ -95,7 +105,14 @@ impl EvalRequest {
             scheme,
             weight_set: weight_set.into(),
             kind: RequestKind::Generate { max_new_tokens },
+            trace: 0,
         }
+    }
+
+    /// Attach a trace id so per-stage spans record under it.
+    pub fn with_trace(mut self, trace: u64) -> Self {
+        self.trace = trace;
+        self
     }
 
     /// Batching key: scheme key plus the kind discriminant, so generation
@@ -150,6 +167,7 @@ impl Pending {
             events: self.events,
             cancel: self.cancel,
             submitted: self.submitted,
+            trace: self.req.trace,
         }
     }
 }
@@ -600,7 +618,11 @@ fn executor_loop(
         Err(e) => {
             // No PJRT runtime linked: serve the same protocol with the
             // native executor instead of failing every request.
-            eprintln!("coordinator: PJRT unavailable ({e}); falling back to the native executor");
+            obs::log::warn(
+                "executor",
+                "PJRT unavailable; falling back to the native executor",
+                &[("error", format!("{e}"))],
+            );
             Backend::Native(NativeExecutor::new(cfg, weight_sets, artifacts, metrics.clone()))
         }
     };
@@ -631,7 +653,52 @@ fn executor_loop(
                         engine.submit(p.into_gen_request());
                     }
                 } else {
+                    // queue wait ends here: the batch reached the executor
+                    for p in &batch.requests {
+                        let wait_us = p.submitted.elapsed().as_micros() as u64;
+                        metrics.queue_wait.record_us(wait_us);
+                        if p.req.trace != 0 {
+                            metrics.spans.record(Span {
+                                trace: p.req.trace,
+                                kind: SpanKind::QueueWait,
+                                start_us: obs::now_us().saturating_sub(wait_us),
+                                dur_us: wait_us,
+                                aux: 0,
+                            });
+                        }
+                    }
+                    let traced = batch.requests.iter().any(|p| p.req.trace != 0);
+                    if traced {
+                        crate::quant::gemm::gemm_timing_enable(true);
+                    }
+                    let t0 = Instant::now();
                     let result = backend.execute_scoring(cfg, &batch);
+                    let fwd_us = t0.elapsed().as_micros() as u64;
+                    metrics.batch_forward.record_us(fwd_us);
+                    if traced {
+                        let (gemm_calls, gemm_ns) = crate::quant::gemm::gemm_timing_take();
+                        crate::quant::gemm::gemm_timing_enable(false);
+                        let start_us = obs::now_us().saturating_sub(fwd_us);
+                        let rows = batch.requests.len() as u64;
+                        for p in batch.requests.iter().filter(|p| p.req.trace != 0) {
+                            metrics.spans.record(Span {
+                                trace: p.req.trace,
+                                kind: SpanKind::BatchForward,
+                                start_us,
+                                dur_us: fwd_us,
+                                aux: rows,
+                            });
+                            if gemm_calls > 0 {
+                                metrics.spans.record(Span {
+                                    trace: p.req.trace,
+                                    kind: SpanKind::Gemm,
+                                    start_us,
+                                    dur_us: gemm_ns / 1_000,
+                                    aux: gemm_calls,
+                                });
+                            }
+                        }
+                    }
                     metrics.executions.fetch_add(1, std::sync::atomic::Ordering::Relaxed);
                     respond(batch, result, &metrics);
                 }
@@ -704,7 +771,13 @@ pub(crate) enum SchemeSite {
 }
 
 impl SchemeSite {
-    pub(crate) fn build(scheme: ActScheme) -> Result<SchemeSite> {
+    /// `telemetry` (when given) attaches live quantization-kernel
+    /// sampling to dynamic-scheme sites — a no-op unless the shared
+    /// [`KernelTelemetry`] has been enabled via `--kernel-telemetry`.
+    pub(crate) fn build(
+        scheme: ActScheme,
+        telemetry: Option<Arc<KernelTelemetry>>,
+    ) -> Result<SchemeSite> {
         match scheme {
             ActScheme::Fp => Ok(SchemeSite::Identity(IdentitySite)),
             // the native forward has no separate fused-graph variant —
@@ -719,7 +792,11 @@ impl SchemeSite {
                     "crossquant qmax must be finite and > 0, got {qmax}"
                 );
                 ensure!(alpha.is_finite(), "crossquant alpha must be finite, got {alpha}");
-                Ok(SchemeSite::Cross(QuantSite::new(RuntimeCrossQuant { alpha, qmax })))
+                let mut site = QuantSite::new(RuntimeCrossQuant { alpha, qmax });
+                if let Some(t) = telemetry {
+                    site = site.with_telemetry(t);
+                }
+                Ok(SchemeSite::Cross(site))
             }
             ActScheme::RemoveKernel { theta } => {
                 // guard before RemoveKernel::new: its assert would panic
@@ -832,9 +909,14 @@ impl NativeExecutor {
                     MountState::Ready(MountedArtifact { alpha_micro: am, path, artifact })
                 }
                 Err(e) => {
-                    eprintln!(
-                        "coordinator: failed to mount artifact {} for weight set '{name}': {e:#}",
-                        path.display()
+                    obs::log::error(
+                        "executor",
+                        "failed to mount artifact",
+                        &[
+                            ("path", path.display().to_string()),
+                            ("weight_set", name.clone()),
+                            ("error", format!("{e:#}")),
+                        ],
                     );
                     MountState::Failed(format!("{e:#}"))
                 }
@@ -917,8 +999,18 @@ impl NativeExecutor {
                     self.cfg
                 );
                 let rl = std::sync::atomic::Ordering::Relaxed;
+                let load_us = t0.elapsed().as_micros() as u64;
                 self.metrics.artifact_loads.fetch_add(1, rl);
-                self.metrics.artifact_load_us.fetch_add(t0.elapsed().as_micros() as u64, rl);
+                self.metrics.artifact_load_us.fetch_add(load_us, rl);
+                // trace 0: a cold load is shared work, visible in the full
+                // ring dump rather than attributed to one request
+                self.metrics.spans.record(Span {
+                    trace: 0,
+                    kind: SpanKind::ArtifactLoad,
+                    start_us: obs::now_us().saturating_sub(load_us),
+                    dur_us: load_us,
+                    aux: 0,
+                });
                 return Ok(qm);
             }
         }
@@ -970,7 +1062,7 @@ impl NativeExecutor {
                 })
                 .collect();
         }
-        let mut site = SchemeSite::build(scheme)?;
+        let mut site = SchemeSite::build(scheme, Some(self.metrics.kernel.clone()))?;
         let model = self.model_for(&batch.key.weight_set)?;
         let mut rows = Vec::with_capacity(batch.requests.len());
         for p in &batch.requests {

@@ -12,8 +12,15 @@
 //!           shared with the CLI and the artifact scheme-ID field)
 //!           …with "max_new_tokens": N present, the tokens are a prompt
 //!           and the request is greedy generation instead of scoring;
-//!           adding "stream": true streams the decode as it happens
+//!           adding "stream": true streams the decode as it happens;
+//!           an optional "trace" field (hex string or integer) attaches a
+//!           trace id — per-stage spans record under it and the response
+//!           echoes it back
 //!           {"cmd": "metrics"}   |   {"cmd": "ping"}
+//!           {"cmd": "metrics", "format": "prometheus"} → text exposition
+//!           {"cmd": "trace", "id": "<hex>"} → that trace's spans
+//!           ("id" absent/0 dumps the whole ring; "format": "chrome"
+//!           renders Chrome trace_event JSON instead)
 //! response: {"ok": true, "nll": [...], "ppl": ..., "aux": ...}
 //!           {"ok": true, "generated": [...], "prompt_tokens": N, "aux": ...}
 //!           {"ok": false, "error": "..."}
@@ -40,6 +47,7 @@ use anyhow::{anyhow, Result};
 
 use super::scheduler::{EvalCoordinator, EvalRequest, RequestKind};
 use super::ActScheme;
+use crate::obs::{self, trace::chrome_trace_json};
 use crate::quant::registry::SchemeId;
 use crate::util::{FaultAction, FaultInjector, Json};
 
@@ -288,6 +296,9 @@ fn parse_request(req: &Json) -> Result<EvalRequest> {
     };
     let weight_set =
         req.get("weight_set").and_then(|w| w.as_str()).unwrap_or("w16").to_string();
+    // optional trace id (hex string, integer, or any stable name — see
+    // `obs::parse_trace_field`); 0 = untraced
+    let trace = req.get("trace").and_then(obs::parse_trace_field).unwrap_or(0);
 
     // "max_new_tokens" present ⇒ greedy generation; absent ⇒ scoring.
     // Context overflow (prompt + max_new_tokens > n_ctx) is rejected by
@@ -296,9 +307,9 @@ fn parse_request(req: &Json) -> Result<EvalRequest> {
         let max_new = max_new
             .as_usize()
             .ok_or_else(|| anyhow!("'max_new_tokens' must be a non-negative integer"))?;
-        Ok(EvalRequest::generate(tokens, scheme, weight_set, max_new))
+        Ok(EvalRequest::generate(tokens, scheme, weight_set, max_new).with_trace(trace))
     } else {
-        Ok(EvalRequest::score(tokens, scheme, weight_set))
+        Ok(EvalRequest::score(tokens, scheme, weight_set).with_trace(trace))
     }
 }
 
@@ -315,6 +326,7 @@ fn handle_stream(
         "'stream': true requires 'max_new_tokens' (streaming is a generation feature)"
     );
     let prompt_tokens = eval_req.tokens.len();
+    let trace = eval_req.trace;
     let (events, handle) = coordinator.submit_streaming(eval_req)?;
     let mut seq_id = 0u64;
     for ev in events.iter() {
@@ -337,20 +349,21 @@ fn handle_stream(
     // the event sender is dropped when the sequence retires, so the
     // response is already resolved here
     let resp = handle.wait()?;
-    write_line(
-        writer,
-        &Json::obj(vec![
-            ("ok", Json::Bool(true)),
-            ("done", Json::Bool(true)),
-            ("seq", Json::num(seq_id as f64)),
-            (
-                "generated",
-                Json::arr(resp.generated.iter().map(|&t| Json::num(t as f64)).collect()),
-            ),
-            ("prompt_tokens", Json::num(prompt_tokens as f64)),
-            ("aux", Json::num(resp.aux as f64)),
-        ]),
-    )
+    let mut fields = vec![
+        ("ok", Json::Bool(true)),
+        ("done", Json::Bool(true)),
+        ("seq", Json::num(seq_id as f64)),
+        (
+            "generated",
+            Json::arr(resp.generated.iter().map(|&t| Json::num(t as f64)).collect()),
+        ),
+        ("prompt_tokens", Json::num(prompt_tokens as f64)),
+        ("aux", Json::num(resp.aux as f64)),
+    ];
+    if trace != 0 {
+        fields.push(("trace", Json::str(obs::trace_id_string(trace))));
+    }
+    write_line(writer, &Json::obj(fields))
 }
 
 /// Parse one request line, run it, build the response (pure except for the
@@ -361,29 +374,61 @@ pub fn handle_line(coordinator: &EvalCoordinator, line: &str) -> Result<Json> {
     if let Some(cmd) = req.get("cmd").and_then(|c| c.as_str()) {
         return match cmd {
             "ping" => Ok(Json::obj(vec![("ok", Json::Bool(true)), ("pong", Json::Bool(true))])),
-            "metrics" => Ok(Json::obj(vec![
-                ("ok", Json::Bool(true)),
-                ("metrics", Json::str(coordinator.metrics.summary())),
-                // flat numeric counters — what the fleet router sums when
-                // aggregating metrics across workers
-                ("counters", coordinator.metrics.counters_json()),
-                // engine + KV-pool accounting (batch occupancy, queue
-                // depth, pool utilisation, aggregate decode tok/s)
-                ("engine", coordinator.metrics.engine_json()),
-                // deployment-artifact accounting (mounts, mmap loads vs
-                // lazy calibrations)
-                ("artifacts", coordinator.metrics.artifact_json()),
-            ])),
+            "metrics" => {
+                if req.get("format").and_then(|f| f.as_str()) == Some("prometheus") {
+                    return Ok(Json::obj(vec![
+                        ("ok", Json::Bool(true)),
+                        ("content_type", Json::str("text/plain; version=0.0.4")),
+                        ("body", Json::str(coordinator.metrics.prometheus())),
+                    ]));
+                }
+                Ok(Json::obj(vec![
+                    ("ok", Json::Bool(true)),
+                    ("metrics", Json::str(coordinator.metrics.summary())),
+                    // flat numeric counters — what the fleet router sums when
+                    // aggregating metrics across workers
+                    ("counters", coordinator.metrics.counters_json()),
+                    // engine + KV-pool accounting (batch occupancy, queue
+                    // depth, pool utilisation, aggregate decode tok/s)
+                    ("engine", coordinator.metrics.engine_json()),
+                    // deployment-artifact accounting (mounts, mmap loads vs
+                    // lazy calibrations)
+                    ("artifacts", coordinator.metrics.artifact_json()),
+                    // windowed latency histograms (TTFT, inter-token, queue
+                    // wait, batch forward) with honest p50/p95/p99/p999
+                    ("latency", coordinator.metrics.latency_json()),
+                    // live quantization-kernel gauges (the paper's metric)
+                    ("kernel", coordinator.metrics.kernel.json()),
+                ]))
+            }
+            "trace" => {
+                let id = req.get("id").and_then(obs::parse_trace_field).unwrap_or(0);
+                let spans = coordinator.metrics.spans.for_trace(id);
+                if req.get("format").and_then(|f| f.as_str()) == Some("chrome") {
+                    let doc = chrome_trace_json(&spans);
+                    let events = doc.get("traceEvents").cloned().unwrap_or(Json::Arr(vec![]));
+                    return Ok(Json::obj(vec![
+                        ("ok", Json::Bool(true)),
+                        ("traceEvents", events),
+                    ]));
+                }
+                Ok(Json::obj(vec![
+                    ("ok", Json::Bool(true)),
+                    ("trace", Json::str(obs::trace_id_string(id))),
+                    ("spans", Json::arr(spans.iter().map(|s| s.json()).collect())),
+                ]))
+            }
             other => Err(anyhow!("unknown cmd '{other}'")),
         };
     }
 
     let eval_req = parse_request(&req)?;
+    let trace = eval_req.trace;
     match eval_req.kind {
         RequestKind::Generate { .. } => {
             let prompt_tokens = eval_req.tokens.len();
             let resp = coordinator.submit(eval_req)?.wait()?;
-            Ok(Json::obj(vec![
+            let mut fields = vec![
                 ("ok", Json::Bool(true)),
                 (
                     "generated",
@@ -391,18 +436,26 @@ pub fn handle_line(coordinator: &EvalCoordinator, line: &str) -> Result<Json> {
                 ),
                 ("prompt_tokens", Json::num(prompt_tokens as f64)),
                 ("aux", Json::num(resp.aux as f64)),
-            ]))
+            ];
+            if trace != 0 {
+                fields.push(("trace", Json::str(obs::trace_id_string(trace))));
+            }
+            Ok(Json::obj(fields))
         }
         RequestKind::Score => {
             let resp = coordinator.submit(eval_req)?.wait()?;
             let mean =
                 resp.nll.iter().map(|&v| v as f64).sum::<f64>() / resp.nll.len().max(1) as f64;
-            Ok(Json::obj(vec![
+            let mut fields = vec![
                 ("ok", Json::Bool(true)),
                 ("nll", Json::arr(resp.nll.iter().map(|&v| Json::num(v as f64)).collect())),
                 ("ppl", Json::num(mean.exp())),
                 ("aux", Json::num(resp.aux as f64)),
-            ]))
+            ];
+            if trace != 0 {
+                fields.push(("trace", Json::str(obs::trace_id_string(trace))));
+            }
+            Ok(Json::obj(fields))
         }
     }
 }

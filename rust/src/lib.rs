@@ -40,6 +40,7 @@ pub mod corpus;
 pub mod eval;
 pub mod exp;
 pub mod model;
+pub mod obs;
 pub mod quant;
 pub mod runtime;
 pub mod tensor;

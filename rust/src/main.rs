@@ -11,6 +11,7 @@
 //!   serve                TCP server (optionally booted from a .cqa artifact)
 //!   route                fault-tolerant tier: supervised worker fleet with
 //!                        health checks, deadlines, retry/failover
+//!   top                  live metrics summary of a serve/route endpoint
 //!   reproduce <id>       regenerate a paper table/figure (fig1 … tab5, all)
 //!
 //! Global flags: --artifacts <dir> --synthetic --eval-sequences N
@@ -65,6 +66,13 @@ commands:
         [--max-connections N]  concurrent client cap (default 256)
         [--idle-timeout-s S]   idle-connection read timeout (default 300,
                                0 disables)
+        [--kernel-telemetry]   sample the quantization-kernel fraction and
+                               row/column absmax per activation site on live
+                               dynamic-scheme forwards ({\"cmd\": \"metrics\"}
+                               gauges; off by default)
+        [--kernel-threshold F] warn when a site's kernel fraction crosses F
+                               (default 0.19 — the paper's OPT bound;
+                               LLaMA-family sites should sit near 0.01)
         [--worker]             fleet-worker mode: bind --addr (use port 0),
                                print CROSSQUANT_WORKER_READY addr=… on stdout,
                                honour a CROSSQUANT_FAULT injection plan
@@ -80,6 +88,11 @@ commands:
                                {\"cmd\": \"metrics\"} aggregates the fleet
         [--heartbeat-ms MS] [--breaker-crashes N] [--ready-timeout-s S]
                                supervision knobs (defaults 250 / 5 / 30)
+        [--kernel-telemetry] [--kernel-threshold F]
+                               forwarded to every worker
+  top [--addr HOST:PORT]       live metrics summary of a serve or route
+      [--interval-ms N]        endpoint (default 127.0.0.1:8472, refresh
+      [--once]                 every 1000 ms; --once prints one snapshot)
   bench-trend [--out PATH]     measure every served scheme (GOP/s, decode
                                tok/s, NLL) and append the rows to the
                                checked-in trend file
@@ -153,7 +166,8 @@ fn main() -> Result<()> {
         print!("{USAGE}");
         return Ok(());
     }
-    let args = Args::parse(&argv, &["synthetic", "tasks", "help", "worker"])?;
+    let args =
+        Args::parse(&argv, &["synthetic", "tasks", "help", "worker", "kernel-telemetry", "once"])?;
     if args.flag("help") {
         print!("{USAGE}");
         return Ok(());
@@ -189,6 +203,7 @@ fn main() -> Result<()> {
         "serve-eval" => serve_eval(&args, args.num("requests", 32usize)?, args.num("alpha", 0.15f32)?),
         "serve" => serve(&args, &args.get_or("addr", "127.0.0.1:8471")),
         "route" => route(&args, &args.get_or("addr", "127.0.0.1:8472")),
+        "top" => top(&args, &args.get_or("addr", "127.0.0.1:8472")),
         "bench-trend" => bench_trend(&args),
         "reproduce" => {
             let id = args
@@ -543,6 +558,12 @@ fn serve(args: &Args, addr: &str) -> Result<()> {
         sets,
         CoordinatorConfig { engine, artifacts: mounts, ..Default::default() },
     );
+    let kernel_telemetry = args.flag("kernel-telemetry");
+    let kernel_threshold =
+        args.num("kernel-threshold", crossquant::obs::DEFAULT_KERNEL_THRESHOLD)?;
+    // stride 8: sample every 8th dynamic-scheme forward per site — cheap
+    // enough to leave on, dense enough to catch a drifting site fast
+    coordinator.metrics.kernel.configure(kernel_telemetry, kernel_threshold, 8);
     let listener = std::net::TcpListener::bind(addr)?;
     if worker {
         // the supervisor parses this exact line for the dispatch address
@@ -551,7 +572,7 @@ fn serve(args: &Args, addr: &str) -> Result<()> {
         println!("{}{local}", crossquant::coordinator::fleet::READY_PREFIX);
         std::io::stdout().flush()?;
         if fault.is_active() {
-            eprintln!("fault injection active: CROSSQUANT_FAULT plan loaded");
+            crossquant::obs::log::info("serve", "fault injection active", &[]);
         }
     } else {
         println!("serving quantized-LM evaluation + generation on {addr}");
@@ -576,6 +597,16 @@ fn serve(args: &Args, addr: &str) -> Result<()> {
         println!(
             "  stream:   add \"stream\": true for one {{\"token\": ...}} line per decoded token"
         );
+        println!(
+            "  observe:  add \"trace\": \"my-request\" to any request, then \
+             '{{\"cmd\": \"trace\", \"id\": \"my-request\"}}' for its spans; \
+             {{\"cmd\": \"metrics\"}} (+ \"format\": \"prometheus\") for telemetry"
+        );
+        if kernel_telemetry {
+            println!(
+                "  kernel telemetry on: per-site quantization-kernel gauges, warn at {kernel_threshold}"
+            );
+        }
     }
     EvalServer::new(coordinator)
         .with_max_connections(max_connections)
@@ -623,6 +654,9 @@ fn route(args: &Args, addr: &str) -> Result<()> {
     if args.flag("synthetic") {
         worker_args.push("--synthetic".to_string());
     }
+    if args.flag("kernel-telemetry") {
+        worker_args.push("--kernel-telemetry".to_string());
+    }
     for flag in [
         "artifact",
         "artifacts",
@@ -632,6 +666,7 @@ fn route(args: &Args, addr: &str) -> Result<()> {
         "admission-queue",
         "max-connections",
         "idle-timeout-s",
+        "kernel-threshold",
     ] {
         if let Some(v) = args.get(flag) {
             worker_args.push(format!("--{flag}"));
@@ -681,13 +716,181 @@ fn route(args: &Args, addr: &str) -> Result<()> {
         max_retries
     );
     println!("  metrics:  echo '{{\"cmd\": \"metrics\"}}' | nc {addr}");
+    println!("  tracing:  every request gets a trace id (echoed in its response); \
+              '{{\"cmd\": \"trace\", \"id\": ID}}' merges spans across the fleet");
     router.serve(listener)?;
-    eprintln!("shutdown: draining in-flight requests");
+    crossquant::obs::log::info("route", "shutdown: draining in-flight requests", &[]);
     if !router.drain(Duration::from_secs(10)) {
-        eprintln!("drain timed out with {} requests in flight", router.in_flight());
+        crossquant::obs::log::warn(
+            "route",
+            "drain timed out",
+            &[("in_flight", router.in_flight().to_string())],
+        );
     }
     fleet.shutdown();
     Ok(())
+}
+
+/// Poll an endpoint's `{"cmd": "metrics"}` and render a live one-screen
+/// summary — latency quantiles, engine occupancy, per-site
+/// quantization-kernel gauges. Understands both response shapes: a
+/// worker (`serve`) reports counters/engine/latency/kernel, a router
+/// (`route`) reports router/fleet/workers/aggregate.
+fn top(args: &Args, addr: &str) -> Result<()> {
+    use std::io::Write as _;
+    let interval = std::time::Duration::from_millis(args.num("interval-ms", 1000u64)?);
+    let once = args.flag("once");
+    loop {
+        let out = match fetch_metrics(addr) {
+            Ok(resp) => render_top(&resp, addr),
+            Err(e) => format!("repro top — {addr}\n  (metrics fetch failed: {e})\n"),
+        };
+        if once {
+            print!("{out}");
+            return Ok(());
+        }
+        // ANSI home + clear keeps the refresh flicker-free
+        print!("\x1b[H\x1b[2J{out}");
+        std::io::stdout().flush()?;
+        std::thread::sleep(interval);
+    }
+}
+
+fn fetch_metrics(addr: &str) -> Result<Json> {
+    use std::io::{BufRead, BufReader, Write as _};
+    let stream = std::net::TcpStream::connect(addr)?;
+    let timeout = Some(std::time::Duration::from_secs(2));
+    stream.set_read_timeout(timeout)?;
+    stream.set_write_timeout(timeout)?;
+    let mut writer = stream.try_clone()?;
+    writer.write_all(b"{\"cmd\": \"metrics\"}\n")?;
+    let mut line = String::new();
+    BufReader::new(stream).read_line(&mut line)?;
+    Json::parse(&line)
+}
+
+/// Format a microsecond value human-readably.
+fn fmt_us(us: f64) -> String {
+    if us < 1_000.0 {
+        format!("{us:.0}us")
+    } else if us < 1_000_000.0 {
+        format!("{:.1}ms", us / 1_000.0)
+    } else {
+        format!("{:.2}s", us / 1_000_000.0)
+    }
+}
+
+fn render_top(resp: &Json, addr: &str) -> String {
+    use std::fmt::Write as _;
+    let mut out = String::new();
+    let _ = writeln!(out, "repro top — {addr}");
+    let num = |o: &Json, k: &str| o.get(k).and_then(|v| v.as_f64()).unwrap_or(0.0);
+
+    if let Some(router) = resp.get("router") {
+        let _ = writeln!(
+            out,
+            "router    requests {:.0}  ok {:.0}  retried {:.0}  deadline {:.0}  shed {:.0}",
+            num(router, "requests"),
+            num(router, "succeeded"),
+            num(router, "retried"),
+            num(router, "deadline_exceeded"),
+            num(router, "shed"),
+        );
+    }
+    if let Some(fleet) = resp.get("fleet") {
+        let _ = writeln!(
+            out,
+            "fleet     crashes {:.0}  restarts {:.0}  wedged {:.0}  breaker_trips {:.0}",
+            num(fleet, "worker_crashes"),
+            num(fleet, "worker_restarts"),
+            num(fleet, "worker_wedged"),
+            num(fleet, "breaker_trips"),
+        );
+    }
+    if let Some(Json::Arr(workers)) = resp.get("workers") {
+        for w in workers {
+            let healthy = w.get("healthy") == Some(&Json::Bool(true));
+            let _ = writeln!(
+                out,
+                "  worker {:.0} {}  {}  in_flight {:.0}  restarts {:.0}",
+                num(w, "index"),
+                if healthy { "up  " } else { "DOWN" },
+                w.get("addr").and_then(|a| a.as_str()).unwrap_or("<none>"),
+                num(w, "in_flight"),
+                num(w, "restarts"),
+            );
+        }
+    }
+    // flat counters: a worker's own, or the fleet-summed aggregate
+    for key in ["counters", "aggregate"] {
+        if let Some(Json::Obj(fields)) = resp.get(key) {
+            let _ = write!(out, "{key:<9}");
+            for (i, (k, v)) in fields.iter().enumerate() {
+                if let Some(n) = v.as_f64() {
+                    if i > 0 && i % 5 == 0 {
+                        let _ = write!(out, "\n         ");
+                    }
+                    let _ = write!(out, " {k} {n:.0}");
+                }
+            }
+            let _ = writeln!(out);
+        }
+    }
+    if let Some(engine) = resp.get("engine") {
+        let _ = writeln!(
+            out,
+            "engine    active {:.0}  queue {:.0}  occupancy {:.2}  decode {:.1} tok/s",
+            num(engine, "active_seqs"),
+            num(engine, "queue_depth"),
+            num(engine, "batch_occupancy"),
+            num(engine, "decode_tok_s"),
+        );
+    }
+    if let Some(latency) = resp.get("latency") {
+        let _ = writeln!(out, "latency             n      p50      p95      p99   w10s(n/p50/p99)");
+        for name in ["request", "ttft", "inter_token", "queue_wait", "batch_forward"] {
+            let Some(track) = latency.get(name) else { continue };
+            let total = track.get("total").unwrap_or(&Json::Null);
+            let w10 = track.get("w10s").unwrap_or(&Json::Null);
+            let _ = writeln!(
+                out,
+                "  {name:<14} {:6.0} {:>8} {:>8} {:>8}   {:.0}/{}/{}",
+                num(total, "count"),
+                fmt_us(num(total, "p50_us")),
+                fmt_us(num(total, "p95_us")),
+                fmt_us(num(total, "p99_us")),
+                num(w10, "count"),
+                fmt_us(num(w10, "p50_us")),
+                fmt_us(num(w10, "p99_us")),
+            );
+        }
+    }
+    if let Some(kernel) = resp.get("kernel") {
+        if let Some(Json::Arr(sites)) = kernel.get("sites") {
+            if !sites.is_empty() {
+                let _ = writeln!(
+                    out,
+                    "kernel    threshold {:.2}  ({} sites sampled)",
+                    num(kernel, "threshold"),
+                    sites.len()
+                );
+            }
+            for s in sites {
+                let over = s.get("over_threshold") == Some(&Json::Bool(true));
+                let _ = writeln!(
+                    out,
+                    "  site {:>3}  kernel {:6.3}%  row {:8.3}  col {:8.3}  n {:.0}{}",
+                    num(s, "site"),
+                    num(s, "kernel_fraction") * 100.0,
+                    num(s, "row_absmax_mean"),
+                    num(s, "col_absmax_mean"),
+                    num(s, "samples"),
+                    if over { "  OVER-THRESHOLD" } else { "" },
+                );
+            }
+        }
+    }
+    out
 }
 
 /// Measure every served scheme on a small fixed synthetic model —

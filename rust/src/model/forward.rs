@@ -10,10 +10,13 @@
 //! the integer model — and this file contributes the ActSite machinery
 //! plus the weight views.
 
+use std::sync::Arc;
+
 use anyhow::Result;
 
 use super::block::{self, DecodeState, LayerView, ModelView};
 use super::weights::Weights;
+use crate::obs::{KernelTelemetry, SiteSample};
 use crate::quant::{remove_kernel::RemoveKernel, ActQuantizer};
 use crate::tensor::Matrix;
 
@@ -40,11 +43,19 @@ pub struct QuantSite<Q: ActQuantizer> {
     pub quant: Q,
     kernel_elems: f64,
     total_elems: f64,
+    telemetry: Option<Arc<KernelTelemetry>>,
 }
 
 impl<Q: ActQuantizer> QuantSite<Q> {
     pub fn new(quant: Q) -> Self {
-        QuantSite { quant, kernel_elems: 0.0, total_elems: 0.0 }
+        QuantSite { quant, kernel_elems: 0.0, total_elems: 0.0, telemetry: None }
+    }
+
+    /// Wire live kernel telemetry into this site: sampled forwards feed
+    /// per-site kernel-fraction and absmax gauges (`obs::KernelTelemetry`).
+    pub fn with_telemetry(mut self, telemetry: Arc<KernelTelemetry>) -> Self {
+        self.telemetry = Some(telemetry);
+        self
     }
 
     pub fn kernel_fraction(&self) -> f32 {
@@ -56,14 +67,47 @@ impl<Q: ActQuantizer> QuantSite<Q> {
     }
 }
 
+/// Mean per-row and per-column absolute maxima of an activation tile —
+/// the live counterparts of `t_i` and `c_j` in CrossQuant's eq. (5). One
+/// pass; only run on telemetry-sampled calls.
+fn absmax_means(x: &Matrix) -> (f32, f32) {
+    if x.rows == 0 || x.cols == 0 {
+        return (0.0, 0.0);
+    }
+    let mut col_max = vec![0.0f32; x.cols];
+    let mut row_sum = 0.0f64;
+    for i in 0..x.rows {
+        let mut rm = 0.0f32;
+        for (cm, &v) in col_max.iter_mut().zip(x.row(i)) {
+            let a = v.abs();
+            rm = rm.max(a);
+            *cm = cm.max(a);
+        }
+        row_sum += rm as f64;
+    }
+    let col_sum: f64 = col_max.iter().map(|&v| v as f64).sum();
+    ((row_sum / x.rows as f64) as f32, (col_sum / x.cols as f64) as f32)
+}
+
 impl<Q: ActQuantizer> ActSite for QuantSite<Q> {
-    fn apply(&mut self, _site: usize, x: Matrix) -> Matrix {
+    fn apply(&mut self, site: usize, x: Matrix) -> Matrix {
         // Fused single pass: fake-quant output + kernel statistics in one
         // sweep (the seed walked the matrix three times here — delta
         // field twice, then the kernel scan, then the quant sweep).
         let (q, report) = crate::analysis::quantize_with_report(&x, &self.quant);
         self.kernel_elems += report.count as f64;
         self.total_elems += report.total as f64;
+        if let Some(t) = &self.telemetry {
+            t.observe(site, || {
+                let (row_absmax, col_absmax) = absmax_means(&x);
+                SiteSample {
+                    kernel: report.count as u64,
+                    total: report.total as u64,
+                    row_absmax,
+                    col_absmax,
+                }
+            });
+        }
         q
     }
 }
@@ -397,6 +441,25 @@ mod tests {
         m.forward_nll(&toks, &mut site).unwrap();
         let f = site.kernel_fraction();
         assert!(f > 0.0 && f < 1.0, "kernel fraction {f}");
+    }
+
+    #[test]
+    fn quant_site_feeds_kernel_telemetry_per_site() {
+        let m = tiny();
+        let toks: Vec<u32> = (0..12).map(|i| (i % 32) as u32).collect();
+        let telemetry = Arc::new(KernelTelemetry::new());
+        telemetry.configure(true, 0.19, 1);
+        let mut site = QuantSite::new(CrossQuant::new(0.15, Bits::Int8))
+            .with_telemetry(telemetry.clone());
+        m.forward_nll(&toks, &mut site).unwrap();
+        let j = telemetry.json();
+        let sites = j.get("sites").unwrap().as_arr().unwrap();
+        assert_eq!(sites.len(), m.weights.config.n_quant_sites());
+        for s in sites {
+            assert_eq!(s.get("samples").unwrap().as_f64(), Some(1.0));
+            assert!(s.get("row_absmax_mean").unwrap().as_f64().unwrap() > 0.0);
+            assert!(s.get("col_absmax_mean").unwrap().as_f64().unwrap() > 0.0);
+        }
     }
 
     #[test]

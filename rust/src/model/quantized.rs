@@ -110,9 +110,21 @@ pub fn quantize_to_artifact(
     calib: &[Vec<u32>],
     path: &Path,
 ) -> Result<ArtifactBuildReport> {
+    let t0 = std::time::Instant::now();
     let qm = registry::build_static_model(weights, weight_bits, act_bits, spec, calib)?;
     let sections = qm.write_artifact(path)?;
     let artifact_bytes = std::fs::metadata(path)?.len() as usize;
+    crate::obs::log::info(
+        "artifact",
+        "quantized model artifact written",
+        &[
+            ("path", path.display().to_string()),
+            ("scheme", spec.id.to_string()),
+            ("bytes", artifact_bytes.to_string()),
+            ("calib_sequences", calib.len().to_string()),
+            ("build_ms", t0.elapsed().as_millis().to_string()),
+        ],
+    );
     Ok(ArtifactBuildReport {
         alpha: registry::effective_alpha(spec.id, spec.alpha),
         weight_bits,

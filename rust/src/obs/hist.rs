@@ -1,0 +1,384 @@
+//! Log-bucketed (HDR-style) latency histograms with rolling windows.
+//!
+//! The seed coordinator carried a single fixed 10-bucket histogram whose
+//! quantiles were only as honest as the hand-picked bucket edges (and
+//! whose overflow sentinel was `u64::MAX` — 1.8e19 µs once serialized).
+//! This histogram is logarithmic with [`SUB`] sub-buckets per octave, so
+//! every recorded value lands in a bucket whose upper bound is within
+//! ~6% of the value, across the whole range from 1 µs to [`max_trackable_us`]
+//! (~200 days) — no tuning per metric, honest p50/p95/p99/p999 for
+//! time-to-first-token and inter-token latency alike.
+//!
+//! All counters are relaxed atomics: recording is lock-free and merge is
+//! exact (merge of shards ≡ histogram of the union — property-tested in
+//! rust/tests/obs.rs). Values past the last finite bucket go to an
+//! explicit overflow counter and quantiles clamp to the last finite
+//! bound — never a sentinel.
+
+use std::sync::atomic::{AtomicU64, Ordering};
+
+use crate::util::Json;
+
+/// log2(sub-buckets per octave): 16 sub-buckets ⇒ ≤ 1/16 relative error.
+const SUB_BITS: u32 = 4;
+/// Sub-buckets per octave.
+const SUB: usize = 1 << SUB_BITS;
+/// Octave groups past the exact range — bounds the bucket array.
+const GROUPS: usize = 40;
+/// Total finite buckets.
+const NUM_BUCKETS: usize = (GROUPS + 1) * SUB;
+
+/// Largest value (µs) the finite buckets can hold; beyond it observations
+/// land in the overflow counter.
+pub fn max_trackable_us() -> u64 {
+    bucket_bound(NUM_BUCKETS - 1)
+}
+
+/// Bucket index for a value: values below [`SUB`] are exact; above, the
+/// top [`SUB_BITS`]+1 bits of the value select (octave, sub-bucket).
+fn bucket_index(v: u64) -> usize {
+    if v < SUB as u64 {
+        return v as usize;
+    }
+    let msb = 63 - v.leading_zeros() as usize; // >= SUB_BITS
+    let group = msb - SUB_BITS as usize + 1;
+    let mantissa = (v >> (msb - SUB_BITS as usize)) as usize; // in [SUB, 2*SUB)
+    group * SUB + (mantissa - SUB)
+}
+
+/// Inclusive upper bound of bucket `i` — what quantiles report.
+fn bucket_bound(i: usize) -> u64 {
+    if i < SUB {
+        return i as u64;
+    }
+    let group = i / SUB;
+    let rem = (i % SUB) as u64;
+    ((SUB as u64 + rem + 1) << (group - 1)) - 1
+}
+
+/// One lock-free log-bucketed histogram. Shared by reference between the
+/// recording threads and the metrics reader; every operation is a relaxed
+/// atomic, so a snapshot taken mid-record can be off by the in-flight
+/// observation — fine for telemetry, and the merge/quantile algebra is
+/// exact over whatever counts are visible.
+pub struct Histogram {
+    buckets: Vec<AtomicU64>,
+    count: AtomicU64,
+    sum_us: AtomicU64,
+    overflow: AtomicU64,
+    max_us: AtomicU64,
+}
+
+impl Default for Histogram {
+    fn default() -> Self {
+        Histogram::new()
+    }
+}
+
+impl Histogram {
+    pub fn new() -> Histogram {
+        Histogram {
+            buckets: (0..NUM_BUCKETS).map(|_| AtomicU64::new(0)).collect(),
+            count: AtomicU64::new(0),
+            sum_us: AtomicU64::new(0),
+            overflow: AtomicU64::new(0),
+            max_us: AtomicU64::new(0),
+        }
+    }
+
+    pub fn record(&self, v: u64) {
+        let idx = bucket_index(v);
+        if idx < NUM_BUCKETS {
+            self.buckets[idx].fetch_add(1, Ordering::Relaxed);
+        } else {
+            self.overflow.fetch_add(1, Ordering::Relaxed);
+        }
+        self.count.fetch_add(1, Ordering::Relaxed);
+        self.sum_us.fetch_add(v, Ordering::Relaxed);
+        self.max_us.fetch_max(v, Ordering::Relaxed);
+    }
+
+    /// Observations recorded (overflowed values included).
+    pub fn count(&self) -> u64 {
+        self.count.load(Ordering::Relaxed)
+    }
+
+    /// Observations past the last finite bucket — the explicit signal the
+    /// old `u64::MAX` quantile sentinel stood in for.
+    pub fn overflow_count(&self) -> u64 {
+        self.overflow.load(Ordering::Relaxed)
+    }
+
+    pub fn sum_us(&self) -> u64 {
+        self.sum_us.load(Ordering::Relaxed)
+    }
+
+    pub fn max_us(&self) -> u64 {
+        self.max_us.load(Ordering::Relaxed)
+    }
+
+    /// Mean over the histogram's **own** observation count — never some
+    /// adjacent counter's (the seed divided by `completed`, skewing the
+    /// mean whenever latency was recorded on another path).
+    pub fn mean_us(&self) -> f64 {
+        let n = self.count();
+        if n == 0 {
+            return 0.0;
+        }
+        self.sum_us() as f64 / n as f64
+    }
+
+    /// Approximate quantile (upper bucket bound, tightened to the observed
+    /// max). Monotone in `q`. A rank landing in the overflow region clamps
+    /// to the last finite bucket bound — check [`Self::overflow_count`]
+    /// to see whether that happened.
+    pub fn quantile_us(&self, q: f64) -> u64 {
+        let total = self.count();
+        if total == 0 {
+            return 0;
+        }
+        let rank = ((total as f64 * q).ceil() as u64).clamp(1, total);
+        let mut acc = 0u64;
+        for (i, b) in self.buckets.iter().enumerate() {
+            acc += b.load(Ordering::Relaxed);
+            if acc >= rank {
+                return bucket_bound(i).min(self.max_us());
+            }
+        }
+        max_trackable_us()
+    }
+
+    /// Add another histogram's counts into this one — exact: merging
+    /// per-shard histograms is indistinguishable from having recorded the
+    /// union into one.
+    pub fn merge_from(&self, other: &Histogram) {
+        for (dst, src) in self.buckets.iter().zip(&other.buckets) {
+            let v = src.load(Ordering::Relaxed);
+            if v != 0 {
+                dst.fetch_add(v, Ordering::Relaxed);
+            }
+        }
+        self.count.fetch_add(other.count(), Ordering::Relaxed);
+        self.sum_us.fetch_add(other.sum_us(), Ordering::Relaxed);
+        self.overflow.fetch_add(other.overflow_count(), Ordering::Relaxed);
+        self.max_us.fetch_max(other.max_us(), Ordering::Relaxed);
+    }
+
+    /// Zero every counter (rolling-window slot recycling).
+    pub fn reset(&self) {
+        for b in &self.buckets {
+            b.store(0, Ordering::Relaxed);
+        }
+        self.count.store(0, Ordering::Relaxed);
+        self.sum_us.store(0, Ordering::Relaxed);
+        self.overflow.store(0, Ordering::Relaxed);
+        self.max_us.store(0, Ordering::Relaxed);
+    }
+
+    /// Raw bucket counts — the merge property tests compare these.
+    pub fn bucket_counts(&self) -> Vec<u64> {
+        self.buckets.iter().map(|b| b.load(Ordering::Relaxed)).collect()
+    }
+
+    /// Full summary object: count, mean, the standard quantile ladder,
+    /// max, and the explicit overflow count.
+    pub fn json(&self) -> Json {
+        Json::obj(vec![
+            ("count", Json::num(self.count() as f64)),
+            ("mean_us", Json::num(self.mean_us())),
+            ("p50_us", Json::num(self.quantile_us(0.5) as f64)),
+            ("p95_us", Json::num(self.quantile_us(0.95) as f64)),
+            ("p99_us", Json::num(self.quantile_us(0.99) as f64)),
+            ("p999_us", Json::num(self.quantile_us(0.999) as f64)),
+            ("max_us", Json::num(self.max_us() as f64)),
+            ("overflow", Json::num(self.overflow_count() as f64)),
+        ])
+    }
+
+    /// Compact window summary (rolling gauges).
+    fn brief_json(&self) -> Json {
+        Json::obj(vec![
+            ("count", Json::num(self.count() as f64)),
+            ("p50_us", Json::num(self.quantile_us(0.5) as f64)),
+            ("p95_us", Json::num(self.quantile_us(0.95) as f64)),
+            ("p99_us", Json::num(self.quantile_us(0.99) as f64)),
+        ])
+    }
+}
+
+/// Rolling-window slots: one histogram per second over the last
+/// [`SLOTS`] seconds, recycled in place. Windows up to 60 s merge the
+/// live slots, so windowed quantiles reflect *now*, not process lifetime.
+const SLOTS: usize = 64;
+
+pub struct Rolling {
+    slots: Vec<RollSlot>,
+}
+
+struct RollSlot {
+    epoch: AtomicU64,
+    hist: Histogram,
+}
+
+impl Default for Rolling {
+    fn default() -> Self {
+        Rolling::new()
+    }
+}
+
+impl Rolling {
+    pub fn new() -> Rolling {
+        Rolling {
+            slots: (0..SLOTS)
+                .map(|_| RollSlot { epoch: AtomicU64::new(u64::MAX), hist: Histogram::new() })
+                .collect(),
+        }
+    }
+
+    pub fn record(&self, v: u64) {
+        self.record_at(super::now_secs(), v);
+    }
+
+    /// Record at an explicit epoch second (deterministic in tests). Slot
+    /// recycling is racy by design: two threads recycling the same stale
+    /// slot can drop a few in-flight observations from the window — an
+    /// accepted telemetry-grade tradeoff that keeps recording lock-free.
+    pub fn record_at(&self, epoch_s: u64, v: u64) {
+        let slot = &self.slots[(epoch_s % SLOTS as u64) as usize];
+        if slot.epoch.load(Ordering::Acquire) != epoch_s {
+            slot.hist.reset();
+            slot.epoch.store(epoch_s, Ordering::Release);
+        }
+        slot.hist.record(v);
+    }
+
+    /// Merge the slots covering the last `window_s` seconds (now
+    /// inclusive) into a fresh histogram. `window_s` must be < [`SLOTS`].
+    pub fn window(&self, window_s: u64) -> Histogram {
+        self.window_at(super::now_secs(), window_s)
+    }
+
+    pub fn window_at(&self, now_s: u64, window_s: u64) -> Histogram {
+        debug_assert!((window_s as usize) < SLOTS);
+        let out = Histogram::new();
+        for slot in &self.slots {
+            let e = slot.epoch.load(Ordering::Acquire);
+            if e <= now_s && now_s - e < window_s {
+                out.merge_from(&slot.hist);
+            }
+        }
+        out
+    }
+}
+
+/// A lifetime histogram plus its rolling windows — one per tracked
+/// latency signal (request latency, TTFT, inter-token, queue wait,
+/// batch-forward time).
+#[derive(Default)]
+pub struct LatencyTrack {
+    pub total: Histogram,
+    pub rolling: Rolling,
+}
+
+impl LatencyTrack {
+    pub fn record_us(&self, v: u64) {
+        self.total.record(v);
+        self.rolling.record(v);
+    }
+
+    /// Lifetime summary plus `w1s`/`w10s`/`w60s` windowed quantiles.
+    pub fn json(&self) -> Json {
+        let mut fields = match self.total.json() {
+            Json::Obj(m) => m,
+            _ => unreachable!("histogram json is an object"),
+        };
+        let now = super::now_secs();
+        for (name, secs) in [("w1s", 1u64), ("w10s", 10), ("w60s", 60)] {
+            fields.insert(name.to_string(), self.rolling.window_at(now, secs).brief_json());
+        }
+        Json::Obj(fields)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn buckets_tile_the_range() {
+        // every bucket's bound maps back into that bucket, bounds are
+        // strictly increasing, and consecutive values never skip a bucket
+        for i in 0..NUM_BUCKETS {
+            let b = bucket_bound(i);
+            assert_eq!(bucket_index(b), i, "bound of bucket {i}");
+            if i > 0 {
+                assert!(bucket_bound(i - 1) < b);
+                assert_eq!(bucket_index(bucket_bound(i - 1) + 1), i);
+            }
+        }
+    }
+
+    #[test]
+    fn relative_error_is_bounded() {
+        let h = Histogram::new();
+        for v in [1u64, 7, 100, 12_345, 1_000_000, 123_456_789] {
+            h.reset();
+            h.record(v);
+            let q = h.quantile_us(0.5);
+            assert!(q >= v, "quantile {q} below recorded {v}");
+            assert!((q - v) as f64 <= v as f64 / 16.0 + 1.0, "{q} too far above {v}");
+        }
+    }
+
+    #[test]
+    fn overflow_clamps_instead_of_sentineling() {
+        let h = Histogram::new();
+        h.record(u64::MAX);
+        h.record(u64::MAX / 2);
+        assert_eq!(h.overflow_count(), 2);
+        assert_eq!(h.count(), 2);
+        let p99 = h.quantile_us(0.99);
+        assert!(p99 <= max_trackable_us(), "quantile must clamp, got {p99}");
+        // the clamped value still serializes as a sane finite number
+        let j = h.json();
+        assert_eq!(j.get("overflow").and_then(|v| v.as_f64()), Some(2.0));
+        assert!(j.get("p99_us").and_then(|v| v.as_f64()).unwrap() <= max_trackable_us() as f64);
+    }
+
+    #[test]
+    fn quantile_tightens_to_observed_max() {
+        let h = Histogram::new();
+        h.record(1_000_000); // bucket bound ≈ 1.04 ms
+        assert_eq!(h.quantile_us(0.99), 1_000_000);
+    }
+
+    #[test]
+    fn rolling_window_evicts_old_seconds() {
+        let r = Rolling::new();
+        r.record_at(100, 5_000);
+        r.record_at(105, 9_000);
+        r.record_at(110, 1_000);
+        // at t=110: 1 s window sees only the newest value
+        assert_eq!(r.window_at(110, 1).count(), 1);
+        assert_eq!(r.window_at(110, 1).quantile_us(0.5), 1_000);
+        // 10 s window sees t=105 and t=110, not t=100
+        let w10 = r.window_at(110, 10);
+        assert_eq!(w10.count(), 2);
+        assert!(w10.quantile_us(0.99) >= 9_000);
+        // 60 s window sees everything
+        assert_eq!(r.window_at(110, 60).count(), 3);
+        // much later, every old second has aged out of the window
+        r.record_at(300, 7);
+        assert_eq!(r.window_at(300, 60).count(), 1);
+    }
+
+    #[test]
+    fn latency_track_reports_windows() {
+        let t = LatencyTrack::default();
+        t.record_us(1_500);
+        let j = t.json();
+        assert_eq!(j.get("count").and_then(|v| v.as_f64()), Some(1.0));
+        assert!(j.get("w60s").is_some());
+        assert!(j.get("w1s").unwrap().get("p99_us").is_some());
+    }
+}

@@ -1,0 +1,125 @@
+//! Leveled structured logging: one line per event, `key=value` fields,
+//! level gated by the `CROSSQUANT_LOG` environment variable
+//! (`error|warn|info|debug`, default `info`).
+//!
+//! This replaces the scattered `eprintln!` diagnostics in the fleet
+//! supervisor, router, and executor. Lines look like:
+//!
+//! ```text
+//! ts=12.041 level=warn target=fleet msg="worker exited" worker=1 code=9
+//! ```
+//!
+//! Fields with spaces/quotes are quoted; a trace id is included as
+//! `trace=<hex>` by callers when one is in scope.
+
+use std::sync::OnceLock;
+
+#[derive(Clone, Copy, Debug, PartialEq, Eq, PartialOrd, Ord)]
+pub enum Level {
+    Error,
+    Warn,
+    Info,
+    Debug,
+}
+
+impl Level {
+    pub fn label(self) -> &'static str {
+        match self {
+            Level::Error => "error",
+            Level::Warn => "warn",
+            Level::Info => "info",
+            Level::Debug => "debug",
+        }
+    }
+
+    pub fn parse(s: &str) -> Option<Level> {
+        match s.trim().to_ascii_lowercase().as_str() {
+            "error" => Some(Level::Error),
+            "warn" | "warning" => Some(Level::Warn),
+            "info" => Some(Level::Info),
+            "debug" | "trace" => Some(Level::Debug),
+            _ => None,
+        }
+    }
+}
+
+/// Maximum level that gets emitted, read once from `CROSSQUANT_LOG`.
+fn max_level() -> Level {
+    static MAX: OnceLock<Level> = OnceLock::new();
+    *MAX.get_or_init(|| {
+        std::env::var("CROSSQUANT_LOG").ok().and_then(|v| Level::parse(&v)).unwrap_or(Level::Info)
+    })
+}
+
+pub fn enabled(level: Level) -> bool {
+    level <= max_level()
+}
+
+/// Quote a field value only when it needs it (spaces, quotes, `=`).
+fn quote(v: &str) -> String {
+    if v.is_empty() || v.contains(|c: char| c.is_whitespace() || c == '"' || c == '=') {
+        format!("{v:?}")
+    } else {
+        v.to_string()
+    }
+}
+
+/// Emit one structured line to stderr if `level` is enabled.
+pub fn log(level: Level, target: &str, msg: &str, fields: &[(&str, String)]) {
+    if !enabled(level) {
+        return;
+    }
+    let mut line = format!(
+        "ts={:.3} level={} target={} msg={}",
+        super::now_us() as f64 / 1e6,
+        level.label(),
+        target,
+        quote(msg)
+    );
+    for (k, v) in fields {
+        line.push(' ');
+        line.push_str(k);
+        line.push('=');
+        line.push_str(&quote(v));
+    }
+    eprintln!("{line}");
+}
+
+pub fn error(target: &str, msg: &str, fields: &[(&str, String)]) {
+    log(Level::Error, target, msg, fields);
+}
+
+pub fn warn(target: &str, msg: &str, fields: &[(&str, String)]) {
+    log(Level::Warn, target, msg, fields);
+}
+
+pub fn info(target: &str, msg: &str, fields: &[(&str, String)]) {
+    log(Level::Info, target, msg, fields);
+}
+
+pub fn debug(target: &str, msg: &str, fields: &[(&str, String)]) {
+    log(Level::Debug, target, msg, fields);
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn level_parsing_and_ordering() {
+        assert_eq!(Level::parse("warn"), Some(Level::Warn));
+        assert_eq!(Level::parse("WARNING"), Some(Level::Warn));
+        assert_eq!(Level::parse(" debug "), Some(Level::Debug));
+        assert_eq!(Level::parse("nope"), None);
+        assert!(Level::Error < Level::Warn);
+        assert!(Level::Info < Level::Debug);
+    }
+
+    #[test]
+    fn values_are_quoted_only_when_needed() {
+        assert_eq!(quote("plain"), "plain");
+        assert_eq!(quote("has space"), "\"has space\"");
+        assert_eq!(quote("k=v"), "\"k=v\"");
+        assert_eq!(quote(""), "\"\"");
+    }
+}

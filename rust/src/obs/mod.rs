@@ -1,0 +1,148 @@
+//! Observability: spans, histograms, rolling windows, an event ring, and
+//! exposition — the layer every serving component reports through.
+//!
+//! The paper's central claim is operational ("keep the quantization-kernel
+//! proportion below ~19% and INT8 activation quantization is
+//! precision-free"), so the serving stack has to be able to *watch* that
+//! proportion — and its own latency — on a live fleet, not just in offline
+//! analysis runs. This module provides the shared building blocks:
+//!
+//! * [`hist`] — a log-bucketed (HDR-style) histogram with honest
+//!   p50/p95/p99/p999, exact merge, an explicit overflow count, and
+//!   1s/10s/60s rolling windows so gauges reflect *now*.
+//! * [`trace`] — per-request trace ids, per-stage [`trace::Span`]s
+//!   (dispatch, queue wait, admission wait, prefill, per-token decode,
+//!   int8 GEMM, artifact load), a lock-free fixed-capacity
+//!   [`trace::SpanRing`], and a Chrome `trace_event` dump for
+//!   `chrome://tracing`.
+//! * [`log`] — a leveled structured logger (`CROSSQUANT_LOG`, one-line
+//!   key=value format) replacing the scattered `eprintln!` diagnostics.
+//! * [`prom`] — Prometheus text exposition for
+//!   `{"cmd":"metrics","format":"prometheus"}`.
+//! * [`kernel`] — live sampling of the paper's quantization-kernel
+//!   fraction and row/column absmax per activation site, with a
+//!   structured warning when a site crosses the configured bound.
+//!
+//! Everything is hand-rolled on std (Cargo.toml: anyhow is the sole
+//! external dependency) and lock-free on the hot paths: recording a span
+//! or a latency observation is a handful of relaxed atomic ops.
+
+pub mod hist;
+pub mod kernel;
+pub mod log;
+pub mod prom;
+pub mod trace;
+
+pub use hist::{Histogram, LatencyTrack, Rolling};
+pub use kernel::{KernelTelemetry, SiteSample, DEFAULT_KERNEL_THRESHOLD};
+pub use trace::{Span, SpanKind, SpanRing};
+
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::OnceLock;
+use std::time::Instant;
+
+/// Process-start anchor for span timestamps: all span `start_us` values
+/// are microseconds since the first call into the clock, monotone within
+/// a process (Chrome's `ts` field wants exactly this shape).
+fn start() -> Instant {
+    static START: OnceLock<Instant> = OnceLock::new();
+    *START.get_or_init(Instant::now)
+}
+
+/// Microseconds since process start (monotonic).
+pub fn now_us() -> u64 {
+    start().elapsed().as_micros() as u64
+}
+
+/// Whole seconds since process start — the rolling-window epoch.
+pub fn now_secs() -> u64 {
+    now_us() / 1_000_000
+}
+
+/// Allocate a fresh nonzero trace id: a SplitMix64-style mix of a
+/// per-process seed (wall clock ⊕ pid, so two routers started in the same
+/// second still diverge) and a monotone counter. `| 1` keeps 0 reserved
+/// as "untraced".
+pub fn next_trace_id() -> u64 {
+    static SEED: OnceLock<u64> = OnceLock::new();
+    static NEXT: AtomicU64 = AtomicU64::new(0);
+    let seed = *SEED.get_or_init(|| {
+        let nanos = std::time::SystemTime::now()
+            .duration_since(std::time::UNIX_EPOCH)
+            .map(|d| d.as_nanos() as u64)
+            .unwrap_or(0x5EED);
+        nanos ^ ((std::process::id() as u64) << 32)
+    });
+    let n = NEXT.fetch_add(1, Ordering::Relaxed);
+    seed.wrapping_add(n.wrapping_mul(0x9E37_79B9_7F4A_7C15)).wrapping_mul(0xBF58_476D_1CE4_E5B9) | 1
+}
+
+/// Render a trace id for the wire. Ids are full-range u64s, and JSON
+/// numbers are f64 (precision loss above 2^53), so ids always cross the
+/// wire as hex strings.
+pub fn trace_id_string(id: u64) -> String {
+    format!("{id:016x}")
+}
+
+/// Parse a client-supplied `"trace"` wire field. Accepts the canonical
+/// hex string, a decimal string, a plain JSON number, or — for "let me
+/// name my request" ergonomics — any other string, hashed (FNV-1a) to a
+/// stable nonzero id.
+pub fn parse_trace_field(v: &crate::util::Json) -> Option<u64> {
+    use crate::util::Json;
+    match v {
+        Json::Num(n) if *n >= 0.0 && n.fract() == 0.0 => Some((*n as u64) | 1),
+        Json::Str(s) => {
+            if let Ok(id) = u64::from_str_radix(s, 16) {
+                return Some(id | 1);
+            }
+            if let Ok(id) = s.parse::<u64>() {
+                return Some(id | 1);
+            }
+            let mut h: u64 = 0xcbf2_9ce4_8422_2325;
+            for b in s.bytes() {
+                h ^= b as u64;
+                h = h.wrapping_mul(0x100_0000_01b3);
+            }
+            Some(h | 1)
+        }
+        _ => None,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::Json;
+
+    #[test]
+    fn clock_is_monotone() {
+        let a = now_us();
+        let b = now_us();
+        assert!(b >= a);
+    }
+
+    #[test]
+    fn trace_ids_are_nonzero_and_distinct() {
+        let a = next_trace_id();
+        let b = next_trace_id();
+        assert_ne!(a, 0);
+        assert_ne!(b, 0);
+        assert_ne!(a, b);
+    }
+
+    #[test]
+    fn trace_field_parses_all_wire_shapes() {
+        let id = next_trace_id();
+        let hex = trace_id_string(id);
+        assert_eq!(parse_trace_field(&Json::str(hex)), Some(id));
+        assert_eq!(parse_trace_field(&Json::num(42.0)), Some(43)); // | 1
+        assert_eq!(parse_trace_field(&Json::str("17")), Some(23)); // hex first
+        // arbitrary names hash stably and never to zero
+        let named = parse_trace_field(&Json::str("my-request")).unwrap();
+        assert_ne!(named, 0);
+        assert_eq!(parse_trace_field(&Json::str("my-request")), Some(named));
+        assert!(parse_trace_field(&Json::Null).is_none());
+        assert!(parse_trace_field(&Json::num(-1.0)).is_none());
+    }
+}

@@ -1,0 +1,124 @@
+//! Prometheus text exposition (format version 0.0.4), hand-rolled.
+//!
+//! Workers answer `{"cmd":"metrics","format":"prometheus"}` with a body
+//! built through [`PromWriter`]; the router aggregates the fleet by
+//! re-labeling each worker's body with a `worker="<i>"` label via
+//! [`relabel`] and concatenating.
+
+use std::collections::BTreeSet;
+
+/// Incremental builder for a Prometheus text body. `# HELP`/`# TYPE`
+/// headers are emitted once per metric name, on first write.
+#[derive(Default)]
+pub struct PromWriter {
+    out: String,
+    seen: BTreeSet<String>,
+}
+
+impl PromWriter {
+    pub fn new() -> PromWriter {
+        PromWriter::default()
+    }
+
+    /// Append one sample. `kind` is `"counter"` or `"gauge"`; `labels`
+    /// render as `{k="v",...}`. Non-finite values render as `NaN`, which
+    /// Prometheus accepts.
+    pub fn write(
+        &mut self,
+        name: &str,
+        kind: &str,
+        help: &str,
+        labels: &[(&str, &str)],
+        value: f64,
+    ) {
+        if self.seen.insert(name.to_string()) {
+            self.out.push_str(&format!("# HELP {name} {help}\n# TYPE {name} {kind}\n"));
+        }
+        self.out.push_str(name);
+        if !labels.is_empty() {
+            self.out.push('{');
+            for (i, (k, v)) in labels.iter().enumerate() {
+                if i > 0 {
+                    self.out.push(',');
+                }
+                self.out.push_str(&format!("{k}={:?}", v));
+            }
+            self.out.push('}');
+        }
+        if value.is_finite() {
+            // integers print without a fractional part, like the rest of
+            // the wire format
+            if value.fract() == 0.0 && value.abs() < 1e15 {
+                self.out.push_str(&format!(" {}\n", value as i64));
+            } else {
+                self.out.push_str(&format!(" {value}\n"));
+            }
+        } else {
+            self.out.push_str(" NaN\n");
+        }
+    }
+
+    pub fn finish(self) -> String {
+        self.out
+    }
+}
+
+/// Insert `key="value"` into every sample line of an existing exposition
+/// body (comment lines pass through). Used by the router to tag each
+/// worker's metrics before concatenating the fleet view.
+pub fn relabel(body: &str, key: &str, value: &str) -> String {
+    let mut out = String::with_capacity(body.len() + 64);
+    for line in body.lines() {
+        if line.is_empty() || line.starts_with('#') {
+            out.push_str(line);
+            out.push('\n');
+            continue;
+        }
+        if let Some(brace) = line.find('{') {
+            out.push_str(&line[..=brace]);
+            out.push_str(&format!("{key}={value:?},"));
+            out.push_str(&line[brace + 1..]);
+        } else if let Some(space) = line.find(' ') {
+            out.push_str(&line[..space]);
+            out.push_str(&format!("{{{key}={value:?}}}"));
+            out.push_str(&line[space..]);
+        } else {
+            out.push_str(line);
+        }
+        out.push('\n');
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn headers_emitted_once_per_name() {
+        let mut w = PromWriter::new();
+        w.write("cq_requests_total", "counter", "Requests seen.", &[], 3.0);
+        w.write("cq_requests_total", "counter", "Requests seen.", &[("kind", "gen")], 1.0);
+        let body = w.finish();
+        assert_eq!(body.matches("# HELP cq_requests_total").count(), 1);
+        assert_eq!(body.matches("# TYPE cq_requests_total counter").count(), 1);
+        assert!(body.contains("cq_requests_total 3\n"));
+        assert!(body.contains("cq_requests_total{kind=\"gen\"} 1\n"));
+    }
+
+    #[test]
+    fn relabel_handles_both_line_shapes() {
+        let body = "# HELP m h\n# TYPE m gauge\nm 1\nm{a=\"b\"} 2\n";
+        let tagged = relabel(body, "worker", "0");
+        assert!(tagged.contains("m{worker=\"0\"} 1\n"));
+        assert!(tagged.contains("m{worker=\"0\",a=\"b\"} 2\n"));
+        assert!(tagged.contains("# HELP m h\n"));
+    }
+
+    #[test]
+    fn nonfinite_values_render_as_nan() {
+        let mut w = PromWriter::new();
+        w.write("m", "gauge", "h", &[], f64::NAN);
+        assert!(w.finish().contains("m NaN\n"));
+    }
+}

@@ -1,0 +1,306 @@
+//! Request tracing: per-stage spans in a lock-free fixed-capacity ring.
+//!
+//! A trace id is assigned at the router (or supplied by the client via
+//! the `"trace"` wire field), propagated over the line protocol to the
+//! worker, and carried through scheduler → engine → model forward. Each
+//! stage records a [`Span`] into the process's [`SpanRing`]; the ring is
+//! queryable over the wire (`{"cmd":"trace","id":...}`) and dumpable as
+//! Chrome `trace_event` JSON for `chrome://tracing`.
+//!
+//! The ring is a seqlock-per-slot design: writers claim a slot with one
+//! `fetch_add`, publish with two release stores around the field writes;
+//! readers detect torn slots by re-checking the commit word. No locks,
+//! no allocation, fixed memory — safe to leave enabled in production.
+//! Overwrite is the eviction policy: the ring keeps the most recent
+//! `capacity` spans.
+
+use std::sync::atomic::{fence, AtomicU64, Ordering};
+
+use crate::util::Json;
+
+/// The span taxonomy — one variant per serving stage. Durations tile a
+/// traced generate request end-to-end: queue wait → admission wait →
+/// prefill → one decode span per token (each measured from the previous
+/// token, so the sum is the full residence time).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum SpanKind {
+    /// Router: client frame accepted → final frame relayed (aux = worker
+    /// index that served the attempt).
+    Dispatch,
+    /// Worker: request submitted → picked up by the executor/engine.
+    QueueWait,
+    /// Engine: entered the admission queue → KV slot leased.
+    AdmissionWait,
+    /// Engine: prompt prefill through the first emitted token.
+    Prefill,
+    /// Engine: previous token emitted → this token emitted (aux = token
+    /// index); equals the inter-token latency for that position.
+    DecodeToken,
+    /// Executor: one batched forward (aux = batch rows).
+    BatchForward,
+    /// Int8 GEMM time inside the enclosing forward (aux = GEMM calls).
+    Gemm,
+    /// `.cqa` artifact load on the serving path.
+    ArtifactLoad,
+}
+
+impl SpanKind {
+    pub fn name(self) -> &'static str {
+        match self {
+            SpanKind::Dispatch => "dispatch",
+            SpanKind::QueueWait => "queue_wait",
+            SpanKind::AdmissionWait => "admission_wait",
+            SpanKind::Prefill => "prefill",
+            SpanKind::DecodeToken => "decode_token",
+            SpanKind::BatchForward => "batch_forward",
+            SpanKind::Gemm => "gemm",
+            SpanKind::ArtifactLoad => "artifact_load",
+        }
+    }
+
+    fn code(self) -> u64 {
+        self as u64
+    }
+
+    fn from_code(c: u64) -> Option<SpanKind> {
+        Some(match c {
+            0 => SpanKind::Dispatch,
+            1 => SpanKind::QueueWait,
+            2 => SpanKind::AdmissionWait,
+            3 => SpanKind::Prefill,
+            4 => SpanKind::DecodeToken,
+            5 => SpanKind::BatchForward,
+            6 => SpanKind::Gemm,
+            7 => SpanKind::ArtifactLoad,
+            _ => return None,
+        })
+    }
+}
+
+/// One recorded stage of one request.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct Span {
+    /// Owning trace id (0 = untraced background work, e.g. a cold
+    /// artifact load not attributable to one request).
+    pub trace: u64,
+    pub kind: SpanKind,
+    /// Microseconds since process start ([`super::now_us`]).
+    pub start_us: u64,
+    pub dur_us: u64,
+    /// Kind-specific annotation (token index, worker index, GEMM calls…).
+    pub aux: u64,
+}
+
+impl Span {
+    /// Wire shape for the `{"cmd":"trace"}` response.
+    pub fn json(&self) -> Json {
+        Json::obj(vec![
+            ("trace", Json::str(super::trace_id_string(self.trace))),
+            ("kind", Json::str(self.kind.name())),
+            ("start_us", Json::num(self.start_us as f64)),
+            ("dur_us", Json::num(self.dur_us as f64)),
+            ("aux", Json::num(self.aux as f64)),
+        ])
+    }
+}
+
+/// Default ring capacity: 8192 spans ≈ a few hundred traced generate
+/// requests, ~400 KiB resident.
+pub const DEFAULT_RING_CAPACITY: usize = 8192;
+
+struct RingSlot {
+    /// Seqlock word: 0 = never written, odd = write in progress,
+    /// `2·seq + 2` = slot holds the record claimed at sequence `seq`.
+    commit: AtomicU64,
+    trace: AtomicU64,
+    kind: AtomicU64,
+    start_us: AtomicU64,
+    dur_us: AtomicU64,
+    aux: AtomicU64,
+}
+
+/// Lock-free fixed-capacity span ring. Any thread may record; any thread
+/// may snapshot concurrently — torn slots (a writer mid-publish, or a
+/// lapped writer) are detected via the commit word and skipped.
+pub struct SpanRing {
+    slots: Vec<RingSlot>,
+    head: AtomicU64,
+    mask: u64,
+}
+
+impl Default for SpanRing {
+    fn default() -> Self {
+        SpanRing::new(DEFAULT_RING_CAPACITY)
+    }
+}
+
+impl SpanRing {
+    /// `capacity` is rounded up to a power of two (masking beats modulo
+    /// on the record path).
+    pub fn new(capacity: usize) -> SpanRing {
+        let cap = capacity.max(2).next_power_of_two();
+        SpanRing {
+            slots: (0..cap)
+                .map(|_| RingSlot {
+                    commit: AtomicU64::new(0),
+                    trace: AtomicU64::new(0),
+                    kind: AtomicU64::new(0),
+                    start_us: AtomicU64::new(0),
+                    dur_us: AtomicU64::new(0),
+                    aux: AtomicU64::new(0),
+                })
+                .collect(),
+            head: AtomicU64::new(0),
+            mask: cap as u64 - 1,
+        }
+    }
+
+    pub fn capacity(&self) -> usize {
+        self.slots.len()
+    }
+
+    /// Total spans ever recorded (recent `capacity` are retained).
+    pub fn recorded(&self) -> u64 {
+        self.head.load(Ordering::Relaxed)
+    }
+
+    pub fn record(&self, s: Span) {
+        let seq = self.head.fetch_add(1, Ordering::Relaxed);
+        let slot = &self.slots[(seq & self.mask) as usize];
+        slot.commit.store(2 * seq + 1, Ordering::Release);
+        slot.trace.store(s.trace, Ordering::Relaxed);
+        slot.kind.store(s.kind.code(), Ordering::Relaxed);
+        slot.start_us.store(s.start_us, Ordering::Relaxed);
+        slot.dur_us.store(s.dur_us, Ordering::Relaxed);
+        slot.aux.store(s.aux, Ordering::Relaxed);
+        slot.commit.store(2 * seq + 2, Ordering::Release);
+    }
+
+    /// Consistent copies of every stable slot (torn slots skipped).
+    pub fn snapshot(&self) -> Vec<Span> {
+        let mut out = Vec::with_capacity(self.slots.len());
+        for slot in &self.slots {
+            let c1 = slot.commit.load(Ordering::Acquire);
+            if c1 == 0 || c1 % 2 == 1 {
+                continue; // never written, or a writer is mid-publish
+            }
+            let s = Span {
+                trace: slot.trace.load(Ordering::Relaxed),
+                kind: match SpanKind::from_code(slot.kind.load(Ordering::Relaxed)) {
+                    Some(k) => k,
+                    None => continue, // torn beyond recognition
+                },
+                start_us: slot.start_us.load(Ordering::Relaxed),
+                dur_us: slot.dur_us.load(Ordering::Relaxed),
+                aux: slot.aux.load(Ordering::Relaxed),
+            };
+            fence(Ordering::Acquire);
+            if slot.commit.load(Ordering::Relaxed) == c1 {
+                out.push(s);
+            }
+        }
+        out
+    }
+
+    /// Spans of one trace, ordered by start time (`trace == 0` returns
+    /// the whole ring — the "dump everything" query).
+    pub fn for_trace(&self, trace: u64) -> Vec<Span> {
+        let mut spans: Vec<Span> =
+            self.snapshot().into_iter().filter(|s| trace == 0 || s.trace == trace).collect();
+        spans.sort_by_key(|s| (s.start_us, s.dur_us, s.aux));
+        spans
+    }
+}
+
+/// Render spans as a Chrome `trace_event` document (the JSON Object
+/// Format): load the rendered object directly in `chrome://tracing` or
+/// Perfetto. Complete events (`ph: "X"`), `ts`/`dur` in microseconds.
+pub fn chrome_trace_json(spans: &[Span]) -> Json {
+    let events = spans
+        .iter()
+        .map(|s| {
+            Json::obj(vec![
+                ("name", Json::str(s.kind.name())),
+                ("cat", Json::str("crossquant")),
+                ("ph", Json::str("X")),
+                ("ts", Json::num(s.start_us as f64)),
+                ("dur", Json::num(s.dur_us as f64)),
+                ("pid", Json::num(1.0)),
+                // one lane per trace so concurrent requests stack visually
+                ("tid", Json::num((s.trace % 0x7fff) as f64)),
+                (
+                    "args",
+                    Json::obj(vec![
+                        ("trace", Json::str(super::trace_id_string(s.trace))),
+                        ("aux", Json::num(s.aux as f64)),
+                    ]),
+                ),
+            ])
+        })
+        .collect();
+    Json::obj(vec![("traceEvents", Json::Arr(events))])
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn span(trace: u64, kind: SpanKind, start: u64) -> Span {
+        Span { trace, kind, start_us: start, dur_us: 10, aux: 0 }
+    }
+
+    #[test]
+    fn record_and_query_by_trace() {
+        let ring = SpanRing::new(16);
+        ring.record(span(7, SpanKind::QueueWait, 100));
+        ring.record(span(9, SpanKind::Prefill, 150));
+        ring.record(span(7, SpanKind::Prefill, 200));
+        let t7 = ring.for_trace(7);
+        assert_eq!(t7.len(), 2);
+        assert_eq!(t7[0].kind, SpanKind::QueueWait);
+        assert_eq!(t7[1].kind, SpanKind::Prefill);
+        assert_eq!(ring.for_trace(0).len(), 3, "trace 0 dumps everything");
+    }
+
+    #[test]
+    fn ring_overwrites_oldest() {
+        let ring = SpanRing::new(4);
+        for i in 0..10u64 {
+            ring.record(span(1, SpanKind::DecodeToken, i));
+        }
+        let spans = ring.for_trace(1);
+        assert_eq!(spans.len(), 4);
+        assert_eq!(spans[0].start_us, 6, "oldest retained span");
+        assert_eq!(ring.recorded(), 10);
+    }
+
+    #[test]
+    fn chrome_dump_is_wellformed() {
+        let ring = SpanRing::new(8);
+        ring.record(span(3, SpanKind::Dispatch, 5));
+        let doc = chrome_trace_json(&ring.for_trace(3));
+        let parsed = crate::util::Json::parse(&doc.render()).unwrap();
+        let events = parsed.get("traceEvents").unwrap().as_arr().unwrap();
+        assert_eq!(events.len(), 1);
+        assert_eq!(events[0].get("ph").unwrap().as_str(), Some("X"));
+        assert_eq!(events[0].get("name").unwrap().as_str(), Some("dispatch"));
+        assert_eq!(events[0].get("ts").unwrap().as_f64(), Some(5.0));
+    }
+
+    #[test]
+    fn kind_codes_roundtrip() {
+        for k in [
+            SpanKind::Dispatch,
+            SpanKind::QueueWait,
+            SpanKind::AdmissionWait,
+            SpanKind::Prefill,
+            SpanKind::DecodeToken,
+            SpanKind::BatchForward,
+            SpanKind::Gemm,
+            SpanKind::ArtifactLoad,
+        ] {
+            assert_eq!(SpanKind::from_code(k.code()), Some(k));
+        }
+        assert_eq!(SpanKind::from_code(99), None);
+    }
+}

@@ -35,8 +35,10 @@
 //!   disjoint region of the output, and per-element arithmetic is
 //!   tile-independent, so results stay bit-exact for any worker count.
 
+use std::cell::Cell;
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::Arc;
+use std::time::Instant;
 
 use crate::tensor::{par, Matrix};
 use crate::util::Mmap;
@@ -75,6 +77,31 @@ pub fn unaligned_panel_copies() -> u64 {
 }
 
 static UNALIGNED_PANEL_COPIES: AtomicU64 = AtomicU64::new(0);
+
+thread_local! {
+    static GEMM_TIMING: Cell<bool> = const { Cell::new(false) };
+    static GEMM_CALLS: Cell<u64> = const { Cell::new(0) };
+    static GEMM_NANOS: Cell<u64> = const { Cell::new(0) };
+}
+
+/// Arm (or disarm) per-thread GEMM timing for request tracing. Timing is
+/// thread-local because GEMMs run synchronously on the thread that drives
+/// the forward pass (the executor), so span attribution never needs a
+/// cross-thread handoff. Arming resets the accumulators.
+pub fn gemm_timing_enable(on: bool) {
+    GEMM_TIMING.with(|t| t.set(on));
+    if on {
+        GEMM_CALLS.with(|c| c.set(0));
+        GEMM_NANOS.with(|n| n.set(0));
+    }
+}
+
+/// Drain this thread's accumulated `(calls, nanoseconds)` spent inside
+/// [`gemm_i32_packed`] since timing was armed, resetting both to zero.
+/// Timing stays armed until [`gemm_timing_enable`]`(false)`.
+pub fn gemm_timing_take() -> (u64, u64) {
+    (GEMM_CALLS.with(|c| c.replace(0)), GEMM_NANOS.with(|n| n.replace(0)))
+}
 
 /// The owned/borrowed split behind [`PackedInt8`]: panels either own
 /// their buffer (built by `pack_with`) or borrow it in place from a file
@@ -288,7 +315,14 @@ unsafe impl Sync for SendPtr {}
 /// The bit-exactness oracle surface — every ISA, worker count, and tile
 /// shape returns identical bytes.
 pub fn gemm_i32_packed(a_codes: &[i8], m: usize, w: &PackedInt8, workers: usize) -> Vec<i32> {
-    gemm_i32_packed_isa(a_codes, m, w, workers, dispatch::active())
+    if !GEMM_TIMING.with(|t| t.get()) {
+        return gemm_i32_packed_isa(a_codes, m, w, workers, dispatch::active());
+    }
+    let t0 = Instant::now();
+    let out = gemm_i32_packed_isa(a_codes, m, w, workers, dispatch::active());
+    GEMM_CALLS.with(|c| c.set(c.get() + 1));
+    GEMM_NANOS.with(|n| n.set(n.get() + t0.elapsed().as_nanos() as u64));
+    out
 }
 
 /// [`gemm_i32_packed`] with an explicit microkernel choice — the oracle
@@ -514,6 +548,24 @@ mod tests {
         assert!(gemm_i32_packed(&[0i8; 10], 2, &packed, 1).is_empty());
         let packed = PackedInt8::from_row_major(&[1, 2, 3], 1, 3);
         assert!(gemm_i32_packed(&[], 0, &packed, 1).is_empty());
+    }
+
+    #[test]
+    fn gemm_timing_counts_calls_only_while_armed() {
+        let mut rng = SplitMix64::new(13);
+        let (k, n) = (16, NR);
+        let packed = PackedInt8::from_row_major(&arb_codes(&mut rng, k * n, 0.2), k, n);
+        let a = arb_codes(&mut rng, 2 * k, 0.2);
+        gemm_timing_enable(false);
+        let _ = gemm_i32_packed(&a, 2, &packed, 1);
+        assert_eq!(gemm_timing_take(), (0, 0), "disarmed GEMMs must not count");
+        gemm_timing_enable(true);
+        let _ = gemm_i32_packed(&a, 2, &packed, 1);
+        let _ = gemm_i32_packed(&a, 2, &packed, 1);
+        let (calls, _ns) = gemm_timing_take();
+        assert_eq!(calls, 2);
+        assert_eq!(gemm_timing_take(), (0, 0), "take drains the accumulators");
+        gemm_timing_enable(false);
     }
 
     #[test]

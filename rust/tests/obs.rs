@@ -1,0 +1,349 @@
+//! Observability integration: histogram merge/quantile properties, span
+//! ring behaviour under concurrent writers and readers, end-to-end span
+//! coverage of a traced streaming generation, and the wire-level
+//! trace/metrics protocol including Prometheus exposition.
+
+use std::io::{BufRead, BufReader, Write};
+use std::net::{TcpListener, TcpStream};
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+use crossquant::coordinator::scheduler::{CoordinatorConfig, EvalCoordinator, EvalRequest};
+use crossquant::coordinator::{ActScheme, EvalServer};
+use crossquant::model::weights::synthetic_weights;
+use crossquant::model::ModelConfig;
+use crossquant::obs::{self, Histogram, Span, SpanKind, SpanRing};
+use crossquant::runtime::ArtifactStore;
+use crossquant::tensor::SplitMix64;
+use crossquant::util::Json;
+
+fn small_cfg() -> ModelConfig {
+    ModelConfig {
+        vocab: 64,
+        d_model: 16,
+        n_layers: 1,
+        n_heads: 2,
+        d_ff: 32,
+        seq_len: 48,
+        eval_batch: 2,
+    }
+}
+
+fn unique_dir(prefix: &str) -> std::path::PathBuf {
+    let p = std::env::temp_dir().join(format!(
+        "{prefix}-{}-{:?}",
+        std::process::id(),
+        std::time::SystemTime::now()
+            .duration_since(std::time::UNIX_EPOCH)
+            .unwrap()
+            .as_nanos()
+    ));
+    std::fs::create_dir_all(&p).unwrap();
+    p
+}
+
+/// Coordinator over synthetic weights and an empty store: the native
+/// executor serves every request, so these tests run on every build.
+fn start_coordinator() -> (EvalCoordinator, std::path::PathBuf) {
+    let cfg = small_cfg();
+    let dir = unique_dir("cq-obs");
+    let weights = synthetic_weights(cfg, 23);
+    let coordinator = EvalCoordinator::start(
+        ArtifactStore { dir: dir.clone() },
+        cfg,
+        vec![("w16".into(), weights.flat.clone())],
+        CoordinatorConfig {
+            batch_size: 2,
+            max_batch_delay: Duration::from_millis(2),
+            max_queue: 16,
+            engine: Default::default(),
+            artifacts: Vec::new(),
+        },
+    );
+    (coordinator, dir)
+}
+
+fn roundtrip(stream: &mut TcpStream, reader: &mut BufReader<TcpStream>, req: &str) -> Json {
+    stream.write_all(req.as_bytes()).unwrap();
+    stream.write_all(b"\n").unwrap();
+    let mut line = String::new();
+    reader.read_line(&mut line).unwrap();
+    Json::parse(&line).expect("server must emit valid JSON")
+}
+
+// --- histogram properties ----------------------------------------------
+
+#[test]
+fn histogram_merge_of_shards_equals_histogram_of_union() {
+    let mut rng = SplitMix64::new(7);
+    let union = Histogram::new();
+    let shards: Vec<Histogram> = (0..4).map(|_| Histogram::new()).collect();
+    for i in 0..10_000u64 {
+        // spread over ~10 decades, with a slice of overflow-range values
+        let v = match rng.next_u64() % 10 {
+            0 => rng.next_u64(),
+            d => rng.next_u64() % 10u64.pow(d as u32),
+        };
+        shards[(i % 4) as usize].record(v);
+        union.record(v);
+    }
+    let merged = Histogram::new();
+    for s in &shards {
+        merged.merge_from(s);
+    }
+    assert_eq!(merged.bucket_counts(), union.bucket_counts());
+    assert_eq!(merged.count(), union.count());
+    assert_eq!(merged.sum_us(), union.sum_us());
+    assert_eq!(merged.overflow_count(), union.overflow_count());
+    assert_eq!(merged.max_us(), union.max_us());
+    for q in [0.0, 0.1, 0.5, 0.9, 0.95, 0.99, 0.999, 1.0] {
+        assert_eq!(merged.quantile_us(q), union.quantile_us(q), "q = {q}");
+    }
+}
+
+#[test]
+fn histogram_quantiles_are_monotone_and_clamped() {
+    let h = Histogram::new();
+    let mut rng = SplitMix64::new(99);
+    for _ in 0..5_000 {
+        h.record(rng.next_u64() % 50_000_000);
+    }
+    let mut prev = 0u64;
+    for i in 0..=100 {
+        let q = i as f64 / 100.0;
+        let v = h.quantile_us(q);
+        assert!(v >= prev, "quantile must be monotone in q (q = {q}: {v} < {prev})");
+        prev = v;
+    }
+    // the top quantile is tightened to the observed max, never a sentinel
+    assert!(h.quantile_us(1.0) <= h.max_us());
+}
+
+// --- span ring ---------------------------------------------------------
+
+#[test]
+fn span_ring_survives_concurrent_writers_and_readers() {
+    let ring = Arc::new(SpanRing::new(1024));
+    let writers = 4u64;
+    let per_writer = 2_000u64; // wraps the ring several times over
+    let stop = Arc::new(AtomicBool::new(false));
+    let reader = {
+        let ring = ring.clone();
+        let stop = stop.clone();
+        std::thread::spawn(move || {
+            let mut seen = 0usize;
+            while !stop.load(Ordering::Relaxed) {
+                for s in ring.snapshot() {
+                    // writer invariant: aux == trace ^ dur. A torn read
+                    // (fields from two different records) would break it.
+                    assert_eq!(s.aux, s.trace ^ s.dur_us, "torn span read: {s:?}");
+                    seen += 1;
+                }
+            }
+            seen
+        })
+    };
+    let handles: Vec<_> = (0..writers)
+        .map(|w| {
+            let ring = ring.clone();
+            std::thread::spawn(move || {
+                for i in 0..per_writer {
+                    let trace = (w << 32) | i | 1;
+                    let dur = i.wrapping_mul(0x9E37) & 0xFFFF;
+                    ring.record(Span {
+                        trace,
+                        kind: SpanKind::DecodeToken,
+                        start_us: i,
+                        dur_us: dur,
+                        aux: trace ^ dur,
+                    });
+                }
+            })
+        })
+        .collect();
+    for h in handles {
+        h.join().unwrap();
+    }
+    stop.store(true, Ordering::Relaxed);
+    let seen = reader.join().unwrap();
+    assert!(seen > 0, "concurrent reader must observe published spans");
+    assert_eq!(ring.recorded(), writers * per_writer);
+    // once writers are quiescent every slot is committed and readable
+    assert_eq!(ring.snapshot().len(), ring.capacity());
+}
+
+// --- end-to-end span coverage ------------------------------------------
+
+#[test]
+fn traced_generate_spans_cover_request_wall_time() {
+    let (coordinator, dir) = start_coordinator();
+    let trace = obs::next_trace_id();
+    let new_tokens = 32usize;
+    let t0 = Instant::now();
+    let prompt = vec![1, 2, 3, 4];
+    let req = EvalRequest::generate(prompt, ActScheme::Fp, "w16", new_tokens).with_trace(trace);
+    let (rx, handle) = coordinator.submit_streaming(req).expect("submit");
+    let mut streamed = 0usize;
+    while rx.recv_timeout(Duration::from_secs(60)).is_ok() {
+        streamed += 1;
+    }
+    let resp = handle.wait().expect("generate");
+    let wall_us = t0.elapsed().as_micros() as u64;
+    assert_eq!(resp.generated.len(), new_tokens);
+    assert_eq!(streamed, new_tokens);
+
+    let spans = coordinator.metrics.spans.for_trace(trace);
+    let count = |k: SpanKind| spans.iter().filter(|s| s.kind == k).count();
+    assert_eq!(count(SpanKind::QueueWait), 1, "{spans:?}");
+    assert_eq!(count(SpanKind::AdmissionWait), 1);
+    assert_eq!(count(SpanKind::Prefill), 1);
+    // prefill emits the first token; every later token gets a decode span
+    assert_eq!(count(SpanKind::DecodeToken), new_tokens - 1);
+
+    // the four stage kinds tile submit → last token; only channel
+    // delivery tails are uncovered, so ≥95% of wall time is accounted for
+    let stages = [
+        SpanKind::QueueWait,
+        SpanKind::AdmissionWait,
+        SpanKind::Prefill,
+        SpanKind::DecodeToken,
+    ];
+    let stage_spans = spans.iter().filter(|s| stages.contains(&s.kind));
+    let covered: u64 = stage_spans.map(|s| s.dur_us).sum();
+    assert!(
+        covered as f64 >= 0.95 * wall_us as f64,
+        "stage spans cover {covered}us of {wall_us}us wall time"
+    );
+
+    // an untraced request must not add spans
+    let before = coordinator.metrics.spans.recorded();
+    let quiet = EvalRequest::generate(vec![1, 2, 3], ActScheme::Fp, "w16", 4);
+    coordinator.submit(quiet).expect("submit").wait().expect("generate");
+    assert_eq!(coordinator.metrics.spans.recorded(), before);
+
+    coordinator.shutdown();
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+// --- wire protocol -----------------------------------------------------
+
+/// Every sample line of a Prometheus text body must parse as
+/// `name{labels} value` with a finite value.
+fn assert_prometheus_body(body: &str) {
+    let mut samples = 0usize;
+    for line in body.lines() {
+        if line.is_empty() || line.starts_with('#') {
+            continue;
+        }
+        let (_, value) = line.rsplit_once(' ').expect("sample line has a value");
+        let v: f64 = value.parse().expect("sample value parses as f64");
+        assert!(v.is_finite() || v.is_nan(), "non-finite sample: {line}");
+        samples += 1;
+    }
+    assert!(samples > 0, "exposition body has no samples");
+}
+
+#[test]
+fn trace_query_and_prometheus_exposition_over_the_wire() {
+    let cfg = small_cfg();
+    let dir = unique_dir("cq-obs-wire");
+    let weights = synthetic_weights(cfg, 23);
+    let coordinator = EvalCoordinator::start(
+        ArtifactStore { dir: dir.clone() },
+        cfg,
+        vec![("w16".into(), weights.flat.clone())],
+        CoordinatorConfig {
+            batch_size: 2,
+            max_batch_delay: Duration::from_millis(2),
+            max_queue: 16,
+            engine: Default::default(),
+            artifacts: Vec::new(),
+        },
+    );
+    // sample every dynamic-scheme forward so one request populates gauges
+    coordinator.metrics.kernel.configure(true, 0.19, 1);
+    let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+    let addr = listener.local_addr().unwrap();
+    std::thread::spawn(move || {
+        let _ = EvalServer::new(coordinator).serve(listener);
+    });
+
+    let mut stream = TcpStream::connect(addr).unwrap();
+    stream.set_read_timeout(Some(Duration::from_secs(300))).unwrap();
+    let mut reader = BufReader::new(stream.try_clone().unwrap());
+
+    // a traced dynamic-CrossQuant generation; the response echoes the id
+    let req = r#"{"tokens": [1, 2, 3, 4], "scheme": "crossquant", "alpha": 0.15, "max_new_tokens": 6, "weight_set": "w16", "trace": "obs-wire-test"}"#;
+    let resp = roundtrip(&mut stream, &mut reader, req);
+    assert_eq!(resp.get("ok"), Some(&Json::Bool(true)), "{resp:?}");
+    let echoed = resp.get("trace").and_then(|t| t.as_str());
+    let id = echoed.expect("trace echoed").to_string();
+
+    // spans are queryable by that id: dispatchless worker-side taxonomy
+    let tr = roundtrip(&mut stream, &mut reader, &format!(r#"{{"cmd": "trace", "id": "{id}"}}"#));
+    assert_eq!(tr.get("ok"), Some(&Json::Bool(true)), "{tr:?}");
+    assert_eq!(tr.get("trace").and_then(|t| t.as_str()), Some(id.as_str()));
+    let spans = tr.get("spans").unwrap().as_arr().unwrap();
+    let mut kinds: Vec<&str> = Vec::new();
+    for s in spans {
+        kinds.push(s.get("kind").and_then(|k| k.as_str()).expect("span kind"));
+    }
+    for want in ["queue_wait", "admission_wait", "prefill", "decode_token"] {
+        assert!(kinds.contains(&want), "missing {want} span in {kinds:?}");
+    }
+    assert_eq!(kinds.iter().filter(|&k| k == "decode_token").count(), 5);
+    for s in spans {
+        assert_eq!(s.get("trace").and_then(|t| t.as_str()), Some(id.as_str()));
+        assert!(s.get("dur_us").and_then(|d| d.as_f64()).is_some(), "{s:?}");
+    }
+
+    // the same trace as Chrome trace_event JSON
+    let chrome = roundtrip(
+        &mut stream,
+        &mut reader,
+        &format!(r#"{{"cmd": "trace", "id": "{id}", "format": "chrome"}}"#),
+    );
+    assert_eq!(chrome.get("ok"), Some(&Json::Bool(true)));
+    let events = chrome.get("traceEvents").unwrap().as_arr().unwrap();
+    assert_eq!(events.len(), spans.len());
+    for e in events {
+        assert_eq!(e.get("ph").and_then(|p| p.as_str()), Some("X"));
+        assert!(e.get("name").and_then(|n| n.as_str()).is_some());
+        assert!(e.get("ts").and_then(|t| t.as_f64()).is_some());
+        assert!(e.get("dur").and_then(|d| d.as_f64()).is_some());
+    }
+
+    // plain metrics now carry windowed latency and per-site kernel gauges
+    let m = roundtrip(&mut stream, &mut reader, r#"{"cmd": "metrics"}"#);
+    let latency = m.get("latency").expect("latency section");
+    for track in ["ttft", "inter_token", "queue_wait", "batch_forward"] {
+        let t = latency.get(track).unwrap_or_else(|| panic!("missing track {track}"));
+        assert!(t.get("total").and_then(|j| j.get("p99_us")).is_some(), "{track}");
+        assert!(t.get("w60s").is_some(), "{track} missing rolling window");
+    }
+    let ttft_total = latency.get("ttft").unwrap().get("total").unwrap();
+    assert!(ttft_total.get("count").unwrap().as_f64() >= Some(1.0));
+    let kernel = m.get("kernel").expect("kernel section");
+    assert_eq!(kernel.get("enabled"), Some(&Json::Bool(true)));
+    let sites = kernel.get("sites").unwrap().as_arr().unwrap();
+    assert!(!sites.is_empty(), "dynamic forwards must populate kernel gauges");
+    for site in sites {
+        let frac = site.get("kernel_fraction").and_then(|f| f.as_f64()).unwrap();
+        assert!((0.0..=1.0).contains(&frac), "kernel fraction {frac}");
+        assert!(site.get("row_absmax_mean").and_then(|v| v.as_f64()).unwrap() > 0.0);
+        assert!(site.get("col_absmax_mean").and_then(|v| v.as_f64()).unwrap() > 0.0);
+    }
+
+    // Prometheus exposition: parseable body with the cq_* families
+    let prom_req = r#"{"cmd": "metrics", "format": "prometheus"}"#;
+    let prom = roundtrip(&mut stream, &mut reader, prom_req);
+    assert_eq!(prom.get("ok"), Some(&Json::Bool(true)));
+    let body = prom.get("body").and_then(|b| b.as_str()).expect("exposition body");
+    assert_prometheus_body(body);
+    for family in ["cq_requests_submitted_total", "cq_latency_us", "cq_kernel_fraction"] {
+        assert!(body.contains(family), "missing {family} in exposition");
+    }
+
+    let _ = std::fs::remove_dir_all(&dir);
+}
