@@ -176,6 +176,7 @@ fn main() {
                 max_active_seqs: *SESSIONS.iter().max().unwrap(),
                 kv_pool_bytes: None,
                 max_waiting: 64,
+                ..EngineConfig::default()
             },
             ..Default::default()
         },

@@ -67,15 +67,26 @@ pub struct EngineConfig {
     /// `None` sizes the pool to `max_active_seqs` slots.
     pub kv_pool_bytes: Option<usize>,
     /// Admission-queue bound: sequences waiting for a KV slot beyond this
-    /// are rejected with a structured error instead of queueing unbounded.
-    /// Clamped to ≥ 1 — every submission passes through the queue on its
-    /// way to a slot, so a zero-length queue could admit nothing.
+    /// are shed lowest-priority-first with a structured retryable error
+    /// instead of queueing unbounded. Clamped to ≥ 1 — every submission
+    /// passes through the queue on its way to a slot, so a zero-length
+    /// queue could admit nothing.
     pub max_waiting: usize,
+    /// Prefill/decode fairness: at most this many admissions (prefills
+    /// run inside admission) per tick, so a deep queue of long prompts
+    /// can't starve the active set's decode steps during overload.
+    /// Clamped to ≥ 1.
+    pub max_prefills_per_tick: usize,
 }
 
 impl Default for EngineConfig {
     fn default() -> Self {
-        EngineConfig { max_active_seqs: 32, kv_pool_bytes: None, max_waiting: 256 }
+        EngineConfig {
+            max_active_seqs: 32,
+            kv_pool_bytes: None,
+            max_waiting: 256,
+            max_prefills_per_tick: 4,
+        }
     }
 }
 
@@ -161,6 +172,9 @@ pub(crate) struct GenRequest {
     /// Request trace id (0 = untraced). Traced sequences emit queue-wait,
     /// admission, prefill, and per-token decode spans into the span ring.
     pub trace: u64,
+    /// Priority class (0 = best-effort … 3 = interactive). Admission
+    /// prefers higher classes; shedding victimizes lower classes first.
+    pub priority: u8,
 }
 
 /// Per-sequence activation-site state: native schemes carry their own
@@ -208,15 +222,31 @@ pub(crate) struct Engine {
     active: Vec<GenSeq>,
     next_id: u64,
     metrics: Arc<Metrics>,
+    /// Burn-rate shedding latch: true while the SLO report says both a
+    /// fast and the slow window are burning past threshold. Re-evaluated
+    /// at most once per second (the windows only move at second
+    /// granularity, and evaluation merges rolling slots).
+    shed_mode: bool,
+    slo_checked_at: Option<u64>,
 }
 
 impl Engine {
     pub(crate) fn new(mut cfg: EngineConfig, model: ModelConfig, metrics: Arc<Metrics>) -> Engine {
         cfg.max_waiting = cfg.max_waiting.max(1);
+        cfg.max_prefills_per_tick = cfg.max_prefills_per_tick.max(1);
         let pool = KvPool::with_config(&cfg, model);
         metrics.kv_pool_slots.store(pool.slots() as u64, Relaxed);
         metrics.kv_pool_slot_bytes.store(pool.slot_bytes() as u64, Relaxed);
-        Engine { cfg, pool, waiting: VecDeque::new(), active: Vec::new(), next_id: 0, metrics }
+        Engine {
+            cfg,
+            pool,
+            waiting: VecDeque::new(),
+            active: Vec::new(),
+            next_id: 0,
+            metrics,
+            shed_mode: false,
+            slo_checked_at: None,
+        }
     }
 
     /// No admitted or waiting work — the executor may block for requests.
@@ -224,20 +254,63 @@ impl Engine {
         self.active.is_empty() && self.waiting.is_empty()
     }
 
-    /// Enqueue a generation request. Admission control: the request waits
-    /// for a KV slot in a bounded queue; when the queue is full it is
-    /// rejected immediately with a structured error (never a panic, never
-    /// unbounded memory).
+    /// Enqueue a generation request. Admission control replaces the old
+    /// blind FIFO reject with telemetry-driven, lowest-priority-first
+    /// shedding (never a panic, never unbounded memory):
+    ///
+    /// * While SLO burn-rate shedding is active ([`Self::shed_mode`]),
+    ///   best-effort (priority 0) requests are shed immediately — the
+    ///   engine stops accepting deferrable load before the queue fills.
+    /// * When the queue is full, the lowest-priority entry among the
+    ///   queue and the incoming request is shed: an incoming request
+    ///   that outranks the worst queued one evicts it and takes its
+    ///   place; otherwise the incoming request is shed. Within a class
+    ///   the youngest entry is the victim (the oldest has waited
+    ///   longest and is closest to service).
+    ///
+    /// Every shed is a structured retryable error and counts against
+    /// its priority class in `shed_pN`.
     pub(crate) fn submit(&mut self, req: GenRequest) {
-        if self.waiting.len() >= self.cfg.max_waiting {
-            self.metrics.engine_rejected.fetch_add(1, Relaxed);
-            self.metrics.failed.fetch_add(1, Relaxed);
-            let _ = req.resp.send(Err(anyhow!(
-                "engine at capacity: {} sequences active, admission queue full ({})",
-                self.active.len(),
-                self.cfg.max_waiting
-            )));
+        if self.shed_mode && req.priority == 0 {
+            self.shed(
+                req,
+                "request shed (priority 0): SLO burn rate over threshold, load shedding active"
+                    .to_string(),
+            );
             return;
+        }
+        if self.waiting.len() >= self.cfg.max_waiting {
+            let victim_idx = self
+                .waiting
+                .iter()
+                .enumerate()
+                .min_by_key(|(i, (_, r))| (r.priority, std::cmp::Reverse(*i)))
+                .map(|(i, _)| i);
+            match victim_idx {
+                Some(idx) if self.waiting[idx].1.priority < req.priority => {
+                    let (_, victim) = self.waiting.remove(idx).expect("index from enumerate");
+                    let why = format!(
+                        "request shed (priority {}): engine at capacity, {} sequences active, \
+                         admission queue full ({})",
+                        victim.priority,
+                        self.active.len(),
+                        self.cfg.max_waiting
+                    );
+                    self.shed(victim, why);
+                    // fall through: the incoming request takes the slot
+                }
+                _ => {
+                    let why = format!(
+                        "request shed (priority {}): engine at capacity, {} sequences active, \
+                         admission queue full ({})",
+                        req.priority,
+                        self.active.len(),
+                        self.cfg.max_waiting
+                    );
+                    self.shed(req, why);
+                    return;
+                }
+            }
         }
         let wait_us = req.submitted.elapsed().as_micros() as u64;
         self.metrics.queue_wait.record_us(wait_us);
@@ -254,11 +327,34 @@ impl Engine {
         self.update_gauges();
     }
 
+    /// Shed one request: structured retryable error, per-priority
+    /// accounting, and the same rejected/failed counters the old blind
+    /// reject bumped.
+    fn shed(&mut self, req: GenRequest, why: String) {
+        self.metrics.engine_rejected.fetch_add(1, Relaxed);
+        self.metrics.mark_failed();
+        self.metrics.mark_shed(req.priority);
+        let _ = req.resp.send(Err(anyhow!(why)));
+    }
+
+    /// Re-evaluate the SLO burn report at most once per second — the
+    /// rolling windows only move at second granularity, and evaluation
+    /// merges every live slot.
+    fn refresh_shed_mode(&mut self) {
+        let now = obs::now_secs();
+        if self.slo_checked_at == Some(now) {
+            return;
+        }
+        self.slo_checked_at = Some(now);
+        self.shed_mode = self.metrics.slo_report().shedding;
+    }
+
     /// One engine round: admit what fits (prefill runs here), then one
     /// batched decode step per scheme group, then retire finished
     /// sequences. The executor calls this between channel polls, which is
     /// exactly how late arrivals join the running batch.
     pub(crate) fn tick(&mut self, models: &mut dyn EngineModels) {
+        self.refresh_shed_mode();
         self.reap_cancelled();
         self.admit(models);
         self.step(models);
@@ -276,7 +372,7 @@ impl Engine {
             for (at, req) in std::mem::take(&mut self.waiting) {
                 if req.cancel.load(Relaxed) {
                     self.metrics.engine_cancelled.fetch_add(1, Relaxed);
-                    self.metrics.failed.fetch_add(1, Relaxed);
+                    self.metrics.mark_failed();
                     let _ = req.resp.send(Err(anyhow!("request cancelled: client disconnected")));
                 } else {
                     kept.push_back((at, req));
@@ -301,7 +397,7 @@ impl Engine {
     /// Fail every queued and active sequence (models unavailable).
     pub(crate) fn fail_all(&mut self, why: &str) {
         for (_, req) in std::mem::take(&mut self.waiting) {
-            self.metrics.failed.fetch_add(1, Relaxed);
+            self.metrics.mark_failed();
             let _ = req.resp.send(Err(anyhow!("{why}")));
         }
         for seq in std::mem::take(&mut self.active) {
@@ -310,15 +406,28 @@ impl Engine {
         self.update_gauges();
     }
 
+    /// Admit waiting requests, highest priority first (FIFO within a
+    /// class), bounded by `max_prefills_per_tick` so long prefills can't
+    /// starve the active set's decode steps during overload.
     fn admit(&mut self, models: &mut dyn EngineModels) {
-        while self.active.len() < self.cfg.max_active_seqs && !self.waiting.is_empty() {
+        let mut budget = self.cfg.max_prefills_per_tick;
+        while budget > 0 && self.active.len() < self.cfg.max_active_seqs && !self.waiting.is_empty()
+        {
             let Some(state) = self.pool.lease() else { break };
-            let Some((enqueued, req)) = self.waiting.pop_front() else {
-                // unreachable given the loop guard, but a leaked slot is
+            let idx = self
+                .waiting
+                .iter()
+                .enumerate()
+                .max_by_key(|(i, (_, r))| (r.priority, std::cmp::Reverse(*i)))
+                .map(|(i, _)| i)
+                .expect("loop guard: waiting is non-empty");
+            let Some((enqueued, req)) = self.waiting.remove(idx) else {
+                // unreachable given the index above, but a leaked slot is
                 // the wrong failure mode if that invariant ever slips
                 self.pool.release(state);
                 break;
             };
+            budget -= 1;
             self.admit_one(models, req, state, enqueued);
         }
     }
@@ -373,7 +482,7 @@ impl Engine {
         })();
         match run {
             Err(e) => {
-                self.metrics.failed.fetch_add(1, Relaxed);
+                self.metrics.mark_failed();
                 let _ = req.resp.send(Err(e));
                 self.pool.release(state);
             }
@@ -543,7 +652,7 @@ impl Engine {
             SeqSite::Native(s) => s.aux(),
             SeqSite::Integer => 0.0,
         };
-        self.metrics.completed.fetch_add(1, Relaxed);
+        self.metrics.mark_completed();
         self.metrics.record_latency(seq.submitted.elapsed().as_micros() as u64);
         let _ = seq.resp.send(Ok(EvalResponse {
             nll: Vec::new(),
@@ -554,7 +663,7 @@ impl Engine {
     }
 
     fn fail(&mut self, seq: GenSeq, why: &str) {
-        self.metrics.failed.fetch_add(1, Relaxed);
+        self.metrics.mark_failed();
         let _ = seq.resp.send(Err(anyhow!("{why}")));
         self.pool.release(seq.state);
     }
@@ -654,13 +763,19 @@ mod tests {
             cancel: Arc::new(AtomicBool::new(false)),
             submitted: Instant::now(),
             trace: 0,
+            priority: 2,
         };
         (req, resp_rx, ev_rx)
     }
 
     fn engine(max_active: usize, max_waiting: usize, kv_pool_bytes: Option<usize>) -> Engine {
         Engine::new(
-            EngineConfig { max_active_seqs: max_active, kv_pool_bytes, max_waiting },
+            EngineConfig {
+                max_active_seqs: max_active,
+                kv_pool_bytes,
+                max_waiting,
+                ..EngineConfig::default()
+            },
             cfg(),
             Arc::new(Metrics::new()),
         )
@@ -689,6 +804,7 @@ mod tests {
             max_active_seqs: 8,
             kv_pool_bytes: Some(per_slot * 3 + 10),
             max_waiting: 4,
+            ..EngineConfig::default()
         };
         assert_eq!(KvPool::with_config(&ec, cfg()).slots(), 3);
         // budget below one slot still yields a working pool
@@ -863,6 +979,107 @@ mod tests {
         }
         b_rx.recv().unwrap().unwrap();
         assert_eq!(eng.metrics.spans.recorded(), before);
+    }
+
+    #[test]
+    fn full_queue_evicts_lowest_priority_first() {
+        // one slot, queue of two: A occupies the slot, B (p0) and C (p1)
+        // fill the queue. D (p3) arrives: B — the lowest class — is
+        // evicted to make room. Then E (p0) arrives: nothing queued is
+        // lower, so E itself is shed. No high-priority request ever sees
+        // a failure.
+        let mut eng = engine(1, 2, None);
+        let mut models = TestModels::new(3);
+        let (a, a_rx, _) = gen_req(vec![1, 2, 3], ActScheme::Fp, 6);
+        eng.submit(a);
+        eng.tick(&mut models); // A admitted
+        let (mut b, b_rx, _) = gen_req(vec![4, 5], ActScheme::Fp, 4);
+        b.priority = 0;
+        let (mut c, c_rx, _) = gen_req(vec![6, 7], ActScheme::Fp, 4);
+        c.priority = 1;
+        eng.submit(b);
+        eng.submit(c); // queue now full
+        let (mut d, d_rx, _) = gen_req(vec![8], ActScheme::Fp, 2);
+        d.priority = 3;
+        eng.submit(d); // evicts B
+        let err = b_rx.recv().expect("evicted request must respond").unwrap_err();
+        assert!(format!("{err}").contains("request shed (priority 0)"), "unexpected: {err}");
+        let (mut e, e_rx, _) = gen_req(vec![9], ActScheme::Fp, 2);
+        e.priority = 0;
+        eng.submit(e); // queue holds p1+p3 — the incoming p0 is shed
+        let err = e_rx.recv().expect("shed request must respond").unwrap_err();
+        assert!(format!("{err}").contains("request shed (priority 0)"), "unexpected: {err}");
+        while !eng.is_idle() {
+            eng.tick(&mut models);
+        }
+        assert!(a_rx.recv().unwrap().is_ok());
+        assert!(c_rx.recv().unwrap().is_ok());
+        assert!(d_rx.recv().unwrap().is_ok(), "high priority must never fail");
+        assert_eq!(eng.metrics.shed_by_priority[0].load(Relaxed), 2);
+        assert_eq!(eng.metrics.shed_by_priority[1].load(Relaxed), 0);
+        assert_eq!(eng.metrics.shed_by_priority[3].load(Relaxed), 0);
+        assert_eq!(eng.metrics.engine_rejected.load(Relaxed), 2);
+    }
+
+    #[test]
+    fn admission_is_priority_ordered_and_prefill_bounded() {
+        // one admission per tick (the fairness knob) and a 1-seq active
+        // cap: of two queued single-token requests, the interactive one
+        // admits on the first tick, the low one only on the second.
+        let mut eng = Engine::new(
+            EngineConfig {
+                max_active_seqs: 1,
+                kv_pool_bytes: None,
+                max_waiting: 8,
+                max_prefills_per_tick: 1,
+            },
+            cfg(),
+            Arc::new(Metrics::new()),
+        );
+        let mut models = TestModels::new(7);
+        let (mut b, b_rx, _) = gen_req(vec![1, 2], ActScheme::Fp, 1);
+        b.priority = 1;
+        let (mut c, c_rx, _) = gen_req(vec![3, 4], ActScheme::Fp, 1);
+        c.priority = 3;
+        eng.submit(b);
+        eng.submit(c);
+        eng.tick(&mut models);
+        assert!(c_rx.try_recv().is_ok(), "interactive request admits first");
+        assert!(b_rx.try_recv().is_err(), "low request must wait for the next tick");
+        eng.tick(&mut models);
+        assert!(b_rx.try_recv().is_ok());
+    }
+
+    #[test]
+    fn burn_mode_sheds_best_effort_and_serves_the_rest() {
+        use crate::obs::SloSpec;
+        let mut eng = engine(2, 4, None);
+        let mut models = TestModels::new(5);
+        // impossible TTFT target + a stream of violations: every window
+        // burns at 100x budget, far past the threshold
+        eng.metrics.slo.configure(SloSpec {
+            ttft_p99_us: 1,
+            inter_token_p99_us: 1_000_000,
+            error_rate: 0.5,
+            burn_threshold: 10.0,
+        });
+        for _ in 0..50 {
+            eng.metrics.ttft.record_us(10_000);
+        }
+        eng.tick(&mut models); // refreshes shed_mode from the burn report
+        let (mut a, a_rx, _) = gen_req(vec![1, 2], ActScheme::Fp, 2);
+        a.priority = 0;
+        eng.submit(a);
+        let err = a_rx.recv().expect("shed must respond").unwrap_err();
+        assert!(format!("{err}").contains("SLO burn rate"), "unexpected: {err}");
+        // normal-priority traffic still flows while shedding
+        let (b, b_rx, _) = gen_req(vec![3, 4], ActScheme::Fp, 2);
+        eng.submit(b);
+        while !eng.is_idle() {
+            eng.tick(&mut models);
+        }
+        assert!(b_rx.recv().unwrap().is_ok());
+        assert_eq!(eng.metrics.shed_by_priority[0].load(Relaxed), 1);
     }
 
     #[test]

@@ -9,8 +9,27 @@ use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::Arc;
 
 use crate::obs::prom::PromWriter;
-use crate::obs::{KernelTelemetry, LatencyTrack, SpanRing};
+use crate::obs::slo::SloInputs;
+use crate::obs::{KernelTelemetry, LatencyTrack, RollingCount, SloPolicy, SloReport, SpanRing};
 use crate::util::Json;
+
+/// Priority classes a request can carry on the wire: 0 = best-effort,
+/// 1 = low, 2 = normal (the default), 3 = interactive. Shedding always
+/// victimizes the lowest class first.
+pub const NUM_PRIORITIES: usize = 4;
+pub const PRIORITY_DEFAULT: u8 = 2;
+
+/// Flat wire keys for the per-priority shed counters — shared by worker
+/// `counters` and router `router_json` so fleet aggregation sums them.
+const SHED_KEYS: [&str; NUM_PRIORITIES] = ["shed_p0", "shed_p1", "shed_p2", "shed_p3"];
+
+fn shed_priority_fields(sheds: &[AtomicU64; NUM_PRIORITIES]) -> Vec<(&'static str, Json)> {
+    SHED_KEYS
+        .iter()
+        .zip(sheds)
+        .map(|(k, v)| (*k, Json::num(v.load(Ordering::Relaxed) as f64)))
+        .collect()
+}
 
 #[derive(Default)]
 pub struct Metrics {
@@ -73,6 +92,16 @@ pub struct Metrics {
     pub spans: SpanRing,
     /// Live quantization-kernel sampling (shared into activation sites).
     pub kernel: Arc<KernelTelemetry>,
+    // --- SLO burn-rate signals ---
+    /// Windowed successful-request events (SLO error-rate burn input).
+    pub ok_events: RollingCount,
+    /// Windowed failed-request events (SLO error-rate burn input).
+    pub err_events: RollingCount,
+    /// Requests shed at admission, by priority class (flat `shed_pN`
+    /// counters on the wire — lowest-priority-first shedding evidence).
+    pub shed_by_priority: [AtomicU64; NUM_PRIORITIES],
+    /// The live SLO spec (`--slo-*` flags), read on every evaluation.
+    pub slo: SloPolicy,
 }
 
 impl Metrics {
@@ -83,6 +112,86 @@ impl Metrics {
     /// Record one whole-request latency observation.
     pub fn record_latency(&self, micros: u64) {
         self.request_latency.record_us(micros);
+    }
+
+    /// A request finished ok — bumps the lifetime counter *and* the
+    /// windowed event stream the SLO error-rate burn reads. Every
+    /// `completed` increment must come through here so the windowed and
+    /// lifetime views can't drift.
+    pub fn mark_completed(&self) {
+        self.completed.fetch_add(1, Ordering::Relaxed);
+        self.ok_events.record();
+    }
+
+    /// A request failed — lifetime counter plus the windowed error
+    /// stream (the other half of the SLO error-rate burn).
+    pub fn mark_failed(&self) {
+        self.failed.fetch_add(1, Ordering::Relaxed);
+        self.err_events.record();
+    }
+
+    /// Count a shed against its priority class.
+    pub fn mark_shed(&self, priority: u8) {
+        let p = (priority as usize).min(NUM_PRIORITIES - 1);
+        self.shed_by_priority[p].fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// Evaluate the configured SLO spec over the live rolling signals.
+    pub fn slo_report(&self) -> SloReport {
+        self.slo.spec().evaluate(&SloInputs {
+            ttft: &self.ttft.rolling,
+            inter_token: &self.inter_token.rolling,
+            ok: &self.ok_events,
+            err: &self.err_events,
+        })
+    }
+
+    /// The `{"cmd":"slo"}` payload.
+    pub fn slo_json(&self) -> Json {
+        self.slo_report().json()
+    }
+
+    /// `{"cmd":"metrics_reset"}`: zero every *accumulating* counter and
+    /// latency track so a load-test run starts from clean telemetry.
+    /// Deliberately untouched: live gauges (queue depths, active
+    /// sequences, KV-pool occupancy/config), `artifacts_mounted` (a
+    /// startup fact), the span ring (trace history has its own
+    /// capacity-bounded lifecycle), kernel telemetry (paper-metric
+    /// accounting, not load telemetry), and the SLO spec itself.
+    pub fn reset(&self) {
+        for c in [
+            &self.submitted,
+            &self.completed,
+            &self.failed,
+            &self.batches,
+            &self.batched_requests,
+            &self.executions,
+            &self.engine_steps,
+            &self.engine_stepped_seqs,
+            &self.engine_decoded_tokens,
+            &self.engine_decode_time_us,
+            &self.engine_rejected,
+            &self.engine_cancelled,
+            &self.artifact_loads,
+            &self.artifact_load_us,
+            &self.static_calibrations,
+        ] {
+            c.store(0, Ordering::Relaxed);
+        }
+        for c in &self.shed_by_priority {
+            c.store(0, Ordering::Relaxed);
+        }
+        for t in [
+            &self.request_latency,
+            &self.ttft,
+            &self.inter_token,
+            &self.queue_wait,
+            &self.batch_forward,
+        ] {
+            t.reset();
+        }
+        self.ok_events.reset();
+        self.err_events.reset();
     }
 
     /// Mean request latency over the histogram's **own** observation
@@ -203,13 +312,15 @@ impl Metrics {
     /// field must stay a plain number for that summation to hold.
     ///
     /// `deadline_exceeded` and `shed` are router-level failures, so a
-    /// worker always reports 0 — they exist here so the aggregate shape
-    /// has the keys and the router can fold its own counts into the same
-    /// sum (the only keys intentionally shared with [`FleetMetrics`];
-    /// pinned by `fleet_and_counter_keys_only_collide_deliberately`).
+    /// worker always reports 0; `shed_p0`..`shed_p3` count priority
+    /// sheds that happen on *both* levels (engine admission and router
+    /// dispatch), so the router folds its own counts into the worker
+    /// sum. These are the only keys intentionally shared with
+    /// [`FleetMetrics`]; pinned by
+    /// `fleet_and_counter_keys_only_collide_deliberately`.
     pub fn counters_json(&self) -> Json {
         let load = |a: &AtomicU64| a.load(Ordering::Relaxed) as f64;
-        Json::obj(vec![
+        let mut fields = vec![
             ("submitted", Json::num(load(&self.submitted))),
             ("completed", Json::num(load(&self.completed))),
             ("failed", Json::num(load(&self.failed))),
@@ -220,7 +331,9 @@ impl Metrics {
             ("decoded_tokens", Json::num(load(&self.engine_decoded_tokens))),
             ("deadline_exceeded", Json::num(0.0)),
             ("shed", Json::num(0.0)),
-        ])
+        ];
+        fields.extend(shed_priority_fields(&self.shed_by_priority));
+        Json::obj(fields)
     }
 
     pub fn summary(&self) -> String {
@@ -330,6 +443,49 @@ impl Metrics {
             &[],
             self.spans.recorded() as f64,
         );
+        for (i, c) in self.shed_by_priority.iter().enumerate() {
+            let p = i.to_string();
+            w.write(
+                "cq_shed_by_priority_total",
+                "counter",
+                "Requests shed at admission, by priority class.",
+                &[("priority", &p)],
+                c.load(Ordering::Relaxed) as f64,
+            );
+        }
+        let slo = self.slo_report();
+        for win in &slo.windows {
+            let ws = win.window_s.to_string();
+            for (objective, burn) in [
+                ("ttft_p99", win.ttft_burn),
+                ("inter_token_p99", win.inter_token_burn),
+                ("error_rate", win.error_burn),
+            ] {
+                w.write(
+                    "cq_slo_burn_rate",
+                    "gauge",
+                    "Error-budget burn rate per objective and window.",
+                    &[("objective", objective), ("window_s", &ws)],
+                    burn,
+                );
+            }
+        }
+        for (which, on) in [("fast", slo.fast_alert), ("slow", slo.slow_alert)] {
+            w.write(
+                "cq_slo_alert",
+                "gauge",
+                "1 when the window class is burning past threshold.",
+                &[("window", which)],
+                if on { 1.0 } else { 0.0 },
+            );
+        }
+        w.write(
+            "cq_slo_shedding",
+            "gauge",
+            "1 when burn-rate shedding is active (fast AND slow alert).",
+            &[],
+            if slo.shedding { 1.0 } else { 0.0 },
+        );
         self.kernel.prom(w);
     }
 }
@@ -350,6 +506,9 @@ pub struct FleetMetrics {
     pub deadline_exceeded: AtomicU64,
     /// Requests shed because no healthy worker was available.
     pub shed: AtomicU64,
+    /// Router-level sheds by priority class (same `shed_pN` wire keys as
+    /// the worker counters, so aggregation folds both levels together).
+    pub shed_by_priority: [AtomicU64; NUM_PRIORITIES],
     /// Malformed client frames refused with a structured error.
     pub malformed: AtomicU64,
     /// Worker processes observed dead (crash or kill).
@@ -372,14 +531,45 @@ impl FleetMetrics {
 
     pub fn router_json(&self) -> Json {
         let load = |a: &AtomicU64| a.load(Ordering::Relaxed) as f64;
-        Json::obj(vec![
+        let mut fields = vec![
             ("requests", Json::num(load(&self.requests))),
             ("succeeded", Json::num(load(&self.succeeded))),
             ("retried", Json::num(load(&self.retried))),
             ("deadline_exceeded", Json::num(load(&self.deadline_exceeded))),
             ("shed", Json::num(load(&self.shed))),
             ("malformed", Json::num(load(&self.malformed))),
-        ])
+        ];
+        fields.extend(shed_priority_fields(&self.shed_by_priority));
+        Json::obj(fields)
+    }
+
+    /// Count a router-level shed against its priority class (alongside
+    /// the total `shed` counter, which the caller still bumps).
+    pub fn mark_shed(&self, priority: u8) {
+        let p = (priority as usize).min(NUM_PRIORITIES - 1);
+        self.shed_by_priority[p].fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// Zero the router/fleet counters (`{"cmd":"metrics_reset"}` fanned
+    /// out across the fleet). The span ring keeps its own lifecycle.
+    pub fn reset(&self) {
+        for c in [
+            &self.requests,
+            &self.succeeded,
+            &self.retried,
+            &self.deadline_exceeded,
+            &self.shed,
+            &self.malformed,
+            &self.worker_crashes,
+            &self.worker_restarts,
+            &self.worker_wedged,
+            &self.breaker_trips,
+        ] {
+            c.store(0, Ordering::Relaxed);
+        }
+        for c in &self.shed_by_priority {
+            c.store(0, Ordering::Relaxed);
+        }
     }
 
     pub fn fleet_json(&self) -> Json {
@@ -413,6 +603,16 @@ impl FleetMetrics {
         ];
         for (name, help, v) in counters {
             w.write(name, "counter", help, &[], v);
+        }
+        for (i, c) in self.shed_by_priority.iter().enumerate() {
+            let p = i.to_string();
+            w.write(
+                "cq_router_shed_by_priority_total",
+                "counter",
+                "Router-level sheds by priority class.",
+                &[("priority", &p)],
+                c.load(Ordering::Relaxed) as f64,
+            );
         }
         w.write(
             "cq_router_spans_recorded_total",
@@ -532,9 +732,11 @@ mod tests {
     }
 
     /// The fleet aggregation contract: `FleetMetrics` keys and the flat
-    /// worker `counters` keys may only collide on the two counters the
-    /// router deliberately folds into the worker sum (`deadline_exceeded`
-    /// and `shed`, always 0 on workers). Any other collision would
+    /// worker `counters` keys may only collide on the counters the
+    /// router deliberately folds into the worker sum —
+    /// `deadline_exceeded` and `shed` (router-level, always 0 on
+    /// workers) plus the per-priority `shed_pN` counters (real on both
+    /// levels, summed into one honest total). Any other collision would
     /// double-count in the aggregated `{"cmd":"metrics"}` view.
     #[test]
     fn fleet_and_counter_keys_only_collide_deliberately() {
@@ -553,9 +755,77 @@ mod tests {
             fleet_keys.iter().filter(|k| counters.contains(k)).collect();
         assert_eq!(
             collisions,
-            vec!["deadline_exceeded", "shed"],
+            vec!["deadline_exceeded", "shed", "shed_p0", "shed_p1", "shed_p2", "shed_p3"],
             "unexpected key collision between FleetMetrics and worker counters"
         );
+    }
+
+    #[test]
+    fn outcome_marks_feed_both_lifetime_and_windowed_views() {
+        let m = Metrics::new();
+        m.mark_completed();
+        m.mark_completed();
+        m.mark_failed();
+        assert_eq!(m.completed.load(Ordering::Relaxed), 2);
+        assert_eq!(m.failed.load(Ordering::Relaxed), 1);
+        assert_eq!(m.ok_events.window(60), 2);
+        assert_eq!(m.err_events.window(60), 1);
+    }
+
+    #[test]
+    fn shed_counters_are_flat_and_clamped() {
+        let m = Metrics::new();
+        m.mark_shed(0);
+        m.mark_shed(3);
+        m.mark_shed(200); // out-of-range clamps into the top class
+        let j = m.counters_json();
+        assert_eq!(j.get("shed_p0").and_then(|v| v.as_f64()), Some(1.0));
+        assert_eq!(j.get("shed_p1").and_then(|v| v.as_f64()), Some(0.0));
+        assert_eq!(j.get("shed_p3").and_then(|v| v.as_f64()), Some(2.0));
+    }
+
+    #[test]
+    fn slo_json_reports_windows_and_alerts() {
+        let m = Metrics::new();
+        m.ttft.record_us(1_000);
+        let j = m.slo_json();
+        assert!(j.get("spec").is_some());
+        assert_eq!(j.get("windows").and_then(|w| w.as_arr()).map(|w| w.len()), Some(3));
+        assert_eq!(j.get("shedding"), Some(&Json::Bool(false)));
+    }
+
+    #[test]
+    fn reset_clears_accumulators_but_keeps_gauges_and_spec() {
+        let m = Metrics::new();
+        m.submitted.store(5, Ordering::Relaxed);
+        m.mark_completed();
+        m.mark_shed(1);
+        m.record_latency(1_000);
+        m.kv_pool_slots.store(8, Ordering::Relaxed);
+        m.engine_active_seqs.store(2, Ordering::Relaxed);
+        let spec = m.slo.spec();
+        m.reset();
+        assert_eq!(m.submitted.load(Ordering::Relaxed), 0);
+        assert_eq!(m.completed.load(Ordering::Relaxed), 0);
+        assert_eq!(m.shed_by_priority[1].load(Ordering::Relaxed), 0);
+        assert_eq!(m.request_latency.total.count(), 0);
+        assert_eq!(m.ok_events.window(60), 0);
+        // gauges and configuration survive
+        assert_eq!(m.kv_pool_slots.load(Ordering::Relaxed), 8);
+        assert_eq!(m.engine_active_seqs.load(Ordering::Relaxed), 2);
+        assert_eq!(m.slo.spec(), spec);
+    }
+
+    #[test]
+    fn fleet_reset_zeroes_router_counters() {
+        let f = FleetMetrics::new();
+        f.requests.store(9, Ordering::Relaxed);
+        f.shed.store(2, Ordering::Relaxed);
+        f.mark_shed(0);
+        f.reset();
+        assert_eq!(f.requests.load(Ordering::Relaxed), 0);
+        assert_eq!(f.shed.load(Ordering::Relaxed), 0);
+        assert_eq!(f.shed_by_priority[0].load(Ordering::Relaxed), 0);
     }
 
     #[test]

@@ -23,6 +23,31 @@ pub use scheduler::{EvalCoordinator, EvalRequest, EvalResponse, RequestKind};
 pub use server::EvalServer;
 
 use crate::quant::registry::{SchemeId, StaticSpec};
+use crate::util::Json;
+
+/// Parse a `"priority"` wire field — shared by the worker server and the
+/// router so the two can never disagree about what a class name means.
+/// Accepts a plain number (clamped to the highest class) or a named
+/// class; returns `None` for anything else so callers can reject the
+/// request with a structured error instead of silently defaulting.
+pub fn parse_priority(v: &Json) -> Option<u8> {
+    match v {
+        Json::Num(n) if *n >= 0.0 && n.fract() == 0.0 => {
+            Some((*n as u64).min(metrics::NUM_PRIORITIES as u64 - 1) as u8)
+        }
+        Json::Str(s) => match s.as_str() {
+            "batch" | "best-effort" => Some(0),
+            "low" => Some(1),
+            "normal" => Some(2),
+            "high" | "interactive" => Some(3),
+            other => match other.parse::<u64>() {
+                Ok(n) => Some(n.min(metrics::NUM_PRIORITIES as u64 - 1) as u8),
+                Err(_) => None,
+            },
+        },
+        _ => None,
+    }
+}
 
 /// Activation-quantization scheme of a request — maps onto one AOT
 /// artifact plus its runtime scalar inputs. The static variants (from
@@ -225,6 +250,23 @@ mod tests {
         ] {
             assert!(s.static_spec().unwrap().0.id.is_static(), "{s:?}");
         }
+    }
+
+    #[test]
+    fn priority_parses_numbers_and_names_and_clamps() {
+        assert_eq!(parse_priority(&Json::num(0.0)), Some(0));
+        assert_eq!(parse_priority(&Json::num(3.0)), Some(3));
+        assert_eq!(parse_priority(&Json::num(9.0)), Some(3)); // clamped
+        assert_eq!(parse_priority(&Json::str("batch")), Some(0));
+        assert_eq!(parse_priority(&Json::str("low")), Some(1));
+        assert_eq!(parse_priority(&Json::str("normal")), Some(2));
+        assert_eq!(parse_priority(&Json::str("high")), Some(3));
+        assert_eq!(parse_priority(&Json::str("interactive")), Some(3));
+        assert_eq!(parse_priority(&Json::str("2")), Some(2));
+        assert_eq!(parse_priority(&Json::str("urgent")), None);
+        assert_eq!(parse_priority(&Json::num(1.5)), None);
+        assert_eq!(parse_priority(&Json::num(-1.0)), None);
+        assert_eq!(parse_priority(&Json::Null), None);
     }
 
     #[test]

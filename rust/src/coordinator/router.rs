@@ -24,6 +24,14 @@
 //! * `{"cmd": "trace", "id": …}` merges the router's dispatch spans for
 //!   that id with every healthy worker's spans (`"format": "chrome"`
 //!   returns merged Chrome `trace_event` JSON instead).
+//! * A `"priority"` field on any data request is normalized (0–3 or
+//!   "batch"/"low"/"normal"/"high") and injected into the relayed frame,
+//!   so worker-side lowest-priority-first shedding sees the same class
+//!   the router accounted under; router-side sheds count into
+//!   `shed_p<N>` alongside the total.
+//! * `{"cmd": "slo"}` fans out per-worker burn-rate reports;
+//!   `{"cmd": "metrics_reset"}` zeroes the router's counters and every
+//!   healthy worker's (load harnesses call it before a run).
 //!
 //! Retry safety: score and generate are deterministic (greedy decode,
 //! pinned by rust/tests/engine.rs), so re-running a request on another
@@ -225,6 +233,8 @@ impl Router {
                             self.aggregate_metrics()
                         }
                     }
+                    "slo" => self.fleet_slo(),
+                    "metrics_reset" => self.fleet_reset(),
                     "trace" => self.fleet_trace(&parsed),
                     other => error_json(&format!("unknown cmd '{other}'"), false),
                 };
@@ -265,6 +275,23 @@ impl Router {
         };
         let deadline = Instant::now() + deadline;
         let streaming = req.get("stream") == Some(&Json::Bool(true));
+        // Normalize the scheduling class up front: a malformed field is
+        // a deterministic request error, and the canonical numeric form
+        // is what gets relayed, so router and worker shed accounting can
+        // never disagree about a request's class.
+        let priority = match req.get("priority") {
+            Some(v) => match super::parse_priority(v) {
+                Some(p) => p,
+                None => {
+                    self.metrics.malformed.fetch_add(1, Ordering::SeqCst);
+                    let msg =
+                        "malformed request: 'priority' must be 0-3 or batch/low/normal/high";
+                    write_line(writer, &error_json(msg, false))?;
+                    return Ok(());
+                }
+            },
+            None => super::metrics::PRIORITY_DEFAULT,
+        };
         // Assign (or honor) the trace id and inject it into the relayed
         // frame so worker-side spans correlate with the router's.
         let trace = req
@@ -275,6 +302,7 @@ impl Router {
             Json::Obj(fields) => {
                 let mut fields = fields.clone();
                 fields.insert("trace".to_string(), Json::str(obs::trace_id_string(trace)));
+                fields.insert("priority".to_string(), Json::num(priority as f64));
                 format!("{}\n", Json::Obj(fields).render())
             }
             _ => format!("{}\n", raw_line.trim_end()),
@@ -305,6 +333,7 @@ impl Router {
                 if self.fleet.workers().iter().all(|w| w.breaker_open()) {
                     // nothing will ever come back without intervention
                     self.metrics.shed.fetch_add(1, Ordering::SeqCst);
+                    self.metrics.mark_shed(priority);
                     obs::log::warn(
                         "router",
                         "request shed: all circuit breakers open",
@@ -324,6 +353,7 @@ impl Router {
             };
             if attempts > self.cfg.max_retries {
                 self.metrics.shed.fetch_add(1, Ordering::SeqCst);
+                self.metrics.mark_shed(priority);
                 obs::log::warn(
                     "router",
                     "request shed: retry budget exhausted",
@@ -422,17 +452,24 @@ impl Router {
                 ("breaker_open", Json::Bool(status.breaker_open)),
             ]));
         }
-        // Workers report `deadline_exceeded` / `shed` as zero (those
-        // outcomes are decided in this tier), so folding the router's
-        // counts in keeps the aggregate honest without double counting.
-        let router_only = [
-            ("deadline_exceeded", self.metrics.deadline_exceeded.load(Ordering::Relaxed)),
-            ("shed", self.metrics.shed.load(Ordering::Relaxed)),
+        // Both tiers decide `shed` outcomes (the router on breaker/retry
+        // exhaustion, workers on queue-full/burn-rate admission), so the
+        // router's counts fold into the same keys the worker sum uses —
+        // the aggregate is total sheds across the tier, per class.
+        let mut router_only: Vec<(String, u64)> = vec![
+            (
+                "deadline_exceeded".to_string(),
+                self.metrics.deadline_exceeded.load(Ordering::Relaxed),
+            ),
+            ("shed".to_string(), self.metrics.shed.load(Ordering::Relaxed)),
         ];
+        for (p, c) in self.metrics.shed_by_priority.iter().enumerate() {
+            router_only.push((format!("shed_p{p}"), c.load(Ordering::Relaxed)));
+        }
         for (k, v) in router_only {
-            match aggregate.iter_mut().find(|(name, _)| name == k) {
+            match aggregate.iter_mut().find(|(name, _)| *name == k) {
                 Some((_, total)) => *total += v as f64,
-                None => aggregate.push((k.to_string(), v as f64)),
+                None => aggregate.push((k, v as f64)),
             }
         }
         let aggregate_obj =
@@ -473,6 +510,59 @@ impl Router {
             ("ok", Json::Bool(true)),
             ("content_type", Json::str("text/plain; version=0.0.4")),
             ("body", Json::str(body)),
+        ])
+    }
+
+    /// Fleet-wide `{"cmd": "slo"}`: each healthy worker's burn-rate
+    /// report, plus a fleet-level `shedding` bit (any worker shedding).
+    fn fleet_slo(&self) -> Json {
+        let req = Json::obj(vec![("cmd", Json::str("slo"))]);
+        let mut rows = Vec::new();
+        let mut any_shedding = false;
+        for worker in self.fleet.workers() {
+            let status = worker.status();
+            let Some(addr) = status.addr.filter(|_| status.healthy) else {
+                continue;
+            };
+            let Some(resp) = fetch_worker_line(addr, &req, self.cfg.metrics_timeout) else {
+                continue;
+            };
+            if let Some(slo) = resp.get("slo") {
+                any_shedding |= slo.get("shedding") == Some(&Json::Bool(true));
+                rows.push(Json::obj(vec![
+                    ("index", Json::num(status.index as f64)),
+                    ("slo", slo.clone()),
+                ]));
+            }
+        }
+        Json::obj(vec![
+            ("ok", Json::Bool(true)),
+            ("workers", Json::arr(rows)),
+            ("shedding", Json::Bool(any_shedding)),
+        ])
+    }
+
+    /// Fleet-wide `{"cmd": "metrics_reset"}`: zero the router's own
+    /// counters and fan the reset out to every healthy worker.
+    fn fleet_reset(&self) -> Json {
+        self.metrics.reset();
+        let req = Json::obj(vec![("cmd", Json::str("metrics_reset"))]);
+        let mut workers_reset = 0usize;
+        for worker in self.fleet.workers() {
+            let status = worker.status();
+            let Some(addr) = status.addr.filter(|_| status.healthy) else {
+                continue;
+            };
+            if let Some(resp) = fetch_worker_line(addr, &req, self.cfg.metrics_timeout) {
+                if resp.get("ok") == Some(&Json::Bool(true)) {
+                    workers_reset += 1;
+                }
+            }
+        }
+        Json::obj(vec![
+            ("ok", Json::Bool(true)),
+            ("reset", Json::Bool(true)),
+            ("workers_reset", Json::num(workers_reset as f64)),
         ])
     }
 

@@ -39,7 +39,7 @@ use anyhow::{anyhow, ensure, Context, Result};
 
 use super::batcher::{BatchAccumulator, ReadyBatch};
 use super::engine::{Engine, EngineConfig, EngineModels, GenEvent, GenRequest};
-use super::metrics::Metrics;
+use super::metrics::{Metrics, PRIORITY_DEFAULT};
 use super::{ActScheme, SchemeKey};
 use crate::corpus::CorpusGen;
 use crate::model::config::ModelConfig;
@@ -79,6 +79,10 @@ pub struct EvalRequest {
     /// Trace id (0 = untraced). Assigned at the router or supplied via the
     /// `"trace"` wire field; every stage span records under this id.
     pub trace: u64,
+    /// Scheduling class (0 = best-effort … 3 = interactive). Under
+    /// overload the engine sheds lowest-priority-first; within a class,
+    /// admission stays FIFO.
+    pub priority: u8,
 }
 
 impl EvalRequest {
@@ -90,6 +94,7 @@ impl EvalRequest {
             weight_set: weight_set.into(),
             kind: RequestKind::Score,
             trace: 0,
+            priority: PRIORITY_DEFAULT,
         }
     }
 
@@ -106,12 +111,19 @@ impl EvalRequest {
             weight_set: weight_set.into(),
             kind: RequestKind::Generate { max_new_tokens },
             trace: 0,
+            priority: PRIORITY_DEFAULT,
         }
     }
 
     /// Attach a trace id so per-stage spans record under it.
     pub fn with_trace(mut self, trace: u64) -> Self {
         self.trace = trace;
+        self
+    }
+
+    /// Set the scheduling class (clamped to the highest defined class).
+    pub fn with_priority(mut self, priority: u8) -> Self {
+        self.priority = priority.min(super::metrics::NUM_PRIORITIES as u8 - 1);
         self
     }
 
@@ -168,6 +180,7 @@ impl Pending {
             cancel: self.cancel,
             submitted: self.submitted,
             trace: self.req.trace,
+            priority: self.req.priority,
         }
     }
 }
@@ -721,7 +734,7 @@ fn respond(batch: ReadyBatch<Pending>, result: Result<Vec<EvalResponse>>, metric
     match result {
         Ok(responses) => {
             for (p, resp) in batch.requests.into_iter().zip(responses) {
-                metrics.completed.fetch_add(1, std::sync::atomic::Ordering::Relaxed);
+                metrics.mark_completed();
                 metrics.record_latency(p.submitted.elapsed().as_micros() as u64);
                 let _ = p.resp.send(Ok(resp));
             }
@@ -729,7 +742,7 @@ fn respond(batch: ReadyBatch<Pending>, result: Result<Vec<EvalResponse>>, metric
         Err(e) => {
             let msg = format!("batch execution failed: {e}");
             for p in batch.requests {
-                metrics.failed.fetch_add(1, std::sync::atomic::Ordering::Relaxed);
+                metrics.mark_failed();
                 let _ = p.resp.send(Err(anyhow!("{msg}")));
             }
         }

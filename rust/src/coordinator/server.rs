@@ -15,9 +15,16 @@
 //!           adding "stream": true streams the decode as it happens;
 //!           an optional "trace" field (hex string or integer) attaches a
 //!           trace id — per-stage spans record under it and the response
-//!           echoes it back
+//!           echoes it back;
+//!           an optional "priority" field (0–3 or "batch"/"low"/"normal"/
+//!           "high") sets the scheduling class — under overload the
+//!           engine sheds lowest-priority-first (default "normal")
 //!           {"cmd": "metrics"}   |   {"cmd": "ping"}
 //!           {"cmd": "metrics", "format": "prometheus"} → text exposition
+//!           {"cmd": "slo"} → SLO spec + multi-window burn-rate report
+//!           {"cmd": "metrics_reset"} → zero the accumulated counters and
+//!           latency windows (gauges and configuration survive) — load
+//!           harnesses call this before a run
 //!           {"cmd": "trace", "id": "<hex>"} → that trace's spans
 //!           ("id" absent/0 dumps the whole ring; "format": "chrome"
 //!           renders Chrome trace_event JSON instead)
@@ -240,7 +247,8 @@ fn error_response(e: &anyhow::Error) -> Json {
     let retryable = msg.contains("executor exited")
         || msg.contains("engine at capacity")
         || msg.contains("coordinator shut down")
-        || msg.contains("server at connection capacity");
+        || msg.contains("server at connection capacity")
+        || msg.contains("request shed");
     Json::obj(vec![
         ("ok", Json::Bool(false)),
         ("error", Json::str(msg)),
@@ -299,6 +307,13 @@ fn parse_request(req: &Json) -> Result<EvalRequest> {
     // optional trace id (hex string, integer, or any stable name — see
     // `obs::parse_trace_field`); 0 = untraced
     let trace = req.get("trace").and_then(obs::parse_trace_field).unwrap_or(0);
+    // optional scheduling class; a present-but-malformed field is a
+    // deterministic request error, not a silent "normal"
+    let priority = match req.get("priority") {
+        Some(v) => super::parse_priority(v)
+            .ok_or_else(|| anyhow!("'priority' must be 0-3 or batch/low/normal/high"))?,
+        None => super::metrics::PRIORITY_DEFAULT,
+    };
 
     // "max_new_tokens" present ⇒ greedy generation; absent ⇒ scoring.
     // Context overflow (prompt + max_new_tokens > n_ctx) is rejected by
@@ -307,9 +322,11 @@ fn parse_request(req: &Json) -> Result<EvalRequest> {
         let max_new = max_new
             .as_usize()
             .ok_or_else(|| anyhow!("'max_new_tokens' must be a non-negative integer"))?;
-        Ok(EvalRequest::generate(tokens, scheme, weight_set, max_new).with_trace(trace))
+        Ok(EvalRequest::generate(tokens, scheme, weight_set, max_new)
+            .with_trace(trace)
+            .with_priority(priority))
     } else {
-        Ok(EvalRequest::score(tokens, scheme, weight_set).with_trace(trace))
+        Ok(EvalRequest::score(tokens, scheme, weight_set).with_trace(trace).with_priority(priority))
     }
 }
 
@@ -399,7 +416,17 @@ pub fn handle_line(coordinator: &EvalCoordinator, line: &str) -> Result<Json> {
                     ("latency", coordinator.metrics.latency_json()),
                     // live quantization-kernel gauges (the paper's metric)
                     ("kernel", coordinator.metrics.kernel.json()),
+                    // SLO burn-rate report (what `repro top` panels on)
+                    ("slo", coordinator.metrics.slo_json()),
                 ]))
+            }
+            "slo" => Ok(Json::obj(vec![
+                ("ok", Json::Bool(true)),
+                ("slo", coordinator.metrics.slo_json()),
+            ])),
+            "metrics_reset" => {
+                coordinator.metrics.reset();
+                Ok(Json::obj(vec![("ok", Json::Bool(true)), ("reset", Json::Bool(true))]))
             }
             "trace" => {
                 let id = req.get("id").and_then(obs::parse_trace_field).unwrap_or(0);

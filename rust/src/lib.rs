@@ -39,6 +39,7 @@ pub mod coordinator;
 pub mod corpus;
 pub mod eval;
 pub mod exp;
+pub mod loadgen;
 pub mod model;
 pub mod obs;
 pub mod quant;

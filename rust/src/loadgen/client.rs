@@ -1,0 +1,268 @@
+//! The per-request client: build one wire frame from a scenario item,
+//! drive it over its own TCP connection, and time what the server can't
+//! see — client-observed TTFT, inter-token gaps, and total latency.
+//!
+//! Connection-per-request keeps the generator honest as an open-loop
+//! source: a slow response never pins a reused socket, and the server's
+//! connection cap is exercised the way a real fleet of clients would.
+//! All randomness flows from a [`SplitMix64`] seeded by the harness, so
+//! a run is reproducible token-for-token.
+
+use std::io::{BufRead, BufReader, Write};
+use std::net::TcpStream;
+use std::time::{Duration, Instant};
+
+use anyhow::{anyhow, Result};
+
+use super::scenario::{ReqKind, ScenarioItem};
+use crate::util::Json;
+
+/// SplitMix64: tiny, seedable, and statistically fine for load shapes —
+/// the same mixer the trace-id allocator uses.
+pub struct SplitMix64 {
+    state: u64,
+}
+
+impl SplitMix64 {
+    pub fn new(seed: u64) -> SplitMix64 {
+        SplitMix64 { state: seed }
+    }
+
+    pub fn next_u64(&mut self) -> u64 {
+        self.state = self.state.wrapping_add(0x9E37_79B9_7F4A_7C15);
+        let mut z = self.state;
+        z = (z ^ (z >> 30)).wrapping_mul(0xBF58_476D_1CE4_E5B9);
+        z = (z ^ (z >> 27)).wrapping_mul(0x94D0_49BB_1331_11EB);
+        z ^ (z >> 31)
+    }
+
+    /// Uniform in `[0, 1)` (53-bit mantissa).
+    pub fn next_f64(&mut self) -> f64 {
+        (self.next_u64() >> 11) as f64 / (1u64 << 53) as f64
+    }
+
+    /// Uniform integer in `[lo, hi]` (inclusive).
+    pub fn range(&mut self, lo: usize, hi: usize) -> usize {
+        if hi <= lo {
+            return lo;
+        }
+        lo + (self.next_u64() % (hi - lo + 1) as u64) as usize
+    }
+
+    /// Exponential inter-arrival gap for a Poisson process of `rate`
+    /// events/second.
+    pub fn exp_interval(&mut self, rate: f64) -> f64 {
+        let u = self.next_f64();
+        -(1.0 - u).ln() / rate.max(1e-9)
+    }
+}
+
+/// What one request looked like from the client's side of the socket.
+#[derive(Debug, Default)]
+pub struct RequestOutcome {
+    pub ok: bool,
+    /// The server shed the request (structured retryable shed error) —
+    /// accounted separately from hard errors.
+    pub shed: bool,
+    pub error: Option<String>,
+    /// First-token latency — streaming requests only (the one kind whose
+    /// TTFT a client can observe).
+    pub ttft_us: Option<u64>,
+    /// Gaps between consecutive streamed tokens.
+    pub inter_token_us: Vec<u64>,
+    /// Send-to-final-line latency.
+    pub total_us: u64,
+}
+
+/// Build the wire frame for one drawn request. Token ids stay below 64
+/// and lengths small, so every served config (synthetic or artifact)
+/// accepts them without context overflow.
+fn build_frame(item: &ScenarioItem, rng: &mut SplitMix64) -> Json {
+    let prompt_len = rng.range(item.prompt_len.0.max(1), item.prompt_len.1.max(1));
+    let tokens: Vec<Json> =
+        (0..prompt_len).map(|_| Json::num((1 + rng.next_u64() % 60) as f64)).collect();
+    let mut fields = vec![
+        ("tokens", Json::arr(tokens)),
+        ("scheme", Json::str("crossquant")),
+        ("alpha", Json::num(0.15)),
+        ("priority", Json::num(item.priority as f64)),
+    ];
+    if item.kind != ReqKind::Score {
+        let max_new = rng.range(item.max_new.0.max(1), item.max_new.1.max(1));
+        fields.push(("max_new_tokens", Json::num(max_new as f64)));
+    }
+    if item.kind == ReqKind::Stream {
+        fields.push(("stream", Json::Bool(true)));
+    }
+    Json::obj(fields)
+}
+
+/// Classify a structured error line: the admission-control shed paths
+/// (engine queue-full eviction, burn-rate shedding, router retry
+/// exhaustion wrapping a worker shed) all carry "request shed".
+fn is_shed(msg: &str) -> bool {
+    msg.contains("request shed")
+}
+
+/// Drive one request over a fresh connection. IO failures become
+/// `RequestOutcome` errors, never panics — under deliberate overload a
+/// torn connection is data, not a harness bug.
+pub fn run_request(addr: &str, item: &ScenarioItem, rng: &mut SplitMix64) -> RequestOutcome {
+    let frame = build_frame(item, rng);
+    let streaming = item.kind == ReqKind::Stream;
+    let t0 = Instant::now();
+    let mut outcome = RequestOutcome::default();
+    match drive(addr, &frame, streaming, t0, &mut outcome) {
+        Ok(()) => {}
+        Err(e) => {
+            let msg = format!("{e}");
+            outcome.ok = false;
+            outcome.shed = is_shed(&msg);
+            outcome.error = Some(msg);
+        }
+    }
+    outcome.total_us = t0.elapsed().as_micros() as u64;
+    outcome
+}
+
+fn drive(
+    addr: &str,
+    frame: &Json,
+    streaming: bool,
+    t0: Instant,
+    outcome: &mut RequestOutcome,
+) -> Result<()> {
+    let stream = TcpStream::connect(addr)?;
+    let timeout = Some(Duration::from_secs(30));
+    stream.set_read_timeout(timeout)?;
+    stream.set_write_timeout(timeout)?;
+    let mut writer = stream.try_clone()?;
+    writer.write_all(frame.render().as_bytes())?;
+    writer.write_all(b"\n")?;
+    let mut reader = BufReader::new(stream);
+    let mut line = String::new();
+    let mut last_token_at: Option<Instant> = None;
+    loop {
+        line.clear();
+        if reader.read_line(&mut line)? == 0 {
+            return Err(anyhow!("connection closed before a final response line"));
+        }
+        let resp = Json::parse(&line)?;
+        match resp.get("ok") {
+            None if streaming && resp.get("token").is_some() => {
+                let now = Instant::now();
+                match last_token_at {
+                    None => {
+                        outcome.ttft_us =
+                            Some(now.duration_since(t0).as_micros() as u64);
+                    }
+                    Some(prev) => {
+                        outcome
+                            .inter_token_us
+                            .push(now.duration_since(prev).as_micros() as u64);
+                    }
+                }
+                last_token_at = Some(now);
+            }
+            None => return Err(anyhow!("response frame without 'ok' field")),
+            Some(ok) => {
+                outcome.ok = ok == &Json::Bool(true);
+                if !outcome.ok {
+                    let msg = resp
+                        .get("error")
+                        .and_then(|e| e.as_str())
+                        .unwrap_or("unspecified server error")
+                        .to_string();
+                    outcome.shed = is_shed(&msg);
+                    outcome.error = Some(msg);
+                }
+                return Ok(());
+            }
+        }
+    }
+}
+
+/// Send one control frame (`{"cmd": ...}`) and parse the single reply
+/// line — how the harness resets metrics before a run and pulls the
+/// server-side histograms after.
+pub fn control(addr: &str, req: &Json) -> Result<Json> {
+    let stream = TcpStream::connect(addr)?;
+    let timeout = Some(Duration::from_secs(5));
+    stream.set_read_timeout(timeout)?;
+    stream.set_write_timeout(timeout)?;
+    let mut writer = stream.try_clone()?;
+    writer.write_all(req.render().as_bytes())?;
+    writer.write_all(b"\n")?;
+    let mut reader = BufReader::new(stream);
+    let mut line = String::new();
+    reader.read_line(&mut line)?;
+    Ok(Json::parse(&line)?)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn rng_is_deterministic_and_uniformish() {
+        let mut a = SplitMix64::new(42);
+        let mut b = SplitMix64::new(42);
+        for _ in 0..100 {
+            assert_eq!(a.next_u64(), b.next_u64());
+        }
+        let mut c = SplitMix64::new(7);
+        let mean =
+            (0..10_000).map(|_| c.next_f64()).sum::<f64>() / 10_000.0;
+        assert!((mean - 0.5).abs() < 0.02, "mean {mean}");
+        for _ in 0..100 {
+            let v = c.range(3, 9);
+            assert!((3..=9).contains(&v));
+        }
+        assert_eq!(c.range(5, 5), 5);
+    }
+
+    #[test]
+    fn poisson_gaps_average_the_inverse_rate() {
+        let mut rng = SplitMix64::new(1);
+        let rate = 50.0;
+        let mean =
+            (0..20_000).map(|_| rng.exp_interval(rate)).sum::<f64>() / 20_000.0;
+        assert!((mean - 1.0 / rate).abs() < 0.002, "mean gap {mean}");
+    }
+
+    #[test]
+    fn frames_carry_priority_and_respect_ranges() {
+        let mut rng = SplitMix64::new(9);
+        let item = ScenarioItem {
+            kind: ReqKind::Stream,
+            weight: 1.0,
+            priority: 3,
+            prompt_len: (2, 4),
+            max_new: (1, 2),
+        };
+        for _ in 0..50 {
+            let f = build_frame(&item, &mut rng);
+            assert_eq!(f.get("priority"), Some(&Json::num(3.0)));
+            assert_eq!(f.get("stream"), Some(&Json::Bool(true)));
+            let n = f.get("tokens").and_then(|t| t.as_arr()).unwrap().len();
+            assert!((2..=4).contains(&n));
+            let m = f.get("max_new_tokens").and_then(|m| m.as_usize()).unwrap();
+            assert!((1..=2).contains(&m));
+        }
+        let score = ScenarioItem { kind: ReqKind::Score, ..item };
+        let f = build_frame(&score, &mut rng);
+        assert!(f.get("max_new_tokens").is_none());
+        assert!(f.get("stream").is_none());
+    }
+
+    #[test]
+    fn shed_classification_matches_the_engine_messages() {
+        assert!(is_shed("request shed (priority 0): SLO burn rate over threshold"));
+        assert!(is_shed(
+            "worker error: request shed (priority 1): engine at capacity, 4 sequences \
+             active, admission queue full (2)"
+        ));
+        assert!(!is_shed("deadline exceeded"));
+        assert!(!is_shed("unknown weight set w2"));
+    }
+}

@@ -1,0 +1,365 @@
+//! Open-loop load-test harness (`repro loadtest`) — the client side of
+//! the telemetry loop.
+//!
+//! N client threads offer requests against a `serve` worker or a `route`
+//! tier on independent seeded-RNG Poisson schedules (superposition of N
+//! processes at rate/N each is a Poisson process at the full rate), so
+//! the *offered* load is fixed by the schedule, not by how fast the
+//! server answers — the open-loop property that makes overload visible
+//! instead of self-throttling around it. Arrivals that fall behind a
+//! slow server are issued late rather than dropped; the gap shows up as
+//! achieved < offered throughput, which is the measurement.
+//!
+//! Each run:
+//! 1. resets the server's telemetry (`{"cmd": "metrics_reset"}`) so
+//!    server-side lifetime histograms cover exactly this run,
+//! 2. offers the scenario mix for the configured duration, recording
+//!    client-side TTFT / inter-token / total-latency histograms (the
+//!    same log-bucketed [`Histogram`] the server uses) and per-priority
+//!    sent/ok/shed/error counts,
+//! 3. pulls `{"cmd": "metrics"}` and `{"cmd": "slo"}` back and
+//!    cross-checks the client's TTFT p99 against the server's histogram
+//!    p99 — the two views of one run must agree within tolerance or the
+//!    telemetry itself is lying.
+//!
+//! The emitted report (`BENCH_loadtest.json`) is the PR's benchmark
+//! artifact: offered vs achieved throughput, both latency views, the
+//! crosscheck verdict, and the priority/shedding matrix.
+
+pub mod client;
+pub mod scenario;
+
+pub use client::{control, RequestOutcome, SplitMix64};
+pub use scenario::{ReqKind, Scenario, ScenarioItem};
+
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+use anyhow::{anyhow, Context, Result};
+
+use crate::coordinator::metrics::NUM_PRIORITIES;
+use crate::obs::Histogram;
+use crate::util::Json;
+
+/// One `repro loadtest` run's knobs.
+pub struct LoadtestConfig {
+    /// Worker (`serve`) or router (`route`) endpoint.
+    pub addr: String,
+    pub duration_s: f64,
+    /// Total offered request rate (req/s), split across clients.
+    pub rate: f64,
+    pub clients: usize,
+    pub seed: u64,
+    pub scenario: Scenario,
+    /// Relative tolerance for the client-vs-server TTFT p99 crosscheck.
+    pub p99_tolerance: f64,
+    /// Send `{"cmd": "metrics_reset"}` before the run (on by default) so
+    /// server lifetime histograms cover exactly this run.
+    pub reset: bool,
+}
+
+/// Absolute crosscheck slack: below this the p99s are "equal" no matter
+/// the ratio — two quantizations of a sub-millisecond latency can differ
+/// by a whole bucket.
+const CROSSCHECK_FLOOR_US: f64 = 20_000.0;
+
+/// Shared accumulation across client threads — the same lock-free
+/// histograms the server records into, so both sides quantize alike.
+struct Stats {
+    ttft: Histogram,
+    inter_token: Histogram,
+    request: Histogram,
+    sent: [AtomicU64; NUM_PRIORITIES],
+    ok: [AtomicU64; NUM_PRIORITIES],
+    shed: [AtomicU64; NUM_PRIORITIES],
+    errors: [AtomicU64; NUM_PRIORITIES],
+}
+
+impl Stats {
+    fn new() -> Stats {
+        Stats {
+            ttft: Histogram::new(),
+            inter_token: Histogram::new(),
+            request: Histogram::new(),
+            sent: Default::default(),
+            ok: Default::default(),
+            shed: Default::default(),
+            errors: Default::default(),
+        }
+    }
+
+    fn sum(counters: &[AtomicU64; NUM_PRIORITIES]) -> u64 {
+        counters.iter().map(|c| c.load(Ordering::Relaxed)).sum()
+    }
+}
+
+/// Run one load test and build the `BENCH_loadtest.json` payload.
+pub fn run(cfg: &LoadtestConfig) -> Result<Json> {
+    let ping = control(&cfg.addr, &Json::obj(vec![("cmd", Json::str("ping"))]))
+        .with_context(|| format!("cannot reach {} (is serve/route up?)", cfg.addr))?;
+    if ping.get("ok") != Some(&Json::Bool(true)) {
+        return Err(anyhow!("{} did not answer ping", cfg.addr));
+    }
+    if cfg.reset {
+        let resp = control(&cfg.addr, &Json::obj(vec![("cmd", Json::str("metrics_reset"))]))
+            .context("metrics_reset failed")?;
+        if resp.get("ok") != Some(&Json::Bool(true)) {
+            return Err(anyhow!("metrics_reset rejected: {}", resp.render()));
+        }
+    }
+
+    let stats = Arc::new(Stats::new());
+    let scenario = Arc::new(cfg.scenario.clone());
+    let clients = cfg.clients.max(1);
+    let per_client_rate = cfg.rate / clients as f64;
+    let start = Instant::now();
+    let mut handles = Vec::with_capacity(clients);
+    for c in 0..clients {
+        let stats = stats.clone();
+        let scenario = scenario.clone();
+        let addr = cfg.addr.clone();
+        let duration_s = cfg.duration_s;
+        let seed = cfg.seed ^ (c as u64 + 1).wrapping_mul(0xA24B_AED4_963E_E407);
+        let handle = std::thread::Builder::new()
+            .name(format!("loadgen-{c}"))
+            .spawn(move || {
+                let mut rng = SplitMix64::new(seed);
+                let mut next = 0.0f64;
+                loop {
+                    next += rng.exp_interval(per_client_rate);
+                    if next > duration_s {
+                        break;
+                    }
+                    // a badly backlogged client stops offering rather
+                    // than stretching the run without bound; the deficit
+                    // is visible as achieved < offered
+                    if start.elapsed().as_secs_f64() > duration_s * 2.0 + 5.0 {
+                        break;
+                    }
+                    let target = Duration::from_secs_f64(next);
+                    if let Some(wait) = target.checked_sub(start.elapsed()) {
+                        std::thread::sleep(wait);
+                    }
+                    let item = scenario.pick(rng.next_f64());
+                    let p = (item.priority as usize).min(NUM_PRIORITIES - 1);
+                    stats.sent[p].fetch_add(1, Ordering::Relaxed);
+                    let outcome = client::run_request(&addr, item, &mut rng);
+                    stats.request.record(outcome.total_us);
+                    if let Some(ttft) = outcome.ttft_us {
+                        stats.ttft.record(ttft);
+                    }
+                    for gap in &outcome.inter_token_us {
+                        stats.inter_token.record(*gap);
+                    }
+                    if outcome.ok {
+                        stats.ok[p].fetch_add(1, Ordering::Relaxed);
+                    } else if outcome.shed {
+                        stats.shed[p].fetch_add(1, Ordering::Relaxed);
+                    } else {
+                        stats.errors[p].fetch_add(1, Ordering::Relaxed);
+                    }
+                }
+            })
+            .expect("spawn loadgen client");
+        handles.push(handle);
+    }
+    for h in handles {
+        let _ = h.join();
+    }
+    let elapsed_s = start.elapsed().as_secs_f64().max(1e-9);
+
+    let metrics = control(&cfg.addr, &Json::obj(vec![("cmd", Json::str("metrics"))]))
+        .context("fetching server metrics after the run")?;
+    let slo = control(&cfg.addr, &Json::obj(vec![("cmd", Json::str("slo"))]))
+        .context("fetching server SLO report after the run")?;
+
+    let server_ttft_p99 = server_ttft_p99_us(&metrics);
+    let client_ttft_p99 = stats.ttft.quantile_us(0.99) as f64;
+    let crosscheck = crosscheck_json(
+        client_ttft_p99,
+        stats.ttft.count(),
+        server_ttft_p99,
+        cfg.p99_tolerance,
+    );
+
+    let sent = Stats::sum(&stats.sent);
+    let ok = Stats::sum(&stats.ok);
+    let priorities: Vec<Json> = (0..NUM_PRIORITIES)
+        .map(|p| {
+            Json::obj(vec![
+                ("priority", Json::num(p as f64)),
+                ("sent", Json::num(stats.sent[p].load(Ordering::Relaxed) as f64)),
+                ("ok", Json::num(stats.ok[p].load(Ordering::Relaxed) as f64)),
+                ("shed", Json::num(stats.shed[p].load(Ordering::Relaxed) as f64)),
+                ("errors", Json::num(stats.errors[p].load(Ordering::Relaxed) as f64)),
+            ])
+        })
+        .collect();
+
+    // the flat counter object: a worker reports "counters", a router
+    // reports the fleet-summed "aggregate" under the same keys
+    let server_counters = metrics
+        .get("counters")
+        .or_else(|| metrics.get("aggregate"))
+        .cloned()
+        .unwrap_or(Json::Null);
+
+    Ok(Json::obj(vec![
+        (
+            "config",
+            Json::obj(vec![
+                ("addr", Json::str(cfg.addr.clone())),
+                ("duration_s", Json::num(cfg.duration_s)),
+                ("offered_rps", Json::num(cfg.rate)),
+                ("clients", Json::num(clients as f64)),
+                ("seed", Json::num(cfg.seed as f64)),
+                ("p99_tolerance", Json::num(cfg.p99_tolerance)),
+                ("reset", Json::Bool(cfg.reset)),
+                ("scenario", cfg.scenario.json()),
+            ]),
+        ),
+        ("elapsed_s", Json::num(elapsed_s)),
+        ("offered_rps", Json::num(cfg.rate)),
+        ("attempted_rps", Json::num(sent as f64 / elapsed_s)),
+        ("achieved_rps", Json::num(ok as f64 / elapsed_s)),
+        (
+            "client",
+            Json::obj(vec![
+                ("sent", Json::num(sent as f64)),
+                ("ok", Json::num(ok as f64)),
+                ("shed", Json::num(Stats::sum(&stats.shed) as f64)),
+                ("errors", Json::num(Stats::sum(&stats.errors) as f64)),
+                ("ttft", stats.ttft.json()),
+                ("inter_token", stats.inter_token.json()),
+                ("request", stats.request.json()),
+            ]),
+        ),
+        ("priorities", Json::arr(priorities)),
+        (
+            "server",
+            Json::obj(vec![
+                ("counters", server_counters),
+                ("slo", slo.get("slo").or_else(|| slo.get("workers")).cloned().unwrap_or(Json::Null)),
+                ("shedding", slo.get("shedding").cloned().unwrap_or(Json::Null)),
+            ]),
+        ),
+        ("crosscheck", crosscheck),
+    ]))
+}
+
+/// Server-side TTFT p99, handling both response shapes. A worker answers
+/// with its own `latency` block; a router answers with per-worker rows,
+/// so each healthy worker's histogram is fetched directly and the fleet
+/// p99 approximated as the worst worker's p99 (an upper bound — exact
+/// cross-worker quantile merging would need raw buckets on the wire, and
+/// the crosscheck tolerance absorbs the difference).
+fn server_ttft_p99_us(metrics: &Json) -> Option<f64> {
+    let own = |m: &Json| -> Option<f64> {
+        let total = m.get("latency")?.get("ttft")?.get("total")?;
+        if total.get("count")?.as_f64()? < 1.0 {
+            return None;
+        }
+        total.get("p99_us")?.as_f64()
+    };
+    if let Some(p99) = own(metrics) {
+        return Some(p99);
+    }
+    let workers = metrics.get("workers")?.as_arr()?;
+    let mut worst: Option<f64> = None;
+    for w in workers {
+        if w.get("healthy") != Some(&Json::Bool(true)) {
+            continue;
+        }
+        let Some(addr) = w.get("addr").and_then(|a| a.as_str()) else { continue };
+        let Ok(resp) = control(addr, &Json::obj(vec![("cmd", Json::str("metrics"))])) else {
+            continue;
+        };
+        if let Some(p99) = own(&resp) {
+            worst = Some(worst.map_or(p99, |b: f64| b.max(p99)));
+        }
+    }
+    worst
+}
+
+fn crosscheck_json(
+    client_p99_us: f64,
+    client_samples: u64,
+    server_p99_us: Option<f64>,
+    tolerance: f64,
+) -> Json {
+    let mut fields = vec![
+        ("ttft_p99_client_us", Json::num(client_p99_us)),
+        ("client_samples", Json::num(client_samples as f64)),
+        ("tolerance", Json::num(tolerance)),
+    ];
+    match server_p99_us {
+        Some(server) if client_samples > 0 => {
+            let rel_err = (client_p99_us - server).abs() / client_p99_us.max(server).max(1.0);
+            let within =
+                rel_err <= tolerance || (client_p99_us - server).abs() <= CROSSCHECK_FLOOR_US;
+            fields.push(("ttft_p99_server_us", Json::num(server)));
+            fields.push(("rel_err", Json::num(rel_err)));
+            fields.push(("within_tolerance", Json::Bool(within)));
+        }
+        _ => {
+            // nothing to compare: no streamed client samples, or the
+            // server saw no generation — report that honestly rather
+            // than a vacuous pass/fail
+            fields.push(("ttft_p99_server_us", Json::Null));
+            fields.push(("rel_err", Json::Null));
+            fields.push(("within_tolerance", Json::Null));
+        }
+    }
+    Json::obj(fields)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn crosscheck_agrees_within_tolerance_or_floor() {
+        let j = crosscheck_json(100_000.0, 50, Some(120_000.0), 0.5);
+        assert_eq!(j.get("within_tolerance"), Some(&Json::Bool(true)));
+        // 10x apart and far beyond the absolute floor: disagreement
+        let j = crosscheck_json(1_000_000.0, 50, Some(100_000.0), 0.5);
+        assert_eq!(j.get("within_tolerance"), Some(&Json::Bool(false)));
+        // sub-floor absolute gap passes even at a huge ratio
+        let j = crosscheck_json(15_000.0, 50, Some(1_000.0), 0.1);
+        assert_eq!(j.get("within_tolerance"), Some(&Json::Bool(true)));
+        // no samples: verdict is null, not a fake pass
+        let j = crosscheck_json(0.0, 0, Some(1_000.0), 0.5);
+        assert_eq!(j.get("within_tolerance"), Some(&Json::Null));
+    }
+
+    #[test]
+    fn server_p99_reads_the_worker_shape() {
+        let metrics = Json::obj(vec![(
+            "latency",
+            Json::obj(vec![(
+                "ttft",
+                Json::obj(vec![(
+                    "total",
+                    Json::obj(vec![
+                        ("count", Json::num(10.0)),
+                        ("p99_us", Json::num(42_000.0)),
+                    ]),
+                )]),
+            )]),
+        )]);
+        assert_eq!(server_ttft_p99_us(&metrics), Some(42_000.0));
+        // zero-count histograms yield no p99 rather than 0
+        let empty = Json::obj(vec![(
+            "latency",
+            Json::obj(vec![(
+                "ttft",
+                Json::obj(vec![(
+                    "total",
+                    Json::obj(vec![("count", Json::num(0.0)), ("p99_us", Json::num(0.0))]),
+                )]),
+            )]),
+        )]);
+        assert_eq!(server_ttft_p99_us(&empty), None);
+    }
+}

@@ -1,0 +1,267 @@
+//! Load-test scenarios: a weighted mix of request shapes.
+//!
+//! A scenario is a list of [`ScenarioItem`]s — request kind (score /
+//! generate / streaming generate), scheduling priority, and the prompt-
+//! and output-length ranges — with relative weights. The generator draws
+//! from the mix with a seeded RNG, so two runs with the same seed offer
+//! an identical request sequence.
+//!
+//! Wire format (`repro loadtest --scenario FILE`):
+//!
+//! ```json
+//! {"mix": [
+//!   {"kind": "stream",   "weight": 3, "priority": "normal",
+//!    "prompt_len": [4, 16], "max_new": [4, 12]},
+//!   {"kind": "score",    "weight": 1, "priority": "batch",
+//!    "prompt_len": [8, 24]}
+//! ]}
+//! ```
+//!
+//! `priority` takes the wire forms the server takes (0–3 or
+//! "batch"/"low"/"normal"/"high"); `max_new` is ignored for `score`.
+//! Presets `default` and `overload` cover the common cases without a
+//! file.
+
+use anyhow::{anyhow, bail, ensure, Result};
+
+use crate::coordinator::{self, metrics::PRIORITY_DEFAULT};
+use crate::util::Json;
+
+/// What one drawn request does.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum ReqKind {
+    /// Per-position NLL scoring (no decode).
+    Score,
+    /// Greedy generation, single response line.
+    Generate,
+    /// Greedy generation with `"stream": true` — the only kind whose
+    /// client-side TTFT and inter-token gaps are observable.
+    Stream,
+}
+
+impl ReqKind {
+    pub fn name(&self) -> &'static str {
+        match self {
+            ReqKind::Score => "score",
+            ReqKind::Generate => "generate",
+            ReqKind::Stream => "stream",
+        }
+    }
+
+    fn parse(s: &str) -> Result<ReqKind> {
+        Ok(match s {
+            "score" => ReqKind::Score,
+            "generate" => ReqKind::Generate,
+            "stream" => ReqKind::Stream,
+            other => bail!("unknown scenario kind '{other}' (score|generate|stream)"),
+        })
+    }
+}
+
+/// One weighted entry in the mix. Length ranges are inclusive.
+#[derive(Clone, Debug)]
+pub struct ScenarioItem {
+    pub kind: ReqKind,
+    pub weight: f64,
+    pub priority: u8,
+    pub prompt_len: (usize, usize),
+    pub max_new: (usize, usize),
+}
+
+impl ScenarioItem {
+    fn json(&self) -> Json {
+        Json::obj(vec![
+            ("kind", Json::str(self.kind.name())),
+            ("weight", Json::num(self.weight)),
+            ("priority", Json::num(self.priority as f64)),
+            (
+                "prompt_len",
+                Json::arr(vec![
+                    Json::num(self.prompt_len.0 as f64),
+                    Json::num(self.prompt_len.1 as f64),
+                ]),
+            ),
+            (
+                "max_new",
+                Json::arr(vec![
+                    Json::num(self.max_new.0 as f64),
+                    Json::num(self.max_new.1 as f64),
+                ]),
+            ),
+        ])
+    }
+}
+
+/// A weighted request mix.
+#[derive(Clone, Debug)]
+pub struct Scenario {
+    pub items: Vec<ScenarioItem>,
+}
+
+impl Scenario {
+    /// Built-in mixes: `default` (streaming-heavy, all normal priority —
+    /// the steady-state latency measurement) and `overload` (short, hot
+    /// requests across all four classes, best-effort-heavy — what the
+    /// shedding matrix is demonstrated on).
+    pub fn preset(name: &str) -> Result<Scenario> {
+        let item = |kind, weight, priority, prompt_len, max_new| ScenarioItem {
+            kind,
+            weight,
+            priority,
+            prompt_len,
+            max_new,
+        };
+        Ok(match name {
+            "default" => Scenario {
+                items: vec![
+                    item(ReqKind::Stream, 3.0, 2, (4, 16), (4, 12)),
+                    item(ReqKind::Generate, 1.0, 2, (4, 16), (4, 12)),
+                    item(ReqKind::Score, 1.0, 2, (8, 24), (0, 0)),
+                ],
+            },
+            "overload" => Scenario {
+                items: vec![
+                    item(ReqKind::Stream, 1.0, 3, (4, 8), (4, 8)),
+                    item(ReqKind::Generate, 2.0, 2, (4, 12), (4, 12)),
+                    item(ReqKind::Generate, 2.0, 1, (8, 16), (8, 16)),
+                    item(ReqKind::Generate, 3.0, 0, (8, 16), (8, 16)),
+                ],
+            },
+            other => bail!("unknown preset '{other}' (default|overload)"),
+        })
+    }
+
+    /// Parse the `{"mix": [...]}` wire format.
+    pub fn from_json(j: &Json) -> Result<Scenario> {
+        let mix = j
+            .get("mix")
+            .and_then(|m| m.as_arr())
+            .ok_or_else(|| anyhow!("scenario needs a 'mix' array"))?;
+        ensure!(!mix.is_empty(), "scenario 'mix' must not be empty");
+        let range = |item: &Json, key: &str, default: (usize, usize)| -> Result<(usize, usize)> {
+            match item.get(key).and_then(|r| r.as_arr()) {
+                None => Ok(default),
+                Some([lo, hi]) => {
+                    let lo = lo.as_usize().ok_or_else(|| anyhow!("bad '{key}' low bound"))?;
+                    let hi = hi.as_usize().ok_or_else(|| anyhow!("bad '{key}' high bound"))?;
+                    ensure!(lo <= hi, "'{key}' range [{lo}, {hi}] is inverted");
+                    Ok((lo, hi))
+                }
+                Some(_) => bail!("'{key}' must be a [lo, hi] pair"),
+            }
+        };
+        let items = mix
+            .iter()
+            .map(|item| {
+                let kind = ReqKind::parse(
+                    item.get("kind")
+                        .and_then(|k| k.as_str())
+                        .ok_or_else(|| anyhow!("scenario item needs a 'kind'"))?,
+                )?;
+                let weight = item.get("weight").and_then(|w| w.as_f64()).unwrap_or(1.0);
+                ensure!(weight.is_finite() && weight > 0.0, "item weight must be > 0");
+                let priority = match item.get("priority") {
+                    Some(v) => coordinator::parse_priority(v).ok_or_else(|| {
+                        anyhow!("bad 'priority' (0-3 or batch/low/normal/high)")
+                    })?,
+                    None => PRIORITY_DEFAULT,
+                };
+                let prompt_len = range(item, "prompt_len", (4, 16))?;
+                ensure!(prompt_len.0 >= 1, "'prompt_len' low bound must be >= 1");
+                Ok(ScenarioItem {
+                    kind,
+                    weight,
+                    priority,
+                    prompt_len,
+                    max_new: range(item, "max_new", (4, 12))?,
+                })
+            })
+            .collect::<Result<Vec<_>>>()?;
+        Ok(Scenario { items })
+    }
+
+    /// Load a scenario file.
+    pub fn from_file(path: &std::path::Path) -> Result<Scenario> {
+        let text = std::fs::read_to_string(path)
+            .map_err(|e| anyhow!("reading scenario {}: {e}", path.display()))?;
+        Scenario::from_json(&Json::parse(&text)?)
+    }
+
+    /// Weighted draw: map `u ∈ [0, 1)` onto the mix.
+    pub fn pick(&self, u: f64) -> &ScenarioItem {
+        let total: f64 = self.items.iter().map(|i| i.weight).sum();
+        let mut target = u.clamp(0.0, 1.0) * total;
+        for item in &self.items {
+            if target < item.weight {
+                return item;
+            }
+            target -= item.weight;
+        }
+        self.items.last().expect("scenario mix is never empty")
+    }
+
+    /// Echo of the mix for the result file's `config` block.
+    pub fn json(&self) -> Json {
+        Json::obj(vec![("mix", Json::arr(self.items.iter().map(|i| i.json()).collect()))])
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn presets_parse_and_pick_covers_the_mix() {
+        for name in ["default", "overload"] {
+            let s = Scenario::preset(name).unwrap();
+            assert!(!s.items.is_empty());
+            // both edges of the draw space land on valid items
+            assert!(s.pick(0.0).weight > 0.0);
+            assert!(s.pick(0.999_999).weight > 0.0);
+        }
+        assert!(Scenario::preset("nope").is_err());
+    }
+
+    #[test]
+    fn overload_preset_skews_toward_best_effort() {
+        let s = Scenario::preset("overload").unwrap();
+        let w = |p: u8| -> f64 {
+            s.items.iter().filter(|i| i.priority == p).map(|i| i.weight).sum()
+        };
+        assert!(w(0) > w(3), "overload must offer more best-effort than interactive");
+        assert!(w(3) > 0.0, "overload still carries interactive traffic to protect");
+    }
+
+    #[test]
+    fn wire_format_round_trips() {
+        let text = r#"{"mix": [
+            {"kind": "stream", "weight": 2, "priority": "high",
+             "prompt_len": [2, 6], "max_new": [1, 3]},
+            {"kind": "score", "priority": 0}
+        ]}"#;
+        let s = Scenario::from_json(&Json::parse(text).unwrap()).unwrap();
+        assert_eq!(s.items.len(), 2);
+        assert_eq!(s.items[0].kind, ReqKind::Stream);
+        assert_eq!(s.items[0].priority, 3);
+        assert_eq!(s.items[0].prompt_len, (2, 6));
+        assert_eq!(s.items[1].kind, ReqKind::Score);
+        assert_eq!(s.items[1].priority, 0);
+        assert_eq!(s.items[1].weight, 1.0); // default
+        // a pure-u draw at 0 hits the heavier first item
+        assert_eq!(s.pick(0.0).kind, ReqKind::Stream);
+    }
+
+    #[test]
+    fn malformed_scenarios_are_rejected() {
+        for bad in [
+            r#"{"mix": []}"#,
+            r#"{"nope": 1}"#,
+            r#"{"mix": [{"kind": "fly"}]}"#,
+            r#"{"mix": [{"kind": "score", "priority": "urgent"}]}"#,
+            r#"{"mix": [{"kind": "score", "prompt_len": [9, 2]}]}"#,
+            r#"{"mix": [{"kind": "score", "weight": 0}]}"#,
+        ] {
+            assert!(Scenario::from_json(&Json::parse(bad).unwrap()).is_err(), "{bad}");
+        }
+    }
+}

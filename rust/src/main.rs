@@ -12,6 +12,7 @@
 //!   route                fault-tolerant tier: supervised worker fleet with
 //!                        health checks, deadlines, retry/failover
 //!   top                  live metrics summary of a serve/route endpoint
+//!   loadtest             open-loop Poisson load generator + SLO crosscheck
 //!   reproduce <id>       regenerate a paper table/figure (fig1 … tab5, all)
 //!
 //! Global flags: --artifacts <dir> --synthetic --eval-sequences N
@@ -73,6 +74,16 @@ commands:
         [--kernel-threshold F] warn when a site's kernel fraction crosses F
                                (default 0.19 — the paper's OPT bound;
                                LLaMA-family sites should sit near 0.01)
+        [--prefill-per-tick N] prefill admissions per engine tick (default 4)
+                               — the prefill/decode fairness knob: bounds how
+                               many queued prompts one tick may admit so long
+                               prefills cannot starve decode progress
+        [--slo-ttft-ms MS] [--slo-intertoken-ms MS] [--slo-error-rate F]
+        [--slo-burn F]         SLO targets for error-budget burn-rate
+                               monitoring (defaults 500 / 200 / 0.01 / 10.0);
+                               {\"cmd\": \"slo\"} reports per-window burn,
+                               and a sustained burn over the threshold sheds
+                               priority-0 requests at admission
         [--worker]             fleet-worker mode: bind --addr (use port 0),
                                print CROSSQUANT_WORKER_READY addr=… on stdout,
                                honour a CROSSQUANT_FAULT injection plan
@@ -88,11 +99,27 @@ commands:
                                {\"cmd\": \"metrics\"} aggregates the fleet
         [--heartbeat-ms MS] [--breaker-crashes N] [--ready-timeout-s S]
                                supervision knobs (defaults 250 / 5 / 30)
-        [--kernel-telemetry] [--kernel-threshold F]
-                               forwarded to every worker
+        [--kernel-telemetry] [--kernel-threshold F] [--prefill-per-tick N]
+        [--slo-ttft-ms MS] [--slo-intertoken-ms MS] [--slo-error-rate F]
+        [--slo-burn F]         forwarded to every worker; requests carry an
+                               optional \"priority\" (0-3 or batch/low/
+                               normal/high, default normal) — overloaded
+                               tiers shed lowest-priority-first
   top [--addr HOST:PORT]       live metrics summary of a serve or route
       [--interval-ms N]        endpoint (default 127.0.0.1:8472, refresh
-      [--once]                 every 1000 ms; --once prints one snapshot)
+      [--once]                 every 1000 ms; --once prints one snapshot),
+                               including the SLO burn-rate panel
+  loadtest [--addr HOST:PORT]  open-loop load generator against a serve or
+      [--duration-s S]         route endpoint (default 127.0.0.1:8472):
+      [--rate RPS]             N clients offer a seeded-RNG Poisson request
+      [--clients N]            mix (default 20 req/s over 8 clients, 10 s),
+      [--preset default|overload]
+      [--scenario FILE]        measure client-side TTFT / inter-token /
+      [--out PATH]             total-latency histograms + per-priority
+      [--p99-tolerance F]      shed/error counts, cross-check client p99
+      [--no-reset]             against the server histograms (tolerance
+                               default 0.5), and write BENCH_loadtest.json
+                               (--no-reset skips the pre-run metrics_reset)
   bench-trend [--out PATH]     measure every served scheme (GOP/s, decode
                                tok/s, NLL) and append the rows to the
                                checked-in trend file
@@ -166,8 +193,10 @@ fn main() -> Result<()> {
         print!("{USAGE}");
         return Ok(());
     }
-    let args =
-        Args::parse(&argv, &["synthetic", "tasks", "help", "worker", "kernel-telemetry", "once"])?;
+    let args = Args::parse(
+        &argv,
+        &["synthetic", "tasks", "help", "worker", "kernel-telemetry", "once", "no-reset"],
+    )?;
     if args.flag("help") {
         print!("{USAGE}");
         return Ok(());
@@ -204,6 +233,7 @@ fn main() -> Result<()> {
         "serve" => serve(&args, &args.get_or("addr", "127.0.0.1:8471")),
         "route" => route(&args, &args.get_or("addr", "127.0.0.1:8472")),
         "top" => top(&args, &args.get_or("addr", "127.0.0.1:8472")),
+        "loadtest" => loadtest(&args, &args.get_or("addr", "127.0.0.1:8472")),
         "bench-trend" => bench_trend(&args),
         "reproduce" => {
             let id = args
@@ -543,6 +573,7 @@ fn serve(args: &Args, addr: &str) -> Result<()> {
             Some(_) => Some(args.num::<usize>("kv-pool-mb", 0)? * 1024 * 1024),
         },
         max_waiting: args.num("admission-queue", defaults.max_waiting)?,
+        max_prefills_per_tick: args.num("prefill-per-tick", defaults.max_prefills_per_tick)?,
     };
     let max_connections = args.num("max-connections", 256usize)?;
     let idle_secs = args.num("idle-timeout-s", DEFAULT_IDLE_TIMEOUT_SECS)?;
@@ -564,6 +595,15 @@ fn serve(args: &Args, addr: &str) -> Result<()> {
     // stride 8: sample every 8th dynamic-scheme forward per site — cheap
     // enough to leave on, dense enough to catch a drifting site fast
     coordinator.metrics.kernel.configure(kernel_telemetry, kernel_threshold, 8);
+    let slo_defaults = crossquant::obs::SloSpec::default();
+    let slo_spec = crossquant::obs::SloSpec {
+        ttft_p99_us: args.num("slo-ttft-ms", slo_defaults.ttft_p99_us / 1000)? * 1000,
+        inter_token_p99_us: args.num("slo-intertoken-ms", slo_defaults.inter_token_p99_us / 1000)?
+            * 1000,
+        error_rate: args.num("slo-error-rate", slo_defaults.error_rate)?,
+        burn_threshold: args.num("slo-burn", slo_defaults.burn_threshold)?,
+    };
+    coordinator.metrics.slo.configure(slo_spec);
     let listener = std::net::TcpListener::bind(addr)?;
     if worker {
         // the supervisor parses this exact line for the dispatch address
@@ -601,6 +641,14 @@ fn serve(args: &Args, addr: &str) -> Result<()> {
             "  observe:  add \"trace\": \"my-request\" to any request, then \
              '{{\"cmd\": \"trace\", \"id\": \"my-request\"}}' for its spans; \
              {{\"cmd\": \"metrics\"}} (+ \"format\": \"prometheus\") for telemetry"
+        );
+        println!(
+            "  slo:      ttft p99 <= {}ms, inter-token p99 <= {}ms, errors <= {:.2}% \
+             (shed priority 0 at burn >= {}x) — {{\"cmd\": \"slo\"}} for the burn report",
+            slo_spec.ttft_p99_us / 1000,
+            slo_spec.inter_token_p99_us / 1000,
+            slo_spec.error_rate * 100.0,
+            slo_spec.burn_threshold
         );
         if kernel_telemetry {
             println!(
@@ -667,6 +715,11 @@ fn route(args: &Args, addr: &str) -> Result<()> {
         "max-connections",
         "idle-timeout-s",
         "kernel-threshold",
+        "prefill-per-tick",
+        "slo-ttft-ms",
+        "slo-intertoken-ms",
+        "slo-error-rate",
+        "slo-burn",
     ] {
         if let Some(v) = args.get(flag) {
             worker_args.push(format!("--{flag}"));
@@ -742,7 +795,12 @@ fn top(args: &Args, addr: &str) -> Result<()> {
     let once = args.flag("once");
     loop {
         let out = match fetch_metrics(addr) {
-            Ok(resp) => render_top(&resp, addr),
+            // the slo fetch is best-effort: an old worker without the
+            // command still renders everything else
+            Ok(resp) => {
+                let slo = fetch_cmd(addr, "slo").ok();
+                render_top(&resp, slo.as_ref(), addr)
+            }
             Err(e) => format!("repro top — {addr}\n  (metrics fetch failed: {e})\n"),
         };
         if once {
@@ -757,13 +815,18 @@ fn top(args: &Args, addr: &str) -> Result<()> {
 }
 
 fn fetch_metrics(addr: &str) -> Result<Json> {
+    fetch_cmd(addr, "metrics")
+}
+
+fn fetch_cmd(addr: &str, cmd: &str) -> Result<Json> {
     use std::io::{BufRead, BufReader, Write as _};
     let stream = std::net::TcpStream::connect(addr)?;
     let timeout = Some(std::time::Duration::from_secs(2));
     stream.set_read_timeout(timeout)?;
     stream.set_write_timeout(timeout)?;
     let mut writer = stream.try_clone()?;
-    writer.write_all(b"{\"cmd\": \"metrics\"}\n")?;
+    writer.write_all(Json::obj(vec![("cmd", Json::str(cmd))]).render().as_bytes())?;
+    writer.write_all(b"\n")?;
     let mut line = String::new();
     BufReader::new(stream).read_line(&mut line)?;
     Json::parse(&line)
@@ -780,7 +843,7 @@ fn fmt_us(us: f64) -> String {
     }
 }
 
-fn render_top(resp: &Json, addr: &str) -> String {
+fn render_top(resp: &Json, slo: Option<&Json>, addr: &str) -> String {
     use std::fmt::Write as _;
     let mut out = String::new();
     let _ = writeln!(out, "repro top — {addr}");
@@ -865,6 +928,19 @@ fn render_top(resp: &Json, addr: &str) -> String {
             );
         }
     }
+    // SLO panel: a worker answers {"slo": report}, a router fans out and
+    // answers {"workers": [{index, slo}], "shedding"}
+    if let Some(slo) = slo {
+        if let Some(report) = slo.get("slo") {
+            render_slo_report(&mut out, report, None);
+        } else if let Some(Json::Arr(rows)) = slo.get("workers") {
+            for row in rows {
+                if let Some(report) = row.get("slo") {
+                    render_slo_report(&mut out, report, Some(num(row, "index") as usize));
+                }
+            }
+        }
+    }
     if let Some(kernel) = resp.get("kernel") {
         if let Some(Json::Arr(sites)) = kernel.get("sites") {
             if !sites.is_empty() {
@@ -891,6 +967,107 @@ fn render_top(resp: &Json, addr: &str) -> String {
         }
     }
     out
+}
+
+/// One SLO burn-rate block: the spec line, then one line per window with
+/// its fast/slow burn and alert state.
+fn render_slo_report(out: &mut String, report: &Json, worker: Option<usize>) {
+    use std::fmt::Write as _;
+    let num = |o: &Json, k: &str| o.get(k).and_then(|v| v.as_f64()).unwrap_or(0.0);
+    let spec = report.get("spec").cloned().unwrap_or(Json::Null);
+    let label = worker.map_or_else(|| "slo".to_string(), |i| format!("slo w{i}"));
+    let shedding = report.get("shedding") == Some(&Json::Bool(true));
+    let _ = writeln!(
+        out,
+        "{label:<9} ttft p99<={}  itl p99<={}  err<={:.2}%  alert at burn>={:.0}x{}",
+        fmt_us(num(&spec, "ttft_p99_us")),
+        fmt_us(num(&spec, "inter_token_p99_us")),
+        num(&spec, "error_rate") * 100.0,
+        num(&spec, "burn_threshold"),
+        if shedding { "  SHEDDING" } else { "" },
+    );
+    if let Some(Json::Arr(windows)) = report.get("windows") {
+        for w in windows {
+            let alerting = w.get("alerting") == Some(&Json::Bool(true));
+            let _ = writeln!(
+                out,
+                "  w{:<3.0}s  burn {:7.2}  (ttft {:.2}  itl {:.2}  err {:.2})  n {:.0}{}",
+                num(w, "window_s"),
+                num(w, "max_burn"),
+                num(w, "ttft_burn"),
+                num(w, "inter_token_burn"),
+                num(w, "error_burn"),
+                num(w, "requests"),
+                if alerting { "  ALERT" } else { "" },
+            );
+        }
+    }
+}
+
+/// Open-loop load test against a live `serve`/`route` endpoint: offer a
+/// seeded Poisson request mix, then write the offered-vs-achieved
+/// throughput, client-side latency histograms, per-priority shed matrix,
+/// and the client-vs-server p99 crosscheck to BENCH_loadtest.json.
+fn loadtest(args: &Args, addr: &str) -> Result<()> {
+    use crossquant::loadgen::{self, LoadtestConfig, Scenario};
+
+    let scenario = match args.get("scenario") {
+        Some(path) => Scenario::from_file(Path::new(path))?,
+        None => Scenario::preset(&args.get_or("preset", "default"))?,
+    };
+    let cfg = LoadtestConfig {
+        addr: addr.to_string(),
+        duration_s: args.num("duration-s", 10.0f64)?,
+        rate: args.num("rate", 20.0f64)?,
+        clients: args.num("clients", 8usize)?,
+        seed: args.num("seed", 1u64)?,
+        scenario,
+        p99_tolerance: args.num("p99-tolerance", 0.5f64)?,
+        reset: !args.flag("no-reset"),
+    };
+    ensure!(cfg.duration_s > 0.0, "--duration-s must be > 0");
+    ensure!(cfg.rate > 0.0, "--rate must be > 0");
+    println!(
+        "offering {:.1} req/s across {} clients to {} for {:.0}s (seed {})",
+        cfg.rate, cfg.clients, cfg.addr, cfg.duration_s, cfg.seed
+    );
+    let report = loadgen::run(&cfg)?;
+    let out = PathBuf::from(args.get_or("out", "BENCH_loadtest.json"));
+    std::fs::write(&out, report.render_pretty())?;
+
+    let num = |o: &Json, k: &str| o.get(k).and_then(|v| v.as_f64()).unwrap_or(0.0);
+    let client = report.get("client").cloned().unwrap_or(Json::Null);
+    let ttft = client.get("ttft").cloned().unwrap_or(Json::Null);
+    println!(
+        "offered {:.1} rps, achieved {:.1} rps  (sent {:.0}, ok {:.0}, shed {:.0}, errors {:.0})",
+        num(&report, "offered_rps"),
+        num(&report, "achieved_rps"),
+        num(&client, "sent"),
+        num(&client, "ok"),
+        num(&client, "shed"),
+        num(&client, "errors"),
+    );
+    println!(
+        "client ttft  p50 {}  p95 {}  p99 {}  ({:.0} streamed samples)",
+        fmt_us(num(&ttft, "p50_us")),
+        fmt_us(num(&ttft, "p95_us")),
+        fmt_us(num(&ttft, "p99_us")),
+        num(&ttft, "count"),
+    );
+    if let Some(check) = report.get("crosscheck") {
+        match check.get("within_tolerance") {
+            Some(Json::Bool(ok)) => println!(
+                "crosscheck  client p99 {} vs server p99 {}  rel_err {:.3}  -> {}",
+                fmt_us(num(check, "ttft_p99_client_us")),
+                fmt_us(num(check, "ttft_p99_server_us")),
+                num(check, "rel_err"),
+                if *ok { "AGREE" } else { "DISAGREE" },
+            ),
+            _ => println!("crosscheck  skipped (no streamed samples on one side)"),
+        }
+    }
+    println!("wrote {}", out.display());
+    Ok(())
 }
 
 /// Measure every served scheme on a small fixed synthetic model —
@@ -980,6 +1157,9 @@ fn bench_trend(args: &Args) -> Result<()> {
             ("gops", Json::num(gops)),
             ("decode_tok_s", Json::num(tok_s)),
             ("nll", Json::num(nll)),
+            // rows this binary measured are stamped; the two hand-seeded
+            // offline-estimate rows in the checked-in file carry false
+            ("measured", Json::Bool(true)),
         ]));
     }
     // a trend run that appends nothing is a broken registry or a broken

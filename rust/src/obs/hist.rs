@@ -180,6 +180,31 @@ impl Histogram {
         self.buckets.iter().map(|b| b.load(Ordering::Relaxed)).collect()
     }
 
+    /// Observations above `threshold_us`, at bucket granularity: only
+    /// buckets entirely past the threshold count, so observations sharing
+    /// the threshold's own bucket are not counted — a conservative
+    /// under-count of at most one bucket's worth (≤ ~6% of the
+    /// threshold), the same error bound as the quantiles. Overflowed
+    /// observations always count as above.
+    pub fn count_above(&self, threshold_us: u64) -> u64 {
+        let mut above = self.overflow.load(Ordering::Relaxed);
+        let first = bucket_index(threshold_us) + 1;
+        for b in self.buckets.iter().skip(first) {
+            above += b.load(Ordering::Relaxed);
+        }
+        above
+    }
+
+    /// Fraction of observations above `threshold_us` (0 when empty) —
+    /// the violation fraction the SLO burn-rate math consumes.
+    pub fn fraction_above(&self, threshold_us: u64) -> f64 {
+        let n = self.count();
+        if n == 0 {
+            return 0.0;
+        }
+        self.count_above(threshold_us) as f64 / n as f64
+    }
+
     /// Full summary object: count, mean, the standard quantile ladder,
     /// max, and the explicit overflow count.
     pub fn json(&self) -> Json {
@@ -269,6 +294,85 @@ impl Rolling {
         }
         out
     }
+
+    /// Forget every slot (`{"cmd":"metrics_reset"}`): windows computed
+    /// afterwards see only observations recorded after the reset.
+    pub fn reset(&self) {
+        for slot in &self.slots {
+            slot.epoch.store(u64::MAX, Ordering::Release);
+            slot.hist.reset();
+        }
+    }
+}
+
+/// Rolling per-second *event* counter — the histogram-free sibling of
+/// [`Rolling`] for signals where only the windowed count matters
+/// (succeeded/failed request streams feeding the SLO error-rate burn).
+/// Same slot-recycling discipline, same `_at` injected-clock test hooks.
+pub struct RollingCount {
+    slots: Vec<CountSlot>,
+}
+
+struct CountSlot {
+    epoch: AtomicU64,
+    count: AtomicU64,
+}
+
+impl Default for RollingCount {
+    fn default() -> Self {
+        RollingCount::new()
+    }
+}
+
+impl RollingCount {
+    pub fn new() -> RollingCount {
+        RollingCount {
+            slots: (0..SLOTS)
+                .map(|_| CountSlot { epoch: AtomicU64::new(u64::MAX), count: AtomicU64::new(0) })
+                .collect(),
+        }
+    }
+
+    pub fn record(&self) {
+        self.record_at(super::now_secs());
+    }
+
+    /// Count one event at an explicit epoch second. Recycling a stale
+    /// slot is racy the same way [`Rolling::record_at`] is — a few
+    /// in-flight events can vanish from the window, never double-count.
+    pub fn record_at(&self, epoch_s: u64) {
+        let slot = &self.slots[(epoch_s % SLOTS as u64) as usize];
+        if slot.epoch.load(Ordering::Acquire) != epoch_s {
+            slot.count.store(0, Ordering::Relaxed);
+            slot.epoch.store(epoch_s, Ordering::Release);
+        }
+        slot.count.fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// Events in the last `window_s` seconds (now inclusive).
+    /// `window_s` must be < [`SLOTS`].
+    pub fn window(&self, window_s: u64) -> u64 {
+        self.window_at(super::now_secs(), window_s)
+    }
+
+    pub fn window_at(&self, now_s: u64, window_s: u64) -> u64 {
+        debug_assert!((window_s as usize) < SLOTS);
+        let mut total = 0u64;
+        for slot in &self.slots {
+            let e = slot.epoch.load(Ordering::Acquire);
+            if e <= now_s && now_s - e < window_s {
+                total += slot.count.load(Ordering::Relaxed);
+            }
+        }
+        total
+    }
+
+    pub fn reset(&self) {
+        for slot in &self.slots {
+            slot.epoch.store(u64::MAX, Ordering::Release);
+            slot.count.store(0, Ordering::Relaxed);
+        }
+    }
 }
 
 /// A lifetime histogram plus its rolling windows — one per tracked
@@ -284,6 +388,13 @@ impl LatencyTrack {
     pub fn record_us(&self, v: u64) {
         self.total.record(v);
         self.rolling.record(v);
+    }
+
+    /// Zero the lifetime histogram and forget the rolling slots
+    /// (`{"cmd":"metrics_reset"}`).
+    pub fn reset(&self) {
+        self.total.reset();
+        self.rolling.reset();
     }
 
     /// Lifetime summary plus `w1s`/`w10s`/`w60s` windowed quantiles.
@@ -370,6 +481,50 @@ mod tests {
         // much later, every old second has aged out of the window
         r.record_at(300, 7);
         assert_eq!(r.window_at(300, 60).count(), 1);
+    }
+
+    #[test]
+    fn count_above_matches_bucket_semantics() {
+        let h = Histogram::new();
+        for v in [100u64, 1_000, 10_000, 100_000] {
+            h.record(v);
+        }
+        h.record(u64::MAX); // overflow is always "above"
+        assert_eq!(h.count_above(0), 5);
+        assert_eq!(h.count_above(5_000), 3);
+        assert_eq!(h.count_above(u64::MAX / 2), 1);
+        assert!((h.fraction_above(5_000) - 3.0 / 5.0).abs() < 1e-12);
+        // threshold inside a value's own bucket under-counts, never over
+        assert!(h.count_above(99_000) <= 2);
+    }
+
+    #[test]
+    fn rolling_count_windows_and_resets() {
+        let c = RollingCount::new();
+        for epoch in 100..160 {
+            c.record_at(epoch);
+            c.record_at(epoch);
+        }
+        assert_eq!(c.window_at(159, 1), 2);
+        assert_eq!(c.window_at(159, 10), 20);
+        assert_eq!(c.window_at(159, 60), 120);
+        // far in the future every slot has aged out
+        assert_eq!(c.window_at(400, 60), 0);
+        c.record_at(400);
+        assert_eq!(c.window_at(400, 60), 1);
+        c.reset();
+        assert_eq!(c.window_at(400, 60), 0);
+    }
+
+    #[test]
+    fn rolling_and_track_reset_clear_windows() {
+        let t = LatencyTrack::default();
+        t.record_us(5_000);
+        assert_eq!(t.total.count(), 1);
+        assert_eq!(t.rolling.window(60).count(), 1);
+        t.reset();
+        assert_eq!(t.total.count(), 0);
+        assert_eq!(t.rolling.window(60).count(), 0);
     }
 
     #[test]

@@ -22,6 +22,11 @@
 //! * [`kernel`] — live sampling of the paper's quantization-kernel
 //!   fraction and row/column absmax per activation site, with a
 //!   structured warning when a site crosses the configured bound.
+//! * [`slo`] — declarative SLO specs (TTFT p99, inter-token p99, error
+//!   rate) and multi-window error-budget burn rates (fast 1 s/10 s +
+//!   slow 60 s) over the rolling histograms — the signal
+//!   `{"cmd":"slo"}`, the Prometheus exposition, and the engine's
+//!   priority shedding all consume.
 //!
 //! Everything is hand-rolled on std (Cargo.toml: anyhow is the sole
 //! external dependency) and lock-free on the hot paths: recording a span
@@ -31,10 +36,12 @@ pub mod hist;
 pub mod kernel;
 pub mod log;
 pub mod prom;
+pub mod slo;
 pub mod trace;
 
-pub use hist::{Histogram, LatencyTrack, Rolling};
+pub use hist::{Histogram, LatencyTrack, Rolling, RollingCount};
 pub use kernel::{KernelTelemetry, SiteSample, DEFAULT_KERNEL_THRESHOLD};
+pub use slo::{SloPolicy, SloReport, SloSpec, WindowBurn};
 pub use trace::{Span, SpanKind, SpanRing};
 
 use std::sync::atomic::{AtomicU64, Ordering};

@@ -1,0 +1,293 @@
+//! Declarative SLOs and multi-window error-budget burn rates.
+//!
+//! PR 9 gave the serving tier rolling latency histograms; this module is
+//! the layer that turns them into a decision signal. An [`SloSpec`]
+//! states three objectives — TTFT p99, inter-token p99, and error rate —
+//! and [`SloSpec::evaluate_at`] computes, per window, how fast each
+//! objective is burning its error budget:
+//!
+//! * A latency objective "p99 ≤ X" implicitly budgets 1% of requests to
+//!   exceed X. Its burn rate over a window is
+//!   `fraction_above(X) / 0.01` — burn 1.0 consumes the budget exactly
+//!   at the sustainable rate, burn 100 means *every* request violates.
+//! * The error-rate objective budgets `error_rate` of requests to fail;
+//!   burn is `observed_error_fraction / error_rate`.
+//!
+//! Burn is computed over three windows — fast 1 s and 10 s, slow 60 s,
+//! all under the [`Rolling`] ring's 64-slot capacity — and alerting
+//! follows the classic multi-window rule: a window alerts when any
+//! objective's burn reaches `burn_threshold`, and the tier *sheds* only
+//! when both a fast window and the slow window alert. The fast window
+//! confirms the overload is happening right now (so shedding stops
+//! quickly on recovery); the slow window confirms it is sustained (so a
+//! one-second blip never sheds). Every `*_at` entry point takes an
+//! explicit epoch second, mirroring [`Rolling::window_at`], so the burn
+//! math is property-testable under an injected clock.
+
+use std::sync::atomic::{AtomicU64, Ordering};
+
+use super::hist::{Histogram, Rolling, RollingCount};
+use crate::util::Json;
+
+/// The three burn windows, seconds. The first `FAST_WINDOWS` are "fast";
+/// the rest are "slow". All must stay below the rolling ring's 64 slots.
+pub const WINDOWS_S: [u64; 3] = [1, 10, 60];
+const FAST_WINDOWS: usize = 2;
+
+/// Budget fraction a p99 objective implies: 1% of requests may exceed
+/// the target.
+const P99_BUDGET: f64 = 0.01;
+
+/// One service-level objective set. Latency targets are upper bounds on
+/// the p99; `error_rate` is the budgeted failure fraction;
+/// `burn_threshold` is the burn rate at which a window starts alerting.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct SloSpec {
+    pub ttft_p99_us: u64,
+    pub inter_token_p99_us: u64,
+    pub error_rate: f64,
+    pub burn_threshold: f64,
+}
+
+impl Default for SloSpec {
+    fn default() -> Self {
+        SloSpec {
+            ttft_p99_us: 500_000,
+            inter_token_p99_us: 200_000,
+            error_rate: 0.01,
+            burn_threshold: 10.0,
+        }
+    }
+}
+
+/// Burn rate of a "p99 ≤ threshold" latency objective over one window
+/// histogram: violation fraction over the implied 1% budget.
+pub fn latency_burn(window: &Histogram, threshold_us: u64) -> f64 {
+    window.fraction_above(threshold_us) / P99_BUDGET
+}
+
+/// Burn rate of the error-rate objective over windowed ok/err counts.
+pub fn error_burn(ok: u64, err: u64, target_rate: f64) -> f64 {
+    let total = ok + err;
+    if total == 0 || target_rate <= 0.0 {
+        return 0.0;
+    }
+    (err as f64 / total as f64) / target_rate
+}
+
+/// Per-window burn rates for every objective, plus the sample counts the
+/// rates were computed over (a burn over zero samples is 0, and the
+/// counts let readers see that).
+#[derive(Clone, Copy, Debug)]
+pub struct WindowBurn {
+    pub window_s: u64,
+    pub ttft_burn: f64,
+    pub inter_token_burn: f64,
+    pub error_burn: f64,
+    pub ttft_samples: u64,
+    pub requests: u64,
+    pub alerting: bool,
+}
+
+impl WindowBurn {
+    /// The worst objective's burn — what alerting keys on.
+    pub fn max_burn(&self) -> f64 {
+        self.ttft_burn.max(self.inter_token_burn).max(self.error_burn)
+    }
+
+    pub fn json(&self) -> Json {
+        Json::obj(vec![
+            ("window_s", Json::num(self.window_s as f64)),
+            ("ttft_burn", Json::num(self.ttft_burn)),
+            ("inter_token_burn", Json::num(self.inter_token_burn)),
+            ("error_burn", Json::num(self.error_burn)),
+            ("max_burn", Json::num(self.max_burn())),
+            ("ttft_samples", Json::num(self.ttft_samples as f64)),
+            ("requests", Json::num(self.requests as f64)),
+            ("alerting", Json::Bool(self.alerting)),
+        ])
+    }
+}
+
+/// The rolling signals an evaluation reads — borrowed from `Metrics`, or
+/// built standalone in tests.
+pub struct SloInputs<'a> {
+    pub ttft: &'a Rolling,
+    pub inter_token: &'a Rolling,
+    pub ok: &'a RollingCount,
+    pub err: &'a RollingCount,
+}
+
+/// A full multi-window evaluation: per-window burns plus the combined
+/// alert booleans. `shedding` is the bit admission control consumes.
+#[derive(Clone, Debug)]
+pub struct SloReport {
+    pub spec: SloSpec,
+    pub windows: Vec<WindowBurn>,
+    pub fast_alert: bool,
+    pub slow_alert: bool,
+    pub shedding: bool,
+}
+
+impl SloReport {
+    pub fn json(&self) -> Json {
+        Json::obj(vec![
+            ("spec", self.spec.json()),
+            ("windows", Json::arr(self.windows.iter().map(|w| w.json()).collect())),
+            ("fast_alert", Json::Bool(self.fast_alert)),
+            ("slow_alert", Json::Bool(self.slow_alert)),
+            ("shedding", Json::Bool(self.shedding)),
+        ])
+    }
+}
+
+impl SloSpec {
+    pub fn json(&self) -> Json {
+        Json::obj(vec![
+            ("ttft_p99_us", Json::num(self.ttft_p99_us as f64)),
+            ("inter_token_p99_us", Json::num(self.inter_token_p99_us as f64)),
+            ("error_rate", Json::num(self.error_rate)),
+            ("burn_threshold", Json::num(self.burn_threshold)),
+        ])
+    }
+
+    pub fn evaluate(&self, inputs: &SloInputs) -> SloReport {
+        self.evaluate_at(inputs, super::now_secs())
+    }
+
+    /// Evaluate every objective over every window at an explicit epoch
+    /// second — deterministic under an injected clock.
+    pub fn evaluate_at(&self, inputs: &SloInputs, now_s: u64) -> SloReport {
+        let windows: Vec<WindowBurn> = WINDOWS_S
+            .iter()
+            .map(|&w| {
+                let ttft = inputs.ttft.window_at(now_s, w);
+                let inter = inputs.inter_token.window_at(now_s, w);
+                let ok = inputs.ok.window_at(now_s, w);
+                let err = inputs.err.window_at(now_s, w);
+                let mut burn = WindowBurn {
+                    window_s: w,
+                    ttft_burn: latency_burn(&ttft, self.ttft_p99_us),
+                    inter_token_burn: latency_burn(&inter, self.inter_token_p99_us),
+                    error_burn: error_burn(ok, err, self.error_rate),
+                    ttft_samples: ttft.count(),
+                    requests: ok + err,
+                    alerting: false,
+                };
+                burn.alerting = burn.max_burn() >= self.burn_threshold;
+                burn
+            })
+            .collect();
+        let fast_alert = windows[..FAST_WINDOWS].iter().any(|w| w.alerting);
+        let slow_alert = windows[FAST_WINDOWS..].iter().any(|w| w.alerting);
+        SloReport { spec: *self, windows, fast_alert, slow_alert, shedding: fast_alert && slow_alert }
+    }
+}
+
+/// The live, shareable policy cell: an [`SloSpec`] behind relaxed
+/// atomics, configured once at startup from the `--slo-*` flags and read
+/// on every evaluation — the same configure-once pattern as
+/// [`super::KernelTelemetry`].
+pub struct SloPolicy {
+    ttft_p99_us: AtomicU64,
+    inter_token_p99_us: AtomicU64,
+    error_rate_bits: AtomicU64,
+    burn_threshold_bits: AtomicU64,
+}
+
+impl Default for SloPolicy {
+    fn default() -> Self {
+        SloPolicy::new(SloSpec::default())
+    }
+}
+
+impl SloPolicy {
+    pub fn new(spec: SloSpec) -> SloPolicy {
+        let p = SloPolicy {
+            ttft_p99_us: AtomicU64::new(0),
+            inter_token_p99_us: AtomicU64::new(0),
+            error_rate_bits: AtomicU64::new(0),
+            burn_threshold_bits: AtomicU64::new(0),
+        };
+        p.configure(spec);
+        p
+    }
+
+    pub fn configure(&self, spec: SloSpec) {
+        self.ttft_p99_us.store(spec.ttft_p99_us, Ordering::Relaxed);
+        self.inter_token_p99_us.store(spec.inter_token_p99_us, Ordering::Relaxed);
+        self.error_rate_bits.store(spec.error_rate.to_bits(), Ordering::Relaxed);
+        self.burn_threshold_bits.store(spec.burn_threshold.to_bits(), Ordering::Relaxed);
+    }
+
+    pub fn spec(&self) -> SloSpec {
+        SloSpec {
+            ttft_p99_us: self.ttft_p99_us.load(Ordering::Relaxed),
+            inter_token_p99_us: self.inter_token_p99_us.load(Ordering::Relaxed),
+            error_rate: f64::from_bits(self.error_rate_bits.load(Ordering::Relaxed)),
+            burn_threshold: f64::from_bits(self.burn_threshold_bits.load(Ordering::Relaxed)),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn inputs() -> (Rolling, Rolling, RollingCount, RollingCount) {
+        (Rolling::new(), Rolling::new(), RollingCount::new(), RollingCount::new())
+    }
+
+    #[test]
+    fn empty_windows_burn_nothing() {
+        let (ttft, inter, ok, err) = inputs();
+        let report = SloSpec::default()
+            .evaluate_at(&SloInputs { ttft: &ttft, inter_token: &inter, ok: &ok, err: &err }, 100);
+        assert_eq!(report.windows.len(), WINDOWS_S.len());
+        for w in &report.windows {
+            assert_eq!(w.max_burn(), 0.0);
+            assert!(!w.alerting);
+        }
+        assert!(!report.shedding);
+    }
+
+    #[test]
+    fn all_violations_burn_at_one_over_budget() {
+        let (ttft, inter, ok, err) = inputs();
+        let spec = SloSpec { ttft_p99_us: 1_000, ..SloSpec::default() };
+        for _ in 0..50 {
+            ttft.record_at(100, 50_000); // every TTFT violates
+            ok.record_at(100);
+        }
+        let report =
+            spec.evaluate_at(&SloInputs { ttft: &ttft, inter_token: &inter, ok: &ok, err: &err }, 100);
+        // 100% violation over a 1% budget: burn 100 on every window
+        for w in &report.windows {
+            assert!((w.ttft_burn - 100.0).abs() < 1e-9, "burn {}", w.ttft_burn);
+            assert!(w.alerting);
+        }
+        assert!(report.fast_alert && report.slow_alert && report.shedding);
+    }
+
+    #[test]
+    fn error_burn_is_observed_rate_over_budget() {
+        assert_eq!(error_burn(0, 0, 0.01), 0.0);
+        assert_eq!(error_burn(99, 1, 0.01), 1.0); // exactly on budget
+        assert_eq!(error_burn(0, 10, 0.01), 100.0);
+        assert_eq!(error_burn(10, 0, 0.0), 0.0); // zero budget never divides
+    }
+
+    #[test]
+    fn policy_round_trips_spec() {
+        let spec = SloSpec {
+            ttft_p99_us: 123,
+            inter_token_p99_us: 456,
+            error_rate: 0.05,
+            burn_threshold: 2.5,
+        };
+        let policy = SloPolicy::new(spec);
+        assert_eq!(policy.spec(), spec);
+        policy.configure(SloSpec::default());
+        assert_eq!(policy.spec(), SloSpec::default());
+    }
+}

@@ -151,6 +151,7 @@ fn tiny_kv_pool_queues_and_all_sequences_complete_exactly() {
         max_active_seqs: 16,
         kv_pool_bytes: Some(2 * slot),
         max_waiting: 16,
+        ..EngineConfig::default()
     });
     let scheme = ActScheme::Fp;
     let prompts: Vec<Vec<u32>> =
@@ -206,6 +207,7 @@ fn admission_pressure_never_hangs_or_corrupts() {
         max_active_seqs: 1,
         kv_pool_bytes: Some(slot),
         max_waiting: 1,
+        ..EngineConfig::default()
     });
     let scheme = ActScheme::Fp;
     let prompts: Vec<Vec<u32>> =

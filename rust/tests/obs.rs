@@ -13,7 +13,8 @@ use crossquant::coordinator::scheduler::{CoordinatorConfig, EvalCoordinator, Eva
 use crossquant::coordinator::{ActScheme, EvalServer};
 use crossquant::model::weights::synthetic_weights;
 use crossquant::model::ModelConfig;
-use crossquant::obs::{self, Histogram, Span, SpanKind, SpanRing};
+use crossquant::obs::slo::{error_burn, latency_burn, SloInputs};
+use crossquant::obs::{self, Histogram, Rolling, RollingCount, SloSpec, Span, SpanKind, SpanRing};
 use crossquant::runtime::ArtifactStore;
 use crossquant::tensor::SplitMix64;
 use crossquant::util::Json;
@@ -346,4 +347,117 @@ fn trace_query_and_prometheus_exposition_over_the_wire() {
     }
 
     let _ = std::fs::remove_dir_all(&dir);
+}
+
+// ---------------------------------------------------------------------------
+// SLO burn-rate properties (obs::slo under an injected clock)
+// ---------------------------------------------------------------------------
+
+/// Budget consumption is monotone in the violation count: with the total
+/// sample count held fixed, adding violations never lowers any burn rate.
+#[test]
+fn burn_rate_is_monotone_in_violation_count() {
+    const N: u64 = 40;
+    const EPOCH: u64 = 777;
+    let mut prev_latency = -1.0f64;
+    let mut prev_error = -1.0f64;
+    for v in 0..=N {
+        let rolling = Rolling::new();
+        for i in 0..N {
+            // violations land far above the 1 ms target so the log-bucket
+            // boundary cannot blur the count; compliant samples far below
+            rolling.record_at(EPOCH, if i < v { 50_000 } else { 100 });
+        }
+        let latency = latency_burn(&rolling.window_at(EPOCH, 10), 1_000);
+        let error = error_burn(N - v, v, 0.01);
+        assert!(
+            latency >= prev_latency,
+            "latency burn fell from {prev_latency} to {latency} at {v} violations"
+        );
+        assert!(error >= prev_error, "error burn fell from {prev_error} to {error} at {v} errors");
+        prev_latency = latency;
+        prev_error = error;
+    }
+    // the endpoints pin the scale: 0 violations burns 0, all-violations
+    // burns 1/budget
+    assert_eq!(prev_error, 100.0);
+    assert!((prev_latency - 100.0).abs() < 1e-9);
+}
+
+/// Rolling-window rotation under an injected clock never double-counts:
+/// one observation per epoch second always yields exactly
+/// `min(elapsed, window)` samples in the window, reads are idempotent,
+/// and a clock jump far past the ring finds nothing stale.
+#[test]
+fn window_rotation_under_injected_clock_never_double_counts() {
+    let rolling = Rolling::new();
+    let counts = RollingCount::new();
+    let base = 5_000u64;
+    for i in 0..200u64 {
+        let now = base + i;
+        rolling.record_at(now, 10_000);
+        counts.record_at(now);
+        let expect = (i + 1).min(60);
+        assert_eq!(rolling.window_at(now, 60).count(), expect, "at second {i}");
+        assert_eq!(counts.window_at(now, 60), expect, "at second {i}");
+        assert_eq!(rolling.window_at(now, 1).count(), 1, "1s window at second {i}");
+        // a second read of the same window is a pure merge — no mutation
+        assert_eq!(rolling.window_at(now, 60).count(), expect);
+    }
+    // jumping the clock far beyond the 64-slot ring leaves every slot
+    // stale: the window must come back empty, not recycled
+    assert_eq!(rolling.window_at(base + 10_000, 60).count(), 0);
+    assert_eq!(counts.window_at(base + 10_000, 60), 0);
+}
+
+/// The multi-window alert rule fires in the right order on a synthetic
+/// violation stream: after a long healthy period, the fast windows alert
+/// on the first bad second, the slow 60 s window only once the overload
+/// has consumed enough of its budget — and shedding starts exactly when
+/// both agree.
+#[test]
+fn synthetic_violation_stream_alerts_fast_before_slow() {
+    let ttft = Rolling::new();
+    let inter = Rolling::new();
+    let ok = RollingCount::new();
+    let err = RollingCount::new();
+    let inputs = SloInputs { ttft: &ttft, inter_token: &inter, ok: &ok, err: &err };
+    let spec = SloSpec {
+        ttft_p99_us: 1_000,
+        inter_token_p99_us: u64::MAX / 2,
+        error_rate: 0.01,
+        burn_threshold: 10.0,
+    };
+    // 60 s of healthy traffic: 10 compliant TTFTs per second
+    let t0 = 1_000u64;
+    for s in 0..60 {
+        for _ in 0..10 {
+            ttft.record_at(t0 + s, 100);
+            ok.record_at(t0 + s);
+        }
+    }
+    let calm = spec.evaluate_at(&inputs, t0 + 59);
+    assert!(!calm.fast_alert && !calm.slow_alert && !calm.shedding);
+
+    // then every request violates; at 10/s the 60 s window crosses the
+    // burn-10 line (10% violating) after 6 bad seconds
+    let mut first_shed = None;
+    for k in 1..=20u64 {
+        let now = t0 + 59 + k;
+        for _ in 0..10 {
+            ttft.record_at(now, 50_000);
+            ok.record_at(now);
+        }
+        let report = spec.evaluate_at(&inputs, now);
+        assert!(report.fast_alert, "fast windows must alert from bad second 1 (k={k})");
+        assert_eq!(report.shedding, report.fast_alert && report.slow_alert);
+        if report.shedding && first_shed.is_none() {
+            first_shed = Some(k);
+        }
+    }
+    let first_shed = first_shed.expect("sustained overload must eventually shed");
+    assert!(
+        (2..=7).contains(&first_shed),
+        "slow window confirmed after {first_shed} bad seconds — the one-second blip guard"
+    );
 }
